@@ -1,0 +1,134 @@
+//! Keyword spotting (the paper's KWS-6 workload: Google Speech Commands
+//! "yes/no/up/down/left/right") with *thermometer booleanization* of a
+//! continuous MFCC-like front-end — the full edge pipeline:
+//!
+//!   continuous sensor frames -> quantile thermometer bits -> TM ->
+//!   compressed ISA -> accelerator, including a task update at runtime
+//!   (adding a 7th keyword class by reprogramming, the Fig 8 "add an
+//!   additional class" scenario).
+//!
+//! ```sh
+//! cargo run --release --example keyword_spotting
+//! ```
+
+use rttm::accel::core::{AccelConfig, Core};
+use rttm::coordinator::TrainingNode;
+use rttm::datasets::synth::{SynthSpec, XorShift64Star};
+use rttm::tm::booleanize::ThermometerEncoder;
+use rttm::TMShape;
+
+/// Synthesize continuous "MFCC" frames: per-class Gaussian-ish channel
+/// means + noise (stands in for Speech Commands audio, DESIGN.md
+/// §Substitutions).
+fn synth_mfcc(classes: usize, channels: usize, n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<usize>) {
+    let mut rng = XorShift64Star::new(seed);
+    let means: Vec<Vec<f64>> = (0..classes)
+        .map(|_| (0..channels).map(|_| rng.next_f64() * 4.0 - 2.0).collect())
+        .collect();
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(classes as u64) as usize;
+        ys.push(c);
+        xs.push(
+            means[c]
+                .iter()
+                .map(|m| m + (rng.next_f64() - 0.5) * 1.6)
+                .collect(),
+        );
+    }
+    (xs, ys)
+}
+
+fn booleanize(enc: &ThermometerEncoder, xs: &[Vec<f64>]) -> Vec<Vec<u8>> {
+    xs.iter().map(|x| enc.encode(x)).collect()
+}
+
+fn accuracy(preds: &[usize], ys: &[usize]) -> f64 {
+    preds.iter().zip(ys).filter(|(p, y)| p == y).count() as f64 / ys.len() as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    const CHANNELS: usize = 50; // 50 MFCC-ish channels
+    const BITS: usize = 7; // 7-level thermometer -> 350 features (kws6 dims)
+
+    // --- 6-keyword task. --------------------------------------------------
+    let (raw, ys) = synth_mfcc(6, CHANNELS, 1536, 42);
+    let enc = ThermometerEncoder::fit(&raw, BITS);
+    let xb = booleanize(&enc, &raw);
+    println!(
+        "booleanized: {} channels x {} thermometer bits = {} features",
+        CHANNELS,
+        BITS,
+        enc.features_out()
+    );
+
+    let shape = TMShape {
+        name: "kws6".into(),
+        features: enc.features_out(),
+        classes: 6,
+        clauses: 150,
+        t: 30,
+        s: 6.0,
+        train_batch: 32,
+        n_states: 128,
+    };
+    let mut data = SynthSpec::new(shape.features, 6, 0).generate(); // container
+    data.xs = xb;
+    data.ys = ys;
+    let (train, test) = data.split(0.8);
+
+    let node = TrainingNode::native(shape.clone());
+    let model6 = node.retrain(&train)?;
+
+    // KWS models are the largest here (350 features x 150 clauses); the
+    // default single-core instruction memory is too shallow.  This is
+    // exactly the Fig 6 deploy-time choice: provision deeper memories
+    // (more BRAM/LUT/power, lower f_max) for more tunability headroom.
+    let cfg = AccelConfig::single_core().with_depths(65536, 8192);
+    let res = rttm::model_cost::estimate(&cfg);
+    println!(
+        "deploy-time memory customization: instr depth 65536 -> {} LUTs, {} BRAMs, {:.1} MHz",
+        res.luts, res.brams, res.freq_mhz
+    );
+    let mut accel = Core::new(cfg);
+    accel.program_model(&model6)?;
+    let mut preds = Vec::new();
+    for chunk in test.xs.chunks(32) {
+        preds.extend(accel.run_rows(chunk)?);
+    }
+    println!(
+        "6-keyword accuracy on accelerator: {:.3} ({} instructions)",
+        accuracy(&preds, &test.ys),
+        accel.instruction_count()
+    );
+
+    // --- Task update at runtime: a 7th keyword appears. -------------------
+    // New labeled data with 7 classes; retrain; reprogram the SAME
+    // accelerator — different class count, no resynthesis (Fig 8).
+    let (raw7, ys7) = synth_mfcc(7, CHANNELS, 1792, 43);
+    let enc7 = ThermometerEncoder::fit(&raw7, BITS);
+    let mut data7 = SynthSpec::new(enc7.features_out(), 7, 0).generate();
+    data7.xs = booleanize(&enc7, &raw7);
+    data7.ys = ys7;
+    let (train7, test7) = data7.split(0.8);
+
+    let mut shape7 = shape.clone();
+    shape7.classes = 7;
+    shape7.name = "kws7".into();
+    let node7 = TrainingNode::native(shape7);
+    let model7 = node7.retrain(&train7)?;
+
+    accel.program_model(&model7)?; // <- the runtime architecture change
+    let mut preds7 = Vec::new();
+    for chunk in test7.xs.chunks(32) {
+        preds7.extend(accel.run_rows(chunk)?);
+    }
+    println!(
+        "7-keyword accuracy after runtime task update: {:.3} (classes 6 -> 7, same bitstream)",
+        accuracy(&preds7, &test7.ys)
+    );
+    anyhow::ensure!(accuracy(&preds7, &test7.ys) > 0.7, "7-class task failed");
+    println!("OK: class count changed at runtime via stream reprogramming only");
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Quickstart: train a tiny TM, compress it to the 16-bit Include ISA,
+//! program the simulated eFPGA accelerator over its data stream, and
+//! classify a batch — the whole paper in ~80 lines.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use rttm::accel::core::{AccelConfig, Core};
+use rttm::coordinator::TrainingNode;
+use rttm::datasets::synth::SynthSpec;
+use rttm::isa;
+use rttm::tm::reference;
+use rttm::TMShape;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A small workload: 16 Boolean features, 2 classes.
+    let shape = TMShape::synthetic(16, 2, 10);
+    let data = SynthSpec::new(16, 2, 512).noise(0.08).seed(7).generate();
+    let (train, test) = data.split(0.8);
+
+    // 2. Train on the "Model Training Node" (pure rust backend here;
+    //    see runtime_retuning.rs for the PJRT/JAX path).
+    let node = TrainingNode::native(shape.clone());
+    let model = node.retrain(&train)?;
+    println!(
+        "trained: {} includes of {} TAs ({:.1}% sparse)",
+        model.include_count(),
+        shape.total_tas(),
+        100.0 * model.sparsity()
+    );
+
+    // 3. Compress to the Include-instruction stream (Fig 3).
+    let instrs = isa::encode(&model);
+    println!(
+        "compressed: {} x 16-bit instructions ({} bytes vs {} dense TA bits)",
+        instrs.len(),
+        2 * instrs.len(),
+        shape.total_tas()
+    );
+
+    // 4. Program the accelerator through its stream protocol (Fig 4).
+    let mut accel = Core::new(AccelConfig::base());
+    let codec = accel.codec;
+    let mut words = Vec::new();
+    words.extend(codec.instruction_header(shape.classes, shape.clauses, instrs.len())?);
+    words.extend(codec.pack_instructions(&instrs));
+    accel.feed_stream(&words)?;
+    println!("programmed: {} stream words, no resynthesis", words.len());
+
+    // 5. Classify one 32-datapoint batch (bit-sliced, Fig 4.5).
+    let rows: Vec<Vec<u8>> = test.xs[..32].to_vec();
+    let preds = accel.run_rows(&rows)?;
+    let correct = preds.iter().zip(&test.ys).filter(|(p, y)| p == y).count();
+    println!("batch accuracy: {}/32", correct);
+
+    // 6. Check the accelerator agrees with the dense reference model.
+    for (x, &p) in rows.iter().zip(&preds) {
+        let lits = reference::literals_from_features(x);
+        assert_eq!(p, reference::predict_dense(&model, &lits));
+    }
+    println!("accelerator == dense reference on all 32 datapoints");
+
+    // 7. Timing card (simulated cycles -> real time at 200 MHz).
+    let packed = isa::pack_features(&rows);
+    let r = accel.run_batch(&packed)?;
+    let us = accel.batch_latency_us(&r.cycles);
+    println!(
+        "batch latency: {} cycles = {:.2} us @ {} MHz ({:.3} us/datapoint, {:.0} inf/s)",
+        r.cycles.total(),
+        us,
+        accel.cfg.freq_mhz,
+        us / 32.0,
+        32.0 * 1e6 / us
+    );
+    Ok(())
+}

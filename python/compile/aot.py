@@ -1,0 +1,124 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the rust runtime.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (what
+the published ``xla`` 0.1.6 rust crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per config this emits:
+  artifacts/tm_infer_<name>.hlo.txt   (inc_mask u32[K,L], xs u32[L])
+                                        -> (sums i32[M,32], preds i32[32])
+  artifacts/tm_train_<name>.hlo.txt   (ta i32[M,C,L], x i32[B,L],
+                                        ys i32[B], seed i32[2]) -> (ta',)
+plus artifacts/manifest.json describing every artifact's shapes so the
+rust side never hard-codes them.
+
+Usage: python -m compile.aot --outdir ../artifacts [--configs a,b,...]
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS, TMConfig
+from . import model as M
+from . import train as T
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned on parse)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_infer(cfg: TMConfig) -> str:
+    def infer(inc_mask, xs_packed):
+        return M.tm_infer_packed(
+            inc_mask, xs_packed, classes=cfg.classes, clauses=cfg.clauses
+        )
+
+    inc = jax.ShapeDtypeStruct((cfg.total_clauses, cfg.literals), jnp.uint32)
+    xs = jax.ShapeDtypeStruct((cfg.literals,), jnp.uint32)
+    return to_hlo_text(jax.jit(infer).lower(inc, xs))
+
+
+def lower_train(cfg: TMConfig) -> str:
+    step = T.make_train_step(cfg)
+    ta = jax.ShapeDtypeStruct((cfg.classes, cfg.clauses, cfg.literals), jnp.int32)
+    x = jax.ShapeDtypeStruct((cfg.train_batch, cfg.literals), jnp.int32)
+    ys = jax.ShapeDtypeStruct((cfg.train_batch,), jnp.int32)
+    seed = jax.ShapeDtypeStruct((2,), jnp.int32)
+    return to_hlo_text(jax.jit(step).lower(ta, x, ys, seed))
+
+
+def manifest_entry(cfg: TMConfig) -> dict:
+    d = cfg.to_manifest()
+    d["infer_hlo"] = f"tm_infer_{cfg.name}.hlo.txt"
+    d["train_hlo"] = f"tm_train_{cfg.name}.hlo.txt"
+    d["infer_args"] = {
+        "inc_mask": ["u32", [cfg.total_clauses, cfg.literals]],
+        "xs_packed": ["u32", [cfg.literals]],
+    }
+    d["infer_outs"] = {
+        "class_sums": ["i32", [cfg.classes, 32]],
+        "preds": ["i32", [32]],
+    }
+    d["train_args"] = {
+        "ta_state": ["i32", [cfg.classes, cfg.clauses, cfg.literals]],
+        "x_lit": ["i32", [cfg.train_batch, cfg.literals]],
+        "ys": ["i32", [cfg.train_batch]],
+        "seed": ["i32", [2]],
+    }
+    return d
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--configs", default=",".join(CONFIGS))
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    names = [n for n in args.configs.split(",") if n]
+    manifest = {"configs": {}}
+    for name in names:
+        cfg = CONFIGS[name]
+        infer_text = lower_infer(cfg)
+        train_text = lower_train(cfg)
+        entry = manifest_entry(cfg)
+        for key, text in (("infer_hlo", infer_text), ("train_hlo", train_text)):
+            path = os.path.join(args.outdir, entry[key])
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+        manifest["configs"][name] = entry
+
+    mpath = os.path.join(args.outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+    # Flat TSV twin for the rust side (offline environment: no serde).
+    tsv = os.path.join(args.outdir, "manifest.tsv")
+    cols = [
+        "name", "features", "classes", "clauses", "T", "s",
+        "train_batch", "n_states", "infer_hlo", "train_hlo",
+    ]
+    with open(tsv, "w") as f:
+        f.write("\t".join(cols) + "\n")
+        for name in names:
+            e = manifest["configs"][name]
+            f.write("\t".join(str(e[c]) for c in cols) + "\n")
+    print(f"wrote {tsv}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Shape/hyperparameter registry for every TM workload in the paper.
+
+Each config fixes the static shapes baked into one pair of AOT artifacts
+(`tm_infer_<name>.hlo.txt`, `tm_train_<name>.hlo.txt`).  The rust runtime
+reads `artifacts/manifest.json` (emitted by aot.py) to know these shapes.
+
+Dataset dimensionalities mirror the paper's workloads (Table 2 / Fig 9);
+the data itself is synthetic — see DESIGN.md §Substitutions.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class TMConfig:
+    name: str
+    features: int          # Boolean features F (after booleanization)
+    classes: int           # M
+    clauses: int           # C, clauses per class (even; polarity alternates +,-)
+    T: int                 # class-sum clamp threshold (feedback target)
+    s: float               # specificity (Type I decrement probability 1/s)
+    train_batch: int = 32  # samples consumed per AOT train step (lax.scan)
+
+    @property
+    def literals(self) -> int:
+        """L = 2F: literal 2f is feature f, literal 2f+1 is its complement."""
+        return 2 * self.features
+
+    @property
+    def total_clauses(self) -> int:
+        return self.classes * self.clauses
+
+    @property
+    def n_states(self) -> int:
+        """TA states per action side; state >= N means Include."""
+        return 128
+
+    def to_manifest(self) -> dict:
+        d = asdict(self)
+        d["literals"] = self.literals
+        d["total_clauses"] = self.total_clauses
+        d["n_states"] = self.n_states
+        return d
+
+
+# The paper's workloads.  Feature counts follow the real datasets'
+# dimensionality after the booleanization used by MATADOR/REDRESS
+# (thermometer for continuous sensor channels, threshold for images).
+CONFIGS: dict[str, TMConfig] = {
+    c.name: c
+    for c in [
+        # Tiny config for the quickstart example and fast tests.  T must be
+        # attainable (< clauses/2 = max positive votes) or feedback never
+        # freezes and every clause collapses onto the same attractor.
+        TMConfig("quickstart", features=16, classes=2, clauses=10, T=4, s=3.0),
+        # Table 2 workloads (UCI-shaped).
+        TMConfig("emg", features=64, classes=6, clauses=100, T=20, s=3.0),
+        TMConfig("har", features=256, classes=6, clauses=100, T=20, s=5.0),
+        TMConfig("gesture", features=96, classes=5, clauses=80, T=15, s=3.5),
+        TMConfig("sensorless", features=96, classes=11, clauses=100, T=20, s=4.0),
+        TMConfig("gasdrift", features=256, classes=6, clauses=100, T=20, s=5.0),
+        # Fig 9 / Table 1 workloads (MATADOR comparison).
+        TMConfig("mnist", features=784, classes=10, clauses=200, T=50, s=10.0),
+        TMConfig("cifar2", features=512, classes=2, clauses=300, T=40, s=8.0),
+        TMConfig("kws6", features=350, classes=6, clauses=150, T=30, s=6.0),
+    ]
+}
+
+
+def get(name: str) -> TMConfig:
+    return CONFIGS[name]

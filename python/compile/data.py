@@ -1,0 +1,106 @@
+"""Synthetic booleanized datasets (python mirror of rust/src/datasets).
+
+Per DESIGN.md §Substitutions: the UCI/vision/audio datasets the paper
+evaluates are unavailable offline, so every workload is a synthetic
+class-prototype generator with the same dimensionality and class count.
+Each class has a random Boolean prototype; samples flip each prototype
+bit with probability ``noise``.  ``drift`` applies a persistent random
+bit-rot to a fraction of feature positions — the sensor
+aging/environment-change mechanism the paper's recalibration story needs
+(Fig 8).
+
+The rust generator (rust/src/datasets/synth.rs) implements the identical
+process with the identical xorshift64* stream so train/test splits agree
+across the language boundary; ``test_cross_language.py`` locks the
+streams together.
+"""
+
+import numpy as np
+
+
+class XorShift64Star:
+    """Tiny deterministic PRNG shared bit-for-bit with the rust side."""
+
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed: int):
+        self.state = (seed or 0x9E3779B97F4A7C15) & self.MASK
+
+    def next_u64(self) -> int:
+        x = self.state
+        x ^= (x >> 12)
+        x ^= (x << 25) & self.MASK
+        x ^= (x >> 27)
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & self.MASK
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+
+def make_dataset(
+    features: int,
+    classes: int,
+    n: int,
+    noise: float = 0.08,
+    seed: int = 1,
+    drift: float = 0.0,
+    informative: float = 1.0,
+):
+    """Returns (x u8[n, features], y i32[n]).
+
+    ``drift`` permanently inverts that fraction of feature positions
+    (chosen from the stream) before sampling — models sensor drift.
+    ``informative`` is the fraction of features that discriminate between
+    classes; the rest share a common background prototype.
+
+    Draw order is locked with rust/src/datasets/synth.rs: background (F),
+    informative mask (F), per-class patterns (M x F, always consuming F
+    draws), drift set (F), then samples.
+    """
+    rng = XorShift64Star(seed)
+    background = np.zeros(features, dtype=np.uint8)
+    for f in range(features):
+        background[f] = 1 if rng.next_f64() < 0.5 else 0
+    info_mask = np.zeros(features, dtype=bool)
+    for f in range(features):
+        info_mask[f] = rng.next_f64() < informative
+
+    protos = np.zeros((classes, features), dtype=np.uint8)
+    for c in range(classes):
+        for f in range(features):
+            bit = 1 if rng.next_f64() < 0.5 else 0  # always consume
+            protos[c, f] = bit if info_mask[f] else background[f]
+
+    # Always consume exactly F draws here so the sample stream below is
+    # identical for every drift value (drifted vs clean sets stay paired).
+    flipped = np.zeros(features, dtype=bool)
+    for f in range(features):
+        if rng.next_f64() < drift:
+            flipped[f] = True
+
+    x = np.zeros((n, features), dtype=np.uint8)
+    y = np.zeros(n, dtype=np.int32)
+    for i in range(n):
+        c = rng.below(classes)
+        y[i] = c
+        for f in range(features):
+            bit = protos[c, f]
+            if rng.next_f64() < noise:
+                bit ^= 1
+            if flipped[f]:
+                bit ^= 1
+            x[i, f] = bit
+    return x, y
+
+
+def to_literals(x: np.ndarray) -> np.ndarray:
+    """Interleaved literals i32[n, 2F]: 2f = x_f, 2f+1 = ~x_f."""
+    n, f = x.shape
+    lit = np.zeros((n, 2 * f), dtype=np.int32)
+    lit[:, 0::2] = x
+    lit[:, 1::2] = 1 - x
+    return lit

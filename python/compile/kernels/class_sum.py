@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: polarity-signed class-sum accumulation.
+
+The second half of the paper's datapath (Fig 4.6): unpack each clause
+output word into its 32 per-datapoint bits, sign by the alternating
+clause polarity (+/- bit of the ISA), and accumulate per class.
+
+Grid is over classes: one grid step owns one class's C clause words and
+emits its i32[32] sum row.  VMEM per step is tiny (C*4 bytes in,
+C*32*4 intermediate, 32*4 out), so no further tiling is needed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _class_sum_kernel(words_ref, out_ref):
+    """words_ref: u32[C] (one class), out_ref: i32[1, 32]."""
+    words = words_ref[...]
+    c = words.shape[0]
+    bits = (
+        (words[:, None] >> jnp.arange(32, dtype=jnp.uint32)[None, :]) & jnp.uint32(1)
+    ).astype(jnp.int32)  # [C, 32]
+    # Polarity alternates within a class starting at +1 (ISA +/- toggle).
+    pol = (1 - 2 * (jnp.arange(c, dtype=jnp.int32) % 2))[:, None]
+    out_ref[...] = jnp.sum(pol * bits, axis=0)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("classes", "clauses"))
+def class_sums(clause_words: jnp.ndarray, classes: int, clauses: int) -> jnp.ndarray:
+    """Pallas class sums.
+
+    Args:
+      clause_words: u32[M*C] clause output words, class-major.
+    Returns:
+      i32[M, 32] class sums per batched datapoint.
+    """
+    assert clause_words.shape[0] == classes * clauses
+    return pl.pallas_call(
+        _class_sum_kernel,
+        grid=(classes,),
+        in_specs=[pl.BlockSpec((clauses,), lambda m: (m,))],
+        out_specs=pl.BlockSpec((1, 32), lambda m: (m, 0)),
+        out_shape=jax.ShapeDtypeStruct((classes, 32), jnp.int32),
+        interpret=True,
+    )(clause_words.astype(jnp.uint32))

@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: bit-sliced packed clause evaluation.
+
+This is the paper's compute hot-spot (Fig 4.5/4.6): AND together the
+packed u32 literal words selected by each clause's Include set, over a
+32-datapoint bit-sliced batch.  On the eFPGA this is the literal-select +
+clause-output-register datapath; here it is a VPU-style u32 lane kernel.
+
+Hardware adaptation (DESIGN.md §2): the eFPGA's BRAM-resident feature
+memory maps to the kernel's VMEM block of ``xs_packed`` (replicated per
+grid step); the 32-bit clause output register file maps to a u32 lane
+vector.  Tiling is over clauses (grid dim 0) with the full literal row in
+VMEM — for the largest config (MNIST: 256x1568 u32 = 1.6 MiB/block) this
+fits comfortably in a 16 MiB VMEM budget; see DESIGN.md §7 for the block
+sweep.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO so the rust runtime can
+execute the artifact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ALL_ONES = jnp.uint32(0xFFFFFFFF)
+
+# Clause rows per grid step.  Chosen so block VMEM stays < ~2 MiB for the
+# largest config while keeping the grid small for interpret-mode speed.
+DEFAULT_BLOCK_K = 256
+
+
+def _clause_eval_kernel(x_ref, inc_ref, out_ref):
+    """One grid step: clause outputs for a [block_k, L] include block.
+
+    x_ref:   u32[L]          packed literals (same block every step)
+    inc_ref: u32[block_k, L] include masks (0 or 0xFFFFFFFF)
+    out_ref: u32[block_k]    clause output words
+    """
+    lits = x_ref[...]
+    inc = inc_ref[...]
+    # Exclude => neutral all-ones; Include => the literal word.
+    masked = lits[None, :] | ~inc
+    words = jnp.bitwise_and.reduce(masked, axis=1)
+    # Empty clause (no includes anywhere in the row) outputs 0 at inference.
+    nonempty = jnp.bitwise_or.reduce(inc, axis=1) != jnp.uint32(0)
+    out_ref[...] = jnp.where(nonempty, words, jnp.uint32(0))
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def clause_eval_packed(
+    xs_packed: jnp.ndarray, inc_mask: jnp.ndarray, block_k: int = DEFAULT_BLOCK_K
+) -> jnp.ndarray:
+    """Pallas clause evaluation over a bit-sliced batch.
+
+    Args:
+      xs_packed: u32[L] — bit b of word l = literal l of datapoint b.
+      inc_mask:  u32[K, L] — 0xFFFFFFFF where TA is Include, else 0.
+      block_k:   clause rows per grid step.
+
+    Returns:
+      u32[K] clause output words (bit b = clause output for datapoint b).
+    """
+    k, l = inc_mask.shape
+    block_k = min(block_k, k)
+    # Pad K so the grid divides evenly; zero rows are empty clauses -> 0.
+    k_pad = -k % block_k
+    if k_pad:
+        inc_mask = jnp.pad(inc_mask, ((0, k_pad), (0, 0)))
+    grid = (inc_mask.shape[0] // block_k,)
+
+    out = pl.pallas_call(
+        _clause_eval_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((l,), lambda i: (0,)),
+            pl.BlockSpec((block_k, l), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_k,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((inc_mask.shape[0],), jnp.uint32),
+        interpret=True,
+    )(xs_packed.astype(jnp.uint32), inc_mask.astype(jnp.uint32))
+    return out[:k]
+
+
+def vmem_bytes(block_k: int, literals: int) -> int:
+    """Estimated VMEM footprint of one grid step (inputs + outputs).
+
+    Used by the perf pass (DESIGN.md §7) to pick ``block_k`` — interpret
+    mode gives no hardware timing, so we optimize structure analytically.
+    """
+    x = 4 * literals
+    inc = 4 * block_k * literals
+    out = 4 * block_k
+    return x + inc + out

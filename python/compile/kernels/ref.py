@@ -1,0 +1,101 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the *reference semantics* of the paper's bitwise datapath:
+
+- ``clause_eval_packed_ref``: the 32-wide bit-sliced clause computation of
+  Fig 4.5/4.6 — each u32 word holds one literal across 32 batched
+  datapoints; a clause output word is the AND of the words of its included
+  literals (an empty clause outputs 0 at inference, Fig 3.2).
+- ``class_sums_ref``: the polarity-signed accumulation of clause output
+  bits into per-class sums (Fig 3.1), one sum per batched datapoint.
+- ``clause_eval_dense_ref``: per-sample Boolean clause output with
+  *training* semantics (empty clause outputs 1), used by the trainer.
+
+Every Pallas kernel in this package must match these bit-for-bit; pytest +
+hypothesis enforce it across shapes/dtypes.
+"""
+
+import jax.numpy as jnp
+
+ALL_ONES = jnp.uint32(0xFFFFFFFF)
+
+
+def clause_eval_packed_ref(xs_packed: jnp.ndarray, inc_mask: jnp.ndarray) -> jnp.ndarray:
+    """Clause output words for a 32-datapoint bit-sliced batch.
+
+    Args:
+      xs_packed: u32[L] — bit b of word l = literal l of datapoint b.
+      inc_mask:  u32[K, L] — 0xFFFFFFFF where TA(k, l) is Include, else 0.
+
+    Returns:
+      u32[K] — bit b of word k = clause k's output for datapoint b.
+    """
+    xs_packed = xs_packed.astype(jnp.uint32)
+    inc_mask = inc_mask.astype(jnp.uint32)
+    # Include propagates the literal; Exclude contributes neutral 1s.
+    masked = xs_packed[None, :] | ~inc_mask  # [K, L]
+    words = jnp.bitwise_and.reduce(masked, axis=1)  # [K]
+    # Inference semantics: a clause with no Includes outputs 0.
+    nonempty = jnp.bitwise_or.reduce(inc_mask, axis=1) != 0
+    return jnp.where(nonempty, words, jnp.uint32(0))
+
+
+def class_sums_ref(clause_words: jnp.ndarray, classes: int, clauses: int) -> jnp.ndarray:
+    """Polarity-signed class sums from clause output words.
+
+    Polarity alternates +1/-1 with clause index within a class (the ISA's
+    +/- bit toggles on every clause change, Fig 3.4).
+
+    Args:
+      clause_words: u32[M*C].
+    Returns:
+      i32[M, 32] — class sum per class per batched datapoint.
+    """
+    k = clause_words.shape[0]
+    assert k == classes * clauses
+    bits = (
+        (clause_words[:, None] >> jnp.arange(32, dtype=jnp.uint32)[None, :]) & jnp.uint32(1)
+    ).astype(jnp.int32)  # [K, 32]
+    # Polarity restarts at +1 for each class and alternates within it.
+    pol = (1 - 2 * (jnp.arange(clauses, dtype=jnp.int32) % 2))[None, :, None]
+    signed = pol * bits.reshape(classes, clauses, 32)
+    return signed.sum(axis=1)
+
+
+def predict_ref(class_sums: jnp.ndarray) -> jnp.ndarray:
+    """argmax over classes, per batched datapoint: i32[32]."""
+    return jnp.argmax(class_sums, axis=0).astype(jnp.int32)
+
+
+def clause_eval_dense_ref(x_lit: jnp.ndarray, include: jnp.ndarray, training: bool) -> jnp.ndarray:
+    """Per-sample clause outputs.
+
+    Args:
+      x_lit:   bool/i32[L] — literal values for ONE datapoint.
+      include: bool[K, L]  — TA include actions.
+      training: empty-clause semantics (True -> 1, False -> 0).
+
+    Returns:
+      i32[K] clause outputs in {0, 1}.
+    """
+    x = x_lit.astype(bool)
+    inc = include.astype(bool)
+    out = jnp.all(jnp.logical_or(~inc, x[None, :]), axis=1)
+    if not training:
+        out = jnp.logical_and(out, jnp.any(inc, axis=1))
+    return out.astype(jnp.int32)
+
+
+def pack_literals_ref(x_lit_batch: jnp.ndarray) -> jnp.ndarray:
+    """Bit-slice a batch of <=32 datapoints into u32 words.
+
+    Args:
+      x_lit_batch: bool/i32[B<=32, L].
+    Returns:
+      u32[L] with bit b = datapoint b's literal (missing datapoints are 0).
+    """
+    b = x_lit_batch.shape[0]
+    assert b <= 32
+    vals = x_lit_batch.astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(b, dtype=jnp.uint32))[:, None]
+    return jnp.bitwise_or.reduce(vals * weights, axis=0)

@@ -1,0 +1,92 @@
+"""L2: the Tsetlin Machine compute graph, calling the L1 Pallas kernels.
+
+Two entry points get AOT-lowered per config (see aot.py):
+
+- ``tm_infer_packed`` — the deployment inference graph.  Takes the
+  include masks (the runtime-tunable "model") and one bit-sliced batch of
+  32 datapoints; returns class sums and predictions.  This is what the
+  rust runtime executes via PJRT as the golden model for the accelerator
+  simulator.
+- ``tm_forward_dense`` — per-sample forward used by the trainer.
+
+The "model" crossing the rust<->HLO boundary is the include-mask tensor
+(u32[K, L]), i.e. exactly the information content of the paper's
+compressed instruction stream; ta_state (i32[M, C, L]) only appears in
+the training artifact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.clause_eval import clause_eval_packed
+from .kernels.class_sum import class_sums
+from .kernels import ref
+
+ALL_ONES = jnp.uint32(0xFFFFFFFF)
+
+
+def include_mask_from_state(ta_state: jnp.ndarray, n_states: int) -> jnp.ndarray:
+    """u32[M*C, L] include mask from i32[M, C, L] TA state.
+
+    A TA whose state is in the upper half (>= N) acts Include (Fig 2).
+    """
+    m, c, l = ta_state.shape
+    inc = ta_state >= n_states
+    return jnp.where(inc, ALL_ONES, jnp.uint32(0)).reshape(m * c, l)
+
+
+@functools.partial(jax.jit, static_argnames=("classes", "clauses", "block_k"))
+def tm_infer_packed(
+    inc_mask: jnp.ndarray,
+    xs_packed: jnp.ndarray,
+    *,
+    classes: int,
+    clauses: int,
+    block_k: int = 256,
+):
+    """Inference over one bit-sliced batch of 32 datapoints.
+
+    Args:
+      inc_mask:  u32[M*C, L] — the runtime-tunable model.
+      xs_packed: u32[L] — bit b of word l = literal l of datapoint b.
+
+    Returns:
+      (class_sums i32[M, 32], preds i32[32])
+    """
+    words = clause_eval_packed(xs_packed, inc_mask, block_k=block_k)
+    sums = class_sums(words, classes, clauses)
+    preds = jnp.argmax(sums, axis=0).astype(jnp.int32)
+    return sums, preds
+
+
+def tm_forward_dense(include: jnp.ndarray, x_lit: jnp.ndarray, *, classes: int, clauses: int, training: bool):
+    """Per-sample forward with dense bool literals (training semantics).
+
+    Args:
+      include: bool[M*C, L]
+      x_lit:   i32/bool[L]
+    Returns:
+      (clause_out i32[M*C], class_sums i32[M])
+    """
+    out = ref.clause_eval_dense_ref(x_lit, include, training=training)
+    # Polarity restarts at +1 per class (matches the ISA and class_sum kernel).
+    pol = 1 - 2 * (jnp.arange(clauses, dtype=jnp.int32) % 2)
+    sums = (pol[None, :] * out.reshape(classes, clauses)).sum(axis=1)
+    return out, sums
+
+
+def literals_from_features(x_feat: jnp.ndarray) -> jnp.ndarray:
+    """Interleave features with complements: literal 2f = x_f, 2f+1 = ~x_f.
+
+    Matches the ISA's TA ordering (rust/src/isa): offsets walk TAs in
+    (feature, complement) interleaved order.
+
+    Args:
+      x_feat: i32/bool[..., F] in {0,1}
+    Returns:
+      i32[..., 2F]
+    """
+    x = x_feat.astype(jnp.int32)
+    return jnp.stack([x, 1 - x], axis=-1).reshape(*x.shape[:-1], 2 * x.shape[-1])

@@ -1,0 +1,140 @@
+"""L2: vanilla Tsetlin Machine training (Type I / Type II feedback).
+
+This is the algorithm the paper's Model Training Node runs (Fig 8,
+citing [8, 12, 21]).  It is written as a jittable ``train_step`` that
+consumes one batch of booleanized samples and returns the updated TA
+state; aot.py lowers it per config so the *rust* coordinator can retrain
+on-field through PJRT with Python nowhere in the loop.
+
+Semantics follow Granmo's vanilla TM:
+
+- TA state in [0, 2N); action = Include iff state >= N.
+- Per sample, the target class y and one uniformly-sampled other class
+  receive feedback, gated per clause with probability (T - clamp(s_y))/2T
+  and (T + clamp(s_neg))/2T respectively.
+- Type I (combats false negatives; to pol=+1 clauses of y, pol=-1 of neg):
+    clause==1 & literal==1 -> state+1 (boost-true-positive, deterministic)
+    clause==1 & literal==0 -> state-1 with prob 1/s
+    clause==0             -> state-1 with prob 1/s
+- Type II (combats false positives; the opposite-polarity clauses):
+    clause==1 & literal==0 & Exclude -> state+1 (deterministic)
+
+The batch is consumed sequentially with ``lax.scan`` — exact vanilla
+semantics, no batch-averaging approximation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import TMConfig
+
+
+def _clause_outputs_train(include: jnp.ndarray, x_lit: jnp.ndarray) -> jnp.ndarray:
+    """Training-semantics clause outputs for one class: bool[C]."""
+    # include: bool[C, L]; empty clause -> 1 during training.
+    return jnp.all(jnp.logical_or(~include, x_lit[None, :].astype(bool)), axis=1)
+
+
+def _class_feedback(ta_cls, x_lit, sign, key, cfg: TMConfig):
+    """Feedback deltas for one class slice.
+
+    Args:
+      ta_cls: i32[C, L] TA states of the class receiving feedback.
+      x_lit:  i32[L] literal values of the sample.
+      sign:   +1 if this is the target class, -1 if the negative class.
+    Returns:
+      i32[C, L] new TA states.
+    """
+    n = cfg.n_states
+    c = cfg.clauses
+    include = ta_cls >= n
+    out = _clause_outputs_train(include, x_lit)  # bool[C]
+    pol = 1 - 2 * (jnp.arange(c, dtype=jnp.int32) % 2)  # +1/-1 alternating
+    votes = jnp.sum(pol * out.astype(jnp.int32))
+    clamped = jnp.clip(votes, -cfg.T, cfg.T).astype(jnp.float32)
+    # Target: push sum up toward T; negative class: push down toward -T.
+    p = (cfg.T - sign * clamped) / (2.0 * cfg.T)
+
+    k_gate, k_dec = jax.random.split(key)
+    gate = jax.random.uniform(k_gate, (c,)) < p  # per-clause feedback gate
+    dec = jax.random.uniform(k_dec, (c, cfg.literals)) < (1.0 / cfg.s)
+
+    x = x_lit.astype(bool)[None, :]  # [1, L]
+    out_b = out[:, None]  # [C, 1]
+
+    # Type I deltas (applied to clauses whose polarity == sign).
+    reward = jnp.logical_and(out_b, x)  # clause 1, literal 1 -> +1
+    punish = jnp.logical_and(dec, ~reward)  # elsewhere: -1 w.p. 1/s
+    type1 = reward.astype(jnp.int32) - punish.astype(jnp.int32)
+
+    # Type II deltas (applied to clauses whose polarity == -sign).
+    type2 = jnp.logical_and(
+        jnp.logical_and(out_b, ~x), ~include
+    ).astype(jnp.int32)
+
+    is_type1 = (pol == sign)[:, None]  # [C, 1]
+    delta = jnp.where(is_type1, type1, type2)
+    delta = jnp.where(gate[:, None], delta, 0)
+    return jnp.clip(ta_cls + delta, 0, 2 * n - 1)
+
+
+def make_train_step(cfg: TMConfig):
+    """Build the jittable per-batch train step for a config.
+
+    Signature (all static shapes, AOT-friendly):
+      ta_state i32[M, C, L], x_lit i32[B, L], ys i32[B], seed i32[2]
+        -> i32[M, C, L]
+    """
+
+    def sample_update(ta, xyk):
+        x_lit, y, key = xyk
+        k_neg, k_t, k_n = jax.random.split(key, 3)
+        # Uniform over the other M-1 classes.
+        neg = (y + 1 + jax.random.randint(k_neg, (), 0, cfg.classes - 1)) % cfg.classes
+        ta_y = _class_feedback(
+            jax.lax.dynamic_index_in_dim(ta, y, axis=0, keepdims=False),
+            x_lit, +1, k_t, cfg,
+        )
+        ta = jax.lax.dynamic_update_index_in_dim(ta, ta_y, y, axis=0)
+        ta_n = _class_feedback(
+            jax.lax.dynamic_index_in_dim(ta, neg, axis=0, keepdims=False),
+            x_lit, -1, k_n, cfg,
+        )
+        ta = jax.lax.dynamic_update_index_in_dim(ta, ta_n, neg, axis=0)
+        return ta, None
+
+    def train_step(ta_state, x_lit, ys, seed):
+        key = jax.random.wrap_key_data(
+            seed.astype(jnp.uint32), impl="threefry2x32"
+        )
+        keys = jax.random.split(key, cfg.train_batch)
+        ta, _ = jax.lax.scan(sample_update, ta_state, (x_lit, ys, keys))
+        return ta
+
+    return train_step
+
+
+def init_ta_state(cfg: TMConfig, key) -> jnp.ndarray:
+    """TA states start on the Exclude side of the boundary (N-1 or N-2)."""
+    shape = (cfg.classes, cfg.clauses, cfg.literals)
+    return cfg.n_states - 1 - jax.random.bernoulli(key, 0.5, shape).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def eval_accuracy(cfg: TMConfig, ta_state, x_lit, ys):
+    """Dense-forward accuracy over a test set (test/bench helper, not AOT)."""
+    from .model import include_mask_from_state
+    from .kernels import ref
+
+    include = (ta_state >= cfg.n_states).reshape(cfg.total_clauses, cfg.literals)
+
+    def one(x):
+        out = ref.clause_eval_dense_ref(x, include, training=False)
+        pol = 1 - 2 * (jnp.arange(cfg.clauses, dtype=jnp.int32) % 2)
+        sums = (pol[None, :] * out.reshape(cfg.classes, cfg.clauses)).sum(axis=1)
+        return jnp.argmax(sums)
+
+    preds = jax.vmap(one)(x_lit)
+    return jnp.mean((preds == ys).astype(jnp.float32))

@@ -1,0 +1,88 @@
+"""AOT path: lowered HLO text is parseable-shaped and manifest-complete.
+
+Full rust-side execution of these artifacts is covered by cargo tests;
+here we assert the text interchange contract (ENTRY computation present,
+expected parameter/result shapes in the signature) without needing the
+rust toolchain.
+"""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile.configs import CONFIGS, get
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def quick_texts():
+    cfg = get("quickstart")
+    return aot.lower_infer(cfg), aot.lower_train(cfg)
+
+
+def test_infer_hlo_entry_signature(quick_texts):
+    infer, _ = quick_texts
+    cfg = get("quickstart")
+    assert len([l for l in infer.splitlines() if "ENTRY" in l]) == 1
+    # Parameter and result shapes appear in the module text.
+    assert f"u32[{cfg.total_clauses},{cfg.literals}]" in infer
+    assert f"u32[{cfg.literals}]" in infer
+    assert f"s32[{cfg.classes},32]" in infer
+    assert "s32[32]" in infer
+    # The ENTRY computation itself takes exactly the 2 documented params
+    # (sub-computations like reducers have their own parameter() lines).
+    entry_block = infer[infer.index("ENTRY"):]
+    assert entry_block.count("parameter(") == 2
+
+
+def test_train_hlo_entry_signature(quick_texts):
+    _, train = quick_texts
+    cfg = get("quickstart")
+    assert len([l for l in train.splitlines() if "ENTRY" in l]) == 1
+    assert f"s32[{cfg.classes},{cfg.clauses},{cfg.literals}]" in train
+    assert f"s32[{cfg.train_batch},{cfg.literals}]" in train
+
+
+def test_hlo_is_text_not_proto(quick_texts):
+    # The interchange contract: human-readable HLO text (the 0.5.1
+    # xla_extension text parser reassigns 64-bit ids; serialized protos
+    # from jax >= 0.5 would be rejected).
+    infer, train = quick_texts
+    for text in (infer, train):
+        assert text.startswith("HloModule"), text[:60]
+        assert "ENTRY" in text
+
+
+def test_manifest_entry_covers_all_shapes():
+    cfg = get("emg")
+    e = aot.manifest_entry(cfg)
+    assert e["infer_args"]["inc_mask"] == ["u32", [cfg.total_clauses, cfg.literals]]
+    assert e["train_args"]["ta_state"] == ["i32", [cfg.classes, cfg.clauses, cfg.literals]]
+    assert e["infer_hlo"] == "tm_infer_emg.hlo.txt"
+    assert e["n_states"] == 128
+
+
+def test_all_configs_have_even_clauses_and_valid_dims():
+    for cfg in CONFIGS.values():
+        assert cfg.clauses % 2 == 0, cfg.name  # polarity alternation needs pairs
+        assert cfg.literals == 2 * cfg.features
+        assert cfg.classes >= 2
+        assert cfg.T > 0 and cfg.s > 1.0 or cfg.name == "quickstart"
+
+
+def test_built_artifacts_match_manifest():
+    """If `make artifacts` has run, every manifest entry must exist on disk."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(art, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built yet")
+    manifest = json.load(open(mpath))
+    for name, entry in manifest["configs"].items():
+        for key in ("infer_hlo", "train_hlo"):
+            path = os.path.join(art, entry[key])
+            assert os.path.exists(path), path
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule")

@@ -1,0 +1,102 @@
+"""Synthetic data generator: determinism + the cross-language PRNG lock.
+
+The known-answer vectors here are duplicated in rust
+(rust/src/datasets/synth.rs tests) so the two implementations can never
+silently diverge.
+"""
+
+import numpy as np
+
+from compile.data import XorShift64Star, make_dataset, to_literals
+
+# Known-answer vectors — must match rust/src/datasets/synth.rs.
+KAT_SEED42_U64 = [
+    0x56CE4AB7719BA3A0,
+    0xC841EB53EBBB2DDA,
+    0xCA466BE0C9980276,
+    0xF1ACC7334A7B70DF,
+]
+KAT_SEED7_F64 = [0.820246666541, 0.928290156504, 0.089349592752]
+
+
+def test_prng_known_answers():
+    r = XorShift64Star(42)
+    assert [r.next_u64() for _ in range(4)] == KAT_SEED42_U64
+
+
+def test_prng_f64_known_answers():
+    r = XorShift64Star(7)
+    got = [round(r.next_f64(), 12) for _ in range(3)]
+    assert got == KAT_SEED7_F64
+
+
+def test_prng_zero_seed_not_stuck():
+    r = XorShift64Star(0)
+    assert r.next_u64() != 0
+
+
+def test_dataset_deterministic():
+    a = make_dataset(16, 3, 64, seed=9)
+    b = make_dataset(16, 3, 64, seed=9)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_dataset_seed_changes_data():
+    a = make_dataset(16, 3, 64, seed=9)
+    b = make_dataset(16, 3, 64, seed=10)
+    assert not np.array_equal(a[0], b[0])
+
+
+def test_dataset_all_classes_present():
+    _, y = make_dataset(8, 4, 400, seed=1)
+    assert set(np.unique(y)) == {0, 1, 2, 3}
+
+
+def test_drift_flips_consistent_positions():
+    x0, y0 = make_dataset(32, 2, 128, noise=0.0, seed=5, drift=0.0)
+    x1, y1 = make_dataset(32, 2, 128, noise=0.0, seed=5, drift=0.5)
+    np.testing.assert_array_equal(y0, y1)
+    # With zero noise the difference per class is exactly the drifted
+    # feature set, identical for every sample of the same class.
+    for c in (0, 1):
+        d = (x0[y0 == c] ^ x1[y1 == c])
+        assert (d == d[0]).all()
+
+
+def test_to_literals_complement():
+    x = np.array([[1, 0]], dtype=np.uint8)
+    lit = to_literals(x)
+    np.testing.assert_array_equal(lit[0], [1, 0, 0, 1])
+
+
+def test_informative_fraction_shares_background():
+    # informative=0: all classes identical (pure background).
+    x, y = make_dataset(32, 3, 64, noise=0.0, seed=5, informative=0.0)
+    protos = [x[y == c][0] for c in range(3) if (y == c).any()]
+    for p in protos[1:]:
+        np.testing.assert_array_equal(protos[0], p)
+
+
+def test_informative_one_gives_distinct_prototypes():
+    x, y = make_dataset(64, 2, 64, noise=0.0, seed=5, informative=1.0)
+    a = x[y == 0][0]
+    b = x[y == 1][0]
+    assert (a != b).sum() > 10
+
+
+def test_informative_draw_order_keeps_drift_pairing():
+    x0, y0 = make_dataset(32, 2, 64, noise=0.0, seed=5, drift=0.0, informative=0.4)
+    x1, y1 = make_dataset(32, 2, 64, noise=0.0, seed=5, drift=0.5, informative=0.4)
+    np.testing.assert_array_equal(y0, y1)
+
+
+CROSS_LANG_X = [1, 0, 0, 1, 0, 0, 1, 0, 1, 0, 0, 1, 0, 0, 1, 1, 1, 0, 1, 0, 0, 0, 1, 0, 1, 0, 0, 0, 0, 0, 1, 1]
+CROSS_LANG_Y = [0, 0, 1, 1]
+
+
+def test_cross_language_dataset_lock():
+    # Mirrors rust/src/datasets/synth.rs::cross_language_dataset_lock.
+    x, y = make_dataset(8, 2, 4, noise=0.1, seed=42, informative=0.5)
+    assert x.flatten().tolist() == CROSS_LANG_X
+    assert y.tolist() == CROSS_LANG_Y

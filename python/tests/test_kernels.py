@@ -1,0 +1,113 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+hypothesis sweeps shapes and include densities; every case must match
+bit-for-bit (the datapath is exact integer/bit logic, so allclose == equal).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.clause_eval import clause_eval_packed, vmem_bytes
+from compile.kernels.class_sum import class_sums
+
+ALL_ONES = np.uint32(0xFFFFFFFF)
+
+
+def random_case(rng, classes, clauses, literals, density):
+    k = classes * clauses
+    inc = (rng.random((k, literals)) < density).astype(np.uint32) * ALL_ONES
+    xs = rng.integers(0, 2**32, size=literals, dtype=np.uint32)
+    return jnp.array(xs), jnp.array(inc)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    classes=st.integers(1, 6),
+    clauses=st.integers(1, 24),
+    literals=st.integers(1, 96),
+    density=st.floats(0.0, 0.3),
+    block_k=st.sampled_from([1, 3, 8, 64, 256]),
+    seed=st.integers(0, 2**31),
+)
+def test_clause_eval_matches_ref(classes, clauses, literals, density, block_k, seed):
+    rng = np.random.default_rng(seed)
+    xs, inc = random_case(rng, classes, clauses, literals, density)
+    got = clause_eval_packed(xs, inc, block_k=block_k)
+    want = ref.clause_eval_packed_ref(xs, inc)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    classes=st.integers(1, 8),
+    clauses=st.integers(1, 32),
+    seed=st.integers(0, 2**31),
+)
+def test_class_sums_match_ref(classes, clauses, seed):
+    rng = np.random.default_rng(seed)
+    words = jnp.array(rng.integers(0, 2**32, size=classes * clauses, dtype=np.uint32))
+    got = class_sums(words, classes, clauses)
+    want = ref.class_sums_ref(words, classes, clauses)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_empty_clause_outputs_zero_at_inference():
+    xs = jnp.array(np.full(8, 0xFFFFFFFF, dtype=np.uint32))
+    inc = jnp.zeros((4, 8), dtype=jnp.uint32)  # all clauses empty
+    got = clause_eval_packed(xs, inc, block_k=2)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(4, dtype=np.uint32))
+
+
+def test_single_include_propagates_literal():
+    rng = np.random.default_rng(3)
+    xs = rng.integers(0, 2**32, size=16, dtype=np.uint32)
+    inc = np.zeros((16, 16), dtype=np.uint32)
+    for k in range(16):
+        inc[k, k] = ALL_ONES  # clause k includes exactly literal k
+    got = clause_eval_packed(jnp.array(xs), jnp.array(inc), block_k=4)
+    np.testing.assert_array_equal(np.asarray(got), xs)
+
+
+def test_include_acts_as_and():
+    # Clause includes literals 0 and 1: output word == xs[0] & xs[1].
+    xs = np.array([0b1100, 0b1010, 0xFFFF], dtype=np.uint32)
+    inc = np.array([[ALL_ONES, ALL_ONES, 0]], dtype=np.uint32)
+    got = clause_eval_packed(jnp.array(xs), jnp.array(inc))
+    assert int(got[0]) == (0b1100 & 0b1010)
+
+
+def test_polarity_alternates_within_class():
+    # One class, two clauses both firing for datapoint 0: +1 then -1 -> 0.
+    words = jnp.array(np.array([1, 1], dtype=np.uint32))
+    sums = class_sums(words, classes=1, clauses=2)
+    assert int(sums[0, 0]) == 0
+    # Only the positive clause fires -> +1.
+    sums = class_sums(jnp.array(np.array([1, 0], dtype=np.uint32)), 1, 2)
+    assert int(sums[0, 0]) == 1
+    # Only the negative clause fires -> -1.
+    sums = class_sums(jnp.array(np.array([0, 1], dtype=np.uint32)), 1, 2)
+    assert int(sums[0, 0]) == -1
+
+
+def test_pack_literals_roundtrip():
+    rng = np.random.default_rng(11)
+    batch = rng.integers(0, 2, size=(32, 24)).astype(np.int32)
+    packed = ref.pack_literals_ref(jnp.array(batch))
+    unpacked = (np.asarray(packed)[None, :] >> np.arange(32)[:, None]) & 1
+    np.testing.assert_array_equal(unpacked, batch)
+
+
+def test_pack_literals_partial_batch_zero_fills():
+    batch = np.ones((5, 8), dtype=np.int32)
+    packed = np.asarray(ref.pack_literals_ref(jnp.array(batch)))
+    assert (packed == 0b11111).all()
+
+
+@pytest.mark.parametrize("block_k,literals", [(64, 128), (256, 1568), (512, 1568)])
+def test_vmem_budget(block_k, literals):
+    # The structural perf constraint from DESIGN.md §7: one grid step must
+    # stay far below a 16 MiB VMEM budget.
+    assert vmem_bytes(block_k, literals) < 8 * 2**20

@@ -1,0 +1,102 @@
+"""L2 model invariants: packed (deployment) inference == dense reference."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import get
+from compile import model as M
+from compile.kernels import ref
+
+
+def random_model(rng, classes, clauses, literals, density=0.08):
+    k = classes * clauses
+    include = rng.random((k, literals)) < density
+    return include
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    classes=st.integers(2, 5),
+    clauses=st.integers(2, 16),
+    features=st.integers(2, 40),
+    seed=st.integers(0, 2**31),
+)
+def test_packed_inference_equals_dense(classes, clauses, features, seed):
+    rng = np.random.default_rng(seed)
+    literals = 2 * features
+    include = random_model(rng, classes, clauses, literals)
+    inc_mask = jnp.array(include.astype(np.uint32) * np.uint32(0xFFFFFFFF))
+
+    feats = rng.integers(0, 2, size=(32, features)).astype(np.int32)
+    lits = np.asarray(M.literals_from_features(jnp.array(feats)))
+    packed = ref.pack_literals_ref(jnp.array(lits))
+
+    sums, preds = M.tm_infer_packed(inc_mask, packed, classes=classes, clauses=clauses)
+
+    # Dense per-sample reference (inference semantics).
+    for b in range(32):
+        out, dsums = M.tm_forward_dense(
+            jnp.array(include), jnp.array(lits[b]),
+            classes=classes, clauses=clauses, training=False,
+        )
+        np.testing.assert_array_equal(np.asarray(sums)[:, b], np.asarray(dsums))
+        assert int(preds[b]) == int(jnp.argmax(dsums))
+
+
+def test_literals_interleave():
+    x = jnp.array([[1, 0, 1]], dtype=jnp.int32)
+    lit = np.asarray(M.literals_from_features(x))
+    np.testing.assert_array_equal(lit[0], [1, 0, 0, 1, 1, 0])
+
+
+def test_include_mask_threshold():
+    cfg = get("quickstart")
+    ta = jnp.full((cfg.classes, cfg.clauses, cfg.literals), cfg.n_states - 1, jnp.int32)
+    mask = M.include_mask_from_state(ta, cfg.n_states)
+    assert int(jnp.count_nonzero(mask)) == 0
+    ta = ta.at[0, 0, 0].set(cfg.n_states)
+    mask = M.include_mask_from_state(ta, cfg.n_states)
+    assert int(jnp.count_nonzero(mask)) == 1
+    assert int(mask[0, 0]) == 0xFFFFFFFF
+
+
+def test_training_vs_inference_empty_clause_semantics():
+    # Empty clause: 1 during training, 0 at inference (Fig 3.2 discussion).
+    include = jnp.zeros((2, 4), dtype=bool)
+    x = jnp.array([1, 0, 1, 0], dtype=jnp.int32)
+    train_out = ref.clause_eval_dense_ref(x, include, training=True)
+    infer_out = ref.clause_eval_dense_ref(x, include, training=False)
+    np.testing.assert_array_equal(np.asarray(train_out), [1, 1])
+    np.testing.assert_array_equal(np.asarray(infer_out), [0, 0])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_full_packed_pipeline_from_ta_states(seed):
+    """include_mask_from_state -> pallas infer == dense per-sample walk,
+    starting from raw TA states (the exact tensor the train artifact
+    emits)."""
+    rng = np.random.default_rng(seed)
+    classes, clauses, features = 3, 4, 8
+    literals = 2 * features
+    n_states = 128
+    ta = rng.integers(0, 2 * n_states, size=(classes, clauses, literals)).astype(np.int32)
+    # Sparsify: push most states below the include boundary.
+    mask = rng.random(ta.shape) < 0.9
+    ta = np.where(mask, np.minimum(ta, n_states - 1), ta)
+
+    inc_mask = M.include_mask_from_state(jnp.array(ta), n_states)
+    feats = rng.integers(0, 2, size=(32, features)).astype(np.int32)
+    lits = np.asarray(M.literals_from_features(jnp.array(feats)))
+    packed = ref.pack_literals_ref(jnp.array(lits))
+    sums, preds = M.tm_infer_packed(inc_mask, packed, classes=classes, clauses=clauses)
+
+    include = np.asarray(ta >= n_states).reshape(classes * clauses, literals)
+    for b in range(32):
+        _, dsums = M.tm_forward_dense(
+            jnp.array(include), jnp.array(lits[b]),
+            classes=classes, clauses=clauses, training=False,
+        )
+        np.testing.assert_array_equal(np.asarray(sums)[:, b], np.asarray(dsums))

@@ -1,0 +1,104 @@
+"""Trainer semantics: feedback rules, state bounds, and actual learning."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import get, TMConfig
+from compile import train as T, data
+
+
+@pytest.fixture(scope="module")
+def quick_cfg():
+    return get("quickstart")
+
+
+def run_training(cfg, n=512, epochs=6, noise=0.1, seed=7, drift=0.0):
+    x, y = data.make_dataset(cfg.features, cfg.classes, n, noise=noise, seed=seed, drift=drift)
+    lit = data.to_literals(x)
+    step = jax.jit(T.make_train_step(cfg))
+    ta = T.init_ta_state(cfg, jax.random.key(0))
+    nb = (n // cfg.train_batch) * cfg.train_batch
+    for epoch in range(epochs):
+        for i in range(0, nb, cfg.train_batch):
+            ta = step(
+                ta,
+                jnp.array(lit[i : i + cfg.train_batch]),
+                jnp.array(y[i : i + cfg.train_batch]),
+                jnp.array([epoch, i], dtype=jnp.int32),
+            )
+    acc = T.eval_accuracy(cfg, ta, jnp.array(lit), jnp.array(y))
+    return ta, float(acc)
+
+
+def test_learns_separable_data(quick_cfg):
+    _, acc = run_training(quick_cfg, noise=0.05)
+    assert acc > 0.9, f"TM failed to learn separable data: acc={acc}"
+
+
+def test_state_bounds_invariant(quick_cfg):
+    ta, _ = run_training(quick_cfg, epochs=2)
+    assert int(ta.min()) >= 0
+    assert int(ta.max()) <= 2 * quick_cfg.n_states - 1
+
+
+def test_model_is_sparse():
+    # The paper's compression premise (§2): includes are a small minority.
+    cfg = get("emg")
+    ta, acc = run_training(cfg, n=256, epochs=3)
+    inc_frac = float((ta >= cfg.n_states).mean())
+    assert inc_frac < 0.35, f"include fraction {inc_frac} too dense"
+    assert acc > 0.5
+
+
+def test_train_step_deterministic(quick_cfg):
+    cfg = quick_cfg
+    x, y = data.make_dataset(cfg.features, cfg.classes, cfg.train_batch, seed=3)
+    lit = jnp.array(data.to_literals(x))
+    ys = jnp.array(y)
+    seed = jnp.array([1, 2], dtype=jnp.int32)
+    step = jax.jit(T.make_train_step(cfg))
+    ta0 = T.init_ta_state(cfg, jax.random.key(1))
+    a = step(ta0, lit, ys, seed)
+    b = step(ta0, lit, ys, seed)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_different_seed_different_update(quick_cfg):
+    cfg = quick_cfg
+    x, y = data.make_dataset(cfg.features, cfg.classes, cfg.train_batch, seed=3)
+    lit = jnp.array(data.to_literals(x))
+    ys = jnp.array(y)
+    step = jax.jit(T.make_train_step(cfg))
+    ta0 = T.init_ta_state(cfg, jax.random.key(1))
+    a = step(ta0, lit, ys, jnp.array([1, 2], dtype=jnp.int32))
+    b = step(ta0, lit, ys, jnp.array([3, 4], dtype=jnp.int32))
+    assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_type2_feedback_deterministic_rule():
+    """Type II: clause fired, literal 0, TA excluded -> state must rise
+    toward Include when the gate passes; never past the boundary rules."""
+    cfg = TMConfig("t2", features=4, classes=2, clauses=2, T=1000, s=1e9)
+    # s -> inf: Type I decrements have prob ~0, making the step almost
+    # deterministic; T huge: gate probability ~0.5 both sides.
+    x, y = data.make_dataset(cfg.features, cfg.classes, cfg.train_batch, seed=5)
+    lit = jnp.array(data.to_literals(x))
+    ys = jnp.array(y)
+    step = jax.jit(T.make_train_step(cfg))
+    ta0 = T.init_ta_state(cfg, jax.random.key(0))
+    ta1 = step(ta0, lit, ys, jnp.array([0, 1], dtype=jnp.int32))
+    # With 1/s ~ 0 no decrements can occur: states never decrease.
+    assert int((ta1 - ta0).min()) >= 0
+
+
+def test_drift_degrades_accuracy(quick_cfg):
+    """The recalibration premise: a model trained on clean data loses
+    accuracy on drifted data (Fig 8 motivation)."""
+    cfg = quick_cfg
+    ta, acc_clean = run_training(cfg, noise=0.05)
+    x, y = data.make_dataset(cfg.features, cfg.classes, 512, noise=0.05, seed=7, drift=0.3)
+    lit = data.to_literals(x)
+    acc_drift = float(T.eval_accuracy(cfg, ta, jnp.array(lit), jnp.array(y)))
+    assert acc_drift < acc_clean - 0.1, (acc_clean, acc_drift)

@@ -1,0 +1,47 @@
+//! Shared helpers for the paper-reproduction benches.
+//!
+//! Each bench is a standalone `harness = false` binary (criterion is not
+//! in the offline vendor set): it trains the workload models it needs,
+//! runs the simulator/baselines, and prints the corresponding paper
+//! table/figure rows.  Wall-clock measurement helpers live here too.
+
+use rttm::datasets::synth::Dataset;
+use rttm::datasets::workloads::{workload, Workload};
+use rttm::tm::model::TMModel;
+
+/// Train a workload model quickly (bench-scale corpus).
+#[allow(dead_code)]
+pub fn trained_model(name: &str, n: usize, epochs: usize) -> (Workload, TMModel, Dataset) {
+    let w = workload(name).expect("workload");
+    let data = w.dataset(n, 7);
+    let model = rttm::trainer::train_model(&w.shape, &data, epochs, 3);
+    (w, model, data)
+}
+
+/// Median wall-clock nanoseconds of `f` over `iters` runs (after
+/// `warmup` runs).
+#[allow(dead_code)]
+pub fn bench_ns<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// Simple aligned table printer.
+#[allow(dead_code)]
+pub fn print_row(cols: &[String], widths: &[usize]) {
+    let line: Vec<String> = cols
+        .iter()
+        .zip(widths)
+        .map(|(c, w)| format!("{c:>w$}", w = w))
+        .collect();
+    println!("{}", line.join("  "));
+}

@@ -1,0 +1,101 @@
+//! Fig 1: LUTs vs throughput of accelerator automation flows, all for
+//! MNIST, with eFPGA max-LUT verticals.
+//!
+//! Literature points are the published values the paper plots; our
+//! points are measured on the simulator with a trained MNIST model.
+//!
+//! `cargo bench --bench fig1_lut_throughput`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use rttm::accel::core::AccelConfig;
+use rttm::accel::multicore::MultiCore;
+use rttm::accel::Core;
+use rttm::baselines::Matador;
+use rttm::isa;
+use rttm::model_cost::{estimate, estimate_multicore};
+
+fn main() {
+    println!("=== Fig 1: LUTs vs inference throughput (MNIST) ===\n");
+
+    // Published literature points (as plotted by the paper).
+    let literature = [
+        ("hls4ml [17]", 260_000u32, 5.0e6f64),
+        ("PolyLUT [2]", 70_000, 2.0e7),
+        ("FINN [5]", 25_000, 1.0e6),
+        ("LogicNets [23]", 15_000, 3.0e8),
+    ];
+
+    // Our MNIST model on the three configurations + MATADOR fit.
+    let (w, model, data) = common::trained_model("mnist", 384, 2);
+    let instrs = isa::encode(&model);
+    println!("trained MNIST model: {} includes -> {} instructions", model.include_count(), instrs.len());
+
+    let packed = isa::pack_features(&data.xs[..32].to_vec());
+
+    // Base needs a deeper instruction memory for this model size
+    // (Fig 6 customization); keep S/M stock.
+    let need = instrs.len().next_power_of_two();
+    let base_cfg = AccelConfig::base().with_depths(need.max(8192), 2048);
+    let mut base = Core::new(base_cfg.clone());
+    base.program_model(&model).unwrap();
+    let rb = base.run_batch(&packed).unwrap();
+    let base_tput = 32.0 / base.seconds(rb.cycles.total());
+
+    let single_cfg = AccelConfig::single_core().with_depths(need.max(28672), 8192);
+    let mut single = Core::new(single_cfg.clone());
+    single.program_model(&model).unwrap();
+    let rs = single.run_batch(&packed).unwrap();
+    let single_tput = 32.0 / single.seconds(rs.cycles.total());
+
+    // Per-core memory must fit the heaviest class partition.
+    let per_class: Vec<usize> = model
+        .includes_per_class()
+        .into_iter()
+        .map(|v| if v == 0 { 2 } else { v })
+        .collect();
+    let heaviest = MultiCore::partition(&per_class, 5)
+        .into_iter()
+        .map(|(s, e)| per_class[s..e].iter().sum::<usize>())
+        .max()
+        .unwrap_or(2);
+    let mc_cfg =
+        AccelConfig::multicore_core().with_depths(heaviest.next_power_of_two().max(4096), 2048);
+    let mut multi = MultiCore::new(5, mc_cfg.clone());
+    multi.program_model(&model).unwrap();
+    let rm = multi.run_batch(&packed).unwrap();
+    let multi_tput = 32.0 / multi.seconds(rm.batch_cycles);
+
+    let mtdr = Matador::synthesize(&model);
+
+    println!("\n{:<22} {:>9} {:>14}  note", "flow", "LUTs", "inf/s");
+    for (name, luts, tput) in literature {
+        println!("{:<22} {:>9} {:>14.2e}  published", name, luts, tput);
+    }
+    println!(
+        "{:<22} {:>9} {:>14.2e}  model-specific, resynthesis",
+        "MATADOR [18]",
+        mtdr.luts(),
+        mtdr.throughput()
+    );
+    for (name, luts, tput) in [
+        ("this work B", estimate(&base_cfg).luts, base_tput),
+        ("this work S", estimate(&single_cfg).luts, single_tput),
+        ("this work M(5)", estimate_multicore(&mc_cfg, 5).luts, multi_tput),
+    ] {
+        println!("{:<22} {:>9} {:>14.2e}  runtime tunable", name, luts, tput);
+    }
+
+    println!("\neFPGA max-LUT verticals:");
+    for (chip, luts) in [("A7012", 8_000u32), ("A7035 (B fits)", 20_800), ("Z7020 (S/M fit)", 53_200)] {
+        println!("  {chip:<18} {luts:>7} LUTs");
+    }
+    println!(
+        "\nheadline: S @ {} LUTs vs MATADOR-MNIST {} LUTs -> {:.2}x fewer (paper: 2.5x, 3480-LUT config)",
+        estimate(&single_cfg).luts,
+        8709,
+        8709.0 / estimate(&single_cfg).luts as f64
+    );
+    let _ = w;
+}

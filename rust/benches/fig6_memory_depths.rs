@@ -1,0 +1,51 @@
+//! Fig 6: memory-depth customization of the base configuration — LUTs,
+//! FFs, power and f_max across instruction/feature memory depths, with
+//! the per-workload minimum-depth verticals.
+//!
+//! `cargo bench --bench fig6_memory_depths`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use rttm::accel::core::AccelConfig;
+use rttm::model_cost::energy::EnergyModel;
+use rttm::model_cost::{estimate, resources::min_depths};
+
+fn main() {
+    println!("=== Fig 6: base-config memory customization (A7-35T) ===\n");
+    println!(
+        "{:>11} {:>11} {:>7} {:>7} {:>7} {:>9} {:>9}",
+        "instr_depth", "feat_depth", "LUTs", "FFs", "BRAMs", "P(W)", "f(MHz)"
+    );
+    for shift in 0..7 {
+        let di = 1024usize << shift;
+        let df = 256usize << shift;
+        let cfg = AccelConfig::base().with_depths(di, df);
+        let r = estimate(&cfg);
+        let p = EnergyModel::for_config(&cfg);
+        println!(
+            "{:>11} {:>11} {:>7} {:>7} {:>7} {:>9.3} {:>9.1}",
+            di, df, r.luts, r.ffs, r.brams, p.watts, r.freq_mhz
+        );
+    }
+
+    println!("\nminimum required depths per workload (the Fig 6 verticals):");
+    println!(
+        "{:<12} {:>13} {:>13}  fits stock base (8192/2048)?",
+        "workload", "instr entries", "feature words"
+    );
+    for name in ["emg", "gesture", "har", "sensorless", "gasdrift", "kws6", "cifar2", "mnist"] {
+        let (_, model, _) = common::trained_model(name, 384, 2);
+        let (di, df) = min_depths(&model);
+        let fits = di <= 8192 && df <= 2048;
+        println!(
+            "{:<12} {:>13} {:>13}  {}",
+            name,
+            di,
+            df,
+            if fits { "yes" } else { "no -> customize" }
+        );
+    }
+    println!("\ntrade-off (paper): deeper memories buy runtime-tunability headroom");
+    println!("at more LUT/FF/power and lower f_max — unlike a fixed-memory ASIC.");
+}

@@ -1,0 +1,123 @@
+//! Fig 9: energy (E) and latency (L) of B/S/M vs MATADOR (MTDR) and the
+//! STM32Disco software baseline (RDRS), on MNIST / CIFAR-2 / KWS-6.
+//! Hatched bars in the paper = single datapoint; solid = batched.
+//! MATADOR has no batch mode.
+//!
+//! `cargo bench --bench fig9_energy_latency`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use rttm::accel::core::AccelConfig;
+use rttm::accel::multicore::MultiCore;
+use rttm::accel::Core;
+use rttm::baselines::{Matador, Mcu, McuKind};
+use rttm::isa;
+use rttm::model_cost::energy::EnergyModel;
+
+fn main() {
+    println!("=== Fig 9: energy & latency vs MATADOR and RDRS (STM32) ===");
+    for name in ["mnist", "cifar2", "kws6"] {
+        let (w, model, data) = common::trained_model(name, 384, 2);
+        let instrs = isa::encode(&model);
+        let need = instrs.len().next_power_of_two().max(8192);
+        let packed = isa::pack_features(&data.xs[..32].to_vec());
+
+        println!(
+            "\n--- {} ({} instructions) ---",
+            w.name,
+            instrs.len()
+        );
+        println!(
+            "{:<18} {:>12} {:>12} {:>12} {:>12}",
+            "design", "L batch(us)", "L single(us)", "E batch(uJ)", "E single(uJ)"
+        );
+
+        // B / S / M on the simulator.
+        let base_cfg = AccelConfig::base().with_depths(need, 2048);
+        let mut b = Core::new(base_cfg.clone());
+        b.program_model(&model).unwrap();
+        let rb = b.run_batch(&packed).unwrap();
+        let b_us = b.seconds(rb.cycles.total()) * 1e6;
+        let b_e = EnergyModel::for_config(&base_cfg);
+        print_row("Base (B)", b_us, b_e.energy_uj(b_us));
+
+        let s_cfg = AccelConfig::single_core().with_depths(need.max(28672), 8192);
+        let mut s = Core::new(s_cfg.clone());
+        s.program_model(&model).unwrap();
+        let rs = s.run_batch(&packed).unwrap();
+        let s_us = s.seconds(rs.cycles.total()) * 1e6;
+        let s_e = EnergyModel::for_config(&s_cfg);
+        print_row("Single Core (S)", s_us, s_e.energy_uj(s_us));
+
+        // Per-core memory must fit the heaviest class *partition* (a
+        // core may own several classes; cifar2 has one class per active
+        // core, mnist two).
+        let per_class: Vec<usize> = model
+            .includes_per_class()
+            .into_iter()
+            .map(|n| if n == 0 { 2 } else { n })
+            .collect();
+        let heaviest = MultiCore::partition(&per_class, 5)
+            .into_iter()
+            .map(|(s, e)| per_class[s..e].iter().sum::<usize>())
+            .max()
+            .unwrap_or(2);
+        let m_cfg = AccelConfig::multicore_core()
+            .with_depths(heaviest.next_power_of_two().max(4096), 2048);
+        let mut m = MultiCore::new(5, m_cfg.clone());
+        m.program_model(&model).unwrap();
+        let rm = m.run_batch(&packed).unwrap();
+        let m_us = m.seconds(rm.batch_cycles) * 1e6;
+        let m_e = EnergyModel::for_multicore(&m_cfg, 5);
+        print_row("5-Core (M)", m_us, m_e.energy_uj(m_us));
+
+        // MATADOR: single datapoint only.
+        let mtdr = Matador::synthesize(&model);
+        println!(
+            "{:<18} {:>12} {:>12.3} {:>12} {:>12.4}   (no batch mode)",
+            "MTDR",
+            "-",
+            mtdr.single_latency_us(),
+            "-",
+            mtdr.single_energy_uj()
+        );
+
+        // RDRS: the same compressed algorithm in software on STM32Disco.
+        let rdrs = Mcu::program_model(McuKind::Stm32Disco, &model);
+        println!(
+            "{:<18} {:>12.2} {:>12.3} {:>12.3} {:>12.4}",
+            "RDRS (STM32)",
+            rdrs.batch_latency_us(32),
+            rdrs.single_latency_us(),
+            rdrs.batch_energy_uj(32),
+            rdrs.kind.power_w() * rdrs.single_latency_us()
+        );
+
+        // Red annotations in the figure: speedup & energy reduction vs RDRS.
+        println!(
+            "B vs RDRS: {:.0}x speedup, {:.0}x energy reduction (single dp, amortized)",
+            rdrs.single_latency_us() / (b_us / 32.0),
+            (rdrs.kind.power_w() * rdrs.single_latency_us()) / (b_e.energy_uj(b_us) / 32.0),
+        );
+        println!(
+            "order-of-magnitude check vs MTDR: B single {:.3} us vs MTDR {:.3} us -> within {:.1}x",
+            b_us / 32.0,
+            mtdr.single_latency_us(),
+            (b_us / 32.0) / mtdr.single_latency_us()
+        );
+    }
+    println!("\npaper shape: all B/S/M within one order of magnitude of MATADOR;");
+    println!("B most energy-efficient on CIFAR-2; recalibration needs no resynthesis.");
+}
+
+fn print_row(label: &str, batch_us: f64, batch_uj: f64) {
+    println!(
+        "{:<18} {:>12.2} {:>12.3} {:>12.3} {:>12.4}",
+        label,
+        batch_us,
+        batch_us / 32.0,
+        batch_uj,
+        batch_uj / 32.0
+    );
+}

@@ -1,0 +1,117 @@
+//! Hot-path wall-clock benchmarks (the §Perf baseline in
+//! EXPERIMENTS.md): how fast the *simulator and runtime themselves* run
+//! on the host, independent of the modeled eFPGA clock.
+//!
+//! Targets (DESIGN.md §7): the L3 cycle loop should sustain >100M
+//! instruction-slots/s so whole Table 2 sweeps finish in seconds.
+//!
+//! `cargo bench --bench hotpath`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::bench_ns;
+use rttm::accel::core::{AccelConfig, Core};
+use rttm::config::Manifest;
+use rttm::isa;
+use rttm::runtime::Runtime;
+
+fn main() {
+    let (w, model, data) = common::trained_model("emg", 512, 3);
+    let instrs = isa::encode(&model);
+    let need = instrs.len().next_power_of_two().max(8192);
+    let rows: Vec<Vec<u8>> = data.xs[..32].to_vec();
+    let packed = isa::pack_features(&rows);
+
+    println!("=== hot-path wall-clock (host) — workload {} ({} instrs) ===\n", w.name, instrs.len());
+
+    // 1. Simulator batch walk (the L3 hot loop).
+    let mut core = Core::new(AccelConfig::base().with_depths(need, 2048));
+    core.program_model(&model).unwrap();
+    let ns = bench_ns(100, 1500, || {
+        let r = core.run_batch(&packed).unwrap();
+        std::hint::black_box(r.preds);
+    });
+    let mips = instrs.len() as f64 / (ns / 1e9) / 1e6;
+    println!(
+        "simulator run_batch:       {:>10.1} us/batch  {:>8.1} M instr-slots/s  ({:.1} M inferences/s host)",
+        ns / 1e3,
+        mips,
+        32.0 / (ns / 1e9) / 1e6
+    );
+
+    // 2. Software ISA walk, single datapoint (the MCU-interpreter loop).
+    let lits = rttm::tm::reference::literals_from_features(&rows[0]);
+    let ns = bench_ns(20, 200, || {
+        let s = isa::decode_infer(&instrs, &lits, w.shape.classes).unwrap();
+        std::hint::black_box(s);
+    });
+    println!(
+        "sw walk (1 datapoint):     {:>10.1} us/dp     {:>8.1} M instr/s",
+        ns / 1e3,
+        instrs.len() as f64 / (ns / 1e9) / 1e6
+    );
+
+    // 3. Model compression (encode) — the retuning path.
+    let ns = bench_ns(5, 50, || {
+        let i = isa::encode(&model);
+        std::hint::black_box(i.len());
+    });
+    println!(
+        "isa::encode:               {:>10.1} us/model  {:>8.1} M TA/s scanned",
+        ns / 1e3,
+        w.shape.total_tas() as f64 / (ns / 1e9) / 1e6
+    );
+
+    // 4. Feature packing.
+    let ns = bench_ns(20, 200, || {
+        let p = isa::pack_features(&rows);
+        std::hint::black_box(p.len());
+    });
+    println!("pack_features (32 rows):   {:>10.2} us", ns / 1e3);
+
+    // 5. Dense reference (the golden model the simulator is checked
+    //    against) for context.
+    let ns = bench_ns(5, 50, || {
+        let s = rttm::tm::reference::class_sums_dense(&model, &lits);
+        std::hint::black_box(s);
+    });
+    println!("dense reference (1 dp):    {:>10.1} us/dp", ns / 1e3);
+
+    // 6. PJRT artifacts (if built): infer + train step.
+    if let Ok(man) = Manifest::load_default() {
+        let rt = Runtime::cpu().expect("pjrt");
+        let infer = rt.load_infer(&man, "emg").expect("infer artifact");
+        let mask = model.to_packed_mask();
+        let lit_rows: Vec<Vec<u8>> = rows
+            .iter()
+            .map(|x| rttm::tm::reference::literals_from_features(x))
+            .collect();
+        let xs = isa::pack_literals(&lit_rows);
+        let ns = bench_ns(5, 50, || {
+            let o = infer.infer_packed(&mask, &xs).unwrap();
+            std::hint::black_box(o.preds);
+        });
+        println!("PJRT infer artifact:       {:>10.1} us/batch (32 dp)", ns / 1e3);
+
+        let train = rt.load_train(&man, "emg").expect("train artifact");
+        let mut rng = rttm::datasets::synth::XorShift64Star::new(1);
+        let ta0 = rttm::runtime::init_ta_states(&train.shape, &mut rng);
+        let mut x_lit = Vec::new();
+        for row in &data.xs[..train.shape.train_batch] {
+            x_lit.extend(
+                rttm::tm::reference::literals_from_features(row)
+                    .iter()
+                    .map(|&v| v as i32),
+            );
+        }
+        let ys: Vec<i32> = data.ys[..train.shape.train_batch].iter().map(|&y| y as i32).collect();
+        let ns = bench_ns(3, 20, || {
+            let t = train.step(&ta0, &x_lit, &ys, [5, 6]).unwrap();
+            std::hint::black_box(t.len());
+        });
+        println!("PJRT train step:           {:>10.1} us/batch (32 samples)", ns / 1e3);
+    } else {
+        println!("(artifacts not built; skipping PJRT rows)");
+    }
+}

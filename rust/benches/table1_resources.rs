@@ -1,0 +1,66 @@
+//! Table 1: resource usage of the three accelerator configurations vs
+//! MATADOR builds for CIFAR-2, KWS-6 and MNIST.
+//!
+//! `cargo bench --bench table1_resources`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use rttm::accel::core::AccelConfig;
+use rttm::baselines::matador::{Matador, TABLE1_MATADOR};
+use rttm::model_cost::{estimate, estimate_multicore};
+
+fn main() {
+    println!("=== Table 1: resource usage (reproduced) ===\n");
+    println!(
+        "{:<22} {:>6} {:>9} {:>8} {:>7} {:>10}",
+        "Configuration", "chip", "LUTs", "FFs", "BRAMs", "Freq(MHz)"
+    );
+
+    let rows = [
+        ("Base (B)", estimate(&AccelConfig::base())),
+        ("Single Core (S)", estimate(&AccelConfig::single_core())),
+        (
+            "Multi-Core (M, 5x)",
+            estimate_multicore(&AccelConfig::multicore_core(), 5),
+        ),
+    ];
+    for (label, r) in rows {
+        println!(
+            "{:<22} {:>6} {:>9} {:>8} {:>7} {:>10.0}",
+            label, r.chip, r.luts, r.ffs, r.brams, r.freq_mhz
+        );
+    }
+
+    println!("\n--- MATADOR (model-specific, resynthesis per model) ---");
+    println!(
+        "{:<22} {:>6} {:>9} {:>8} {:>7} {:>10}   (paper anchors: LUT/FF/BRAM)",
+        "Model", "chip", "LUTs", "FFs", "BRAMs", "Freq(MHz)"
+    );
+    for name in ["cifar2", "kws6", "mnist"] {
+        let (w, model, _) = common::trained_model(name, 512, 2);
+        let m = Matador::synthesize(&model);
+        let anchor = TABLE1_MATADOR.iter().find(|a| a.0 == name).unwrap();
+        println!(
+            "{:<22} {:>6} {:>9} {:>8} {:>7} {:>10.0}   paper: {}/{}/{}",
+            format!("MTDR ({})", w.name),
+            "Z7020",
+            m.luts(),
+            m.ffs(),
+            m.brams(),
+            m.freq_mhz,
+            anchor.1,
+            anchor.2,
+            anchor.3,
+        );
+    }
+
+    // The paper's headline resource claim.
+    let s = estimate(&AccelConfig::single_core());
+    let mnist_anchor = TABLE1_MATADOR.iter().find(|a| a.0 == "mnist").unwrap();
+    println!(
+        "\nheadline: S uses {:.2}x fewer LUTs and {:.2}x fewer FFs than MATADOR-MNIST (paper: 2.5x / 3.38x)",
+        mnist_anchor.1 as f64 / s.luts as f64,
+        mnist_anchor.2 as f64 / s.ffs as f64,
+    );
+}

@@ -1,0 +1,133 @@
+//! Table 2: latency / throughput / energy of the proposed accelerators
+//! vs the ESP32 software implementation of the same compressed
+//! inference, across the five recalibration-suited UCI workloads.
+//!
+//! `cargo bench --bench table2_mcu_comparison`
+
+#[path = "common/mod.rs"]
+mod common;
+
+use rttm::accel::core::AccelConfig;
+use rttm::accel::multicore::MultiCore;
+use rttm::accel::Core;
+use rttm::baselines::{Mcu, McuKind};
+use rttm::coordinator::{Engine, InferenceService};
+use rttm::isa;
+use rttm::model_cost::energy::EnergyModel;
+
+struct Row {
+    design: String,
+    batch_us: f64,
+    single_us: f64,
+    throughput: f64,
+    batch_uj: f64,
+    single_uj: f64,
+}
+
+fn main() {
+    println!("=== Table 2: proposed accelerators vs ESP32 software ===");
+    // Paper accuracies for the comparison column.
+    for name in ["emg", "har", "gesture", "sensorless", "gasdrift"] {
+        let (w, model, data) = common::trained_model(name, 768, 3);
+        let instrs = isa::encode(&model);
+        let need = instrs.len().next_power_of_two().max(8192);
+        let packed = isa::pack_features(&data.xs[..32].to_vec());
+
+        // Accuracy on the accelerator itself.
+        let mut svc = InferenceService::new(Engine::custom(
+            AccelConfig::base().with_depths(need, 2048),
+        ));
+        svc.reprogram(&model).unwrap();
+        let acc = svc.measure_accuracy(&data.xs, &data.ys).unwrap();
+
+        let mut rows: Vec<Row> = Vec::new();
+
+        let base_cfg = AccelConfig::base().with_depths(need, 2048);
+        let mut b = Core::new(base_cfg.clone());
+        b.program_model(&model).unwrap();
+        let rb = b.run_batch(&packed).unwrap();
+        let us = b.seconds(rb.cycles.total()) * 1e6;
+        let e = EnergyModel::for_config(&base_cfg).energy_uj(us);
+        rows.push(row("Base (B)", us, e));
+
+        let s_cfg = AccelConfig::single_core().with_depths(need.max(28672), 8192);
+        let mut s = Core::new(s_cfg.clone());
+        s.program_model(&model).unwrap();
+        let rs = s.run_batch(&packed).unwrap();
+        let us = s.seconds(rs.cycles.total()) * 1e6;
+        let e = EnergyModel::for_config(&s_cfg).energy_uj(us);
+        rows.push(row("Single Core (S)", us, e));
+
+        // Per-core memory must fit the heaviest class *partition* (a
+        // core may own several classes; cifar2 has one class per active
+        // core, mnist two).
+        let per_class: Vec<usize> = model
+            .includes_per_class()
+            .into_iter()
+            .map(|n| if n == 0 { 2 } else { n })
+            .collect();
+        let heaviest = MultiCore::partition(&per_class, 5)
+            .into_iter()
+            .map(|(s, e)| per_class[s..e].iter().sum::<usize>())
+            .max()
+            .unwrap_or(2);
+        let m_cfg = AccelConfig::multicore_core()
+            .with_depths(heaviest.next_power_of_two().max(4096), 2048);
+        let mut mc = MultiCore::new(5, m_cfg.clone());
+        mc.program_model(&model).unwrap();
+        let rm = mc.run_batch(&packed).unwrap();
+        let us = mc.seconds(rm.batch_cycles) * 1e6;
+        let e = EnergyModel::for_multicore(&m_cfg, 5).energy_uj(us);
+        rows.push(row("5-Core (M)", us, e));
+
+        let esp = Mcu::program_model(McuKind::Esp32, &model);
+        rows.push(Row {
+            design: "ESP32".into(),
+            batch_us: esp.batch_latency_us(32),
+            single_us: esp.single_latency_us(),
+            throughput: esp.throughput(),
+            batch_uj: esp.batch_energy_uj(32),
+            single_uj: esp.kind.power_w() * esp.single_latency_us(),
+        });
+
+        let esp_single_us = rows.last().unwrap().single_us;
+        let esp_single_uj = rows.last().unwrap().single_uj;
+
+        println!(
+            "\n--- {} (measured acc {:.2}, paper acc {}) ---",
+            w.name,
+            acc,
+            w.paper_accuracy.map(|a| format!("{a:.2}")).unwrap_or_else(|| "-".into())
+        );
+        println!(
+            "{:<16} {:>11} {:>12} {:>12} {:>11} {:>12} {:>10} {:>9}",
+            "Design", "L batch(us)", "L single(us)", "inf/s", "E batch(uJ)", "E single(uJ)", "xSpeedup", "xEnergy"
+        );
+        for r in &rows {
+            println!(
+                "{:<16} {:>11.2} {:>12.3} {:>12.0} {:>11.3} {:>12.4} {:>10.1} {:>9.1}",
+                r.design,
+                r.batch_us,
+                r.single_us,
+                r.throughput,
+                r.batch_uj,
+                r.single_uj,
+                esp_single_us / r.single_us,
+                esp_single_uj / r.single_uj,
+            );
+        }
+    }
+    println!("\npaper shape: 58x-684x speedups, 1.6x-129x energy reductions vs ESP32;");
+    println!("M best on sensorless (most classes); batch = 32x single on the MCU.");
+}
+
+fn row(design: &str, batch_us: f64, batch_uj: f64) -> Row {
+    Row {
+        design: design.into(),
+        batch_us,
+        single_us: batch_us / 32.0,
+        throughput: 32.0 * 1e6 / batch_us,
+        batch_uj,
+        single_uj: batch_uj / 32.0,
+    }
+}

@@ -1,0 +1,246 @@
+//! AXI-Stream interface model (the S and M configurations' front-end).
+//!
+//! The paper's single- and multi-core builds sit behind AXIS so a host
+//! processor can pre-process and stream data in (Fig 4.1, Fig 7).  This
+//! model accounts *beats* (one word transfer per cycle when both READY
+//! and VALID) with a bounded skid FIFO, and implements the Fig 7
+//! splitter: instruction traffic is routed to one core's port by class
+//! range, feature traffic is broadcast to all ports.
+//!
+//! It gives the coordinator backpressure visibility (stall cycles) and
+//! makes the multi-core programming path explicit — per-core instruction
+//! streams really are produced by splitting one encoded model stream.
+
+use crate::isa::Instr;
+use crate::tm::model::TMModel;
+
+/// One AXIS port with a skid buffer of `depth` words.
+#[derive(Debug, Clone)]
+pub struct AxisPort {
+    pub depth: usize,
+    queue: std::collections::VecDeque<u64>,
+    /// Beats accepted.
+    pub beats: u64,
+    /// Cycles the sender was stalled on a full buffer.
+    pub stall_cycles: u64,
+}
+
+impl AxisPort {
+    pub fn new(depth: usize) -> Self {
+        AxisPort {
+            depth,
+            queue: std::collections::VecDeque::with_capacity(depth),
+            beats: 0,
+            stall_cycles: 0,
+        }
+    }
+
+    /// Offer one word; models a consumer that drains one word per cycle
+    /// (the accelerator's 1 word/cycle stream front-end): a full queue
+    /// stalls the producer for the cycles needed to free space.
+    pub fn push(&mut self, word: u64) {
+        if self.queue.len() == self.depth {
+            // Consumer drains one word per cycle; producer waits one.
+            self.stall_cycles += 1;
+            self.queue.pop_front();
+        }
+        self.queue.push_back(word);
+        self.beats += 1;
+    }
+
+    pub fn drain(&mut self) -> Vec<u64> {
+        self.queue.drain(..).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Total transfer cycles for everything pushed so far.
+    pub fn transfer_cycles(&self) -> u64 {
+        self.beats + self.stall_cycles
+    }
+}
+
+/// The Fig 7 AXIS splitter: one inbound stream, N core ports.
+pub struct AxisSplitter {
+    pub ports: Vec<AxisPort>,
+}
+
+impl AxisSplitter {
+    pub fn new(n_ports: usize, skid_depth: usize) -> Self {
+        AxisSplitter {
+            ports: (0..n_ports).map(|_| AxisPort::new(skid_depth)).collect(),
+        }
+    }
+
+    /// Split a model's instruction stream across class partitions:
+    /// port i receives the full (header + payload) programming stream of
+    /// its class slice.  Returns the per-port instruction streams.
+    pub fn split_program(
+        &mut self,
+        model: &TMModel,
+        assign: &[(usize, usize)],
+        codec: &super::stream::StreamCodec,
+    ) -> Result<Vec<Vec<Instr>>, super::stream::StreamError> {
+        assert_eq!(assign.len(), self.ports.len());
+        let mut streams = Vec::with_capacity(assign.len());
+        for (port, &(s, e)) in self.ports.iter_mut().zip(assign) {
+            if s == e {
+                streams.push(Vec::new());
+                continue;
+            }
+            let slice = model.slice_classes(s..e);
+            let instrs = crate::isa::encode(&slice);
+            let header =
+                codec.instruction_header(slice.shape.classes, slice.shape.clauses, instrs.len())?;
+            for w in header {
+                port.push(w);
+            }
+            for w in codec.pack_instructions(&instrs) {
+                port.push(w);
+            }
+            streams.push(instrs);
+        }
+        Ok(streams)
+    }
+
+    /// Broadcast one feature batch to every active port.
+    pub fn broadcast_features(
+        &mut self,
+        packed: &[u32],
+        codec: &super::stream::StreamCodec,
+    ) -> Result<(), super::stream::StreamError> {
+        for port in &mut self.ports {
+            let header = codec.feature_header(packed.len(), 1)?;
+            for w in header {
+                port.push(w);
+            }
+            for w in codec.pack_feature_words(packed) {
+                port.push(w);
+            }
+        }
+        Ok(())
+    }
+
+    /// Worst-port transfer cycles (ports fill in parallel on the real
+    /// interconnect; the slowest port gates the batch).
+    pub fn max_transfer_cycles(&self) -> u64 {
+        self.ports.iter().map(|p| p.transfer_cycles()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::multicore::MultiCore;
+    use crate::accel::stream::{HeaderWidth, StreamCodec};
+    use crate::datasets::synth::SynthSpec;
+    use crate::TMShape;
+
+    fn trained() -> TMModel {
+        let shape = TMShape::synthetic(12, 4, 8);
+        let data = SynthSpec::new(12, 4, 192).noise(0.05).seed(3).generate();
+        crate::trainer::train_model(&shape, &data, 3, 1)
+    }
+
+    #[test]
+    fn port_counts_beats() {
+        let mut p = AxisPort::new(4);
+        for w in 0..3u64 {
+            p.push(w);
+        }
+        assert_eq!(p.beats, 3);
+        assert_eq!(p.stall_cycles, 0);
+        assert_eq!(p.drain(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn full_port_stalls_producer() {
+        let mut p = AxisPort::new(2);
+        for w in 0..5u64 {
+            p.push(w);
+        }
+        assert_eq!(p.beats, 5);
+        assert_eq!(p.stall_cycles, 3);
+        assert_eq!(p.transfer_cycles(), 8);
+    }
+
+    #[test]
+    fn splitter_partitions_instructions_by_class() {
+        let model = trained();
+        let per_class: Vec<usize> = model
+            .includes_per_class()
+            .into_iter()
+            .map(|v| if v == 0 { 2 } else { v })
+            .collect();
+        let assign = MultiCore::partition(&per_class, 2);
+        let codec = StreamCodec::new(HeaderWidth::W32);
+        let mut sp = AxisSplitter::new(2, 64);
+        let streams = sp.split_program(&model, &assign, &codec).unwrap();
+        let total: usize = streams.iter().map(|s| s.len()).sum();
+        assert_eq!(total, crate::isa::instruction_count(&model));
+        // Port streams decode back to the class slices.
+        for (stream, &(s, e)) in streams.iter().zip(&assign) {
+            let slice = model.slice_classes(s..e);
+            let decoded = crate::isa::encoder::decode_clauses(
+                stream,
+                slice.shape.literals(),
+                slice.shape.classes,
+            )
+            .unwrap();
+            assert_eq!(decoded.len(), e - s);
+        }
+    }
+
+    #[test]
+    fn broadcast_reaches_all_ports_equally() {
+        let codec = StreamCodec::new(HeaderWidth::W32);
+        let mut sp = AxisSplitter::new(3, 1024);
+        sp.broadcast_features(&[1, 2, 3, 4], &codec).unwrap();
+        let beats: Vec<u64> = sp.ports.iter().map(|p| p.beats).collect();
+        assert_eq!(beats, vec![6, 6, 6]); // 2 header + 4 payload each
+    }
+
+    #[test]
+    fn split_streams_program_real_cores() {
+        // The AXIS path produces streams that actually program cores and
+        // reproduce single-core predictions.
+        let model = trained();
+        let per_class: Vec<usize> = model
+            .includes_per_class()
+            .into_iter()
+            .map(|v| if v == 0 { 2 } else { v })
+            .collect();
+        let assign = MultiCore::partition(&per_class, 2);
+        let codec = StreamCodec::new(HeaderWidth::W32);
+        let mut sp = AxisSplitter::new(2, 4096);
+        sp.split_program(&model, &assign, &codec).unwrap();
+
+        let data = SynthSpec::new(12, 4, 64).seed(9).generate();
+        let packed = crate::isa::pack_features(&data.xs[..32].to_vec());
+        sp.broadcast_features(&packed, &codec).unwrap();
+
+        let mut sums = vec![[0i32; 32]; model.shape.classes];
+        for (port, &(s, e)) in sp.ports.iter_mut().zip(&assign) {
+            let words = port.drain();
+            let mut core =
+                crate::accel::Core::new(crate::accel::core::AccelConfig::multicore_core());
+            let results = core.feed_stream(&words).unwrap();
+            assert_eq!(results.len(), 1);
+            for (local, class) in (s..e).enumerate() {
+                sums[class] = results[0].class_sums[local];
+            }
+        }
+        // Merge equals a directly-programmed single core.
+        let mut single = crate::accel::Core::new(
+            crate::accel::core::AccelConfig::base().with_depths(8192, 2048),
+        );
+        single.program_model(&model).unwrap();
+        let r = single.run_batch(&packed).unwrap();
+        assert_eq!(sums, r.class_sums);
+    }
+}

@@ -1,0 +1,597 @@
+//! The base inference core (Fig 4): instruction fetch/decode, literal
+//! select, clause update, class-sum accumulate, argmax, output FIFO —
+//! with the Fig 5 cycle model.
+//!
+//! # Timing model
+//!
+//! Each instruction passes four stages (Fig 5.2): FETCH -> DECODE ->
+//! LIT-SELECT -> CLAUSE-UPDATE, "a minimum of four clock cycles".
+//! Two deploy-time variants:
+//!
+//! * [`PipelineMode::Pipelined`] (the paper's Fig 5 design): stages
+//!   overlap, steady state retires one instruction per cycle; a clause
+//!   boundary inserts one bubble (the class-sum accumulate reuses the
+//!   adder port).  Execute cycles = 3 + N + clauses.
+//! * [`PipelineMode::Iterative`]: the minimal-LUT variant with no
+//!   overlap: 4 cycles per instruction + 1 per clause commit.
+//!
+//! After the walk: one accumulate-flush cycle per class, `classes`
+//! comparison cycles for the sequential argmax, and FIFO fill cycles
+//! (one per output word on the 32-bit output port: 8 for a 32-wide
+//! batch of 8-bit classifications, 1 in single mode).
+//!
+//! Programming and feature loads move one stream word per cycle
+//! (headers included) — the real design's AXIS port does exactly this.
+
+use super::fifo::OutputFifo;
+use super::memory::{FeatureMemory, InstrMemory, MemError};
+use super::stream::{decode_stream, HeaderWidth, Message, StreamCodec, StreamError};
+use crate::isa::{self, DecodeWalk, Instr};
+
+/// Deploy-time configuration of one core (the Fig 8 "one-time
+/// implementation" choices).
+#[derive(Debug, Clone)]
+pub struct AccelConfig {
+    pub name: &'static str,
+    pub header_width: HeaderWidth,
+    pub instr_depth: usize,
+    pub feature_depth: usize,
+    pub fifo_depth: usize,
+    pub freq_mhz: f64,
+    pub pipeline: PipelineMode,
+}
+
+#[derive(Debug, Copy, Clone, PartialEq, Eq)]
+pub enum PipelineMode {
+    Pipelined,
+    Iterative,
+}
+
+impl AccelConfig {
+    /// Base standalone build (Table 1: Artix A7035, 200 MHz).
+    pub fn base() -> Self {
+        AccelConfig {
+            name: "base",
+            header_width: HeaderWidth::W32,
+            instr_depth: 8192,
+            feature_depth: 2048,
+            fifo_depth: 64,
+            freq_mhz: 200.0,
+            pipeline: PipelineMode::Pipelined,
+        }
+    }
+
+    /// AXIS single core (Table 1: Zynq Z7020, 100 MHz, deeper memories —
+    /// "BRAMs ... over-provisioned for more tunability later").
+    pub fn single_core() -> Self {
+        AccelConfig {
+            name: "single_core",
+            header_width: HeaderWidth::W32,
+            instr_depth: 28672,
+            feature_depth: 8192,
+            fifo_depth: 128,
+            freq_mhz: 100.0,
+            pipeline: PipelineMode::Pipelined,
+        }
+    }
+
+    /// Per-core config inside the multi-core build (Fig 7).
+    pub fn multicore_core() -> Self {
+        AccelConfig {
+            name: "multicore",
+            header_width: HeaderWidth::W32,
+            instr_depth: 4096,
+            feature_depth: 2048,
+            fifo_depth: 128,
+            freq_mhz: 100.0,
+            pipeline: PipelineMode::Pipelined,
+        }
+    }
+
+    pub fn with_depths(mut self, instr: usize, feature: usize) -> Self {
+        self.instr_depth = instr;
+        self.feature_depth = feature;
+        self
+    }
+
+    pub fn with_pipeline(mut self, p: PipelineMode) -> Self {
+        self.pipeline = p;
+        self
+    }
+
+    /// Total BRAM18 blocks of this configuration.
+    pub fn brams(&self) -> usize {
+        InstrMemory::new(self.instr_depth).brams()
+            + FeatureMemory::new(self.feature_depth).brams()
+            + 1 // output FIFO + stream buffer
+    }
+}
+
+/// Cumulative cycle accounting, by phase (Fig 5.1).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CycleStats {
+    pub program: u64,
+    pub feature_load: u64,
+    pub execute: u64,
+    pub commit: u64,
+    pub argmax: u64,
+    pub fifo: u64,
+}
+
+impl CycleStats {
+    pub fn total(&self) -> u64 {
+        self.program + self.feature_load + self.execute + self.commit + self.argmax + self.fifo
+    }
+
+    /// Inference-only cycles (excludes one-time programming).
+    pub fn inference(&self) -> u64 {
+        self.total() - self.program
+    }
+}
+
+/// One 32-datapoint batch result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchResult {
+    /// Per-class bit-sliced sums.
+    pub class_sums: Vec<[i32; 32]>,
+    /// argmax per datapoint lane.
+    pub preds: [u8; 32],
+    /// Cycles spent on THIS batch (feature load + execute + ... ).
+    pub cycles: CycleStats,
+}
+
+/// Errors surfaced by the core's stream front-end.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CoreError {
+    #[error(transparent)]
+    Stream(#[from] StreamError),
+    #[error(transparent)]
+    Mem(#[from] MemError),
+    #[error(transparent)]
+    Isa(#[from] isa::IsaError),
+    #[error("no model programmed")]
+    NotProgrammed,
+    #[error("feature count {got} exceeds programmed expectation or memory")]
+    BadFeatureCount { got: usize },
+}
+
+/// One pipeline trace event (for the Fig 5 diagram bench).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub cycle: u64,
+    pub stage: &'static str,
+    pub instr: usize,
+}
+
+/// One predecoded instruction: the walk state machine resolved at
+/// program time (the RTL's DECODE stage output).  Programming happens
+/// once per model; batches run many times — resolving TA addresses and
+/// clause/class boundaries up front takes the branchy `DecodeWalk` off
+/// the per-batch hot loop (§Perf in EXPERIMENTS.md).
+#[derive(Debug, Copy, Clone)]
+struct MicroOp {
+    /// Feature memory address (TA >> 1).
+    feat: u32,
+    /// Literal-select invert (the L bit).
+    complement: bool,
+    /// If this op starts a new clause: commit the previous one to
+    /// (class, polarity).
+    commit: Option<(u16, i8)>,
+}
+
+/// The base inference core.
+pub struct Core {
+    pub cfg: AccelConfig,
+    pub codec: StreamCodec,
+    imem: InstrMemory,
+    fmem: FeatureMemory,
+    pub fifo: OutputFifo,
+    /// Architecture parameters from the last Instruction Header.
+    pub classes: usize,
+    pub clauses: usize,
+    /// Predecoded program (rebuilt on every reprogram) + trailing commit.
+    ops: Vec<MicroOp>,
+    final_commit: Option<(u16, i8)>,
+    /// Lifetime cycle counters.
+    pub stats: CycleStats,
+    /// Batches inferred since power-up.
+    pub batches_run: u64,
+    /// When true, `run_batch` records a pipeline trace (first 64 instrs).
+    pub trace_enabled: bool,
+    pub trace: Vec<TraceEvent>,
+}
+
+impl Core {
+    pub fn new(cfg: AccelConfig) -> Self {
+        Core {
+            codec: StreamCodec::new(cfg.header_width),
+            imem: InstrMemory::new(cfg.instr_depth),
+            fmem: FeatureMemory::new(cfg.feature_depth),
+            fifo: OutputFifo::new(cfg.fifo_depth),
+            cfg,
+            classes: 0,
+            clauses: 0,
+            ops: Vec::new(),
+            final_commit: None,
+            stats: CycleStats::default(),
+            batches_run: 0,
+            trace_enabled: false,
+            trace: Vec::new(),
+        }
+    }
+
+    /// Out-of-band reset line: drop the programmed model, in-flight
+    /// state and FIFO contents (the NEW_STREAM semantics for anything
+    /// the in-band countdown framing cannot abort).
+    pub fn reset(&mut self) {
+        self.imem = InstrMemory::new(self.cfg.instr_depth);
+        self.fmem = FeatureMemory::new(self.cfg.feature_depth);
+        self.fifo = OutputFifo::new(self.cfg.fifo_depth);
+        self.classes = 0;
+        self.clauses = 0;
+        self.ops.clear();
+        self.final_commit = None;
+        self.trace.clear();
+    }
+
+    /// True once a model is loaded.
+    pub fn is_programmed(&self) -> bool {
+        !self.imem.is_empty() && self.classes > 0
+    }
+
+    pub fn instruction_count(&self) -> usize {
+        self.imem.len()
+    }
+
+    /// Program a new model directly (bypassing stream framing); counts
+    /// the stream cycles the words would have taken.
+    ///
+    /// Predecodes the walk (DECODE-stage work) once here, so per-batch
+    /// execution is a tight loop over resolved micro-ops.
+    pub fn program(&mut self, classes: usize, clauses: usize, instrs: &[Instr]) -> Result<(), CoreError> {
+        self.imem.program(instrs)?;
+        self.classes = classes;
+        self.clauses = clauses;
+        // 2 header words + payload, one word per cycle.
+        self.stats.program += 2 + self.codec.instruction_payload_len(instrs.len()) as u64;
+
+        // Predecode.  TA bounds are validated against the architectural
+        // maximum (the ISA's 12-bit offset space); the per-batch check
+        // against the actual feature count is O(1) via `max_feat`.
+        self.ops.clear();
+        self.final_commit = None;
+        let mut walk = DecodeWalk::new(classes.max(1));
+        for (i, &ins) in instrs.iter().enumerate() {
+            let (ta, commit) = walk.step(i, ins, crate::isa::MAX_LITERALS)?;
+            self.ops.push(MicroOp {
+                feat: (ta >> 1) as u32,
+                complement: ins.complement(),
+                commit: commit.map(|(cls, pol, _)| (cls as u16, pol as i8)),
+            });
+        }
+        self.final_commit = walk.finish().map(|(cls, pol, _)| (cls as u16, pol as i8));
+        Ok(())
+    }
+
+    /// Program from a dense model (encodes through the ISA).
+    pub fn program_model(&mut self, model: &crate::tm::model::TMModel) -> Result<(), CoreError> {
+        let instrs = isa::encode(model);
+        self.program(model.shape.classes, model.shape.clauses, &instrs)
+    }
+
+    /// Feed raw stream words (the real programming interface).  Returns
+    /// batch results for any inference payloads in the stream.
+    pub fn feed_stream(&mut self, words: &[u64]) -> Result<Vec<BatchResult>, CoreError> {
+        let mut results = Vec::new();
+        for msg in decode_stream(&self.codec, words)? {
+            match msg {
+                Message::Program { classes, clauses, instrs } => {
+                    self.program(classes, clauses, &instrs)?;
+                }
+                Message::Infer { features: _, batches } => {
+                    for b in &batches {
+                        results.push(self.run_batch(b)?);
+                    }
+                }
+            }
+        }
+        Ok(results)
+    }
+
+    /// Load one bit-sliced batch into feature memory and execute the
+    /// programmed instruction walk over it.
+    pub fn run_batch(&mut self, packed_features: &[u32]) -> Result<BatchResult, CoreError> {
+        if !self.is_programmed() {
+            return Err(CoreError::NotProgrammed);
+        }
+        self.fmem.load(packed_features)?;
+
+        let mut cycles = CycleStats {
+            // 2 header words + payload words, 1/cycle.
+            feature_load: 2 + self.codec.feature_payload_len(packed_features.len()) as u64,
+            ..CycleStats::default()
+        };
+
+        let n = self.imem.len();
+        let mut sums = vec![[0i32; 32]; self.classes];
+        let mut clause_count: u64 = 0;
+        self.trace.clear();
+
+        // O(1) bounds check for the whole walk (program() resolved every
+        // TA): the largest feature address must sit inside this batch.
+        if let Some(max_feat) = self.ops.iter().map(|o| o.feat).max() {
+            if max_feat as usize >= packed_features.len() {
+                return Err(CoreError::Isa(isa::IsaError::OffsetOverrun {
+                    index: 0,
+                    ta: 2 * max_feat as usize,
+                    literals: 2 * packed_features.len(),
+                }));
+            }
+        }
+
+        // Hot loop: predecoded micro-ops, no per-instruction state
+        // machine (see MicroOp docs / EXPERIMENTS.md §Perf).
+        let mut cur = u32::MAX;
+        for op in &self.ops {
+            if let Some((cls, pol)) = op.commit {
+                isa::apply_commit(&mut sums, (cls as usize, pol as i32, cur));
+                clause_count += 1;
+                cur = u32::MAX;
+            }
+            let word = self.fmem.literal_word(op.feat as usize, op.complement);
+            cur &= word;
+        }
+        if let Some((cls, pol)) = self.final_commit {
+            isa::apply_commit(&mut sums, (cls as usize, pol as i32, cur));
+            clause_count += 1;
+        }
+
+        if self.trace_enabled {
+            for i in 0..n.min(64) {
+                self.record_trace(i, clause_count, cycles.feature_load);
+            }
+        }
+
+        // Fig 5 timing.
+        cycles.execute = match self.cfg.pipeline {
+            PipelineMode::Pipelined => {
+                if n == 0 {
+                    0
+                } else {
+                    3 + n as u64
+                }
+            }
+            PipelineMode::Iterative => 4 * n as u64,
+        };
+        cycles.commit = clause_count;
+        cycles.argmax = self.classes as u64; // sequential compare chain
+        let preds = argmax_lanes(&sums);
+        // FIFO fill: 8-bit classes over the 32-bit output port.
+        cycles.fifo = (32 * 8 / 32) as u64;
+        self.fifo.push_batch(&preds);
+
+        self.accumulate(&cycles);
+        self.batches_run += 1;
+        Ok(BatchResult { class_sums: sums, preds, cycles })
+    }
+
+    /// Convenience: run <= 32 datapoints given as feature rows; returns
+    /// per-datapoint predictions.
+    pub fn run_rows(&mut self, rows: &[Vec<u8>]) -> Result<Vec<usize>, CoreError> {
+        let n = rows.len();
+        let packed = isa::pack_features(rows);
+        let r = self.run_batch(&packed)?;
+        Ok(r.preds[..n].iter().map(|&p| p as usize).collect())
+    }
+
+    fn accumulate(&mut self, c: &CycleStats) {
+        self.stats.feature_load += c.feature_load;
+        self.stats.execute += c.execute;
+        self.stats.commit += c.commit;
+        self.stats.argmax += c.argmax;
+        self.stats.fifo += c.fifo;
+    }
+
+    fn record_trace(&mut self, i: usize, _clauses: u64, base: u64) {
+        // Pipelined: instruction i issues at base+i and occupies stage s
+        // at cycle base+i+s (1 instr/cycle steady state).  Iterative: the
+        // four stages run back-to-back, 4 cycles per instruction.
+        let issue = match self.cfg.pipeline {
+            PipelineMode::Pipelined => base + i as u64,
+            PipelineMode::Iterative => base + 4 * i as u64,
+        };
+        for (s, stage) in ["FETCH", "DECODE", "LIT-SEL", "CLAUSE-UPD"].iter().enumerate() {
+            self.trace.push(TraceEvent { cycle: issue + s as u64, stage, instr: i });
+        }
+    }
+
+    /// Seconds for `cycles` at this configuration's clock.
+    pub fn seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.cfg.freq_mhz * 1e6)
+    }
+
+    /// Per-batch inference latency in microseconds for the last batch
+    /// shape (excludes programming).
+    pub fn batch_latency_us(&self, cycles: &CycleStats) -> f64 {
+        self.seconds(cycles.total() - cycles.program) * 1e6
+    }
+}
+
+/// argmax per bit lane (first-max tie-break, like jnp.argmax).
+pub fn argmax_lanes(sums: &[[i32; 32]]) -> [u8; 32] {
+    let mut preds = [0u8; 32];
+    for (b, p) in preds.iter_mut().enumerate() {
+        let mut best = 0usize;
+        for (m, row) in sums.iter().enumerate() {
+            if row[b] > sums[best][b] {
+                best = m;
+            }
+        }
+        *p = best as u8;
+    }
+    preds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::SynthSpec;
+    use crate::tm::{model::TMModel, reference};
+    use crate::TMShape;
+
+    fn trained_tiny() -> (TMModel, crate::datasets::synth::Dataset) {
+        let shape = TMShape::synthetic(12, 3, 8);
+        let data = SynthSpec::new(12, 3, 256).noise(0.05).seed(21).generate();
+        let model = crate::trainer::train_model(&shape, &data, 4, 2);
+        (model, data)
+    }
+
+    #[test]
+    fn core_matches_dense_reference() {
+        let (model, data) = trained_tiny();
+        let mut core = Core::new(AccelConfig::base());
+        core.program_model(&model).unwrap();
+        let rows: Vec<Vec<u8>> = data.xs[..32].to_vec();
+        let preds = core.run_rows(&rows).unwrap();
+        for (x, &p) in rows.iter().zip(&preds) {
+            let lits = reference::literals_from_features(x);
+            assert_eq!(p, reference::predict_dense(&model, &lits));
+        }
+    }
+
+    #[test]
+    fn unprogrammed_core_errors() {
+        let mut core = Core::new(AccelConfig::base());
+        assert!(matches!(
+            core.run_batch(&[0u32; 4]),
+            Err(CoreError::NotProgrammed)
+        ));
+    }
+
+    #[test]
+    fn stream_program_then_infer() {
+        let (model, data) = trained_tiny();
+        let mut core = Core::new(AccelConfig::base());
+        let codec = core.codec;
+        let instrs = isa::encode(&model);
+
+        let mut words = Vec::new();
+        words.extend(
+            codec
+                .instruction_header(model.shape.classes, model.shape.clauses, instrs.len())
+                .unwrap(),
+        );
+        words.extend(codec.pack_instructions(&instrs));
+        let packed = isa::pack_features(&data.xs[..32].to_vec());
+        words.extend(codec.feature_header(packed.len(), 1).unwrap());
+        words.extend(codec.pack_feature_words(&packed));
+
+        let results = core.feed_stream(&words).unwrap();
+        assert_eq!(results.len(), 1);
+        // Same as direct programming.
+        let mut direct = Core::new(AccelConfig::base());
+        direct.program_model(&model).unwrap();
+        let d = direct.run_batch(&packed).unwrap();
+        assert_eq!(results[0].preds, d.preds);
+        assert_eq!(results[0].class_sums, d.class_sums);
+    }
+
+    #[test]
+    fn reprogramming_replaces_model() {
+        // Runtime tunability: same core, two different models, no rebuild.
+        let (model_a, data) = trained_tiny();
+        let shape_b = TMShape::synthetic(12, 3, 4);
+        let data_b = SynthSpec::new(12, 3, 128).noise(0.05).seed(77).generate();
+        let model_b = crate::trainer::train_model(&shape_b, &data_b, 4, 3);
+
+        let mut core = Core::new(AccelConfig::base());
+        core.program_model(&model_a).unwrap();
+        let rows: Vec<Vec<u8>> = data.xs[..8].to_vec();
+        let a = core.run_rows(&rows).unwrap();
+
+        core.program_model(&model_b).unwrap();
+        assert_eq!(core.instruction_count(), isa::encode(&model_b).len());
+        core.program_model(&model_a).unwrap();
+        let a2 = core.run_rows(&rows).unwrap();
+        assert_eq!(a, a2, "reprogramming must be idempotent");
+    }
+
+    #[test]
+    fn cycle_model_pipelined_vs_iterative() {
+        let (model, data) = trained_tiny();
+        let packed = isa::pack_features(&data.xs[..32].to_vec());
+
+        let mut pipe = Core::new(AccelConfig::base());
+        pipe.program_model(&model).unwrap();
+        let rp = pipe.run_batch(&packed).unwrap();
+
+        let mut iter = Core::new(AccelConfig::base().with_pipeline(PipelineMode::Iterative));
+        iter.program_model(&model).unwrap();
+        let ri = iter.run_batch(&packed).unwrap();
+
+        let n = pipe.instruction_count() as u64;
+        assert_eq!(rp.cycles.execute, 3 + n);
+        assert_eq!(ri.cycles.execute, 4 * n);
+        // Same answers, different time.
+        assert_eq!(rp.preds, ri.preds);
+        assert!(ri.cycles.total() > rp.cycles.total());
+    }
+
+    #[test]
+    fn cycle_accounting_accumulates() {
+        let (model, data) = trained_tiny();
+        let mut core = Core::new(AccelConfig::base());
+        core.program_model(&model).unwrap();
+        let packed = isa::pack_features(&data.xs[..32].to_vec());
+        let r1 = core.run_batch(&packed).unwrap();
+        let r2 = core.run_batch(&packed).unwrap();
+        assert_eq!(r1.cycles, r2.cycles);
+        assert_eq!(core.batches_run, 2);
+        assert_eq!(core.stats.execute, r1.cycles.execute * 2);
+        assert!(core.stats.program > 0);
+    }
+
+    #[test]
+    fn batch_equals_32_singles_through_core() {
+        // The paper's batching claim: one batched pass == 32 single runs.
+        let (model, data) = trained_tiny();
+        let mut core = Core::new(AccelConfig::base());
+        core.program_model(&model).unwrap();
+        let rows: Vec<Vec<u8>> = data.xs[..32].to_vec();
+        let batched = core.run_rows(&rows).unwrap();
+        for (i, row) in rows.iter().enumerate() {
+            let single = core.run_rows(&[row.clone()]).unwrap();
+            assert_eq!(single[0], batched[i], "dp {i}");
+        }
+    }
+
+    #[test]
+    fn fifo_receives_batch() {
+        let (model, data) = trained_tiny();
+        let mut core = Core::new(AccelConfig::base());
+        core.program_model(&model).unwrap();
+        let packed = isa::pack_features(&data.xs[..32].to_vec());
+        core.run_batch(&packed).unwrap();
+        assert_eq!(core.fifo.len(), 32);
+        let drained = core.fifo.drain();
+        assert_eq!(drained.len(), 32);
+    }
+
+    #[test]
+    fn model_too_big_for_memory_rejected() {
+        let mut core = Core::new(AccelConfig::base().with_depths(4, 2048));
+        let (model, _) = trained_tiny();
+        let err = core.program_model(&model);
+        assert!(matches!(err, Err(CoreError::Mem(_))));
+    }
+
+    #[test]
+    fn latency_scales_with_frequency() {
+        let mut base = AccelConfig::base();
+        base.freq_mhz = 200.0;
+        let core200 = Core::new(base.clone());
+        base.freq_mhz = 100.0;
+        let core100 = Core::new(base);
+        assert!((core100.seconds(1000) - 2.0 * core200.seconds(1000)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,86 @@
+//! Output FIFO: classifications waiting for the downstream consumer
+//! (Fig 4.6 "Output FIFO", filled with up to 32 classifications per
+//! batch).  Overflow drops are counted — backpressure visibility for the
+//! coordinator.
+
+#[derive(Debug, Clone)]
+pub struct OutputFifo {
+    pub depth: usize,
+    buf: std::collections::VecDeque<u8>,
+    /// Classifications dropped because the FIFO was full.
+    pub overflow_drops: u64,
+}
+
+impl OutputFifo {
+    pub fn new(depth: usize) -> Self {
+        OutputFifo {
+            depth,
+            buf: std::collections::VecDeque::with_capacity(depth),
+            overflow_drops: 0,
+        }
+    }
+
+    /// Push one classification; returns false (and counts a drop) when
+    /// full.
+    pub fn push(&mut self, class: u8) -> bool {
+        if self.buf.len() == self.depth {
+            self.overflow_drops += 1;
+            return false;
+        }
+        self.buf.push_back(class);
+        true
+    }
+
+    /// Push a whole batch (up to 32 classifications).
+    pub fn push_batch(&mut self, classes: &[u8]) -> usize {
+        classes.iter().filter(|&&c| self.push(c)).count()
+    }
+
+    pub fn pop(&mut self) -> Option<u8> {
+        self.buf.pop_front()
+    }
+
+    /// Drain everything (the AXIS read-out).
+    pub fn drain(&mut self) -> Vec<u8> {
+        self.buf.drain(..).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut f = OutputFifo::new(4);
+        f.push_batch(&[3, 1, 2]);
+        assert_eq!(f.pop(), Some(3));
+        assert_eq!(f.pop(), Some(1));
+        assert_eq!(f.pop(), Some(2));
+        assert_eq!(f.pop(), None);
+    }
+
+    #[test]
+    fn overflow_counted_not_panicking() {
+        let mut f = OutputFifo::new(2);
+        let accepted = f.push_batch(&[1, 2, 3, 4]);
+        assert_eq!(accepted, 2);
+        assert_eq!(f.overflow_drops, 2);
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn drain_empties() {
+        let mut f = OutputFifo::new(8);
+        f.push_batch(&[7, 8]);
+        assert_eq!(f.drain(), vec![7, 8]);
+        assert!(f.is_empty());
+    }
+}

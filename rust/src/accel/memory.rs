@@ -1,0 +1,171 @@
+//! On-chip memory models: instruction memory, feature memory, BRAM
+//! accounting (the Fig 6 customization axis).
+//!
+//! Depths are deploy-time parameters; programming past the configured
+//! depth is a capacity error — exactly the runtime-tunability headroom
+//! trade-off the paper's Fig 6 explores (deeper memories = more
+//! tunability later, at LUT/FF/power/f_max cost).
+
+use crate::isa::Instr;
+
+/// Bits per Xilinx BRAM18 block.
+pub const BRAM18_BITS: usize = 18 * 1024;
+
+/// Capacity errors surface to the programming stream handler.
+#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+pub enum MemError {
+    #[error("instruction memory full: model needs {need} entries, depth is {depth}")]
+    InstrOverflow { need: usize, depth: usize },
+    #[error("feature memory full: {need} words needed, depth is {depth}")]
+    FeatureOverflow { need: usize, depth: usize },
+}
+
+/// Instruction memory: `depth` 16-bit words.
+#[derive(Debug, Clone)]
+pub struct InstrMemory {
+    pub depth: usize,
+    data: Vec<Instr>,
+}
+
+impl InstrMemory {
+    pub fn new(depth: usize) -> Self {
+        InstrMemory { depth, data: Vec::new() }
+    }
+
+    /// Load a full model (the paper reprograms whole models atomically).
+    pub fn program(&mut self, instrs: &[Instr]) -> Result<(), MemError> {
+        if instrs.len() > self.depth {
+            return Err(MemError::InstrOverflow { need: instrs.len(), depth: self.depth });
+        }
+        self.data = instrs.to_vec();
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn fetch(&self, addr: usize) -> Instr {
+        self.data[addr]
+    }
+
+    pub fn contents(&self) -> &[Instr] {
+        &self.data
+    }
+
+    /// BRAM18 blocks this depth requires (16-bit entries).
+    pub fn brams(&self) -> usize {
+        (self.depth * 16).div_ceil(BRAM18_BITS)
+    }
+}
+
+/// Feature memory: `depth` bit-sliced u32 words (one word = one Boolean
+/// feature across 32 batched datapoints, Fig 4.5).
+#[derive(Debug, Clone)]
+pub struct FeatureMemory {
+    pub depth: usize,
+    data: Vec<u32>,
+}
+
+impl FeatureMemory {
+    pub fn new(depth: usize) -> Self {
+        FeatureMemory { depth, data: Vec::new() }
+    }
+
+    /// Load one batch worth of feature words.
+    pub fn load(&mut self, words: &[u32]) -> Result<(), MemError> {
+        if words.len() > self.depth {
+            return Err(MemError::FeatureOverflow { need: words.len(), depth: self.depth });
+        }
+        self.data = words.to_vec();
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Literal-select stage read (Fig 4.5): feature word + L-bit invert.
+    #[inline]
+    pub fn literal_word(&self, feature: usize, complement: bool) -> u32 {
+        let w = self.data[feature];
+        if complement {
+            !w
+        } else {
+            w
+        }
+    }
+
+    /// BRAM18 blocks this depth requires (32-bit entries).
+    pub fn brams(&self) -> usize {
+        (self.depth * 32).div_ceil(BRAM18_BITS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn program_within_depth() {
+        let mut m = InstrMemory::new(4);
+        let instrs: Vec<Instr> = (0..3u16).map(Instr).collect();
+        m.program(&instrs).unwrap();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.fetch(2), Instr(2));
+    }
+
+    #[test]
+    fn program_overflow_rejected() {
+        let mut m = InstrMemory::new(2);
+        let instrs: Vec<Instr> = (0..3u16).map(Instr).collect();
+        assert_eq!(
+            m.program(&instrs),
+            Err(MemError::InstrOverflow { need: 3, depth: 2 })
+        );
+    }
+
+    #[test]
+    fn reprogram_replaces_whole_model() {
+        let mut m = InstrMemory::new(8);
+        m.program(&[Instr(1), Instr(2)]).unwrap();
+        m.program(&[Instr(9)]).unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.fetch(0), Instr(9));
+    }
+
+    #[test]
+    fn feature_literal_select() {
+        let mut f = FeatureMemory::new(4);
+        f.load(&[0b1010, 0xFFFF_FFFF]).unwrap();
+        assert_eq!(f.literal_word(0, false), 0b1010);
+        assert_eq!(f.literal_word(0, true), !0b1010u32);
+        assert_eq!(f.literal_word(1, true), 0);
+    }
+
+    #[test]
+    fn feature_overflow_rejected() {
+        let mut f = FeatureMemory::new(1);
+        assert_eq!(
+            f.load(&[1, 2]),
+            Err(MemError::FeatureOverflow { need: 2, depth: 1 })
+        );
+    }
+
+    #[test]
+    fn bram_accounting() {
+        // 8192 x 16b = 128 Kib -> ceil(131072/18432) = 8 BRAM18.
+        assert_eq!(InstrMemory::new(8192).brams(), 8);
+        // 2048 x 32b = 64 Kib -> 4 BRAM18.
+        assert_eq!(FeatureMemory::new(2048).brams(), 4);
+        // Tiny memories still take one block.
+        assert_eq!(InstrMemory::new(16).brams(), 1);
+    }
+}

@@ -1,0 +1,24 @@
+//! Cycle-accurate simulator of the paper's accelerator (Fig 4, Fig 5, Fig 7).
+//!
+//! The real artifact is RTL on an eFPGA; here the *microarchitecture* is
+//! simulated exactly (instruction walk, memories, 32-wide bit-sliced
+//! batch datapath, pipeline timing) and the physical quantities
+//! (LUT/FF/BRAM/f_max/power) come from the calibrated models in
+//! [`crate::model_cost`].  Latency = cycles / f; energy = P x latency —
+//! the same arithmetic the paper's evaluation uses.
+//!
+//! * [`stream`] — the programming/inference stream protocol (Fig 4.1-4.3).
+//! * [`memory`] — instruction/feature BRAM models (Fig 6 customization).
+//! * [`core`] — the base inference core (Fig 4.4-4.6, Fig 5 timing).
+//! * [`fifo`] — the classification output FIFO.
+//! * [`multicore`] — the AXIS-connected multi-core build (Fig 7).
+
+pub mod axis;
+pub mod core;
+pub mod fifo;
+pub mod memory;
+pub mod multicore;
+pub mod stream;
+
+pub use core::{AccelConfig, BatchResult, Core, CycleStats, PipelineMode};
+pub use multicore::MultiCore;

@@ -1,0 +1,254 @@
+//! The AXIS-connected multi-core build (Fig 7).
+//!
+//! Each inference core is a base core; the AXIS splitter writes each
+//! core's instruction memory with the instructions of a *non-overlapping
+//! class range* but broadcasts the same features to every feature
+//! memory.  Class-level parallelism: batch latency = slowest core +
+//! merge.  The partitioner balances *instruction counts* (include
+//! counts), not class counts — include-heavy classes dominate a core's
+//! walk time.
+
+use super::core::{argmax_lanes, AccelConfig, BatchResult, Core, CoreError};
+use crate::isa;
+use crate::tm::model::TMModel;
+
+/// A multi-core accelerator with class partitioning.
+pub struct MultiCore {
+    pub cores: Vec<Core>,
+    /// Class ranges (contiguous) per core; `assign[i]` = (start, end).
+    pub assign: Vec<(usize, usize)>,
+    pub classes: usize,
+}
+
+impl MultiCore {
+    /// The paper's 5-core M configuration (Table 1/Table 2).
+    pub fn five_core() -> Self {
+        Self::new(5, AccelConfig::multicore_core())
+    }
+
+    pub fn new(n: usize, per_core: AccelConfig) -> Self {
+        assert!(n >= 1);
+        MultiCore {
+            cores: (0..n).map(|_| Core::new(per_core.clone())).collect(),
+            assign: Vec::new(),
+            classes: 0,
+        }
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Balanced contiguous partition of classes by per-class instruction
+    /// count (greedy block fill against the ideal share).
+    pub fn partition(per_class_instrs: &[usize], n_cores: usize) -> Vec<(usize, usize)> {
+        let classes = per_class_instrs.len();
+        let n = n_cores.min(classes).max(1);
+        let total: usize = per_class_instrs.iter().sum();
+        let mut bounds = Vec::with_capacity(n);
+        let mut start = 0usize;
+        let mut cum = 0usize;
+        for (c, &w) in per_class_instrs.iter().enumerate() {
+            cum += w;
+            let remaining_classes = classes - c - 1;
+            let remaining_cores = n - bounds.len() - 1;
+            // Close the current block once the cumulative weight crosses
+            // this block's ideal boundary, but never leave fewer classes
+            // than cores still to fill.
+            let boundary = (total as f64) * (bounds.len() + 1) as f64 / n as f64;
+            if bounds.len() < n - 1
+                && (cum as f64 + 1e-9 >= boundary || remaining_classes == remaining_cores)
+            {
+                bounds.push((start, c + 1));
+                start = c + 1;
+            }
+        }
+        bounds.push((start, classes));
+        debug_assert_eq!(bounds.len(), n);
+        bounds
+    }
+
+    /// Program all cores from a dense model (the AXIS split of the
+    /// instruction stream).
+    pub fn program_model(&mut self, model: &TMModel) -> Result<(), CoreError> {
+        let per_class = model
+            .includes_per_class()
+            .iter()
+            .map(|&n| if n == 0 { 2 } else { n })
+            .collect::<Vec<_>>();
+        let assign = Self::partition(&per_class, self.cores.len());
+        self.classes = model.shape.classes;
+        for (core, &(s, e)) in self.cores.iter_mut().zip(&assign) {
+            if s == e {
+                // More cores than classes: leave idle.
+                continue;
+            }
+            let slice = model.slice_classes(s..e);
+            core.program_model(&slice)?;
+        }
+        self.assign = assign;
+        Ok(())
+    }
+
+    /// Run one bit-sliced batch on all cores (features broadcast),
+    /// merging class sums and taking the global argmax.
+    ///
+    /// Timing: cores run in parallel -> batch cycles = max over cores;
+    /// the merge adds one cycle per class (sum gather) plus the argmax
+    /// chain, modeled in `merge_cycles`.
+    pub fn run_batch(&mut self, packed_features: &[u32]) -> Result<MultiBatchResult, CoreError> {
+        if self.assign.is_empty() {
+            return Err(CoreError::NotProgrammed);
+        }
+        let mut sums = vec![[0i32; 32]; self.classes];
+        let mut slowest: u64 = 0;
+        let mut per_core = Vec::with_capacity(self.cores.len());
+        for (core, &(s, e)) in self.cores.iter_mut().zip(&self.assign) {
+            if s == e {
+                per_core.push(None);
+                continue;
+            }
+            let r = core.run_batch(packed_features)?;
+            slowest = slowest.max(r.cycles.total());
+            for (local, class) in (s..e).enumerate() {
+                sums[class] = r.class_sums[local];
+            }
+            per_core.push(Some(r));
+        }
+        let merge_cycles = self.classes as u64 + 1;
+        let preds = argmax_lanes(&sums);
+        Ok(MultiBatchResult { class_sums: sums, preds, batch_cycles: slowest + merge_cycles, per_core })
+    }
+
+    /// Convenience mirror of `Core::run_rows`.
+    pub fn run_rows(&mut self, rows: &[Vec<u8>]) -> Result<Vec<usize>, CoreError> {
+        let n = rows.len();
+        let packed = isa::pack_features(rows);
+        let r = self.run_batch(&packed)?;
+        Ok(r.preds[..n].iter().map(|&p| p as usize).collect())
+    }
+
+    /// Seconds for `cycles` at the multi-core clock.
+    pub fn seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.cores[0].cfg.freq_mhz * 1e6)
+    }
+}
+
+/// Batch result with parallel timing.
+#[derive(Debug, Clone)]
+pub struct MultiBatchResult {
+    pub class_sums: Vec<[i32; 32]>,
+    pub preds: [u8; 32],
+    /// max(core cycles) + merge.
+    pub batch_cycles: u64,
+    pub per_core: Vec<Option<BatchResult>>,
+}
+
+impl MultiBatchResult {
+    /// Cycle total had the cores run sequentially (single-core
+    /// equivalent work) — used to report parallel speedup.
+    pub fn sequential_cycles(&self) -> u64 {
+        self.per_core
+            .iter()
+            .flatten()
+            .map(|r| r.cycles.total())
+            .sum()
+    }
+}
+
+#[allow(unused_imports)]
+use super::core::PipelineMode;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::SynthSpec;
+    use crate::tm::reference;
+    use crate::TMShape;
+
+    fn trained(classes: usize) -> (TMModel, crate::datasets::synth::Dataset) {
+        let shape = TMShape::synthetic(12, classes, 8);
+        let data = SynthSpec::new(12, classes, 256).noise(0.05).seed(13).generate();
+        let model = crate::trainer::train_model(&shape, &data, 4, 6);
+        (model, data)
+    }
+
+    #[test]
+    fn partition_covers_all_classes_contiguously() {
+        let weights = vec![10, 30, 5, 5, 40, 10, 20, 8];
+        for n in 1..=8 {
+            let p = MultiCore::partition(&weights, n);
+            assert_eq!(p.len(), n.min(8));
+            assert_eq!(p[0].0, 0);
+            assert_eq!(p.last().unwrap().1, 8);
+            for w in p.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_balances_weighted_classes() {
+        // One heavy class should sit alone.
+        let weights = vec![100, 1, 1, 1, 1];
+        let p = MultiCore::partition(&weights, 2);
+        assert_eq!(p[0], (0, 1));
+        assert_eq!(p[1], (1, 5));
+    }
+
+    #[test]
+    fn multicore_matches_single_core_predictions() {
+        let (model, data) = trained(6);
+        let mut single = Core::new(AccelConfig::single_core());
+        single.program_model(&model).unwrap();
+        let mut multi = MultiCore::five_core();
+        multi.program_model(&model).unwrap();
+
+        let rows: Vec<Vec<u8>> = data.xs[..32].to_vec();
+        let packed = isa::pack_features(&rows);
+        let rs = single.run_batch(&packed).unwrap();
+        let rm = multi.run_batch(&packed).unwrap();
+        assert_eq!(rs.preds, rm.preds);
+        for m in 0..6 {
+            assert_eq!(rs.class_sums[m], rm.class_sums[m], "class {m}");
+        }
+    }
+
+    #[test]
+    fn multicore_is_faster_than_sequential() {
+        let (model, data) = trained(6);
+        let mut multi = MultiCore::five_core();
+        multi.program_model(&model).unwrap();
+        let packed = isa::pack_features(&data.xs[..32].to_vec());
+        let r = multi.run_batch(&packed).unwrap();
+        assert!(
+            r.batch_cycles < r.sequential_cycles(),
+            "parallel {} !< sequential {}",
+            r.batch_cycles,
+            r.sequential_cycles()
+        );
+    }
+
+    #[test]
+    fn more_cores_than_classes_leaves_idle_cores() {
+        let (model, data) = trained(3);
+        let mut multi = MultiCore::new(5, AccelConfig::multicore_core());
+        multi.program_model(&model).unwrap();
+        let idle = multi.assign.iter().filter(|&&(s, e)| s == e).count()
+            + (5 - multi.assign.len());
+        assert!(multi.assign.len() <= 5);
+        let rows: Vec<Vec<u8>> = data.xs[..8].to_vec();
+        let preds = multi.run_rows(&rows).unwrap();
+        for (x, &p) in rows.iter().zip(&preds) {
+            let lits = reference::literals_from_features(x);
+            assert_eq!(p, reference::predict_dense(&model, &lits));
+        }
+        let _ = idle;
+    }
+
+    #[test]
+    fn unprogrammed_multicore_errors() {
+        let mut multi = MultiCore::five_core();
+        assert!(matches!(multi.run_batch(&[0u32; 4]), Err(CoreError::NotProgrammed)));
+    }
+}

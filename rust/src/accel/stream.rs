@@ -1,0 +1,433 @@
+//! The accelerator's programming/inference stream protocol (Fig 4.1-4.3).
+//!
+//! Everything reaches the accelerator as a stream of fixed-width words
+//! (16, 32 or 64 bits — a deploy-time customization).  A stream begins
+//! with a *header*:
+//!
+//! ```text
+//! word 0 (any width W):
+//!   bit W-1: NEW_STREAM — resets the accelerator state machine
+//!   bit W-2: TYPE — 1: Include instructions follow (new model)
+//!                   0: Boolean features follow (inference request)
+//!   remaining bits: classes/clauses (instruction header) or
+//!                   feature count (feature header), width-dependent
+//! word 1:
+//!   instruction count (instruction header) or number of 32-datapoint
+//!   batches (feature header)
+//! ```
+//!
+//! Payloads are packed little-end-first: 16-bit instructions at W/16 per
+//! word; bit-sliced u32 feature words at W/32 per word (two stream words
+//! per feature word at W=16).
+//!
+//! The narrow 16-bit header cannot describe every model (e.g. cifar2's
+//! 300 clauses/class exceeds its 8-bit clause field) — encoding returns
+//! an error, mirroring the real deploy-time trade-off of the paper's
+//! header-width customization.
+
+use crate::isa::Instr;
+
+/// Deploy-time header/stream word width.
+#[derive(Debug, Copy, Clone, PartialEq, Eq)]
+pub enum HeaderWidth {
+    W16,
+    W32,
+    W64,
+}
+
+impl HeaderWidth {
+    pub fn bits(self) -> u32 {
+        match self {
+            HeaderWidth::W16 => 16,
+            HeaderWidth::W32 => 32,
+            HeaderWidth::W64 => 64,
+        }
+    }
+
+    /// (classes bits, clauses bits) available in word 0.
+    fn fields(self) -> (u32, u32) {
+        match self {
+            HeaderWidth::W16 => (6, 8),
+            HeaderWidth::W32 => (8, 16),
+            HeaderWidth::W64 => (16, 32),
+        }
+    }
+}
+
+/// A decoded stream header.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Header {
+    /// A new model: `count` 16-bit instructions follow.
+    Instructions { classes: usize, clauses: usize, count: usize },
+    /// An inference request: `batches` bit-sliced 32-datapoint batches of
+    /// `features` Boolean features each.
+    Features { features: usize, batches: usize },
+}
+
+/// Protocol errors.
+#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+pub enum StreamError {
+    #[error("model field {field}={value} does not fit the {width}-bit header")]
+    HeaderOverflow { field: &'static str, value: usize, width: u32 },
+    #[error("stream truncated: expected {expected} more words")]
+    Truncated { expected: usize },
+    #[error("word {index} is not a header (NEW_STREAM bit clear)")]
+    NotAHeader { index: usize },
+}
+
+/// Encoder/decoder for one configured width.
+#[derive(Debug, Copy, Clone)]
+pub struct StreamCodec {
+    pub width: HeaderWidth,
+}
+
+impl StreamCodec {
+    pub fn new(width: HeaderWidth) -> Self {
+        StreamCodec { width }
+    }
+
+    fn check(&self, field: &'static str, value: usize, bits: u32) -> Result<(), StreamError> {
+        if value >= (1usize << bits) {
+            return Err(StreamError::HeaderOverflow { field, value, width: self.width.bits() });
+        }
+        Ok(())
+    }
+
+    /// Header words for a model programming stream.
+    pub fn instruction_header(
+        &self,
+        classes: usize,
+        clauses: usize,
+        count: usize,
+    ) -> Result<[u64; 2], StreamError> {
+        let w = self.width.bits();
+        let (cb, lb) = self.width.fields();
+        self.check("classes", classes, cb)?;
+        self.check("clauses", clauses, lb)?;
+        self.check("instructions", count, w.min(32))?;
+        let mut w0 = 1u64 << (w - 1); // NEW_STREAM
+        w0 |= 1u64 << (w - 2); // TYPE = instructions
+        w0 |= (classes as u64) << (w - 2 - cb);
+        w0 |= (clauses as u64) << (w - 2 - cb - lb);
+        Ok([w0, count as u64])
+    }
+
+    /// Header words for an inference stream.
+    pub fn feature_header(
+        &self,
+        features: usize,
+        batches: usize,
+    ) -> Result<[u64; 2], StreamError> {
+        let w = self.width.bits();
+        self.check("features", features, w - 2)?;
+        self.check("batches", batches, w.min(32))?;
+        let mut w0 = 1u64 << (w - 1); // NEW_STREAM
+                                      // TYPE bit stays 0 = features.
+        w0 |= features as u64;
+        Ok([w0, batches as u64])
+    }
+
+    fn decode_header(&self, w0: u64, w1: u64) -> Header {
+        let w = self.width.bits();
+        let (cb, lb) = self.width.fields();
+        if w0 >> (w - 2) & 1 == 1 {
+            let classes = (w0 >> (w - 2 - cb)) & ((1 << cb) - 1);
+            let clauses = (w0 >> (w - 2 - cb - lb)) & ((1 << lb) - 1);
+            Header::Instructions {
+                classes: classes as usize,
+                clauses: clauses as usize,
+                count: w1 as usize,
+            }
+        } else {
+            Header::Features {
+                features: (w0 & ((1u64 << (w - 2)) - 1)) as usize,
+                batches: w1 as usize,
+            }
+        }
+    }
+
+    /// Pack 16-bit instructions into stream words.
+    pub fn pack_instructions(&self, instrs: &[Instr]) -> Vec<u64> {
+        let per = (self.width.bits() / 16) as usize;
+        instrs
+            .chunks(per)
+            .map(|chunk| {
+                let mut w = 0u64;
+                for (i, ins) in chunk.iter().enumerate() {
+                    w |= (ins.0 as u64) << (16 * i);
+                }
+                w
+            })
+            .collect()
+    }
+
+    /// Unpack `count` instructions from stream words.
+    pub fn unpack_instructions(&self, words: &[u64], count: usize) -> Vec<Instr> {
+        let per = (self.width.bits() / 16) as usize;
+        let mut out = Vec::with_capacity(count);
+        'outer: for w in words {
+            for i in 0..per {
+                if out.len() == count {
+                    break 'outer;
+                }
+                out.push(Instr((w >> (16 * i)) as u16));
+            }
+        }
+        out
+    }
+
+    /// Pack bit-sliced u32 feature words into stream words.
+    pub fn pack_feature_words(&self, feats: &[u32]) -> Vec<u64> {
+        match self.width {
+            HeaderWidth::W16 => feats
+                .iter()
+                .flat_map(|&f| [f as u64 & 0xFFFF, (f >> 16) as u64])
+                .collect(),
+            HeaderWidth::W32 => feats.iter().map(|&f| f as u64).collect(),
+            HeaderWidth::W64 => feats
+                .chunks(2)
+                .map(|c| {
+                    let mut w = c[0] as u64;
+                    if let Some(&hi) = c.get(1) {
+                        w |= (hi as u64) << 32;
+                    }
+                    w
+                })
+                .collect(),
+        }
+    }
+
+    /// Unpack `count` bit-sliced u32 feature words.
+    pub fn unpack_feature_words(&self, words: &[u64], count: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(count);
+        match self.width {
+            HeaderWidth::W16 => {
+                for pair in words.chunks(2) {
+                    if out.len() == count {
+                        break;
+                    }
+                    let lo = pair[0] & 0xFFFF;
+                    let hi = pair.get(1).copied().unwrap_or(0) & 0xFFFF;
+                    out.push((lo | (hi << 16)) as u32);
+                }
+            }
+            HeaderWidth::W32 => {
+                for &w in words.iter().take(count) {
+                    out.push(w as u32);
+                }
+            }
+            HeaderWidth::W64 => {
+                'outer: for &w in words {
+                    for half in [w as u32, (w >> 32) as u32] {
+                        if out.len() == count {
+                            break 'outer;
+                        }
+                        out.push(half);
+                    }
+                }
+            }
+        }
+        out.truncate(count);
+        out
+    }
+
+    /// Stream-word count for a feature payload of `feature_words` u32s.
+    pub fn feature_payload_len(&self, feature_words: usize) -> usize {
+        match self.width {
+            HeaderWidth::W16 => feature_words * 2,
+            HeaderWidth::W32 => feature_words,
+            HeaderWidth::W64 => feature_words.div_ceil(2),
+        }
+    }
+
+    /// Stream-word count for an instruction payload.
+    pub fn instruction_payload_len(&self, count: usize) -> usize {
+        count.div_ceil((self.width.bits() / 16) as usize)
+    }
+}
+
+/// A fully-decoded inbound message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Program a new model.
+    Program {
+        classes: usize,
+        clauses: usize,
+        instrs: Vec<Instr>,
+    },
+    /// Run inference over bit-sliced batches (each `features` words).
+    Infer { features: usize, batches: Vec<Vec<u32>> },
+}
+
+/// Decode a whole stream into messages.
+///
+/// The decoder is a word-countdown state machine, like the RTL: the
+/// header announces its payload length and every following word is
+/// *data* until the countdown expires (payload bits may freely alias the
+/// NEW_STREAM bit — instruction P bits land there at W=32).  The
+/// NEW_STREAM flag is therefore meaningful only where a header is legal;
+/// a true mid-payload abort is the out-of-band reset line
+/// ([`super::core::Core::reset`]).  Truncated tails error.
+pub fn decode_stream(codec: &StreamCodec, words: &[u64]) -> Result<Vec<Message>, StreamError> {
+    let w = codec.width.bits();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < words.len() {
+        if words[i] >> (w - 1) & 1 != 1 {
+            return Err(StreamError::NotAHeader { index: i });
+        }
+        if i + 1 >= words.len() {
+            return Err(StreamError::Truncated { expected: 1 });
+        }
+        let header = codec.decode_header(words[i], words[i + 1]);
+        i += 2;
+        match header {
+            Header::Instructions { classes, clauses, count } => {
+                let payload = take_payload(words, &mut i, codec.instruction_payload_len(count))?;
+                let instrs = codec.unpack_instructions(payload, count);
+                out.push(Message::Program { classes, clauses, instrs });
+            }
+            Header::Features { features, batches } => {
+                let per_batch = codec.feature_payload_len(features);
+                let payload = take_payload(words, &mut i, per_batch * batches)?;
+                let mut rows = Vec::with_capacity(batches);
+                for b in 0..batches {
+                    let chunk = &payload[b * per_batch..(b + 1) * per_batch];
+                    rows.push(codec.unpack_feature_words(chunk, features));
+                }
+                out.push(Message::Infer { features, batches: rows });
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Consume exactly `need` payload words (countdown framing).
+fn take_payload<'a>(
+    words: &'a [u64],
+    i: &mut usize,
+    need: usize,
+) -> Result<&'a [u64], StreamError> {
+    let start = *i;
+    if words.len() - start < need {
+        return Err(StreamError::Truncated { expected: need - (words.len() - start) });
+    }
+    *i += need;
+    Ok(&words[start..*i])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_widths() -> [StreamCodec; 3] {
+        [
+            StreamCodec::new(HeaderWidth::W16),
+            StreamCodec::new(HeaderWidth::W32),
+            StreamCodec::new(HeaderWidth::W64),
+        ]
+    }
+
+    #[test]
+    fn instruction_header_roundtrip_all_widths() {
+        for c in all_widths() {
+            let [w0, w1] = c.instruction_header(10, 200, 17000).unwrap();
+            assert_eq!(
+                c.decode_header(w0, w1),
+                Header::Instructions { classes: 10, clauses: 200, count: 17000 }
+            );
+        }
+    }
+
+    #[test]
+    fn feature_header_roundtrip_all_widths() {
+        for c in all_widths() {
+            let [w0, w1] = c.feature_header(784, 12).unwrap();
+            assert_eq!(c.decode_header(w0, w1), Header::Features { features: 784, batches: 12 });
+        }
+    }
+
+    #[test]
+    fn narrow_header_rejects_big_models() {
+        // cifar2: 300 clauses/class exceeds the 16-bit header's 8-bit
+        // clause field — a real deploy-time constraint.
+        let c = StreamCodec::new(HeaderWidth::W16);
+        assert_eq!(
+            c.instruction_header(2, 300, 100),
+            Err(StreamError::HeaderOverflow { field: "clauses", value: 300, width: 16 })
+        );
+        // ...but the 32-bit header accepts it.
+        assert!(StreamCodec::new(HeaderWidth::W32).instruction_header(2, 300, 100).is_ok());
+    }
+
+    #[test]
+    fn instruction_packing_roundtrip() {
+        let instrs: Vec<Instr> = (0..7u16).map(|i| Instr(0x8000 | i * 321)).collect();
+        for c in all_widths() {
+            let words = c.pack_instructions(&instrs);
+            assert_eq!(words.len(), c.instruction_payload_len(instrs.len()));
+            let back = c.unpack_instructions(&words, instrs.len());
+            assert_eq!(back, instrs);
+        }
+    }
+
+    #[test]
+    fn feature_packing_roundtrip() {
+        let feats: Vec<u32> = (0..9).map(|i| 0xDEAD_0000u32.wrapping_add(i * 77)).collect();
+        for c in all_widths() {
+            let words = c.pack_feature_words(&feats);
+            assert_eq!(words.len(), c.feature_payload_len(feats.len()));
+            assert_eq!(c.unpack_feature_words(&words, feats.len()), feats);
+        }
+    }
+
+    #[test]
+    fn full_stream_roundtrip() {
+        let c = StreamCodec::new(HeaderWidth::W32);
+        let instrs: Vec<Instr> = (0..5u16).map(Instr).collect();
+        let mut words = Vec::new();
+        words.extend(c.instruction_header(3, 4, instrs.len()).unwrap());
+        words.extend(c.pack_instructions(&instrs));
+        let feats = vec![vec![1u32, 2, 3], vec![4, 5, 6]];
+        words.extend(c.feature_header(3, 2).unwrap());
+        for b in &feats {
+            words.extend(c.pack_feature_words(b));
+        }
+        let msgs = decode_stream(&c, &words).unwrap();
+        assert_eq!(msgs.len(), 2);
+        assert_eq!(msgs[0], Message::Program { classes: 3, clauses: 4, instrs });
+        assert_eq!(msgs[1], Message::Infer { features: 3, batches: feats });
+    }
+
+    #[test]
+    fn payload_words_may_alias_header_bits() {
+        // Countdown framing: instruction payload words whose top bit is
+        // set (a negative-polarity instruction in the high half-word)
+        // must be consumed as data, not misparsed as headers.
+        let c = StreamCodec::new(HeaderWidth::W32);
+        let instrs = vec![Instr(0x0001), Instr(0x8001)]; // second has P=1
+        let mut words = Vec::new();
+        words.extend(c.instruction_header(2, 2, 2).unwrap());
+        words.extend(c.pack_instructions(&instrs));
+        assert!(words[2] >> 31 & 1 == 1, "aliasing precondition");
+        let msgs = decode_stream(&c, &words).unwrap();
+        assert_eq!(msgs, vec![Message::Program { classes: 2, clauses: 2, instrs }]);
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let c = StreamCodec::new(HeaderWidth::W32);
+        let mut words: Vec<u64> = c.instruction_header(2, 2, 8).unwrap().to_vec();
+        words.push(1); // only 1 of 4 payload words
+        assert_eq!(decode_stream(&c, &words), Err(StreamError::Truncated { expected: 3 }));
+    }
+
+    #[test]
+    fn garbage_start_errors() {
+        let c = StreamCodec::new(HeaderWidth::W32);
+        assert_eq!(
+            decode_stream(&c, &[0x1234]),
+            Err(StreamError::NotAHeader { index: 0 })
+        );
+    }
+}

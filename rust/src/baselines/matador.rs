@@ -1,0 +1,176 @@
+//! MATADOR [18]: the model-specific synthesized accelerator baseline.
+//!
+//! MATADOR converts the Include-only clause expressions of a *specific*
+//! trained model directly into LUT logic: every clause is a synthesized
+//! AND tree, all clauses evaluate in parallel, and the class-sum adder
+//! trees are pipelined — one inference per clock at 50 MHz after a short
+//! fill.  That makes it the fastest and (per LUT) tightest TM
+//! accelerator, at the price the paper's whole argument turns on: any
+//! model/task change requires resynthesis and a new bitstream.
+//!
+//! Analytical model, anchored to Table 1's published builds:
+//!
+//! * LUTs ~ includes/2 (a LUT6 absorbs ~2 included literals of an AND
+//!   tree) + adder-tree overhead ~ classes * clauses * 0.7 — fitted to
+//!   the MNIST row (8709 LUTs, ~17k includes); CIFAR/KWS check rows.
+//! * Pipeline depth = ceil(log2(max clause width)) + ceil(log2 clauses)
+//!   + 3 (booleanize/argmax stages).
+//! * Single-datapoint latency = depth cycles @ 50 MHz; steady-state
+//!   throughput = 50M inf/s (II=1).  No batch mode (Fig 9 note).
+
+use crate::tm::model::TMModel;
+
+/// Table 1 anchor rows (chip, LUTs, FFs, BRAMs, freq).
+pub const TABLE1_MATADOR: [(&str, u32, u32, u32, f64); 3] = [
+    ("cifar2", 3867, 33212, 3, 50.0),
+    ("kws6", 6063, 10658, 3, 50.0),
+    ("mnist", 8709, 17440, 3, 50.0),
+];
+
+/// A synthesized (fixed-function) MATADOR build for one model.
+#[derive(Debug, Clone)]
+pub struct Matador {
+    pub model_name: String,
+    pub includes: usize,
+    pub classes: usize,
+    pub clauses: usize,
+    pub pipeline_depth: u32,
+    pub freq_mhz: f64,
+}
+
+impl Matador {
+    /// "Synthesize" the accelerator for a trained model.
+    pub fn synthesize(model: &TMModel) -> Self {
+        let includes = model.include_count();
+        let max_clause_width = (0..model.shape.classes)
+            .flat_map(|m| (0..model.shape.clauses).map(move |c| (m, c)))
+            .map(|(m, c)| model.clause_includes(m, c).len())
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let depth = (max_clause_width as f64).log2().ceil() as u32
+            + (model.shape.clauses as f64).log2().ceil() as u32
+            + 3;
+        Matador {
+            model_name: model.shape.name.clone(),
+            includes,
+            classes: model.shape.classes,
+            clauses: model.shape.clauses,
+            pipeline_depth: depth,
+            freq_mhz: 50.0,
+        }
+    }
+
+    /// LUT estimate (fitted to the Table 1 MNIST anchor).
+    pub fn luts(&self) -> u32 {
+        (self.includes as f64 / 2.0
+            + self.classes as f64 * self.clauses as f64 * 0.7) as u32
+    }
+
+    /// FF estimate: pipeline registers across the adder trees.
+    pub fn ffs(&self) -> u32 {
+        (self.classes as f64 * self.clauses as f64 * 1.2
+            + self.includes as f64 * 0.8) as u32
+    }
+
+    /// MATADOR streams inputs through AXI DMA; model weights are logic,
+    /// so BRAM stays minimal (Table 1: 3 blocks for all builds).
+    pub fn brams(&self) -> u32 {
+        3
+    }
+
+    /// Latency for ONE datapoint in microseconds (pipeline fill).
+    pub fn single_latency_us(&self) -> f64 {
+        self.pipeline_depth as f64 / self.freq_mhz
+    }
+
+    /// Steady-state throughput (II = 1).
+    pub fn throughput(&self) -> f64 {
+        self.freq_mhz * 1e6
+    }
+
+    /// Energy per single inference, in microjoules.
+    pub fn single_energy_uj(&self) -> f64 {
+        crate::model_cost::energy::P_MATADOR_W * self.single_latency_us()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::SynthSpec;
+    use crate::TMShape;
+
+    fn mnist_like_model(target_includes: usize) -> TMModel {
+        // Deterministically sprinkle includes at MNIST dims.
+        let shape = TMShape {
+            name: "mnist".into(),
+            features: 784,
+            classes: 10,
+            clauses: 200,
+            t: 50,
+            s: 10.0,
+            train_batch: 32,
+            n_states: 128,
+        };
+        let mut m = TMModel::empty(shape);
+        let mut placed = 0usize;
+        let mut rng = crate::datasets::synth::XorShift64Star::new(3);
+        while placed < target_includes {
+            let class = rng.below(10) as usize;
+            let clause = rng.below(200) as usize;
+            let lit = rng.below(1568) as usize;
+            if !m.include(class, clause, lit) {
+                m.set_include(class, clause, lit, true);
+                placed += 1;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn mnist_scale_luts_near_table1_anchor() {
+        // Paper §2: MNIST has ~17k includes of 3.1M TAs; Table 1 MATADOR
+        // MNIST row is 8709 LUTs.  The fit must land within 15%.
+        let m = mnist_like_model(17_000);
+        let acc = Matador::synthesize(&m);
+        let luts = acc.luts() as f64;
+        assert!(
+            (luts - 8709.0).abs() / 8709.0 < 0.15,
+            "LUT fit off: {luts} vs 8709"
+        );
+    }
+
+    #[test]
+    fn single_latency_sub_microsecond() {
+        // A pipelined fixed-function build: ~10-20 cycles @ 50 MHz.
+        let m = mnist_like_model(17_000);
+        let acc = Matador::synthesize(&m);
+        let lat = acc.single_latency_us();
+        assert!(lat < 1.0 && lat > 0.05, "latency {lat}");
+    }
+
+    #[test]
+    fn no_batch_mode_throughput_is_clock_limited() {
+        let m = mnist_like_model(1000);
+        let acc = Matador::synthesize(&m);
+        assert_eq!(acc.throughput(), 50e6);
+    }
+
+    #[test]
+    fn more_includes_more_luts() {
+        let small = Matador::synthesize(&mnist_like_model(2000));
+        let big = Matador::synthesize(&mnist_like_model(20_000));
+        assert!(big.luts() > small.luts());
+    }
+
+    #[test]
+    fn synthesized_for_trained_model() {
+        let shape = TMShape::synthetic(12, 3, 8);
+        let data = SynthSpec::new(12, 3, 128).noise(0.05).seed(5).generate();
+        let model = crate::trainer::train_model(&shape, &data, 3, 1);
+        let acc = Matador::synthesize(&model);
+        assert_eq!(acc.includes, model.include_count());
+        assert!(acc.pipeline_depth >= 4);
+    }
+}

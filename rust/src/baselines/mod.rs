@@ -1,0 +1,16 @@
+//! The paper's comparators.
+//!
+//! * [`mcu`] — low-power microcontrollers running the *same* compressed
+//!   Include-instruction inference as software (§4 Q2: ESP32; Fig 9:
+//!   STM32Disco "RDRS" [15]).  Functional semantics are bit-identical
+//!   (the software walk IS `isa::decode_infer`); timing/energy come
+//!   from calibrated per-instruction cost models.
+//! * [`matador`] — the model-specific synthesized FPGA flow [18]
+//!   (§4 Q1): fully-pipelined clause logic, fastest TM accelerator, but
+//!   fixed at synthesis time — the paper's flexibility foil.
+
+pub mod matador;
+pub mod mcu;
+
+pub use matador::Matador;
+pub use mcu::{Mcu, McuKind};

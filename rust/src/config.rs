@@ -1,0 +1,217 @@
+//! Workload shapes and the `artifacts/manifest.tsv` loader.
+//!
+//! A [`TMShape`] is the static architecture of one TM workload: feature
+//! count, class count, clauses per class, and the training hyperparameters
+//! baked into its AOT artifacts.  The authoritative source is the manifest
+//! emitted by `python -m compile.aot` (TSV twin of manifest.json — the
+//! offline build has no JSON crate); shapes used by pure-simulator tests
+//! can also be constructed directly.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Static architecture + hyperparameters of one TM workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TMShape {
+    pub name: String,
+    pub features: usize,
+    pub classes: usize,
+    /// Clauses per class; polarity alternates +,- within a class.
+    pub clauses: usize,
+    /// Class-sum clamp used by training feedback.
+    pub t: i32,
+    /// Specificity (Type I decrement probability 1/s).
+    pub s: f64,
+    pub train_batch: usize,
+    pub n_states: i32,
+}
+
+impl TMShape {
+    /// Literals L = 2F (feature, complement interleaved).
+    pub fn literals(&self) -> usize {
+        2 * self.features
+    }
+
+    /// Total clauses K = M * C.
+    pub fn total_clauses(&self) -> usize {
+        self.classes * self.clauses
+    }
+
+    /// Total TAs in the dense model (the paper's 3,136,000 for MNIST).
+    pub fn total_tas(&self) -> usize {
+        self.total_clauses() * self.literals()
+    }
+
+    /// A synthetic shape for tests.
+    pub fn synthetic(features: usize, classes: usize, clauses: usize) -> Self {
+        TMShape {
+            name: format!("synth_{features}f_{classes}m_{clauses}c"),
+            features,
+            classes,
+            clauses,
+            t: (clauses as i32 / 2 - 1).max(1),
+            s: 3.0,
+            train_batch: 32,
+            n_states: 128,
+        }
+    }
+}
+
+/// One artifact pair (inference + train step) described by the manifest.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub shape: TMShape,
+    pub infer_hlo: String,
+    pub train_hlo: String,
+}
+
+/// Parsed `artifacts/manifest.tsv`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub configs: BTreeMap<String, ManifestEntry>,
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    /// Parse the TSV manifest text (exposed for unit tests).
+    pub fn parse(text: &str, root: PathBuf) -> anyhow::Result<Self> {
+        let mut lines = text.lines();
+        let header: Vec<&str> = lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("empty manifest"))?
+            .split('\t')
+            .collect();
+        let col = |name: &str| -> anyhow::Result<usize> {
+            header
+                .iter()
+                .position(|&h| h == name)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing column {name}"))
+        };
+        let (c_name, c_feat, c_cls, c_clu) = (col("name")?, col("features")?, col("classes")?, col("clauses")?);
+        let (c_t, c_s, c_batch, c_n) = (col("T")?, col("s")?, col("train_batch")?, col("n_states")?);
+        let (c_inf, c_trn) = (col("infer_hlo")?, col("train_hlo")?);
+
+        let mut configs = BTreeMap::new();
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            anyhow::ensure!(f.len() == header.len(), "manifest row {i}: field count");
+            let shape = TMShape {
+                name: f[c_name].to_string(),
+                features: f[c_feat].parse()?,
+                classes: f[c_cls].parse()?,
+                clauses: f[c_clu].parse()?,
+                t: f[c_t].parse()?,
+                s: f[c_s].parse()?,
+                train_batch: f[c_batch].parse()?,
+                n_states: f[c_n].parse()?,
+            };
+            configs.insert(
+                shape.name.clone(),
+                ManifestEntry {
+                    shape,
+                    infer_hlo: f[c_inf].to_string(),
+                    train_hlo: f[c_trn].to_string(),
+                },
+            );
+        }
+        Ok(Manifest { configs, root })
+    }
+
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.tsv"))?;
+        Self::parse(&text, dir.to_path_buf())
+    }
+
+    /// Locate the artifacts directory relative to the repo root (works
+    /// from `cargo test`, benches and examples).
+    pub fn load_default() -> anyhow::Result<Self> {
+        for c in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(c).join("manifest.tsv").exists() {
+                return Self::load(c);
+            }
+        }
+        anyhow::bail!("artifacts/manifest.tsv not found; run `make artifacts`")
+    }
+
+    pub fn entry(&self, name: &str) -> anyhow::Result<&ManifestEntry> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no config named {name} in manifest"))
+    }
+
+    pub fn infer_hlo_path(&self, name: &str) -> anyhow::Result<PathBuf> {
+        Ok(self.root.join(&self.entry(name)?.infer_hlo))
+    }
+
+    pub fn train_hlo_path(&self, name: &str) -> anyhow::Result<PathBuf> {
+        Ok(self.root.join(&self.entry(name)?.train_hlo))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_arithmetic_matches_paper_example() {
+        // Paper §1: MNIST with 784 features -> 1568 literals; 200 clauses
+        // x 10 classes -> 3,136,000 TAs.
+        let s = TMShape {
+            name: "mnist".into(),
+            features: 784,
+            classes: 10,
+            clauses: 200,
+            t: 50,
+            s: 10.0,
+            train_batch: 32,
+            n_states: 128,
+        };
+        assert_eq!(s.literals(), 1568);
+        assert_eq!(s.total_clauses(), 2000);
+        assert_eq!(s.total_tas(), 3_136_000);
+    }
+
+    #[test]
+    fn synthetic_shape_has_attainable_t() {
+        let s = TMShape::synthetic(8, 3, 10);
+        assert!(s.t < s.clauses as i32 / 2);
+        assert!(s.t >= 1);
+    }
+
+    #[test]
+    fn parse_tsv_roundtrip() {
+        let text = "name\tfeatures\tclasses\tclauses\tT\ts\ttrain_batch\tn_states\tinfer_hlo\ttrain_hlo\n\
+                    emg\t64\t6\t100\t20\t3.0\t32\t128\ti.hlo.txt\tt.hlo.txt\n";
+        let m = Manifest::parse(text, PathBuf::from("/tmp")).unwrap();
+        let e = m.entry("emg").unwrap();
+        assert_eq!(e.shape.features, 64);
+        assert_eq!(e.shape.t, 20);
+        assert_eq!(e.shape.s, 3.0);
+        assert_eq!(m.infer_hlo_path("emg").unwrap(), PathBuf::from("/tmp/i.hlo.txt"));
+    }
+
+    #[test]
+    fn parse_rejects_missing_column() {
+        assert!(Manifest::parse("name\tfeatures\n", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_ragged_row() {
+        let text = "name\tfeatures\tclasses\tclauses\tT\ts\ttrain_batch\tn_states\tinfer_hlo\ttrain_hlo\nbad\t1\n";
+        assert!(Manifest::parse(text, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn manifest_loads_if_built() {
+        if let Ok(m) = Manifest::load_default() {
+            assert!(m.configs.contains_key("quickstart"));
+            let e = m.entry("mnist").unwrap();
+            assert_eq!(e.shape.literals(), 2 * e.shape.features);
+            assert!(m.infer_hlo_path("mnist").unwrap().exists());
+        }
+    }
+}

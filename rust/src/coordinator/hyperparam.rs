@@ -1,0 +1,151 @@
+//! Hyperparameter search on the training node (paper §3: "Users can
+//! also run a hyperparameter search to update the architecture if
+//! needed"; [21] highlights the TM's small search space — only T and s,
+//! plus the clause budget).
+//!
+//! Grid search with a held-out split, pruned by an accuracy floor; the
+//! scoring penalizes model size lightly so the search prefers smaller
+//! instruction streams at equal accuracy (they are faster on the
+//! accelerator — latency is linear in instructions).
+
+use crate::config::TMShape;
+use crate::datasets::synth::Dataset;
+use crate::tm::model::TMModel;
+use crate::tm::reference;
+
+/// One evaluated grid point.
+#[derive(Debug, Clone)]
+pub struct Trial {
+    pub t: i32,
+    pub s: f64,
+    pub clauses: usize,
+    pub accuracy: f64,
+    pub instructions: usize,
+    pub score: f64,
+}
+
+/// Search configuration.
+pub struct SearchSpace {
+    pub t_grid: Vec<i32>,
+    pub s_grid: Vec<f64>,
+    pub clause_grid: Vec<usize>,
+    pub epochs: usize,
+    pub seed: u64,
+    /// Score = accuracy - size_weight * (instructions / total TAs).
+    pub size_weight: f64,
+}
+
+impl SearchSpace {
+    /// A small default grid around a base shape.
+    pub fn around(shape: &TMShape) -> Self {
+        let c = shape.clauses;
+        SearchSpace {
+            t_grid: vec![shape.t / 2, shape.t, shape.t * 2]
+                .into_iter()
+                .filter(|&t| t >= 1)
+                .collect(),
+            s_grid: vec![shape.s * 0.5, shape.s, shape.s * 2.0],
+            clause_grid: vec![c / 2, c].into_iter().filter(|&v| v >= 2).collect(),
+            epochs: 3,
+            seed: 17,
+            size_weight: 0.05,
+        }
+    }
+}
+
+/// Exhaustive grid search; returns all trials sorted by score (best
+/// first) and the winning model.
+pub fn grid_search(
+    base: &TMShape,
+    train: &Dataset,
+    valid: &Dataset,
+    space: &SearchSpace,
+) -> (Vec<Trial>, TMModel) {
+    let mut trials = Vec::new();
+    let mut best: Option<(f64, TMModel)> = None;
+    for &clauses in &space.clause_grid {
+        for &t in &space.t_grid {
+            // T must stay attainable for the clause budget.
+            if t >= clauses as i32 / 2 {
+                continue;
+            }
+            for &s in &space.s_grid {
+                let mut shape = base.clone();
+                shape.clauses = clauses;
+                shape.t = t;
+                shape.s = s;
+                let model = crate::trainer::train_model(&shape, train, space.epochs, space.seed);
+                let accuracy = reference::accuracy(&model, &valid.xs, &valid.ys);
+                let instructions = crate::isa::instruction_count(&model);
+                let score =
+                    accuracy - space.size_weight * instructions as f64 / shape.total_tas() as f64;
+                trials.push(Trial { t, s, clauses, accuracy, instructions, score });
+                if best.as_ref().map(|(b, _)| score > *b).unwrap_or(true) {
+                    best = Some((score, model));
+                }
+            }
+        }
+    }
+    trials.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    let model = best.expect("non-empty grid").1;
+    (trials, model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::SynthSpec;
+
+    fn data() -> (Dataset, Dataset) {
+        let d = SynthSpec::new(16, 2, 512).noise(0.08).seed(7).generate();
+        d.split(0.75)
+    }
+
+    #[test]
+    fn search_returns_sorted_trials() {
+        let shape = crate::TMShape::synthetic(16, 2, 10);
+        let (train, valid) = data();
+        let (trials, _model) = grid_search(&shape, &train, &valid, &SearchSpace::around(&shape));
+        assert!(!trials.is_empty());
+        for w in trials.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    #[test]
+    fn winner_is_accurate() {
+        let shape = crate::TMShape::synthetic(16, 2, 10);
+        let (train, valid) = data();
+        let (trials, model) = grid_search(&shape, &train, &valid, &SearchSpace::around(&shape));
+        let acc = reference::accuracy(&model, &valid.xs, &valid.ys);
+        assert!(acc >= trials[0].accuracy - 1e-9);
+        assert!(acc > 0.85, "winner acc {acc}");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty grid")]
+    fn unattainable_t_filtered_leaves_empty_grid() {
+        let shape = crate::TMShape::synthetic(16, 2, 10);
+        let (train, valid) = data();
+        let space = SearchSpace {
+            t_grid: vec![100], // unattainable for any clause budget here
+            s_grid: vec![3.0],
+            clause_grid: vec![10],
+            epochs: 1,
+            seed: 1,
+            size_weight: 0.0,
+        };
+        let _ = grid_search(&shape, &train, &valid, &space);
+    }
+
+    #[test]
+    fn size_penalty_prefers_smaller_at_equal_accuracy() {
+        let t = Trial { t: 4, s: 3.0, clauses: 10, accuracy: 0.9, instructions: 100, score: 0.0 };
+        let big = Trial { instructions: 1000, ..t.clone() };
+        let w = 0.05;
+        let total = 640.0;
+        let score_small = t.accuracy - w * t.instructions as f64 / total;
+        let score_big = big.accuracy - w * big.instructions as f64 / total;
+        assert!(score_small > score_big);
+    }
+}

@@ -1,0 +1,22 @@
+//! L3 coordinator: the deployed system of Fig 8.
+//!
+//! One process owns:
+//! * an [`service::InferenceService`] wrapping the accelerator (base,
+//!   single- or multi-core simulator) and its stream programming port;
+//! * a [`tuner::TrainingNode`] — the "Raspberry-Pi class" local trainer,
+//!   which executes the AOT-compiled JAX train step through PJRT
+//!   (Python never runs here) or the native rust trainer;
+//! * the [`tuner::RecalibrationLoop`] that watches live accuracy and
+//!   reprograms the accelerator with a freshly trained model when drift
+//!   degrades it — the paper's headline runtime-tunability story;
+//! * a threaded [`server`] front-end (std mpsc — the offline toolchain
+//!   has no tokio; the request loop is the same shape).
+
+pub mod hyperparam;
+pub mod server;
+pub mod service;
+pub mod tuner;
+
+pub use server::{ServiceHandle, ServerStats};
+pub use service::{Engine, InferenceService, Metrics};
+pub use tuner::{RecalReport, RecalibrationLoop, TrainBackend, TrainingNode};

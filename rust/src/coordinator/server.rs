@@ -1,0 +1,162 @@
+//! Threaded request front-end: the AXIS/queue interface of the deployed
+//! system, as a worker thread owning the service and an mpsc request
+//! queue (offline toolchain has no tokio; the request loop is shaped
+//! identically: one owner, message passing, bounded in-flight work).
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use super::service::{InferenceService, Metrics};
+use crate::tm::model::TMModel;
+
+/// Requests the worker accepts.
+enum Request {
+    Infer {
+        rows: Vec<Vec<u8>>,
+        reply: mpsc::Sender<anyhow::Result<Vec<usize>>>,
+    },
+    Program {
+        model: Box<TMModel>,
+        reply: mpsc::Sender<anyhow::Result<()>>,
+    },
+    Stats {
+        reply: mpsc::Sender<Metrics>,
+    },
+    Shutdown,
+}
+
+/// Snapshot returned by [`ServiceHandle::stats`].
+pub type ServerStats = Metrics;
+
+/// Cloneable client handle to a running service worker.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+/// Spawn the worker thread that owns `service`.
+pub fn spawn(mut service: InferenceService) -> (ServiceHandle, JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let join = std::thread::spawn(move || {
+        while let Ok(req) = rx.recv() {
+            match req {
+                Request::Infer { rows, reply } => {
+                    let r = service.infer_all(&rows).map_err(anyhow::Error::from);
+                    let _ = reply.send(r);
+                }
+                Request::Program { model, reply } => {
+                    let r = service.reprogram(&model).map_err(anyhow::Error::from);
+                    let _ = reply.send(r);
+                }
+                Request::Stats { reply } => {
+                    let _ = reply.send(service.metrics.clone());
+                }
+                Request::Shutdown => break,
+            }
+        }
+    });
+    (ServiceHandle { tx }, join)
+}
+
+impl ServiceHandle {
+    /// Blocking inference RPC.
+    pub fn infer(&self, rows: Vec<Vec<u8>>) -> anyhow::Result<Vec<usize>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Infer { rows, reply })
+            .map_err(|_| anyhow::anyhow!("service worker gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("service worker dropped reply"))?
+    }
+
+    /// Blocking reprogram RPC (the runtime-tuning path).
+    pub fn program(&self, model: TMModel) -> anyhow::Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Program { model: Box::new(model), reply })
+            .map_err(|_| anyhow::anyhow!("service worker gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("service worker dropped reply"))?
+    }
+
+    pub fn stats(&self) -> anyhow::Result<ServerStats> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Stats { reply })
+            .map_err(|_| anyhow::anyhow!("service worker gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("service worker dropped reply"))
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::Engine;
+    use crate::datasets::synth::SynthSpec;
+    use crate::TMShape;
+
+    fn trained() -> (TMModel, crate::datasets::synth::Dataset) {
+        let shape = TMShape::synthetic(12, 3, 8);
+        let data = SynthSpec::new(12, 3, 96).noise(0.05).seed(8).generate();
+        (crate::trainer::train_model(&shape, &data, 4, 2), data)
+    }
+
+    #[test]
+    fn rpc_roundtrip() {
+        let (model, data) = trained();
+        let (h, join) = spawn(InferenceService::new(Engine::base()));
+        h.program(model.clone()).unwrap();
+        let preds = h.infer(data.xs.clone()).unwrap();
+        assert_eq!(preds.len(), data.len());
+        let stats = h.stats().unwrap();
+        assert_eq!(stats.inferences, 96);
+        h.shutdown();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn infer_before_program_is_error_not_crash() {
+        let (h, join) = spawn(InferenceService::new(Engine::base()));
+        assert!(h.infer(vec![vec![0u8; 12]]).is_err());
+        h.shutdown();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_clients_share_one_accelerator() {
+        let (model, data) = trained();
+        let (h, join) = spawn(InferenceService::new(Engine::base()));
+        h.program(model).unwrap();
+        let mut threads = Vec::new();
+        for _ in 0..4 {
+            let h = h.clone();
+            let rows = data.xs.clone();
+            threads.push(std::thread::spawn(move || h.infer(rows).unwrap().len()));
+        }
+        let total: usize = threads.into_iter().map(|t| t.join().unwrap()).sum();
+        assert_eq!(total, 4 * 96);
+        assert_eq!(h.stats().unwrap().inferences, 4 * 96);
+        h.shutdown();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn reprogram_mid_serving_takes_effect() {
+        let (model, data) = trained();
+        let (h, join) = spawn(InferenceService::new(Engine::base()));
+        h.program(model.clone()).unwrap();
+        let before = h.infer(data.xs.clone()).unwrap();
+        // Retrain on drifted data and swap live.
+        let drifted = SynthSpec::new(12, 3, 96).noise(0.05).seed(8).drift(0.4).generate();
+        let shape = TMShape::synthetic(12, 3, 8);
+        let new_model = crate::trainer::train_model(&shape, &drifted, 4, 3);
+        h.program(new_model).unwrap();
+        let after = h.infer(data.xs.clone()).unwrap();
+        assert_eq!(before.len(), after.len());
+        assert_eq!(h.stats().unwrap().reprograms, 2);
+        h.shutdown();
+        join.join().unwrap();
+    }
+}

@@ -1,0 +1,223 @@
+//! The inference service: accelerator ownership, request execution,
+//! live reprogramming, metrics.
+
+use crate::accel::core::{AccelConfig, Core, CoreError};
+use crate::accel::multicore::MultiCore;
+use crate::tm::model::TMModel;
+
+/// Which accelerator build serves requests.
+pub enum Engine {
+    Single(Core),
+    Multi(MultiCore),
+}
+
+impl Engine {
+    pub fn base() -> Self {
+        Engine::Single(Core::new(AccelConfig::base()))
+    }
+    pub fn single_core() -> Self {
+        Engine::Single(Core::new(AccelConfig::single_core()))
+    }
+    pub fn five_core() -> Self {
+        Engine::Multi(MultiCore::five_core())
+    }
+
+    /// A single core with a customized configuration (e.g. the Fig 6
+    /// deeper-memory deployments).
+    pub fn custom(cfg: AccelConfig) -> Self {
+        Engine::Single(Core::new(cfg))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Single(c) => c.cfg.name,
+            Engine::Multi(_) => "multicore_x5",
+        }
+    }
+
+    pub fn program_model(&mut self, model: &TMModel) -> Result<(), CoreError> {
+        match self {
+            Engine::Single(c) => c.program_model(model),
+            Engine::Multi(m) => m.program_model(model),
+        }
+    }
+
+    /// Run up to 32 datapoints; returns (preds, simulated batch cycles).
+    pub fn run_rows(&mut self, rows: &[Vec<u8>]) -> Result<(Vec<usize>, u64), CoreError> {
+        match self {
+            Engine::Single(c) => {
+                let packed = crate::isa::pack_features(rows);
+                let r = c.run_batch(&packed)?;
+                Ok((
+                    r.preds[..rows.len()].iter().map(|&p| p as usize).collect(),
+                    r.cycles.total(),
+                ))
+            }
+            Engine::Multi(m) => {
+                let packed = crate::isa::pack_features(rows);
+                let r = m.run_batch(&packed)?;
+                Ok((
+                    r.preds[..rows.len()].iter().map(|&p| p as usize).collect(),
+                    r.batch_cycles,
+                ))
+            }
+        }
+    }
+
+    pub fn freq_mhz(&self) -> f64 {
+        match self {
+            Engine::Single(c) => c.cfg.freq_mhz,
+            Engine::Multi(m) => m.cores[0].cfg.freq_mhz,
+        }
+    }
+}
+
+/// Service counters (simulated time is cycle-derived, not wall time).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Metrics {
+    pub inferences: u64,
+    pub batches: u64,
+    pub reprograms: u64,
+    pub simulated_cycles: u64,
+    pub errors: u64,
+}
+
+impl Metrics {
+    /// Simulated accelerator busy-time in microseconds.
+    pub fn simulated_us(&self, freq_mhz: f64) -> f64 {
+        self.simulated_cycles as f64 / freq_mhz
+    }
+
+    /// Mean per-inference latency in microseconds.
+    pub fn mean_latency_us(&self, freq_mhz: f64) -> f64 {
+        if self.inferences == 0 {
+            return 0.0;
+        }
+        self.simulated_us(freq_mhz) / self.inferences as f64
+    }
+}
+
+/// Accelerator + counters; every mutation goes through here so the
+/// metrics can never drift from reality.
+pub struct InferenceService {
+    pub engine: Engine,
+    pub metrics: Metrics,
+    model_version: u64,
+}
+
+impl InferenceService {
+    pub fn new(engine: Engine) -> Self {
+        InferenceService { engine, metrics: Metrics::default(), model_version: 0 }
+    }
+
+    pub fn model_version(&self) -> u64 {
+        self.model_version
+    }
+
+    /// Live reprogram (the paper's no-resynthesis model swap).
+    pub fn reprogram(&mut self, model: &TMModel) -> Result<(), CoreError> {
+        self.engine.program_model(model)?;
+        self.metrics.reprograms += 1;
+        self.model_version += 1;
+        Ok(())
+    }
+
+    /// Serve one request of up to 32 datapoints.
+    pub fn infer(&mut self, rows: &[Vec<u8>]) -> Result<Vec<usize>, CoreError> {
+        match self.engine.run_rows(rows) {
+            Ok((preds, cycles)) => {
+                self.metrics.inferences += rows.len() as u64;
+                self.metrics.batches += 1;
+                self.metrics.simulated_cycles += cycles;
+                Ok(preds)
+            }
+            Err(e) => {
+                self.metrics.errors += 1;
+                Err(e)
+            }
+        }
+    }
+
+    /// Serve an arbitrary-size request by splitting into 32-lane batches.
+    pub fn infer_all(&mut self, rows: &[Vec<u8>]) -> Result<Vec<usize>, CoreError> {
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(32) {
+            out.extend(self.infer(chunk)?);
+        }
+        Ok(out)
+    }
+
+    /// Accuracy over a labeled set (the recalibration monitor's probe).
+    pub fn measure_accuracy(&mut self, xs: &[Vec<u8>], ys: &[usize]) -> Result<f64, CoreError> {
+        let preds = self.infer_all(xs)?;
+        let correct = preds.iter().zip(ys).filter(|(p, y)| p == y).count();
+        Ok(correct as f64 / xs.len().max(1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::SynthSpec;
+    use crate::TMShape;
+
+    fn trained() -> (TMModel, crate::datasets::synth::Dataset) {
+        let shape = TMShape::synthetic(12, 3, 8);
+        let data = SynthSpec::new(12, 3, 160).noise(0.05).seed(30).generate();
+        (crate::trainer::train_model(&shape, &data, 4, 2), data)
+    }
+
+    #[test]
+    fn service_counts_inferences() {
+        let (model, data) = trained();
+        let mut svc = InferenceService::new(Engine::base());
+        svc.reprogram(&model).unwrap();
+        let preds = svc.infer_all(&data.xs).unwrap();
+        assert_eq!(preds.len(), 160);
+        assert_eq!(svc.metrics.inferences, 160);
+        assert_eq!(svc.metrics.batches, 5);
+        assert!(svc.metrics.simulated_cycles > 0);
+        assert_eq!(svc.metrics.reprograms, 1);
+    }
+
+    #[test]
+    fn engines_agree_on_predictions() {
+        let (model, data) = trained();
+        let mut a = InferenceService::new(Engine::base());
+        let mut b = InferenceService::new(Engine::five_core());
+        a.reprogram(&model).unwrap();
+        b.reprogram(&model).unwrap();
+        assert_eq!(
+            a.infer_all(&data.xs).unwrap(),
+            b.infer_all(&data.xs).unwrap()
+        );
+    }
+
+    #[test]
+    fn accuracy_probe_matches_reference() {
+        let (model, data) = trained();
+        let mut svc = InferenceService::new(Engine::base());
+        svc.reprogram(&model).unwrap();
+        let got = svc.measure_accuracy(&data.xs, &data.ys).unwrap();
+        let want = crate::tm::reference::accuracy(&model, &data.xs, &data.ys);
+        assert!((got - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn errors_counted() {
+        let mut svc = InferenceService::new(Engine::base());
+        // Not programmed yet.
+        assert!(svc.infer(&[vec![0u8; 12]]).is_err());
+        assert_eq!(svc.metrics.errors, 1);
+    }
+
+    #[test]
+    fn model_version_bumps_on_reprogram() {
+        let (model, _) = trained();
+        let mut svc = InferenceService::new(Engine::base());
+        assert_eq!(svc.model_version(), 0);
+        svc.reprogram(&model).unwrap();
+        svc.reprogram(&model).unwrap();
+        assert_eq!(svc.model_version(), 2);
+    }
+}

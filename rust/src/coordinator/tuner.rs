@@ -1,0 +1,186 @@
+//! The Model Training Node + recalibration loop (Fig 8).
+//!
+//! Deployment story the paper proposes: the accelerator serves inference
+//! from edge-sensor data; a local training node keeps a labeled,
+//! *updating* dataset (sensor readings shift with aging/temperature/
+//! humidity [13]); when monitored accuracy drops below a threshold the
+//! node retrains and reprograms the accelerator over the stream — no
+//! synthesis tools anywhere (the paper's key contrast with MATADOR/
+//! FINN/hls4ml/PolyLUT).
+//!
+//! Two interchangeable training backends:
+//! * [`TrainBackend::Pjrt`] — the AOT-compiled JAX train step executed
+//!   through the PJRT runtime (the default; exercises all three layers).
+//! * [`TrainBackend::Native`] — the pure-rust trainer (used when no
+//!   artifacts are available, and for cross-checking).
+
+use crate::config::TMShape;
+use crate::datasets::synth::Dataset;
+use crate::runtime::TrainExecutable;
+use crate::tm::model::TMModel;
+
+use super::service::InferenceService;
+
+/// Where the training node's compute runs.
+pub enum TrainBackend {
+    Pjrt(TrainExecutable),
+    Native,
+}
+
+/// The local training node.
+pub struct TrainingNode {
+    pub shape: TMShape,
+    pub backend: TrainBackend,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl TrainingNode {
+    pub fn native(shape: TMShape) -> Self {
+        TrainingNode { shape, backend: TrainBackend::Native, epochs: 6, seed: 7 }
+    }
+
+    pub fn pjrt(shape: TMShape, exe: TrainExecutable) -> Self {
+        TrainingNode { shape, backend: TrainBackend::Pjrt(exe), epochs: 6, seed: 7 }
+    }
+
+    /// Train a fresh model on the node's current dataset.
+    pub fn retrain(&self, data: &Dataset) -> anyhow::Result<TMModel> {
+        match &self.backend {
+            TrainBackend::Native => {
+                Ok(crate::trainer::train_model(&self.shape, data, self.epochs, self.seed))
+            }
+            TrainBackend::Pjrt(exe) => {
+                let ta = exe.fit(&data.xs, &data.ys, self.epochs, self.seed)?;
+                Ok(exe.model_from_states(&ta))
+            }
+        }
+    }
+}
+
+/// One recalibration decision record.
+#[derive(Debug, Clone)]
+pub struct RecalEvent {
+    pub step: usize,
+    pub accuracy_before: f64,
+    pub accuracy_after: f64,
+    pub instruction_count: usize,
+}
+
+/// Report of a monitored deployment window.
+#[derive(Debug, Clone, Default)]
+pub struct RecalReport {
+    /// (step, accuracy) trace of the monitor probes.
+    pub probes: Vec<(usize, f64)>,
+    pub recalibrations: Vec<RecalEvent>,
+}
+
+/// Drift monitor + retune policy.
+pub struct RecalibrationLoop {
+    pub node: TrainingNode,
+    /// Reprogram when probe accuracy falls below this.
+    pub threshold: f64,
+}
+
+impl RecalibrationLoop {
+    pub fn new(node: TrainingNode, threshold: f64) -> Self {
+        RecalibrationLoop { node, threshold }
+    }
+
+    /// Drive one monitored deployment: at each step the service classifies
+    /// the step's probe set; if accuracy < threshold, the node retrains
+    /// on that step's (drifted) data and live-reprograms the accelerator.
+    ///
+    /// `windows` yields (probe dataset, retrain dataset) per step —
+    /// in the field both come from the same labeled trickle.
+    pub fn run(
+        &self,
+        service: &mut InferenceService,
+        windows: &[(Dataset, Dataset)],
+    ) -> anyhow::Result<RecalReport> {
+        let mut report = RecalReport::default();
+        for (step, (probe, retrain)) in windows.iter().enumerate() {
+            let acc = service.measure_accuracy(&probe.xs, &probe.ys)?;
+            report.probes.push((step, acc));
+            if acc < self.threshold {
+                let model = self.node.retrain(retrain)?;
+                service.reprogram(&model)?;
+                let after = service.measure_accuracy(&probe.xs, &probe.ys)?;
+                report.probes.push((step, after));
+                report.recalibrations.push(RecalEvent {
+                    step,
+                    accuracy_before: acc,
+                    accuracy_after: after,
+                    instruction_count: crate::isa::instruction_count(&model),
+                });
+            }
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::Engine;
+    use crate::datasets::synth::SynthSpec;
+
+    fn shape() -> TMShape {
+        TMShape::synthetic(16, 2, 10)
+    }
+
+    fn dataset(drift: f64, n: usize) -> Dataset {
+        SynthSpec::new(16, 2, n).noise(0.05).seed(7).drift(drift).generate()
+    }
+
+    #[test]
+    fn native_node_trains_working_model() {
+        let node = TrainingNode::native(shape());
+        let data = dataset(0.0, 512);
+        let model = node.retrain(&data).unwrap();
+        let acc = crate::tm::reference::accuracy(&model, &data.xs, &data.ys);
+        assert!(acc > 0.9, "acc {acc}");
+    }
+
+    #[test]
+    fn recalibration_recovers_from_drift() {
+        // Train clean, deploy, drift arrives, loop must detect + recover.
+        let node = TrainingNode::native(shape());
+        let clean = dataset(0.0, 512);
+        let drifted = dataset(0.35, 512);
+
+        let mut svc = InferenceService::new(Engine::base());
+        svc.reprogram(&node.retrain(&clean).unwrap()).unwrap();
+
+        let looped = RecalibrationLoop::new(node, 0.85);
+        let windows = vec![
+            (clean.clone(), clean.clone()),
+            (drifted.clone(), drifted.clone()),
+        ];
+        let report = looped.run(&mut svc, &windows).unwrap();
+
+        assert_eq!(report.recalibrations.len(), 1, "exactly the drift step retunes");
+        let ev = &report.recalibrations[0];
+        assert!(ev.accuracy_before < 0.85);
+        assert!(
+            ev.accuracy_after > ev.accuracy_before + 0.1,
+            "no recovery: {} -> {}",
+            ev.accuracy_before,
+            ev.accuracy_after
+        );
+        assert_eq!(svc.metrics.reprograms, 2); // initial + recalibration
+    }
+
+    #[test]
+    fn healthy_deployment_never_reprograms() {
+        let node = TrainingNode::native(shape());
+        let clean = dataset(0.0, 256);
+        let mut svc = InferenceService::new(Engine::base());
+        svc.reprogram(&node.retrain(&clean).unwrap()).unwrap();
+        let looped = RecalibrationLoop::new(node, 0.80);
+        let windows = vec![(clean.clone(), clean.clone()); 3];
+        let report = looped.run(&mut svc, &windows).unwrap();
+        assert!(report.recalibrations.is_empty());
+        assert_eq!(svc.metrics.reprograms, 1);
+    }
+}

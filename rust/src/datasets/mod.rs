@@ -1,0 +1,14 @@
+//! Synthetic workload generators for the paper's eight datasets.
+//!
+//! Per DESIGN.md §Substitutions: the UCI/vision/audio data the paper
+//! evaluates is not available offline, so each workload is generated with
+//! the same dimensionality and class count from class prototypes + bit
+//! noise, with a parameterized drift knob for the recalibration
+//! experiments (Fig 8).  The generator is bit-for-bit identical to
+//! `python/compile/data.py` (locked by shared PRNG test vectors).
+
+pub mod synth;
+pub mod workloads;
+
+pub use synth::{Dataset, SynthSpec, XorShift64Star};
+pub use workloads::{workload, workload_names, Workload};

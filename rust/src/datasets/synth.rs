@@ -1,0 +1,292 @@
+//! Class-prototype Boolean dataset generator + the shared PRNG.
+//!
+//! Process (identical to `python/compile/data.py::make_dataset`):
+//! 1. draw one random Boolean prototype per class;
+//! 2. draw the drifted feature set (each feature flips with prob `drift`
+//!    — *always* consuming F draws so clean/drifted sets stay paired);
+//! 3. per sample: pick a class uniformly, copy its prototype, flip each
+//!    bit with prob `noise`, then apply the drift flips.
+
+/// xorshift64* — tiny, deterministic, reproduced bit-for-bit in python.
+#[derive(Debug, Clone)]
+pub struct XorShift64Star {
+    state: u64,
+}
+
+impl XorShift64Star {
+    pub fn new(seed: u64) -> Self {
+        XorShift64Star {
+            state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed },
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+}
+
+/// Generation parameters for one dataset draw.
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    pub features: usize,
+    pub classes: usize,
+    pub n: usize,
+    pub noise: f64,
+    pub seed: u64,
+    pub drift: f64,
+    /// Fraction of features that actually discriminate between classes;
+    /// the rest share a common background (real sensor data is mostly
+    /// uninformative channels).  1.0 = fully distinct prototypes.
+    pub informative: f64,
+}
+
+impl SynthSpec {
+    pub fn new(features: usize, classes: usize, n: usize) -> Self {
+        SynthSpec {
+            features,
+            classes,
+            n,
+            noise: 0.08,
+            seed: 1,
+            drift: 0.0,
+            informative: 1.0,
+        }
+    }
+
+    pub fn noise(mut self, v: f64) -> Self {
+        self.noise = v;
+        self
+    }
+    pub fn seed(mut self, v: u64) -> Self {
+        self.seed = v;
+        self
+    }
+    pub fn drift(mut self, v: f64) -> Self {
+        self.drift = v;
+        self
+    }
+    pub fn informative(mut self, v: f64) -> Self {
+        self.informative = v;
+        self
+    }
+
+    pub fn generate(&self) -> Dataset {
+        let mut rng = XorShift64Star::new(self.seed);
+        // Draw order is locked with python/compile/data.py: background
+        // (F), informative mask (F), per-class patterns (M x F, always
+        // consuming F draws), drift set (F), then samples.
+        let background: Vec<u8> = (0..self.features)
+            .map(|_| u8::from(rng.next_f64() < 0.5))
+            .collect();
+        let informative: Vec<bool> = (0..self.features)
+            .map(|_| rng.next_f64() < self.informative)
+            .collect();
+        let mut protos = vec![vec![0u8; self.features]; self.classes];
+        for p in protos.iter_mut() {
+            for f in 0..self.features {
+                let bit = u8::from(rng.next_f64() < 0.5); // always consume
+                p[f] = if informative[f] { bit } else { background[f] };
+            }
+        }
+        // Drift flips: always consume exactly F draws (stream pairing).
+        let mut flipped = vec![false; self.features];
+        for fl in flipped.iter_mut() {
+            *fl = rng.next_f64() < self.drift;
+        }
+        let mut xs = Vec::with_capacity(self.n);
+        let mut ys = Vec::with_capacity(self.n);
+        for _ in 0..self.n {
+            let c = rng.below(self.classes as u64) as usize;
+            ys.push(c);
+            let mut row = vec![0u8; self.features];
+            for f in 0..self.features {
+                let mut bit = protos[c][f];
+                if rng.next_f64() < self.noise {
+                    bit ^= 1;
+                }
+                if flipped[f] {
+                    bit ^= 1;
+                }
+                row[f] = bit;
+            }
+            xs.push(row);
+        }
+        Dataset { xs, ys, spec: self.clone() }
+    }
+}
+
+/// A generated Boolean dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// `xs[i][f]` in {0,1}.
+    pub xs: Vec<Vec<u8>>,
+    pub ys: Vec<usize>,
+    pub spec: SynthSpec,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Split into (train, test) at `frac`.
+    pub fn split(&self, frac: f64) -> (Dataset, Dataset) {
+        let cut = (self.len() as f64 * frac) as usize;
+        let a = Dataset {
+            xs: self.xs[..cut].to_vec(),
+            ys: self.ys[..cut].to_vec(),
+            spec: self.spec.clone(),
+        };
+        let b = Dataset {
+            xs: self.xs[cut..].to_vec(),
+            ys: self.ys[cut..].to_vec(),
+            spec: self.spec.clone(),
+        };
+        (a, b)
+    }
+
+    /// Literal rows (2F, interleaved with complements).
+    pub fn literal_rows(&self) -> Vec<Vec<u8>> {
+        self.xs
+            .iter()
+            .map(|x| crate::tm::reference::literals_from_features(x))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Known-answer vectors shared with python/tests/test_data.py.
+    #[test]
+    fn prng_known_answers_u64() {
+        let mut r = XorShift64Star::new(42);
+        let got: Vec<u64> = (0..4).map(|_| r.next_u64()).collect();
+        assert_eq!(
+            got,
+            vec![
+                0x56CE_4AB7_719B_A3A0,
+                0xC841_EB53_EBBB_2DDA,
+                0xCA46_6BE0_C998_0276,
+                0xF1AC_C733_4A7B_70DF,
+            ]
+        );
+    }
+
+    #[test]
+    fn prng_known_answers_f64() {
+        let mut r = XorShift64Star::new(7);
+        let got: Vec<f64> = (0..3).map(|_| (r.next_f64() * 1e12).round() / 1e12).collect();
+        assert_eq!(got, vec![0.820246666541, 0.928290156504, 0.089349592752]);
+    }
+
+    #[test]
+    fn prng_zero_seed_not_stuck() {
+        let mut r = XorShift64Star::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = SynthSpec::new(16, 3, 64).seed(9).generate();
+        let b = SynthSpec::new(16, 3, 64).seed(9).generate();
+        assert_eq!(a.xs, b.xs);
+        assert_eq!(a.ys, b.ys);
+        let c = SynthSpec::new(16, 3, 64).seed(10).generate();
+        assert_ne!(a.xs, c.xs);
+    }
+
+    #[test]
+    fn all_classes_present() {
+        let d = SynthSpec::new(8, 4, 400).seed(1).generate();
+        for c in 0..4 {
+            assert!(d.ys.contains(&c), "class {c} missing");
+        }
+    }
+
+    #[test]
+    fn drift_pairs_with_clean_stream() {
+        let clean = SynthSpec::new(32, 2, 128).noise(0.0).seed(5).generate();
+        let drifted = SynthSpec::new(32, 2, 128).noise(0.0).seed(5).drift(0.5).generate();
+        assert_eq!(clean.ys, drifted.ys);
+        // With zero noise, per-class XOR patterns are constant = drift set.
+        for c in 0..2 {
+            let rows: Vec<Vec<u8>> = clean
+                .xs
+                .iter()
+                .zip(&drifted.xs)
+                .zip(&clean.ys)
+                .filter(|(_, &y)| y == c)
+                .map(|((a, b), _)| a.iter().zip(b).map(|(x, y)| x ^ y).collect())
+                .collect();
+            assert!(rows.windows(2).all(|w| w[0] == w[1]));
+        }
+    }
+
+    #[test]
+    fn cross_language_dataset_lock() {
+        // Exact sample bytes shared with python/tests/test_data.py's
+        // generator (make_dataset(8, 2, 4, noise=0.1, seed=42,
+        // informative=0.5)) — the two implementations can never
+        // silently diverge.
+        let d = SynthSpec::new(8, 2, 4)
+            .noise(0.1)
+            .seed(42)
+            .informative(0.5)
+            .generate();
+        let flat: Vec<u8> = d.xs.iter().flatten().copied().collect();
+        assert_eq!(
+            flat,
+            vec![
+                1, 0, 0, 1, 0, 0, 1, 0, 1, 0, 0, 1, 0, 0, 1, 1, 1, 0, 1, 0, 0, 0, 1, 0, 1, 0,
+                0, 0, 0, 0, 1, 1
+            ]
+        );
+        assert_eq!(d.ys, vec![0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn informative_zero_shares_background() {
+        let d = SynthSpec::new(16, 3, 48).noise(0.0).informative(0.0).seed(5).generate();
+        // All classes identical when nothing is informative.
+        let first = &d.xs[0];
+        assert!(d.xs.iter().all(|x| x == first));
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = SynthSpec::new(8, 2, 100).generate();
+        let (tr, te) = d.split(0.8);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+    }
+
+    #[test]
+    fn literal_rows_interleave() {
+        let d = SynthSpec::new(2, 2, 4).generate();
+        let lits = d.literal_rows();
+        for (x, l) in d.xs.iter().zip(&lits) {
+            assert_eq!(l.len(), 4);
+            assert_eq!(l[0], x[0]);
+            assert_eq!(l[1], 1 - x[0]);
+        }
+    }
+}

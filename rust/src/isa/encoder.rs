@@ -1,0 +1,227 @@
+//! Model compressor: dense [`TMModel`] -> Include instruction stream.
+//!
+//! Implements the Fig 3.3 walk: class -> clause -> TA, emitting one
+//! 16-bit instruction per Include.  Empty clauses are skipped entirely
+//! (they contribute nothing at inference); empty *classes* emit the
+//! tautology-killer clause described in the module docs.
+
+use super::{Instr, IsaError, DecodeWalk, MAX_LITERALS};
+use crate::tm::model::TMModel;
+
+/// Compress a dense model into its instruction stream.
+///
+/// Panics if the model has more literals than the 12-bit offset can
+/// address (L > 4096) — such models do not fit this ISA (the paper's
+/// edge workloads top out at MNIST's 1568).
+pub fn encode(model: &TMModel) -> Vec<Instr> {
+    let l = model.shape.literals();
+    assert!(
+        l <= MAX_LITERALS,
+        "{l} literals exceed the 12-bit offset range ({MAX_LITERALS})"
+    );
+    let mut out = Vec::new();
+    let mut cc = false;
+    let mut e = false;
+    let mut first_overall = true;
+
+    for class in 0..model.shape.classes {
+        let mut class_emitted = false;
+        let mut class_first = true;
+        for clause in 0..model.shape.clauses {
+            let tas = model.clause_includes(class, clause);
+            if tas.is_empty() {
+                continue;
+            }
+            emit_clause(
+                &mut out,
+                &tas,
+                TMModel::polarity(clause) < 0,
+                &mut cc,
+                &mut e,
+                &mut first_overall,
+                &mut class_first,
+            );
+            class_emitted = true;
+        }
+        if !class_emitted {
+            // Tautology-killer: TA0 AND TA1 = f0 AND !f0 = never fires,
+            // but advances the decoder's class walk.
+            emit_clause(
+                &mut out,
+                &[0, 1],
+                false,
+                &mut cc,
+                &mut e,
+                &mut first_overall,
+                &mut class_first,
+            );
+        }
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_clause(
+    out: &mut Vec<Instr>,
+    tas: &[usize],
+    neg: bool,
+    cc: &mut bool,
+    e: &mut bool,
+    first_overall: &mut bool,
+    class_first: &mut bool,
+) {
+    // Every new clause toggles CC (except the very first instruction of
+    // the stream, which *defines* the initial CC value as false).
+    if !*first_overall {
+        *cc = !*cc;
+    }
+    // The first clause of classes 1.. toggles E.
+    if *class_first && !*first_overall {
+        *e = !*e;
+    }
+    *first_overall = false;
+    *class_first = false;
+
+    let mut prev_ta: Option<usize> = None;
+    for &ta in tas {
+        let offset = match prev_ta {
+            None => ta,
+            Some(p) => ta - p,
+        };
+        out.push(Instr::new(neg, *cc, *e, offset as u16, ta & 1 == 1));
+        prev_ta = Some(ta);
+    }
+}
+
+/// Number of instructions `encode` will emit (includes + 2 per empty
+/// class) without materializing the stream.
+pub fn instruction_count(model: &TMModel) -> usize {
+    let per_class = model.includes_per_class();
+    per_class
+        .iter()
+        .map(|&n| if n == 0 { 2 } else { n })
+        .sum()
+}
+
+/// Structural decode: per class, the ordered list of (polarity, literal
+/// indices) of every encoded clause.  Used for round-trip testing and by
+/// the coordinator to validate a stream before programming hardware.
+pub fn decode_clauses(
+    instrs: &[Instr],
+    literals: usize,
+    classes: usize,
+) -> Result<Vec<Vec<(i32, Vec<usize>)>>, IsaError> {
+    let mut out: Vec<Vec<(i32, Vec<usize>)>> = vec![Vec::new(); classes];
+    let mut walk = DecodeWalk::new(classes);
+    let mut cur: Vec<usize> = Vec::new();
+    let mut cur_pol = 1;
+    let mut started = false;
+    for (i, &ins) in instrs.iter().enumerate() {
+        let before = walk.class;
+        let (ta, commit) = walk.step(i, ins, literals)?;
+        if commit.is_some() {
+            out[before].push((cur_pol, std::mem::take(&mut cur)));
+        }
+        started = true;
+        cur_pol = ins.polarity();
+        cur.push(ta);
+    }
+    if started {
+        out[walk.class].push((cur_pol, cur));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TMShape;
+    use crate::tm::reference;
+
+    fn demo_model() -> TMModel {
+        let mut m = TMModel::empty(TMShape::synthetic(4, 3, 4));
+        // class 0: clause 0 (+) includes TA 0, 5; clause 1 (-) includes TA 2.
+        m.set_include(0, 0, 0, true);
+        m.set_include(0, 0, 5, true);
+        m.set_include(0, 1, 2, true);
+        // class 1: only clause 3 (-) includes TA 7.
+        m.set_include(1, 3, 7, true);
+        // class 2: empty (tests the tautology-killer).
+        m
+    }
+
+    #[test]
+    fn encode_counts() {
+        let m = demo_model();
+        let instrs = encode(&m);
+        // 4 includes + 2 for the empty class.
+        assert_eq!(instrs.len(), 6);
+        assert_eq!(instruction_count(&m), 6);
+    }
+
+    #[test]
+    fn structural_roundtrip() {
+        let m = demo_model();
+        let instrs = encode(&m);
+        let decoded = decode_clauses(&instrs, m.shape.literals(), m.shape.classes).unwrap();
+        assert_eq!(decoded[0], vec![(1, vec![0, 5]), (-1, vec![2])]);
+        assert_eq!(decoded[1], vec![(-1, vec![7])]);
+        // Empty class -> the tautology killer.
+        assert_eq!(decoded[2], vec![(1, vec![0, 1])]);
+    }
+
+    #[test]
+    fn first_instruction_has_zero_toggles() {
+        let m = demo_model();
+        let instrs = encode(&m);
+        assert!(!instrs[0].cc());
+        assert!(!instrs[0].e());
+    }
+
+    #[test]
+    fn semantic_equivalence_with_dense_reference() {
+        let m = demo_model();
+        let instrs = encode(&m);
+        // Every input pattern over 4 features.
+        for bits in 0..16u8 {
+            let feats: Vec<u8> = (0..4).map(|f| bits >> f & 1).collect();
+            let lits = reference::literals_from_features(&feats);
+            let dense = reference::class_sums_dense(&m, &lits);
+            let walked = super::super::decode_infer(&instrs, &lits, 3).unwrap();
+            assert_eq!(dense, walked, "input {feats:?}");
+        }
+    }
+
+    #[test]
+    fn tautology_killer_never_fires() {
+        let m = TMModel::empty(TMShape::synthetic(2, 1, 2));
+        let instrs = encode(&m);
+        assert_eq!(instrs.len(), 2);
+        for bits in 0..4u8 {
+            let feats: Vec<u8> = (0..2).map(|f| bits >> f & 1).collect();
+            let lits = reference::literals_from_features(&feats);
+            let sums = super::super::decode_infer(&instrs, &lits, 1).unwrap();
+            assert_eq!(sums, vec![0]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed the 12-bit offset range")]
+    fn oversized_model_rejected() {
+        let m = TMModel::empty(TMShape::synthetic(3000, 1, 2));
+        encode(&m);
+    }
+
+    #[test]
+    fn mnist_scale_offsets_fit() {
+        // The paper's largest workload must encode without panicking.
+        let mut m = TMModel::empty(TMShape::synthetic(784, 2, 4));
+        m.set_include(0, 0, 0, true);
+        m.set_include(0, 0, 1567, true); // max delta within a clause
+        m.set_include(1, 3, 1567, true); // max absolute anchor
+        let instrs = encode(&m);
+        let decoded = decode_clauses(&instrs, 1568, 2).unwrap();
+        assert_eq!(decoded[0][0].1, vec![0, 1567]);
+        assert_eq!(decoded[1][0].1, vec![1567]);
+    }
+}

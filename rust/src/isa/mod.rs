@@ -1,0 +1,427 @@
+//! The 16-bit Include Instruction Encoding (paper Fig 3.4).
+//!
+//! A trained TM is ~99% Excludes; inference needs only the Includes
+//! (Fig 3.2), so the model is compressed into a stream of 16-bit
+//! instructions, one per Include, walked in class -> clause -> TA order
+//! (Fig 3.3).
+//!
+//! Bit layout (MSB..LSB):
+//! ```text
+//!   15   14   13   12..1      0
+//!   P    CC   E    OFFSET    L
+//! ```
+//! * `P`  — absolute polarity of the owning clause (0 -> +1, 1 -> -1).
+//! * `CC` — toggles value whenever the owning *clause* changes.
+//! * `E`  — toggles value whenever the owning *class* changes.
+//! * `OFFSET` — 12-bit TA jump: for the first instruction of a clause the
+//!   absolute TA index within the clause; otherwise the delta from the
+//!   previous instruction's TA.  (The paper's offset is a raw running
+//!   delta; anchoring it per clause keeps it <= L <= 4096 and therefore
+//!   always representable in 12 bits — same information, bounded field.
+//!   Documented in DESIGN.md §Substitutions.)
+//! * `L`  — literal select: 0 -> feature `f`, 1 -> complement `f̄`.
+//!   Redundant with `OFFSET & 1` in the interleaved TA layout; the
+//!   decoder *checks* it, catching corrupted streams.
+//!
+//! TA order within a clause interleaves feature and complement:
+//! TA `2f` -> literal `f`, TA `2f+1` -> literal `f̄`.
+//!
+//! **Empty classes** (no Includes anywhere — never produced by real
+//! training, but reachable via runtime re-tuning) cannot be expressed by
+//! an E-toggle alone, so the encoder emits a *tautology-killer* clause
+//! for them: TA 0 and TA 1 (a literal AND its complement) in one clause,
+//! which can never fire and therefore only advances the class walk.
+
+pub mod encoder;
+
+pub use encoder::{encode, instruction_count};
+
+/// One 16-bit Include instruction.
+#[derive(Copy, Clone, PartialEq, Eq)]
+pub struct Instr(pub u16);
+
+pub const OFFSET_BITS: u32 = 12;
+pub const MAX_OFFSET: u16 = (1 << OFFSET_BITS) - 1;
+/// Largest literal count (L = 2F) the 12-bit offset can address.
+pub const MAX_LITERALS: usize = 1 << OFFSET_BITS;
+
+impl Instr {
+    pub fn new(polarity_neg: bool, cc: bool, e: bool, offset: u16, complement: bool) -> Self {
+        debug_assert!(offset <= MAX_OFFSET);
+        let mut v = 0u16;
+        v |= (polarity_neg as u16) << 15;
+        v |= (cc as u16) << 14;
+        v |= (e as u16) << 13;
+        v |= (offset & MAX_OFFSET) << 1;
+        v |= complement as u16;
+        Instr(v)
+    }
+
+    /// Clause polarity: +1 or -1.
+    #[inline]
+    pub fn polarity(self) -> i32 {
+        if self.0 >> 15 & 1 == 1 {
+            -1
+        } else {
+            1
+        }
+    }
+
+    /// Clause-change toggle bit value.
+    #[inline]
+    pub fn cc(self) -> bool {
+        self.0 >> 14 & 1 == 1
+    }
+
+    /// Class-change toggle bit value.
+    #[inline]
+    pub fn e(self) -> bool {
+        self.0 >> 13 & 1 == 1
+    }
+
+    /// 12-bit TA offset.
+    #[inline]
+    pub fn offset(self) -> u16 {
+        (self.0 >> 1) & MAX_OFFSET
+    }
+
+    /// Literal select: false -> feature, true -> complement.
+    #[inline]
+    pub fn complement(self) -> bool {
+        self.0 & 1 == 1
+    }
+}
+
+impl std::fmt::Debug for Instr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Instr[P={} CC={} E={} O={} L={}]",
+            if self.polarity() > 0 { '+' } else { '-' },
+            self.cc() as u8,
+            self.e() as u8,
+            self.offset(),
+            self.complement() as u8,
+        )
+    }
+}
+
+/// Decoder errors — a corrupted or malformed stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum IsaError {
+    /// `L` bit disagrees with TA parity.
+    LiteralParity { index: usize },
+    /// Offset walked past the literal count.
+    OffsetOverrun { index: usize, ta: usize, literals: usize },
+    /// More class changes than the header promised.
+    ClassOverrun { index: usize },
+}
+
+impl std::fmt::Display for IsaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IsaError::LiteralParity { index } => {
+                write!(f, "instruction {index}: L bit disagrees with TA parity")
+            }
+            IsaError::OffsetOverrun { index, ta, literals } => {
+                write!(f, "instruction {index}: TA {ta} out of range ({literals} literals)")
+            }
+            IsaError::ClassOverrun { index } => {
+                write!(f, "instruction {index}: class walk exceeded header class count")
+            }
+        }
+    }
+}
+impl std::error::Error for IsaError {}
+
+/// Shared decode state machine: boundary detection via CC/E toggles.
+///
+/// Used by the software walks below, the cycle-accurate core
+/// (`accel::core`), and the MCU interpreter (`baselines::mcu`): one
+/// semantics, several timing models.
+pub struct DecodeWalk {
+    classes: usize,
+    /// Current class index of the walk.
+    pub class: usize,
+    /// AND-accumulator for the current clause (bit-sliced over 32 dp).
+    pub clause_word: u32,
+    cur_ta: usize,
+    prev_cc: Option<bool>,
+    prev_e: bool,
+    prev_pol: i32,
+}
+
+/// A committed clause: (class, polarity, output word).
+pub type Commit = (usize, i32, u32);
+
+impl DecodeWalk {
+    pub fn new(classes: usize) -> Self {
+        DecodeWalk {
+            classes,
+            class: 0,
+            clause_word: u32::MAX,
+            cur_ta: 0,
+            prev_cc: None,
+            prev_e: false,
+            prev_pol: 1,
+        }
+    }
+
+    /// Advance by one instruction.  Returns the absolute TA index within
+    /// the current clause and, if this instruction *starts* a new clause,
+    /// the commit of the finished one.
+    pub fn step(
+        &mut self,
+        index: usize,
+        ins: Instr,
+        literals: usize,
+    ) -> Result<(usize, Option<Commit>), IsaError> {
+        let mut commit = None;
+        let clause_boundary = match self.prev_cc {
+            None => true, // first instruction starts the first clause
+            Some(prev) => prev != ins.cc(),
+        };
+        if clause_boundary {
+            if self.prev_cc.is_some() {
+                commit = Some((self.class, self.prev_pol, self.clause_word));
+                if self.prev_e != ins.e() {
+                    self.class += 1;
+                    if self.class >= self.classes {
+                        return Err(IsaError::ClassOverrun { index });
+                    }
+                }
+            }
+            self.clause_word = u32::MAX;
+            self.cur_ta = ins.offset() as usize;
+        } else {
+            self.cur_ta += ins.offset() as usize;
+        }
+        self.prev_cc = Some(ins.cc());
+        self.prev_e = ins.e();
+        self.prev_pol = ins.polarity();
+        if self.cur_ta >= literals {
+            return Err(IsaError::OffsetOverrun { index, ta: self.cur_ta, literals });
+        }
+        if (self.cur_ta & 1 == 1) != ins.complement() {
+            return Err(IsaError::LiteralParity { index });
+        }
+        Ok((self.cur_ta, commit))
+    }
+
+    /// Commit of the trailing clause at end-of-stream (None if the stream
+    /// was empty).
+    pub fn finish(&mut self) -> Option<Commit> {
+        self.prev_cc
+            .map(|_| (self.class, self.prev_pol, self.clause_word))
+    }
+}
+
+/// Apply one clause commit to the per-class bit-sliced sums.
+///
+/// Sparse-first: clauses are ANDs of many literals, so most commit words
+/// are zero or nearly so — the popcount loop beats a 32-lane branchless
+/// unpack on real models (measured in EXPERIMENTS.md §Perf).
+#[inline]
+pub fn apply_commit(sums: &mut [[i32; 32]], commit: Commit) {
+    let (class, pol, word) = commit;
+    if word == 0 {
+        return;
+    }
+    let row = &mut sums[class];
+    let mut w = word;
+    while w != 0 {
+        let b = w.trailing_zeros() as usize;
+        row[b] += pol;
+        w &= w - 1;
+    }
+}
+
+/// Bit-sliced walk for a 32-datapoint batch over packed *feature* words
+/// (the accelerator's Feature Memory layout, Fig 4.5): `packed[f]` bit
+/// `b` is Boolean feature `f` of datapoint `b`.  The L bit selects the
+/// complement via inversion, exactly like the Literal Select stage.
+/// Returns per-class `[i32; 32]` sums.
+///
+/// This is the semantic core of the accelerator (Fig 4.4-4.6); the
+/// cycle-accurate simulator produces identical values with timing.
+pub fn decode_infer_packed(
+    instrs: &[Instr],
+    packed_features: &[u32],
+    classes: usize,
+) -> Result<Vec<[i32; 32]>, IsaError> {
+    let literals = 2 * packed_features.len();
+    let mut sums = vec![[0i32; 32]; classes];
+    let mut walk = DecodeWalk::new(classes);
+    for (i, &ins) in instrs.iter().enumerate() {
+        let (ta, commit) = walk.step(i, ins, literals)?;
+        if let Some(c) = commit {
+            apply_commit(&mut sums, c);
+        }
+        let feat_word = packed_features[ta >> 1];
+        let word = if ins.complement() { !feat_word } else { feat_word };
+        walk.clause_word &= word;
+    }
+    if let Some(c) = walk.finish() {
+        apply_commit(&mut sums, c);
+    }
+    Ok(sums)
+}
+
+/// Software reference walk for ONE datapoint (literal vector of length
+/// 2F, as produced by `reference::literals_from_features`).  This is
+/// exactly the inner loop the MCU baselines run (REDRESS-style software
+/// inference, paper §4 Q2).
+pub fn decode_infer(
+    instrs: &[Instr],
+    literals: &[u8],
+    classes: usize,
+) -> Result<Vec<i32>, IsaError> {
+    debug_assert!(literals.len() % 2 == 0);
+    // Even literals are the features themselves; bit 0 carries the
+    // single datapoint.
+    let packed: Vec<u32> = literals.iter().step_by(2).map(|&v| v as u32).collect();
+    let sums = decode_infer_packed(instrs, &packed, classes)?;
+    Ok(sums.iter().map(|s| s[0]).collect())
+}
+
+/// Pack per-literal values of up to 32 datapoints into bit-sliced words
+/// (`lits[b][l]` -> bit `b` of word `l`) — the layout of the PJRT
+/// inference artifact's `xs_packed` argument.  Mirrors
+/// `ref.pack_literals_ref`.
+pub fn pack_literals(lits: &[Vec<u8>]) -> Vec<u32> {
+    assert!(!lits.is_empty() && lits.len() <= 32);
+    let l = lits[0].len();
+    let mut out = vec![0u32; l];
+    for (b, row) in lits.iter().enumerate() {
+        assert_eq!(row.len(), l);
+        for (w, &v) in out.iter_mut().zip(row) {
+            *w |= (v as u32 & 1) << b;
+        }
+    }
+    out
+}
+
+/// Pack per-feature values of up to 32 datapoints into bit-sliced words
+/// (`rows[b][f]` -> bit `b` of word `f`) — the accelerator's Feature
+/// Memory layout.
+pub fn pack_features(rows: &[Vec<u8>]) -> Vec<u32> {
+    pack_literals(rows) // identical packing, different row semantics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instr_field_roundtrip() {
+        let i = Instr::new(true, false, true, 1234, false);
+        assert_eq!(i.polarity(), -1);
+        assert!(!i.cc());
+        assert!(i.e());
+        assert_eq!(i.offset(), 1234);
+        assert!(!i.complement());
+    }
+
+    #[test]
+    fn instr_all_fields_max() {
+        let i = Instr::new(true, true, true, MAX_OFFSET, true);
+        assert_eq!(i.polarity(), -1);
+        assert!(i.cc() && i.e() && i.complement());
+        assert_eq!(i.offset(), MAX_OFFSET);
+    }
+
+    #[test]
+    fn walk_detects_literal_parity_corruption() {
+        // TA 2 (even) but L bit says complement.
+        let ins = Instr::new(false, false, false, 2, true);
+        let mut w = DecodeWalk::new(1);
+        assert_eq!(w.step(0, ins, 8), Err(IsaError::LiteralParity { index: 0 }));
+    }
+
+    #[test]
+    fn walk_detects_offset_overrun() {
+        let ins = Instr::new(false, false, false, 9, true);
+        let mut w = DecodeWalk::new(1);
+        assert_eq!(
+            w.step(0, ins, 8),
+            Err(IsaError::OffsetOverrun { index: 0, ta: 9, literals: 8 })
+        );
+    }
+
+    #[test]
+    fn single_instruction_single_clause() {
+        // Clause = literal 0 (feature 0). Datapoint bits pass through.
+        let ins = Instr::new(false, false, false, 0, false);
+        let packed = vec![0b1010u32, 0];
+        let sums = decode_infer_packed(&[ins], &packed, 1).unwrap();
+        assert_eq!(sums[0][0], 0);
+        assert_eq!(sums[0][1], 1);
+        assert_eq!(sums[0][3], 1);
+    }
+
+    #[test]
+    fn complement_inverts() {
+        // Clause = NOT feature 0 (TA 1).
+        let ins = Instr::new(false, false, false, 1, true);
+        let packed = vec![0b01u32];
+        let sums = decode_infer_packed(&[ins], &packed, 1).unwrap();
+        assert_eq!(sums[0][0], 0); // feature=1 -> !f=0
+        assert_eq!(sums[0][1], 1); // feature=0 -> !f=1
+    }
+
+    #[test]
+    fn cc_toggle_separates_clauses() {
+        // Two clauses over feature 0: clause0 (+) = f, clause1 (-) = f.
+        let i0 = Instr::new(false, false, false, 0, false);
+        let i1 = Instr::new(true, true, false, 0, false);
+        let packed = vec![1u32];
+        let sums = decode_infer_packed(&[i0, i1], &packed, 1).unwrap();
+        assert_eq!(sums[0][0], 0); // +1 - 1
+    }
+
+    #[test]
+    fn same_cc_same_clause_ands() {
+        // One clause including f0 AND f1: fires only when both are 1.
+        let i0 = Instr::new(false, false, false, 0, false);
+        let i1 = Instr::new(false, false, false, 2, false); // delta 2 -> TA 2
+        let packed = vec![0b11u32, 0b01u32]; // dp0: f0=1,f1=1; dp1: f0=1,f1=0
+        let sums = decode_infer_packed(&[i0, i1], &packed, 1).unwrap();
+        assert_eq!(sums[0][0], 1);
+        assert_eq!(sums[0][1], 0);
+    }
+
+    #[test]
+    fn e_toggle_advances_class() {
+        let i0 = Instr::new(false, false, false, 0, false); // class 0, clause a
+        let i1 = Instr::new(false, true, true, 0, false); // class 1 (E toggled)
+        let packed = vec![1u32];
+        let sums = decode_infer_packed(&[i0, i1], &packed, 2).unwrap();
+        assert_eq!(sums[0][0], 1);
+        assert_eq!(sums[1][0], 1);
+    }
+
+    #[test]
+    fn class_overrun_detected() {
+        let i0 = Instr::new(false, false, false, 0, false);
+        let i1 = Instr::new(false, true, true, 0, false);
+        let err = decode_infer_packed(&[i0, i1], &[1u32], 1).unwrap_err();
+        assert_eq!(err, IsaError::ClassOverrun { index: 1 });
+    }
+
+    #[test]
+    fn pack_literals_bit_layout() {
+        let rows = vec![vec![1u8, 0], vec![0u8, 1], vec![1u8, 1]];
+        let packed = pack_literals(&rows);
+        assert_eq!(packed, vec![0b101, 0b110]);
+    }
+
+    #[test]
+    fn apply_commit_popcounts() {
+        let mut sums = vec![[0i32; 32]; 2];
+        apply_commit(&mut sums, (1, -1, 0b1001));
+        assert_eq!(sums[1][0], -1);
+        assert_eq!(sums[1][3], -1);
+        assert_eq!(sums[1][1], 0);
+        assert_eq!(sums[0][0], 0);
+    }
+}

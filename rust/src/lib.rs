@@ -1,0 +1,41 @@
+//! # rttm — Runtime Tunable Tsetlin Machines for Edge Inference on eFPGAs
+//!
+//! Full-system reproduction of Rahman et al., tinyML Research Symposium 2025.
+//!
+//! The paper's artifact is an eFPGA inference accelerator for compressed
+//! (Include-only) Tsetlin Machine models that can be *re-programmed at
+//! runtime* over a data stream — new model, new architecture, new input
+//! dimensionality — without resynthesis.  This crate rebuilds that system
+//! end to end (see DESIGN.md):
+//!
+//! * [`tm`] — the Tsetlin Machine substrate: dense models, booleanization,
+//!   reference inference.
+//! * [`isa`] — the 16-bit Include-instruction encoding (Fig 3.4) and the
+//!   model compressor.
+//! * [`accel`] — the cycle-accurate accelerator simulator (Fig 4/5):
+//!   stream protocol, memories, base core, batching, multi-core.
+//! * [`model_cost`] — LUT/FF/BRAM/frequency and power/energy models
+//!   calibrated to the paper's Table 1 / Fig 6 / Fig 9.
+//! * [`baselines`] — MATADOR and MCU (ESP32, STM32 "RDRS") comparators.
+//! * [`datasets`] — synthetic generators for the paper's eight workloads
+//!   (UCI data is substituted per DESIGN.md §Substitutions) + drift.
+//! * [`trainer`] — the vanilla TM trainer (the Model Training Node's
+//!   algorithm) in pure rust, cross-checked against the JAX trainer.
+//! * [`runtime`] — PJRT executor for the AOT-compiled JAX artifacts
+//!   (`artifacts/*.hlo.txt`); Python is never on the request path.
+//! * [`coordinator`] — the Fig 8 deployment: inference service, training
+//!   node, drift monitor, live reprogramming.
+
+pub mod accel;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod isa;
+pub mod model_cost;
+pub mod runtime;
+pub mod tm;
+pub mod trainer;
+
+pub use config::TMShape;
+pub use tm::model::TMModel;

@@ -1,0 +1,434 @@
+//! rttm CLI — drive the reproduced system from the shell.
+//!
+//! Hand-rolled argument parsing (no clap in the offline vendor set).
+//!
+//! ```text
+//! rttm train   --workload emg [--backend pjrt|native] [--epochs N] [--n N]
+//! rttm infer   --workload emg [--engine base|single|multi] [--n N]
+//! rttm serve   --workload emg [--engine ...] [--requests N]
+//! rttm retune  --workload emg [--drift 0.35] [--threshold 0.8]
+//! rttm report  --workload emg          # resources + latency + energy card
+//! rttm list                            # workloads & artifact status
+//! ```
+
+use rttm::accel::core::AccelConfig;
+use rttm::baselines::{Matador, Mcu, McuKind};
+use rttm::config::Manifest;
+use rttm::coordinator::{Engine, InferenceService, RecalibrationLoop, TrainingNode};
+use rttm::datasets::workloads::{workload, workload_names};
+use rttm::model_cost::{energy::EnergyModel, estimate, estimate_multicore};
+use rttm::runtime::Runtime;
+use rttm::tm::reference;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let cmd = args[0].as_str();
+    let opts = Opts::parse(&args[1..]);
+    let result = match cmd {
+        "train" => cmd_train(&opts),
+        "infer" => cmd_infer(&opts),
+        "serve" => cmd_serve(&opts),
+        "retune" => cmd_retune(&opts),
+        "report" => cmd_report(&opts),
+        "save" => cmd_save(&opts),
+        "load" => cmd_load(&opts),
+        "tune-hyper" => cmd_tune_hyper(&opts),
+        "list" => cmd_list(),
+        "-h" | "--help" | "help" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command: {other}");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "rttm — Runtime Tunable Tsetlin Machines (paper reproduction)\n\
+         commands:\n\
+         \x20 train   --workload W [--backend pjrt|native] [--epochs N] [--n N]\n\
+         \x20 infer   --workload W [--engine base|single|multi] [--n N]\n\
+         \x20 serve   --workload W [--engine ...] [--requests N]\n\
+         \x20 retune  --workload W [--drift F] [--threshold F]\n\
+         \x20 report  --workload W\n\
+         \x20 save    --workload W --out model.rttm\n\
+         \x20 load    --model model.rttm [--n N]\n\
+         \x20 tune-hyper --workload W [--n N]\n\
+         \x20 list"
+    );
+}
+
+/// Minimal --key value parser.
+struct Opts(std::collections::BTreeMap<String, String>);
+
+impl Opts {
+    fn parse(args: &[String]) -> Self {
+        let mut map = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                let val = args.get(i + 1).cloned().unwrap_or_default();
+                map.insert(key.to_string(), val);
+                i += 2;
+            } else {
+                i += 1;
+            }
+        }
+        Opts(map)
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.0.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.0.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.0.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn engine_for(name: &str) -> anyhow::Result<Engine> {
+    Ok(match name {
+        "base" => Engine::base(),
+        "single" => Engine::single_core(),
+        "multi" => Engine::five_core(),
+        other => anyhow::bail!("unknown engine {other} (base|single|multi)"),
+    })
+}
+
+/// Engine with memory depths provisioned for a specific model (the
+/// Fig 6 deploy-time customization, applied automatically by the CLI).
+fn fitted_engine_for(name: &str, model: &rttm::TMModel) -> anyhow::Result<Engine> {
+    let need = rttm::isa::instruction_count(model)
+        .next_power_of_two()
+        .max(8192);
+    let feats = model.shape.features.next_power_of_two().max(2048);
+    Ok(match name {
+        "base" => Engine::custom(AccelConfig::base().with_depths(need, feats)),
+        "single" => Engine::custom(AccelConfig::single_core().with_depths(need.max(28672), feats.max(8192))),
+        "multi" => {
+            let per_class: Vec<usize> = model
+                .includes_per_class()
+                .into_iter()
+                .map(|v| if v == 0 { 2 } else { v })
+                .collect();
+            let heaviest = rttm::accel::MultiCore::partition(&per_class, 5)
+                .into_iter()
+                .map(|(s, e)| per_class[s..e].iter().sum::<usize>())
+                .max()
+                .unwrap_or(2);
+            let cfg = AccelConfig::multicore_core()
+                .with_depths(heaviest.next_power_of_two().max(4096), feats);
+            Engine::Multi(rttm::accel::MultiCore::new(5, cfg))
+        }
+        other => anyhow::bail!("unknown engine {other} (base|single|multi)"),
+    })
+}
+
+fn cmd_list() -> anyhow::Result<()> {
+    let man = Manifest::load_default().ok();
+    println!(
+        "{:<12} {:>8} {:>7} {:>7} {:>9}  artifacts",
+        "workload", "features", "classes", "clauses", "TAs"
+    );
+    for name in workload_names() {
+        let w = workload(name)?;
+        let art = man
+            .as_ref()
+            .map(|m| if m.configs.contains_key(name) { "yes" } else { "no" })
+            .unwrap_or("no");
+        println!(
+            "{:<12} {:>8} {:>7} {:>7} {:>9}  {}",
+            w.name,
+            w.shape.features,
+            w.shape.classes,
+            w.shape.clauses,
+            w.shape.total_tas(),
+            art
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(opts: &Opts) -> anyhow::Result<()> {
+    let mut w = workload(&opts.get("workload", "emg"))?;
+    let n = opts.get_usize("n", 1024);
+    let epochs = opts.get_usize("epochs", 6);
+    let backend = opts.get("backend", "native");
+    // Generator overrides (used by the accuracy-calibration sweep).
+    w.noise = opts.get_f64("noise", w.noise);
+    w.informative = opts.get_f64("informative", w.informative);
+    let data = w.dataset(n, 7);
+    let (train, test) = data.split(0.8);
+
+    let mut node = match backend.as_str() {
+        "native" => TrainingNode::native(w.shape.clone()),
+        "pjrt" => {
+            let man = Manifest::load_default()?;
+            let rt = Runtime::cpu()?;
+            TrainingNode::pjrt(w.shape.clone(), rt.load_train(&man, w.name)?)
+        }
+        other => anyhow::bail!("unknown backend {other} (pjrt|native)"),
+    };
+    node.epochs = epochs;
+    let t0 = std::time::Instant::now();
+    let model = node.retrain(&train)?;
+    let dt = t0.elapsed();
+    let acc = reference::accuracy(&model, &test.xs, &test.ys);
+    let instrs = rttm::isa::instruction_count(&model);
+    println!(
+        "workload={} backend={} epochs={} train_n={} test_acc={:.3} includes={} ({:.2}% of {} TAs) instructions={} wall={:.2}s",
+        w.name,
+        backend,
+        epochs,
+        train.len(),
+        acc,
+        model.include_count(),
+        100.0 * model.sparsity(),
+        w.shape.total_tas(),
+        instrs,
+        dt.as_secs_f64(),
+    );
+    Ok(())
+}
+
+fn cmd_infer(opts: &Opts) -> anyhow::Result<()> {
+    let w = workload(&opts.get("workload", "emg"))?;
+    let n = opts.get_usize("n", 512);
+    let engine_name = opts.get("engine", "base");
+    let data = w.dataset(n, 9);
+    let node = TrainingNode::native(w.shape.clone());
+    let model = node.retrain(&data)?;
+
+    let mut svc = InferenceService::new(fitted_engine_for(&engine_name, &model)?);
+    svc.reprogram(&model)?;
+    let t0 = std::time::Instant::now();
+    let acc = svc.measure_accuracy(&data.xs, &data.ys)?;
+    let wall = t0.elapsed();
+    let f = svc.engine.freq_mhz();
+    println!(
+        "workload={} engine={} n={} acc={:.3} simulated_batch_us={:.2} per_dp_us={:.3} sim_throughput={:.0}/s wall={:.1}ms",
+        w.name,
+        engine_name,
+        n,
+        acc,
+        svc.metrics.simulated_us(f) / svc.metrics.batches as f64,
+        svc.metrics.mean_latency_us(f),
+        1e6 / svc.metrics.mean_latency_us(f),
+        wall.as_secs_f64() * 1e3,
+    );
+    Ok(())
+}
+
+fn cmd_serve(opts: &Opts) -> anyhow::Result<()> {
+    let w = workload(&opts.get("workload", "emg"))?;
+    let requests = opts.get_usize("requests", 100);
+    let engine_name = opts.get("engine", "base");
+    let data = w.dataset(32 * requests, 11);
+    let node = TrainingNode::native(w.shape.clone());
+    let model = node.retrain(&w.dataset(1024, 7))?;
+
+    let (handle, join) = rttm::coordinator::server::spawn(InferenceService::new(
+        fitted_engine_for(&engine_name, &model)?,
+    ));
+    handle.program(model)?;
+    let t0 = std::time::Instant::now();
+    for chunk in data.xs.chunks(32) {
+        handle.infer(chunk.to_vec())?;
+    }
+    let wall = t0.elapsed();
+    let stats = handle.stats()?;
+    handle.shutdown();
+    join.join().ok();
+    let f = engine_for(&engine_name)?.freq_mhz();
+    println!(
+        "served {} requests ({} inferences) engine={} sim_us_total={:.1} wall_ms={:.1} host_rps={:.0}",
+        stats.batches,
+        stats.inferences,
+        engine_name,
+        stats.simulated_us(f),
+        wall.as_secs_f64() * 1e3,
+        stats.batches as f64 / wall.as_secs_f64(),
+    );
+    Ok(())
+}
+
+fn cmd_retune(opts: &Opts) -> anyhow::Result<()> {
+    let w = workload(&opts.get("workload", "emg"))?;
+    let drift = opts.get_f64("drift", 0.35);
+    let threshold = opts.get_f64("threshold", 0.75);
+    let clean = w.dataset(768, 7);
+    let drifted = w.drifted_dataset(768, 7, drift);
+
+    let node = TrainingNode::native(w.shape.clone());
+    let first = node.retrain(&clean)?;
+    let mut svc = InferenceService::new(fitted_engine_for("base", &first)?);
+    svc.reprogram(&first)?;
+
+    let looped = RecalibrationLoop::new(node, threshold);
+    let windows = vec![(clean.clone(), clean.clone()), (drifted.clone(), drifted.clone())];
+    let report = looped.run(&mut svc, &windows)?;
+    for (step, acc) in &report.probes {
+        println!("probe step={step} acc={acc:.3}");
+    }
+    for ev in &report.recalibrations {
+        println!(
+            "RECALIBRATED at step {}: {:.3} -> {:.3} (new model: {} instructions, no resynthesis)",
+            ev.step, ev.accuracy_before, ev.accuracy_after, ev.instruction_count
+        );
+    }
+    Ok(())
+}
+
+fn cmd_save(opts: &Opts) -> anyhow::Result<()> {
+    let w = workload(&opts.get("workload", "emg"))?;
+    let out = opts.get("out", "model.rttm");
+    let node = TrainingNode::native(w.shape.clone());
+    let model = node.retrain(&w.dataset(opts.get_usize("n", 1024), 7))?;
+    rttm::tm::serialize::save(&model, &out)?;
+    println!(
+        "saved {} ({} instructions, {} bytes)",
+        out,
+        rttm::isa::instruction_count(&model),
+        std::fs::metadata(&out)?.len()
+    );
+    Ok(())
+}
+
+fn cmd_load(opts: &Opts) -> anyhow::Result<()> {
+    let path = opts.get("model", "model.rttm");
+    let (shape, instrs) = rttm::tm::serialize::load(&path)?;
+    println!(
+        "loaded {}: workload={} features={} classes={} clauses={} instructions={}",
+        path, shape.name, shape.features, shape.classes, shape.clauses, instrs.len()
+    );
+    // Program a fitted accelerator straight from the stream and classify
+    // fresh data with the matching generator if the workload is known.
+    if let Ok(w) = workload(&shape.name) {
+        let n = opts.get_usize("n", 256);
+        let need = instrs.len().next_power_of_two().max(8192);
+        let mut core = rttm::accel::Core::new(AccelConfig::base().with_depths(need, 2048));
+        core.program(shape.classes, shape.clauses, &instrs)?;
+        // Fresh samples from the SAME generator universe the model was
+        // trained in (seed fixes the class prototypes): draw past the
+        // training prefix.
+        let all = w.dataset(1024 + n, 7);
+        let (_, data) = all.split(1024.0 / (1024 + n) as f64);
+        let mut correct = 0usize;
+        for (chunk_x, chunk_y) in data.xs.chunks(32).zip(data.ys.chunks(32)) {
+            let preds = core.run_rows(&chunk_x.to_vec())?;
+            correct += preds.iter().zip(chunk_y).filter(|(p, y)| p == y).count();
+        }
+        println!("accuracy on fresh {} data: {:.3}", w.name, correct as f64 / n as f64);
+    }
+    Ok(())
+}
+
+fn cmd_tune_hyper(opts: &Opts) -> anyhow::Result<()> {
+    use rttm::coordinator::hyperparam::{grid_search, SearchSpace};
+    let w = workload(&opts.get("workload", "emg"))?;
+    let data = w.dataset(opts.get_usize("n", 1024), 7);
+    let (train, valid) = data.split(0.75);
+    let space = SearchSpace::around(&w.shape);
+    let t0 = std::time::Instant::now();
+    let (trials, best) = grid_search(&w.shape, &train, &valid, &space);
+    println!(
+        "{:>5} {:>7} {:>9} {:>9} {:>13} {:>9}",
+        "T", "s", "clauses", "acc", "instructions", "score"
+    );
+    for t in trials.iter().take(8) {
+        println!(
+            "{:>5} {:>7.2} {:>9} {:>9.3} {:>13} {:>9.3}",
+            t.t, t.s, t.clauses, t.accuracy, t.instructions, t.score
+        );
+    }
+    println!(
+        "winner: {} instructions, acc {:.3} ({} trials in {:.1}s — TM search space is tiny, paper §3)",
+        rttm::isa::instruction_count(&best),
+        rttm::tm::reference::accuracy(&best, &valid.xs, &valid.ys),
+        trials.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_report(opts: &Opts) -> anyhow::Result<()> {
+    let w = workload(&opts.get("workload", "emg"))?;
+    let data = w.dataset(1024, 7);
+    let node = TrainingNode::native(w.shape.clone());
+    let model = node.retrain(&data)?;
+
+    println!("== {} ==", w.name);
+    println!(
+        "model: {} includes / {} TAs ({:.2}%), {} instructions",
+        model.include_count(),
+        w.shape.total_tas(),
+        100.0 * model.sparsity(),
+        rttm::isa::instruction_count(&model)
+    );
+
+    println!(
+        "\n{:<16} {:>7} {:>7} {:>6} {:>9} {:>12} {:>12}",
+        "config", "LUTs", "FFs", "BRAMs", "freq_MHz", "batch_us", "uJ/batch"
+    );
+    for (label, cfg, cores) in [
+        ("Base (B)", AccelConfig::base(), 1usize),
+        ("Single Core (S)", AccelConfig::single_core(), 1),
+        ("5-Core (M)", AccelConfig::multicore_core(), 5),
+    ] {
+        let res = if cores == 1 { estimate(&cfg) } else { estimate_multicore(&cfg, cores) };
+        let em = if cores == 1 {
+            EnergyModel::for_config(&cfg)
+        } else {
+            EnergyModel::for_multicore(&cfg, cores)
+        };
+        let engine_name = if cores > 1 { "multi" } else if cfg.name == "base" { "base" } else { "single" };
+        let mut svc = InferenceService::new(fitted_engine_for(engine_name, &model)?);
+        svc.reprogram(&model)?;
+        svc.infer(&data.xs[..32.min(data.len())])?;
+        let us = svc.metrics.simulated_us(cfg.freq_mhz);
+        println!(
+            "{:<16} {:>7} {:>7} {:>6} {:>9.1} {:>12.2} {:>12.3}",
+            label, res.luts, res.ffs, res.brams, res.freq_mhz, us, em.energy_uj(us)
+        );
+    }
+
+    let mtdr = Matador::synthesize(&model);
+    println!(
+        "{:<16} {:>7} {:>7} {:>6} {:>9.1} {:>12.2} {:>12.3}  (single dp, no batch)",
+        "MATADOR",
+        mtdr.luts(),
+        mtdr.ffs(),
+        mtdr.brams(),
+        mtdr.freq_mhz,
+        mtdr.single_latency_us(),
+        mtdr.single_energy_uj()
+    );
+    let esp = Mcu::program_model(McuKind::Esp32, &model);
+    println!(
+        "{:<16} {:>7} {:>7} {:>6} {:>9.1} {:>12.2} {:>12.3}  (software, batch=32x single)",
+        "ESP32",
+        0,
+        0,
+        0,
+        esp.kind.freq_mhz(),
+        esp.batch_latency_us(32),
+        esp.batch_energy_uj(32)
+    );
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Physical-cost models: the quantities the simulator cannot produce
+//! (LUTs/FFs/BRAMs/f_max and power), calibrated against the paper's own
+//! published numbers.
+//!
+//! * [`resources`] — Table 1 anchors + the Fig 6 memory-depth scaling.
+//! * [`energy`] — per-configuration power (recovered from the paper's
+//!   energy/latency pairs) and the E = P x t arithmetic of Fig 9/Table 2.
+
+pub mod energy;
+pub mod resources;
+
+pub use energy::{EnergyModel, PowerBudget};
+pub use resources::{estimate, estimate_multicore, ResourceEstimate};

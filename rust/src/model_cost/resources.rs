@@ -1,0 +1,205 @@
+//! LUT/FF/BRAM/f_max model (Table 1 anchors, Fig 6 scaling).
+//!
+//! The three deployed configurations are *anchored* to the paper's
+//! Table 1 measurements; deviations from the anchor's memory depths
+//! (the Fig 6 customization sweep) apply marginal costs:
+//!
+//! * +`LUT_PER_ADDR_BIT` LUTs and +`FF_PER_ADDR_BIT` FFs per extra
+//!   address bit (wider decoders/counters),
+//! * BRAM count from the actual memory geometry
+//!   ([`crate::accel::memory`]) plus a per-configuration interconnect
+//!   constant,
+//! * f_max derates `FREQ_DERATE_PER_BIT` per extra address bit (longer
+//!   BRAM cascade paths) — the Fig 6 "lower frequency" trend.
+
+use crate::accel::core::AccelConfig;
+use crate::accel::memory::{FeatureMemory, InstrMemory};
+
+/// Marginal LUTs per extra memory address bit.
+pub const LUT_PER_ADDR_BIT: f64 = 55.0;
+/// Marginal FFs per extra memory address bit.
+pub const FF_PER_ADDR_BIT: f64 = 90.0;
+/// Fractional f_max derate per extra address bit.
+pub const FREQ_DERATE_PER_BIT: f64 = 0.03;
+
+/// One row of Table 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceEstimate {
+    pub name: String,
+    pub chip: &'static str,
+    pub luts: u32,
+    pub ffs: u32,
+    pub brams: u32,
+    pub freq_mhz: f64,
+}
+
+/// Anchor points: the paper's Table 1 rows.
+struct Anchor {
+    chip: &'static str,
+    luts: f64,
+    ffs: f64,
+    brams_fixed: u32, // interconnect/FIFO blocks beyond the two memories
+    freq_mhz: f64,
+    instr_depth: usize,
+    feature_depth: usize,
+}
+
+fn anchor_for(cfg_name: &str) -> Anchor {
+    match cfg_name {
+        // Base (B): A7035, 1340 LUT / 2228 FF / 14 BRAM / 200 MHz.
+        "base" => Anchor {
+            chip: "A7035",
+            luts: 1340.0,
+            ffs: 2228.0,
+            brams_fixed: 2,
+            freq_mhz: 200.0,
+            instr_depth: 8192,
+            feature_depth: 2048,
+        },
+        // Single Core (S): Z7020, 3480 / 5154 / 43 / 100.
+        "single_core" => Anchor {
+            chip: "Z7020",
+            luts: 3480.0,
+            ffs: 5154.0,
+            brams_fixed: 3,
+            freq_mhz: 100.0,
+            instr_depth: 28672,
+            feature_depth: 8192,
+        },
+        // Per-core anchor inside Multi-Core (M); the multicore estimate
+        // below adds the AXIS splitter + interconnect.
+        "multicore" => Anchor {
+            chip: "Z7020",
+            luts: 1340.0,
+            ffs: 1665.0,
+            brams_fixed: 0,
+            freq_mhz: 100.0,
+            instr_depth: 4096,
+            feature_depth: 2048,
+        },
+        other => panic!("no resource anchor for config {other}"),
+    }
+}
+
+fn log2(v: usize) -> f64 {
+    (v.max(1) as f64).log2()
+}
+
+/// Estimate one core's resources at its configured memory depths.
+pub fn estimate(cfg: &AccelConfig) -> ResourceEstimate {
+    let a = anchor_for(cfg.name);
+    let delta_bits = (log2(cfg.instr_depth) - log2(a.instr_depth))
+        + (log2(cfg.feature_depth) - log2(a.feature_depth));
+    let brams = InstrMemory::new(cfg.instr_depth).brams()
+        + FeatureMemory::new(cfg.feature_depth).brams()
+        + a.brams_fixed as usize;
+    ResourceEstimate {
+        name: cfg.name.to_string(),
+        chip: a.chip,
+        luts: (a.luts + LUT_PER_ADDR_BIT * delta_bits).round().max(0.0) as u32,
+        ffs: (a.ffs + FF_PER_ADDR_BIT * delta_bits).round().max(0.0) as u32,
+        brams: brams as u32,
+        freq_mhz: a.freq_mhz * (1.0 - FREQ_DERATE_PER_BIT * delta_bits.max(0.0)),
+    }
+}
+
+/// The multi-core build: n cores + AXIS splitter/interconnect
+/// (anchored to Table 1's M row: 9814 / 10909 / 43 at 5 cores).
+pub fn estimate_multicore(per_core: &AccelConfig, n: usize) -> ResourceEstimate {
+    let core = estimate(per_core);
+    // Anchored so 5 x multicore_core + overhead = Table 1's M row.
+    let overhead_luts = 9814.0 - 5.0 * 1340.0; // AXIS splitter + merge
+    let overhead_ffs = 10909.0 - 5.0 * 1665.0;
+    let overhead_brams = 3u32;
+    ResourceEstimate {
+        name: format!("multicore_x{n}"),
+        chip: core.chip,
+        luts: (core.luts as f64 * n as f64 + overhead_luts).round() as u32,
+        ffs: (core.ffs as f64 * n as f64 + overhead_ffs).round() as u32,
+        brams: core.brams * n as u32 + overhead_brams,
+        freq_mhz: core.freq_mhz,
+    }
+}
+
+/// The Fig 6 sweep: resources/f_max of the base build across feature- and
+/// instruction-memory depths.
+pub fn memory_depth_sweep(depths: &[(usize, usize)]) -> Vec<(usize, usize, ResourceEstimate)> {
+    depths
+        .iter()
+        .map(|&(di, df)| {
+            let cfg = AccelConfig::base().with_depths(di, df);
+            (di, df, estimate(&cfg))
+        })
+        .collect()
+}
+
+/// Minimum memory depths a workload needs (the Fig 6 vertical lines):
+/// instruction entries for the compressed model, feature words for one
+/// batch.
+pub fn min_depths(model: &crate::tm::model::TMModel) -> (usize, usize) {
+    (crate::isa::instruction_count(model), model.shape.features)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_anchor_reproduces_table1() {
+        let r = estimate(&AccelConfig::base());
+        assert_eq!((r.luts, r.ffs, r.brams), (1340, 2228, 14));
+        assert_eq!(r.freq_mhz, 200.0);
+        assert_eq!(r.chip, "A7035");
+    }
+
+    #[test]
+    fn single_core_anchor_reproduces_table1() {
+        let cfg = AccelConfig::single_core();
+        let r = estimate(&cfg);
+        assert_eq!((r.luts, r.ffs), (3480, 5154));
+        assert_eq!(r.freq_mhz, 100.0);
+    }
+
+    #[test]
+    fn five_core_anchor_reproduces_table1() {
+        let r = estimate_multicore(&AccelConfig::multicore_core(), 5);
+        assert_eq!((r.luts, r.ffs), (9814, 10909));
+    }
+
+    #[test]
+    fn deeper_memory_costs_resources_and_frequency() {
+        let base = estimate(&AccelConfig::base());
+        let deep = estimate(&AccelConfig::base().with_depths(8192 * 4, 2048 * 4));
+        assert!(deep.luts > base.luts);
+        assert!(deep.ffs > base.ffs);
+        assert!(deep.brams > base.brams);
+        assert!(deep.freq_mhz < base.freq_mhz);
+    }
+
+    #[test]
+    fn shallower_memory_saves_luts() {
+        let base = estimate(&AccelConfig::base());
+        let shallow = estimate(&AccelConfig::base().with_depths(1024, 512));
+        assert!(shallow.luts < base.luts);
+        assert!(shallow.brams < base.brams);
+    }
+
+    #[test]
+    fn sweep_is_monotone_in_depth() {
+        let sweep = memory_depth_sweep(&[(1024, 512), (4096, 1024), (16384, 4096)]);
+        for w in sweep.windows(2) {
+            assert!(w[1].2.luts >= w[0].2.luts);
+            assert!(w[1].2.freq_mhz <= w[0].2.freq_mhz);
+        }
+    }
+
+    #[test]
+    fn min_depths_track_model_size() {
+        let mut m = crate::tm::model::TMModel::empty(crate::TMShape::synthetic(8, 2, 4));
+        m.set_include(0, 0, 0, true);
+        m.set_include(1, 1, 3, true);
+        let (di, df) = min_depths(&m);
+        assert_eq!(di, 2);
+        assert_eq!(df, 8);
+    }
+}

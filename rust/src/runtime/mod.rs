@@ -1,0 +1,195 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX artifacts.
+//!
+//! This is the only bridge between the rust system and the L2/L1 compute
+//! graphs.  Artifacts are HLO *text* (see `python/compile/aot.py` for
+//! why), compiled once per shape at startup by the PJRT CPU client and
+//! then executed from the coordinator's hot path — Python never runs at
+//! request time.
+//!
+//! Two typed executables:
+//! * [`InferExecutable`] — `tm_infer_<cfg>.hlo.txt`: the packed bitwise
+//!   inference graph (Pallas clause kernel + class sums).  Used as the
+//!   golden model the accelerator simulator is verified against, and as
+//!   the training node's evaluation engine.
+//! * [`TrainExecutable`] — `tm_train_<cfg>.hlo.txt`: one batch of vanilla
+//!   TM feedback.  This is what the Model Training Node (Fig 8) runs.
+
+use crate::config::{Manifest, TMShape};
+use crate::tm::model::TMModel;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Shared PJRT CPU client.  Create once, clone freely (the underlying
+/// client is reference-counted by the xla crate).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, hlo_path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(hlo_path)
+            .map_err(wrap)
+            .with_context(|| format!("parsing {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(wrap)
+    }
+
+    /// Load + compile the inference artifact for `cfg`.
+    pub fn load_infer(&self, manifest: &Manifest, cfg: &str) -> Result<InferExecutable> {
+        let entry = manifest.entry(cfg)?;
+        let exe = self.compile(&manifest.infer_hlo_path(cfg)?)?;
+        Ok(InferExecutable { exe, shape: entry.shape.clone() })
+    }
+
+    /// Load + compile the train-step artifact for `cfg`.
+    pub fn load_train(&self, manifest: &Manifest, cfg: &str) -> Result<TrainExecutable> {
+        let entry = manifest.entry(cfg)?;
+        let exe = self.compile(&manifest.train_hlo_path(cfg)?)?;
+        Ok(TrainExecutable { exe, shape: entry.shape.clone() })
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+/// Result of one packed-batch inference: per-class sums and argmax
+/// predictions for 32 bit-sliced datapoints.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferOut {
+    /// `[classes][32]`
+    pub class_sums: Vec<Vec<i32>>,
+    /// `[32]`
+    pub preds: Vec<i32>,
+}
+
+/// Compiled packed-inference graph.
+pub struct InferExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub shape: TMShape,
+}
+
+impl InferExecutable {
+    /// Run one 32-datapoint bit-sliced batch.
+    ///
+    /// `inc_mask` is `u32[K*L]` row-major (0 / 0xFFFF_FFFF); `xs_packed`
+    /// is `u32[L]`.
+    pub fn infer_packed(&self, inc_mask: &[u32], xs_packed: &[u32]) -> Result<InferOut> {
+        let k = self.shape.total_clauses();
+        let l = self.shape.literals();
+        anyhow::ensure!(inc_mask.len() == k * l, "inc_mask len {} != {}", inc_mask.len(), k * l);
+        anyhow::ensure!(xs_packed.len() == l, "xs_packed len {} != {}", xs_packed.len(), l);
+        let mask = xla::Literal::vec1(inc_mask)
+            .reshape(&[k as i64, l as i64])
+            .map_err(wrap)?;
+        let xs = xla::Literal::vec1(xs_packed);
+        let result = self.exe.execute::<xla::Literal>(&[mask, xs]).map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let (sums, preds) = result.to_tuple2().map_err(wrap)?;
+        let flat: Vec<i32> = sums.to_vec().map_err(wrap)?;
+        let class_sums = flat.chunks(32).map(|c| c.to_vec()).collect();
+        let preds: Vec<i32> = preds.to_vec().map_err(wrap)?;
+        Ok(InferOut { class_sums, preds })
+    }
+
+    /// Convenience: run a dense model over one batch of literal rows
+    /// (<= 32 datapoints), returning predictions for the first
+    /// `lits.len()` lanes.
+    pub fn infer_rows(&self, model: &TMModel, lits: &[Vec<u8>]) -> Result<Vec<usize>> {
+        let n = lits.len();
+        anyhow::ensure!(n <= 32, "at most 32 datapoints per packed batch");
+        let packed = crate::isa::pack_literals(lits);
+        let out = self.infer_packed(&model.to_packed_mask(), &packed)?;
+        Ok(out.preds[..n].iter().map(|&p| p as usize).collect())
+    }
+}
+
+/// Compiled train-step graph (one batch of feedback).
+pub struct TrainExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub shape: TMShape,
+}
+
+impl TrainExecutable {
+    /// Apply one batch of feedback, returning the updated TA states.
+    ///
+    /// `ta_state` is `i32[M*C*L]` row-major; `x_lit` is `i32[B*L]` literal
+    /// rows; `ys` class labels; `seed` two u32 words of PRNG key.
+    pub fn step(
+        &self,
+        ta_state: &[i32],
+        x_lit: &[i32],
+        ys: &[i32],
+        seed: [i32; 2],
+    ) -> Result<Vec<i32>> {
+        let (m, c, l, b) = (
+            self.shape.classes,
+            self.shape.clauses,
+            self.shape.literals(),
+            self.shape.train_batch,
+        );
+        anyhow::ensure!(ta_state.len() == m * c * l, "ta_state len");
+        anyhow::ensure!(x_lit.len() == b * l, "x_lit len {} != {}", x_lit.len(), b * l);
+        anyhow::ensure!(ys.len() == b, "ys len");
+        let ta = xla::Literal::vec1(ta_state)
+            .reshape(&[m as i64, c as i64, l as i64])
+            .map_err(wrap)?;
+        let x = xla::Literal::vec1(x_lit)
+            .reshape(&[b as i64, l as i64])
+            .map_err(wrap)?;
+        let y = xla::Literal::vec1(ys);
+        let s = xla::Literal::vec1(&seed[..]);
+        let result = self.exe.execute::<xla::Literal>(&[ta, x, y, s]).map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let out = result.to_tuple1().map_err(wrap)?;
+        out.to_vec().map_err(wrap)
+    }
+
+    /// Train over a dataset for `epochs`, starting from fresh states.
+    pub fn fit(&self, xs: &[Vec<u8>], ys: &[usize], epochs: usize, seed: u64) -> Result<Vec<i32>> {
+        let b = self.shape.train_batch;
+        let l = self.shape.literals();
+        let mut rng = crate::datasets::synth::XorShift64Star::new(seed);
+        let mut ta = init_ta_states(&self.shape, &mut rng);
+        let mut step_id: i32 = 0;
+        for _ in 0..epochs {
+            for chunk in xs.chunks(b).zip(ys.chunks(b)) {
+                let (cx, cy) = chunk;
+                if cx.len() < b {
+                    break; // drop ragged tail (static shapes)
+                }
+                let mut x_lit = Vec::with_capacity(b * l);
+                for row in cx {
+                    let lits = crate::tm::reference::literals_from_features(row);
+                    x_lit.extend(lits.iter().map(|&v| v as i32));
+                }
+                let ysb: Vec<i32> = cy.iter().map(|&y| y as i32).collect();
+                ta = self.step(&ta, &x_lit, &ysb, [seed as i32, step_id])?;
+                step_id += 1;
+            }
+        }
+        Ok(ta)
+    }
+
+    pub fn model_from_states(&self, ta: &[i32]) -> TMModel {
+        TMModel::from_ta_states(self.shape.clone(), ta)
+    }
+}
+
+/// Fresh TA states just below the Include boundary.
+pub fn init_ta_states(shape: &TMShape, rng: &mut crate::datasets::synth::XorShift64Star) -> Vec<i32> {
+    (0..shape.total_tas())
+        .map(|_| shape.n_states - 1 - i32::from(rng.next_f64() < 0.5))
+        .collect()
+}

@@ -1,0 +1,141 @@
+//! Booleanization: continuous sensor channels -> Boolean features.
+//!
+//! The paper (§1, Fig 2) booleanizes edge inputs before the TM sees them.
+//! Two encoders, matching what MATADOR/REDRESS use for the evaluated
+//! workloads:
+//!
+//! * [`ThresholdEncoder`] — 1 bit/channel (mean split), used for image
+//!   pixels (MNIST-style).
+//! * [`ThermometerEncoder`] — `bits` quantile thresholds per channel;
+//!   feature b is 1 iff value >= threshold b.  Used for multivariate
+//!   sensor data (EMG, HAR, gas, drives).
+
+/// Per-channel quantile thermometer encoder fitted on training data.
+#[derive(Debug, Clone)]
+pub struct ThermometerEncoder {
+    /// `thresholds[ch][b]`, ascending per channel.
+    pub thresholds: Vec<Vec<f64>>,
+    pub bits: usize,
+}
+
+impl ThermometerEncoder {
+    /// Fit per-channel quantile thresholds on raw samples `[n][channels]`.
+    pub fn fit(samples: &[Vec<f64>], bits: usize) -> Self {
+        assert!(bits >= 1);
+        assert!(!samples.is_empty());
+        let channels = samples[0].len();
+        let mut thresholds = Vec::with_capacity(channels);
+        for ch in 0..channels {
+            let mut vals: Vec<f64> = samples.iter().map(|s| s[ch]).collect();
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let t = (1..=bits)
+                .map(|b| {
+                    // Quantile b/(bits+1) keeps bit populations balanced.
+                    let q = b as f64 / (bits as f64 + 1.0);
+                    let pos = q * (vals.len() - 1) as f64;
+                    let lo = pos.floor() as usize;
+                    let hi = pos.ceil() as usize;
+                    let frac = pos - lo as f64;
+                    vals[lo] * (1.0 - frac) + vals[hi] * frac
+                })
+                .collect();
+            thresholds.push(t);
+        }
+        ThermometerEncoder { thresholds, bits }
+    }
+
+    pub fn features_out(&self) -> usize {
+        self.thresholds.len() * self.bits
+    }
+
+    /// Encode one sample: `channels * bits` Boolean features.
+    pub fn encode(&self, sample: &[f64]) -> Vec<u8> {
+        assert_eq!(sample.len(), self.thresholds.len());
+        let mut out = Vec::with_capacity(self.features_out());
+        for (v, ths) in sample.iter().zip(&self.thresholds) {
+            for th in ths {
+                out.push(u8::from(*v >= *th));
+            }
+        }
+        out
+    }
+}
+
+/// Mean-split threshold encoder: 1 bit per channel.
+#[derive(Debug, Clone)]
+pub struct ThresholdEncoder {
+    pub means: Vec<f64>,
+}
+
+impl ThresholdEncoder {
+    pub fn fit(samples: &[Vec<f64>]) -> Self {
+        assert!(!samples.is_empty());
+        let channels = samples[0].len();
+        let mut means = vec![0.0; channels];
+        for s in samples {
+            for (m, v) in means.iter_mut().zip(s) {
+                *m += v;
+            }
+        }
+        for m in &mut means {
+            *m /= samples.len() as f64;
+        }
+        ThresholdEncoder { means }
+    }
+
+    pub fn encode(&self, sample: &[f64]) -> Vec<u8> {
+        sample
+            .iter()
+            .zip(&self.means)
+            .map(|(v, m)| u8::from(v >= m))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(n: usize) -> Vec<Vec<f64>> {
+        (0..n).map(|i| vec![i as f64]).collect()
+    }
+
+    #[test]
+    fn thermometer_monotone_in_value() {
+        let enc = ThermometerEncoder::fit(&ramp(100), 4);
+        let lo = enc.encode(&[0.0]);
+        let hi = enc.encode(&[99.0]);
+        assert_eq!(lo, vec![0, 0, 0, 0]);
+        assert_eq!(hi, vec![1, 1, 1, 1]);
+        // Thermometer property: once 0, all later bits 0.
+        let mid = enc.encode(&[50.0]);
+        let first_zero = mid.iter().position(|&b| b == 0).unwrap_or(4);
+        assert!(mid[first_zero..].iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn thermometer_quantiles_balanced() {
+        let enc = ThermometerEncoder::fit(&ramp(1000), 3);
+        // Quantiles at 25/50/75% of a uniform ramp.
+        let t = &enc.thresholds[0];
+        assert!((t[0] - 249.75).abs() < 1.0);
+        assert!((t[1] - 499.5).abs() < 1.0);
+        assert!((t[2] - 749.25).abs() < 1.0);
+    }
+
+    #[test]
+    fn thermometer_feature_count() {
+        let samples = vec![vec![0.0, 1.0, 2.0]; 10];
+        let enc = ThermometerEncoder::fit(&samples, 8);
+        assert_eq!(enc.features_out(), 24);
+        assert_eq!(enc.encode(&[0.0, 1.0, 2.0]).len(), 24);
+    }
+
+    #[test]
+    fn threshold_mean_split() {
+        let enc = ThresholdEncoder::fit(&ramp(10));
+        assert_eq!(enc.encode(&[0.0]), vec![0]);
+        assert_eq!(enc.encode(&[9.0]), vec![1]);
+        assert_eq!(enc.encode(&[4.5]), vec![1]); // >= mean
+    }
+}

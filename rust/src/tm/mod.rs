@@ -1,0 +1,9 @@
+//! Tsetlin Machine substrate: models, booleanization, reference inference.
+
+pub mod booleanize;
+pub mod model;
+pub mod reference;
+pub mod serialize;
+
+pub use model::TMModel;
+pub use reference::{class_sums_dense, predict_dense};

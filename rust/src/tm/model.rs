@@ -1,0 +1,190 @@
+//! Dense TM model: the Include/Exclude action of every TA.
+//!
+//! For inference only the 1-bit action matters (paper §2): a trained model
+//! is fully described by its include set.  This struct is the bridge
+//! between every representation in the system:
+//!
+//! * the trainer's TA states (`from_ta_states`),
+//! * the PJRT inference artifact's `u32` include mask (`to_packed_mask`),
+//! * the ISA compressor (`isa::encode`), and
+//! * the reference/simulator inference paths.
+
+use crate::config::TMShape;
+
+/// Dense include map, row-major `[class][clause][literal]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TMModel {
+    pub shape: TMShape,
+    include: Vec<bool>,
+}
+
+impl TMModel {
+    pub fn empty(shape: TMShape) -> Self {
+        let n = shape.total_tas();
+        TMModel {
+            shape,
+            include: vec![false; n],
+        }
+    }
+
+    /// Build from trainer TA states (include iff state >= N).
+    pub fn from_ta_states(shape: TMShape, states: &[i32]) -> Self {
+        assert_eq!(states.len(), shape.total_tas());
+        let n = shape.n_states;
+        TMModel {
+            include: states.iter().map(|&s| s >= n).collect(),
+            shape,
+        }
+    }
+
+    #[inline]
+    fn idx(&self, class: usize, clause: usize, literal: usize) -> usize {
+        debug_assert!(class < self.shape.classes);
+        debug_assert!(clause < self.shape.clauses);
+        debug_assert!(literal < self.shape.literals());
+        (class * self.shape.clauses + clause) * self.shape.literals() + literal
+    }
+
+    #[inline]
+    pub fn include(&self, class: usize, clause: usize, literal: usize) -> bool {
+        self.include[self.idx(class, clause, literal)]
+    }
+
+    pub fn set_include(&mut self, class: usize, clause: usize, literal: usize, v: bool) {
+        let i = self.idx(class, clause, literal);
+        self.include[i] = v;
+    }
+
+    /// Clause polarity: +1 for even clause index, -1 for odd (restarts per
+    /// class — matches the ISA's +/- bit and the L1 class-sum kernel).
+    #[inline]
+    pub fn polarity(clause: usize) -> i32 {
+        1 - 2 * (clause as i32 & 1)
+    }
+
+    /// Includes of one clause as literal indices (the compressed walk of
+    /// Fig 3.3 visits exactly these, in order).
+    pub fn clause_includes(&self, class: usize, clause: usize) -> Vec<usize> {
+        let l = self.shape.literals();
+        let base = self.idx(class, clause, 0);
+        (0..l).filter(|&lit| self.include[base + lit]).collect()
+    }
+
+    /// Total include count (the paper's ~1% sparsity claim: ~17k of
+    /// 3,136,000 for MNIST).
+    pub fn include_count(&self) -> usize {
+        self.include.iter().filter(|&&b| b).count()
+    }
+
+    /// Include fraction in [0,1].
+    pub fn sparsity(&self) -> f64 {
+        self.include_count() as f64 / self.include.len() as f64
+    }
+
+    /// Include counts per class — drives multi-core load balance (Fig 7).
+    pub fn includes_per_class(&self) -> Vec<usize> {
+        (0..self.shape.classes)
+            .map(|m| {
+                (0..self.shape.clauses)
+                    .map(|c| self.clause_includes(m, c).len())
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// The `u32[K, L]` include mask consumed by the PJRT inference
+    /// artifact: 0xFFFF_FFFF where Include, 0 where Exclude, class-major.
+    pub fn to_packed_mask(&self) -> Vec<u32> {
+        self.include
+            .iter()
+            .map(|&b| if b { u32::MAX } else { 0 })
+            .collect()
+    }
+
+    /// Restrict the model to a contiguous class range (multi-core sharding:
+    /// each core receives the instructions of its classes only, Fig 7).
+    pub fn slice_classes(&self, range: std::ops::Range<usize>) -> TMModel {
+        assert!(range.end <= self.shape.classes);
+        let l = self.shape.literals();
+        let per_class = self.shape.clauses * l;
+        let mut shape = self.shape.clone();
+        shape.classes = range.len();
+        shape.name = format!("{}[{}..{}]", self.shape.name, range.start, range.end);
+        TMModel {
+            shape,
+            include: self.include[range.start * per_class..range.end * per_class].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> TMModel {
+        let mut m = TMModel::empty(TMShape::synthetic(3, 2, 4));
+        m.set_include(0, 0, 1, true);
+        m.set_include(0, 3, 5, true);
+        m.set_include(1, 2, 0, true);
+        m
+    }
+
+    #[test]
+    fn include_roundtrip() {
+        let m = tiny();
+        assert!(m.include(0, 0, 1));
+        assert!(m.include(0, 3, 5));
+        assert!(m.include(1, 2, 0));
+        assert!(!m.include(0, 0, 0));
+        assert_eq!(m.include_count(), 3);
+    }
+
+    #[test]
+    fn polarity_alternates_from_positive() {
+        assert_eq!(TMModel::polarity(0), 1);
+        assert_eq!(TMModel::polarity(1), -1);
+        assert_eq!(TMModel::polarity(2), 1);
+    }
+
+    #[test]
+    fn from_ta_states_threshold() {
+        let shape = TMShape::synthetic(2, 2, 2);
+        let mut states = vec![127i32; shape.total_tas()];
+        states[0] = 128;
+        states[5] = 255;
+        let m = TMModel::from_ta_states(shape, &states);
+        assert_eq!(m.include_count(), 2);
+        assert!(m.include(0, 0, 0));
+    }
+
+    #[test]
+    fn packed_mask_values() {
+        let m = tiny();
+        let mask = m.to_packed_mask();
+        assert_eq!(mask.len(), m.shape.total_tas());
+        assert_eq!(mask[1], u32::MAX); // class 0, clause 0, literal 1
+        assert_eq!(mask[0], 0);
+    }
+
+    #[test]
+    fn class_slice_keeps_rows() {
+        let m = tiny();
+        let s = m.slice_classes(1..2);
+        assert_eq!(s.shape.classes, 1);
+        assert!(s.include(0, 2, 0));
+        assert_eq!(s.include_count(), 1);
+    }
+
+    #[test]
+    fn includes_per_class_counts() {
+        let m = tiny();
+        assert_eq!(m.includes_per_class(), vec![2, 1]);
+    }
+
+    #[test]
+    fn sparsity_fraction() {
+        let m = tiny();
+        let total = m.shape.total_tas() as f64;
+        assert!((m.sparsity() - 3.0 / total).abs() < 1e-12);
+    }
+}

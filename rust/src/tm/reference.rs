@@ -1,0 +1,144 @@
+//! Dense reference inference — the golden semantics every other path
+//! (ISA-compressed simulator, PJRT packed artifact, MCU interpreter) must
+//! reproduce exactly.
+//!
+//! Mirrors `python/compile/kernels/ref.py` (`clause_eval_dense_ref` with
+//! inference semantics + per-class alternating polarity).
+
+use super::model::TMModel;
+
+/// Literal vector (len 2F, values 0/1) from a booleanized feature vector.
+/// Interleaved: literal 2f = x_f, literal 2f+1 = !x_f.
+pub fn literals_from_features(features: &[u8]) -> Vec<u8> {
+    let mut lit = Vec::with_capacity(features.len() * 2);
+    for &f in features {
+        debug_assert!(f <= 1);
+        lit.push(f);
+        lit.push(1 - f);
+    }
+    lit
+}
+
+/// One clause output with inference semantics (empty clause -> 0).
+pub fn clause_output(model: &TMModel, class: usize, clause: usize, literals: &[u8]) -> bool {
+    let mut any = false;
+    for lit in 0..model.shape.literals() {
+        if model.include(class, clause, lit) {
+            any = true;
+            if literals[lit] == 0 {
+                return false;
+            }
+        }
+    }
+    any
+}
+
+/// Per-class sums for one datapoint (Fig 3.1).
+pub fn class_sums_dense(model: &TMModel, literals: &[u8]) -> Vec<i32> {
+    assert_eq!(literals.len(), model.shape.literals());
+    (0..model.shape.classes)
+        .map(|m| {
+            (0..model.shape.clauses)
+                .map(|c| {
+                    if clause_output(model, m, c, literals) {
+                        TMModel::polarity(c)
+                    } else {
+                        0
+                    }
+                })
+                .sum()
+        })
+        .collect()
+}
+
+/// argmax class (ties -> lowest index, matching jnp.argmax).
+pub fn predict_dense(model: &TMModel, literals: &[u8]) -> usize {
+    argmax(&class_sums_dense(model, literals))
+}
+
+/// Accuracy over a booleanized dataset (features, not literals).
+pub fn accuracy(model: &TMModel, xs: &[Vec<u8>], ys: &[usize]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let correct = xs
+        .iter()
+        .zip(ys)
+        .filter(|(x, &y)| predict_dense(model, &literals_from_features(x)) == y)
+        .count();
+    correct as f64 / xs.len().max(1) as f64
+}
+
+/// First-max argmax, identical tie-breaking to `jnp.argmax`.
+pub fn argmax(sums: &[i32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in sums.iter().enumerate() {
+        if v > sums[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TMShape;
+
+    fn model_and() -> TMModel {
+        // One class, two clauses. Clause 0 (+) = x0 AND !x1; clause 1 (-)
+        // = x1.
+        let mut m = TMModel::empty(TMShape::synthetic(2, 1, 2));
+        m.set_include(0, 0, 0, true); // literal 0 = x0
+        m.set_include(0, 0, 3, true); // literal 3 = !x1
+        m.set_include(0, 1, 2, true); // literal 2 = x1
+        m
+    }
+
+    #[test]
+    fn literals_interleaved() {
+        assert_eq!(literals_from_features(&[1, 0]), vec![1, 0, 0, 1]);
+    }
+
+    #[test]
+    fn clause_and_semantics() {
+        let m = model_and();
+        let lit = literals_from_features(&[1, 0]);
+        assert!(clause_output(&m, 0, 0, &lit)); // x0=1, x1=0
+        assert!(!clause_output(&m, 0, 1, &lit));
+        let lit = literals_from_features(&[1, 1]);
+        assert!(!clause_output(&m, 0, 0, &lit));
+        assert!(clause_output(&m, 0, 1, &lit));
+    }
+
+    #[test]
+    fn empty_clause_is_zero_at_inference() {
+        let m = TMModel::empty(TMShape::synthetic(2, 1, 2));
+        let lit = literals_from_features(&[1, 1]);
+        assert!(!clause_output(&m, 0, 0, &lit));
+        assert_eq!(class_sums_dense(&m, &lit), vec![0]);
+    }
+
+    #[test]
+    fn polarity_signs_sums() {
+        let m = model_and();
+        // x0=1,x1=0: only +clause fires -> +1.
+        assert_eq!(class_sums_dense(&m, &literals_from_features(&[1, 0])), vec![1]);
+        // x0=1,x1=1: only -clause fires -> -1.
+        assert_eq!(class_sums_dense(&m, &literals_from_features(&[1, 1])), vec![-1]);
+    }
+
+    #[test]
+    fn argmax_first_max_tiebreak() {
+        assert_eq!(argmax(&[3, 5, 5, 1]), 1);
+        assert_eq!(argmax(&[0, 0]), 0);
+        assert_eq!(argmax(&[-5, -2, -2]), 1);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let m = model_and();
+        // Model has one class; everything predicts class 0.
+        let xs = vec![vec![1, 0], vec![0, 1]];
+        let ys = vec![0usize, 0];
+        assert_eq!(accuracy(&m, &xs, &ys), 1.0);
+    }
+}

@@ -1,0 +1,239 @@
+//! `.rttm` model files: the portable artifact the Model Training Node
+//! hands to deployments (and what a field tool would flash over the
+//! network).  Contains the shape and the *compressed instruction
+//! stream* — the dense model is redundant (paper §2: includes are the
+//! model).
+//!
+//! Layout (little endian):
+//! ```text
+//! magic   "RTTM"            4 B
+//! version u16               (currently 1)
+//! name    u16 len + bytes
+//! features/classes/clauses  u32 x 3
+//! T       i32
+//! s_milli u32               (s * 1000, fixed point)
+//! count   u32               instruction count
+//! instrs  count x u16
+//! crc32   u32               over everything above
+//! ```
+
+use crate::config::TMShape;
+use crate::isa::{self, Instr};
+use crate::tm::model::TMModel;
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 4] = b"RTTM";
+const VERSION: u16 = 1;
+
+/// Errors loading a model file.
+#[derive(Debug, thiserror::Error)]
+pub enum FileError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("not an RTTM file")]
+    BadMagic,
+    #[error("unsupported version {0}")]
+    BadVersion(u16),
+    #[error("checksum mismatch (corrupted file)")]
+    BadCrc,
+    #[error("malformed stream: {0}")]
+    BadStream(#[from] isa::IsaError),
+}
+
+/// CRC-32 (IEEE, bitwise — cold path, no table needed).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Serialize a model (shape + compressed stream) to bytes.
+pub fn to_bytes(model: &TMModel) -> Vec<u8> {
+    let instrs = isa::encode(model);
+    let mut buf = Vec::with_capacity(32 + model.shape.name.len() + 2 * instrs.len());
+    buf.extend_from_slice(MAGIC);
+    put_u16(&mut buf, VERSION);
+    put_u16(&mut buf, model.shape.name.len() as u16);
+    buf.extend_from_slice(model.shape.name.as_bytes());
+    put_u32(&mut buf, model.shape.features as u32);
+    put_u32(&mut buf, model.shape.classes as u32);
+    put_u32(&mut buf, model.shape.clauses as u32);
+    buf.extend_from_slice(&model.shape.t.to_le_bytes());
+    put_u32(&mut buf, (model.shape.s * 1000.0).round() as u32);
+    put_u32(&mut buf, instrs.len() as u32);
+    for i in &instrs {
+        put_u16(&mut buf, i.0);
+    }
+    let crc = crc32(&buf);
+    put_u32(&mut buf, crc);
+    buf
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FileError> {
+        if self.pos + n > self.data.len() {
+            return Err(FileError::BadMagic);
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u16(&mut self) -> Result<u16, FileError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, FileError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn i32(&mut self) -> Result<i32, FileError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+/// Parse bytes back into (shape, instruction stream), verifying CRC and
+/// stream well-formedness.
+pub fn from_bytes(data: &[u8]) -> Result<(TMShape, Vec<Instr>), FileError> {
+    if data.len() < 8 {
+        return Err(FileError::BadMagic);
+    }
+    let (body, crc_bytes) = data.split_at(data.len() - 4);
+    let stored = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    if crc32(body) != stored {
+        return Err(FileError::BadCrc);
+    }
+    let mut c = Cursor { data: body, pos: 0 };
+    if c.take(4)? != MAGIC {
+        return Err(FileError::BadMagic);
+    }
+    let version = c.u16()?;
+    if version != VERSION {
+        return Err(FileError::BadVersion(version));
+    }
+    let name_len = c.u16()? as usize;
+    let name = String::from_utf8_lossy(c.take(name_len)?).into_owned();
+    let features = c.u32()? as usize;
+    let classes = c.u32()? as usize;
+    let clauses = c.u32()? as usize;
+    let t = c.i32()?;
+    let s = c.u32()? as f64 / 1000.0;
+    let count = c.u32()? as usize;
+    let mut instrs = Vec::with_capacity(count);
+    for _ in 0..count {
+        instrs.push(Instr(c.u16()?));
+    }
+    let shape = TMShape {
+        name,
+        features,
+        classes,
+        clauses,
+        t,
+        s,
+        train_batch: 32,
+        n_states: 128,
+    };
+    // Validate the stream decodes within this shape.
+    isa::encoder::decode_clauses(&instrs, shape.literals(), shape.classes)?;
+    Ok((shape, instrs))
+}
+
+/// Write a model file.
+pub fn save(model: &TMModel, path: impl AsRef<std::path::Path>) -> Result<(), FileError> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&to_bytes(model))?;
+    Ok(())
+}
+
+/// Read a model file.
+pub fn load(path: impl AsRef<std::path::Path>) -> Result<(TMShape, Vec<Instr>), FileError> {
+    let mut data = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut data)?;
+    from_bytes(&data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::SynthSpec;
+
+    fn trained() -> TMModel {
+        let shape = TMShape::synthetic(10, 3, 6);
+        let data = SynthSpec::new(10, 3, 128).noise(0.05).seed(4).generate();
+        crate::trainer::train_model(&shape, &data, 3, 2)
+    }
+
+    #[test]
+    fn roundtrip_preserves_stream_and_shape() {
+        let model = trained();
+        let bytes = to_bytes(&model);
+        let (shape, instrs) = from_bytes(&bytes).unwrap();
+        assert_eq!(shape.features, model.shape.features);
+        assert_eq!(shape.classes, model.shape.classes);
+        assert_eq!(shape.clauses, model.shape.clauses);
+        assert_eq!(shape.t, model.shape.t);
+        assert!((shape.s - model.shape.s).abs() < 1e-3);
+        assert_eq!(instrs, isa::encode(&model));
+    }
+
+    #[test]
+    fn crc_catches_corruption() {
+        let model = trained();
+        let mut bytes = to_bytes(&model);
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        assert!(matches!(from_bytes(&bytes), Err(FileError::BadCrc)));
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let model = trained();
+        let bytes = to_bytes(&model);
+        assert!(from_bytes(&bytes[..bytes.len() / 2]).is_err());
+        assert!(from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let model = trained();
+        let mut bytes = to_bytes(&model);
+        bytes[0] = b'X';
+        // CRC still matches the body, so magic check must fire.
+        let body_len = bytes.len() - 4;
+        let crc = crc32(&bytes[..body_len]).to_le_bytes();
+        bytes[body_len..].copy_from_slice(&crc);
+        assert!(matches!(from_bytes(&bytes), Err(FileError::BadMagic)));
+    }
+
+    #[test]
+    fn file_io_roundtrip() {
+        let model = trained();
+        let path = std::env::temp_dir().join("rttm_test_model.rttm");
+        save(&model, &path).unwrap();
+        let (shape, instrs) = load(&path).unwrap();
+        assert_eq!(shape.classes, 3);
+        assert_eq!(instrs.len(), isa::instruction_count(&model));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn crc32_known_answer() {
+        // IEEE CRC-32 of "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+}

@@ -1,0 +1,214 @@
+//! Pure-rust vanilla TM trainer — the Model Training Node's algorithm.
+//!
+//! Functionally identical feedback rules to `python/compile/train.py`
+//! (Type I with boost-true-positive, Type II, per-clause gating by
+//! (T -/+ clamp(sum))/2T), with its own PRNG stream.  The coordinator
+//! normally trains through the AOT JAX artifact (`runtime::TrainStep`);
+//! this trainer exists to (a) cross-check the JAX semantics statistically
+//! and (b) keep the simulator benches self-contained and fast.
+
+use crate::config::TMShape;
+use crate::datasets::synth::{Dataset, XorShift64Star};
+use crate::tm::model::TMModel;
+use crate::tm::reference;
+
+/// TA-state trainer over a dense state vector `[class][clause][literal]`.
+pub struct Trainer {
+    pub shape: TMShape,
+    pub states: Vec<i32>,
+    rng: XorShift64Star,
+}
+
+impl Trainer {
+    pub fn new(shape: TMShape, seed: u64) -> Self {
+        let mut rng = XorShift64Star::new(seed);
+        let n = shape.n_states;
+        let total = shape.total_tas();
+        // Start just below the Include boundary (N-1 or N-2), like the
+        // JAX init.
+        let states = (0..total)
+            .map(|_| n - 1 - i64::from(rng.next_f64() < 0.5) as i32)
+            .collect();
+        Trainer { shape, states, rng }
+    }
+
+    #[inline]
+    fn idx(&self, class: usize, clause: usize, lit: usize) -> usize {
+        (class * self.shape.clauses + clause) * self.shape.literals() + lit
+    }
+
+    #[inline]
+    fn include(&self, class: usize, clause: usize, lit: usize) -> bool {
+        self.states[self.idx(class, clause, lit)] >= self.shape.n_states
+    }
+
+    /// Training-semantics clause output (empty clause -> 1).
+    fn clause_output_train(&self, class: usize, clause: usize, lits: &[u8]) -> bool {
+        for lit in 0..self.shape.literals() {
+            if self.include(class, clause, lit) && lits[lit] == 0 {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn class_sum_train(&self, class: usize, lits: &[u8]) -> i32 {
+        (0..self.shape.clauses)
+            .map(|c| {
+                if self.clause_output_train(class, c, lits) {
+                    TMModel::polarity(c)
+                } else {
+                    0
+                }
+            })
+            .sum()
+    }
+
+    /// Feedback to one class slice; `sign` +1 for the target class, -1
+    /// for the sampled negative class.
+    fn class_feedback(&mut self, class: usize, lits: &[u8], sign: i32) {
+        let t = self.shape.t;
+        let votes = self.class_sum_train(class, lits).clamp(-t, t);
+        let p = (t as f64 - sign as f64 * votes as f64) / (2.0 * t as f64);
+        let inv_s = 1.0 / self.shape.s;
+        let literals = self.shape.literals();
+        for clause in 0..self.shape.clauses {
+            if self.rng.next_f64() >= p {
+                continue; // feedback gate
+            }
+            let out = self.clause_output_train(class, clause, lits);
+            let pol = TMModel::polarity(clause);
+            if pol == sign {
+                // Type I: make the clause fire on this sample.
+                for lit in 0..literals {
+                    let i = self.idx(class, clause, lit);
+                    if out && lits[lit] == 1 {
+                        // boost-true-positive: deterministic reward.
+                        self.states[i] = (self.states[i] + 1).min(2 * self.shape.n_states - 1);
+                    } else if self.rng.next_f64() < inv_s {
+                        self.states[i] = (self.states[i] - 1).max(0);
+                    }
+                }
+            } else if out {
+                // Type II: include a contradicting literal to kill the
+                // false positive.
+                for lit in 0..literals {
+                    if lits[lit] == 0 {
+                        let i = self.idx(class, clause, lit);
+                        if self.states[i] < self.shape.n_states {
+                            self.states[i] += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// One sample of vanilla TM feedback.
+    pub fn update(&mut self, features: &[u8], y: usize) {
+        let lits = reference::literals_from_features(features);
+        self.class_feedback(y, &lits, 1);
+        if self.shape.classes > 1 {
+            let neg = (y + 1 + self.rng.below(self.shape.classes as u64 - 1) as usize)
+                % self.shape.classes;
+            self.class_feedback(neg, &lits, -1);
+        }
+    }
+
+    /// Train for `epochs` passes over the dataset.
+    pub fn fit(&mut self, data: &Dataset, epochs: usize) {
+        for _ in 0..epochs {
+            for (x, &y) in data.xs.iter().zip(&data.ys) {
+                self.update(x, y);
+            }
+        }
+    }
+
+    /// Snapshot the include actions as a dense model.
+    pub fn model(&self) -> TMModel {
+        TMModel::from_ta_states(self.shape.clone(), &self.states)
+    }
+}
+
+/// Convenience: train a model on a dataset (used by benches/examples).
+pub fn train_model(shape: &TMShape, data: &Dataset, epochs: usize, seed: u64) -> TMModel {
+    let mut tr = Trainer::new(shape.clone(), seed);
+    tr.fit(data, epochs);
+    tr.model()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::SynthSpec;
+
+    fn quick_shape() -> TMShape {
+        TMShape {
+            name: "quickstart".into(),
+            features: 16,
+            classes: 2,
+            clauses: 10,
+            t: 4,
+            s: 3.0,
+            train_batch: 32,
+            n_states: 128,
+        }
+    }
+
+    #[test]
+    fn learns_separable_data() {
+        let shape = quick_shape();
+        let data = SynthSpec::new(16, 2, 512).noise(0.05).seed(7).generate();
+        let model = train_model(&shape, &data, 8, 3);
+        let acc = reference::accuracy(&model, &data.xs, &data.ys);
+        assert!(acc > 0.9, "rust trainer failed to learn: acc={acc}");
+    }
+
+    #[test]
+    fn states_stay_bounded() {
+        let shape = quick_shape();
+        let data = SynthSpec::new(16, 2, 128).generate();
+        let mut tr = Trainer::new(shape.clone(), 1);
+        tr.fit(&data, 2);
+        assert!(tr.states.iter().all(|&s| (0..2 * shape.n_states).contains(&s)));
+    }
+
+    #[test]
+    fn trained_model_is_sparse() {
+        // The compression premise: includes are a minority of TAs.
+        let shape = TMShape {
+            name: "emg".into(),
+            features: 64,
+            classes: 6,
+            clauses: 100,
+            t: 20,
+            s: 3.0,
+            train_batch: 32,
+            n_states: 128,
+        };
+        let data = SynthSpec::new(64, 6, 256).noise(0.06).seed(2).generate();
+        let model = train_model(&shape, &data, 3, 5);
+        assert!(model.sparsity() < 0.35, "sparsity {}", model.sparsity());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let shape = quick_shape();
+        let data = SynthSpec::new(16, 2, 64).seed(4).generate();
+        let a = train_model(&shape, &data, 2, 9);
+        let b = train_model(&shape, &data, 2, 9);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn statistical_parity_with_jax_trainer() {
+        // Cross-language invariant (DESIGN.md §6): both trainers reach
+        // >90% on the same quickstart-shaped task.  The JAX side of this
+        // pairing is python/tests/test_train.py::test_learns_separable_data.
+        let shape = quick_shape();
+        let data = SynthSpec::new(16, 2, 512).noise(0.10).seed(7).generate();
+        let model = train_model(&shape, &data, 8, 3);
+        let acc = reference::accuracy(&model, &data.xs, &data.ys);
+        assert!(acc > 0.9, "acc={acc}");
+    }
+}

@@ -1,0 +1,188 @@
+//! Randomized property tests (hand-rolled: proptest is unavailable in
+//! the offline vendor set — the in-repo PRNG drives generation, failures
+//! print the seed for replay).
+//!
+//! Invariants from DESIGN.md §6.
+
+use rttm::accel::stream::{decode_stream, HeaderWidth, Message, StreamCodec};
+use rttm::datasets::synth::XorShift64Star;
+use rttm::isa;
+use rttm::tm::{model::TMModel, reference};
+use rttm::TMShape;
+
+fn random_model(rng: &mut XorShift64Star, shape: &TMShape, density: f64) -> TMModel {
+    let mut m = TMModel::empty(shape.clone());
+    for class in 0..shape.classes {
+        for clause in 0..shape.clauses {
+            for lit in 0..shape.literals() {
+                if rng.next_f64() < density {
+                    m.set_include(class, clause, lit, true);
+                }
+            }
+        }
+    }
+    m
+}
+
+fn random_shape(rng: &mut XorShift64Star) -> TMShape {
+    TMShape::synthetic(
+        1 + rng.below(24) as usize,
+        1 + rng.below(5) as usize,
+        1 + rng.below(12) as usize,
+    )
+}
+
+/// ISA round-trip: encode -> walk == dense reference, for every input.
+#[test]
+fn prop_isa_walk_equals_dense_reference() {
+    for seed in 0..120u64 {
+        let mut rng = XorShift64Star::new(1000 + seed);
+        let shape = random_shape(&mut rng);
+        let density = rng.next_f64() * 0.4;
+        let model = random_model(&mut rng, &shape, density);
+        let instrs = isa::encode(&model);
+
+        // 8 random datapoints per model.
+        for _ in 0..8 {
+            let feats: Vec<u8> = (0..shape.features)
+                .map(|_| u8::from(rng.next_f64() < 0.5))
+                .collect();
+            let lits = reference::literals_from_features(&feats);
+            let dense = reference::class_sums_dense(&model, &lits);
+            let walked = isa::decode_infer(&instrs, &lits, shape.classes)
+                .unwrap_or_else(|e| panic!("seed {seed}: decode error {e}"));
+            assert_eq!(dense, walked, "seed {seed} shape {shape:?}");
+        }
+    }
+}
+
+/// Batched bit-sliced walk == 32 independent single-datapoint walks.
+#[test]
+fn prop_packed_walk_equals_32_singles() {
+    for seed in 0..60u64 {
+        let mut rng = XorShift64Star::new(9000 + seed);
+        let shape = random_shape(&mut rng);
+        let density = rng.next_f64() * 0.3;
+        let model = random_model(&mut rng, &shape, density);
+        let instrs = isa::encode(&model);
+
+        let feat_rows: Vec<Vec<u8>> = (0..32)
+            .map(|_| {
+                (0..shape.features)
+                    .map(|_| u8::from(rng.next_f64() < 0.5))
+                    .collect()
+            })
+            .collect();
+        let packed = isa::pack_features(&feat_rows);
+        let batched = isa::decode_infer_packed(&instrs, &packed, shape.classes).unwrap();
+        for (b, row) in feat_rows.iter().enumerate() {
+            let lits = reference::literals_from_features(row);
+            let single = isa::decode_infer(&instrs, &lits, shape.classes).unwrap();
+            for m in 0..shape.classes {
+                assert_eq!(batched[m][b], single[m], "seed {seed} class {m} dp {b}");
+            }
+        }
+    }
+}
+
+/// Structural round-trip: encode -> decode_clauses reproduces every
+/// non-empty clause (ordered, with polarity).
+#[test]
+fn prop_isa_structural_roundtrip() {
+    for seed in 0..120u64 {
+        let mut rng = XorShift64Star::new(5000 + seed);
+        let shape = random_shape(&mut rng);
+        let density = rng.next_f64() * 0.3;
+        let model = random_model(&mut rng, &shape, density);
+        let instrs = isa::encode(&model);
+        let decoded =
+            isa::encoder::decode_clauses(&instrs, shape.literals(), shape.classes).unwrap();
+
+        for class in 0..shape.classes {
+            let expect: Vec<(i32, Vec<usize>)> = (0..shape.clauses)
+                .filter_map(|c| {
+                    let tas = model.clause_includes(class, c);
+                    (!tas.is_empty()).then(|| (TMModel::polarity(c), tas))
+                })
+                .collect();
+            if expect.is_empty() {
+                // Empty class -> exactly the tautology killer.
+                assert_eq!(decoded[class], vec![(1, vec![0, 1])], "seed {seed}");
+            } else {
+                assert_eq!(decoded[class], expect, "seed {seed} class {class}");
+            }
+        }
+    }
+}
+
+/// Stream protocol round-trip with random payloads and widths.
+#[test]
+fn prop_stream_roundtrip() {
+    for seed in 0..80u64 {
+        let mut rng = XorShift64Star::new(3000 + seed);
+        let width = match rng.below(3) {
+            0 => HeaderWidth::W16,
+            1 => HeaderWidth::W32,
+            _ => HeaderWidth::W64,
+        };
+        let codec = StreamCodec::new(width);
+        let n_instr = 1 + rng.below(40) as usize;
+        let instrs: Vec<isa::Instr> =
+            (0..n_instr).map(|_| isa::Instr(rng.next_u64() as u16)).collect();
+        let features = 1 + rng.below(30) as usize;
+        let batches = 1 + rng.below(4) as usize;
+        let feat_rows: Vec<Vec<u32>> = (0..batches)
+            .map(|_| (0..features).map(|_| rng.next_u64() as u32).collect())
+            .collect();
+
+        let mut words = Vec::new();
+        words.extend(codec.instruction_header(3, 50, n_instr).unwrap());
+        words.extend(codec.pack_instructions(&instrs));
+        words.extend(codec.feature_header(features, batches).unwrap());
+        for row in &feat_rows {
+            words.extend(codec.pack_feature_words(row));
+        }
+
+        let msgs = decode_stream(&codec, &words).unwrap();
+        assert_eq!(msgs.len(), 2, "seed {seed}");
+        assert_eq!(
+            msgs[0],
+            Message::Program { classes: 3, clauses: 50, instrs: instrs.clone() },
+            "seed {seed}"
+        );
+        assert_eq!(msgs[1], Message::Infer { features, batches: feat_rows }, "seed {seed}");
+    }
+}
+
+/// Instruction count formula matches the encoder.
+#[test]
+fn prop_instruction_count_formula() {
+    for seed in 0..100u64 {
+        let mut rng = XorShift64Star::new(7000 + seed);
+        let shape = random_shape(&mut rng);
+        let density = rng.next_f64() * 0.2;
+        let model = random_model(&mut rng, &shape, density);
+        assert_eq!(isa::encode(&model).len(), isa::instruction_count(&model), "seed {seed}");
+    }
+}
+
+/// Corrupted streams never panic: they error or decode to something.
+#[test]
+fn prop_corrupted_streams_never_panic() {
+    for seed in 0..200u64 {
+        let mut rng = XorShift64Star::new(11000 + seed);
+        let shape = random_shape(&mut rng);
+        let model = random_model(&mut rng, &shape, 0.2);
+        let mut instrs = isa::encode(&model);
+        if instrs.is_empty() {
+            continue;
+        }
+        // Flip a random bit in a random instruction.
+        let i = rng.below(instrs.len() as u64) as usize;
+        let bit = rng.below(16) as u16;
+        instrs[i] = isa::Instr(instrs[i].0 ^ (1 << bit));
+        let lits = vec![1u8; shape.literals()];
+        // Must return (Ok or Err), not panic.
+        let _ = isa::decode_infer(&instrs, &lits, shape.classes);
+    }
+}

@@ -1,0 +1,126 @@
+//! Integration: PJRT execution of the AOT artifacts vs the dense rust
+//! reference.  This is the three-layer contract test: Pallas kernel (L1)
+//! inside the JAX graph (L2) loaded and run from rust (L3) must agree
+//! with the pure-rust semantics bit-for-bit.
+
+use rttm::config::Manifest;
+use rttm::datasets::synth::SynthSpec;
+use rttm::isa;
+use rttm::runtime::Runtime;
+use rttm::tm::{model::TMModel, reference};
+use rttm::TMShape;
+
+fn runtime_and_manifest() -> (Runtime, Manifest) {
+    let m = Manifest::load_default().expect("run `make artifacts` first");
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    (rt, m)
+}
+
+fn random_model(shape: &TMShape, density: f64, seed: u64) -> TMModel {
+    let mut rng = rttm::datasets::synth::XorShift64Star::new(seed);
+    let mut m = TMModel::empty(shape.clone());
+    for class in 0..shape.classes {
+        for clause in 0..shape.clauses {
+            for lit in 0..shape.literals() {
+                if rng.next_f64() < density {
+                    m.set_include(class, clause, lit, true);
+                }
+            }
+        }
+    }
+    m
+}
+
+#[test]
+fn infer_artifact_matches_dense_reference() {
+    let (rt, man) = runtime_and_manifest();
+    let exe = rt.load_infer(&man, "quickstart").unwrap();
+    let shape = exe.shape.clone();
+    let model = random_model(&shape, 0.1, 42);
+
+    let data = SynthSpec::new(shape.features, shape.classes, 32).seed(9).generate();
+    let lits = data.literal_rows();
+    let packed = isa::pack_literals(&lits);
+    let out = exe.infer_packed(&model.to_packed_mask(), &packed).unwrap();
+
+    for (b, lit) in lits.iter().enumerate() {
+        let dense = reference::class_sums_dense(&model, lit);
+        for (mcls, &s) in dense.iter().enumerate() {
+            assert_eq!(out.class_sums[mcls][b], s, "class {mcls} dp {b}");
+        }
+        assert_eq!(out.preds[b] as usize, reference::argmax(&dense), "dp {b}");
+    }
+}
+
+#[test]
+fn infer_artifact_matches_isa_walk() {
+    let (rt, man) = runtime_and_manifest();
+    let exe = rt.load_infer(&man, "quickstart").unwrap();
+    let shape = exe.shape.clone();
+    let model = random_model(&shape, 0.15, 7);
+    let instrs = isa::encode(&model);
+
+    let data = SynthSpec::new(shape.features, shape.classes, 32).seed(3).generate();
+    // The accelerator walk reads packed FEATURE words (Feature Memory
+    // layout); the PJRT artifact takes packed LITERAL words.
+    let packed_feats = isa::pack_features(&data.xs);
+    let packed_lits = isa::pack_literals(&data.literal_rows());
+
+    let walked = isa::decode_infer_packed(&instrs, &packed_feats, shape.classes).unwrap();
+    let out = exe.infer_packed(&model.to_packed_mask(), &packed_lits).unwrap();
+    for m in 0..shape.classes {
+        for b in 0..32 {
+            assert_eq!(out.class_sums[m][b], walked[m][b], "class {m} dp {b}");
+        }
+    }
+}
+
+#[test]
+fn train_artifact_learns_quickstart() {
+    let (rt, man) = runtime_and_manifest();
+    let exe = rt.load_train(&man, "quickstart").unwrap();
+    let shape = exe.shape.clone();
+    let data = SynthSpec::new(shape.features, shape.classes, 512)
+        .noise(0.08)
+        .seed(7)
+        .generate();
+    let ta = exe.fit(&data.xs, &data.ys, 6, 11).unwrap();
+    let model = exe.model_from_states(&ta);
+    let acc = reference::accuracy(&model, &data.xs, &data.ys);
+    assert!(acc > 0.9, "PJRT-trained model acc={acc}");
+    // TA states respect bounds.
+    assert!(ta.iter().all(|&s| (0..2 * shape.n_states).contains(&s)));
+}
+
+#[test]
+fn train_artifact_is_deterministic() {
+    let (rt, man) = runtime_and_manifest();
+    let exe = rt.load_train(&man, "quickstart").unwrap();
+    let shape = exe.shape.clone();
+    let data = SynthSpec::new(shape.features, shape.classes, shape.train_batch).generate();
+    let mut rng = rttm::datasets::synth::XorShift64Star::new(1);
+    let ta0 = rttm::runtime::init_ta_states(&shape, &mut rng);
+    let mut x_lit = Vec::new();
+    for row in &data.xs {
+        x_lit.extend(
+            reference::literals_from_features(row)
+                .iter()
+                .map(|&v| v as i32),
+        );
+    }
+    let ys: Vec<i32> = data.ys.iter().map(|&y| y as i32).collect();
+    let a = exe.step(&ta0, &x_lit, &ys, [5, 6]).unwrap();
+    let b = exe.step(&ta0, &x_lit, &ys, [5, 6]).unwrap();
+    assert_eq!(a, b);
+    let c = exe.step(&ta0, &x_lit, &ys, [7, 8]).unwrap();
+    assert_ne!(a, c);
+}
+
+#[test]
+fn infer_shape_validation_errors() {
+    let (rt, man) = runtime_and_manifest();
+    let exe = rt.load_infer(&man, "quickstart").unwrap();
+    let bad_mask = vec![0u32; 3];
+    let xs = vec![0u32; exe.shape.literals()];
+    assert!(exe.infer_packed(&bad_mask, &xs).is_err());
+}

@@ -1,0 +1,233 @@
+//! Whole-system integration: every inference path in the repo must agree
+//! on every workload, and the paper's qualitative claims must hold on
+//! the simulator (shape invariants from DESIGN.md §5/§6).
+
+use rttm::accel::core::{AccelConfig, Core, PipelineMode};
+use rttm::accel::multicore::MultiCore;
+use rttm::accel::stream::{HeaderWidth, StreamCodec};
+use rttm::baselines::{Matador, Mcu, McuKind};
+use rttm::coordinator::{Engine, InferenceService, RecalibrationLoop, TrainingNode};
+use rttm::datasets::workloads::{workload, workload_names};
+use rttm::isa;
+use rttm::model_cost::energy::EnergyModel;
+use rttm::tm::{model::TMModel, reference};
+
+fn fitted_core(model: &TMModel) -> Core {
+    let need = isa::instruction_count(model).next_power_of_two().max(8192);
+    let mut c = Core::new(AccelConfig::base().with_depths(need, 2048));
+    c.program_model(model).unwrap();
+    c
+}
+
+fn fitted_multicore(model: &TMModel, n: usize) -> MultiCore {
+    let per_class: Vec<usize> = model
+        .includes_per_class()
+        .into_iter()
+        .map(|v| if v == 0 { 2 } else { v })
+        .collect();
+    let heaviest = MultiCore::partition(&per_class, n)
+        .into_iter()
+        .map(|(s, e)| per_class[s..e].iter().sum::<usize>())
+        .max()
+        .unwrap_or(2);
+    let cfg =
+        AccelConfig::multicore_core().with_depths(heaviest.next_power_of_two().max(4096), 2048);
+    let mut m = MultiCore::new(n, cfg);
+    m.program_model(model).unwrap();
+    m
+}
+
+/// Four-way agreement on every workload: dense reference, ISA software
+/// walk (MCU), cycle-accurate simulator, multi-core simulator.
+#[test]
+fn all_paths_agree_on_every_workload() {
+    for name in workload_names() {
+        let w = workload(name).unwrap();
+        // bench-scale training to keep the suite fast
+        let data = w.dataset(256, 7);
+        let model = rttm::trainer::train_model(&w.shape, &data, 2, 3);
+
+        let mut core = fitted_core(&model);
+        let mut multi = fitted_multicore(&model, 5);
+        let mcu = Mcu::program_model(McuKind::Esp32, &model);
+
+        let rows: Vec<Vec<u8>> = data.xs[..32].to_vec();
+        let core_preds = core.run_rows(&rows).unwrap();
+        let multi_preds = multi.run_rows(&rows).unwrap();
+        for (i, x) in rows.iter().enumerate() {
+            let lits = reference::literals_from_features(x);
+            let dense = reference::predict_dense(&model, &lits);
+            assert_eq!(core_preds[i], dense, "{name}: core dp {i}");
+            assert_eq!(multi_preds[i], dense, "{name}: multicore dp {i}");
+            assert_eq!(mcu.classify(x).unwrap(), dense, "{name}: mcu dp {i}");
+        }
+    }
+}
+
+/// Header-width interop: the same model programmed through 16/32/64-bit
+/// streams produces identical outputs (16-bit skipped where the model
+/// doesn't fit its fields — itself asserted).
+#[test]
+fn stream_width_interop() {
+    let w = workload("emg").unwrap();
+    let data = w.dataset(128, 9);
+    let model = rttm::trainer::train_model(&w.shape, &data, 2, 5);
+    let instrs = isa::encode(&model);
+    let rows: Vec<Vec<u8>> = data.xs[..32].to_vec();
+    let packed = isa::pack_features(&rows);
+
+    let mut expected: Option<[u8; 32]> = None;
+    for width in [HeaderWidth::W16, HeaderWidth::W32, HeaderWidth::W64] {
+        let codec = StreamCodec::new(width);
+        let header = codec.instruction_header(w.shape.classes, w.shape.clauses, instrs.len());
+        if width == HeaderWidth::W16 && header.is_err() {
+            continue; // model legitimately too big for the narrow header
+        }
+        let need = instrs.len().next_power_of_two().max(8192);
+        let mut cfg = AccelConfig::base().with_depths(need, 2048);
+        cfg.header_width = width;
+        let mut core = Core::new(cfg);
+        let mut words: Vec<u64> = header.unwrap().to_vec();
+        words.extend(codec.pack_instructions(&instrs));
+        words.extend(codec.feature_header(packed.len(), 1).unwrap());
+        words.extend(codec.pack_feature_words(&packed));
+        let results = core.feed_stream(&words).unwrap();
+        assert_eq!(results.len(), 1, "{width:?}");
+        match &expected {
+            None => expected = Some(results[0].preds),
+            Some(e) => assert_eq!(&results[0].preds, e, "{width:?}"),
+        }
+    }
+    assert!(expected.is_some());
+}
+
+/// Pipelined and iterative cores always agree functionally; pipelined is
+/// strictly faster.
+#[test]
+fn pipeline_modes_agree_functionally() {
+    let w = workload("gesture").unwrap();
+    let data = w.dataset(128, 11);
+    let model = rttm::trainer::train_model(&w.shape, &data, 2, 2);
+    let need = isa::instruction_count(&model).next_power_of_two().max(8192);
+
+    let mut pipe = Core::new(AccelConfig::base().with_depths(need, 2048));
+    let mut iter = Core::new(
+        AccelConfig::base()
+            .with_depths(need, 2048)
+            .with_pipeline(PipelineMode::Iterative),
+    );
+    pipe.program_model(&model).unwrap();
+    iter.program_model(&model).unwrap();
+    let packed = isa::pack_features(&data.xs[..32].to_vec());
+    let rp = pipe.run_batch(&packed).unwrap();
+    let ri = iter.run_batch(&packed).unwrap();
+    assert_eq!(rp.preds, ri.preds);
+    assert_eq!(rp.class_sums, ri.class_sums);
+    assert!(rp.cycles.total() < ri.cycles.total());
+}
+
+/// The paper's Q2 shape: the accelerator beats the MCU software baseline
+/// by two orders of magnitude in latency and at least one in energy.
+#[test]
+fn accelerator_dominates_mcu() {
+    let w = workload("emg").unwrap();
+    let data = w.dataset(512, 7);
+    let model = rttm::trainer::train_model(&w.shape, &data, 3, 3);
+    let mut core = fitted_core(&model);
+    let packed = isa::pack_features(&data.xs[..32].to_vec());
+    let r = core.run_batch(&packed).unwrap();
+    let batch_us = core.seconds(r.cycles.total()) * 1e6;
+    let b_single_us = batch_us / 32.0;
+    let b_single_uj = EnergyModel::for_config(&core.cfg).energy_uj(batch_us) / 32.0;
+
+    let esp = Mcu::program_model(McuKind::Esp32, &model);
+    let speedup = esp.single_latency_us() / b_single_us;
+    let energy_red = esp.kind.power_w() * esp.single_latency_us() / b_single_uj;
+    assert!(speedup > 100.0, "speedup only {speedup:.1}x");
+    assert!(energy_red > 10.0, "energy reduction only {energy_red:.1}x");
+}
+
+/// The paper's Q1 shape: MATADOR is faster per datapoint (fixed custom
+/// logic), but the proposed design stays within ~an order of magnitude
+/// while remaining runtime-tunable.
+#[test]
+fn matador_faster_but_same_order() {
+    let w = workload("cifar2").unwrap();
+    let data = w.dataset(384, 7);
+    let model = rttm::trainer::train_model(&w.shape, &data, 2, 3);
+    let mut core = fitted_core(&model);
+    let packed = isa::pack_features(&data.xs[..32].to_vec());
+    let r = core.run_batch(&packed).unwrap();
+    let b_single_us = core.seconds(r.cycles.total()) * 1e6 / 32.0;
+    let mtdr = Matador::synthesize(&model);
+    assert!(mtdr.single_latency_us() < b_single_us, "MATADOR must win raw latency");
+    assert!(
+        b_single_us / mtdr.single_latency_us() < 20.0,
+        "gap {:.1}x too wide",
+        b_single_us / mtdr.single_latency_us()
+    );
+}
+
+/// End-to-end Fig 8 behaviour through the service + tuner, on a real
+/// workload with the paper's recalibration motivation (gas drift).
+#[test]
+fn gasdrift_recalibration_story() {
+    let w = workload("gasdrift").unwrap();
+    let clean = w.dataset(768, 7);
+    let drifted = w.drifted_dataset(768, 7, 0.30);
+
+    let node = TrainingNode::native(w.shape.clone());
+    let mut svc =
+        InferenceService::new(Engine::custom(AccelConfig::base().with_depths(16384, 2048)));
+    svc.reprogram(&node.retrain(&clean).unwrap()).unwrap();
+
+    let acc_clean = svc.measure_accuracy(&clean.xs, &clean.ys).unwrap();
+    let acc_drift = svc.measure_accuracy(&drifted.xs, &drifted.ys).unwrap();
+    assert!(acc_clean > 0.85, "clean acc {acc_clean}");
+    assert!(acc_drift < acc_clean - 0.1, "drift must hurt: {acc_clean} -> {acc_drift}");
+
+    let looper = RecalibrationLoop::new(node, acc_clean - 0.05);
+    let report = looper
+        .run(&mut svc, &[(drifted.clone(), drifted.clone())])
+        .unwrap();
+    assert_eq!(report.recalibrations.len(), 1);
+    assert!(
+        report.recalibrations[0].accuracy_after > acc_drift + 0.1,
+        "recovery {} -> {}",
+        acc_drift,
+        report.recalibrations[0].accuracy_after
+    );
+}
+
+/// Pipelined execute cycles are exactly 3 + N — latency is linear in
+/// model size (why runtime down-tuning to a smaller model pays off).
+#[test]
+fn latency_scales_with_model_size() {
+    let w = workload("emg").unwrap();
+    let data = w.dataset(256, 7);
+    for epochs in [1usize, 4] {
+        let model = rttm::trainer::train_model(&w.shape, &data, epochs, 3);
+        let mut core = fitted_core(&model);
+        let packed = isa::pack_features(&data.xs[..32].to_vec());
+        let r = core.run_batch(&packed).unwrap();
+        let n = core.instruction_count() as u64;
+        assert_eq!(r.cycles.execute, 3 + n);
+    }
+}
+
+/// Sparsity accounting consistent across representations: includes ==
+/// instructions (no empty classes in trained models) == MCU stream len.
+#[test]
+fn sparsity_accounting_consistent() {
+    let w = workload("har").unwrap();
+    let data = w.dataset(256, 7);
+    let model = rttm::trainer::train_model(&w.shape, &data, 2, 3);
+    let instrs = isa::encode(&model);
+    assert_eq!(instrs.len(), isa::instruction_count(&model));
+    let per_class = model.includes_per_class();
+    if per_class.iter().all(|&c| c > 0) {
+        assert_eq!(instrs.len(), model.include_count());
+    }
+    let mcu = Mcu::program_model(McuKind::Esp32, &model);
+    assert_eq!(mcu.instrs.len(), instrs.len());
+}
