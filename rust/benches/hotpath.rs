@@ -5,55 +5,248 @@
 //! Targets (DESIGN.md §7): the L3 cycle loop should sustain >100M
 //! instruction-slots/s so whole Table 2 sweeps finish in seconds.
 //!
+//! Besides the human-readable table this bench emits
+//! `BENCH_hotpath.json` (machine-readable, one flat object) so the perf
+//! trajectory can be tracked across commits.  `HOTPATH_SMOKE=1` shrinks
+//! workloads/iterations for CI smoke runs.
+//!
 //! `cargo bench --bench hotpath`
 
 #[path = "common/mod.rs"]
 mod common;
 
 use common::bench_ns;
-use rttm::accel::core::{AccelConfig, Core};
+use rttm::accel::core::{AccelConfig, BatchResult, Core};
+use rttm::accel::engine;
+use rttm::accel::multicore::{MultiCore, ParallelMode};
 use rttm::config::Manifest;
-use rttm::isa;
+use rttm::isa::{self, DecodeWalk, Instr};
 use rttm::runtime::Runtime;
 
+/// The pre-SoA execution engine, kept verbatim as the before/after
+/// baseline: AoS micro-ops with a branchy `Option` commit, per-read
+/// literal-select branch, per-batch O(n) `max_feat` rescan and fresh
+/// `sums` allocation — exactly what `Core::run_batch` did before the
+/// SoA rebuild (EXPERIMENTS.md §Perf).
+mod legacy {
+    use super::{DecodeWalk, Instr};
+    use rttm::isa;
+
+    #[derive(Copy, Clone)]
+    struct MicroOp {
+        feat: u32,
+        complement: bool,
+        commit: Option<(u16, i8)>,
+    }
+
+    pub struct AosEngine {
+        ops: Vec<MicroOp>,
+        final_commit: Option<(u16, i8)>,
+        classes: usize,
+    }
+
+    impl AosEngine {
+        pub fn program(classes: usize, instrs: &[Instr]) -> Self {
+            let mut ops = Vec::with_capacity(instrs.len());
+            let mut walk = DecodeWalk::new(classes.max(1));
+            for (i, &ins) in instrs.iter().enumerate() {
+                let (ta, commit) = walk.step(i, ins, isa::MAX_LITERALS).unwrap();
+                ops.push(MicroOp {
+                    feat: (ta >> 1) as u32,
+                    complement: ins.complement(),
+                    commit: commit.map(|(cls, pol, _)| (cls as u16, pol as i8)),
+                });
+            }
+            let final_commit = walk.finish().map(|(cls, pol, _)| (cls as u16, pol as i8));
+            AosEngine { ops, final_commit, classes }
+        }
+
+        pub fn run_batch(&self, packed: &[u32]) -> Vec<[i32; 32]> {
+            // Per-batch allocation + O(n) rescan, as in the old loop.
+            let mut sums = vec![[0i32; 32]; self.classes];
+            if let Some(max_feat) = self.ops.iter().map(|o| o.feat).max() {
+                assert!((max_feat as usize) < packed.len());
+            }
+            let mut cur = u32::MAX;
+            for op in &self.ops {
+                if let Some((cls, pol)) = op.commit {
+                    isa::apply_commit(&mut sums, (cls as usize, pol as i32, cur));
+                    cur = u32::MAX;
+                }
+                let w = packed[op.feat as usize];
+                cur &= if op.complement { !w } else { w };
+            }
+            if let Some((cls, pol)) = self.final_commit {
+                isa::apply_commit(&mut sums, (cls as usize, pol as i32, cur));
+            }
+            sums
+        }
+    }
+}
+
 fn main() {
-    let (w, model, data) = common::trained_model("emg", 512, 3);
+    let smoke = std::env::var("HOTPATH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let (corpus, epochs) = if smoke { (128, 1) } else { (512, 3) };
+    let scale = |x: usize| if smoke { (x / 10).max(2) } else { x };
+
+    let (w, model, data) = common::trained_model("emg", corpus, epochs);
     let instrs = isa::encode(&model);
     let need = instrs.len().next_power_of_two().max(8192);
-    let rows: Vec<Vec<u8>> = data.xs[..32].to_vec();
+    let rows: Vec<Vec<u8>> = data.xs[..32.min(data.len())].to_vec();
     let packed = isa::pack_features(&rows);
+    let mut json: Vec<(String, f64)> = Vec::new();
 
-    println!("=== hot-path wall-clock (host) — workload {} ({} instrs) ===\n", w.name, instrs.len());
+    println!(
+        "=== hot-path wall-clock (host) — workload {} ({} instrs) ===\n",
+        w.name,
+        instrs.len()
+    );
 
-    // 1. Simulator batch walk (the L3 hot loop).
+    // 1. Simulator batch walk (the L3 hot loop), SoA engine vs the
+    //    pre-change AoS loop.
     let mut core = Core::new(AccelConfig::base().with_depths(need, 2048));
     core.program_model(&model).unwrap();
-    let ns = bench_ns(100, 1500, || {
+    let soa_ns = bench_ns(scale(100), scale(1500), || {
         let r = core.run_batch(&packed).unwrap();
         std::hint::black_box(r.preds);
     });
-    let mips = instrs.len() as f64 / (ns / 1e9) / 1e6;
+    let mips = instrs.len() as f64 / (soa_ns / 1e9) / 1e6;
     println!(
-        "simulator run_batch:       {:>10.1} us/batch  {:>8.1} M instr-slots/s  ({:.1} M inferences/s host)",
-        ns / 1e3,
+        "simulator run_batch (SoA): {:>10.1} us/batch  {:>8.1} M instr-slots/s  ({:.1} M inferences/s host)",
+        soa_ns / 1e3,
         mips,
-        32.0 / (ns / 1e9) / 1e6
+        32.0 / (soa_ns / 1e9) / 1e6
     );
+    json.push(("run_batch_ns".into(), soa_ns));
+    json.push(("run_batch_m_instr_slots_per_s".into(), mips));
 
-    // 2. Software ISA walk, single datapoint (the MCU-interpreter loop).
+    let aos = legacy::AosEngine::program(w.shape.classes, &instrs);
+    let aos_ns = bench_ns(scale(100), scale(1500), || {
+        let s = aos.run_batch(&packed);
+        std::hint::black_box(s.len());
+    });
+    println!(
+        "pre-SoA AoS walk:          {:>10.1} us/batch  {:>8.1} M instr-slots/s  (speedup {:.2}x)",
+        aos_ns / 1e3,
+        instrs.len() as f64 / (aos_ns / 1e9) / 1e6,
+        aos_ns / soa_ns
+    );
+    json.push(("legacy_aos_ns".into(), aos_ns));
+    json.push(("soa_speedup_vs_aos".into(), aos_ns / soa_ns));
+
+    // 1b. Zero-alloc steady state: run_batch_into with a reused result.
+    let mut reused = BatchResult::default();
+    let into_ns = bench_ns(scale(100), scale(1500), || {
+        core.run_batch_into(&packed, &mut reused).unwrap();
+        std::hint::black_box(reused.preds);
+    });
+    println!(
+        "run_batch_into (reused):   {:>10.1} us/batch  {:>8.1} M instr-slots/s",
+        into_ns / 1e3,
+        instrs.len() as f64 / (into_ns / 1e9) / 1e6
+    );
+    json.push(("run_batch_into_ns".into(), into_ns));
+
+    // 2. Throughput: run_batch loop vs run_batches stream, single core
+    //    vs 5-core serial vs 5-core threaded (batches/s on the host).
+    println!("\n--- serving throughput (host batches/s) ---");
+    let n_stream = scale(256);
+    let stream: Vec<Vec<u32>> = (0..n_stream)
+        .map(|i| {
+            let mut p = packed.clone();
+            // Vary the batch so the stream isn't one cached pattern.
+            for w in p.iter_mut() {
+                *w = w.rotate_left((i % 31) as u32);
+            }
+            p
+        })
+        .collect();
+    let refs: Vec<&[u32]> = stream.iter().map(|b| b.as_slice()).collect();
+
+    let loop_ns = bench_ns(2, scale(30), || {
+        for &b in &refs {
+            let r = core.run_batch(b).unwrap();
+            std::hint::black_box(r.preds);
+        }
+    });
+    let stream_ns = bench_ns(2, scale(30), || {
+        let rs = core.run_batches(&refs).unwrap();
+        std::hint::black_box(rs.len());
+    });
+    let per = |total_ns: f64| n_stream as f64 / (total_ns / 1e9);
+    println!(
+        "single core, run_batch x{n_stream}:   {:>10.0} batches/s",
+        per(loop_ns)
+    );
+    println!(
+        "single core, run_batches:      {:>10.0} batches/s",
+        per(stream_ns)
+    );
+    json.push(("single_run_batch_loop_batches_per_s".into(), per(loop_ns)));
+    json.push(("single_run_batches_batches_per_s".into(), per(stream_ns)));
+
+    // 5-core stock memories are shallow; deepen to fit the model.
+    let deep = AccelConfig::multicore_core().with_depths(need, 2048);
+    let mut mc_serial = MultiCore::new(5, deep.clone()).with_parallel(ParallelMode::Serial);
+    let mut mc_threads = MultiCore::new(5, deep).with_parallel(ParallelMode::Threads);
+    mc_serial.program_model(&model).unwrap();
+    mc_threads.program_model(&model).unwrap();
+
+    let serial_ns = bench_ns(2, scale(20), || {
+        let rs = mc_serial.run_batches(&refs).unwrap();
+        std::hint::black_box(rs.len());
+    });
+    let threads_ns = bench_ns(2, scale(20), || {
+        let rs = mc_threads.run_batches(&refs).unwrap();
+        std::hint::black_box(rs.len());
+    });
+    println!(
+        "5-core serial, run_batches:    {:>10.0} batches/s",
+        per(serial_ns)
+    );
+    println!(
+        "5-core threads, run_batches:   {:>10.0} batches/s  (speedup {:.2}x over serial)",
+        per(threads_ns),
+        serial_ns / threads_ns
+    );
+    json.push(("multicore_serial_batches_per_s".into(), per(serial_ns)));
+    json.push(("multicore_threads_batches_per_s".into(), per(threads_ns)));
+    json.push(("multicore_thread_speedup".into(), serial_ns / threads_ns));
+
+    // 2b. Scheduler end-to-end (pack + stream + unpack).
+    let many_rows: Vec<Vec<u8>> = (0..32 * scale(64))
+        .map(|i| data.xs[i % data.len()].clone())
+        .collect();
+    let t0 = std::time::Instant::now();
+    let (_preds, _stats) = engine::classify_rows_core(&mut core, &many_rows).unwrap();
+    let wall = t0.elapsed();
+    // End-to-end rate (pack + stream + unpack) — the outer wall, not
+    // the scheduler's stream-only StreamStats.
+    let e2e_per_s = many_rows.len() as f64 / wall.as_secs_f64();
+    println!(
+        "scheduler classify_rows:       {:>10.0} inferences/s end-to-end ({} rows in {:.1} ms)",
+        e2e_per_s,
+        many_rows.len(),
+        wall.as_secs_f64() * 1e3
+    );
+    json.push(("scheduler_inferences_per_s".into(), e2e_per_s));
+
+    // 3. Software ISA walk, single datapoint (the MCU-interpreter loop).
     let lits = rttm::tm::reference::literals_from_features(&rows[0]);
-    let ns = bench_ns(20, 200, || {
+    let ns = bench_ns(scale(20), scale(200), || {
         let s = isa::decode_infer(&instrs, &lits, w.shape.classes).unwrap();
         std::hint::black_box(s);
     });
     println!(
-        "sw walk (1 datapoint):     {:>10.1} us/dp     {:>8.1} M instr/s",
+        "\nsw walk (1 datapoint):     {:>10.1} us/dp     {:>8.1} M instr/s",
         ns / 1e3,
         instrs.len() as f64 / (ns / 1e9) / 1e6
     );
 
-    // 3. Model compression (encode) — the retuning path.
-    let ns = bench_ns(5, 50, || {
+    // 4. Model compression (encode) — the retuning path.
+    let ns = bench_ns(scale(5), scale(50), || {
         let i = isa::encode(&model);
         std::hint::black_box(i.len());
     });
@@ -63,55 +256,73 @@ fn main() {
         w.shape.total_tas() as f64 / (ns / 1e9) / 1e6
     );
 
-    // 4. Feature packing.
-    let ns = bench_ns(20, 200, || {
+    // 5. Feature packing.
+    let ns = bench_ns(scale(20), scale(200), || {
         let p = isa::pack_features(&rows);
         std::hint::black_box(p.len());
     });
     println!("pack_features (32 rows):   {:>10.2} us", ns / 1e3);
 
-    // 5. Dense reference (the golden model the simulator is checked
+    // 6. Dense reference (the golden model the simulator is checked
     //    against) for context.
-    let ns = bench_ns(5, 50, || {
+    let ns = bench_ns(scale(5), scale(50), || {
         let s = rttm::tm::reference::class_sums_dense(&model, &lits);
         std::hint::black_box(s);
     });
     println!("dense reference (1 dp):    {:>10.1} us/dp", ns / 1e3);
 
-    // 6. PJRT artifacts (if built): infer + train step.
-    if let Ok(man) = Manifest::load_default() {
-        let rt = Runtime::cpu().expect("pjrt");
-        let infer = rt.load_infer(&man, "emg").expect("infer artifact");
-        let mask = model.to_packed_mask();
-        let lit_rows: Vec<Vec<u8>> = rows
-            .iter()
-            .map(|x| rttm::tm::reference::literals_from_features(x))
-            .collect();
-        let xs = isa::pack_literals(&lit_rows);
-        let ns = bench_ns(5, 50, || {
-            let o = infer.infer_packed(&mask, &xs).unwrap();
-            std::hint::black_box(o.preds);
-        });
-        println!("PJRT infer artifact:       {:>10.1} us/batch (32 dp)", ns / 1e3);
+    // 7. PJRT artifacts (if built AND the pjrt feature is on): infer +
+    //    train step.
+    match (Manifest::load_default(), Runtime::cpu()) {
+        (Ok(man), Ok(rt)) => {
+            let infer = rt.load_infer(&man, "emg").expect("infer artifact");
+            let mask = model.to_packed_mask();
+            let lit_rows: Vec<Vec<u8>> = rows
+                .iter()
+                .map(|x| rttm::tm::reference::literals_from_features(x))
+                .collect();
+            let xs = isa::pack_literals(&lit_rows);
+            let ns = bench_ns(5, 50, || {
+                let o = infer.infer_packed(&mask, &xs).unwrap();
+                std::hint::black_box(o.preds);
+            });
+            println!("PJRT infer artifact:       {:>10.1} us/batch (32 dp)", ns / 1e3);
 
-        let train = rt.load_train(&man, "emg").expect("train artifact");
-        let mut rng = rttm::datasets::synth::XorShift64Star::new(1);
-        let ta0 = rttm::runtime::init_ta_states(&train.shape, &mut rng);
-        let mut x_lit = Vec::new();
-        for row in &data.xs[..train.shape.train_batch] {
-            x_lit.extend(
-                rttm::tm::reference::literals_from_features(row)
-                    .iter()
-                    .map(|&v| v as i32),
-            );
+            let train = rt.load_train(&man, "emg").expect("train artifact");
+            let mut rng = rttm::datasets::synth::XorShift64Star::new(1);
+            let ta0 = rttm::runtime::init_ta_states(&train.shape, &mut rng);
+            let mut x_lit = Vec::new();
+            for row in &data.xs[..train.shape.train_batch] {
+                x_lit.extend(
+                    rttm::tm::reference::literals_from_features(row)
+                        .iter()
+                        .map(|&v| v as i32),
+                );
+            }
+            let ys: Vec<i32> = data.ys[..train.shape.train_batch].iter().map(|&y| y as i32).collect();
+            let ns = bench_ns(3, 20, || {
+                let t = train.step(&ta0, &x_lit, &ys, [5, 6]).unwrap();
+                std::hint::black_box(t.len());
+            });
+            println!("PJRT train step:           {:>10.1} us/batch (32 samples)", ns / 1e3);
         }
-        let ys: Vec<i32> = data.ys[..train.shape.train_batch].iter().map(|&y| y as i32).collect();
-        let ns = bench_ns(3, 20, || {
-            let t = train.step(&ta0, &x_lit, &ys, [5, 6]).unwrap();
-            std::hint::black_box(t.len());
-        });
-        println!("PJRT train step:           {:>10.1} us/batch (32 samples)", ns / 1e3);
-    } else {
-        println!("(artifacts not built; skipping PJRT rows)");
+        _ => println!("(artifacts not built or pjrt feature off; skipping PJRT rows)"),
+    }
+
+    write_json("BENCH_hotpath.json", &json);
+}
+
+/// Flat-object JSON writer (no serde in the offline vendor set).
+fn write_json(path: &str, entries: &[(String, f64)]) {
+    let mut s = String::from("{\n");
+    for (i, (k, v)) in entries.iter().enumerate() {
+        let comma = if i + 1 == entries.len() { "" } else { "," };
+        let v = if v.is_finite() { *v } else { -1.0 };
+        s.push_str(&format!("  \"{k}\": {v:.3}{comma}\n"));
+    }
+    s.push_str("}\n");
+    match std::fs::write(path, &s) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
 }

@@ -26,7 +26,7 @@
 use super::fifo::OutputFifo;
 use super::memory::{FeatureMemory, InstrMemory, MemError};
 use super::stream::{decode_stream, HeaderWidth, Message, StreamCodec, StreamError};
-use crate::isa::{self, DecodeWalk, Instr};
+use crate::isa::{self, Instr, SoaProgram};
 
 /// Deploy-time configuration of one core (the Fig 8 "one-time
 /// implementation" choices).
@@ -130,6 +130,10 @@ impl CycleStats {
 }
 
 /// One 32-datapoint batch result.
+///
+/// Reusable: [`Core::run_batch_into`] overwrites an existing result in
+/// place (no allocation once `class_sums` has capacity), which is how
+/// the zero-alloc serving loop runs — see EXPERIMENTS.md §Perf.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BatchResult {
     /// Per-class bit-sliced sums.
@@ -138,6 +142,12 @@ pub struct BatchResult {
     pub preds: [u8; 32],
     /// Cycles spent on THIS batch (feature load + execute + ... ).
     pub cycles: CycleStats,
+}
+
+impl Default for BatchResult {
+    fn default() -> Self {
+        BatchResult { class_sums: Vec::new(), preds: [0u8; 32], cycles: CycleStats::default() }
+    }
 }
 
 /// Errors surfaced by the core's stream front-end.
@@ -163,23 +173,15 @@ pub struct TraceEvent {
     pub instr: usize,
 }
 
-/// One predecoded instruction: the walk state machine resolved at
-/// program time (the RTL's DECODE stage output).  Programming happens
-/// once per model; batches run many times — resolving TA addresses and
-/// clause/class boundaries up front takes the branchy `DecodeWalk` off
-/// the per-batch hot loop (§Perf in EXPERIMENTS.md).
-#[derive(Debug, Copy, Clone)]
-struct MicroOp {
-    /// Feature memory address (TA >> 1).
-    feat: u32,
-    /// Literal-select invert (the L bit).
-    complement: bool,
-    /// If this op starts a new clause: commit the previous one to
-    /// (class, polarity).
-    commit: Option<(u16, i8)>,
-}
-
 /// The base inference core.
+///
+/// The walk state machine is resolved ONCE at program time into a
+/// structure-of-arrays [`SoaProgram`] (the RTL's DECODE stage output):
+/// flat feature addresses, per-op XOR masks folding the L bit, and a
+/// commit table of contiguous clause segments.  Programming happens once
+/// per model; batches run many times — the per-batch hot loop is a
+/// branch-free AND-reduction with no allocation (§Perf in
+/// EXPERIMENTS.md).
 pub struct Core {
     pub cfg: AccelConfig,
     pub codec: StreamCodec,
@@ -189,9 +191,11 @@ pub struct Core {
     /// Architecture parameters from the last Instruction Header.
     pub classes: usize,
     pub clauses: usize,
-    /// Predecoded program (rebuilt on every reprogram) + trailing commit.
-    ops: Vec<MicroOp>,
-    final_commit: Option<(u16, i8)>,
+    /// Predecoded SoA program (rebuilt in place on every reprogram).
+    prog: SoaProgram,
+    /// Reusable result scratch for the convenience entry points
+    /// (`run_rows`): keeps steady-state serving allocation-free.
+    scratch: BatchResult,
     /// Lifetime cycle counters.
     pub stats: CycleStats,
     /// Batches inferred since power-up.
@@ -211,8 +215,8 @@ impl Core {
             cfg,
             classes: 0,
             clauses: 0,
-            ops: Vec::new(),
-            final_commit: None,
+            prog: SoaProgram::default(),
+            scratch: BatchResult::default(),
             stats: CycleStats::default(),
             batches_run: 0,
             trace_enabled: false,
@@ -229,8 +233,7 @@ impl Core {
         self.fifo = OutputFifo::new(self.cfg.fifo_depth);
         self.classes = 0;
         self.clauses = 0;
-        self.ops.clear();
-        self.final_commit = None;
+        self.prog.clear();
         self.trace.clear();
     }
 
@@ -252,24 +255,27 @@ impl Core {
         self.imem.program(instrs)?;
         self.classes = classes;
         self.clauses = clauses;
-        // 2 header words + payload, one word per cycle.
-        self.stats.program += 2 + self.codec.instruction_payload_len(instrs.len()) as u64;
 
-        // Predecode.  TA bounds are validated against the architectural
-        // maximum (the ISA's 12-bit offset space); the per-batch check
-        // against the actual feature count is O(1) via `max_feat`.
-        self.ops.clear();
-        self.final_commit = None;
-        let mut walk = DecodeWalk::new(classes.max(1));
-        for (i, &ins) in instrs.iter().enumerate() {
-            let (ta, commit) = walk.step(i, ins, crate::isa::MAX_LITERALS)?;
-            self.ops.push(MicroOp {
-                feat: (ta >> 1) as u32,
-                complement: ins.complement(),
-                commit: commit.map(|(cls, pol, _)| (cls as u16, pol as i8)),
-            });
+        // Predecode into the SoA program (in place — reprogramming does
+        // not allocate once buffers have grown).  TA bounds are
+        // validated against the architectural maximum (the ISA's 12-bit
+        // offset space); the per-batch check against the actual feature
+        // count is O(1) via the cached `max_feat`.
+        if let Err(e) = isa::predecode_into(instrs, classes, isa::MAX_LITERALS, &mut self.prog) {
+            // A corrupt stream must not leave a half-predecoded walk
+            // behind: un-program the core (instruction memory included,
+            // so `instruction_count` never reports a rejected stream)
+            // and let run_batch report NotProgrammed.
+            self.imem = InstrMemory::new(self.cfg.instr_depth);
+            self.classes = 0;
+            self.clauses = 0;
+            self.prog.clear();
+            return Err(e.into());
         }
-        self.final_commit = walk.finish().map(|(cls, pol, _)| (cls as u16, pol as i8));
+        // 2 header words + payload, one word per cycle — counted only
+        // for accepted streams so lifetime stats match a core that
+        // never saw a rejected one.
+        self.stats.program += 2 + self.codec.instruction_payload_len(instrs.len()) as u64;
         Ok(())
     }
 
@@ -301,25 +307,28 @@ impl Core {
     /// Load one bit-sliced batch into feature memory and execute the
     /// programmed instruction walk over it.
     pub fn run_batch(&mut self, packed_features: &[u32]) -> Result<BatchResult, CoreError> {
+        let mut out = BatchResult::default();
+        self.run_batch_into(packed_features, &mut out)?;
+        Ok(out)
+    }
+
+    /// Zero-alloc batch execution: overwrite `out` in place.  Once
+    /// `out.class_sums` has capacity for `classes` rows (after the first
+    /// call), the steady-state loop performs no heap allocation — the
+    /// feature memory, the SoA program and the result buffers are all
+    /// reused (§Perf in EXPERIMENTS.md).
+    pub fn run_batch_into(
+        &mut self,
+        packed_features: &[u32],
+        out: &mut BatchResult,
+    ) -> Result<(), CoreError> {
         if !self.is_programmed() {
             return Err(CoreError::NotProgrammed);
         }
-        self.fmem.load(packed_features)?;
-
-        let mut cycles = CycleStats {
-            // 2 header words + payload words, 1/cycle.
-            feature_load: 2 + self.codec.feature_payload_len(packed_features.len()) as u64,
-            ..CycleStats::default()
-        };
-
-        let n = self.imem.len();
-        let mut sums = vec![[0i32; 32]; self.classes];
-        let mut clause_count: u64 = 0;
-        self.trace.clear();
-
-        // O(1) bounds check for the whole walk (program() resolved every
-        // TA): the largest feature address must sit inside this batch.
-        if let Some(max_feat) = self.ops.iter().map(|o| o.feat).max() {
+        // O(1) bounds check for the whole walk (program() resolved and
+        // cached every TA): the largest feature address must sit inside
+        // this batch.  No per-batch rescan of the program.
+        if let Some(max_feat) = self.prog.max_feat {
             if max_feat as usize >= packed_features.len() {
                 return Err(CoreError::Isa(isa::IsaError::OffsetOverrun {
                     index: 0,
@@ -328,32 +337,33 @@ impl Core {
                 }));
             }
         }
+        self.fmem.load(packed_features)?;
 
-        // Hot loop: predecoded micro-ops, no per-instruction state
-        // machine (see MicroOp docs / EXPERIMENTS.md §Perf).
-        let mut cur = u32::MAX;
-        for op in &self.ops {
-            if let Some((cls, pol)) = op.commit {
-                isa::apply_commit(&mut sums, (cls as usize, pol as i32, cur));
-                clause_count += 1;
-                cur = u32::MAX;
-            }
-            let word = self.fmem.literal_word(op.feat as usize, op.complement);
-            cur &= word;
-        }
-        if let Some((cls, pol)) = self.final_commit {
-            isa::apply_commit(&mut sums, (cls as usize, pol as i32, cur));
-            clause_count += 1;
-        }
+        out.cycles = CycleStats {
+            // 2 header words + payload words, 1/cycle.
+            feature_load: 2 + self.codec.feature_payload_len(packed_features.len()) as u64,
+            ..CycleStats::default()
+        };
 
+        // Reset sums without reallocating.
+        out.class_sums.clear();
+        out.class_sums.resize(self.classes, [0i32; 32]);
+
+        // Hot loop: branch-free AND-reduction over contiguous clause
+        // segments of the SoA program (see SoaProgram docs /
+        // EXPERIMENTS.md §Perf).
+        let clause_count = self.prog.execute_into(self.fmem.words(), &mut out.class_sums);
+
+        let n = self.imem.len();
+        self.trace.clear();
         if self.trace_enabled {
             for i in 0..n.min(64) {
-                self.record_trace(i, clause_count, cycles.feature_load);
+                self.record_trace(i, clause_count, out.cycles.feature_load);
             }
         }
 
         // Fig 5 timing.
-        cycles.execute = match self.cfg.pipeline {
+        out.cycles.execute = match self.cfg.pipeline {
             PipelineMode::Pipelined => {
                 if n == 0 {
                     0
@@ -363,25 +373,48 @@ impl Core {
             }
             PipelineMode::Iterative => 4 * n as u64,
         };
-        cycles.commit = clause_count;
-        cycles.argmax = self.classes as u64; // sequential compare chain
-        let preds = argmax_lanes(&sums);
+        out.cycles.commit = clause_count;
+        out.cycles.argmax = self.classes as u64; // sequential compare chain
+        out.preds = argmax_lanes(&out.class_sums);
         // FIFO fill: 8-bit classes over the 32-bit output port.
-        cycles.fifo = (32 * 8 / 32) as u64;
-        self.fifo.push_batch(&preds);
+        out.cycles.fifo = (32 * 8 / 32) as u64;
+        self.fifo.push_batch(&out.preds);
 
-        self.accumulate(&cycles);
+        self.accumulate(&out.cycles);
         self.batches_run += 1;
-        Ok(BatchResult { class_sums: sums, preds, cycles })
+        Ok(())
+    }
+
+    /// Execute a stream of batches, amortizing per-call setup: one
+    /// programmed-check, reused feature memory, results allocated once
+    /// up front.  Semantically identical to calling [`Self::run_batch`]
+    /// per element (byte-identical `BatchResult`s, same `CycleStats`
+    /// accumulation).
+    pub fn run_batches(&mut self, batches: &[&[u32]]) -> Result<Vec<BatchResult>, CoreError> {
+        if !self.is_programmed() {
+            return Err(CoreError::NotProgrammed);
+        }
+        let mut out = Vec::with_capacity(batches.len());
+        for &packed in batches {
+            let mut r = BatchResult::default();
+            self.run_batch_into(packed, &mut r)?;
+            out.push(r);
+        }
+        Ok(out)
     }
 
     /// Convenience: run <= 32 datapoints given as feature rows; returns
-    /// per-datapoint predictions.
+    /// per-datapoint predictions.  Uses the core's reusable scratch
+    /// result (no per-call sums allocation).
     pub fn run_rows(&mut self, rows: &[Vec<u8>]) -> Result<Vec<usize>, CoreError> {
         let n = rows.len();
         let packed = isa::pack_features(rows);
-        let r = self.run_batch(&packed)?;
-        Ok(r.preds[..n].iter().map(|&p| p as usize).collect())
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let res = self.run_batch_into(&packed, &mut scratch);
+        let preds = scratch.preds;
+        self.scratch = scratch;
+        res?;
+        Ok(preds[..n].iter().map(|&p| p as usize).collect())
     }
 
     fn accumulate(&mut self, c: &CycleStats) {
@@ -563,6 +596,76 @@ mod tests {
             let single = core.run_rows(&[row.clone()]).unwrap();
             assert_eq!(single[0], batched[i], "dp {i}");
         }
+    }
+
+    #[test]
+    fn run_batches_matches_repeated_run_batch() {
+        let (model, data) = trained_tiny();
+        let packed_a = isa::pack_features(&data.xs[..32].to_vec());
+        let packed_b = isa::pack_features(&data.xs[32..64].to_vec());
+
+        let mut one = Core::new(AccelConfig::base());
+        one.program_model(&model).unwrap();
+        let ra = one.run_batch(&packed_a).unwrap();
+        let rb = one.run_batch(&packed_b).unwrap();
+
+        let mut many = Core::new(AccelConfig::base());
+        many.program_model(&model).unwrap();
+        let rs = many.run_batches(&[&packed_a, &packed_b]).unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0], ra);
+        assert_eq!(rs[1], rb);
+        assert_eq!(one.stats, many.stats);
+        assert_eq!(many.batches_run, 2);
+    }
+
+    #[test]
+    fn run_batch_into_reuses_result_buffers() {
+        let (model, data) = trained_tiny();
+        let mut core = Core::new(AccelConfig::base());
+        core.program_model(&model).unwrap();
+        let packed = isa::pack_features(&data.xs[..32].to_vec());
+
+        let fresh = core.run_batch(&packed).unwrap();
+        let mut reused = BatchResult::default();
+        core.run_batch_into(&packed, &mut reused).unwrap();
+        assert_eq!(reused, fresh);
+        // Second pass into the same result: identical again, in place.
+        core.run_batch_into(&packed, &mut reused).unwrap();
+        assert_eq!(reused, fresh);
+    }
+
+    #[test]
+    fn failed_program_unprograms_core() {
+        // A corrupt stream mid-predecode must not leave a truncated
+        // walk behind: the core reports NotProgrammed afterwards.
+        let (model, data) = trained_tiny();
+        let mut core = Core::new(AccelConfig::base());
+        core.program_model(&model).unwrap();
+        let bad = vec![
+            Instr::new(false, false, false, 0, false),
+            // E toggles with only 1 class in the header: ClassOverrun.
+            Instr::new(false, true, true, 0, false),
+        ];
+        assert!(core.program(1, 1, &bad).is_err());
+        let packed = isa::pack_features(&data.xs[..32].to_vec());
+        assert!(matches!(
+            core.run_batch(&packed),
+            Err(CoreError::NotProgrammed)
+        ));
+        // A good reprogram fully recovers.
+        core.program_model(&model).unwrap();
+        assert!(core.run_batch(&packed).is_ok());
+    }
+
+    #[test]
+    fn run_batches_unprogrammed_errors() {
+        let mut core = Core::new(AccelConfig::base());
+        let packed = [0u32; 4];
+        assert!(matches!(
+            core.run_batches(&[&packed]),
+            Err(CoreError::NotProgrammed)
+        ));
     }
 
     #[test]

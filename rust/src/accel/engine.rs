@@ -1,0 +1,232 @@
+//! Host-side batch scheduler: drives multi-batch, multi-core serving
+//! throughput over the simulators.
+//!
+//! The coordinator's request loop serves one 32-lane batch at a time;
+//! this module is the throughput-oriented complement for offline sweeps
+//! and bulk serving: pack an arbitrary row stream into bit-sliced
+//! batches once, then drive a whole stream through
+//! [`Core::run_batches`] / [`MultiCore::run_batches`] so per-batch
+//! setup (thread spawn for the multi-core path, result allocation,
+//! bounds checks) is amortized across the stream.  Wall-clock and
+//! simulated cycles are reported side by side — the host should run
+//! "as fast as the hardware allows", the cycle model stays the
+//! hardware's.
+
+use super::core::{BatchResult, Core, CoreError};
+use super::multicore::{MultiBatchResult, MultiCore};
+use crate::isa;
+
+/// Throughput accounting for one scheduled stream.
+#[derive(Debug, Clone, Default)]
+pub struct StreamStats {
+    /// 32-lane batches executed.
+    pub batches: u64,
+    /// Datapoints classified (last batch may be ragged).
+    pub inferences: u64,
+    /// Simulated accelerator cycles (per-batch totals summed; for the
+    /// multi-core engine this is the parallel `batch_cycles`).
+    pub simulated_cycles: u64,
+    /// Host wall-clock for the whole stream.
+    pub wall: std::time::Duration,
+}
+
+impl StreamStats {
+    /// Host batches per second.
+    pub fn host_batches_per_s(&self) -> f64 {
+        self.batches as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Host datapoint classifications per second.
+    pub fn host_inferences_per_s(&self) -> f64 {
+        self.inferences as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Simulated accelerator busy-time in microseconds.
+    pub fn simulated_us(&self, freq_mhz: f64) -> f64 {
+        self.simulated_cycles as f64 / freq_mhz
+    }
+}
+
+/// Pack a row stream into 32-lane bit-sliced batches (Feature Memory
+/// layout) — done once, up front, off the serving hot path.
+pub fn pack_stream(rows: &[Vec<u8>]) -> Vec<Vec<u32>> {
+    rows.chunks(32).map(isa::pack_features).collect()
+}
+
+/// Borrow a packed stream as the slice-of-slices the engines take.
+pub fn as_batch_refs(batches: &[Vec<u32>]) -> Vec<&[u32]> {
+    batches.iter().map(Vec::as_slice).collect()
+}
+
+/// Drive a packed batch stream through a single core.
+pub fn run_core_stream(
+    core: &mut Core,
+    batches: &[Vec<u32>],
+    inferences: u64,
+) -> Result<(Vec<BatchResult>, StreamStats), CoreError> {
+    let refs = as_batch_refs(batches);
+    let t0 = std::time::Instant::now();
+    let results = core.run_batches(&refs)?;
+    let wall = t0.elapsed();
+    let stats = StreamStats {
+        batches: results.len() as u64,
+        inferences,
+        simulated_cycles: results.iter().map(|r| r.cycles.total()).sum(),
+        wall,
+    };
+    Ok((results, stats))
+}
+
+/// Drive a packed batch stream through a multi-core engine (class
+/// parallelism across host threads per [`MultiCore::parallel`]).
+pub fn run_multicore_stream(
+    mc: &mut MultiCore,
+    batches: &[Vec<u32>],
+    inferences: u64,
+) -> Result<(Vec<MultiBatchResult>, StreamStats), CoreError> {
+    let refs = as_batch_refs(batches);
+    let t0 = std::time::Instant::now();
+    let results = mc.run_batches(&refs)?;
+    let wall = t0.elapsed();
+    let stats = StreamStats {
+        batches: results.len() as u64,
+        inferences,
+        simulated_cycles: results.iter().map(|r| r.batch_cycles).sum(),
+        wall,
+    };
+    Ok((results, stats))
+}
+
+/// Batches per `MultiCore::run_batches` call in the bulk-classify
+/// path: large enough to amortize the per-call thread spawn, small
+/// enough to keep retained results O(chunk), not O(stream).
+pub const MULTICORE_CHUNK_BATCHES: usize = 256;
+
+/// Bulk-classify rows on a single core: pack, stream, unpack
+/// predictions.  The serving-example entry point.  Memory stays O(1)
+/// per batch: one reused [`BatchResult`] scratch, predictions appended
+/// as each batch completes.
+pub fn classify_rows_core(
+    core: &mut Core,
+    rows: &[Vec<u8>],
+) -> Result<(Vec<usize>, StreamStats), CoreError> {
+    let batches = pack_stream(rows);
+    let t0 = std::time::Instant::now();
+    let mut preds = Vec::with_capacity(rows.len());
+    let mut scratch = BatchResult::default();
+    let mut cycles = 0u64;
+    for b in &batches {
+        core.run_batch_into(b, &mut scratch)?;
+        take_preds(&mut preds, &scratch.preds, rows.len());
+        cycles += scratch.cycles.total();
+    }
+    let stats = StreamStats {
+        batches: batches.len() as u64,
+        inferences: rows.len() as u64,
+        simulated_cycles: cycles,
+        wall: t0.elapsed(),
+    };
+    Ok((preds, stats))
+}
+
+/// Bulk-classify rows on a multi-core engine.  The stream is driven in
+/// [`MULTICORE_CHUNK_BATCHES`]-sized chunks: thread-spawn cost is
+/// amortized within each chunk while retained results stay bounded by
+/// the chunk, not the whole stream.
+pub fn classify_rows_multicore(
+    mc: &mut MultiCore,
+    rows: &[Vec<u8>],
+) -> Result<(Vec<usize>, StreamStats), CoreError> {
+    let batches = pack_stream(rows);
+    let t0 = std::time::Instant::now();
+    let mut preds = Vec::with_capacity(rows.len());
+    let mut n_batches = 0u64;
+    let mut cycles = 0u64;
+    for chunk in batches.chunks(MULTICORE_CHUNK_BATCHES) {
+        let refs = as_batch_refs(chunk);
+        for r in mc.run_batches(&refs)? {
+            take_preds(&mut preds, &r.preds, rows.len());
+            cycles += r.batch_cycles;
+            n_batches += 1;
+        }
+    }
+    let stats = StreamStats {
+        batches: n_batches,
+        inferences: rows.len() as u64,
+        simulated_cycles: cycles,
+        wall: t0.elapsed(),
+    };
+    Ok((preds, stats))
+}
+
+/// Append one batch's 32-lane predictions, clipping the ragged tail.
+fn take_preds(out: &mut Vec<usize>, preds: &[u8; 32], n: usize) {
+    let take = (n - out.len()).min(32);
+    out.extend(preds[..take].iter().map(|&p| p as usize));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::core::AccelConfig;
+    use crate::accel::multicore::ParallelMode;
+    use crate::datasets::synth::SynthSpec;
+    use crate::tm::reference;
+    use crate::TMShape;
+
+    fn trained() -> (crate::TMModel, crate::datasets::synth::Dataset) {
+        let shape = TMShape::synthetic(12, 4, 8);
+        let data = SynthSpec::new(12, 4, 200).noise(0.05).seed(17).generate();
+        let model = crate::trainer::train_model(&shape, &data, 4, 2);
+        (model, data)
+    }
+
+    #[test]
+    fn pack_stream_chunks_rows() {
+        let rows: Vec<Vec<u8>> = (0..70).map(|i| vec![(i & 1) as u8; 12]).collect();
+        let batches = pack_stream(&rows);
+        assert_eq!(batches.len(), 3); // 32 + 32 + 6
+        assert_eq!(batches[0].len(), 12);
+        assert_eq!(batches[0], isa::pack_features(&rows[..32]));
+    }
+
+    #[test]
+    fn core_stream_matches_per_row_reference() {
+        let (model, data) = trained();
+        let mut core = Core::new(AccelConfig::base());
+        core.program_model(&model).unwrap();
+        let (preds, stats) = classify_rows_core(&mut core, &data.xs).unwrap();
+        assert_eq!(preds.len(), data.len());
+        assert_eq!(stats.inferences, data.len() as u64);
+        assert_eq!(stats.batches, data.xs.chunks(32).count() as u64);
+        assert!(stats.simulated_cycles > 0);
+        for (x, &p) in data.xs.iter().zip(&preds) {
+            let lits = reference::literals_from_features(x);
+            assert_eq!(p, reference::predict_dense(&model, &lits));
+        }
+    }
+
+    #[test]
+    fn multicore_stream_matches_core_stream() {
+        let (model, data) = trained();
+        let mut core = Core::new(AccelConfig::base());
+        core.program_model(&model).unwrap();
+        let mut mc = MultiCore::five_core().with_parallel(ParallelMode::Threads);
+        mc.program_model(&model).unwrap();
+        let (a, _) = classify_rows_core(&mut core, &data.xs).unwrap();
+        let (b, stats) = classify_rows_multicore(&mut mc, &data.xs).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(stats.inferences, data.len() as u64);
+    }
+
+    #[test]
+    fn ragged_tail_is_preserved() {
+        let (model, data) = trained();
+        let mut core = Core::new(AccelConfig::base());
+        core.program_model(&model).unwrap();
+        let rows = &data.xs[..37];
+        let (preds, stats) = classify_rows_core(&mut core, rows).unwrap();
+        assert_eq!(preds.len(), 37);
+        assert_eq!(stats.batches, 2);
+    }
+}

@@ -76,12 +76,15 @@ impl FeatureMemory {
         FeatureMemory { depth, data: Vec::new() }
     }
 
-    /// Load one batch worth of feature words.
+    /// Load one batch worth of feature words.  Reuses the backing buffer
+    /// (the BRAM is fixed storage; the host model should not allocate
+    /// per batch either — §Perf in EXPERIMENTS.md).
     pub fn load(&mut self, words: &[u32]) -> Result<(), MemError> {
         if words.len() > self.depth {
             return Err(MemError::FeatureOverflow { need: words.len(), depth: self.depth });
         }
-        self.data = words.to_vec();
+        self.data.clear();
+        self.data.extend_from_slice(words);
         Ok(())
     }
 
@@ -90,6 +93,14 @@ impl FeatureMemory {
     }
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
+    }
+
+    /// Raw bit-sliced contents — the SoA walk reads this directly and
+    /// applies the L bit as a predecoded XOR mask instead of the
+    /// per-read branch in [`Self::literal_word`].
+    #[inline]
+    pub fn words(&self) -> &[u32] {
+        &self.data
     }
 
     /// Literal-select stage read (Fig 4.5): feature word + L-bit invert.
@@ -148,6 +159,15 @@ mod tests {
         assert_eq!(f.literal_word(0, false), 0b1010);
         assert_eq!(f.literal_word(0, true), !0b1010u32);
         assert_eq!(f.literal_word(1, true), 0);
+    }
+
+    #[test]
+    fn feature_reload_replaces_contents() {
+        let mut f = FeatureMemory::new(4);
+        f.load(&[1, 2, 3]).unwrap();
+        f.load(&[9]).unwrap();
+        assert_eq!(f.words(), &[9]);
+        assert_eq!(f.len(), 1);
     }
 
     #[test]

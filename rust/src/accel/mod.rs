@@ -12,13 +12,17 @@
 //! * [`core`] — the base inference core (Fig 4.4-4.6, Fig 5 timing).
 //! * [`fifo`] — the classification output FIFO.
 //! * [`multicore`] — the AXIS-connected multi-core build (Fig 7).
+//! * [`engine`] — host-side batch scheduler for multi-batch, multi-core
+//!   serving throughput.
 
 pub mod axis;
 pub mod core;
+pub mod engine;
 pub mod fifo;
 pub mod memory;
 pub mod multicore;
 pub mod stream;
 
-pub use core::{AccelConfig, BatchResult, Core, CycleStats, PipelineMode};
-pub use multicore::MultiCore;
+pub use self::core::{AccelConfig, BatchResult, Core, CycleStats, PipelineMode};
+pub use self::engine::StreamStats;
+pub use self::multicore::{MultiCore, ParallelMode};

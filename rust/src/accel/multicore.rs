@@ -12,12 +12,35 @@ use super::core::{argmax_lanes, AccelConfig, BatchResult, Core, CoreError};
 use crate::isa;
 use crate::tm::model::TMModel;
 
+/// How the HOST schedules the per-core walks.  The simulated cycle
+/// model is identical either way (cores are parallel hardware; only
+/// host wall-clock changes), and both paths produce byte-identical
+/// results.
+#[derive(Debug, Copy, Clone, PartialEq, Eq, Default)]
+pub enum ParallelMode {
+    /// Thread only when the scheduled work is large enough to amortize
+    /// thread-spawn cost (see [`AUTO_THREAD_MIN_OPS`]).
+    #[default]
+    Auto,
+    /// Always walk cores one after another on the calling thread.
+    Serial,
+    /// Always fan cores out across OS threads (std::thread::scope).
+    Threads,
+}
+
+/// `Auto` threads once `heaviest-core instruction count x batches`
+/// crosses this many instruction slots — roughly where the walk time
+/// clears the ~tens-of-microseconds cost of spawning a thread per core.
+pub const AUTO_THREAD_MIN_OPS: usize = 1 << 16;
+
 /// A multi-core accelerator with class partitioning.
 pub struct MultiCore {
     pub cores: Vec<Core>,
     /// Class ranges (contiguous) per core; `assign[i]` = (start, end).
     pub assign: Vec<(usize, usize)>,
     pub classes: usize,
+    /// Host scheduling policy for `run_batch`/`run_batches`.
+    pub parallel: ParallelMode,
 }
 
 impl MultiCore {
@@ -32,7 +55,14 @@ impl MultiCore {
             cores: (0..n).map(|_| Core::new(per_core.clone())).collect(),
             assign: Vec::new(),
             classes: 0,
+            parallel: ParallelMode::Auto,
         }
+    }
+
+    /// Set the host scheduling policy (builder style).
+    pub fn with_parallel(mut self, p: ParallelMode) -> Self {
+        self.parallel = p;
+        self
     }
 
     pub fn n_cores(&self) -> usize {
@@ -90,34 +120,170 @@ impl MultiCore {
         Ok(())
     }
 
+    /// True when the current policy threads `batches` worth of work.
+    fn use_threads(&self, batches: usize) -> bool {
+        match self.parallel {
+            ParallelMode::Serial => false,
+            ParallelMode::Threads => self.cores.len() > 1,
+            ParallelMode::Auto => {
+                let heaviest = self
+                    .cores
+                    .iter()
+                    .map(|c| c.instruction_count())
+                    .max()
+                    .unwrap_or(0);
+                self.cores.len() > 1 && heaviest.saturating_mul(batches) >= AUTO_THREAD_MIN_OPS
+            }
+        }
+    }
+
     /// Run one bit-sliced batch on all cores (features broadcast),
     /// merging class sums and taking the global argmax.
     ///
     /// Timing: cores run in parallel -> batch cycles = max over cores;
     /// the merge adds one cycle per class (sum gather) plus the argmax
-    /// chain, modeled in `merge_cycles`.
+    /// chain, modeled in `merge_cycles`.  Host scheduling follows
+    /// [`Self::parallel`]; serial and threaded execution are
+    /// byte-identical.
     pub fn run_batch(&mut self, packed_features: &[u32]) -> Result<MultiBatchResult, CoreError> {
+        if self.use_threads(1) {
+            self.run_batch_threaded(packed_features)
+        } else {
+            self.run_batch_serial(packed_features)
+        }
+    }
+
+    /// Serial reference path: cores walk one after another on the
+    /// calling thread.
+    pub fn run_batch_serial(&mut self, packed_features: &[u32]) -> Result<MultiBatchResult, CoreError> {
         if self.assign.is_empty() {
             return Err(CoreError::NotProgrammed);
         }
-        let mut sums = vec![[0i32; 32]; self.classes];
-        let mut slowest: u64 = 0;
         let mut per_core = Vec::with_capacity(self.cores.len());
         for (core, &(s, e)) in self.cores.iter_mut().zip(&self.assign) {
             if s == e {
                 per_core.push(None);
                 continue;
             }
-            let r = core.run_batch(packed_features)?;
-            slowest = slowest.max(r.cycles.total());
-            for (local, class) in (s..e).enumerate() {
-                sums[class] = r.class_sums[local];
+            per_core.push(Some(core.run_batch(packed_features)?));
+        }
+        Ok(self.merge_batch(per_core))
+    }
+
+    /// Parallel serving path: every class-partitioned core walks the
+    /// (broadcast) batch on its own OS thread — the host-side mirror of
+    /// the Fig 7 class-level parallelism.
+    pub fn run_batch_threaded(&mut self, packed_features: &[u32]) -> Result<MultiBatchResult, CoreError> {
+        if self.assign.is_empty() {
+            return Err(CoreError::NotProgrammed);
+        }
+        // `assign` can be shorter than `cores` (idle trailing cores);
+        // slot count follows `assign` so serial and threaded results
+        // have identical `per_core` shapes.
+        let mut slots: Vec<Option<Result<BatchResult, CoreError>>> = Vec::new();
+        slots.resize_with(self.assign.len(), || None);
+        std::thread::scope(|scope| {
+            for ((core, &(s, e)), slot) in self
+                .cores
+                .iter_mut()
+                .zip(&self.assign)
+                .zip(slots.iter_mut())
+            {
+                if s == e {
+                    continue;
+                }
+                scope.spawn(move || {
+                    *slot = Some(core.run_batch(packed_features));
+                });
             }
-            per_core.push(Some(r));
+        });
+        let mut per_core = Vec::with_capacity(slots.len());
+        for slot in slots {
+            match slot {
+                None => per_core.push(None),
+                Some(Err(e)) => return Err(e),
+                Some(Ok(r)) => per_core.push(Some(r)),
+            }
+        }
+        Ok(self.merge_batch(per_core))
+    }
+
+    /// Execute a stream of batches.  Threaded scheduling spawns ONE
+    /// thread per core for the whole stream, so the spawn cost is
+    /// amortized across every batch — the multi-core serving hot path
+    /// (used by [`crate::accel::engine`]).  On success, results are
+    /// byte-identical to repeated [`Self::run_batch`] calls.
+    ///
+    /// Error semantics: the first failing core's error (in core order)
+    /// is returned either way, but threaded scheduling cannot cancel
+    /// sibling cores mid-stream, so after an `Err` the non-failing
+    /// cores may have executed MORE batches (lifetime stats, FIFOs)
+    /// than under serial scheduling, which stops at the failing batch.
+    pub fn run_batches(&mut self, batches: &[&[u32]]) -> Result<Vec<MultiBatchResult>, CoreError> {
+        if self.assign.is_empty() {
+            return Err(CoreError::NotProgrammed);
+        }
+        if batches.is_empty() {
+            return Ok(Vec::new());
+        }
+        if !self.use_threads(batches.len()) {
+            return batches.iter().map(|&b| self.run_batch_serial(b)).collect();
+        }
+        let mut slots: Vec<Option<Result<Vec<BatchResult>, CoreError>>> = Vec::new();
+        slots.resize_with(self.assign.len(), || None);
+        std::thread::scope(|scope| {
+            for ((core, &(s, e)), slot) in self
+                .cores
+                .iter_mut()
+                .zip(&self.assign)
+                .zip(slots.iter_mut())
+            {
+                if s == e {
+                    continue;
+                }
+                scope.spawn(move || {
+                    *slot = Some(core.run_batches(batches));
+                });
+            }
+        });
+        // Surface the first error in core order, then transpose the
+        // per-core streams into per-batch merged results.
+        let mut streams: Vec<Option<std::vec::IntoIter<BatchResult>>> =
+            Vec::with_capacity(slots.len());
+        for slot in slots {
+            match slot {
+                None => streams.push(None),
+                Some(Err(e)) => return Err(e),
+                Some(Ok(v)) => streams.push(Some(v.into_iter())),
+            }
+        }
+        let mut out = Vec::with_capacity(batches.len());
+        for _ in 0..batches.len() {
+            let per_core: Vec<Option<BatchResult>> = streams
+                .iter_mut()
+                .map(|s| s.as_mut().map(|it| it.next().expect("one result per batch")))
+                .collect();
+            out.push(self.merge_batch(per_core));
+        }
+        Ok(out)
+    }
+
+    /// Merge per-core batch results: gather class sums into global
+    /// order, take the slowest core + merge cycles, global argmax.
+    fn merge_batch(&self, per_core: Vec<Option<BatchResult>>) -> MultiBatchResult {
+        let mut sums = vec![[0i32; 32]; self.classes];
+        let mut slowest: u64 = 0;
+        for (r, &(s, e)) in per_core.iter().zip(&self.assign) {
+            if let Some(r) = r {
+                slowest = slowest.max(r.cycles.total());
+                for (local, class) in (s..e).enumerate() {
+                    sums[class] = r.class_sums[local];
+                }
+            }
         }
         let merge_cycles = self.classes as u64 + 1;
         let preds = argmax_lanes(&sums);
-        Ok(MultiBatchResult { class_sums: sums, preds, batch_cycles: slowest + merge_cycles, per_core })
+        MultiBatchResult { class_sums: sums, preds, batch_cycles: slowest + merge_cycles, per_core }
     }
 
     /// Convenience mirror of `Core::run_rows`.
@@ -250,5 +416,96 @@ mod tests {
     fn unprogrammed_multicore_errors() {
         let mut multi = MultiCore::five_core();
         assert!(matches!(multi.run_batch(&[0u32; 4]), Err(CoreError::NotProgrammed)));
+        let batch = [0u32; 4];
+        assert!(matches!(
+            multi.run_batches(&[&batch]),
+            Err(CoreError::NotProgrammed)
+        ));
+    }
+
+    fn assert_multi_eq(a: &MultiBatchResult, b: &MultiBatchResult) {
+        assert_eq!(a.class_sums, b.class_sums);
+        assert_eq!(a.preds, b.preds);
+        assert_eq!(a.batch_cycles, b.batch_cycles);
+        assert_eq!(a.per_core, b.per_core);
+    }
+
+    #[test]
+    fn serial_and_threaded_agree_exactly() {
+        let (model, data) = trained(6);
+        let packed = isa::pack_features(&data.xs[..32].to_vec());
+        let mut serial = MultiCore::five_core().with_parallel(ParallelMode::Serial);
+        serial.program_model(&model).unwrap();
+        let mut threaded = MultiCore::five_core().with_parallel(ParallelMode::Threads);
+        threaded.program_model(&model).unwrap();
+        let rs = serial.run_batch(&packed).unwrap();
+        let rt = threaded.run_batch(&packed).unwrap();
+        assert_multi_eq(&rs, &rt);
+        // Per-core lifetime stats agree too.
+        for (a, b) in serial.cores.iter().zip(&threaded.cores) {
+            assert_eq!(a.stats, b.stats);
+        }
+    }
+
+    #[test]
+    fn run_batches_matches_repeated_run_batch() {
+        let (model, data) = trained(6);
+        let a = isa::pack_features(&data.xs[..32].to_vec());
+        let b = isa::pack_features(&data.xs[32..64].to_vec());
+
+        let mut one = MultiCore::five_core().with_parallel(ParallelMode::Serial);
+        one.program_model(&model).unwrap();
+        let r1 = one.run_batch(&a).unwrap();
+        let r2 = one.run_batch(&b).unwrap();
+
+        let mut many = MultiCore::five_core().with_parallel(ParallelMode::Threads);
+        many.program_model(&model).unwrap();
+        let rs = many.run_batches(&[&a[..], &b[..]]).unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_multi_eq(&rs[0], &r1);
+        assert_multi_eq(&rs[1], &r2);
+    }
+
+    #[test]
+    fn auto_mode_thresholds_on_scheduled_work() {
+        let (model, data) = trained(6);
+        let mut auto = MultiCore::five_core(); // Auto is the default
+        assert_eq!(auto.parallel, ParallelMode::Auto);
+        auto.program_model(&model).unwrap();
+        let heaviest = auto
+            .cores
+            .iter()
+            .map(|c| c.instruction_count())
+            .max()
+            .unwrap();
+        assert!(heaviest > 0);
+        // A tiny model on a single batch stays serial; enough batches
+        // to cross AUTO_THREAD_MIN_OPS instruction slots threads.
+        assert!(!auto.use_threads(1));
+        assert!(auto.use_threads(AUTO_THREAD_MIN_OPS / heaviest + 1));
+
+        // Whatever Auto decides, results equal the pinned-serial path.
+        let packed = isa::pack_features(&data.xs[..32].to_vec());
+        let ra = auto.run_batch(&packed).unwrap();
+        let mut serial = MultiCore::five_core().with_parallel(ParallelMode::Serial);
+        serial.program_model(&model).unwrap();
+        let rs = serial.run_batch(&packed).unwrap();
+        assert_multi_eq(&ra, &rs);
+    }
+
+    #[test]
+    fn threaded_handles_idle_cores() {
+        // More cores than classes: idle cores must be skipped, not
+        // spawned, and results still match the dense reference.
+        let (model, data) = trained(3);
+        let mut multi =
+            MultiCore::new(5, AccelConfig::multicore_core()).with_parallel(ParallelMode::Threads);
+        multi.program_model(&model).unwrap();
+        let rows: Vec<Vec<u8>> = data.xs[..8].to_vec();
+        let preds = multi.run_rows(&rows).unwrap();
+        for (x, &p) in rows.iter().zip(&preds) {
+            let lits = reference::literals_from_features(x);
+            assert_eq!(p, reference::predict_dense(&model, &lits));
+        }
     }
 }

@@ -236,6 +236,143 @@ pub fn apply_commit(sums: &mut [[i32; 32]], commit: Commit) {
     }
 }
 
+/// One contiguous clause segment of a predecoded [`SoaProgram`]: ops
+/// `start..end` AND together, then commit `pol` into class `class`.
+#[derive(Debug, Copy, Clone, PartialEq, Eq)]
+pub struct ClauseSeg {
+    /// First op index of the clause (inclusive).
+    pub start: u32,
+    /// One past the last op index (exclusive).
+    pub end: u32,
+    /// Owning class.
+    pub class: u16,
+    /// Commit polarity (+1 / -1).
+    pub pol: i8,
+}
+
+/// Structure-of-arrays predecoded program: the DECODE-stage state machine
+/// ([`DecodeWalk`]) resolved once at program time so the per-batch hot
+/// loop is a branch-free AND-reduction over contiguous clause segments
+/// (§Perf in EXPERIMENTS.md).
+///
+/// Layout:
+/// * `feats[i]` — feature-memory address of op `i` (TA >> 1);
+/// * `masks[i]` — XOR mask folding the L (complement) bit into the read:
+///   `word ^ mask` replaces the `if complement { !w } else { w }` branch
+///   (0 for the feature, `u32::MAX` for its complement);
+/// * `clauses` — the commit table: one [`ClauseSeg`] per clause, in walk
+///   order (the trailing clause included — no special-cased final
+///   commit);
+/// * `max_feat` — cached maximum feature address, making the per-batch
+///   bounds check O(1) instead of an O(n) rescan.
+#[derive(Debug, Clone, Default)]
+pub struct SoaProgram {
+    pub feats: Vec<u32>,
+    pub masks: Vec<u32>,
+    pub clauses: Vec<ClauseSeg>,
+    pub max_feat: Option<u32>,
+}
+
+impl SoaProgram {
+    /// Number of predecoded ops (== instruction count).
+    pub fn len(&self) -> usize {
+        self.feats.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.feats.is_empty()
+    }
+
+    /// Number of clause commits one batch walk performs.
+    pub fn clause_count(&self) -> usize {
+        self.clauses.len()
+    }
+
+    /// Drop the program, keeping buffers for the next predecode.
+    pub fn clear(&mut self) {
+        self.feats.clear();
+        self.masks.clear();
+        self.clauses.clear();
+        self.max_feat = None;
+    }
+
+    /// Execute one bit-sliced batch over `words` (Feature Memory layout),
+    /// accumulating into `sums` (`[classes][32]`, caller-zeroed).
+    /// Returns the number of clause commits (the commit-cycle count).
+    ///
+    /// Callers must bounds-check `max_feat < words.len()` first; the
+    /// walk itself then only pays the slice-index check on `words`.
+    #[inline]
+    pub fn execute_into(&self, words: &[u32], sums: &mut [[i32; 32]]) -> u64 {
+        for seg in &self.clauses {
+            let (s, e) = (seg.start as usize, seg.end as usize);
+            let mut cur = u32::MAX;
+            for (&f, &m) in self.feats[s..e].iter().zip(&self.masks[s..e]) {
+                cur &= words[f as usize] ^ m;
+            }
+            apply_commit(sums, (seg.class as usize, seg.pol as i32, cur));
+        }
+        self.clauses.len() as u64
+    }
+}
+
+/// Predecode an instruction stream into SoA form, reusing `prog`'s
+/// buffers (the zero-alloc reprogram path).  `literals` bounds the TA
+/// walk (pass [`MAX_LITERALS`] to validate against the architectural
+/// maximum and defer the batch-size check to `max_feat`).
+pub fn predecode_into(
+    instrs: &[Instr],
+    classes: usize,
+    literals: usize,
+    prog: &mut SoaProgram,
+) -> Result<(), IsaError> {
+    prog.clear();
+    prog.feats.reserve(instrs.len());
+    prog.masks.reserve(instrs.len());
+    let mut walk = DecodeWalk::new(classes.max(1));
+    let mut clause_start = 0u32;
+    for (i, &ins) in instrs.iter().enumerate() {
+        let (ta, commit) = match walk.step(i, ins, literals) {
+            Ok(v) => v,
+            Err(e) => {
+                // Never hand back a half-predecoded program: a caller
+                // that swallows the error must find an empty (safe)
+                // program, not a truncated walk with max_feat unset.
+                prog.clear();
+                return Err(e);
+            }
+        };
+        if let Some((cls, pol, _)) = commit {
+            prog.clauses.push(ClauseSeg {
+                start: clause_start,
+                end: i as u32,
+                class: cls as u16,
+                pol: pol as i8,
+            });
+            clause_start = i as u32;
+        }
+        prog.feats.push((ta >> 1) as u32);
+        prog.masks.push(if ins.complement() { u32::MAX } else { 0 });
+    }
+    if let Some((cls, pol, _)) = walk.finish() {
+        prog.clauses.push(ClauseSeg {
+            start: clause_start,
+            end: instrs.len() as u32,
+            class: cls as u16,
+            pol: pol as i8,
+        });
+    }
+    prog.max_feat = prog.feats.iter().copied().max();
+    Ok(())
+}
+
+/// Predecode into a fresh [`SoaProgram`].
+pub fn predecode(instrs: &[Instr], classes: usize, literals: usize) -> Result<SoaProgram, IsaError> {
+    let mut prog = SoaProgram::default();
+    predecode_into(instrs, classes, literals, &mut prog)?;
+    Ok(prog)
+}
+
 /// Bit-sliced walk for a 32-datapoint batch over packed *feature* words
 /// (the accelerator's Feature Memory layout, Fig 4.5): `packed[f]` bit
 /// `b` is Boolean feature `f` of datapoint `b`.  The L bit selects the
@@ -413,6 +550,77 @@ mod tests {
         let rows = vec![vec![1u8, 0], vec![0u8, 1], vec![1u8, 1]];
         let packed = pack_literals(&rows);
         assert_eq!(packed, vec![0b101, 0b110]);
+    }
+
+    #[test]
+    fn soa_walk_matches_packed_walk() {
+        // Two classes, three clauses, mixed complements — the SoA
+        // execution must reproduce decode_infer_packed exactly.
+        let instrs = vec![
+            Instr::new(false, false, false, 0, false), // class 0, clause a: f0
+            Instr::new(false, false, false, 3, true),  // ... AND !f1 (TA 3)
+            Instr::new(true, true, false, 2, false),   // clause b (-): f1
+            Instr::new(false, false, true, 1, true),   // class 1: !f0
+        ];
+        let packed = vec![0b1010u32, 0b0110u32];
+        let reference = decode_infer_packed(&instrs, &packed, 2).unwrap();
+
+        let prog = predecode(&instrs, 2, MAX_LITERALS).unwrap();
+        assert_eq!(prog.len(), 4);
+        assert_eq!(prog.clause_count(), 3);
+        assert_eq!(prog.max_feat, Some(1));
+        let mut sums = vec![[0i32; 32]; 2];
+        let commits = prog.execute_into(&packed, &mut sums);
+        assert_eq!(commits, 3);
+        assert_eq!(sums, reference);
+    }
+
+    #[test]
+    fn soa_segments_are_contiguous_and_cover_all_ops() {
+        let instrs = vec![
+            Instr::new(false, false, false, 0, false),
+            Instr::new(false, false, false, 2, false),
+            Instr::new(true, true, false, 0, false),
+            Instr::new(false, false, true, 1, true),
+        ];
+        let prog = predecode(&instrs, 2, 8).unwrap();
+        assert_eq!(prog.clauses[0].start, 0);
+        for w in prog.clauses.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "contiguous segments");
+        }
+        assert_eq!(prog.clauses.last().unwrap().end as usize, instrs.len());
+        // XOR masks fold the complement bit.
+        assert_eq!(prog.masks, vec![0, 0, 0, u32::MAX]);
+        assert_eq!(prog.feats, vec![0, 1, 0, 0]);
+    }
+
+    #[test]
+    fn soa_predecode_reuses_buffers_and_surfaces_errors() {
+        let good = vec![Instr::new(false, false, false, 0, false)];
+        let mut prog = predecode(&good, 1, 8).unwrap();
+        // Reprogram in place.
+        predecode_into(&good, 1, 8, &mut prog).unwrap();
+        assert_eq!(prog.len(), 1);
+        // Corrupt stream errors exactly like DecodeWalk.
+        let bad = vec![Instr::new(false, false, false, 9, true)];
+        assert_eq!(
+            predecode_into(&bad, 1, 8, &mut prog),
+            Err(IsaError::OffsetOverrun { index: 0, ta: 9, literals: 8 })
+        );
+        // Errors never leave a half-predecoded program behind.
+        assert!(prog.is_empty());
+        assert_eq!(prog.clause_count(), 0);
+        assert_eq!(prog.max_feat, None);
+    }
+
+    #[test]
+    fn soa_empty_stream_is_empty_program() {
+        let prog = predecode(&[], 3, MAX_LITERALS).unwrap();
+        assert!(prog.is_empty());
+        assert_eq!(prog.clause_count(), 0);
+        assert_eq!(prog.max_feat, None);
+        let mut sums = vec![[0i32; 32]; 3];
+        assert_eq!(prog.execute_into(&[], &mut sums), 0);
     }
 
     #[test]

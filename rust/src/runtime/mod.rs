@@ -13,54 +13,20 @@
 //!   the training node's evaluation engine.
 //! * [`TrainExecutable`] — `tm_train_<cfg>.hlo.txt`: one batch of vanilla
 //!   TM feedback.  This is what the Model Training Node (Fig 8) runs.
+//!
+//! # Feature gating
+//!
+//! The `xla` crate is not part of the offline vendor set, so the real
+//! executor is gated behind the off-by-default `pjrt` cargo feature
+//! (add the `xla` dependency to Cargo.toml when enabling it).  Without
+//! the feature this module compiles an API-identical stub whose entry
+//! point ([`Runtime::cpu`]) returns a descriptive error — every caller
+//! already handles artifact absence, and the native trainer/simulator
+//! paths are unaffected.
 
-use crate::config::{Manifest, TMShape};
+use crate::config::TMShape;
 use crate::tm::model::TMModel;
-use anyhow::{Context, Result};
-use std::path::Path;
-
-/// Shared PJRT CPU client.  Create once, clone freely (the underlying
-/// client is reference-counted by the xla crate).
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(wrap)?;
-        Ok(Runtime { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn compile(&self, hlo_path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(hlo_path)
-            .map_err(wrap)
-            .with_context(|| format!("parsing {}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client.compile(&comp).map_err(wrap)
-    }
-
-    /// Load + compile the inference artifact for `cfg`.
-    pub fn load_infer(&self, manifest: &Manifest, cfg: &str) -> Result<InferExecutable> {
-        let entry = manifest.entry(cfg)?;
-        let exe = self.compile(&manifest.infer_hlo_path(cfg)?)?;
-        Ok(InferExecutable { exe, shape: entry.shape.clone() })
-    }
-
-    /// Load + compile the train-step artifact for `cfg`.
-    pub fn load_train(&self, manifest: &Manifest, cfg: &str) -> Result<TrainExecutable> {
-        let entry = manifest.entry(cfg)?;
-        let exe = self.compile(&manifest.train_hlo_path(cfg)?)?;
-        Ok(TrainExecutable { exe, shape: entry.shape.clone() })
-    }
-}
-
-fn wrap(e: xla::Error) -> anyhow::Error {
-    anyhow::anyhow!("xla: {e}")
-}
+use anyhow::Result;
 
 /// Result of one packed-batch inference: per-class sums and argmax
 /// predictions for 32 bit-sliced datapoints.
@@ -72,90 +38,221 @@ pub struct InferOut {
     pub preds: Vec<i32>,
 }
 
-/// Compiled packed-inference graph.
-pub struct InferExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    pub shape: TMShape,
+/// Fresh TA states just below the Include boundary.
+pub fn init_ta_states(shape: &TMShape, rng: &mut crate::datasets::synth::XorShift64Star) -> Vec<i32> {
+    (0..shape.total_tas())
+        .map(|_| shape.n_states - 1 - i32::from(rng.next_f64() < 0.5))
+        .collect()
 }
 
-impl InferExecutable {
-    /// Run one 32-datapoint bit-sliced batch.
-    ///
-    /// `inc_mask` is `u32[K*L]` row-major (0 / 0xFFFF_FFFF); `xs_packed`
-    /// is `u32[L]`.
-    pub fn infer_packed(&self, inc_mask: &[u32], xs_packed: &[u32]) -> Result<InferOut> {
-        let k = self.shape.total_clauses();
-        let l = self.shape.literals();
-        anyhow::ensure!(inc_mask.len() == k * l, "inc_mask len {} != {}", inc_mask.len(), k * l);
-        anyhow::ensure!(xs_packed.len() == l, "xs_packed len {} != {}", xs_packed.len(), l);
-        let mask = xla::Literal::vec1(inc_mask)
-            .reshape(&[k as i64, l as i64])
-            .map_err(wrap)?;
-        let xs = xla::Literal::vec1(xs_packed);
-        let result = self.exe.execute::<xla::Literal>(&[mask, xs]).map_err(wrap)?[0][0]
-            .to_literal_sync()
-            .map_err(wrap)?;
-        let (sums, preds) = result.to_tuple2().map_err(wrap)?;
-        let flat: Vec<i32> = sums.to_vec().map_err(wrap)?;
-        let class_sums = flat.chunks(32).map(|c| c.to_vec()).collect();
-        let preds: Vec<i32> = preds.to_vec().map_err(wrap)?;
-        Ok(InferOut { class_sums, preds })
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::{InferOut, Result, TMModel, TMShape};
+    use crate::config::Manifest;
+    use anyhow::Context;
+    use std::path::Path;
+
+    /// Shared PJRT CPU client.  Create once, clone freely (the underlying
+    /// client is reference-counted by the xla crate).
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    /// Convenience: run a dense model over one batch of literal rows
-    /// (<= 32 datapoints), returning predictions for the first
-    /// `lits.len()` lanes.
-    pub fn infer_rows(&self, model: &TMModel, lits: &[Vec<u8>]) -> Result<Vec<usize>> {
-        let n = lits.len();
-        anyhow::ensure!(n <= 32, "at most 32 datapoints per packed batch");
-        let packed = crate::isa::pack_literals(lits);
-        let out = self.infer_packed(&model.to_packed_mask(), &packed)?;
-        Ok(out.preds[..n].iter().map(|&p| p as usize).collect())
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(wrap)?;
+            Ok(Runtime { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        fn compile(&self, hlo_path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(hlo_path)
+                .map_err(wrap)
+                .with_context(|| format!("parsing {}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            self.client.compile(&comp).map_err(wrap)
+        }
+
+        /// Load + compile the inference artifact for `cfg`.
+        pub fn load_infer(&self, manifest: &Manifest, cfg: &str) -> Result<InferExecutable> {
+            let entry = manifest.entry(cfg)?;
+            let exe = self.compile(&manifest.infer_hlo_path(cfg)?)?;
+            Ok(InferExecutable { exe, shape: entry.shape.clone() })
+        }
+
+        /// Load + compile the train-step artifact for `cfg`.
+        pub fn load_train(&self, manifest: &Manifest, cfg: &str) -> Result<TrainExecutable> {
+            let entry = manifest.entry(cfg)?;
+            let exe = self.compile(&manifest.train_hlo_path(cfg)?)?;
+            Ok(TrainExecutable { exe, shape: entry.shape.clone() })
+        }
+    }
+
+    fn wrap(e: xla::Error) -> anyhow::Error {
+        anyhow::anyhow!("xla: {e}")
+    }
+
+    /// Compiled packed-inference graph.
+    pub struct InferExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        pub shape: TMShape,
+    }
+
+    impl InferExecutable {
+        /// Run one 32-datapoint bit-sliced batch.
+        ///
+        /// `inc_mask` is `u32[K*L]` row-major (0 / 0xFFFF_FFFF); `xs_packed`
+        /// is `u32[L]`.
+        pub fn infer_packed(&self, inc_mask: &[u32], xs_packed: &[u32]) -> Result<InferOut> {
+            let k = self.shape.total_clauses();
+            let l = self.shape.literals();
+            anyhow::ensure!(inc_mask.len() == k * l, "inc_mask len {} != {}", inc_mask.len(), k * l);
+            anyhow::ensure!(xs_packed.len() == l, "xs_packed len {} != {}", xs_packed.len(), l);
+            let mask = xla::Literal::vec1(inc_mask)
+                .reshape(&[k as i64, l as i64])
+                .map_err(wrap)?;
+            let xs = xla::Literal::vec1(xs_packed);
+            let result = self.exe.execute::<xla::Literal>(&[mask, xs]).map_err(wrap)?[0][0]
+                .to_literal_sync()
+                .map_err(wrap)?;
+            let (sums, preds) = result.to_tuple2().map_err(wrap)?;
+            let flat: Vec<i32> = sums.to_vec().map_err(wrap)?;
+            let class_sums = flat.chunks(32).map(|c| c.to_vec()).collect();
+            let preds: Vec<i32> = preds.to_vec().map_err(wrap)?;
+            Ok(InferOut { class_sums, preds })
+        }
+
+        /// Convenience: run a dense model over one batch of literal rows
+        /// (<= 32 datapoints), returning predictions for the first
+        /// `lits.len()` lanes.
+        pub fn infer_rows(&self, model: &TMModel, lits: &[Vec<u8>]) -> Result<Vec<usize>> {
+            let n = lits.len();
+            anyhow::ensure!(n <= 32, "at most 32 datapoints per packed batch");
+            let packed = crate::isa::pack_literals(lits);
+            let out = self.infer_packed(&model.to_packed_mask(), &packed)?;
+            Ok(out.preds[..n].iter().map(|&p| p as usize).collect())
+        }
+    }
+
+    /// Compiled train-step graph (one batch of feedback).
+    pub struct TrainExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        pub shape: TMShape,
+    }
+
+    impl TrainExecutable {
+        /// Apply one batch of feedback, returning the updated TA states.
+        ///
+        /// `ta_state` is `i32[M*C*L]` row-major; `x_lit` is `i32[B*L]` literal
+        /// rows; `ys` class labels; `seed` two u32 words of PRNG key.
+        pub fn step(
+            &self,
+            ta_state: &[i32],
+            x_lit: &[i32],
+            ys: &[i32],
+            seed: [i32; 2],
+        ) -> Result<Vec<i32>> {
+            let (m, c, l, b) = (
+                self.shape.classes,
+                self.shape.clauses,
+                self.shape.literals(),
+                self.shape.train_batch,
+            );
+            anyhow::ensure!(ta_state.len() == m * c * l, "ta_state len");
+            anyhow::ensure!(x_lit.len() == b * l, "x_lit len {} != {}", x_lit.len(), b * l);
+            anyhow::ensure!(ys.len() == b, "ys len");
+            let ta = xla::Literal::vec1(ta_state)
+                .reshape(&[m as i64, c as i64, l as i64])
+                .map_err(wrap)?;
+            let x = xla::Literal::vec1(x_lit)
+                .reshape(&[b as i64, l as i64])
+                .map_err(wrap)?;
+            let y = xla::Literal::vec1(ys);
+            let s = xla::Literal::vec1(&seed[..]);
+            let result = self.exe.execute::<xla::Literal>(&[ta, x, y, s]).map_err(wrap)?[0][0]
+                .to_literal_sync()
+                .map_err(wrap)?;
+            let out = result.to_tuple1().map_err(wrap)?;
+            out.to_vec().map_err(wrap)
+        }
     }
 }
 
-/// Compiled train-step graph (one batch of feedback).
-pub struct TrainExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    pub shape: TMShape,
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::{InferOut, Result, TMModel, TMShape};
+    use crate::config::Manifest;
+
+    const MSG: &str = "built without the `pjrt` feature: the PJRT executor needs the `xla` \
+                       crate (not in the offline vendor set); use the native backend, or add \
+                       the dependency and rebuild with `--features pjrt`";
+
+    /// Stub PJRT client: constructing it reports how to enable the real
+    /// one.  Keeps every caller compiling (and failing gracefully at
+    /// runtime) in offline builds.
+    pub struct Runtime {
+        _priv: (),
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            anyhow::bail!(MSG)
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-disabled".to_string()
+        }
+
+        pub fn load_infer(&self, _manifest: &Manifest, _cfg: &str) -> Result<InferExecutable> {
+            anyhow::bail!(MSG)
+        }
+
+        pub fn load_train(&self, _manifest: &Manifest, _cfg: &str) -> Result<TrainExecutable> {
+            anyhow::bail!(MSG)
+        }
+    }
+
+    /// Stub of the compiled packed-inference graph (not constructible
+    /// without the `pjrt` feature).
+    pub struct InferExecutable {
+        pub shape: TMShape,
+    }
+
+    impl InferExecutable {
+        pub fn infer_packed(&self, _inc_mask: &[u32], _xs_packed: &[u32]) -> Result<InferOut> {
+            anyhow::bail!(MSG)
+        }
+
+        pub fn infer_rows(&self, _model: &TMModel, _lits: &[Vec<u8>]) -> Result<Vec<usize>> {
+            anyhow::bail!(MSG)
+        }
+    }
+
+    /// Stub of the compiled train-step graph (not constructible without
+    /// the `pjrt` feature).
+    pub struct TrainExecutable {
+        pub shape: TMShape,
+    }
+
+    impl TrainExecutable {
+        pub fn step(
+            &self,
+            _ta_state: &[i32],
+            _x_lit: &[i32],
+            _ys: &[i32],
+            _seed: [i32; 2],
+        ) -> Result<Vec<i32>> {
+            anyhow::bail!(MSG)
+        }
+    }
 }
+
+pub use imp::{InferExecutable, Runtime, TrainExecutable};
 
 impl TrainExecutable {
-    /// Apply one batch of feedback, returning the updated TA states.
-    ///
-    /// `ta_state` is `i32[M*C*L]` row-major; `x_lit` is `i32[B*L]` literal
-    /// rows; `ys` class labels; `seed` two u32 words of PRNG key.
-    pub fn step(
-        &self,
-        ta_state: &[i32],
-        x_lit: &[i32],
-        ys: &[i32],
-        seed: [i32; 2],
-    ) -> Result<Vec<i32>> {
-        let (m, c, l, b) = (
-            self.shape.classes,
-            self.shape.clauses,
-            self.shape.literals(),
-            self.shape.train_batch,
-        );
-        anyhow::ensure!(ta_state.len() == m * c * l, "ta_state len");
-        anyhow::ensure!(x_lit.len() == b * l, "x_lit len {} != {}", x_lit.len(), b * l);
-        anyhow::ensure!(ys.len() == b, "ys len");
-        let ta = xla::Literal::vec1(ta_state)
-            .reshape(&[m as i64, c as i64, l as i64])
-            .map_err(wrap)?;
-        let x = xla::Literal::vec1(x_lit)
-            .reshape(&[b as i64, l as i64])
-            .map_err(wrap)?;
-        let y = xla::Literal::vec1(ys);
-        let s = xla::Literal::vec1(&seed[..]);
-        let result = self.exe.execute::<xla::Literal>(&[ta, x, y, s]).map_err(wrap)?[0][0]
-            .to_literal_sync()
-            .map_err(wrap)?;
-        let out = result.to_tuple1().map_err(wrap)?;
-        out.to_vec().map_err(wrap)
-    }
-
     /// Train over a dataset for `epochs`, starting from fresh states.
     pub fn fit(&self, xs: &[Vec<u8>], ys: &[usize], epochs: usize, seed: u64) -> Result<Vec<i32>> {
         let b = self.shape.train_batch;
@@ -185,11 +282,4 @@ impl TrainExecutable {
     pub fn model_from_states(&self, ta: &[i32]) -> TMModel {
         TMModel::from_ta_states(self.shape.clone(), ta)
     }
-}
-
-/// Fresh TA states just below the Include boundary.
-pub fn init_ta_states(shape: &TMShape, rng: &mut crate::datasets::synth::XorShift64Star) -> Vec<i32> {
-    (0..shape.total_tas())
-        .map(|_| shape.n_states - 1 - i32::from(rng.next_f64() < 0.5))
-        .collect()
 }

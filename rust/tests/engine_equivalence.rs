@@ -1,0 +1,247 @@
+//! Engine equivalence properties: the SoA execution engine
+//! (predecoded branch-free walk, zero-alloc batches, threaded
+//! multi-core) must be byte-identical — `preds`, `class_sums` AND
+//! `CycleStats` — to the ISA software walk (`isa::decode_infer_packed`),
+//! to the dense reference, and to an independent reimplementation of
+//! the pre-SoA per-batch loop (`DecodeWalk` + `apply_commit`).
+//!
+//! The cycle model simulates the eFPGA; the SoA rebuild may only change
+//! host wall-clock, never a single simulated cycle.
+
+use rttm::accel::core::{AccelConfig, BatchResult, Core, CycleStats, PipelineMode};
+use rttm::accel::multicore::{MultiCore, ParallelMode};
+use rttm::accel::stream::StreamCodec;
+use rttm::datasets::synth::XorShift64Star;
+use rttm::isa::{self, DecodeWalk, Instr};
+use rttm::tm::{model::TMModel, reference};
+use rttm::TMShape;
+
+/// Random dense model; classes listed in `empty` stay include-free so
+/// the encoder's tautology-killer clauses are exercised.
+fn random_model(rng: &mut XorShift64Star, shape: &TMShape, density: f64, empty: &[usize]) -> TMModel {
+    let mut m = TMModel::empty(shape.clone());
+    for class in 0..shape.classes {
+        if empty.contains(&class) {
+            continue;
+        }
+        for clause in 0..shape.clauses {
+            for lit in 0..shape.literals() {
+                if rng.next_f64() < density {
+                    m.set_include(class, clause, lit, true);
+                }
+            }
+        }
+    }
+    m
+}
+
+fn random_rows(rng: &mut XorShift64Star, features: usize) -> Vec<Vec<u8>> {
+    (0..32)
+        .map(|_| (0..features).map(|_| u8::from(rng.next_f64() < 0.5)).collect())
+        .collect()
+}
+
+/// Independent oracle: the pre-SoA per-batch hot loop, reimplemented
+/// from `DecodeWalk` exactly as the seed `Core::run_batch` executed it
+/// (branchy commit Option, literal-select branch).  Returns per-class
+/// sums and the clause-commit count.
+fn legacy_walk(instrs: &[Instr], packed: &[u32], classes: usize) -> (Vec<[i32; 32]>, u64) {
+    let mut sums = vec![[0i32; 32]; classes];
+    let mut clause_count = 0u64;
+    let mut walk = DecodeWalk::new(classes.max(1));
+    let mut cur = u32::MAX;
+    for (i, &ins) in instrs.iter().enumerate() {
+        let (ta, commit) = walk.step(i, ins, isa::MAX_LITERALS).unwrap();
+        if let Some((cls, pol, _)) = commit {
+            isa::apply_commit(&mut sums, (cls, pol, cur));
+            clause_count += 1;
+            cur = u32::MAX;
+        }
+        let w = packed[ta >> 1];
+        cur &= if ins.complement() { !w } else { w };
+    }
+    if let Some((cls, pol, _)) = walk.finish() {
+        isa::apply_commit(&mut sums, (cls, pol, cur));
+        clause_count += 1;
+    }
+    (sums, clause_count)
+}
+
+/// The Fig 5 cycle model computed independently of the Core.
+fn expected_cycles(
+    codec: &StreamCodec,
+    mode: PipelineMode,
+    n_instrs: usize,
+    n_feature_words: usize,
+    classes: usize,
+    clause_count: u64,
+) -> CycleStats {
+    CycleStats {
+        program: 0,
+        feature_load: 2 + codec.feature_payload_len(n_feature_words) as u64,
+        execute: match mode {
+            PipelineMode::Pipelined => {
+                if n_instrs == 0 {
+                    0
+                } else {
+                    3 + n_instrs as u64
+                }
+            }
+            PipelineMode::Iterative => 4 * n_instrs as u64,
+        },
+        commit: clause_count,
+        argmax: classes as u64,
+        fifo: 8,
+    }
+}
+
+#[test]
+fn soa_core_matches_isa_walk_dense_reference_and_legacy_loop() {
+    for seed in 0..60u64 {
+        let mut rng = XorShift64Star::new(40_000 + seed);
+        let shape = TMShape::synthetic(
+            1 + rng.below(24) as usize,
+            1 + rng.below(5) as usize,
+            1 + rng.below(12) as usize,
+        );
+        // Roughly every third model gets an include-free class 0
+        // (runtime re-tuning can produce these; the encoder emits the
+        // tautology-killer pair for them).
+        let empty: Vec<usize> = if seed % 3 == 0 { vec![0] } else { vec![] };
+        let density = rng.next_f64() * 0.3;
+        let model = random_model(&mut rng, &shape, density, &empty);
+        let instrs = isa::encode(&model);
+        let rows = random_rows(&mut rng, shape.features);
+        let packed = isa::pack_features(&rows);
+
+        // Oracles.
+        let isa_sums = isa::decode_infer_packed(&instrs, &packed, shape.classes).unwrap();
+        let (legacy_sums, legacy_clauses) = legacy_walk(&instrs, &packed, shape.classes);
+        assert_eq!(isa_sums, legacy_sums, "seed {seed}: oracles disagree");
+
+        for mode in [PipelineMode::Pipelined, PipelineMode::Iterative] {
+            let mut core = Core::new(AccelConfig::base().with_pipeline(mode));
+            core.program(shape.classes, shape.clauses, &instrs).unwrap();
+            let r = core.run_batch(&packed).unwrap();
+
+            assert_eq!(r.class_sums, isa_sums, "seed {seed} {mode:?}: class_sums");
+            let want = expected_cycles(
+                &core.codec,
+                mode,
+                instrs.len(),
+                packed.len(),
+                shape.classes,
+                legacy_clauses,
+            );
+            assert_eq!(r.cycles, want, "seed {seed} {mode:?}: CycleStats");
+
+            // Predictions match the dense reference lane by lane.
+            for (b, row) in rows.iter().enumerate() {
+                let lits = reference::literals_from_features(row);
+                assert_eq!(
+                    r.preds[b] as usize,
+                    reference::predict_dense(&model, &lits),
+                    "seed {seed} {mode:?} dp {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn run_batches_and_run_batch_into_are_byte_identical() {
+    for seed in 0..20u64 {
+        let mut rng = XorShift64Star::new(50_000 + seed);
+        let shape = TMShape::synthetic(
+            2 + rng.below(16) as usize,
+            1 + rng.below(4) as usize,
+            1 + rng.below(8) as usize,
+        );
+        let model = random_model(&mut rng, &shape, 0.2, &[]);
+        let batches: Vec<Vec<u32>> = (0..4)
+            .map(|_| isa::pack_features(&random_rows(&mut rng, shape.features)))
+            .collect();
+        let refs: Vec<&[u32]> = batches.iter().map(|b| b.as_slice()).collect();
+
+        let mut a = Core::new(AccelConfig::base());
+        a.program_model(&model).unwrap();
+        let singles: Vec<BatchResult> = refs.iter().map(|&b| a.run_batch(b).unwrap()).collect();
+
+        let mut b = Core::new(AccelConfig::base());
+        b.program_model(&model).unwrap();
+        let streamed = b.run_batches(&refs).unwrap();
+        assert_eq!(streamed, singles, "seed {seed}: run_batches");
+        assert_eq!(a.stats, b.stats, "seed {seed}: lifetime stats");
+
+        // Reusing one result buffer across the stream changes nothing.
+        let mut c = Core::new(AccelConfig::base());
+        c.program_model(&model).unwrap();
+        let mut reused = BatchResult::default();
+        for (i, &batch) in refs.iter().enumerate() {
+            c.run_batch_into(batch, &mut reused).unwrap();
+            assert_eq!(reused, singles[i], "seed {seed} batch {i}: run_batch_into");
+        }
+    }
+}
+
+#[test]
+fn multicore_threaded_serial_and_single_core_agree() {
+    for seed in 0..12u64 {
+        let mut rng = XorShift64Star::new(60_000 + seed);
+        let classes = 2 + rng.below(9) as usize;
+        let shape = TMShape::synthetic(2 + rng.below(16) as usize, classes, 1 + rng.below(8) as usize);
+        let empty: Vec<usize> = if seed % 4 == 0 { vec![classes - 1] } else { vec![] };
+        let model = random_model(&mut rng, &shape, 0.15, &empty);
+        let rows = random_rows(&mut rng, shape.features);
+        let packed = isa::pack_features(&rows);
+
+        let mut single = Core::new(AccelConfig::single_core());
+        single.program_model(&model).unwrap();
+        let rs = single.run_batch(&packed).unwrap();
+
+        let mut serial = MultiCore::five_core().with_parallel(ParallelMode::Serial);
+        serial.program_model(&model).unwrap();
+        let mut threaded = MultiCore::five_core().with_parallel(ParallelMode::Threads);
+        threaded.program_model(&model).unwrap();
+
+        let a = serial.run_batch(&packed).unwrap();
+        let b = threaded.run_batch(&packed).unwrap();
+        assert_eq!(a.class_sums, b.class_sums, "seed {seed}");
+        assert_eq!(a.preds, b.preds, "seed {seed}");
+        assert_eq!(a.batch_cycles, b.batch_cycles, "seed {seed}");
+        assert_eq!(a.per_core, b.per_core, "seed {seed}");
+
+        assert_eq!(a.class_sums, rs.class_sums, "seed {seed}: vs single core");
+        assert_eq!(a.preds, rs.preds, "seed {seed}: vs single core");
+
+        // Stream path agrees with the one-batch path.
+        let mut stream = MultiCore::five_core().with_parallel(ParallelMode::Threads);
+        stream.program_model(&model).unwrap();
+        let rs2 = stream.run_batches(&[&packed[..], &packed[..]]).unwrap();
+        for r in &rs2 {
+            assert_eq!(r.class_sums, a.class_sums, "seed {seed}: run_batches");
+            assert_eq!(r.batch_cycles, a.batch_cycles, "seed {seed}: run_batches");
+        }
+    }
+}
+
+#[test]
+fn reprogramming_soa_core_is_idempotent_with_tautology_killers() {
+    // Program A (with an empty class), program B, program A again: the
+    // SoA buffers are reused in place and must leave no residue.
+    let mut rng = XorShift64Star::new(77);
+    let shape = TMShape::synthetic(10, 3, 6);
+    let model_a = random_model(&mut rng, &shape, 0.2, &[1]);
+    let model_b = random_model(&mut rng, &shape, 0.25, &[]);
+    let rows = random_rows(&mut rng, shape.features);
+    let packed = isa::pack_features(&rows);
+
+    let mut core = Core::new(AccelConfig::base());
+    core.program_model(&model_a).unwrap();
+    let first = core.run_batch(&packed).unwrap();
+    core.program_model(&model_b).unwrap();
+    core.run_batch(&packed).unwrap();
+    core.program_model(&model_a).unwrap();
+    let again = core.run_batch(&packed).unwrap();
+    assert_eq!(first, again);
+}

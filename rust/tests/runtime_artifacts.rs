@@ -2,6 +2,10 @@
 //! reference.  This is the three-layer contract test: Pallas kernel (L1)
 //! inside the JAX graph (L2) loaded and run from rust (L3) must agree
 //! with the pure-rust semantics bit-for-bit.
+//!
+//! Requires the `pjrt` feature (the `xla` crate is not in the offline
+//! vendor set) and the AOT artifacts from `make artifacts`.
+#![cfg(feature = "pjrt")]
 
 use rttm::config::Manifest;
 use rttm::datasets::synth::SynthSpec;
