@@ -1,6 +1,13 @@
 //! Multi-core serving (Fig 7): class-parallel inference behind the
-//! threaded service front-end, with latency/throughput accounting for
-//! every configuration — the serving-side story of the paper.
+//! replica-pool service front-end, with latency/throughput accounting
+//! for every configuration — the serving-side story of the paper.
+//!
+//! Two axes of parallelism compose here:
+//! * *inside* a request, the 5-core engine walks class partitions in
+//!   parallel (Fig 7, simulated cycles AND host threads);
+//! * *across* requests, the replica pool fans independent requests out
+//!   to N engine replicas behind one shared queue, reprogrammed in
+//!   lockstep by the version fence (EXPERIMENTS.md §Serving).
 //!
 //! Uses the sensorless-drives workload (11 classes — the case where
 //! class partitioning pays off most; Table 2 notes M wins here).
@@ -12,8 +19,8 @@
 use rttm::accel::core::AccelConfig;
 use rttm::accel::engine as sched;
 use rttm::accel::multicore::{MultiCore, ParallelMode};
-use rttm::coordinator::server::spawn;
-use rttm::coordinator::{Engine, InferenceService, TrainingNode};
+use rttm::coordinator::server::spawn_pool;
+use rttm::coordinator::{Engine, EngineSpec, TrainingNode};
 use rttm::datasets::workloads::workload;
 use rttm::model_cost::energy::EnergyModel;
 
@@ -61,11 +68,13 @@ fn main() -> anyhow::Result<()> {
         ),
     ] {
         let freq = engine.freq_mhz();
-        let (handle, join) = spawn(InferenceService::new(engine));
+        // Single replica per engine here — this table compares the
+        // *engines*; the pool's request-level scaling is shown below.
+        let (handle, mut join) = spawn_pool(engine.to_spec(), 1);
         handle.program(model.clone())?;
 
         let t0 = std::time::Instant::now();
-        // 4 concurrent clients hammering the queue.
+        // 4 concurrent clients hammering the shared queue.
         let mut clients = Vec::new();
         for c in 0..4usize {
             let h = handle.clone();
@@ -84,7 +93,7 @@ fn main() -> anyhow::Result<()> {
         let wall = t0.elapsed();
         let stats = handle.stats()?;
         handle.shutdown();
-        join.join().ok();
+        join.join();
 
         let us_per_batch = stats.simulated_us(freq) / stats.batches as f64;
         println!(
@@ -128,5 +137,51 @@ fn main() -> anyhow::Result<()> {
             stats.simulated_us(deep.freq_mhz),
         );
     }
+
+    // --- Replica pool: request-level scaling across engine replicas.
+    // Each replica is a full engine (here the deep base build); the
+    // shared queue fans concurrent requests across them, and
+    // `program` swaps every replica behind the version fence before
+    // returning — no request ever runs on a mixed-version pool.
+    println!("\n=== replica pool: single worker vs N replicas ===");
+    let replicas = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 8);
+    let pool_spec = EngineSpec::custom(base_deep.clone());
+    for (label, n) in [("1 replica", 1), ("pool", replicas)] {
+        let (handle, mut join) = spawn_pool(pool_spec.clone(), n);
+        handle.program(model.clone())?;
+        let t0 = std::time::Instant::now();
+        let mut clients = Vec::new();
+        for c in 0..replicas {
+            let h = handle.clone();
+            let reqs = requests.clone();
+            clients.push(std::thread::spawn(move || {
+                for (i, r) in reqs.iter().enumerate() {
+                    if i % replicas == c {
+                        h.infer(r.clone()).unwrap();
+                    }
+                }
+            }));
+        }
+        for c in clients {
+            c.join().unwrap();
+        }
+        let wall = t0.elapsed();
+        let stats = handle.stats()?;
+        handle.shutdown();
+        join.join();
+        println!(
+            "{:<10} ({} workers): {:>8.1} ms wall  {:>10.0} requests/s host",
+            label,
+            n,
+            wall.as_secs_f64() * 1e3,
+            stats.batches as f64 / wall.as_secs_f64(),
+        );
+    }
+    println!("\nThe pool multiplies *host* request throughput; per-request");
+    println!("simulated latency (the hardware's) is unchanged — each replica");
+    println!("models one accelerator.");
     Ok(())
 }

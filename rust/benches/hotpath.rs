@@ -20,6 +20,8 @@ use rttm::accel::core::{AccelConfig, BatchResult, Core};
 use rttm::accel::engine;
 use rttm::accel::multicore::{MultiCore, ParallelMode};
 use rttm::config::Manifest;
+use rttm::coordinator::server::spawn_pool;
+use rttm::coordinator::{EngineSpec, InferenceService};
 use rttm::isa::{self, DecodeWalk, Instr};
 use rttm::runtime::Runtime;
 
@@ -232,6 +234,89 @@ fn main() {
         wall.as_secs_f64() * 1e3
     );
     json.push(("scheduler_inferences_per_s".into(), e2e_per_s));
+
+    // 2c. Serving front-end: single-worker vs replica pool (the
+    //     coordinator::server request path, queue + reply channels
+    //     included).  Requests are 1024-row bulk inferences so compute
+    //     dominates the per-request RPC overhead; the pool multiplies
+    //     host throughput while per-request simulated latency (the
+    //     hardware's) is unchanged.
+    println!("\n--- serving front-end (host inferences/s through the pool) ---");
+    let spec = EngineSpec::custom(AccelConfig::base().with_depths(need, 2048));
+    let n_requests = scale(64);
+    let req_rows = 1024usize;
+    let serving_reqs: Vec<Vec<Vec<u8>>> = (0..n_requests)
+        .map(|i| {
+            (0..req_rows)
+                .map(|j| data.xs[(i * req_rows + j) % data.len()].clone())
+                .collect()
+        })
+        .collect();
+    // Predictions through the pool must be byte-identical to a single
+    // InferenceService.
+    let mut reference_svc = InferenceService::new(spec.build());
+    reference_svc.reprogram(&model).unwrap();
+    {
+        let (h, mut join) = spawn_pool(spec.clone(), 4);
+        h.program(model.clone()).unwrap();
+        for r in &serving_reqs {
+            assert_eq!(
+                h.infer(r.clone()).unwrap(),
+                reference_svc.infer_all(r).unwrap(),
+                "pool must match the single-service path"
+            );
+        }
+        h.shutdown();
+        join.join();
+    }
+    let pool_replicas = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(4, 16);
+    let mut measured: Vec<(String, f64)> = Vec::new();
+    for (label, replicas) in [("single_worker", 1usize), ("pool", pool_replicas)] {
+        let (h, mut join) = spawn_pool(spec.clone(), replicas);
+        h.program(model.clone()).unwrap();
+        // Warm-up pass, then the timed pass.
+        for pass in 0..2 {
+            let t0 = std::time::Instant::now();
+            std::thread::scope(|s| {
+                for c in 0..pool_replicas {
+                    let h = h.clone();
+                    let reqs = &serving_reqs;
+                    s.spawn(move || {
+                        for (i, r) in reqs.iter().enumerate() {
+                            if i % pool_replicas == c {
+                                let p = h.infer(r.clone()).unwrap();
+                                std::hint::black_box(p.len());
+                            }
+                        }
+                    });
+                }
+            });
+            if pass == 1 {
+                let wall = t0.elapsed();
+                let inf_per_s =
+                    (n_requests * req_rows) as f64 / wall.as_secs_f64().max(1e-12);
+                println!(
+                    "{label:<14} ({replicas:>2} replicas): {inf_per_s:>12.0} inferences/s host"
+                );
+                measured.push((format!("serving_{label}_inferences_per_s"), inf_per_s));
+            }
+        }
+        h.shutdown();
+        join.join();
+    }
+    let single = measured[0].1;
+    let pool = measured[1].1;
+    json.extend(measured);
+    json.push(("serving_pool_replicas".into(), pool_replicas as f64));
+    json.push(("serving_pool_speedup".into(), pool / single));
+    println!(
+        "pool speedup over single worker: {:.2}x ({} replicas)",
+        pool / single,
+        pool_replicas
+    );
 
     // 3. Software ISA walk, single datapoint (the MCU-interpreter loop).
     let lits = rttm::tm::reference::literals_from_features(&rows[0]);

@@ -163,6 +163,8 @@ pub enum CoreError {
     NotProgrammed,
     #[error("feature count {got} exceeds programmed expectation or memory")]
     BadFeatureCount { got: usize },
+    #[error("malformed batch ({rows} rows): {reason}")]
+    BadBatch { rows: usize, reason: &'static str },
 }
 
 /// One pipeline trace event (for the Fig 5 diagram bench).

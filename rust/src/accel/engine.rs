@@ -47,6 +47,31 @@ impl StreamStats {
     }
 }
 
+/// Validate a request's rows before packing.  `isa::pack_literals`
+/// panics on empty, >32-row and ragged-width input — a serving front
+/// end must reject those as typed errors instead of dying, so every
+/// request-path entry point calls this first (`max_rows` is 32 for a
+/// single-batch call, `usize::MAX` for the chunking bulk paths).
+pub fn validate_rows(rows: &[Vec<u8>], max_rows: usize) -> Result<(), CoreError> {
+    if rows.is_empty() {
+        return Err(CoreError::BadBatch { rows: 0, reason: "empty request" });
+    }
+    if rows.len() > max_rows {
+        return Err(CoreError::BadBatch {
+            rows: rows.len(),
+            reason: "more rows than batch lanes",
+        });
+    }
+    let width = rows[0].len();
+    if rows.iter().any(|r| r.len() != width) {
+        return Err(CoreError::BadBatch {
+            rows: rows.len(),
+            reason: "ragged feature widths",
+        });
+    }
+    Ok(())
+}
+
 /// Pack a row stream into 32-lane bit-sliced batches (Feature Memory
 /// layout) — done once, up front, off the serving hot path.
 pub fn pack_stream(rows: &[Vec<u8>]) -> Vec<Vec<u32>> {
@@ -110,6 +135,10 @@ pub fn classify_rows_core(
     core: &mut Core,
     rows: &[Vec<u8>],
 ) -> Result<(Vec<usize>, StreamStats), CoreError> {
+    if rows.is_empty() {
+        return Ok((Vec::new(), StreamStats::default()));
+    }
+    validate_rows(rows, usize::MAX)?;
     let batches = pack_stream(rows);
     let t0 = std::time::Instant::now();
     let mut preds = Vec::with_capacity(rows.len());
@@ -137,6 +166,10 @@ pub fn classify_rows_multicore(
     mc: &mut MultiCore,
     rows: &[Vec<u8>],
 ) -> Result<(Vec<usize>, StreamStats), CoreError> {
+    if rows.is_empty() {
+        return Ok((Vec::new(), StreamStats::default()));
+    }
+    validate_rows(rows, usize::MAX)?;
     let batches = pack_stream(rows);
     let t0 = std::time::Instant::now();
     let mut preds = Vec::with_capacity(rows.len());
@@ -217,6 +250,52 @@ mod tests {
         let (b, stats) = classify_rows_multicore(&mut mc, &data.xs).unwrap();
         assert_eq!(a, b);
         assert_eq!(stats.inferences, data.len() as u64);
+    }
+
+    #[test]
+    fn validate_rows_rejects_malformed_batches() {
+        assert!(matches!(
+            validate_rows(&[], 32),
+            Err(CoreError::BadBatch { rows: 0, .. })
+        ));
+        let thirty_three: Vec<Vec<u8>> = vec![vec![0u8; 4]; 33];
+        assert!(matches!(
+            validate_rows(&thirty_three, 32),
+            Err(CoreError::BadBatch { rows: 33, .. })
+        ));
+        // The bulk paths take any row count…
+        assert!(validate_rows(&thirty_three, usize::MAX).is_ok());
+        // …but never ragged widths.
+        let ragged = vec![vec![0u8; 4], vec![0u8; 5]];
+        assert!(matches!(
+            validate_rows(&ragged, 32),
+            Err(CoreError::BadBatch { rows: 2, .. })
+        ));
+        assert!(validate_rows(&[vec![0u8; 4], vec![1u8; 4]], 32).is_ok());
+    }
+
+    #[test]
+    fn classify_rows_rejects_ragged_and_accepts_empty() {
+        let (model, _) = trained();
+        let mut core = Core::new(AccelConfig::base());
+        core.program_model(&model).unwrap();
+        let ragged = vec![vec![0u8; 12], vec![0u8; 7]];
+        assert!(matches!(
+            classify_rows_core(&mut core, &ragged),
+            Err(CoreError::BadBatch { .. })
+        ));
+        let (preds, stats) = classify_rows_core(&mut core, &[]).unwrap();
+        assert!(preds.is_empty());
+        assert_eq!(stats.batches, 0);
+
+        let mut mc = MultiCore::five_core();
+        mc.program_model(&model).unwrap();
+        assert!(matches!(
+            classify_rows_multicore(&mut mc, &ragged),
+            Err(CoreError::BadBatch { .. })
+        ));
+        let (preds, _) = classify_rows_multicore(&mut mc, &[]).unwrap();
+        assert!(preds.is_empty());
     }
 
     #[test]

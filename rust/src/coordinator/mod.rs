@@ -9,14 +9,21 @@
 //! * the [`tuner::RecalibrationLoop`] that watches live accuracy and
 //!   reprograms the accelerator with a freshly trained model when drift
 //!   degrades it — the paper's headline runtime-tunability story;
-//! * a threaded [`server`] front-end (std mpsc — the offline toolchain
-//!   has no tokio; the request loop is the same shape).
+//! * a replica-pool [`server`] front-end: N worker threads, each owning
+//!   an `InferenceService` replica, fed from one shared request queue,
+//!   with versioned broadcast reprogramming (no inference ever observes
+//!   a mixed-version pool) and panic supervision (a dying replica is
+//!   respawned from the last-programmed model) — std primitives only;
+//!   the offline toolchain has no tokio, and the request loop is the
+//!   same shape.
 
 pub mod hyperparam;
 pub mod server;
 pub mod service;
 pub mod tuner;
 
-pub use server::{ServiceHandle, ServerStats};
-pub use service::{Engine, InferenceService, Metrics};
+pub use server::{
+    spawn, spawn_pool, PoolJoin, PoolStats, ReplicaStats, ServeError, ServerStats, ServiceHandle,
+};
+pub use service::{Engine, EngineSpec, InferenceService, Metrics};
 pub use tuner::{RecalReport, RecalibrationLoop, TrainBackend, TrainingNode};

@@ -1,99 +1,511 @@
-//! Threaded request front-end: the AXIS/queue interface of the deployed
-//! system, as a worker thread owning the service and an mpsc request
-//! queue (offline toolchain has no tokio; the request loop is shaped
-//! identically: one owner, message passing, bounded in-flight work).
+//! Replica-pool request front-end: the AXIS/queue interface of the
+//! deployed system scaled across N worker threads, each owning an
+//! [`InferenceService`] replica, fed from one shared request queue
+//! (offline toolchain has no tokio; std primitives give the same
+//! shape: shared queue, condvars, message-passing replies).
+//!
+//! Properties the pool guarantees (EXPERIMENTS.md §Serving):
+//!
+//! * **Versioned broadcast reprogram.**  [`ServiceHandle::program`]
+//!   publishes the model under a monotonically increasing version and
+//!   blocks until *every* live replica has swapped (the version fence:
+//!   each worker drains its in-flight request, swaps, then resumes).
+//!   Once `program` returns, no later inference can observe an older
+//!   model, and all replicas report the same version.
+//! * **Panic supervision.**  A request that panics its worker does not
+//!   kill the pool: the panic is caught, the failing request gets a
+//!   typed [`ServeError::WorkerPanicked`], and the replica is rebuilt
+//!   from its [`EngineSpec`] and reprogrammed from the last-programmed
+//!   model before taking more work.  Counters survive the respawn.
+//! * **Typed errors.**  Engine rejections ([`CoreError`], including
+//!   the `BadBatch` malformed-request validation), worker panics and
+//!   pool shutdown are distinct [`ServeError`] variants — no more
+//!   opaque "service worker gone".
+//! * **Aggregated metrics.**  [`ServiceHandle::pool_stats`] reports
+//!   per-replica [`Metrics`] plus a pool rollup; [`ServiceHandle::stats`]
+//!   keeps the old single-service shape (the rollup).
 
-use std::sync::mpsc;
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-use super::service::{InferenceService, Metrics};
+use super::service::{EngineSpec, InferenceService, Metrics};
+use crate::accel::core::CoreError;
 use crate::tm::model::TMModel;
 
-/// Requests the worker accepts.
-enum Request {
-    Infer {
-        rows: Vec<Vec<u8>>,
-        reply: mpsc::Sender<anyhow::Result<Vec<usize>>>,
-    },
-    Program {
-        model: Box<TMModel>,
-        reply: mpsc::Sender<anyhow::Result<()>>,
-    },
-    Stats {
-        reply: mpsc::Sender<Metrics>,
-    },
-    Shutdown,
-}
-
-/// Snapshot returned by [`ServiceHandle::stats`].
+/// Snapshot returned by [`ServiceHandle::stats`] (the pool rollup).
 pub type ServerStats = Metrics;
 
-/// Cloneable client handle to a running service worker.
-#[derive(Clone)]
-pub struct ServiceHandle {
-    tx: mpsc::Sender<Request>,
+/// Errors a request can come back with.  Worker death, engine
+/// rejection and shutdown are distinguishable, so a client can retry,
+/// fix its request, or stop.
+#[derive(Debug, thiserror::Error)]
+pub enum ServeError {
+    /// The engine rejected the request (malformed batch, model not
+    /// programmed, model too big, …).  The replica is fine.
+    #[error(transparent)]
+    Core(#[from] CoreError),
+    /// The replica serving this request panicked.  It has been rebuilt
+    /// from the last-programmed model; retrying on the pool is safe.
+    #[error("replica {replica} panicked serving this request (replica respawned)")]
+    WorkerPanicked { replica: usize },
+    /// The pool has been shut down; no further requests are accepted.
+    #[error("service pool is shut down")]
+    ShutDown,
+    /// A worker dropped the reply without answering (worker death that
+    /// supervision could not intercept).
+    #[error("replica worker died without replying")]
+    WorkerGone,
 }
 
-/// Spawn the worker thread that owns `service`.
-pub fn spawn(mut service: InferenceService) -> (ServiceHandle, JoinHandle<()>) {
-    let (tx, rx) = mpsc::channel::<Request>();
-    let join = std::thread::spawn(move || {
-        while let Ok(req) = rx.recv() {
-            match req {
-                Request::Infer { rows, reply } => {
-                    let r = service.infer_all(&rows).map_err(anyhow::Error::from);
-                    let _ = reply.send(r);
-                }
-                Request::Program { model, reply } => {
-                    let r = service.reprogram(&model).map_err(anyhow::Error::from);
-                    let _ = reply.send(r);
-                }
-                Request::Stats { reply } => {
-                    let _ = reply.send(service.metrics.clone());
-                }
-                Request::Shutdown => break,
-            }
+/// Per-replica snapshot inside [`PoolStats`].
+#[derive(Debug, Clone)]
+pub struct ReplicaStats {
+    pub metrics: Metrics,
+    /// Last model version this replica acknowledged (see
+    /// [`PoolStats::version`]).
+    pub model_version: u64,
+    /// Times this replica was rebuilt after a caught panic.
+    pub respawns: u64,
+    pub alive: bool,
+}
+
+/// Aggregated pool snapshot: per-replica metrics plus the rollup.
+#[derive(Debug, Clone)]
+pub struct PoolStats {
+    pub replicas: Vec<ReplicaStats>,
+    /// Rollup across replicas: counters are summed; `reprograms` is the
+    /// number of pool-level `program` broadcasts (not the per-replica
+    /// sum — each broadcast reprograms every replica once).
+    pub total: Metrics,
+    /// Current target model version (bumped by every `program` call).
+    pub version: u64,
+}
+
+/// One queued unit of work.
+enum Job {
+    Infer {
+        rows: Vec<Vec<u8>>,
+        reply: mpsc::Sender<Result<Vec<usize>, ServeError>>,
+    },
+    /// Fault injection: panic inside the owning worker.  Exercises the
+    /// real supervision path (tests, chaos drills).
+    Crash {
+        reply: mpsc::Sender<Result<Vec<usize>, ServeError>>,
+    },
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// The versioned model cell — the fence state.
+struct ModelCell {
+    /// Target version; bumped by every `program` broadcast.
+    version: u64,
+    /// Last-programmed model (what replicas swap to / respawn from).
+    model: Option<Arc<TMModel>>,
+    /// Per-replica acknowledged version (monotone).
+    acks: Vec<u64>,
+    /// Per-replica swap failure, tagged with the version it failed at.
+    errors: Vec<Option<(u64, CoreError)>>,
+    alive: Vec<bool>,
+}
+
+#[derive(Clone, Default)]
+struct ReplicaMetrics {
+    metrics: Metrics,
+    respawns: u64,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    /// Wakes workers: new job, shutdown, or a pending version fence.
+    queue_cv: Condvar,
+    cell: Mutex<ModelCell>,
+    /// Wakes `program` callers waiting on replica acks.
+    fence_cv: Condvar,
+    /// Mirror of `cell.version`, readable without the cell lock (the
+    /// workers' queue-wait loop polls it; never lock cell inside the
+    /// queue lock).
+    version: AtomicU64,
+    metrics: Mutex<Vec<ReplicaMetrics>>,
+    spec: EngineSpec,
+}
+
+/// Cloneable client handle to a running replica pool.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    shared: Arc<Shared>,
+}
+
+/// Joiner for the pool's worker threads.  `join` is idempotent: the
+/// first call joins everything, later calls are no-ops.  Dropping the
+/// joiner shuts the pool down (queued requests drain first) and joins.
+pub struct PoolJoin {
+    workers: Vec<JoinHandle<()>>,
+    shared: Arc<Shared>,
+}
+
+impl PoolJoin {
+    pub fn join(&mut self) {
+        for h in self.workers.drain(..) {
+            // Workers catch request panics themselves; a join error here
+            // would mean supervision itself died, which Exit handling
+            // already recorded in `alive`.
+            let _ = h.join();
         }
+    }
+}
+
+impl Drop for PoolJoin {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+            self.shared.queue_cv.notify_all();
+        }
+        self.join();
+    }
+}
+
+/// Spawn a single-replica pool — the drop-in shape of the old
+/// one-worker front-end.
+pub fn spawn(spec: EngineSpec) -> (ServiceHandle, PoolJoin) {
+    spawn_pool(spec, 1)
+}
+
+/// Spawn a pool of `replicas` workers, each owning one engine built
+/// from `spec`, all fed from one shared FIFO request queue.
+pub fn spawn_pool(spec: EngineSpec, replicas: usize) -> (ServiceHandle, PoolJoin) {
+    let n = replicas.max(1);
+    let shared = Arc::new(Shared {
+        queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+        queue_cv: Condvar::new(),
+        cell: Mutex::new(ModelCell {
+            version: 0,
+            model: None,
+            acks: vec![0; n],
+            errors: (0..n).map(|_| None).collect(),
+            alive: vec![true; n],
+        }),
+        fence_cv: Condvar::new(),
+        version: AtomicU64::new(0),
+        metrics: Mutex::new(vec![ReplicaMetrics::default(); n]),
+        spec,
     });
-    (ServiceHandle { tx }, join)
+    let workers = (0..n)
+        .map(|i| {
+            let s = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("rttm-replica-{i}"))
+                .spawn(move || worker_loop(&s, i))
+                .expect("spawn replica worker")
+        })
+        .collect();
+    let join = PoolJoin { workers, shared: Arc::clone(&shared) };
+    (ServiceHandle { shared }, join)
 }
 
 impl ServiceHandle {
-    /// Blocking inference RPC.
-    pub fn infer(&self, rows: Vec<Vec<u8>>) -> anyhow::Result<Vec<usize>> {
+    /// Blocking inference RPC.  Any number of rows; the replica splits
+    /// them into 32-lane batches through the bulk scheduler.
+    pub fn infer(&self, rows: Vec<Vec<u8>>) -> Result<Vec<usize>, ServeError> {
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Infer { rows, reply })
-            .map_err(|_| anyhow::anyhow!("service worker gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("service worker dropped reply"))?
+        self.submit(Job::Infer { rows, reply })?;
+        rx.recv().map_err(|_| ServeError::WorkerGone)?
     }
 
-    /// Blocking reprogram RPC (the runtime-tuning path).
-    pub fn program(&self, model: TMModel) -> anyhow::Result<()> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Program { model: Box::new(model), reply })
-            .map_err(|_| anyhow::anyhow!("service worker gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("service worker dropped reply"))?
+    /// Blocking reprogram RPC (the runtime-tuning path), broadcast to
+    /// every replica behind the version fence: returns once all live
+    /// replicas serve the new model.  A failed swap (e.g. model too big
+    /// for the configured memories) leaves the failing replicas
+    /// *unprogrammed* — never on a stale model — so the pool still
+    /// cannot serve mixed versions.
+    pub fn program(&self, model: TMModel) -> Result<(), ServeError> {
+        let target = {
+            let q = self.shared.queue.lock().unwrap();
+            if q.shutdown {
+                return Err(ServeError::ShutDown);
+            }
+            drop(q);
+            let mut cell = self.shared.cell.lock().unwrap();
+            cell.version += 1;
+            cell.model = Some(Arc::new(model));
+            // Publish under the cell lock so the mirror stays ordered.
+            self.shared.version.store(cell.version, Ordering::Release);
+            cell.version
+        };
+        // Wake parked workers so they observe the fence.
+        {
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.queue_cv.notify_all();
+        }
+        // The fence: wait until every live replica acked `target`.
+        let mut cell = self.shared.cell.lock().unwrap();
+        loop {
+            if !cell.alive.iter().any(|&a| a) {
+                return Err(ServeError::ShutDown);
+            }
+            let done = cell
+                .alive
+                .iter()
+                .zip(&cell.acks)
+                .all(|(&alive, &acked)| !alive || acked >= target);
+            if done {
+                break;
+            }
+            cell = self.shared.fence_cv.wait(cell).unwrap();
+        }
+        // Surface a swap failure recorded for EXACTLY this broadcast.
+        // Version targets are unique per program() call, so only this
+        // caller can own a matching error; failures belonging to a
+        // newer concurrent broadcast are left for that caller (a
+        // superseded model returns Ok — the fence still guarantees no
+        // replica serves anything older than it).  All replicas share
+        // one config, so failures are uniform; the first recorded one
+        // is representative.
+        for slot in cell.errors.iter_mut() {
+            if slot.as_ref().is_some_and(|(v, _)| *v == target) {
+                let (_, err) = slot.take().expect("checked above");
+                return Err(ServeError::Core(err));
+            }
+        }
+        Ok(())
     }
 
-    pub fn stats(&self) -> anyhow::Result<ServerStats> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Stats { reply })
-            .map_err(|_| anyhow::anyhow!("service worker gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("service worker dropped reply"))
+    /// Pool rollup in the old single-service shape (counters summed,
+    /// `reprograms` = number of `program` broadcasts).
+    pub fn stats(&self) -> Result<ServerStats, ServeError> {
+        Ok(self.pool_stats().total)
     }
 
+    /// Full per-replica + rollup snapshot.
+    pub fn pool_stats(&self) -> PoolStats {
+        let (version, acks, alive) = {
+            let cell = self.shared.cell.lock().unwrap();
+            (cell.version, cell.acks.clone(), cell.alive.clone())
+        };
+        let per = self.shared.metrics.lock().unwrap();
+        let replicas: Vec<ReplicaStats> = per
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ReplicaStats {
+                metrics: r.metrics.clone(),
+                model_version: acks[i],
+                respawns: r.respawns,
+                alive: alive[i],
+            })
+            .collect();
+        drop(per);
+        let mut total = Metrics::default();
+        for r in &replicas {
+            total.inferences += r.metrics.inferences;
+            total.batches += r.metrics.batches;
+            total.simulated_cycles += r.metrics.simulated_cycles;
+            total.errors += r.metrics.errors;
+        }
+        total.reprograms = version;
+        PoolStats { replicas, total, version }
+    }
+
+    /// Ask the pool to stop.  Queued requests are drained first; new
+    /// submissions are rejected with [`ServeError::ShutDown`].
+    /// Idempotent.
     pub fn shutdown(&self) {
-        let _ = self.tx.send(Request::Shutdown);
+        let mut q = self.shared.queue.lock().unwrap();
+        q.shutdown = true;
+        self.shared.queue_cv.notify_all();
     }
+
+    /// Fault injection: make the replica that picks this request panic
+    /// mid-request.  Returns the same typed error a real panic would,
+    /// after supervision has respawned the replica.  For tests and
+    /// chaos drills.
+    #[doc(hidden)]
+    pub fn inject_panic(&self) -> Result<Vec<usize>, ServeError> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(Job::Crash { reply })?;
+        rx.recv().map_err(|_| ServeError::WorkerGone)?
+    }
+
+    fn submit(&self, job: Job) -> Result<(), ServeError> {
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.shutdown {
+            return Err(ServeError::ShutDown);
+        }
+        q.jobs.push_back(job);
+        self.shared.queue_cv.notify_one();
+        Ok(())
+    }
+}
+
+/// What the queue wait resolved to.
+enum Next {
+    Work(Job),
+    /// A newer model version is pending — swap before taking work.
+    Resync,
+    Exit,
+}
+
+/// Runs on every worker exit — normal return or a panic that escaped
+/// `catch_unwind` (e.g. an invalid spec panicking in `build()`): marks
+/// the replica dead and wakes fence waiters so `program` can never
+/// hang on a corpse.  When the LAST replica dies, flips the pool to
+/// shutdown and drops any parked jobs, so clients blocked on replies
+/// get [`ServeError::WorkerGone`] instead of waiting forever.
+struct DeathWatch<'a> {
+    shared: &'a Shared,
+    idx: usize,
+}
+
+impl Drop for DeathWatch<'_> {
+    fn drop(&mut self) {
+        let all_dead = {
+            let mut cell = self.shared.cell.lock().unwrap();
+            cell.alive[self.idx] = false;
+            !cell.alive.iter().any(|&a| a)
+        };
+        self.shared.fence_cv.notify_all();
+        if all_dead {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+            // Dropping a Job drops its reply Sender -> clients unblock.
+            q.jobs.clear();
+            self.shared.queue_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, idx: usize) {
+    let _watch = DeathWatch { shared, idx };
+    let mut service = InferenceService::new(shared.spec.build());
+    let mut my_version = 0u64;
+    loop {
+        // Fence check between requests: drain (we are between jobs),
+        // swap, resume.
+        if shared.version.load(Ordering::Acquire) != my_version {
+            my_version = program_from_cell(shared, idx, &mut service);
+        }
+        let next = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                // Pending reprogram outranks new work: no job may start
+                // on a stale replica once the fence is up.
+                if shared.version.load(Ordering::Acquire) != my_version {
+                    break Next::Resync;
+                }
+                if let Some(job) = q.jobs.pop_front() {
+                    break Next::Work(job);
+                }
+                if q.shutdown {
+                    break Next::Exit;
+                }
+                q = shared.queue_cv.wait(q).unwrap();
+            }
+        };
+        match next {
+            Next::Resync => continue,
+            // DeathWatch marks the replica dead on the way out.
+            Next::Exit => return,
+            Next::Work(job) => run_job(shared, idx, &mut service, &mut my_version, job),
+        }
+    }
+}
+
+fn run_job(
+    shared: &Shared,
+    idx: usize,
+    service: &mut InferenceService,
+    my_version: &mut u64,
+    job: Job,
+) {
+    let (outcome, reply) = match job {
+        Job::Infer { rows, reply } => (
+            panic::catch_unwind(AssertUnwindSafe(|| service.infer_all(&rows))),
+            reply,
+        ),
+        Job::Crash { reply } => (
+            panic::catch_unwind(AssertUnwindSafe(|| -> Result<Vec<usize>, CoreError> {
+                panic!("injected fault (ServiceHandle::inject_panic)")
+            })),
+            reply,
+        ),
+    };
+    match outcome {
+        Ok(result) => {
+            // Publish metrics BEFORE replying, so a client that got its
+            // answer always sees it reflected in stats().
+            shared.metrics.lock().unwrap()[idx].metrics = service.metrics.clone();
+            let _ = reply.send(result.map_err(ServeError::Core));
+        }
+        Err(_panic) => {
+            // Supervision: the request may have left the replica in an
+            // arbitrary state.  Rebuild the engine from the spec, carry
+            // the counters over, reprogram from the last-programmed
+            // model, then fail only the offending request.
+            let mut carried = service.metrics.clone();
+            carried.errors += 1;
+            *service = InferenceService::new(shared.spec.build());
+            service.metrics = carried;
+            {
+                let mut per = shared.metrics.lock().unwrap();
+                per[idx].respawns += 1;
+                per[idx].metrics = service.metrics.clone();
+            }
+            *my_version = program_from_cell(shared, idx, service);
+            let _ = reply.send(Err(ServeError::WorkerPanicked { replica: idx }));
+        }
+    }
+}
+
+/// Swap `service` to the cell's current model and acknowledge the
+/// version (the worker half of the fence).  Also the respawn path —
+/// called with a freshly built engine, it re-installs the
+/// last-programmed model.  Returns the version applied.
+fn program_from_cell(shared: &Shared, idx: usize, service: &mut InferenceService) -> u64 {
+    let (target, model) = {
+        let cell = shared.cell.lock().unwrap();
+        (cell.version, cell.model.clone())
+    };
+    // Program outside the lock: encoding + programming a large model is
+    // the slow part, and siblings must be able to ack concurrently.
+    let failure = match &model {
+        Some(m) => match service.reprogram(m) {
+            Ok(()) => None,
+            Err(e) => {
+                // A failed swap must not leave this replica on the
+                // stale model: a single core keeps its old program
+                // when the new one overflows instruction memory, and a
+                // multi-core can stop half-programmed.  Rebuild the
+                // engine unprogrammed (counters carried) so the
+                // replica serves NotProgrammed, never version N-1.
+                let carried = service.metrics.clone();
+                *service = InferenceService::new(shared.spec.build());
+                service.metrics = carried;
+                Some(e)
+            }
+        },
+        None => None,
+    };
+    // Keep the published per-replica metrics fresh (reprogram bumps a
+    // counter outside the job path).
+    shared.metrics.lock().unwrap()[idx].metrics = service.metrics.clone();
+    let mut cell = shared.cell.lock().unwrap();
+    if cell.acks[idx] < target {
+        cell.acks[idx] = target;
+        cell.errors[idx] = failure.map(|e| (target, e));
+        shared.fence_cv.notify_all();
+    }
+    target
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::service::Engine;
     use crate::datasets::synth::SynthSpec;
     use crate::TMShape;
 
@@ -106,28 +518,32 @@ mod tests {
     #[test]
     fn rpc_roundtrip() {
         let (model, data) = trained();
-        let (h, join) = spawn(InferenceService::new(Engine::base()));
+        let (h, mut join) = spawn(EngineSpec::base());
         h.program(model.clone()).unwrap();
         let preds = h.infer(data.xs.clone()).unwrap();
         assert_eq!(preds.len(), data.len());
         let stats = h.stats().unwrap();
         assert_eq!(stats.inferences, 96);
+        assert_eq!(stats.reprograms, 1);
         h.shutdown();
-        join.join().unwrap();
+        join.join();
     }
 
     #[test]
     fn infer_before_program_is_error_not_crash() {
-        let (h, join) = spawn(InferenceService::new(Engine::base()));
-        assert!(h.infer(vec![vec![0u8; 12]]).is_err());
+        let (h, mut join) = spawn(EngineSpec::base());
+        assert!(matches!(
+            h.infer(vec![vec![0u8; 12]]),
+            Err(ServeError::Core(CoreError::NotProgrammed))
+        ));
         h.shutdown();
-        join.join().unwrap();
+        join.join();
     }
 
     #[test]
-    fn concurrent_clients_share_one_accelerator() {
+    fn concurrent_clients_share_the_pool() {
         let (model, data) = trained();
-        let (h, join) = spawn(InferenceService::new(Engine::base()));
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 3);
         h.program(model).unwrap();
         let mut threads = Vec::new();
         for _ in 0..4 {
@@ -139,24 +555,150 @@ mod tests {
         assert_eq!(total, 4 * 96);
         assert_eq!(h.stats().unwrap().inferences, 4 * 96);
         h.shutdown();
-        join.join().unwrap();
+        join.join();
     }
 
     #[test]
     fn reprogram_mid_serving_takes_effect() {
         let (model, data) = trained();
-        let (h, join) = spawn(InferenceService::new(Engine::base()));
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 2);
         h.program(model.clone()).unwrap();
         let before = h.infer(data.xs.clone()).unwrap();
-        // Retrain on drifted data and swap live.
         let drifted = SynthSpec::new(12, 3, 96).noise(0.05).seed(8).drift(0.4).generate();
         let shape = TMShape::synthetic(12, 3, 8);
         let new_model = crate::trainer::train_model(&shape, &drifted, 4, 3);
         h.program(new_model).unwrap();
         let after = h.infer(data.xs.clone()).unwrap();
         assert_eq!(before.len(), after.len());
-        assert_eq!(h.stats().unwrap().reprograms, 2);
+        let stats = h.pool_stats();
+        assert_eq!(stats.version, 2);
+        assert_eq!(stats.total.reprograms, 2);
+        // The fence: both replicas on the new version once program() returned.
+        for r in &stats.replicas {
+            assert_eq!(r.model_version, 2);
+        }
         h.shutdown();
-        join.join().unwrap();
+        join.join();
+    }
+
+    #[test]
+    fn malformed_requests_do_not_kill_the_pool() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 2);
+        h.program(model).unwrap();
+
+        assert!(matches!(
+            h.infer(Vec::new()),
+            Err(ServeError::Core(CoreError::BadBatch { rows: 0, .. }))
+        ));
+        let ragged = vec![vec![0u8; 12], vec![0u8; 5]];
+        assert!(matches!(
+            h.infer(ragged),
+            Err(ServeError::Core(CoreError::BadBatch { .. }))
+        ));
+        // The pool keeps serving on the same handle.
+        let preds = h.infer(data.xs.clone()).unwrap();
+        assert_eq!(preds.len(), data.len());
+        let stats = h.stats().unwrap();
+        assert_eq!(stats.errors, 2);
+        assert_eq!(stats.inferences, 96);
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn injected_panic_respawns_replica_and_pool_survives() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn(EngineSpec::base());
+        h.program(model).unwrap();
+        let before = h.infer(data.xs.clone()).unwrap();
+
+        match h.inject_panic() {
+            Err(ServeError::WorkerPanicked { replica }) => assert_eq!(replica, 0),
+            other => panic!("expected WorkerPanicked, got {other:?}"),
+        }
+        // Same handle, same answers: the replica was respawned from the
+        // last-programmed model.
+        let after = h.infer(data.xs.clone()).unwrap();
+        assert_eq!(before, after);
+        let stats = h.pool_stats();
+        assert_eq!(stats.replicas[0].respawns, 1);
+        assert!(stats.replicas[0].alive);
+        // The panic is visible as an error, and counters survived.
+        assert_eq!(stats.total.errors, 1);
+        assert_eq!(stats.total.inferences, 2 * 96);
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn failed_swap_never_leaves_stale_or_mixed_models() {
+        use crate::accel::core::AccelConfig;
+
+        let (small, data) = trained();
+        // A bigger model that cannot fit the instruction memory sized
+        // exactly for the small one.
+        let big_shape = TMShape::synthetic(12, 3, 48);
+        let big_data = SynthSpec::new(12, 3, 96).noise(0.05).seed(9).generate();
+        let big = crate::trainer::train_model(&big_shape, &big_data, 4, 2);
+        let n_small = crate::isa::instruction_count(&small);
+        let n_big = crate::isa::instruction_count(&big);
+        assert!(n_big > n_small, "test premise: {n_big} > {n_small}");
+
+        let spec = EngineSpec::custom(AccelConfig::base().with_depths(n_small, 2048));
+        let (h, mut join) = spawn_pool(spec, 2);
+        h.program(small.clone()).unwrap();
+        assert_eq!(h.infer(data.xs.clone()).unwrap().len(), data.len());
+
+        // The too-big model must fail the swap as a typed error…
+        assert!(matches!(h.program(big), Err(ServeError::Core(_))));
+        // …and replicas must be unprogrammed — not stale on the old
+        // model with the new version acked.
+        assert!(matches!(
+            h.infer(data.xs.clone()),
+            Err(ServeError::Core(CoreError::NotProgrammed))
+        ));
+        // A fitting reprogram fully recovers the pool.
+        h.program(small).unwrap();
+        assert_eq!(h.infer(data.xs.clone()).unwrap().len(), data.len());
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn dead_pool_errors_instead_of_hanging() {
+        use crate::accel::core::AccelConfig;
+        use crate::accel::multicore::ParallelMode;
+
+        // An invalid spec panics in build() at worker startup — outside
+        // the per-request catch_unwind.  The DeathWatch must surface
+        // this as errors, never as a hang.
+        let bad = EngineSpec::Multi {
+            cores: 0,
+            per_core: AccelConfig::multicore_core(),
+            parallel: ParallelMode::Auto,
+        };
+        let (h, mut join) = spawn_pool(bad, 2);
+        join.join();
+        let (model, data) = trained();
+        assert!(matches!(h.program(model), Err(ServeError::ShutDown)));
+        assert!(matches!(
+            h.infer(data.xs.clone()),
+            Err(ServeError::ShutDown) | Err(ServeError::WorkerGone)
+        ));
+    }
+
+    #[test]
+    fn shutdown_and_join_are_idempotent() {
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 2);
+        h.shutdown();
+        h.shutdown();
+        join.join();
+        join.join();
+        assert!(matches!(h.infer(vec![vec![0u8; 4]]), Err(ServeError::ShutDown)));
+        let (m, _) = trained();
+        assert!(matches!(h.program(m), Err(ServeError::ShutDown)));
+        // Stats still readable after shutdown (final reporting).
+        assert_eq!(h.stats().unwrap().inferences, 0);
     }
 }

@@ -2,8 +2,52 @@
 //! live reprogramming, metrics.
 
 use crate::accel::core::{AccelConfig, Core, CoreError};
-use crate::accel::multicore::MultiCore;
+use crate::accel::engine as sched;
+use crate::accel::multicore::{MultiCore, ParallelMode};
 use crate::tm::model::TMModel;
+
+/// Buildable description of an accelerator engine.  [`Engine`] itself is
+/// not `Clone` (it owns memories, FIFOs and lifetime counters), but the
+/// replica pool needs to construct N identical replicas and re-construct
+/// one after a panic — the spec is the cloneable recipe for that.
+#[derive(Debug, Clone)]
+pub enum EngineSpec {
+    Single(AccelConfig),
+    Multi {
+        cores: usize,
+        per_core: AccelConfig,
+        parallel: ParallelMode,
+    },
+}
+
+impl EngineSpec {
+    pub fn base() -> Self {
+        EngineSpec::Single(AccelConfig::base())
+    }
+    pub fn single_core() -> Self {
+        EngineSpec::Single(AccelConfig::single_core())
+    }
+    pub fn five_core() -> Self {
+        EngineSpec::Multi {
+            cores: 5,
+            per_core: AccelConfig::multicore_core(),
+            parallel: ParallelMode::Auto,
+        }
+    }
+    pub fn custom(cfg: AccelConfig) -> Self {
+        EngineSpec::Single(cfg)
+    }
+
+    /// Construct a fresh engine from the spec.
+    pub fn build(&self) -> Engine {
+        match self {
+            EngineSpec::Single(cfg) => Engine::Single(Core::new(cfg.clone())),
+            EngineSpec::Multi { cores, per_core, parallel } => {
+                Engine::Multi(MultiCore::new(*cores, per_core.clone()).with_parallel(*parallel))
+            }
+        }
+    }
+}
 
 /// Which accelerator build serves requests.
 pub enum Engine {
@@ -28,6 +72,19 @@ impl Engine {
         Engine::Single(Core::new(cfg))
     }
 
+    /// The cloneable recipe this engine was built from (for spawning
+    /// replica pools off an already-constructed engine).
+    pub fn to_spec(&self) -> EngineSpec {
+        match self {
+            Engine::Single(c) => EngineSpec::Single(c.cfg.clone()),
+            Engine::Multi(m) => EngineSpec::Multi {
+                cores: m.n_cores(),
+                per_core: m.cores[0].cfg.clone(),
+                parallel: m.parallel,
+            },
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Engine::Single(c) => c.cfg.name,
@@ -43,7 +100,12 @@ impl Engine {
     }
 
     /// Run up to 32 datapoints; returns (preds, simulated batch cycles).
+    ///
+    /// Malformed requests (empty, >32 rows, ragged widths) are rejected
+    /// with [`CoreError::BadBatch`] — the packing layer would panic on
+    /// them, and a request must never be able to kill a serving worker.
     pub fn run_rows(&mut self, rows: &[Vec<u8>]) -> Result<(Vec<usize>, u64), CoreError> {
+        sched::validate_rows(rows, 32)?;
         match self {
             Engine::Single(c) => {
                 let packed = crate::isa::pack_features(rows);
@@ -138,13 +200,35 @@ impl InferenceService {
         }
     }
 
-    /// Serve an arbitrary-size request by splitting into 32-lane batches.
+    /// Serve an arbitrary-size request through the bulk batch scheduler
+    /// ([`crate::accel::engine`]): the row stream is packed once and
+    /// driven through `classify_rows_core` / `classify_rows_multicore`,
+    /// so per-batch setup (and the multi-core path's thread spawn) is
+    /// amortized across the whole request instead of paid per 32 rows.
     pub fn infer_all(&mut self, rows: &[Vec<u8>]) -> Result<Vec<usize>, CoreError> {
-        let mut out = Vec::with_capacity(rows.len());
-        for chunk in rows.chunks(32) {
-            out.extend(self.infer(chunk)?);
+        // An empty *request* is a client bug (the bulk classifiers
+        // accept empty streams); ragged widths are caught by the
+        // classifiers' own validate_rows pass — no double scan here.
+        if rows.is_empty() {
+            self.metrics.errors += 1;
+            return Err(CoreError::BadBatch { rows: 0, reason: "empty request" });
         }
-        Ok(out)
+        let run = match &mut self.engine {
+            Engine::Single(c) => sched::classify_rows_core(c, rows),
+            Engine::Multi(m) => sched::classify_rows_multicore(m, rows),
+        };
+        match run {
+            Ok((preds, stats)) => {
+                self.metrics.inferences += stats.inferences;
+                self.metrics.batches += stats.batches;
+                self.metrics.simulated_cycles += stats.simulated_cycles;
+                Ok(preds)
+            }
+            Err(e) => {
+                self.metrics.errors += 1;
+                Err(e)
+            }
+        }
     }
 
     /// Accuracy over a labeled set (the recalibration monitor's probe).
@@ -209,6 +293,72 @@ mod tests {
         // Not programmed yet.
         assert!(svc.infer(&[vec![0u8; 12]]).is_err());
         assert_eq!(svc.metrics.errors, 1);
+    }
+
+    #[test]
+    fn malformed_requests_error_instead_of_panicking() {
+        let (model, data) = trained();
+        let mut svc = InferenceService::new(Engine::base());
+        svc.reprogram(&model).unwrap();
+
+        // Empty request.
+        assert!(matches!(
+            svc.infer(&[]),
+            Err(CoreError::BadBatch { rows: 0, .. })
+        ));
+        assert!(matches!(
+            svc.infer_all(&[]),
+            Err(CoreError::BadBatch { rows: 0, .. })
+        ));
+        // 33 rows in a single-batch call.
+        let wide: Vec<Vec<u8>> = vec![vec![0u8; 12]; 33];
+        assert!(matches!(
+            svc.infer(&wide),
+            Err(CoreError::BadBatch { rows: 33, .. })
+        ));
+        // Ragged widths.
+        let ragged = vec![vec![0u8; 12], vec![0u8; 3]];
+        assert!(matches!(
+            svc.infer(&ragged),
+            Err(CoreError::BadBatch { rows: 2, .. })
+        ));
+        assert!(matches!(
+            svc.infer_all(&ragged),
+            Err(CoreError::BadBatch { rows: 2, .. })
+        ));
+        assert_eq!(svc.metrics.errors, 5);
+
+        // The service is not poisoned: a well-formed request still works.
+        let preds = svc.infer_all(&data.xs).unwrap();
+        assert_eq!(preds.len(), data.len());
+        // >32 rows are fine on the bulk path (split into batches).
+        assert_eq!(svc.infer_all(&wide).unwrap().len(), 33);
+    }
+
+    #[test]
+    fn engine_spec_builds_equivalent_engines() {
+        let (model, data) = trained();
+        for spec in [EngineSpec::base(), EngineSpec::five_core()] {
+            let mut direct = InferenceService::new(spec.build());
+            let mut again = InferenceService::new(spec.build());
+            direct.reprogram(&model).unwrap();
+            again.reprogram(&model).unwrap();
+            assert_eq!(
+                direct.infer_all(&data.xs).unwrap(),
+                again.infer_all(&data.xs).unwrap()
+            );
+        }
+        // Round-trip through a built engine.
+        let spec = Engine::five_core().to_spec();
+        assert!(matches!(spec, EngineSpec::Multi { cores: 5, .. }));
+        let mut svc = InferenceService::new(spec.build());
+        svc.reprogram(&model).unwrap();
+        let mut base = InferenceService::new(Engine::base());
+        base.reprogram(&model).unwrap();
+        assert_eq!(
+            svc.infer_all(&data.xs).unwrap(),
+            base.infer_all(&data.xs).unwrap()
+        );
     }
 
     #[test]

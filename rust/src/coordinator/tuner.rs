@@ -105,8 +105,10 @@ impl RecalibrationLoop {
             if acc < self.threshold {
                 let model = self.node.retrain(retrain)?;
                 service.reprogram(&model)?;
+                // Post-recalibration accuracy lives ONLY in the
+                // RecalEvent: pushing it into `probes` as well would
+                // duplicate the step index in the monitor trace.
                 let after = service.measure_accuracy(&probe.xs, &probe.ys)?;
-                report.probes.push((step, after));
                 report.recalibrations.push(RecalEvent {
                     step,
                     accuracy_before: acc,
@@ -169,6 +171,33 @@ mod tests {
             ev.accuracy_after
         );
         assert_eq!(svc.metrics.reprograms, 2); // initial + recalibration
+    }
+
+    #[test]
+    fn probe_trace_has_one_entry_per_step() {
+        // Regression: a recalibrating step used to push a second
+        // (step, accuracy_after) tuple into the probe trace.
+        let node = TrainingNode::native(shape());
+        let clean = dataset(0.0, 512);
+        let drifted = dataset(0.35, 512);
+        let mut svc = InferenceService::new(Engine::base());
+        svc.reprogram(&node.retrain(&clean).unwrap()).unwrap();
+        let looped = RecalibrationLoop::new(node, 0.85);
+        let windows = vec![
+            (clean.clone(), clean.clone()),
+            (drifted.clone(), drifted.clone()),
+            (drifted.clone(), drifted.clone()),
+        ];
+        let report = looped.run(&mut svc, &windows).unwrap();
+        assert!(!report.recalibrations.is_empty(), "drift step must retune");
+        assert_eq!(report.probes.len(), windows.len());
+        for (i, &(step, _)) in report.probes.iter().enumerate() {
+            assert_eq!(step, i, "exactly one probe entry per step, in order");
+        }
+        // Post-recal accuracy is still recorded — in the event.
+        for ev in &report.recalibrations {
+            assert!(ev.accuracy_after > 0.0);
+        }
     }
 
     #[test]

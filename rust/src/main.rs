@@ -5,7 +5,7 @@
 //! ```text
 //! rttm train   --workload emg [--backend pjrt|native] [--epochs N] [--n N]
 //! rttm infer   --workload emg [--engine base|single|multi] [--n N]
-//! rttm serve   --workload emg [--engine ...] [--requests N]
+//! rttm serve   --workload emg [--engine ...] [--requests N] [--replicas N]
 //! rttm retune  --workload emg [--drift 0.35] [--threshold 0.8]
 //! rttm report  --workload emg          # resources + latency + energy card
 //! rttm list                            # workloads & artifact status
@@ -60,7 +60,7 @@ fn usage() {
          commands:\n\
          \x20 train   --workload W [--backend pjrt|native] [--epochs N] [--n N]\n\
          \x20 infer   --workload W [--engine base|single|multi] [--n N]\n\
-         \x20 serve   --workload W [--engine ...] [--requests N]\n\
+         \x20 serve   --workload W [--engine ...] [--requests N] [--replicas N]\n\
          \x20 retune  --workload W [--drift F] [--threshold F]\n\
          \x20 report  --workload W\n\
          \x20 save    --workload W --out model.rttm\n\
@@ -238,29 +238,52 @@ fn cmd_infer(opts: &Opts) -> anyhow::Result<()> {
 fn cmd_serve(opts: &Opts) -> anyhow::Result<()> {
     let w = workload(&opts.get("workload", "emg"))?;
     let requests = opts.get_usize("requests", 100);
+    let replicas = opts.get_usize("replicas", 1);
     let engine_name = opts.get("engine", "base");
     let data = w.dataset(32 * requests, 11);
     let node = TrainingNode::native(w.shape.clone());
     let model = node.retrain(&w.dataset(1024, 7))?;
 
-    let (handle, join) = rttm::coordinator::server::spawn(InferenceService::new(
-        fitted_engine_for(&engine_name, &model)?,
-    ));
+    // Replica pool: N workers, each owning one engine replica built
+    // from the same spec, fed from a shared request queue.
+    let (handle, mut join) = rttm::coordinator::server::spawn_pool(
+        fitted_engine_for(&engine_name, &model)?.to_spec(),
+        replicas,
+    );
     handle.program(model)?;
     let t0 = std::time::Instant::now();
-    for chunk in data.xs.chunks(32) {
-        handle.infer(chunk.to_vec())?;
+    // One client per replica so the pool actually fans out.
+    let mut clients = Vec::new();
+    for c in 0..replicas.max(1) {
+        let h = handle.clone();
+        let chunks: Vec<Vec<Vec<u8>>> = data
+            .xs
+            .chunks(32)
+            .enumerate()
+            .filter(|(i, _)| i % replicas.max(1) == c)
+            .map(|(_, chunk)| chunk.to_vec())
+            .collect();
+        clients.push(std::thread::spawn(move || -> anyhow::Result<()> {
+            for chunk in chunks {
+                h.infer(chunk)?;
+            }
+            Ok(())
+        }));
+    }
+    for c in clients {
+        c.join().expect("client thread")?;
     }
     let wall = t0.elapsed();
     let stats = handle.stats()?;
     handle.shutdown();
-    join.join().ok();
+    join.join();
     let f = engine_for(&engine_name)?.freq_mhz();
     println!(
-        "served {} requests ({} inferences) engine={} sim_us_total={:.1} wall_ms={:.1} host_rps={:.0}",
+        "served {} requests ({} inferences) engine={} replicas={} sim_us_total={:.1} wall_ms={:.1} host_rps={:.0}",
         stats.batches,
         stats.inferences,
         engine_name,
+        replicas,
         stats.simulated_us(f),
         wall.as_secs_f64() * 1e3,
         stats.batches as f64 / wall.as_secs_f64(),
