@@ -19,10 +19,12 @@
 use rttm::accel::core::AccelConfig;
 use rttm::accel::engine as sched;
 use rttm::accel::multicore::{MultiCore, ParallelMode};
+use rttm::coordinator::autotune::{AutotuneConfig, AutotuneEvent, Autotuner};
 use rttm::coordinator::server::spawn_pool;
 use rttm::coordinator::{Engine, EngineSpec, TrainingNode};
-use rttm::datasets::workloads::workload;
+use rttm::datasets::workloads::{workload, DriftSchedule};
 use rttm::model_cost::energy::EnergyModel;
+use rttm::model_cost::resources::ResourceBudget;
 
 fn main() -> anyhow::Result<()> {
     let w = workload("sensorless")?;
@@ -183,5 +185,61 @@ fn main() -> anyhow::Result<()> {
     println!("\nThe pool multiplies *host* request throughput; per-request");
     println!("simulated latency (the hardware's) is unchanged — each replica");
     println!("models one accelerator.");
+
+    // --- Live autotune: drift arrives mid-serving; the monitor detects
+    // it (hysteresis — one noisy window never retunes), a background
+    // shadow search retrains candidate shapes under a LUT/BRAM/power
+    // budget, and the winner hot-swaps through the same version fence
+    // the requests above used.  Traffic keeps flowing throughout.
+    println!("\n=== live autotune: abrupt drift on the serving pool ===");
+    let drift_sched = DriftSchedule::abrupt(8, 192, 4, 0.4).seed(5);
+    // Fresh draws past the monitored stream — the windows measure
+    // generalization, not the training set.
+    let first_model = node.retrain(&drift_sched.training_set(&w, 384))?;
+    // Instruction-memory headroom: retrained candidates can carry more
+    // includes than the first model (the paper's "over-provisioned for
+    // more tunability later").
+    let tune_spec = EngineSpec::custom(rttm::model_cost::resources::provisioned_config(
+        &first_model,
+        2,
+    ));
+    let (handle, mut join) = spawn_pool(tune_spec, replicas.min(4));
+    let budget = ResourceBudget::unlimited().with_brams(20).with_watts(0.5);
+    let mut tune_cfg = AutotuneConfig::new(budget);
+    tune_cfg.accuracy_floor = 0.80;
+    tune_cfg.epochs = 2;
+    tune_cfg.retrain_corpus = 384;
+    let mut tuner = Autotuner::new(handle.clone(), w.shape.clone(), tune_cfg);
+    tuner.install(first_model)?;
+    for (step, win) in drift_sched.stream(&w).iter().enumerate() {
+        // Concurrent traffic during every window, retune included.
+        let h = handle.clone();
+        let rows = win.xs[..32.min(win.xs.len())].to_vec();
+        let client = std::thread::spawn(move || h.infer(rows).map(|p| p.len()));
+        let stats = tuner.observe_window(&win.xs, &win.ys)?;
+        println!(
+            "window {step}  drift={:.2}  acc={:.3}  margin={:>7.2}  v{}  [{}]",
+            drift_sched.drift_at(step),
+            stats.accuracy.unwrap_or(f64::NAN),
+            stats.mean_margin,
+            stats.model_version,
+            tuner.phase_name(),
+        );
+        if tuner.is_searching() {
+            tuner.finish_pending_search()?;
+        }
+        client.join().unwrap()?;
+    }
+    for e in &tuner.report.events {
+        if let AutotuneEvent::Swapped { window, version, instructions, luts, brams, watts, .. } = e
+        {
+            println!(
+                "SWAPPED at window {window}: v{version}, {instructions} instructions, \
+                 {luts} LUTs / {brams} BRAMs / {watts:.3} W — no resynthesis, no downtime"
+            );
+        }
+    }
+    handle.shutdown();
+    join.join();
     Ok(())
 }

@@ -318,6 +318,101 @@ fn main() {
         pool_replicas
     );
 
+    // 2d. Live autotune: detection-to-recovery latency and served
+    //     throughput WHILE the shadow retrain + swap runs.  A client
+    //     hammers the pool throughout; the drift windows arrive, the
+    //     tuner detects (hysteresis = 2 windows), shadow-searches on a
+    //     background thread, and hot-swaps behind the version fence.
+    {
+        use rttm::coordinator::autotune::{AutotuneConfig, AutotuneEvent, Autotuner};
+        use rttm::datasets::workloads::DriftSchedule;
+        use rttm::model_cost::resources::ResourceBudget;
+        use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+        use std::sync::Arc;
+
+        println!("\n--- live autotune (detection -> recovery, serving throughout) ---");
+        let windows = 8usize;
+        let window_n = scale(256).max(64);
+        let drift_sched = DriftSchedule::abrupt(windows, window_n, 4, 0.4).seed(7);
+        // Fresh draws past the monitored stream (the bench's shared
+        // `model` was trained on the stream prefix itself).
+        let tune_model =
+            rttm::trainer::train_model(&w.shape, &drift_sched.training_set(&w, corpus), epochs, 3);
+        // 4x instruction-memory headroom: retrained candidates may
+        // carry more includes, and a failed swap would abort the bench.
+        let tune_spec = EngineSpec::custom(rttm::model_cost::resources::provisioned_config(
+            &tune_model,
+            4,
+        ));
+        let (h, mut join) = spawn_pool(tune_spec, 4);
+        let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited());
+        cfg.accuracy_floor = 0.85;
+        cfg.epochs = if smoke { 1 } else { 2 };
+        cfg.retrain_corpus = 2 * window_n;
+        let mut tuner = Autotuner::new(h.clone(), w.shape.clone(), cfg);
+        tuner.install(tune_model).unwrap();
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicU64::new(0));
+        let client = {
+            let h = h.clone();
+            let stop = Arc::clone(&stop);
+            let served = Arc::clone(&served);
+            let rows: Vec<Vec<u8>> = data.xs[..32.min(data.len())].to_vec();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    h.infer(rows.clone()).unwrap();
+                    served.fetch_add(32, Ordering::Relaxed);
+                }
+            })
+        };
+
+        let mut detect_to_recover_ms = -1.0f64;
+        let mut rps_during_retune = -1.0f64;
+        for win in &drift_sched.stream(&w) {
+            tuner.observe_window(&win.xs, &win.ys).unwrap();
+            if tuner.is_searching() {
+                // Drift just got confirmed: time the whole
+                // detect -> shadow-retrain -> swap path while the client
+                // keeps getting answers.
+                let t0 = std::time::Instant::now();
+                let before = served.load(Ordering::Relaxed);
+                tuner.finish_pending_search().unwrap();
+                let dt = t0.elapsed();
+                let during = served.load(Ordering::Relaxed) - before;
+                detect_to_recover_ms = dt.as_secs_f64() * 1e3;
+                rps_during_retune = during as f64 / dt.as_secs_f64().max(1e-12);
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        client.join().unwrap();
+        let swapped = tuner
+            .report
+            .events
+            .iter()
+            .any(|e| matches!(e, AutotuneEvent::Swapped { .. }));
+        assert!(swapped, "autotune bench must actually retune");
+        println!(
+            "detect->swap:            {detect_to_recover_ms:>10.1} ms (shadow retrain + fence swap)"
+        );
+        println!(
+            "served during retune:    {rps_during_retune:>10.0} inferences/s (pool stays live)"
+        );
+        json.push(("autotune_detect_to_recover_ms".into(), detect_to_recover_ms));
+        json.push(("autotune_served_during_retune_inf_per_s".into(), rps_during_retune));
+        json.push((
+            "autotune_swaps".into(),
+            tuner
+                .report
+                .events
+                .iter()
+                .filter(|e| matches!(e, AutotuneEvent::Swapped { .. }))
+                .count() as f64,
+        ));
+        h.shutdown();
+        join.join();
+    }
+
     // 3. Software ISA walk, single datapoint (the MCU-interpreter loop).
     let lits = rttm::tm::reference::literals_from_features(&rows[0]);
     let ns = bench_ns(scale(20), scale(200), || {

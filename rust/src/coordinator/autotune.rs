@@ -1,0 +1,984 @@
+//! Live drift-aware autotuner over the replica pool — the paper's
+//! runtime model tuning turned into a serving-scale *policy*.
+//!
+//! [`super::tuner::RecalibrationLoop`] (Fig 8) is an offline loop: one
+//! service, pre-cut windows, fixed shape.  This module is the live
+//! version, and it talks **only** to a [`ServiceHandle`] — the policy
+//! code never owns an engine, so everything it does (probe, swap,
+//! rollback) goes through the same versioned, panic-supervised request
+//! path that serves traffic.  Three layers:
+//!
+//! 1. **Streaming telemetry** — [`Autotuner::observe_window`] probes a
+//!    labeled trickle *through the pool* ([`ServiceHandle::infer_telemetry`]),
+//!    yielding windowed accuracy plus a label-free confidence-margin
+//!    signal (top-1 minus top-2 class sum).  [`DriftDetector`] applies
+//!    hysteresis: a single noisy window never triggers a retune storm —
+//!    drift must be *sustained* for `patience` consecutive windows.
+//! 2. **Budget-constrained shape search** — on sustained drift a
+//!    shadow retrain runs (on a background thread in live mode) over
+//!    the recent labeled corpus: candidate shapes from
+//!    [`super::hyperparam::SearchSpace::around`] are trained and costed
+//!    through [`crate::model_cost::resources::estimate`] +
+//!    [`crate::model_cost::energy::EnergyModel`]; the winner is the most
+//!    accurate model whose *fitted* deployment the caller-supplied
+//!    [`ResourceBudget`] admits (the paper's runtime model-size tuning
+//!    with an explicit LUT/BRAM/energy frontier).
+//! 3. **Zero-downtime swap** — the winner is hot-swapped via
+//!    [`ServiceHandle::program`] (the version fence: traffic never
+//!    observes a mixed-version pool), and if post-swap windowed
+//!    accuracy regresses against the trigger-time accuracy the previous
+//!    model is restored — versions stay strictly monotone either way.
+
+use std::sync::{mpsc, Arc};
+
+use crate::config::TMShape;
+use crate::datasets::synth::{Dataset, SynthSpec};
+use crate::model_cost::energy::EnergyModel;
+use crate::model_cost::resources::{estimate, fitted_config, ResourceBudget};
+use crate::tm::model::TMModel;
+
+use super::hyperparam::{budget_search, BudgetedSearch, SearchSpace};
+use super::server::{ServeError, ServiceHandle};
+
+/// One monitored serving window, as seen through the pool.
+#[derive(Debug, Clone)]
+pub struct WindowStats {
+    /// Labeled-trickle accuracy (None for an unlabeled window).
+    pub accuracy: Option<f64>,
+    /// Mean confidence margin (top-1 minus top-2 class sum).
+    pub mean_margin: f64,
+    pub samples: usize,
+    /// Pool model version that served the window.
+    pub model_version: u64,
+}
+
+/// Hysteresis-gated drift detector — the pure policy core, shared by
+/// the live autotuner and the offline [`super::tuner::RecalibrationLoop`]
+/// (which wraps it with `patience = 1`).
+///
+/// A window is *bad* when labeled accuracy falls below
+/// `accuracy_floor`, or — labels or not — when the mean margin
+/// collapses below `margin_frac` of the healthy baseline (an EWMA over
+/// good windows).  Drift is *sustained* once `patience` consecutive
+/// windows are bad.
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    pub accuracy_floor: f64,
+    /// Margin-collapse threshold as a fraction of the healthy baseline.
+    pub margin_frac: f64,
+    /// Consecutive bad windows required before drift is declared.
+    pub patience: usize,
+    baseline_margin: Option<f64>,
+    consecutive_bad: usize,
+}
+
+impl DriftDetector {
+    pub fn new(accuracy_floor: f64, patience: usize) -> Self {
+        DriftDetector {
+            accuracy_floor,
+            margin_frac: 0.5,
+            patience: patience.max(1),
+            baseline_margin: None,
+            consecutive_bad: 0,
+        }
+    }
+
+    /// Feed one window; true when drift is sustained.
+    pub fn push(&mut self, accuracy: Option<f64>, mean_margin: f64) -> bool {
+        let margin_bad = self
+            .baseline_margin
+            .map(|b| mean_margin < self.margin_frac * b)
+            .unwrap_or(false);
+        let bad = match accuracy {
+            Some(a) => a < self.accuracy_floor || margin_bad,
+            None => margin_bad,
+        };
+        if bad {
+            self.consecutive_bad += 1;
+        } else {
+            self.consecutive_bad = 0;
+            // Healthy window: update the margin baseline (EWMA).
+            self.baseline_margin = Some(match self.baseline_margin {
+                None => mean_margin,
+                Some(b) => 0.75 * b + 0.25 * mean_margin,
+            });
+        }
+        self.consecutive_bad >= self.patience
+    }
+
+    /// Forget the bad streak (after a retune resolved it) but keep the
+    /// learned margin baseline.
+    pub fn reset(&mut self) {
+        self.consecutive_bad = 0;
+    }
+
+    /// Forget the streak AND the learned margin baseline.  Required
+    /// after an accepted swap to a different shape: the new model's
+    /// healthy margins can be structurally smaller than the old
+    /// model's, and a stale baseline would flag every window as
+    /// collapsed — a perpetual retune storm.  The baseline re-forms
+    /// from the next healthy windows.
+    pub fn rebaseline(&mut self) {
+        self.consecutive_bad = 0;
+        self.baseline_margin = None;
+    }
+
+    pub fn consecutive_bad(&self) -> usize {
+        self.consecutive_bad
+    }
+}
+
+/// Produces the replacement model once drift is confirmed.  The default
+/// is [`BudgetSearchTrainer`]; tests inject fixed/bad trainers to drive
+/// the rollback and budget-gate paths deterministically.
+pub trait ShadowTrainer: Send + Sync {
+    fn retrain(&self, train: &Dataset, valid: &Dataset) -> BudgetedSearch;
+}
+
+/// The default shadow trainer: [`budget_search`] over
+/// [`SearchSpace::around`] the deployed shape.
+pub struct BudgetSearchTrainer {
+    pub shape: TMShape,
+    pub budget: ResourceBudget,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl ShadowTrainer for BudgetSearchTrainer {
+    fn retrain(&self, train: &Dataset, valid: &Dataset) -> BudgetedSearch {
+        let mut space = SearchSpace::around(&self.shape);
+        space.epochs = self.epochs;
+        space.seed = self.seed;
+        budget_search(&self.shape, train, valid, &space, &self.budget)
+    }
+}
+
+/// Autotuner policy knobs.
+#[derive(Debug, Clone)]
+pub struct AutotuneConfig {
+    /// Windowed labeled accuracy below this marks a window bad.
+    pub accuracy_floor: f64,
+    /// Consecutive bad windows before drift is declared (hysteresis).
+    pub patience: usize,
+    /// Margin-collapse fraction vs. the healthy baseline.
+    pub margin_frac: f64,
+    /// Resource frontier a swapped-in model must fit.
+    pub budget: ResourceBudget,
+    /// Shadow-retrain epochs / PRNG seed (deterministic).
+    pub epochs: usize,
+    pub seed: u64,
+    /// Post-swap windows averaged before the swap is judged.
+    pub validation_windows: usize,
+    /// The swap is kept if mean post-swap accuracy beats the
+    /// trigger-time accuracy by at least this much, OR simply reaches
+    /// `accuracy_floor` (a margin-triggered retune can fire at high
+    /// labeled accuracy, where "trigger + gain" would be unreachable);
+    /// otherwise the previous model is restored.
+    pub min_gain: f64,
+    /// Run the shadow search on a background thread (live mode).  When
+    /// false the search runs inline in `observe_window` — the
+    /// deterministic mode unit tests and the offline wrapper use.
+    pub background: bool,
+    /// Most-recent labeled samples retained as the retrain corpus.
+    pub retrain_corpus: usize,
+}
+
+impl AutotuneConfig {
+    pub fn new(budget: ResourceBudget) -> Self {
+        AutotuneConfig {
+            accuracy_floor: 0.85,
+            patience: 2,
+            margin_frac: 0.5,
+            budget,
+            epochs: 3,
+            seed: 17,
+            validation_windows: 1,
+            min_gain: 0.05,
+            background: true,
+            retrain_corpus: 1024,
+        }
+    }
+}
+
+/// Decision log of one autotuned deployment.
+#[derive(Debug, Clone)]
+pub enum AutotuneEvent {
+    DriftDetected { window: usize, accuracy: f64, mean_margin: f64 },
+    SearchCompleted { window: usize, trials: usize, admitted: usize },
+    /// The search's winner (or an injected trainer's output) failed the
+    /// budget gate at swap time and was NOT programmed.
+    BudgetRejected { window: usize, luts: u32, brams: u32, watts: f64 },
+    /// No candidate fit the budget; the pool keeps the old model.
+    NoCandidateFitsBudget { window: usize },
+    /// The shadow-search thread died; monitoring resumes.
+    SearchFailed { window: usize },
+    /// A swap could not be carried through: the pool rejected the
+    /// broadcast (e.g. the candidate overflows the replicas' ACTUAL
+    /// memory depths — the budget costs the fitted deployment, not the
+    /// pool's spec; the previously serving model was re-programmed, so
+    /// the outage is one fence, never permanent), or a regression was
+    /// detected with no recorded previous model to roll back to.
+    SwapFailed { window: usize, error: String },
+    Swapped {
+        window: usize,
+        version: u64,
+        trigger_accuracy: f64,
+        instructions: usize,
+        luts: u32,
+        brams: u32,
+        watts: f64,
+    },
+    Accepted { window: usize, mean_accuracy: f64 },
+    RolledBack { window: usize, mean_accuracy: f64, version: u64 },
+}
+
+/// Telemetry + decisions of one autotuned deployment.
+#[derive(Debug, Clone, Default)]
+pub struct AutotuneReport {
+    pub windows: Vec<WindowStats>,
+    pub events: Vec<AutotuneEvent>,
+}
+
+#[derive(Debug, Copy, Clone)]
+enum Phase {
+    Monitoring,
+    Searching { trigger_accuracy: f64 },
+    Validating {
+        trigger_accuracy: f64,
+        windows_left: usize,
+        acc_sum: f64,
+        n: usize,
+    },
+}
+
+enum SearchPoll {
+    Pending,
+    Done(BudgetedSearch),
+    Died,
+}
+
+/// The live autotuner.  Owns nothing but a [`ServiceHandle`]: every
+/// probe and every swap goes through the serving pool's request path.
+pub struct Autotuner {
+    handle: ServiceHandle,
+    shape: TMShape,
+    cfg: AutotuneConfig,
+    trainer: Arc<dyn ShadowTrainer>,
+    detector: DriftDetector,
+    phase: Phase,
+    /// Rollback target: what the pool ran before the last swap.
+    previous: Option<Arc<TMModel>>,
+    current: Option<Arc<TMModel>>,
+    pending: Option<mpsc::Receiver<BudgetedSearch>>,
+    corpus_xs: Vec<Vec<u8>>,
+    corpus_ys: Vec<usize>,
+    window_index: usize,
+    /// True when the default budget search is in use: an accepted swap
+    /// then re-anchors the search around the NEW shape.  Injected
+    /// trainers ([`Self::with_trainer`]) are never replaced.
+    reanchor: bool,
+    pub report: AutotuneReport,
+}
+
+impl Autotuner {
+    /// Autotuner with the default budget-constrained shadow search
+    /// around `shape`.
+    pub fn new(handle: ServiceHandle, shape: TMShape, cfg: AutotuneConfig) -> Self {
+        let trainer = Arc::new(BudgetSearchTrainer {
+            shape: shape.clone(),
+            budget: cfg.budget.clone(),
+            epochs: cfg.epochs,
+            seed: cfg.seed,
+        });
+        let mut tuner = Self::with_trainer(handle, shape, cfg, trainer);
+        tuner.reanchor = true;
+        tuner
+    }
+
+    /// Autotuner with an injected shadow trainer (tests, custom search
+    /// strategies).  The budget gate still applies at swap time; the
+    /// injected trainer is kept across swaps (no re-anchoring).
+    pub fn with_trainer(
+        handle: ServiceHandle,
+        shape: TMShape,
+        cfg: AutotuneConfig,
+        trainer: Arc<dyn ShadowTrainer>,
+    ) -> Self {
+        let detector = DriftDetector {
+            margin_frac: cfg.margin_frac,
+            ..DriftDetector::new(cfg.accuracy_floor, cfg.patience)
+        };
+        Autotuner {
+            handle,
+            shape,
+            cfg,
+            trainer,
+            detector,
+            phase: Phase::Monitoring,
+            previous: None,
+            current: None,
+            pending: None,
+            corpus_xs: Vec::new(),
+            corpus_ys: Vec::new(),
+            window_index: 0,
+            reanchor: false,
+            report: AutotuneReport::default(),
+        }
+    }
+
+    /// Program the initial model (recorded as the first rollback
+    /// baseline).
+    pub fn install(&mut self, model: TMModel) -> Result<(), ServeError> {
+        let m = Arc::new(model);
+        self.handle.program((*m).clone())?;
+        self.current = Some(m);
+        Ok(())
+    }
+
+    /// Model the autotuner believes the pool is serving.
+    pub fn current_model(&self) -> Option<&TMModel> {
+        self.current.as_deref()
+    }
+
+    pub fn is_searching(&self) -> bool {
+        matches!(self.phase, Phase::Searching { .. })
+    }
+
+    pub fn phase_name(&self) -> &'static str {
+        match self.phase {
+            Phase::Monitoring => "monitoring",
+            Phase::Searching { .. } => "searching",
+            Phase::Validating { .. } => "validating",
+        }
+    }
+
+    /// Feed one labeled monitoring window.  The probe goes through the
+    /// serving pool (it IS traffic); the state machine then advances:
+    /// detect → (shadow search) → swap → validate/rollback.
+    pub fn observe_window(
+        &mut self,
+        xs: &[Vec<u8>],
+        ys: &[usize],
+    ) -> Result<WindowStats, ServeError> {
+        // A row/label mismatch would silently skew accuracy AND shift
+        // every later corpus label against its sample — reject it
+        // before anything is recorded.
+        if xs.len() != ys.len() {
+            return Err(ServeError::Core(crate::accel::core::CoreError::BadBatch {
+                rows: xs.len(),
+                reason: "window labels do not match rows",
+            }));
+        }
+        let tel = self.handle.infer_telemetry(xs.to_vec())?;
+        let correct = tel.preds.iter().zip(ys).filter(|(p, y)| p == y).count();
+        let accuracy = correct as f64 / xs.len().max(1) as f64;
+        let mean_margin = tel.margins.iter().map(|&m| m as f64).sum::<f64>()
+            / tel.margins.len().max(1) as f64;
+        let stats = WindowStats {
+            accuracy: Some(accuracy),
+            mean_margin,
+            samples: xs.len(),
+            model_version: tel.model_version,
+        };
+        self.report.windows.push(stats.clone());
+
+        // Retrain corpus: most recent labeled samples, capped.
+        self.corpus_xs.extend_from_slice(xs);
+        self.corpus_ys.extend_from_slice(ys);
+        let cap = self.cfg.retrain_corpus.max(1);
+        if self.corpus_xs.len() > cap {
+            let drop = self.corpus_xs.len() - cap;
+            self.corpus_xs.drain(..drop);
+            self.corpus_ys.drain(..drop);
+        }
+
+        self.step(accuracy, mean_margin)?;
+        self.window_index += 1;
+        Ok(stats)
+    }
+
+    /// Block until a pending shadow search finishes and act on it.
+    /// Returns true if a search was pending.  Serving traffic continues
+    /// on the pool the whole time — only the policy thread waits.
+    pub fn finish_pending_search(&mut self) -> Result<bool, ServeError> {
+        let Phase::Searching { trigger_accuracy } = self.phase else {
+            return Ok(false);
+        };
+        match self.poll_search(true) {
+            SearchPoll::Done(outcome) => {
+                self.finish_search(outcome, trigger_accuracy)?;
+                Ok(true)
+            }
+            SearchPoll::Died => {
+                self.search_died();
+                Ok(true)
+            }
+            SearchPoll::Pending => unreachable!("blocking poll never returns Pending"),
+        }
+    }
+
+    fn step(&mut self, accuracy: f64, mean_margin: f64) -> Result<(), ServeError> {
+        match self.phase {
+            Phase::Monitoring => {
+                if self.detector.push(Some(accuracy), mean_margin) {
+                    self.report.events.push(AutotuneEvent::DriftDetected {
+                        window: self.window_index,
+                        accuracy,
+                        mean_margin,
+                    });
+                    self.launch_search(accuracy)?;
+                }
+            }
+            Phase::Searching { trigger_accuracy } => match self.poll_search(false) {
+                SearchPoll::Pending => {}
+                SearchPoll::Done(outcome) => self.finish_search(outcome, trigger_accuracy)?,
+                SearchPoll::Died => self.search_died(),
+            },
+            Phase::Validating { trigger_accuracy, windows_left, acc_sum, n } => {
+                let acc_sum = acc_sum + accuracy;
+                let n = n + 1;
+                if windows_left <= 1 {
+                    let mean = acc_sum / n as f64;
+                    // Healthy is good enough: a margin-triggered retune
+                    // can have trigger_accuracy near 1.0, where
+                    // "trigger + gain" is unreachable and would doom
+                    // every swap to rollback (a retrain-rollback loop).
+                    let kept = mean >= trigger_accuracy + self.cfg.min_gain
+                        || mean >= self.cfg.accuracy_floor;
+                    if !kept {
+                        // The retrain did not help: restore the previous
+                        // model (another fence-gated program — versions
+                        // stay strictly monotone).
+                        match self.previous.clone() {
+                            Some(prev) => {
+                                self.handle.program((*prev).clone())?;
+                                self.current = Some(prev);
+                                self.report.events.push(AutotuneEvent::RolledBack {
+                                    window: self.window_index,
+                                    mean_accuracy: mean,
+                                    version: self.handle.pool_stats().version,
+                                });
+                            }
+                            // Nothing to restore (the pool was programmed
+                            // behind the tuner's back): record honestly —
+                            // the regressing model keeps serving, NOT a
+                            // phantom rollback.
+                            None => self.report.events.push(AutotuneEvent::SwapFailed {
+                                window: self.window_index,
+                                error: format!(
+                                    "regression (mean accuracy {mean:.3}) with no previous \
+                                     model to roll back to"
+                                ),
+                            }),
+                        }
+                        // The old model is back (or was never recorded):
+                        // the margin baseline stays, only the streak
+                        // clears.
+                        self.detector.reset();
+                    } else {
+                        self.report.events.push(AutotuneEvent::Accepted {
+                            window: self.window_index,
+                            mean_accuracy: mean,
+                        });
+                        // A different shape serves now; its healthy
+                        // margin scale may differ — re-learn it.
+                        self.detector.rebaseline();
+                        // And re-anchor the default shadow search to the
+                        // ACCEPTED shape, so the next retune explores the
+                        // deployed model's neighborhood, not the
+                        // install-time one.
+                        if self.reanchor {
+                            if let Some(cur) = &self.current {
+                                self.shape = cur.shape.clone();
+                                self.trainer = Arc::new(BudgetSearchTrainer {
+                                    shape: cur.shape.clone(),
+                                    budget: self.cfg.budget.clone(),
+                                    epochs: self.cfg.epochs,
+                                    seed: self.cfg.seed,
+                                });
+                            }
+                        }
+                    }
+                    self.phase = Phase::Monitoring;
+                } else {
+                    self.phase = Phase::Validating {
+                        trigger_accuracy,
+                        windows_left: windows_left - 1,
+                        acc_sum,
+                        n,
+                    };
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn corpus_dataset(&self) -> Dataset {
+        let features = self.corpus_xs.first().map(|r| r.len()).unwrap_or(0);
+        Dataset {
+            xs: self.corpus_xs.clone(),
+            ys: self.corpus_ys.clone(),
+            spec: SynthSpec::new(features, self.shape.classes, self.corpus_xs.len()),
+        }
+    }
+
+    fn launch_search(&mut self, trigger_accuracy: f64) -> Result<(), ServeError> {
+        let (train, valid) = self.corpus_dataset().split(0.75);
+        self.phase = Phase::Searching { trigger_accuracy };
+        if self.cfg.background {
+            let trainer = Arc::clone(&self.trainer);
+            let (tx, rx) = mpsc::channel();
+            std::thread::Builder::new()
+                .name("rttm-autotune-search".into())
+                .spawn(move || {
+                    let _ = tx.send(trainer.retrain(&train, &valid));
+                })
+                .expect("spawn shadow-search thread");
+            self.pending = Some(rx);
+        } else {
+            let outcome = self.trainer.retrain(&train, &valid);
+            self.finish_search(outcome, trigger_accuracy)?;
+        }
+        Ok(())
+    }
+
+    fn poll_search(&mut self, block: bool) -> SearchPoll {
+        let Some(rx) = self.pending.as_ref() else {
+            return SearchPoll::Died;
+        };
+        let polled = if block {
+            rx.recv().map_err(|_| mpsc::TryRecvError::Disconnected)
+        } else {
+            rx.try_recv()
+        };
+        match polled {
+            Ok(outcome) => {
+                self.pending = None;
+                SearchPoll::Done(outcome)
+            }
+            Err(mpsc::TryRecvError::Empty) => SearchPoll::Pending,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                self.pending = None;
+                SearchPoll::Died
+            }
+        }
+    }
+
+    fn search_died(&mut self) {
+        self.report.events.push(AutotuneEvent::SearchFailed { window: self.window_index });
+        self.detector.reset();
+        self.phase = Phase::Monitoring;
+    }
+
+    fn finish_search(
+        &mut self,
+        outcome: BudgetedSearch,
+        trigger_accuracy: f64,
+    ) -> Result<(), ServeError> {
+        let admitted = outcome.trials.iter().filter(|t| t.admitted).count();
+        self.report.events.push(AutotuneEvent::SearchCompleted {
+            window: self.window_index,
+            trials: outcome.trials.len(),
+            admitted,
+        });
+        let Some(model) = outcome.winner else {
+            self.report.events.push(AutotuneEvent::NoCandidateFitsBudget {
+                window: self.window_index,
+            });
+            self.detector.reset();
+            self.phase = Phase::Monitoring;
+            return Ok(());
+        };
+        // Budget gate at the swap, independent of how the model was
+        // produced: trainers are pluggable, the frontier is not.  A
+        // candidate exceeding the budget is never programmed.
+        let deploy = fitted_config(&model);
+        let est = estimate(&deploy);
+        let watts = EnergyModel::for_config(&deploy).watts;
+        if !self.cfg.budget.admits(&est, watts) {
+            self.report.events.push(AutotuneEvent::BudgetRejected {
+                window: self.window_index,
+                luts: est.luts,
+                brams: est.brams,
+                watts,
+            });
+            self.detector.reset();
+            self.phase = Phase::Monitoring;
+            return Ok(());
+        }
+        let instructions = crate::isa::instruction_count(&model);
+        let m = Arc::new(model);
+        if let Err(e) = self.handle.program((*m).clone()) {
+            // The broadcast failed — a failed swap deliberately leaves
+            // replicas UNPROGRAMMED (never stale), so the serving model
+            // must be restored right here or the pool is a permanent
+            // outage.  The restore re-programs what was serving a
+            // moment ago, so it fits the replicas' memories.
+            if let Some(cur) = self.current.clone() {
+                self.handle.program((*cur).clone())?;
+            }
+            self.report.events.push(AutotuneEvent::SwapFailed {
+                window: self.window_index,
+                error: e.to_string(),
+            });
+            self.detector.reset();
+            self.phase = Phase::Monitoring;
+            return Ok(());
+        }
+        self.previous = self.current.clone();
+        self.current = Some(m);
+        self.report.events.push(AutotuneEvent::Swapped {
+            window: self.window_index,
+            version: self.handle.pool_stats().version,
+            trigger_accuracy,
+            instructions,
+            luts: est.luts,
+            brams: est.brams,
+            watts,
+        });
+        self.phase = Phase::Validating {
+            trigger_accuracy,
+            windows_left: self.cfg.validation_windows.max(1),
+            acc_sum: 0.0,
+            n: 0,
+        };
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::spawn_pool;
+    use crate::coordinator::EngineSpec;
+    use crate::datasets::synth::SynthSpec;
+    use crate::TMShape;
+
+    fn shape() -> TMShape {
+        TMShape::synthetic(12, 3, 8)
+    }
+
+    fn dataset(drift: f64, n: usize, seed: u64) -> Dataset {
+        SynthSpec::new(12, 3, n).noise(0.05).seed(seed).drift(drift).generate()
+    }
+
+    fn trained(data: &Dataset) -> TMModel {
+        crate::trainer::train_model(&shape(), data, 4, 2)
+    }
+
+    // ---- hysteresis: pure DriftDetector state machine ----------------
+
+    #[test]
+    fn hysteresis_table_driven() {
+        // (accuracy, margin, expect_triggered) with floor .8, patience 2.
+        let cases: &[(&str, &[(f64, f64, bool)])] = &[
+            (
+                "single bad window never triggers",
+                &[(0.95, 10.0, false), (0.40, 2.0, false), (0.95, 10.0, false)],
+            ),
+            (
+                "two consecutive bad windows trigger",
+                &[(0.95, 10.0, false), (0.40, 2.0, false), (0.42, 2.0, true)],
+            ),
+            (
+                "non-consecutive bad windows never trigger",
+                &[
+                    (0.40, 2.0, false),
+                    (0.95, 10.0, false),
+                    (0.40, 2.0, false),
+                    (0.95, 10.0, false),
+                    (0.40, 2.0, false),
+                ],
+            ),
+            (
+                "healthy stream never triggers",
+                &[(0.92, 9.0, false), (0.97, 11.0, false), (0.93, 10.0, false)],
+            ),
+        ];
+        for (name, seq) in cases {
+            let mut d = DriftDetector::new(0.8, 2);
+            for (i, &(acc, margin, expect)) in seq.iter().enumerate() {
+                assert_eq!(
+                    d.push(Some(acc), margin),
+                    expect,
+                    "case {name:?}, window {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn margin_collapse_triggers_without_labels() {
+        let mut d = DriftDetector::new(0.8, 2);
+        // Establish a healthy baseline margin ~10.
+        assert!(!d.push(Some(0.95), 10.0));
+        assert!(!d.push(Some(0.96), 10.0));
+        // Unlabeled windows with collapsed margins must still trigger.
+        assert!(!d.push(None, 2.0));
+        assert!(d.push(None, 2.0));
+        // And unlabeled windows with healthy margins must not.
+        let mut d = DriftDetector::new(0.8, 2);
+        assert!(!d.push(Some(0.95), 10.0));
+        assert!(!d.push(None, 9.0));
+        assert!(!d.push(None, 11.0));
+        assert_eq!(d.consecutive_bad(), 0);
+    }
+
+    #[test]
+    fn reset_clears_streak_not_baseline() {
+        let mut d = DriftDetector::new(0.8, 3);
+        assert!(!d.push(Some(0.9), 10.0));
+        assert!(!d.push(Some(0.5), 2.0));
+        assert!(!d.push(Some(0.5), 2.0));
+        d.reset();
+        assert_eq!(d.consecutive_bad(), 0);
+        // Margin baseline survived: collapse still counts as bad.
+        assert!(!d.push(None, 2.0));
+        assert!(!d.push(None, 2.0));
+        assert!(d.push(None, 2.0));
+    }
+
+    #[test]
+    fn mismatched_window_labels_are_rejected_before_recording() {
+        let clean = dataset(0.0, 64, 7);
+        let good = trained(&clean);
+        let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited());
+        cfg.background = false;
+        let (mut tuner, mut join) = autotuner_on_pool(cfg, Arc::new(EmptySearchTrainer));
+        tuner.install(good).unwrap();
+        let short_ys = &clean.ys[..63];
+        assert!(matches!(
+            tuner.observe_window(&clean.xs, short_ys),
+            Err(crate::coordinator::ServeError::Core(
+                crate::accel::core::CoreError::BadBatch { rows: 64, .. }
+            ))
+        ));
+        // Nothing was recorded: no window, no corpus desync.
+        assert!(tuner.report.windows.is_empty());
+        let ok = tuner.observe_window(&clean.xs, &clean.ys).unwrap();
+        assert_eq!(ok.samples, 64);
+        tuner.handle.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn rebaseline_forgets_margin_baseline() {
+        let mut d = DriftDetector::new(0.8, 2);
+        assert!(!d.push(Some(0.9), 20.0)); // baseline 20
+        d.rebaseline();
+        // Margins at half the OLD baseline are healthy, not collapsed:
+        // no baseline exists until a new good window establishes one.
+        assert!(!d.push(Some(0.9), 8.0));
+        assert!(!d.push(Some(0.9), 8.0));
+        assert_eq!(d.consecutive_bad(), 0);
+        // The new baseline is the new scale: collapse is judged vs 8.
+        assert!(!d.push(None, 3.0));
+        assert!(d.push(None, 3.0));
+    }
+
+    // ---- injected trainers --------------------------------------------
+
+    /// Returns a fixed model as the search winner (one synthetic trial).
+    struct FixedTrainer(TMModel);
+
+    impl ShadowTrainer for FixedTrainer {
+        fn retrain(&self, _train: &Dataset, _valid: &Dataset) -> BudgetedSearch {
+            let cfg = fitted_config(&self.0);
+            let est = estimate(&cfg);
+            let watts = EnergyModel::for_config(&cfg).watts;
+            BudgetedSearch {
+                trials: vec![crate::coordinator::hyperparam::BudgetedTrial {
+                    t: self.0.shape.t,
+                    s: self.0.shape.s,
+                    clauses: self.0.shape.clauses,
+                    accuracy: 0.0,
+                    instructions: crate::isa::instruction_count(&self.0),
+                    estimate: est,
+                    watts,
+                    admitted: true,
+                }],
+                winner: Some(self.0.clone()),
+            }
+        }
+    }
+
+    fn autotuner_on_pool(
+        cfg: AutotuneConfig,
+        trainer: Arc<dyn ShadowTrainer>,
+    ) -> (Autotuner, crate::coordinator::PoolJoin) {
+        let (handle, join) = spawn_pool(EngineSpec::base(), 1);
+        (Autotuner::with_trainer(handle, shape(), cfg, trainer), join)
+    }
+
+    // ---- rollback: injected bad retrain restores the old model --------
+
+    #[test]
+    fn rollback_restores_previous_model_with_monotone_versions() {
+        let clean = dataset(0.0, 256, 7);
+        let drifted = dataset(0.35, 256, 7);
+        let good = trained(&clean);
+
+        // The "retrained" model is untrained: tautology killers only,
+        // predicts class 0 everywhere — guaranteed regression.
+        let bad = TMModel::empty(shape());
+
+        let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited());
+        cfg.patience = 2;
+        cfg.accuracy_floor = 0.85;
+        cfg.validation_windows = 1;
+        cfg.min_gain = 0.4; // force the regression judgment
+        cfg.background = false; // deterministic inline search
+        let (mut tuner, mut join) = autotuner_on_pool(cfg, Arc::new(FixedTrainer(bad)));
+        tuner.install(good.clone()).unwrap();
+
+        let before = tuner.handle.infer(clean.xs.clone()).unwrap();
+
+        // Healthy, then sustained drift (trigger), then one validation
+        // window under the bad swap → rollback.
+        tuner.observe_window(&clean.xs, &clean.ys).unwrap();
+        tuner.observe_window(&drifted.xs, &drifted.ys).unwrap();
+        tuner.observe_window(&drifted.xs, &drifted.ys).unwrap(); // trigger + swap
+        tuner.observe_window(&drifted.xs, &drifted.ys).unwrap(); // validate → rollback
+
+        let swapped = tuner
+            .report
+            .events
+            .iter()
+            .any(|e| matches!(e, AutotuneEvent::Swapped { .. }));
+        let rolled = tuner
+            .report
+            .events
+            .iter()
+            .any(|e| matches!(e, AutotuneEvent::RolledBack { .. }));
+        assert!(swapped, "bad model must first be swapped in: {:?}", tuner.report.events);
+        assert!(rolled, "regressing swap must roll back: {:?}", tuner.report.events);
+
+        // Previous model restored: same predictions as before the swap.
+        let after = tuner.handle.infer(clean.xs.clone()).unwrap();
+        assert_eq!(before, after);
+        assert_eq!(tuner.current_model().unwrap(), &good);
+
+        // Versions strictly monotone: install(1) → swap(2) → rollback(3).
+        assert_eq!(tuner.handle.pool_stats().version, 3);
+        tuner.handle.shutdown();
+        join.join();
+    }
+
+    // ---- budget gate: over-budget candidate never programmed ----------
+
+    #[test]
+    fn over_budget_candidate_is_never_programmed() {
+        let clean = dataset(0.0, 256, 7);
+        let drifted = dataset(0.35, 256, 7);
+        let good = trained(&clean);
+
+        // Impossible LUT budget: whatever the trainer returns must be
+        // rejected at the swap gate.
+        let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited().with_luts(1));
+        cfg.patience = 2;
+        cfg.validation_windows = 1;
+        cfg.background = false;
+        let candidate = trained(&drifted);
+        let (mut tuner, mut join) = autotuner_on_pool(cfg, Arc::new(FixedTrainer(candidate)));
+        tuner.install(good.clone()).unwrap();
+
+        tuner.observe_window(&drifted.xs, &drifted.ys).unwrap();
+        tuner.observe_window(&drifted.xs, &drifted.ys).unwrap(); // trigger
+
+        assert!(tuner
+            .report
+            .events
+            .iter()
+            .any(|e| matches!(e, AutotuneEvent::BudgetRejected { .. })));
+        assert!(!tuner
+            .report
+            .events
+            .iter()
+            .any(|e| matches!(e, AutotuneEvent::Swapped { .. })));
+        // Only the install ever programmed the pool.
+        assert_eq!(tuner.handle.pool_stats().version, 1);
+        assert_eq!(tuner.current_model().unwrap(), &good);
+        // Back to monitoring: the tuner is not wedged.
+        assert_eq!(tuner.phase_name(), "monitoring");
+        tuner.handle.shutdown();
+        join.join();
+    }
+
+    // ---- failed swap broadcast restores the serving model -------------
+
+    #[test]
+    fn failed_swap_restores_the_serving_model() {
+        use crate::accel::core::AccelConfig;
+
+        let clean = dataset(0.0, 256, 7);
+        let drifted = dataset(0.35, 256, 7);
+        let good = trained(&clean);
+
+        // Pool memories sized EXACTLY for the serving model; the
+        // candidate is bigger, so the broadcast itself fails even
+        // though an unlimited budget admits its fitted deployment.
+        let n_small = crate::isa::instruction_count(&good);
+        let big_shape = TMShape::synthetic(12, 3, 48);
+        let big_data = SynthSpec::new(12, 3, 256).noise(0.05).seed(9).generate();
+        let big = crate::trainer::train_model(&big_shape, &big_data, 4, 2);
+        assert!(crate::isa::instruction_count(&big) > n_small, "test premise");
+
+        let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited());
+        cfg.patience = 1;
+        cfg.background = false;
+        let spec = EngineSpec::custom(AccelConfig::base().with_depths(n_small, 2048));
+        let (handle, mut join) = spawn_pool(spec, 2);
+        let mut tuner = Autotuner::with_trainer(handle, shape(), cfg, Arc::new(FixedTrainer(big)));
+        tuner.install(good.clone()).unwrap();
+        let before = tuner.handle.infer(clean.xs.clone()).unwrap();
+
+        // Trigger → swap broadcast fails → old model restored.
+        tuner.observe_window(&drifted.xs, &drifted.ys).unwrap();
+
+        assert!(tuner
+            .report
+            .events
+            .iter()
+            .any(|e| matches!(e, AutotuneEvent::SwapFailed { .. })));
+        // NOT a permanent outage: the pool still serves the old model.
+        assert_eq!(tuner.handle.infer(clean.xs.clone()).unwrap(), before);
+        assert_eq!(tuner.current_model().unwrap(), &good);
+        assert_eq!(tuner.phase_name(), "monitoring");
+        // install(1) + failed broadcast(2) + restore(3): monotone.
+        assert_eq!(tuner.handle.pool_stats().version, 3);
+        tuner.handle.shutdown();
+        join.join();
+    }
+
+    // ---- no-winner search resumes monitoring --------------------------
+
+    struct EmptySearchTrainer;
+
+    impl ShadowTrainer for EmptySearchTrainer {
+        fn retrain(&self, _train: &Dataset, _valid: &Dataset) -> BudgetedSearch {
+            BudgetedSearch { trials: Vec::new(), winner: None }
+        }
+    }
+
+    #[test]
+    fn no_candidate_resumes_monitoring() {
+        let clean = dataset(0.0, 128, 7);
+        let drifted = dataset(0.35, 128, 7);
+        let good = trained(&clean);
+        let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited());
+        cfg.patience = 1;
+        cfg.background = false;
+        let (mut tuner, mut join) = autotuner_on_pool(cfg, Arc::new(EmptySearchTrainer));
+        tuner.install(good).unwrap();
+        tuner.observe_window(&drifted.xs, &drifted.ys).unwrap();
+        assert!(tuner
+            .report
+            .events
+            .iter()
+            .any(|e| matches!(e, AutotuneEvent::NoCandidateFitsBudget { .. })));
+        assert_eq!(tuner.phase_name(), "monitoring");
+        assert_eq!(tuner.handle.pool_stats().version, 1);
+        tuner.handle.shutdown();
+        join.join();
+    }
+}

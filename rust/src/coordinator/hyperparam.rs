@@ -10,6 +10,8 @@
 
 use crate::config::TMShape;
 use crate::datasets::synth::Dataset;
+use crate::model_cost::energy::EnergyModel;
+use crate::model_cost::resources::{estimate, fitted_config, ResourceBudget, ResourceEstimate};
 use crate::tm::model::TMModel;
 use crate::tm::reference;
 
@@ -53,16 +55,18 @@ impl SearchSpace {
     }
 }
 
-/// Exhaustive grid search; returns all trials sorted by score (best
-/// first) and the winning model.
-pub fn grid_search(
+/// Shared candidate enumeration for [`grid_search`] and
+/// [`budget_search`]: one walk of the clause/T/s grid (one
+/// T-attainability filter), one training + evaluation per point — the
+/// two searches differ only in scoring/selection, so they must never
+/// drift apart on WHICH candidates they consider.
+fn train_grid(
     base: &TMShape,
     train: &Dataset,
     valid: &Dataset,
     space: &SearchSpace,
-) -> (Vec<Trial>, TMModel) {
-    let mut trials = Vec::new();
-    let mut best: Option<(f64, TMModel)> = None;
+    mut consume: impl FnMut(f64, usize, TMModel),
+) {
     for &clauses in &space.clause_grid {
         for &t in &space.t_grid {
             // T must stay attainable for the clause budget.
@@ -77,18 +81,111 @@ pub fn grid_search(
                 let model = crate::trainer::train_model(&shape, train, space.epochs, space.seed);
                 let accuracy = reference::accuracy(&model, &valid.xs, &valid.ys);
                 let instructions = crate::isa::instruction_count(&model);
-                let score =
-                    accuracy - space.size_weight * instructions as f64 / shape.total_tas() as f64;
-                trials.push(Trial { t, s, clauses, accuracy, instructions, score });
-                if best.as_ref().map(|(b, _)| score > *b).unwrap_or(true) {
-                    best = Some((score, model));
-                }
+                consume(accuracy, instructions, model);
             }
         }
     }
+}
+
+/// Exhaustive grid search; returns all trials sorted by score (best
+/// first) and the winning model.
+pub fn grid_search(
+    base: &TMShape,
+    train: &Dataset,
+    valid: &Dataset,
+    space: &SearchSpace,
+) -> (Vec<Trial>, TMModel) {
+    let mut trials = Vec::new();
+    let mut best: Option<(f64, TMModel)> = None;
+    train_grid(base, train, valid, space, |accuracy, instructions, model| {
+        let score = accuracy
+            - space.size_weight * instructions as f64 / model.shape.total_tas() as f64;
+        trials.push(Trial {
+            t: model.shape.t,
+            s: model.shape.s,
+            clauses: model.shape.clauses,
+            accuracy,
+            instructions,
+            score,
+        });
+        if best.as_ref().map(|(b, _)| score > *b).unwrap_or(true) {
+            best = Some((score, model));
+        }
+    });
     trials.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
     let model = best.expect("non-empty grid").1;
     (trials, model)
+}
+
+/// One candidate of a budget-constrained search: the trial plus its
+/// fitted-deployment cost and whether the budget admits it.
+#[derive(Debug, Clone)]
+pub struct BudgetedTrial {
+    pub t: i32,
+    pub s: f64,
+    pub clauses: usize,
+    pub accuracy: f64,
+    pub instructions: usize,
+    /// Resource cost of the candidate deployed at fitted memory depths
+    /// ([`fitted_config`]).
+    pub estimate: ResourceEstimate,
+    pub watts: f64,
+    pub admitted: bool,
+}
+
+/// Outcome of [`budget_search`]: every candidate costed against the
+/// budget, plus the winner — the most *accurate* admitted model,
+/// smaller instruction stream breaking ties (it is faster and cheaper
+/// on the accelerator).  `winner` is `None` when nothing fits.
+#[derive(Debug)]
+pub struct BudgetedSearch {
+    /// All candidates, sorted by accuracy (best first).
+    pub trials: Vec<BudgetedTrial>,
+    pub winner: Option<TMModel>,
+}
+
+/// Budget-constrained shape search (the autotuner's shadow retrain):
+/// train every grid point of `space`, cost each candidate's *fitted*
+/// deployment through the resource and energy models, and pick the most
+/// accurate model that the budget admits.  Unlike [`grid_search`] the
+/// constraint is an explicit resource frontier, not a soft size
+/// penalty — the paper's runtime model-size tuning with the LUT/BRAM/
+/// energy wall made first-class.
+pub fn budget_search(
+    base: &TMShape,
+    train: &Dataset,
+    valid: &Dataset,
+    space: &SearchSpace,
+    budget: &ResourceBudget,
+) -> BudgetedSearch {
+    let mut trials: Vec<BudgetedTrial> = Vec::new();
+    let mut best: Option<(f64, usize, TMModel)> = None; // (acc, instrs, model)
+    train_grid(base, train, valid, space, |accuracy, instructions, model| {
+        let cfg = fitted_config(&model);
+        let est = estimate(&cfg);
+        let watts = EnergyModel::for_config(&cfg).watts;
+        let admitted = budget.admits(&est, watts);
+        trials.push(BudgetedTrial {
+            t: model.shape.t,
+            s: model.shape.s,
+            clauses: model.shape.clauses,
+            accuracy,
+            instructions,
+            estimate: est,
+            watts,
+            admitted,
+        });
+        if admitted
+            && best
+                .as_ref()
+                .map(|(a, i, _)| accuracy > *a || (accuracy == *a && instructions < *i))
+                .unwrap_or(true)
+        {
+            best = Some((accuracy, instructions, model));
+        }
+    });
+    trials.sort_by(|a, b| b.accuracy.partial_cmp(&a.accuracy).unwrap());
+    BudgetedSearch { trials, winner: best.map(|(_, _, m)| m) }
 }
 
 #[cfg(test)]
@@ -147,5 +244,54 @@ mod tests {
         let score_small = t.accuracy - w * t.instructions as f64 / total;
         let score_big = big.accuracy - w * big.instructions as f64 / total;
         assert!(score_small > score_big);
+    }
+
+    #[test]
+    fn budget_search_unlimited_picks_most_accurate() {
+        let shape = crate::TMShape::synthetic(16, 2, 10);
+        let (train, valid) = data();
+        let space = SearchSpace::around(&shape);
+        let out = budget_search(&shape, &train, &valid, &space, &ResourceBudget::unlimited());
+        assert!(!out.trials.is_empty());
+        assert!(out.trials.iter().all(|t| t.admitted));
+        for w in out.trials.windows(2) {
+            assert!(w[0].accuracy >= w[1].accuracy);
+        }
+        let winner = out.winner.expect("unlimited budget always has a winner");
+        let acc = reference::accuracy(&winner, &valid.xs, &valid.ys);
+        assert!((acc - out.trials[0].accuracy).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budget_search_winner_respects_budget() {
+        let shape = crate::TMShape::synthetic(16, 2, 10);
+        let (train, valid) = data();
+        let space = SearchSpace::around(&shape);
+        // A frontier tight enough to exclude at least the deepest
+        // candidates but loose enough to admit the smallest.
+        let budget = ResourceBudget::unlimited().with_brams(14).with_watts(0.36);
+        let out = budget_search(&shape, &train, &valid, &space, &budget);
+        if let Some(winner) = &out.winner {
+            let cfg = fitted_config(winner);
+            let est = estimate(&cfg);
+            let watts = EnergyModel::for_config(&cfg).watts;
+            assert!(budget.admits(&est, watts));
+        }
+        // The admitted flag matches a recomputed admission check.
+        for t in &out.trials {
+            assert_eq!(t.admitted, budget.admits(&t.estimate, t.watts));
+        }
+    }
+
+    #[test]
+    fn budget_search_impossible_budget_has_no_winner() {
+        let shape = crate::TMShape::synthetic(16, 2, 10);
+        let (train, valid) = data();
+        let mut space = SearchSpace::around(&shape);
+        space.epochs = 1;
+        let budget = ResourceBudget::unlimited().with_luts(1);
+        let out = budget_search(&shape, &train, &valid, &space, &budget);
+        assert!(out.winner.is_none());
+        assert!(out.trials.iter().all(|t| !t.admitted));
     }
 }

@@ -15,15 +15,26 @@
 //!   a mixed-version pool) and panic supervision (a dying replica is
 //!   respawned from the last-programmed model) — std primitives only;
 //!   the offline toolchain has no tokio, and the request loop is the
-//!   same shape.
+//!   same shape;
+//! * the [`autotune`] subsystem: a live drift-aware autotuner that runs
+//!   against the pool *while it serves* — sliding-window telemetry with
+//!   hysteresis, a budget-constrained shadow shape search on sustained
+//!   drift, and zero-downtime swap with rollback.  Policy code talks
+//!   only to [`server::ServiceHandle`]; the old [`tuner`] loop is a
+//!   thin offline wrapper over the same policy core.
 
+pub mod autotune;
 pub mod hyperparam;
 pub mod server;
 pub mod service;
 pub mod tuner;
 
+pub use autotune::{
+    AutotuneConfig, AutotuneEvent, AutotuneReport, Autotuner, DriftDetector, WindowStats,
+};
 pub use server::{
     spawn, spawn_pool, PoolJoin, PoolStats, ReplicaStats, ServeError, ServerStats, ServiceHandle,
+    Telemetry,
 };
 pub use service::{Engine, EngineSpec, InferenceService, Metrics};
 pub use tuner::{RecalReport, RecalibrationLoop, TrainBackend, TrainingNode};

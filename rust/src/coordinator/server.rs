@@ -84,11 +84,31 @@ pub struct PoolStats {
     pub version: u64,
 }
 
+/// One telemetry probe reply: predictions, per-datapoint confidence
+/// margins (top-1 minus top-2 class sum), and the pool model version
+/// the serving replica ran — the feed of the autotune monitor
+/// ([`crate::coordinator::autotune`]).
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    pub preds: Vec<usize>,
+    pub margins: Vec<i32>,
+    /// Pool version fence value the replica had acknowledged when it
+    /// served this probe.
+    pub model_version: u64,
+}
+
 /// One queued unit of work.
 enum Job {
     Infer {
         rows: Vec<Vec<u8>>,
         reply: mpsc::Sender<Result<Vec<usize>, ServeError>>,
+    },
+    /// Inference plus the confidence-margin telemetry the drift monitor
+    /// consumes.  Rides the same queue as plain requests — telemetry IS
+    /// traffic, so the monitor observes exactly what clients do.
+    Telemetry {
+        rows: Vec<Vec<u8>>,
+        reply: mpsc::Sender<Result<Telemetry, ServeError>>,
     },
     /// Fault injection: panic inside the owning worker.  Exercises the
     /// real supervision path (tests, chaos drills).
@@ -216,6 +236,16 @@ impl ServiceHandle {
     pub fn infer(&self, rows: Vec<Vec<u8>>) -> Result<Vec<usize>, ServeError> {
         let (reply, rx) = mpsc::channel();
         self.submit(Job::Infer { rows, reply })?;
+        rx.recv().map_err(|_| ServeError::WorkerGone)?
+    }
+
+    /// Blocking telemetry RPC: inference plus confidence margins and
+    /// the serving replica's acknowledged model version.  The autotune
+    /// monitor's probe path — it queues behind (and alongside) regular
+    /// traffic on purpose.
+    pub fn infer_telemetry(&self, rows: Vec<Vec<u8>>) -> Result<Telemetry, ServeError> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(Job::Telemetry { rows, reply })?;
         rx.recv().map_err(|_| ServeError::WorkerGone)?
     }
 
@@ -423,43 +453,78 @@ fn run_job(
     my_version: &mut u64,
     job: Job,
 ) {
-    let (outcome, reply) = match job {
-        Job::Infer { rows, reply } => (
-            panic::catch_unwind(AssertUnwindSafe(|| service.infer_all(&rows))),
-            reply,
-        ),
-        Job::Crash { reply } => (
-            panic::catch_unwind(AssertUnwindSafe(|| -> Result<Vec<usize>, CoreError> {
+    match job {
+        Job::Infer { rows, reply } => {
+            let outcome = panic::catch_unwind(AssertUnwindSafe(|| service.infer_all(&rows)));
+            reply_or_respawn(shared, idx, service, my_version, outcome, reply);
+        }
+        Job::Telemetry { rows, reply } => {
+            // Capture the fence version the request runs under BEFORE
+            // the work: a panic respawn may advance `my_version`.
+            let version = *my_version;
+            let outcome = panic::catch_unwind(AssertUnwindSafe(|| {
+                service.infer_with_margins(&rows).map(|(preds, margins)| Telemetry {
+                    preds,
+                    margins,
+                    model_version: version,
+                })
+            }));
+            reply_or_respawn(shared, idx, service, my_version, outcome, reply);
+        }
+        Job::Crash { reply } => {
+            let outcome = panic::catch_unwind(AssertUnwindSafe(|| -> Result<Vec<usize>, CoreError> {
                 panic!("injected fault (ServiceHandle::inject_panic)")
-            })),
-            reply,
-        ),
-    };
+            }));
+            reply_or_respawn(shared, idx, service, my_version, outcome, reply);
+        }
+    }
+}
+
+/// Shared tail of the per-request supervision protocol, for every job
+/// flavour: on success, publish this replica's metrics BEFORE replying
+/// (a client that got its answer always sees it reflected in
+/// `stats()`); on a caught panic, respawn the replica and fail only
+/// the offending request.
+fn reply_or_respawn<T>(
+    shared: &Shared,
+    idx: usize,
+    service: &mut InferenceService,
+    my_version: &mut u64,
+    outcome: std::thread::Result<Result<T, CoreError>>,
+    reply: mpsc::Sender<Result<T, ServeError>>,
+) {
     match outcome {
         Ok(result) => {
-            // Publish metrics BEFORE replying, so a client that got its
-            // answer always sees it reflected in stats().
             shared.metrics.lock().unwrap()[idx].metrics = service.metrics.clone();
             let _ = reply.send(result.map_err(ServeError::Core));
         }
         Err(_panic) => {
-            // Supervision: the request may have left the replica in an
-            // arbitrary state.  Rebuild the engine from the spec, carry
-            // the counters over, reprogram from the last-programmed
-            // model, then fail only the offending request.
-            let mut carried = service.metrics.clone();
-            carried.errors += 1;
-            *service = InferenceService::new(shared.spec.build());
-            service.metrics = carried;
-            {
-                let mut per = shared.metrics.lock().unwrap();
-                per[idx].respawns += 1;
-                per[idx].metrics = service.metrics.clone();
-            }
-            *my_version = program_from_cell(shared, idx, service);
+            respawn_replica(shared, idx, service, my_version);
             let _ = reply.send(Err(ServeError::WorkerPanicked { replica: idx }));
         }
     }
+}
+
+/// Supervision: a panicking request may have left the replica in an
+/// arbitrary state.  Rebuild the engine from the spec, carry the
+/// counters over (plus the error), reprogram from the last-programmed
+/// model, then let the caller fail only the offending request.
+fn respawn_replica(
+    shared: &Shared,
+    idx: usize,
+    service: &mut InferenceService,
+    my_version: &mut u64,
+) {
+    let mut carried = service.metrics.clone();
+    carried.errors += 1;
+    *service = InferenceService::new(shared.spec.build());
+    service.metrics = carried;
+    {
+        let mut per = shared.metrics.lock().unwrap();
+        per[idx].respawns += 1;
+        per[idx].metrics = service.metrics.clone();
+    }
+    *my_version = program_from_cell(shared, idx, service);
 }
 
 /// Swap `service` to the cell's current model and acknowledge the
@@ -577,6 +642,35 @@ mod tests {
         for r in &stats.replicas {
             assert_eq!(r.model_version, 2);
         }
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn telemetry_matches_single_service_and_reports_fence_version() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 2);
+        h.program(model.clone()).unwrap();
+
+        let mut reference = InferenceService::new(EngineSpec::base().build());
+        reference.reprogram(&model).unwrap();
+        let (want_preds, want_margins) = reference.infer_with_margins(&data.xs).unwrap();
+
+        let tel = h.infer_telemetry(data.xs.clone()).unwrap();
+        assert_eq!(tel.preds, want_preds);
+        assert_eq!(tel.margins, want_margins);
+        assert_eq!(tel.model_version, 1);
+
+        // Telemetry rides the version fence like any request.
+        h.program(model).unwrap();
+        let tel = h.infer_telemetry(data.xs.clone()).unwrap();
+        assert_eq!(tel.model_version, 2);
+
+        // Malformed telemetry probes are typed errors, not pool deaths.
+        assert!(matches!(
+            h.infer_telemetry(Vec::new()),
+            Err(ServeError::Core(CoreError::BadBatch { rows: 0, .. }))
+        ));
         h.shutdown();
         join.join();
     }

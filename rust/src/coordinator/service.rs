@@ -126,12 +126,67 @@ impl Engine {
         }
     }
 
+    /// Like [`Engine::run_rows`], but also returns the per-datapoint
+    /// confidence margin (top-1 minus top-2 class sum) — the label-free
+    /// drift signal the autotuner's telemetry monitor consumes.
+    pub fn run_rows_margins(
+        &mut self,
+        rows: &[Vec<u8>],
+    ) -> Result<(Vec<usize>, Vec<i32>, u64), CoreError> {
+        sched::validate_rows(rows, 32)?;
+        let packed = crate::isa::pack_features(rows);
+        match self {
+            Engine::Single(c) => {
+                let r = c.run_batch(&packed)?;
+                Ok((
+                    r.preds[..rows.len()].iter().map(|&p| p as usize).collect(),
+                    margins_from_sums(&r.class_sums, rows.len()),
+                    r.cycles.total(),
+                ))
+            }
+            Engine::Multi(m) => {
+                let r = m.run_batch(&packed)?;
+                Ok((
+                    r.preds[..rows.len()].iter().map(|&p| p as usize).collect(),
+                    margins_from_sums(&r.class_sums, rows.len()),
+                    r.batch_cycles,
+                ))
+            }
+        }
+    }
+
     pub fn freq_mhz(&self) -> f64 {
         match self {
             Engine::Single(c) => c.cfg.freq_mhz,
             Engine::Multi(m) => m.cores[0].cfg.freq_mhz,
         }
     }
+}
+
+/// Per-lane confidence margin: winning class sum minus runner-up.  A
+/// drifting input distribution collapses this *before* labels arrive —
+/// the autotuner's label-free early-warning signal.  With a single
+/// class the margin is the winning sum itself.
+pub fn margins_from_sums(sums: &[[i32; 32]], n: usize) -> Vec<i32> {
+    (0..n.min(32))
+        .map(|b| {
+            let (mut best, mut second) = (i32::MIN, i32::MIN);
+            for row in sums {
+                let v = row[b];
+                if v > best {
+                    second = best;
+                    best = v;
+                } else if v > second {
+                    second = v;
+                }
+            }
+            if second == i32::MIN {
+                best
+            } else {
+                best - second
+            }
+        })
+        .collect()
 }
 
 /// Service counters (simulated time is cycle-derived, not wall time).
@@ -229,6 +284,49 @@ impl InferenceService {
                 Err(e)
             }
         }
+    }
+
+    /// Serve an arbitrary-size request, returning predictions *and* the
+    /// per-datapoint confidence margins — the telemetry flavour of
+    /// [`Self::infer_all`] the autotuner's monitor rides on.  Counters
+    /// update exactly like a normal request (telemetry IS traffic).
+    ///
+    /// Unlike `infer_all`, this runs per-32-row batches (the bulk
+    /// scheduler does not surface class sums): on a multi-core engine,
+    /// `ParallelMode::Auto` keeps small per-batch walks serial, so the
+    /// per-chunk thread-spawn cost only appears for large programs.
+    /// Probe windows are small and per-window; a margins-aware bulk
+    /// path is a known follow-on (ROADMAP).
+    pub fn infer_with_margins(
+        &mut self,
+        rows: &[Vec<u8>],
+    ) -> Result<(Vec<usize>, Vec<i32>), CoreError> {
+        if let Err(e) = sched::validate_rows(rows, usize::MAX) {
+            self.metrics.errors += 1;
+            return Err(e);
+        }
+        let mut preds = Vec::with_capacity(rows.len());
+        let mut margins = Vec::with_capacity(rows.len());
+        let mut cycles = 0u64;
+        let mut batches = 0u64;
+        for chunk in rows.chunks(32) {
+            match self.engine.run_rows_margins(chunk) {
+                Ok((p, m, c)) => {
+                    preds.extend(p);
+                    margins.extend(m);
+                    cycles += c;
+                    batches += 1;
+                }
+                Err(e) => {
+                    self.metrics.errors += 1;
+                    return Err(e);
+                }
+            }
+        }
+        self.metrics.inferences += rows.len() as u64;
+        self.metrics.batches += batches;
+        self.metrics.simulated_cycles += cycles;
+        Ok((preds, margins))
     }
 
     /// Accuracy over a labeled set (the recalibration monitor's probe).
@@ -359,6 +457,57 @@ mod tests {
             svc.infer_all(&data.xs).unwrap(),
             base.infer_all(&data.xs).unwrap()
         );
+    }
+
+    #[test]
+    fn margins_match_class_sum_gap() {
+        let (model, data) = trained();
+        let mut svc = InferenceService::new(Engine::base());
+        svc.reprogram(&model).unwrap();
+        let (preds, margins) = svc.infer_with_margins(&data.xs).unwrap();
+        assert_eq!(preds.len(), data.len());
+        assert_eq!(margins.len(), data.len());
+        // Cross-check against the dense reference sums.
+        for ((x, &p), &m) in data.xs.iter().zip(&preds).zip(&margins) {
+            let lits = crate::tm::reference::literals_from_features(x);
+            let mut sums = crate::tm::reference::class_sums_dense(&model, &lits);
+            assert_eq!(p, crate::tm::reference::predict_dense(&model, &lits));
+            sums.sort_unstable_by(|a, b| b.cmp(a));
+            assert_eq!(m, sums[0] - sums[1]);
+            assert!(m >= 0, "winner minus runner-up is never negative");
+        }
+        // Telemetry counts as traffic.
+        assert_eq!(svc.metrics.inferences, data.len() as u64);
+    }
+
+    #[test]
+    fn margins_agree_across_engines() {
+        let (model, data) = trained();
+        let mut a = InferenceService::new(Engine::base());
+        let mut b = InferenceService::new(Engine::five_core());
+        a.reprogram(&model).unwrap();
+        b.reprogram(&model).unwrap();
+        assert_eq!(
+            a.infer_with_margins(&data.xs).unwrap(),
+            b.infer_with_margins(&data.xs).unwrap()
+        );
+    }
+
+    #[test]
+    fn margins_reject_malformed_requests() {
+        let (model, _) = trained();
+        let mut svc = InferenceService::new(Engine::base());
+        svc.reprogram(&model).unwrap();
+        assert!(matches!(
+            svc.infer_with_margins(&[]),
+            Err(CoreError::BadBatch { rows: 0, .. })
+        ));
+        let ragged = vec![vec![0u8; 12], vec![0u8; 3]];
+        assert!(matches!(
+            svc.infer_with_margins(&ragged),
+            Err(CoreError::BadBatch { rows: 2, .. })
+        ));
+        assert_eq!(svc.metrics.errors, 2);
     }
 
     #[test]

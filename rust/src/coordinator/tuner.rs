@@ -75,7 +75,16 @@ pub struct RecalReport {
     pub recalibrations: Vec<RecalEvent>,
 }
 
-/// Drift monitor + retune policy.
+/// Drift monitor + retune policy — the *offline* compatibility shape.
+///
+/// Since the autotune subsystem landed this is a thin wrapper over the
+/// shared policy core ([`crate::coordinator::autotune::DriftDetector`]
+/// with `patience = 1`, fixed shape, no budget): same decisions as the
+/// original Fig 8 loop, but the drift judgment itself lives in one
+/// place.  For serving-scale deployments use
+/// [`crate::coordinator::autotune::Autotuner`], which runs the same
+/// policy live against the replica pool with hysteresis, a
+/// budget-constrained shape search and rollback.
 pub struct RecalibrationLoop {
     pub node: TrainingNode,
     /// Reprogram when probe accuracy falls below this.
@@ -99,10 +108,14 @@ impl RecalibrationLoop {
         windows: &[(Dataset, Dataset)],
     ) -> anyhow::Result<RecalReport> {
         let mut report = RecalReport::default();
+        // Patience-1 detector == the original `acc < threshold` check;
+        // the offline loop has no margin telemetry, so the label-free
+        // signal stays dormant (margin 0 never beats a 0 baseline).
+        let mut detector = crate::coordinator::autotune::DriftDetector::new(self.threshold, 1);
         for (step, (probe, retrain)) in windows.iter().enumerate() {
             let acc = service.measure_accuracy(&probe.xs, &probe.ys)?;
             report.probes.push((step, acc));
-            if acc < self.threshold {
+            if detector.push(Some(acc), 0.0) {
                 let model = self.node.retrain(retrain)?;
                 service.reprogram(&model)?;
                 // Post-recalibration accuracy lives ONLY in the
@@ -115,6 +128,7 @@ impl RecalibrationLoop {
                     accuracy_after: after,
                     instruction_count: crate::isa::instruction_count(&model),
                 });
+                detector.reset();
             }
         }
         Ok(report)

@@ -11,4 +11,4 @@ pub mod synth;
 pub mod workloads;
 
 pub use synth::{Dataset, SynthSpec, XorShift64Star};
-pub use workloads::{workload, workload_names, Workload};
+pub use workloads::{workload, workload_names, DriftKind, DriftSchedule, Workload};

@@ -146,9 +146,11 @@ impl Dataset {
         self.xs.is_empty()
     }
 
-    /// Split into (train, test) at `frac`.
+    /// Split into (train, test) at `frac`.  The cut index is clamped to
+    /// `[0, len]`: out-of-range fractions yield an empty side instead of
+    /// a slice panic (`frac` is routinely computed from CLI input).
     pub fn split(&self, frac: f64) -> (Dataset, Dataset) {
-        let cut = (self.len() as f64 * frac) as usize;
+        let cut = ((self.len() as f64 * frac).clamp(0.0, self.len() as f64)) as usize;
         let a = Dataset {
             xs: self.xs[..cut].to_vec(),
             ys: self.ys[..cut].to_vec(),
@@ -277,6 +279,20 @@ mod tests {
         let (tr, te) = d.split(0.8);
         assert_eq!(tr.len(), 80);
         assert_eq!(te.len(), 20);
+    }
+
+    #[test]
+    fn split_clamps_out_of_range_fractions() {
+        // Regression: frac outside [0, 1] used to panic on the slice.
+        let d = SynthSpec::new(8, 2, 100).generate();
+        let (tr, te) = d.split(1.5);
+        assert_eq!((tr.len(), te.len()), (100, 0));
+        let (tr, te) = d.split(-0.1);
+        assert_eq!((tr.len(), te.len()), (0, 100));
+        let (tr, te) = d.split(0.0);
+        assert_eq!((tr.len(), te.len()), (0, 100));
+        let (tr, te) = d.split(1.0);
+        assert_eq!((tr.len(), te.len()), (100, 0));
     }
 
     #[test]

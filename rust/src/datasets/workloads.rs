@@ -55,6 +55,162 @@ impl Workload {
     }
 }
 
+/// How drift unfolds over a streamed deployment (the paper §4 Q2 field
+/// scenarios): abrupt sensor failure, gradual aging, recurring
+/// environment shifts (e.g. day/night cycles).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DriftKind {
+    /// Clean until window `at`, then constant `drift`.
+    Abrupt { at: usize, drift: f64 },
+    /// Linear ramp: 0 at `start`, full `drift` at `end` and after.
+    Gradual { start: usize, end: usize, drift: f64 },
+    /// Alternating clean / drifted phases of `period` windows each.
+    Recurring { period: usize, drift: f64 },
+}
+
+/// A streaming drift schedule: `windows` monitoring windows of
+/// `window_n` labeled samples each, drawn from one workload's fixed
+/// prototype universe with a per-window drift level.
+///
+/// Each window's samples are FRESH draws (the stream moves on): window
+/// `i` is the `i`-th slice of the full-length stream generated at that
+/// window's drift level.  The generator's locked draw order
+/// ([`SynthSpec`]) pins prototypes and the sample sequence to the seed,
+/// so windows at equal drift chain into one continuous stream, and
+/// windows at different drift levels stay sample-paired.
+#[derive(Debug, Clone)]
+pub struct DriftSchedule {
+    pub kind: DriftKind,
+    pub windows: usize,
+    /// Labeled samples per window.
+    pub window_n: usize,
+    pub seed: u64,
+}
+
+impl DriftSchedule {
+    pub fn abrupt(windows: usize, window_n: usize, at: usize, drift: f64) -> Self {
+        DriftSchedule { kind: DriftKind::Abrupt { at, drift }, windows, window_n, seed: 7 }
+    }
+
+    pub fn gradual(windows: usize, window_n: usize, start: usize, end: usize, drift: f64) -> Self {
+        DriftSchedule {
+            kind: DriftKind::Gradual { start, end, drift },
+            windows,
+            window_n,
+            seed: 7,
+        }
+    }
+
+    pub fn recurring(windows: usize, window_n: usize, period: usize, drift: f64) -> Self {
+        DriftSchedule { kind: DriftKind::Recurring { period, drift }, windows, window_n, seed: 7 }
+    }
+
+    pub fn seed(mut self, v: u64) -> Self {
+        self.seed = v;
+        self
+    }
+
+    /// Drift level of window `step`.
+    pub fn drift_at(&self, step: usize) -> f64 {
+        match self.kind {
+            DriftKind::Abrupt { at, drift } => {
+                if step >= at {
+                    drift
+                } else {
+                    0.0
+                }
+            }
+            DriftKind::Gradual { start, end, drift } => {
+                if step <= start || end <= start {
+                    0.0
+                } else if step >= end {
+                    drift
+                } else {
+                    drift * (step - start) as f64 / (end - start) as f64
+                }
+            }
+            DriftKind::Recurring { period, drift } => {
+                if (step / period.max(1)) % 2 == 1 {
+                    drift
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Window `step`'s labeled samples for workload `w`.
+    ///
+    /// Each call regenerates the full-length stream at the window's
+    /// drift level (O(windows x window_n)); when iterating every
+    /// window, use [`Self::stream`], which shares one generation per
+    /// distinct drift level.
+    pub fn window(&self, w: &Workload, step: usize) -> Dataset {
+        assert!(step < self.windows, "window {step} past schedule ({})", self.windows);
+        self.slice(&self.full_stream(w, self.drift_at(step)), step)
+    }
+
+    /// All windows, in stream order.  The full-length sample stream is
+    /// generated once per DISTINCT drift level and sliced (windows at
+    /// equal drift share one generation), so abrupt/recurring schedules
+    /// cost O(levels x stream) instead of the O(windows x stream) of
+    /// repeated [`Self::window`] calls.  (A gradual ramp has one level
+    /// per window either way.)
+    pub fn stream(&self, w: &Workload) -> Vec<Dataset> {
+        let mut cache: Vec<(u64, Dataset)> = Vec::new();
+        (0..self.windows)
+            .map(|step| {
+                let key = self.drift_at(step).to_bits();
+                if !cache.iter().any(|(k, _)| *k == key) {
+                    cache.push((key, self.full_stream(w, self.drift_at(step))));
+                }
+                let full = &cache.iter().find(|(k, _)| *k == key).expect("just inserted").1;
+                self.slice(full, step)
+            })
+            .collect()
+    }
+
+    /// `n` clean labeled samples drawn BEYOND the monitored stream —
+    /// same prototype universe (same seed), fresh draws.  Train the
+    /// initially-deployed model on these, so the monitoring windows
+    /// measure generalization, not memorization of the training set
+    /// (the stream prefix and a same-seed training draw are
+    /// byte-identical otherwise).
+    pub fn training_set(&self, w: &Workload, n: usize) -> Dataset {
+        let total = self.windows * self.window_n;
+        let full = SynthSpec::new(w.shape.features, w.shape.classes, total + n)
+            .noise(w.noise)
+            .informative(w.informative)
+            .seed(self.seed)
+            .generate();
+        Dataset {
+            xs: full.xs[total..].to_vec(),
+            ys: full.ys[total..].to_vec(),
+            spec: full.spec.clone(),
+        }
+    }
+
+    /// The full-length labeled stream at one drift level.
+    fn full_stream(&self, w: &Workload, drift: f64) -> Dataset {
+        SynthSpec::new(w.shape.features, w.shape.classes, self.windows * self.window_n)
+            .noise(w.noise)
+            .informative(w.informative)
+            .seed(self.seed)
+            .drift(drift)
+            .generate()
+    }
+
+    fn slice(&self, full: &Dataset, step: usize) -> Dataset {
+        let lo = step * self.window_n;
+        let hi = lo + self.window_n;
+        Dataset {
+            xs: full.xs[lo..hi].to_vec(),
+            ys: full.ys[lo..hi].to_vec(),
+            spec: full.spec.clone(),
+        }
+    }
+}
+
 fn shape(name: &str, features: usize, classes: usize, clauses: usize, t: i32, s: f64) -> TMShape {
     TMShape {
         name: name.to_string(),
@@ -204,5 +360,104 @@ mod tests {
     #[test]
     fn unknown_workload_errors() {
         assert!(workload("nope").is_err());
+    }
+
+    #[test]
+    fn drift_levels_follow_the_schedule() {
+        let a = DriftSchedule::abrupt(8, 16, 4, 0.4);
+        assert_eq!(a.drift_at(0), 0.0);
+        assert_eq!(a.drift_at(3), 0.0);
+        assert_eq!(a.drift_at(4), 0.4);
+        assert_eq!(a.drift_at(7), 0.4);
+
+        let g = DriftSchedule::gradual(10, 16, 2, 6, 0.4);
+        assert_eq!(g.drift_at(2), 0.0);
+        assert!((g.drift_at(4) - 0.2).abs() < 1e-12);
+        assert_eq!(g.drift_at(6), 0.4);
+        assert_eq!(g.drift_at(9), 0.4);
+
+        let r = DriftSchedule::recurring(8, 16, 2, 0.3);
+        assert_eq!(r.drift_at(0), 0.0);
+        assert_eq!(r.drift_at(1), 0.0);
+        assert_eq!(r.drift_at(2), 0.3);
+        assert_eq!(r.drift_at(3), 0.3);
+        assert_eq!(r.drift_at(4), 0.0);
+    }
+
+    #[test]
+    fn windows_are_fresh_but_universe_paired() {
+        let w = workload("emg").unwrap();
+        let sched = DriftSchedule::abrupt(4, 32, 2, 0.5).seed(11);
+        let stream = sched.stream(&w);
+        assert_eq!(stream.len(), 4);
+        for d in &stream {
+            assert_eq!(d.len(), 32);
+            assert_eq!(d.xs[0].len(), w.shape.features);
+        }
+        // Consecutive clean windows are DIFFERENT samples (the stream
+        // moves on), not the same window re-issued.
+        assert_ne!(stream[0].xs, stream[1].xs);
+        // Clean/drifted windows at the same step index stay label-paired
+        // (the generator consumes identical draw streams).
+        let clean_sched = DriftSchedule::abrupt(4, 32, 4, 0.5).seed(11);
+        let clean = clean_sched.window(&w, 2);
+        assert_eq!(clean.ys, stream[2].ys);
+        assert_ne!(clean.xs, stream[2].xs, "drift must actually move the features");
+        // Deterministic by seed.
+        let again = DriftSchedule::abrupt(4, 32, 2, 0.5).seed(11);
+        assert_eq!(sched.window(&w, 3).xs, again.window(&w, 3).xs);
+    }
+
+    #[test]
+    fn training_set_is_fresh_draws_past_the_stream() {
+        let w = workload("emg").unwrap();
+        let sched = DriftSchedule::abrupt(3, 16, 1, 0.4).seed(4);
+        let train = sched.training_set(&w, 32);
+        assert_eq!(train.len(), 32);
+        assert_eq!(train.xs[0].len(), w.shape.features);
+        // The training draws continue the stream past the monitored
+        // prefix: they are exactly the tail of a longer clean
+        // generation, NOT a re-issue of any monitored window.
+        let total = sched.windows * sched.window_n;
+        let longer = SynthSpec::new(w.shape.features, w.shape.classes, total + 32)
+            .noise(w.noise)
+            .informative(w.informative)
+            .seed(sched.seed)
+            .generate();
+        assert_eq!(train.xs, longer.xs[total..].to_vec());
+        let clean_window0 = {
+            let clean = DriftSchedule::abrupt(3, 16, 3, 0.4).seed(4);
+            clean.window(&w, 0)
+        };
+        assert_ne!(train.xs[..16].to_vec(), clean_window0.xs);
+        // Deterministic by seed.
+        assert_eq!(train.xs, sched.training_set(&w, 32).xs);
+    }
+
+    #[test]
+    fn stream_cache_matches_per_window_generation() {
+        // The per-drift-level generation cache must not change a single
+        // sample vs. the naive per-window path — abrupt, gradual AND
+        // recurring.
+        let w = workload("emg").unwrap();
+        for sched in [
+            DriftSchedule::abrupt(6, 16, 3, 0.4).seed(3),
+            DriftSchedule::gradual(6, 16, 1, 4, 0.4).seed(3),
+            DriftSchedule::recurring(6, 16, 2, 0.4).seed(3),
+        ] {
+            let stream = sched.stream(&w);
+            for (step, win) in stream.iter().enumerate() {
+                let direct = sched.window(&w, step);
+                assert_eq!(win.xs, direct.xs, "step {step}");
+                assert_eq!(win.ys, direct.ys, "step {step}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "past schedule")]
+    fn window_past_schedule_panics() {
+        let w = workload("emg").unwrap();
+        DriftSchedule::abrupt(2, 8, 1, 0.3).window(&w, 2);
     }
 }

@@ -6,6 +6,8 @@
 //! rttm train   --workload emg [--backend pjrt|native] [--epochs N] [--n N]
 //! rttm infer   --workload emg [--engine base|single|multi] [--n N]
 //! rttm serve   --workload emg [--engine ...] [--requests N] [--replicas N]
+//! rttm serve   --workload emg --autotune [--schedule abrupt|gradual|recurring]
+//!              [--budget LUTS,BRAMS,WATTS] [--windows N] [--drift F]
 //! rttm retune  --workload emg [--drift 0.35] [--threshold 0.8]
 //! rttm report  --workload emg          # resources + latency + energy card
 //! rttm list                            # workloads & artifact status
@@ -61,6 +63,8 @@ fn usage() {
          \x20 train   --workload W [--backend pjrt|native] [--epochs N] [--n N]\n\
          \x20 infer   --workload W [--engine base|single|multi] [--n N]\n\
          \x20 serve   --workload W [--engine ...] [--requests N] [--replicas N]\n\
+         \x20         [--autotune [--schedule abrupt|gradual|recurring]\n\
+         \x20          [--budget LUTS,BRAMS,WATTS] [--windows N] [--window-n N] [--drift F]]\n\
          \x20 retune  --workload W [--drift F] [--threshold F]\n\
          \x20 report  --workload W\n\
          \x20 save    --workload W --out model.rttm\n\
@@ -79,14 +83,28 @@ impl Opts {
         let mut i = 0;
         while i < args.len() {
             if let Some(key) = args[i].strip_prefix("--") {
-                let val = args.get(i + 1).cloned().unwrap_or_default();
+                // A following "--other" means THIS key is a bare flag
+                // (e.g. `--autotune`), not a key eating the next token.
+                let val = match args.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        i += 2;
+                        v.clone()
+                    }
+                    _ => {
+                        i += 1;
+                        String::new()
+                    }
+                };
                 map.insert(key.to_string(), val);
-                i += 2;
             } else {
                 i += 1;
             }
         }
         Opts(map)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.0.contains_key(key)
     }
 
     fn get(&self, key: &str, default: &str) -> String {
@@ -119,7 +137,8 @@ fn fitted_engine_for(name: &str, model: &rttm::TMModel) -> anyhow::Result<Engine
         .max(8192);
     let feats = model.shape.features.next_power_of_two().max(2048);
     Ok(match name {
-        "base" => Engine::custom(AccelConfig::base().with_depths(need, feats)),
+        // Shared depth-fitting policy: model_cost::resources.
+        "base" => Engine::custom(rttm::model_cost::resources::provisioned_config(model, 1)),
         "single" => Engine::custom(AccelConfig::single_core().with_depths(need.max(28672), feats.max(8192))),
         "multi" => {
             let per_class: Vec<usize> = model
@@ -236,6 +255,9 @@ fn cmd_infer(opts: &Opts) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(opts: &Opts) -> anyhow::Result<()> {
+    if opts.has("autotune") {
+        return cmd_serve_autotune(opts);
+    }
     let w = workload(&opts.get("workload", "emg"))?;
     let requests = opts.get_usize("requests", 100);
     let replicas = opts.get_usize("replicas", 1);
@@ -288,6 +310,119 @@ fn cmd_serve(opts: &Opts) -> anyhow::Result<()> {
         wall.as_secs_f64() * 1e3,
         stats.batches as f64 / wall.as_secs_f64(),
     );
+    Ok(())
+}
+
+/// `rttm serve --autotune`: the Fig 8 deployment at serving scale — a
+/// replica pool fed a drifting window stream while the live autotuner
+/// monitors, shadow-retrains under a resource budget, and hot-swaps.
+fn cmd_serve_autotune(opts: &Opts) -> anyhow::Result<()> {
+    use rttm::coordinator::autotune::{AutotuneConfig, AutotuneEvent, Autotuner};
+    use rttm::datasets::workloads::DriftSchedule;
+    use rttm::model_cost::resources::ResourceBudget;
+
+    let w = workload(&opts.get("workload", "emg"))?;
+    // Flags from plain `serve` that do not apply here must error, not
+    // be silently dropped.
+    if opts.has("engine") || opts.has("requests") {
+        anyhow::bail!(
+            "--autotune serves a drift-schedule stream on fitted base-config replicas; \
+             --engine/--requests do not apply (use --replicas/--windows/--window-n/--drift)"
+        );
+    }
+    let replicas = opts.get_usize("replicas", 2).max(1);
+    let windows = opts.get_usize("windows", 8);
+    let window_n = opts.get_usize("window-n", 256);
+    let drift = opts.get_f64("drift", 0.35);
+    let threshold = opts.get_f64("threshold", 0.85);
+
+    // --budget "<luts>,<brams>,<watts>" or per-axis flags; unset axes
+    // stay unconstrained.
+    let mut budget = ResourceBudget::unlimited();
+    let packed = opts.get("budget", "");
+    if !packed.is_empty() {
+        let parts: Vec<&str> = packed.split(',').collect();
+        anyhow::ensure!(parts.len() == 3, "--budget expects <luts>,<brams>,<watts>");
+        budget = budget
+            .with_luts(parts[0].trim().parse()?)
+            .with_brams(parts[1].trim().parse()?)
+            .with_watts(parts[2].trim().parse()?);
+    }
+    // Per-axis flags parse STRICTLY: a typo or bare flag must error,
+    // never silently install an unlimited frontier.
+    if opts.has("budget-luts") {
+        budget = budget.with_luts(opts.get("budget-luts", "").parse()?);
+    }
+    if opts.has("budget-brams") {
+        budget = budget.with_brams(opts.get("budget-brams", "").parse()?);
+    }
+    if opts.has("budget-watts") {
+        budget = budget.with_watts(opts.get("budget-watts", "").parse()?);
+    }
+
+    let sched = match opts.get("schedule", "abrupt").as_str() {
+        "abrupt" => DriftSchedule::abrupt(windows, window_n, windows / 2, drift),
+        "gradual" => DriftSchedule::gradual(windows, window_n, windows / 4, 3 * windows / 4, drift),
+        "recurring" => DriftSchedule::recurring(windows, window_n, (windows / 4).max(1), drift),
+        other => anyhow::bail!("unknown schedule {other} (abrupt|gradual|recurring)"),
+    };
+
+    let node = TrainingNode::native(w.shape.clone());
+    // Train on fresh draws PAST the monitored stream (same prototype
+    // universe): the windows below measure generalization, not
+    // memorized training samples.
+    let model = node.retrain(&sched.training_set(&w, 1024))?;
+    // 2x instruction-memory headroom over the first model: retrained
+    // candidates may carry more includes, and the whole point is
+    // swapping them in without resynthesis.
+    let spec = rttm::coordinator::EngineSpec::custom(
+        rttm::model_cost::resources::provisioned_config(&model, 2),
+    );
+    let (handle, mut join) = rttm::coordinator::server::spawn_pool(spec, replicas);
+
+    let mut cfg = AutotuneConfig::new(budget);
+    cfg.accuracy_floor = threshold;
+    let mut tuner = Autotuner::new(handle.clone(), w.shape.clone(), cfg);
+    tuner.install(model)?;
+
+    println!(
+        "autotuned serving: workload={} replicas={replicas} schedule={:?} threshold={threshold}",
+        w.name, sched.kind
+    );
+    for (step, win) in sched.stream(&w).iter().enumerate() {
+        let stats = tuner.observe_window(&win.xs, &win.ys)?;
+        println!(
+            "window {step:>3}  drift={:.2}  acc={:.3}  margin={:>7.2}  version={}  [{}]",
+            sched.drift_at(step),
+            stats.accuracy.unwrap_or(f64::NAN),
+            stats.mean_margin,
+            stats.model_version,
+            tuner.phase_name(),
+        );
+        if tuner.is_searching() {
+            tuner.finish_pending_search()?;
+        }
+    }
+    for e in &tuner.report.events {
+        match e {
+            AutotuneEvent::Swapped { window, version, instructions, luts, brams, watts, .. } => {
+                println!(
+                    "SWAPPED at window {window}: v{version}, {instructions} instructions, \
+                     {luts} LUTs / {brams} BRAMs / {watts:.3} W (within budget, no resynthesis)"
+                )
+            }
+            other => println!("{other:?}"),
+        }
+    }
+    let stats = handle.pool_stats();
+    println!(
+        "served {} inferences across {} replicas, {} reprograms, 0 downtime",
+        stats.total.inferences,
+        stats.replicas.len(),
+        stats.version
+    );
+    handle.shutdown();
+    join.join();
     Ok(())
 }
 

@@ -10,4 +10,7 @@ pub mod energy;
 pub mod resources;
 
 pub use energy::{EnergyModel, PowerBudget};
-pub use resources::{estimate, estimate_multicore, ResourceEstimate};
+pub use resources::{
+    estimate, estimate_multicore, fitted_config, provisioned_config, ResourceBudget,
+    ResourceEstimate,
+};

@@ -140,6 +140,76 @@ pub fn min_depths(model: &crate::tm::model::TMModel) -> (usize, usize) {
     (crate::isa::instruction_count(model), model.shape.features)
 }
 
+/// Base-build configuration with memory depths fitted to `model` (the
+/// Fig 6 deploy-time customization): power-of-two depths just large
+/// enough for the compressed stream and one feature batch.  This is the
+/// deployment the autotuner costs a candidate model at when checking it
+/// against a [`ResourceBudget`].
+pub fn fitted_config(model: &crate::tm::model::TMModel) -> AccelConfig {
+    let (di, df) = min_depths(model);
+    AccelConfig::base().with_depths(
+        di.next_power_of_two().max(1024),
+        df.next_power_of_two().max(512),
+    )
+}
+
+/// Base-build configuration provisioned for *runtime retuning*:
+/// power-of-two depths covering `model` with the stock base floors
+/// (8192 instruction entries / 2048 feature words) and an
+/// instruction-side `headroom` multiplier (>= 1), so retrained
+/// candidates carrying more includes than the first model still swap
+/// in without resynthesis — the paper's "BRAMs … over-provisioned for
+/// more tunability later".  This is the one place the CLI, benches and
+/// examples size an autotuned pool's memories.
+pub fn provisioned_config(model: &crate::tm::model::TMModel, headroom: usize) -> AccelConfig {
+    let (di, df) = min_depths(model);
+    AccelConfig::base().with_depths(
+        headroom.max(1) * di.next_power_of_two().max(8192),
+        df.next_power_of_two().max(2048),
+    )
+}
+
+/// A resource frontier for runtime model selection: the autotuner only
+/// installs models whose fitted deployment ([`fitted_config`] →
+/// [`estimate`] + [`crate::model_cost::energy::EnergyModel`]) stays
+/// inside it.  `None` leaves an axis unconstrained.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ResourceBudget {
+    pub max_luts: Option<u32>,
+    pub max_brams: Option<u32>,
+    /// Average-power ceiling in watts.
+    pub max_watts: Option<f64>,
+}
+
+impl ResourceBudget {
+    /// No constraints on any axis.
+    pub fn unlimited() -> Self {
+        Self::default()
+    }
+
+    pub fn with_luts(mut self, v: u32) -> Self {
+        self.max_luts = Some(v);
+        self
+    }
+
+    pub fn with_brams(mut self, v: u32) -> Self {
+        self.max_brams = Some(v);
+        self
+    }
+
+    pub fn with_watts(mut self, v: f64) -> Self {
+        self.max_watts = Some(v);
+        self
+    }
+
+    /// True when the estimated deployment fits every configured axis.
+    pub fn admits(&self, est: &ResourceEstimate, watts: f64) -> bool {
+        self.max_luts.map(|m| est.luts <= m).unwrap_or(true)
+            && self.max_brams.map(|m| est.brams <= m).unwrap_or(true)
+            && self.max_watts.map(|m| watts <= m).unwrap_or(true)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,6 +261,49 @@ mod tests {
             assert!(w[1].2.luts >= w[0].2.luts);
             assert!(w[1].2.freq_mhz <= w[0].2.freq_mhz);
         }
+    }
+
+    #[test]
+    fn budget_admits_and_rejects_per_axis() {
+        let est = estimate(&AccelConfig::base()); // 1340 LUT / 14 BRAM
+        let watts = 0.351;
+        assert!(ResourceBudget::unlimited().admits(&est, watts));
+        assert!(ResourceBudget::unlimited().with_luts(1340).admits(&est, watts));
+        assert!(!ResourceBudget::unlimited().with_luts(1339).admits(&est, watts));
+        assert!(!ResourceBudget::unlimited().with_brams(13).admits(&est, watts));
+        assert!(!ResourceBudget::unlimited().with_watts(0.35).admits(&est, watts));
+        assert!(ResourceBudget::unlimited()
+            .with_luts(2000)
+            .with_brams(20)
+            .with_watts(0.4)
+            .admits(&est, watts));
+    }
+
+    #[test]
+    fn fitted_config_covers_model_and_stays_small() {
+        let mut m = crate::tm::model::TMModel::empty(crate::TMShape::synthetic(8, 2, 4));
+        m.set_include(0, 0, 0, true);
+        m.set_include(1, 1, 3, true);
+        let cfg = fitted_config(&m);
+        assert_eq!(cfg.name, "base");
+        assert_eq!((cfg.instr_depth, cfg.feature_depth), (1024, 512));
+        // A small fitted deployment costs fewer LUTs than the stock base.
+        assert!(estimate(&cfg).luts < estimate(&AccelConfig::base()).luts);
+    }
+
+    #[test]
+    fn provisioned_config_applies_floors_and_headroom() {
+        let mut m = crate::tm::model::TMModel::empty(crate::TMShape::synthetic(8, 2, 4));
+        m.set_include(0, 0, 0, true);
+        let p1 = provisioned_config(&m, 1);
+        // Stock base floors for a tiny model.
+        assert_eq!((p1.instr_depth, p1.feature_depth), (8192, 2048));
+        let p2 = provisioned_config(&m, 2);
+        assert_eq!(p2.instr_depth, 2 * 8192);
+        assert_eq!(p2.feature_depth, 2048); // headroom is instruction-side only
+        // headroom 0 is clamped to 1.
+        assert_eq!(provisioned_config(&m, 0).instr_depth, 8192);
+        assert_eq!(p1.name, "base");
     }
 
     #[test]

@@ -17,12 +17,14 @@
 //! # Feature gating
 //!
 //! The `xla` crate is not part of the offline vendor set, so the real
-//! executor is gated behind the off-by-default `pjrt` cargo feature
-//! (add the `xla` dependency to Cargo.toml when enabling it).  Without
-//! the feature this module compiles an API-identical stub whose entry
-//! point ([`Runtime::cpu`]) returns a descriptive error — every caller
-//! already handles artifact absence, and the native trainer/simulator
-//! paths are unaffected.
+//! executor needs BOTH the `pjrt` feature (the API surface) and the
+//! `xla` feature (the backend; add the `xla` dependency to Cargo.toml
+//! when enabling it).  Any other combination compiles an API-identical
+//! stub whose entry point ([`Runtime::cpu`]) returns a descriptive
+//! error — every caller already handles artifact absence, and the
+//! native trainer/simulator paths are unaffected.  This split is what
+//! lets CI run the test matrix with `--features pjrt` on a machine
+//! that cannot build `xla`.
 
 use crate::config::TMShape;
 use crate::tm::model::TMModel;
@@ -45,7 +47,7 @@ pub fn init_ta_states(shape: &TMShape, rng: &mut crate::datasets::synth::XorShif
         .collect()
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla"))]
 mod imp {
     use super::{InferOut, Result, TMModel, TMShape};
     use crate::config::Manifest;
@@ -181,14 +183,14 @@ mod imp {
     }
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "xla")))]
 mod imp {
     use super::{InferOut, Result, TMModel, TMShape};
     use crate::config::Manifest;
 
-    const MSG: &str = "built without the `pjrt` feature: the PJRT executor needs the `xla` \
-                       crate (not in the offline vendor set); use the native backend, or add \
-                       the dependency and rebuild with `--features pjrt`";
+    const MSG: &str = "PJRT executor not compiled in: it needs the `pjrt` AND `xla` features \
+                       (the `xla` crate is not in the offline vendor set); use the native \
+                       backend, or add the dependency and rebuild with `--features pjrt,xla`";
 
     /// Stub PJRT client: constructing it reports how to enable the real
     /// one.  Keeps every caller compiling (and failing gracefully at

@@ -32,6 +32,11 @@ pub enum FileError {
     Io(#[from] std::io::Error),
     #[error("not an RTTM file")]
     BadMagic,
+    /// The file ends before a declared field does.  Distinct from
+    /// [`FileError::BadMagic`]: an adversarial file can be CRC-valid
+    /// yet *claim* more payload than it carries.
+    #[error("truncated file: {needed} more bytes required")]
+    Truncated { needed: usize },
     #[error("unsupported version {0}")]
     BadVersion(u16),
     #[error("checksum mismatch (corrupted file)")]
@@ -90,7 +95,7 @@ struct Cursor<'a> {
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8], FileError> {
         if self.pos + n > self.data.len() {
-            return Err(FileError::BadMagic);
+            return Err(FileError::Truncated { needed: self.pos + n - self.data.len() });
         }
         let s = &self.data[self.pos..self.pos + n];
         self.pos += n;
@@ -110,8 +115,9 @@ impl<'a> Cursor<'a> {
 /// Parse bytes back into (shape, instruction stream), verifying CRC and
 /// stream well-formedness.
 pub fn from_bytes(data: &[u8]) -> Result<(TMShape, Vec<Instr>), FileError> {
+    // Minimum framing: magic + at least the CRC trailer.
     if data.len() < 8 {
-        return Err(FileError::BadMagic);
+        return Err(FileError::Truncated { needed: 8 - data.len() });
     }
     let (body, crc_bytes) = data.split_at(data.len() - 4);
     let stored = u32::from_le_bytes(crc_bytes.try_into().unwrap());
@@ -134,6 +140,15 @@ pub fn from_bytes(data: &[u8]) -> Result<(TMShape, Vec<Instr>), FileError> {
     let t = c.i32()?;
     let s = c.u32()? as f64 / 1000.0;
     let count = c.u32()? as usize;
+    // Validate the declared count against the bytes actually remaining
+    // BEFORE sizing any allocation: a CRC-valid adversarial file
+    // claiming `count = u32::MAX` would otherwise pre-allocate ~8 GB.
+    let remaining = c.data.len() - c.pos;
+    if count.saturating_mul(2) > remaining {
+        return Err(FileError::Truncated {
+            needed: count.saturating_mul(2) - remaining,
+        });
+    }
     let mut instrs = Vec::with_capacity(count);
     for _ in 0..count {
         instrs.push(Instr(c.u16()?));
@@ -206,6 +221,62 @@ mod tests {
         let bytes = to_bytes(&model);
         assert!(from_bytes(&bytes[..bytes.len() / 2]).is_err());
         assert!(from_bytes(&[]).is_err());
+    }
+
+    /// Recompute and overwrite the CRC trailer so a tampered body is
+    /// CRC-valid again (what an adversary controlling the file does).
+    fn reseal(bytes: &mut [u8]) {
+        let body = bytes.len() - 4;
+        let crc = crc32(&bytes[..body]).to_le_bytes();
+        bytes[body..].copy_from_slice(&crc);
+    }
+
+    #[test]
+    fn adversarial_count_rejected_before_allocation() {
+        let model = trained();
+        let mut bytes = to_bytes(&model);
+        // Offset of the `count` field: magic(4) + version(2) +
+        // name_len(2) + name + 3 x u32 + i32 + u32.
+        let off = 4 + 2 + 2 + model.shape.name.len() + 12 + 4 + 4;
+        bytes[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        reseal(&mut bytes);
+        // Must fail as Truncated (count vs. remaining bytes), and fast —
+        // no multi-GB Vec::with_capacity.
+        assert!(matches!(
+            from_bytes(&bytes),
+            Err(FileError::Truncated { .. })
+        ));
+
+        // An off-by-one inflation is caught the same way.
+        let mut bytes = to_bytes(&model);
+        let count = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        bytes[off..off + 4].copy_from_slice(&(count + 1).to_le_bytes());
+        reseal(&mut bytes);
+        assert!(matches!(
+            from_bytes(&bytes),
+            Err(FileError::Truncated { needed: 2 })
+        ));
+    }
+
+    #[test]
+    fn truncation_mid_header_is_truncated_not_bad_magic() {
+        let model = trained();
+        let bytes = to_bytes(&model);
+        // Cut inside the name field and re-seal the CRC: the only
+        // remaining signal is the cursor running out of bytes, which
+        // used to masquerade as BadMagic.
+        let mut cut = bytes[..10].to_vec();
+        cut.extend_from_slice(&crc32(&cut).to_le_bytes());
+        assert!(matches!(from_bytes(&cut), Err(FileError::Truncated { .. })));
+        // Sub-minimum files are truncated too, not BadMagic.
+        assert!(matches!(
+            from_bytes(&[]),
+            Err(FileError::Truncated { needed: 8 })
+        ));
+        assert!(matches!(
+            from_bytes(b"RTTM"),
+            Err(FileError::Truncated { needed: 4 })
+        ));
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Live autotune acceptance: a drift-schedule workload served through a
+//! multi-replica pool with the autotuner on.
+//!
+//! Asserts the PR 3 acceptance criteria end to end:
+//! * windowed accuracy recovers to within 5 points of pre-drift after
+//!   the swap;
+//! * a concurrent client hammering the pool sees ZERO request errors,
+//!   including during the reprogram fence;
+//! * `model_version` is strictly monotone across the deployment;
+//! * the swapped shape's fitted `ResourceEstimate` is within the
+//!   configured budget.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use rttm::coordinator::autotune::{AutotuneConfig, AutotuneEvent, Autotuner};
+use rttm::coordinator::server::spawn_pool;
+use rttm::coordinator::EngineSpec;
+use rttm::datasets::workloads::{DriftSchedule, Workload};
+use rttm::model_cost::energy::EnergyModel;
+use rttm::model_cost::resources::{estimate, fitted_config, ResourceBudget};
+use rttm::TMShape;
+
+fn test_workload() -> Workload {
+    Workload {
+        name: "drifty",
+        shape: TMShape::synthetic(16, 3, 10),
+        noise: 0.05,
+        informative: 1.0,
+        paper_accuracy: None,
+        recalibration: "integration test",
+    }
+}
+
+#[test]
+fn autotuner_recovers_from_abrupt_drift_on_a_live_pool() {
+    let w = test_workload();
+    // 10 windows x 256 labeled samples; drift 0.4 arrives at window 4.
+    let sched = DriftSchedule::abrupt(10, 256, 4, 0.4).seed(7);
+
+    // Initial model trained on the clean universe — on fresh draws
+    // PAST the monitored stream, so windowed accuracy measures
+    // generalization, never memorized training samples.
+    let clean = sched.training_set(&w, 512);
+    let model0 = rttm::trainer::train_model(&w.shape, &clean, 4, 2);
+
+    // >= 2 replicas behind one queue (acceptance: 3).
+    let (handle, mut join) = spawn_pool(EngineSpec::base(), 3);
+
+    let budget = ResourceBudget::unlimited()
+        .with_luts(1340)
+        .with_brams(14)
+        .with_watts(0.4);
+    let mut cfg = AutotuneConfig::new(budget.clone());
+    cfg.accuracy_floor = 0.85;
+    cfg.patience = 2;
+    cfg.validation_windows = 1;
+    cfg.min_gain = 0.05;
+    cfg.epochs = 3;
+    cfg.seed = 17;
+    cfg.background = true; // the live mode: search on a background thread
+    cfg.retrain_corpus = 512; // exactly the two most recent windows
+
+    let mut tuner = Autotuner::new(handle.clone(), w.shape.clone(), cfg);
+    tuner.install(model0).unwrap();
+
+    // Concurrent client traffic for the WHOLE deployment, including
+    // through the reprogram fence: every request must succeed.
+    let stop = Arc::new(AtomicBool::new(false));
+    let served = Arc::new(AtomicU64::new(0));
+    let failed = Arc::new(AtomicU64::new(0));
+    let client = {
+        let h = handle.clone();
+        let stop = Arc::clone(&stop);
+        let served = Arc::clone(&served);
+        let failed = Arc::clone(&failed);
+        let rows: Vec<Vec<u8>> = clean.xs[..32].to_vec();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                match h.infer(rows.clone()) {
+                    Ok(preds) => {
+                        assert_eq!(preds.len(), 32);
+                        served.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                std::thread::yield_now();
+            }
+        })
+    };
+
+    // Drive the monitored deployment.
+    for win in &sched.stream(&w) {
+        tuner.observe_window(&win.xs, &win.ys).unwrap();
+        // The shadow search runs on its own thread while the client
+        // keeps hammering the pool; block the POLICY thread (only) so
+        // the test timeline is deterministic.
+        if tuner.is_searching() {
+            let served_before = served.load(Ordering::Relaxed);
+            tuner.finish_pending_search().unwrap();
+            // Traffic flowed during the retrain + swap.
+            assert!(
+                served.load(Ordering::Relaxed) >= served_before,
+                "client stalled during retune"
+            );
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    client.join().unwrap();
+
+    // --- no request errors, traffic actually flowed -------------------
+    assert_eq!(failed.load(Ordering::Relaxed), 0, "request errors during deployment");
+    assert!(served.load(Ordering::Relaxed) > 0);
+
+    let report = &tuner.report;
+    assert_eq!(report.windows.len(), sched.windows);
+
+    // --- the story: drift detected, one swap, accepted, no rollback ---
+    assert!(report.events.iter().any(|e| matches!(e, AutotuneEvent::DriftDetected { .. })));
+    let swapped: Vec<_> = report
+        .events
+        .iter()
+        .filter(|e| matches!(e, AutotuneEvent::Swapped { .. }))
+        .collect();
+    assert_eq!(swapped.len(), 1, "exactly one retune: {:?}", report.events);
+    assert!(report.events.iter().any(|e| matches!(e, AutotuneEvent::Accepted { .. })));
+    assert!(!report.events.iter().any(|e| matches!(e, AutotuneEvent::RolledBack { .. })));
+
+    // --- accuracy recovers to within 5 points of pre-drift ------------
+    let acc = |i: usize| report.windows[i].accuracy.unwrap();
+    let pre_drift = (0..4).map(acc).sum::<f64>() / 4.0;
+    assert!(pre_drift > 0.85, "pre-drift accuracy {pre_drift}");
+    let drifted = acc(4).min(acc(5));
+    assert!(drifted < 0.85, "drift must actually degrade accuracy, got {drifted}");
+    let recovered = (8..10).map(acc).sum::<f64>() / 2.0;
+    assert!(
+        recovered >= pre_drift - 0.05,
+        "windowed accuracy did not recover: pre {pre_drift:.3} vs post {recovered:.3}"
+    );
+
+    // --- model_version strictly monotone -------------------------------
+    for pair in report.windows.windows(2) {
+        assert!(
+            pair[1].model_version >= pair[0].model_version,
+            "version went backwards"
+        );
+    }
+    let mut distinct: Vec<u64> = report.windows.iter().map(|s| s.model_version).collect();
+    distinct.dedup();
+    for pair in distinct.windows(2) {
+        assert!(pair[0] < pair[1], "versions not strictly monotone: {distinct:?}");
+    }
+    // install(1) + exactly one swap(2).
+    assert_eq!(handle.pool_stats().version, 2);
+    let AutotuneEvent::Swapped { version, luts, brams, watts, .. } = swapped[0] else {
+        unreachable!()
+    };
+    assert_eq!(*version, 2);
+
+    // --- swapped shape's ResourceEstimate is within the budget ---------
+    assert!(*luts <= 1340 && *brams <= 14 && *watts <= 0.4);
+    let current = tuner.current_model().expect("a model is deployed");
+    let cfg = fitted_config(current);
+    let est = estimate(&cfg);
+    let wattage = EnergyModel::for_config(&cfg).watts;
+    assert!(
+        budget.admits(&est, wattage),
+        "deployed model exceeds budget: {est:?} @ {wattage} W"
+    );
+
+    handle.shutdown();
+    join.join();
+}
+
+#[test]
+fn recurring_drift_retunes_each_phase_change_without_storms() {
+    // Recurring drift: the hysteresis must produce bounded, phase-aligned
+    // retunes rather than one per noisy window.
+    let w = test_workload();
+    let sched = DriftSchedule::recurring(12, 192, 3, 0.4).seed(9);
+    let clean = sched.training_set(&w, 512);
+    let model0 = rttm::trainer::train_model(&w.shape, &clean, 4, 2);
+
+    let (handle, mut join) = spawn_pool(EngineSpec::base(), 2);
+    let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited());
+    cfg.accuracy_floor = 0.85;
+    cfg.patience = 2;
+    cfg.validation_windows = 1;
+    cfg.min_gain = 0.05;
+    cfg.background = false; // inline: deterministic retune timing
+    cfg.retrain_corpus = 384;
+    cfg.epochs = 3;
+    let mut tuner = Autotuner::new(handle.clone(), w.shape.clone(), cfg);
+    tuner.install(model0).unwrap();
+
+    for win in &sched.stream(&w) {
+        tuner.observe_window(&win.xs, &win.ys).unwrap();
+    }
+
+    let swaps = tuner
+        .report
+        .events
+        .iter()
+        .filter(|e| matches!(e, AutotuneEvent::Swapped { .. }))
+        .count();
+    // 12 windows in 4 phases of 3: at most one retune per phase change
+    // (3 changes), at least one retune overall — never a storm.
+    assert!(swaps >= 1, "recurring drift never retuned: {:?}", tuner.report.events);
+    assert!(swaps <= 3, "retune storm: {swaps} swaps in 12 windows");
+    // Versions strictly monotone here too.
+    let mut versions: Vec<u64> = tuner.report.windows.iter().map(|s| s.model_version).collect();
+    versions.dedup();
+    for pair in versions.windows(2) {
+        assert!(pair[0] < pair[1]);
+    }
+
+    handle.shutdown();
+    join.join();
+}

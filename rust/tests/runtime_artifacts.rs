@@ -3,9 +3,11 @@
 //! inside the JAX graph (L2) loaded and run from rust (L3) must agree
 //! with the pure-rust semantics bit-for-bit.
 //!
-//! Requires the `pjrt` feature (the `xla` crate is not in the offline
-//! vendor set) and the AOT artifacts from `make artifacts`.
-#![cfg(feature = "pjrt")]
+//! Requires the `pjrt` + `xla` features (the `xla` crate is not in the
+//! offline vendor set — `pjrt` alone compiles the stub runtime, which
+//! cannot execute artifacts) and the AOT artifacts from
+//! `make artifacts`.
+#![cfg(all(feature = "pjrt", feature = "xla"))]
 
 use rttm::config::Manifest;
 use rttm::datasets::synth::SynthSpec;

@@ -1,0 +1,76 @@
+//! Golden-fixture pin of the `.rttm` v1 wire format.
+//!
+//! `tests/fixtures/golden_v1.rttm` is a committed byte-for-byte
+//! artifact of `tm::serialize::to_bytes` for a small hand-built model.
+//! Any accidental change to the v1 layout — field order, widths,
+//! endianness, the instruction encoding walked into the stream, or the
+//! CRC trailer — fails this test loudly.  (The CRC known-answer test in
+//! `tm::serialize` pins the checksum algorithm; this pins the whole
+//! file.)  A DELIBERATE format change must bump the format version and
+//! add a new fixture, never rewrite this one.
+
+use rttm::isa;
+use rttm::tm::model::TMModel;
+use rttm::tm::serialize::{from_bytes, to_bytes};
+use rttm::TMShape;
+
+const GOLDEN: &[u8] = include_bytes!("fixtures/golden_v1.rttm");
+
+/// The fixture's model: shape synthetic(4, 3, 4) — name
+/// "synth_4f_3m_4c", T = 1, s = 3.0 — with four includes and one empty
+/// class (so the stream also pins the tautology-killer encoding).
+fn golden_model() -> TMModel {
+    let mut m = TMModel::empty(TMShape::synthetic(4, 3, 4));
+    m.set_include(0, 0, 0, true);
+    m.set_include(0, 0, 5, true);
+    m.set_include(0, 1, 2, true);
+    m.set_include(1, 3, 7, true);
+    // class 2 stays empty.
+    m
+}
+
+#[test]
+fn to_bytes_reproduces_the_golden_fixture() {
+    let bytes = to_bytes(&golden_model());
+    assert_eq!(
+        bytes,
+        GOLDEN.to_vec(),
+        "the v1 .rttm layout changed — if deliberate, bump the format \
+         version and add golden_v2 instead of rewriting this fixture"
+    );
+}
+
+#[test]
+fn golden_fixture_parses_back_to_the_model() {
+    let (shape, instrs) = from_bytes(GOLDEN).expect("golden fixture must stay loadable");
+    assert_eq!(shape.name, "synth_4f_3m_4c");
+    assert_eq!(shape.features, 4);
+    assert_eq!(shape.classes, 3);
+    assert_eq!(shape.clauses, 4);
+    assert_eq!(shape.t, 1);
+    assert!((shape.s - 3.0).abs() < 1e-9);
+    assert_eq!(instrs, isa::encode(&golden_model()));
+}
+
+#[test]
+fn golden_instruction_words_are_pinned() {
+    // The exact 16-bit words (P/CC/E/OFFSET/L packing of Fig 3.4),
+    // including the empty class 2's tautology-killer pair.
+    let (_, instrs) = from_bytes(GOLDEN).unwrap();
+    let words: Vec<u16> = instrs.iter().map(|i| i.0).collect();
+    assert_eq!(words, vec![0x0000, 0x000B, 0xC004, 0xA00F, 0x4000, 0x4003]);
+}
+
+#[test]
+fn golden_fixture_framing_is_pinned() {
+    // Header anatomy, byte-for-byte.
+    assert_eq!(GOLDEN.len(), 62);
+    assert_eq!(&GOLDEN[..4], b"RTTM");
+    assert_eq!(&GOLDEN[4..6], &1u16.to_le_bytes()); // version
+    assert_eq!(&GOLDEN[6..8], &14u16.to_le_bytes()); // name length
+    assert_eq!(&GOLDEN[8..22], b"synth_4f_3m_4c");
+    // CRC trailer over everything above it.
+    let stored = u32::from_le_bytes(GOLDEN[58..].try_into().unwrap());
+    assert_eq!(stored, rttm::tm::serialize::crc32(&GOLDEN[..58]));
+    assert_eq!(stored, 0xD57C_4F69);
+}
