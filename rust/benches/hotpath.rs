@@ -349,6 +349,10 @@ fn main() {
         cfg.accuracy_floor = 0.85;
         cfg.epochs = if smoke { 1 } else { 2 };
         cfg.retrain_corpus = 2 * window_n;
+        // Direct swap here: this section times detect->swap; the canary
+        // lifecycle is measured on its own in the §canary section below
+        // (with a candidate that promotes deterministically).
+        cfg.canary_fraction = 0.0;
         let mut tuner = Autotuner::new(h.clone(), w.shape.clone(), cfg);
         tuner.install(tune_model).unwrap();
 
@@ -409,6 +413,87 @@ fn main() {
                 .filter(|e| matches!(e, AutotuneEvent::Swapped { .. }))
                 .count() as f64,
         ));
+        h.shutdown();
+        join.join();
+    }
+
+    // 2e. Canary swap lifecycle: stage a candidate on ONE replica
+    //     (program_canary), mirror paired windows until the sequential
+    //     verdict promotes, broadcast (promote_canary) — measuring the
+    //     stage->promote wall latency and the client throughput WHILE
+    //     the evaluation runs on the pool-minus-canary.  The candidate
+    //     is the serving model itself: paired accuracies tie exactly,
+    //     so the verdict promotes at min_windows deterministically and
+    //     the numbers measure the MECHANISM, not model quality.
+    {
+        use rttm::coordinator::canary::{CanaryConfig, CanaryController, CanaryVerdict};
+        use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+        use std::sync::Arc;
+
+        println!("\n--- canary swap (stage -> paired eval -> promote, serving throughout) ---");
+        let (h, mut join) = spawn_pool(spec.clone(), 4);
+        h.program(model.clone()).unwrap();
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicU64::new(0));
+        let client = {
+            let h = h.clone();
+            let stop = Arc::clone(&stop);
+            let served = Arc::clone(&served);
+            let rows: Vec<Vec<u8>> = data.xs[..32.min(data.len())].to_vec();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    h.infer(rows.clone()).unwrap();
+                    served.fetch_add(32, Ordering::Relaxed);
+                }
+            })
+        };
+
+        let wn = 64.min(data.len());
+        let win_xs = data.xs[..wn].to_vec();
+        let win_ys = &data.ys[..wn];
+        let t0 = std::time::Instant::now();
+        let before = served.load(Ordering::Relaxed);
+        h.program_canary(model.clone()).unwrap();
+        let mut ctl = CanaryController::new(
+            h.clone(),
+            CanaryConfig {
+                mirror_fraction: 0.5,
+                min_windows: 2,
+                max_windows: 4,
+                baseline_t: w.shape.t,
+                candidate_t: w.shape.t,
+                ..Default::default()
+            },
+        );
+        let mut eval_windows = 0usize;
+        let verdict = loop {
+            let (_paired, v) = ctl.observe(&win_xs, Some(win_ys)).unwrap();
+            eval_windows += 1;
+            if v != CanaryVerdict::Extend {
+                break v;
+            }
+        };
+        assert_eq!(verdict, CanaryVerdict::Promote, "identical candidate must promote");
+        h.promote_canary().unwrap();
+        let dt = t0.elapsed();
+        let during = served.load(Ordering::Relaxed) - before;
+        stop.store(true, Ordering::Relaxed);
+        client.join().unwrap();
+        assert!(h.canary_replica().is_none());
+
+        let promote_ms = dt.as_secs_f64() * 1e3;
+        let eval_rps = during as f64 / dt.as_secs_f64().max(1e-12);
+        println!(
+            "stage->promote:          {promote_ms:>10.1} ms ({eval_windows} paired windows, \
+             fence swaps included)"
+        );
+        println!(
+            "served during eval:      {eval_rps:>10.0} inferences/s (pool minus canary stays live)"
+        );
+        json.push(("canary_promote_latency_ms".into(), promote_ms));
+        json.push(("canary_served_during_eval_inf_per_s".into(), eval_rps));
+        json.push(("canary_eval_windows".into(), eval_windows as f64));
         h.shutdown();
         join.join();
     }

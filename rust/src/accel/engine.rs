@@ -198,6 +198,106 @@ fn take_preds(out: &mut Vec<usize>, preds: &[u8; 32], n: usize) {
     out.extend(preds[..take].iter().map(|&p| p as usize));
 }
 
+/// Per-lane confidence margin: winning class sum minus runner-up.  A
+/// drifting input distribution collapses this *before* labels arrive —
+/// the autotuner's and the canary gate's label-free signal.  With a
+/// single class the margin is the winning sum itself.
+pub fn margins_from_sums(sums: &[[i32; 32]], n: usize) -> Vec<i32> {
+    (0..n.min(32))
+        .map(|b| {
+            let (mut best, mut second) = (i32::MIN, i32::MIN);
+            for row in sums {
+                let v = row[b];
+                if v > best {
+                    second = best;
+                    best = v;
+                } else if v > second {
+                    second = v;
+                }
+            }
+            if second == i32::MIN {
+                best
+            } else {
+                best - second
+            }
+        })
+        .collect()
+}
+
+/// Bulk-classify rows on a single core, returning per-datapoint
+/// confidence margins alongside predictions — the margins-aware twin of
+/// [`classify_rows_core`].  Same amortization: one pack pass, one
+/// reused [`BatchResult`] scratch (class sums are already in it, so the
+/// margin costs only the 32-lane max/runner-up scan), preds and margins
+/// appended per batch.  The canary mirror and the autotune telemetry
+/// probe ride this so a probe window costs the same as plain traffic.
+pub fn classify_rows_margins_core(
+    core: &mut Core,
+    rows: &[Vec<u8>],
+) -> Result<(Vec<usize>, Vec<i32>, StreamStats), CoreError> {
+    if rows.is_empty() {
+        return Ok((Vec::new(), Vec::new(), StreamStats::default()));
+    }
+    validate_rows(rows, usize::MAX)?;
+    let batches = pack_stream(rows);
+    let t0 = std::time::Instant::now();
+    let mut preds = Vec::with_capacity(rows.len());
+    let mut margins = Vec::with_capacity(rows.len());
+    let mut scratch = BatchResult::default();
+    let mut cycles = 0u64;
+    for b in &batches {
+        core.run_batch_into(b, &mut scratch)?;
+        let take = (rows.len() - preds.len()).min(32);
+        take_preds(&mut preds, &scratch.preds, rows.len());
+        margins.extend(margins_from_sums(&scratch.class_sums, take));
+        cycles += scratch.cycles.total();
+    }
+    let stats = StreamStats {
+        batches: batches.len() as u64,
+        inferences: rows.len() as u64,
+        simulated_cycles: cycles,
+        wall: t0.elapsed(),
+    };
+    Ok((preds, margins, stats))
+}
+
+/// Margins-aware bulk classify on a multi-core engine: chunked like
+/// [`classify_rows_multicore`] so the per-call thread spawn amortizes
+/// within each [`MULTICORE_CHUNK_BATCHES`]-sized chunk while retained
+/// results stay bounded by the chunk.
+pub fn classify_rows_margins_multicore(
+    mc: &mut MultiCore,
+    rows: &[Vec<u8>],
+) -> Result<(Vec<usize>, Vec<i32>, StreamStats), CoreError> {
+    if rows.is_empty() {
+        return Ok((Vec::new(), Vec::new(), StreamStats::default()));
+    }
+    validate_rows(rows, usize::MAX)?;
+    let batches = pack_stream(rows);
+    let t0 = std::time::Instant::now();
+    let mut preds = Vec::with_capacity(rows.len());
+    let mut margins = Vec::with_capacity(rows.len());
+    let mut n_batches = 0u64;
+    let mut cycles = 0u64;
+    for chunk in batches.chunks(MULTICORE_CHUNK_BATCHES) {
+        let refs = as_batch_refs(chunk);
+        for r in mc.run_batches(&refs)? {
+            let take = (rows.len() - preds.len()).min(32);
+            take_preds(&mut preds, &r.preds, rows.len());
+            margins.extend(margins_from_sums(&r.class_sums, take));
+            cycles += r.batch_cycles;
+            n_batches += 1;
+        }
+    }
+    let stats = StreamStats {
+        batches: n_batches,
+        inferences: rows.len() as u64,
+        simulated_cycles: cycles,
+        wall: t0.elapsed(),
+    };
+    Ok((preds, margins, stats))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -296,6 +396,46 @@ mod tests {
         ));
         let (preds, _) = classify_rows_multicore(&mut mc, &[]).unwrap();
         assert!(preds.is_empty());
+    }
+
+    #[test]
+    fn margins_bulk_path_matches_per_batch_reference() {
+        let (model, data) = trained();
+        let mut core = Core::new(AccelConfig::base());
+        core.program_model(&model).unwrap();
+        let (preds, margins, stats) = classify_rows_margins_core(&mut core, &data.xs).unwrap();
+        assert_eq!(preds.len(), data.len());
+        assert_eq!(margins.len(), data.len());
+        assert_eq!(stats.inferences, data.len() as u64);
+        // Margins equal the dense reference's top1 - top2 gap.
+        for ((x, &p), &m) in data.xs.iter().zip(&preds).zip(&margins) {
+            let lits = reference::literals_from_features(x);
+            let mut sums = reference::class_sums_dense(&model, &lits);
+            assert_eq!(p, reference::predict_dense(&model, &lits));
+            sums.sort_unstable_by(|a, b| b.cmp(a));
+            assert_eq!(m, sums[0] - sums[1]);
+        }
+        // Multi-core path agrees byte for byte (preds AND margins).
+        let mut mc = MultiCore::five_core().with_parallel(ParallelMode::Threads);
+        mc.program_model(&model).unwrap();
+        let (p2, m2, _) = classify_rows_margins_multicore(&mut mc, &data.xs).unwrap();
+        assert_eq!(preds, p2);
+        assert_eq!(margins, m2);
+    }
+
+    #[test]
+    fn margins_bulk_path_rejects_ragged_and_accepts_empty() {
+        let (model, _) = trained();
+        let mut core = Core::new(AccelConfig::base());
+        core.program_model(&model).unwrap();
+        let ragged = vec![vec![0u8; 12], vec![0u8; 7]];
+        assert!(matches!(
+            classify_rows_margins_core(&mut core, &ragged),
+            Err(CoreError::BadBatch { .. })
+        ));
+        let (preds, margins, stats) = classify_rows_margins_core(&mut core, &[]).unwrap();
+        assert!(preds.is_empty() && margins.is_empty());
+        assert_eq!(stats.batches, 0);
     }
 
     #[test]

@@ -23,11 +23,25 @@
 //!    accurate model whose *fitted* deployment the caller-supplied
 //!    [`ResourceBudget`] admits (the paper's runtime model-size tuning
 //!    with an explicit LUT/BRAM/energy frontier).
-//! 3. **Zero-downtime swap** — the winner is hot-swapped via
-//!    [`ServiceHandle::program`] (the version fence: traffic never
-//!    observes a mixed-version pool), and if post-swap windowed
-//!    accuracy regresses against the trigger-time accuracy the previous
-//!    model is restored — versions stay strictly monotone either way.
+//! 3. **Staged swap through the canary gate** — the winner is first
+//!    programmed onto exactly ONE replica
+//!    ([`ServiceHandle::program_canary`]; live traffic routes away from
+//!    it), a fraction of each subsequent window is mirrored to the
+//!    canary and a baseline replica, and a sequential comparison over
+//!    the paired windows ([`super::canary::CanaryController`]) renders
+//!    the verdict: **promote** broadcasts the candidate to the rest of
+//!    the pool behind the version fence, **reject** reprograms the lone
+//!    canary back — a bad candidate is never served from more than one
+//!    replica.  Pools too small to spare a replica fall back to the
+//!    direct fence-gated swap.  Post-swap validation windows still
+//!    guard the promoted model: a regression restores the previous one.
+//!    Versions stay strictly monotone through every path.
+//!
+//! The whole loop runs **label-free** when it has to: unlabeled windows
+//! ([`Autotuner::observe_unlabeled`]) judge drift on confidence margins
+//! alone, the canary compares T-normalized margins, and labels that
+//! arrive late ([`Autotuner::backfill_labels`]) backfill accuracy into
+//! the [`AutotuneReport`] and the retrain corpus without re-triggering.
 
 use std::sync::{mpsc, Arc};
 
@@ -37,8 +51,9 @@ use crate::model_cost::energy::EnergyModel;
 use crate::model_cost::resources::{estimate, fitted_config, ResourceBudget};
 use crate::tm::model::TMModel;
 
+use super::canary::{CanaryConfig, CanaryController, CanaryVerdict, PairedWindow};
 use super::hyperparam::{budget_search, BudgetedSearch, SearchSpace};
-use super::server::{ServeError, ServiceHandle};
+use super::server::{ServeError, ServiceHandle, Telemetry};
 
 /// One monitored serving window, as seen through the pool.
 #[derive(Debug, Clone)]
@@ -181,6 +196,29 @@ pub struct AutotuneConfig {
     pub background: bool,
     /// Most-recent labeled samples retained as the retrain corpus.
     pub retrain_corpus: usize,
+    /// Fraction of each observed window mirrored to the canary while a
+    /// candidate is under evaluation.  `0.0` disables the canary gate
+    /// entirely (candidates swap directly — the pre-canary behavior);
+    /// pools with fewer than 2 live replicas fall back to the direct
+    /// swap regardless.
+    pub canary_fraction: f64,
+    /// Paired canary windows before a unanimous early verdict.
+    pub canary_min_windows: usize,
+    /// Forced majority verdict at this many paired windows.
+    pub canary_max_windows: usize,
+    /// Label-free canary win rule: candidate mean margin/T must reach
+    /// this fraction of the baseline's.
+    pub canary_margin_frac: f64,
+    /// Labeled canary win rule: candidate accuracy within this of the
+    /// baseline's (or better).
+    pub canary_accuracy_eps: f64,
+    /// Sustained drift with fewer labeled corpus samples than this does
+    /// not launch a retrain (a label-free deployment may have nothing
+    /// to train on until labels are backfilled).
+    pub min_corpus: usize,
+    /// Unlabeled windows kept around (rows + predictions) for delayed
+    /// label backfill; older windows age out.
+    pub label_backfill_horizon: usize,
 }
 
 impl AutotuneConfig {
@@ -196,6 +234,13 @@ impl AutotuneConfig {
             min_gain: 0.05,
             background: true,
             retrain_corpus: 1024,
+            canary_fraction: 0.25,
+            canary_min_windows: 2,
+            canary_max_windows: 6,
+            canary_margin_frac: 0.9,
+            canary_accuracy_eps: 0.02,
+            min_corpus: 64,
+            label_backfill_horizon: 8,
         }
     }
 }
@@ -203,7 +248,13 @@ impl AutotuneConfig {
 /// Decision log of one autotuned deployment.
 #[derive(Debug, Clone)]
 pub enum AutotuneEvent {
-    DriftDetected { window: usize, accuracy: f64, mean_margin: f64 },
+    /// Sustained drift confirmed (accuracy is None on a label-free
+    /// trigger — margins alone declared it).
+    DriftDetected { window: usize, accuracy: Option<f64>, mean_margin: f64 },
+    /// Drift confirmed but the labeled corpus is below
+    /// [`AutotuneConfig::min_corpus`]: no retrain launched.  Backfilled
+    /// labels grow the corpus; the detector re-arms.
+    RetrainStarved { window: usize, corpus: usize },
     SearchCompleted { window: usize, trials: usize, admitted: usize },
     /// The search's winner (or an injected trainer's output) failed the
     /// budget gate at swap time and was NOT programmed.
@@ -219,17 +270,44 @@ pub enum AutotuneEvent {
     /// the outage is one fence, never permanent), or a regression was
     /// detected with no recorded previous model to roll back to.
     SwapFailed { window: usize, error: String },
+    /// The candidate was staged on one replica; live traffic routes
+    /// away from it while the mirror evaluates.
+    CanaryStarted { window: usize, replica: usize, version: u64 },
+    /// The sequential comparison rejected the candidate: the lone
+    /// canary was reprogrammed back.  No other replica ever served it.
+    CanaryRejected { window: usize, evaluated: usize },
+    /// The sequential comparison promoted the candidate; a `Swapped`
+    /// event follows with the fleet broadcast's version.
+    CanaryPromoted { window: usize, evaluated: usize },
+    /// Delayed labels arrived for a past unlabeled window; its recorded
+    /// accuracy was backfilled (the drift detector is NOT re-run on
+    /// backfill).
+    LabelsBackfilled { window: usize, accuracy: f64 },
     Swapped {
         window: usize,
         version: u64,
-        trigger_accuracy: f64,
+        /// Trigger-time labeled accuracy (None on a label-free trigger).
+        trigger_accuracy: Option<f64>,
         instructions: usize,
         luts: u32,
         brams: u32,
         watts: f64,
     },
+    /// Post-swap validation accepted the model.  `mean_accuracy` is NaN
+    /// when every validation window was unlabeled (the canary verdict
+    /// already judged the candidate on live mirrors).
     Accepted { window: usize, mean_accuracy: f64 },
     RolledBack { window: usize, mean_accuracy: f64, version: u64 },
+}
+
+/// One resolved canary evaluation: when it started, when and how it
+/// resolved, and every paired baseline-vs-candidate window.
+#[derive(Debug, Clone)]
+pub struct CanaryOutcome {
+    pub started_window: usize,
+    pub resolved_window: usize,
+    pub verdict: CanaryVerdict,
+    pub windows: Vec<PairedWindow>,
 }
 
 /// Telemetry + decisions of one autotuned deployment.
@@ -237,14 +315,200 @@ pub enum AutotuneEvent {
 pub struct AutotuneReport {
     pub windows: Vec<WindowStats>,
     pub events: Vec<AutotuneEvent>,
+    /// Every resolved canary evaluation, in order.
+    pub canaries: Vec<CanaryOutcome>,
 }
 
-#[derive(Debug, Copy, Clone)]
+impl AutotuneReport {
+    /// Serialize the full deployment record — monitoring windows,
+    /// decision events, canary outcomes — as a self-contained JSON
+    /// document (`rttm serve --autotune --report-json PATH`; schema in
+    /// EXPERIMENTS.md §Canary).  Hand-rolled: no serde in the offline
+    /// vendor set.  Missing accuracies serialize as `null`.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"windows\": [\n");
+        for (i, w) in self.windows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"window\": {}, \"accuracy\": {}, \"mean_margin\": {}, \
+                 \"samples\": {}, \"model_version\": {}}}{}\n",
+                i,
+                json_opt(w.accuracy),
+                json_num(w.mean_margin),
+                w.samples,
+                w.model_version,
+                comma(i, self.windows.len()),
+            ));
+        }
+        s.push_str("  ],\n  \"events\": [\n");
+        for (i, e) in self.events.iter().enumerate() {
+            s.push_str("    ");
+            s.push_str(&event_json(e));
+            s.push_str(comma(i, self.events.len()));
+            s.push('\n');
+        }
+        s.push_str("  ],\n  \"canaries\": [\n");
+        for (i, c) in self.canaries.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"started_window\": {}, \"resolved_window\": {}, \"verdict\": \"{}\", \
+                 \"windows\": [",
+                c.started_window,
+                c.resolved_window,
+                c.verdict.as_str(),
+            ));
+            for (j, w) in c.windows.iter().enumerate() {
+                s.push_str(&format!(
+                    "{{\"samples\": {}, \"baseline_margin\": {}, \"candidate_margin\": {}, \
+                     \"baseline_accuracy\": {}, \"candidate_accuracy\": {}, \
+                     \"agreement\": {}, \"candidate_wins\": {}}}{}",
+                    w.samples,
+                    json_num(w.baseline_margin),
+                    json_num(w.candidate_margin),
+                    json_opt(w.baseline_accuracy),
+                    json_opt(w.candidate_accuracy),
+                    json_num(w.agreement),
+                    w.candidate_wins,
+                    comma(j, c.windows.len()),
+                ));
+            }
+            s.push_str(&format!("]}}{}\n", comma(i, self.canaries.len())));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+fn comma(i: usize, len: usize) -> &'static str {
+    if i + 1 == len {
+        ""
+    } else {
+        ","
+    }
+}
+
+/// A finite f64 as a JSON number; NaN/inf as null.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".into()
+    }
+}
+
+fn json_opt(v: Option<f64>) -> String {
+    v.map(json_num).unwrap_or_else(|| "null".into())
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars) —
+/// only `SwapFailed.error` carries free text.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn event_json(e: &AutotuneEvent) -> String {
+    match e {
+        AutotuneEvent::DriftDetected { window, accuracy, mean_margin } => format!(
+            "{{\"type\": \"drift_detected\", \"window\": {window}, \"accuracy\": {}, \
+             \"mean_margin\": {}}}",
+            json_opt(*accuracy),
+            json_num(*mean_margin)
+        ),
+        AutotuneEvent::RetrainStarved { window, corpus } => format!(
+            "{{\"type\": \"retrain_starved\", \"window\": {window}, \"corpus\": {corpus}}}"
+        ),
+        AutotuneEvent::SearchCompleted { window, trials, admitted } => format!(
+            "{{\"type\": \"search_completed\", \"window\": {window}, \"trials\": {trials}, \
+             \"admitted\": {admitted}}}"
+        ),
+        AutotuneEvent::BudgetRejected { window, luts, brams, watts } => format!(
+            "{{\"type\": \"budget_rejected\", \"window\": {window}, \"luts\": {luts}, \
+             \"brams\": {brams}, \"watts\": {}}}",
+            json_num(*watts)
+        ),
+        AutotuneEvent::NoCandidateFitsBudget { window } => {
+            format!("{{\"type\": \"no_candidate_fits_budget\", \"window\": {window}}}")
+        }
+        AutotuneEvent::SearchFailed { window } => {
+            format!("{{\"type\": \"search_failed\", \"window\": {window}}}")
+        }
+        AutotuneEvent::SwapFailed { window, error } => format!(
+            "{{\"type\": \"swap_failed\", \"window\": {window}, \"error\": {}}}",
+            json_str(error)
+        ),
+        AutotuneEvent::CanaryStarted { window, replica, version } => format!(
+            "{{\"type\": \"canary_started\", \"window\": {window}, \"replica\": {replica}, \
+             \"version\": {version}}}"
+        ),
+        AutotuneEvent::CanaryRejected { window, evaluated } => format!(
+            "{{\"type\": \"canary_rejected\", \"window\": {window}, \"evaluated\": {evaluated}}}"
+        ),
+        AutotuneEvent::CanaryPromoted { window, evaluated } => format!(
+            "{{\"type\": \"canary_promoted\", \"window\": {window}, \"evaluated\": {evaluated}}}"
+        ),
+        AutotuneEvent::LabelsBackfilled { window, accuracy } => format!(
+            "{{\"type\": \"labels_backfilled\", \"window\": {window}, \"accuracy\": {}}}",
+            json_num(*accuracy)
+        ),
+        AutotuneEvent::Swapped {
+            window,
+            version,
+            trigger_accuracy,
+            instructions,
+            luts,
+            brams,
+            watts,
+        } => format!(
+            "{{\"type\": \"swapped\", \"window\": {window}, \"version\": {version}, \
+             \"trigger_accuracy\": {}, \"instructions\": {instructions}, \"luts\": {luts}, \
+             \"brams\": {brams}, \"watts\": {}}}",
+            json_opt(*trigger_accuracy),
+            json_num(*watts)
+        ),
+        AutotuneEvent::Accepted { window, mean_accuracy } => format!(
+            "{{\"type\": \"accepted\", \"window\": {window}, \"mean_accuracy\": {}}}",
+            json_num(*mean_accuracy)
+        ),
+        AutotuneEvent::RolledBack { window, mean_accuracy, version } => format!(
+            "{{\"type\": \"rolled_back\", \"window\": {window}, \"mean_accuracy\": {}, \
+             \"version\": {version}}}",
+            json_num(*mean_accuracy)
+        ),
+    }
+}
+
 enum Phase {
     Monitoring,
-    Searching { trigger_accuracy: f64 },
+    Searching {
+        trigger_accuracy: Option<f64>,
+    },
+    /// A candidate is staged on one replica; paired mirror windows
+    /// accumulate toward a verdict.  Carries the candidate and its
+    /// costed estimate so promote can emit a complete `Swapped` event.
+    Canarying {
+        trigger_accuracy: Option<f64>,
+        controller: CanaryController,
+        candidate: Arc<TMModel>,
+        started_window: usize,
+        instructions: usize,
+        luts: u32,
+        brams: u32,
+        watts: f64,
+    },
     Validating {
-        trigger_accuracy: f64,
+        trigger_accuracy: Option<f64>,
         windows_left: usize,
         acc_sum: f64,
         n: usize,
@@ -255,6 +519,14 @@ enum SearchPoll {
     Pending,
     Done(BudgetedSearch),
     Died,
+}
+
+/// An unlabeled window retained for delayed-label backfill: the rows
+/// and the predictions the pool served for them.
+struct PendingLabels {
+    window: usize,
+    xs: Vec<Vec<u8>>,
+    preds: Vec<usize>,
 }
 
 /// The live autotuner.  Owns nothing but a [`ServiceHandle`]: every
@@ -272,6 +544,9 @@ pub struct Autotuner {
     pending: Option<mpsc::Receiver<BudgetedSearch>>,
     corpus_xs: Vec<Vec<u8>>,
     corpus_ys: Vec<usize>,
+    /// Unlabeled windows awaiting delayed labels (bounded by
+    /// `cfg.label_backfill_horizon`).
+    pending_labels: Vec<PendingLabels>,
     window_index: usize,
     /// True when the default budget search is in use: an accepted swap
     /// then re-anchors the search around the NEW shape.  Injected
@@ -320,6 +595,7 @@ impl Autotuner {
             pending: None,
             corpus_xs: Vec::new(),
             corpus_ys: Vec::new(),
+            pending_labels: Vec::new(),
             window_index: 0,
             reanchor: false,
             report: AutotuneReport::default(),
@@ -348,61 +624,145 @@ impl Autotuner {
         match self.phase {
             Phase::Monitoring => "monitoring",
             Phase::Searching { .. } => "searching",
+            Phase::Canarying { .. } => "canarying",
             Phase::Validating { .. } => "validating",
         }
     }
 
     /// Feed one labeled monitoring window.  The probe goes through the
     /// serving pool (it IS traffic); the state machine then advances:
-    /// detect → (shadow search) → swap → validate/rollback.
+    /// detect → (shadow search) → canary → promote/reject →
+    /// validate/rollback.
     pub fn observe_window(
         &mut self,
         xs: &[Vec<u8>],
         ys: &[usize],
     ) -> Result<WindowStats, ServeError> {
+        self.observe(xs, Some(ys))
+    }
+
+    /// Feed one UNLABELED monitoring window — the fully label-free
+    /// mode: drift is judged on confidence margins alone, and the
+    /// window's rows + predictions are retained (bounded) so
+    /// [`Self::backfill_labels`] can fill accuracy in when delayed
+    /// labels arrive.
+    pub fn observe_unlabeled(&mut self, xs: &[Vec<u8>]) -> Result<WindowStats, ServeError> {
+        self.observe(xs, None)
+    }
+
+    fn observe(&mut self, xs: &[Vec<u8>], ys: Option<&[usize]>) -> Result<WindowStats, ServeError> {
         // A row/label mismatch would silently skew accuracy AND shift
         // every later corpus label against its sample — reject it
         // before anything is recorded.
-        if xs.len() != ys.len() {
-            return Err(ServeError::Core(crate::accel::core::CoreError::BadBatch {
-                rows: xs.len(),
-                reason: "window labels do not match rows",
-            }));
+        if let Some(ys) = ys {
+            if xs.len() != ys.len() {
+                return Err(ServeError::Core(crate::accel::core::CoreError::BadBatch {
+                    rows: xs.len(),
+                    reason: "window labels do not match rows",
+                }));
+            }
         }
         let tel = self.handle.infer_telemetry(xs.to_vec())?;
-        let correct = tel.preds.iter().zip(ys).filter(|(p, y)| p == y).count();
-        let accuracy = correct as f64 / xs.len().max(1) as f64;
+        let accuracy = ys.map(|ys| {
+            tel.preds.iter().zip(ys).filter(|(p, y)| p == y).count() as f64
+                / xs.len().max(1) as f64
+        });
         let mean_margin = tel.margins.iter().map(|&m| m as f64).sum::<f64>()
             / tel.margins.len().max(1) as f64;
         let stats = WindowStats {
-            accuracy: Some(accuracy),
+            accuracy,
             mean_margin,
             samples: xs.len(),
             model_version: tel.model_version,
         };
         self.report.windows.push(stats.clone());
 
-        // Retrain corpus: most recent labeled samples, capped.
-        self.corpus_xs.extend_from_slice(xs);
+        match ys {
+            // Retrain corpus: most recent labeled samples, capped.
+            Some(ys) => {
+                self.corpus_xs.extend_from_slice(xs);
+                self.corpus_ys.extend_from_slice(ys);
+                self.cap_corpus();
+            }
+            // Unlabeled: retain rows + predictions for delayed backfill.
+            None => {
+                self.pending_labels.push(PendingLabels {
+                    window: self.window_index,
+                    xs: xs.to_vec(),
+                    preds: tel.preds.clone(),
+                });
+                let horizon = self.cfg.label_backfill_horizon.max(1);
+                if self.pending_labels.len() > horizon {
+                    let drop = self.pending_labels.len() - horizon;
+                    self.pending_labels.drain(..drop);
+                }
+            }
+        }
+
+        // Advance the window index even when the policy step fails: the
+        // window WAS recorded (report.windows, pending_labels key), and
+        // a stalled index would make the next window reuse this one's
+        // id — misattributing backfills and event window ids.
+        let stepped = self.step(accuracy, mean_margin, &tel, xs, ys);
+        self.window_index += 1;
+        stepped?;
+        Ok(stats)
+    }
+
+    /// Delayed labels arrived for past unlabeled window `window`:
+    /// backfill its accuracy into [`AutotuneReport::windows`], add the
+    /// now-labeled samples to the retrain corpus, and record a
+    /// `LabelsBackfilled` event.  The drift detector is deliberately
+    /// NOT re-run — backfilled accuracy describes the past, and
+    /// re-triggering on it would retune against a state the pool may
+    /// have already left.  Returns the backfilled accuracy, or `None`
+    /// when the window is unknown / already aged out of the horizon.
+    pub fn backfill_labels(
+        &mut self,
+        window: usize,
+        ys: &[usize],
+    ) -> Result<Option<f64>, ServeError> {
+        let Some(pos) = self.pending_labels.iter().position(|p| p.window == window) else {
+            return Ok(None);
+        };
+        if ys.len() != self.pending_labels[pos].xs.len() {
+            return Err(ServeError::Core(crate::accel::core::CoreError::BadBatch {
+                rows: self.pending_labels[pos].xs.len(),
+                reason: "backfill labels do not match window rows",
+            }));
+        }
+        let p = self.pending_labels.remove(pos);
+        let correct = p.preds.iter().zip(ys).filter(|(a, b)| a == b).count();
+        let accuracy = correct as f64 / p.preds.len().max(1) as f64;
+        self.report.windows[p.window].accuracy = Some(accuracy);
+        // Late labels still feed the retrain corpus: a label-free
+        // trigger needs SOMETHING to retrain on.
+        self.corpus_xs.extend_from_slice(&p.xs);
         self.corpus_ys.extend_from_slice(ys);
+        self.cap_corpus();
+        self.report.events.push(AutotuneEvent::LabelsBackfilled {
+            window: p.window,
+            accuracy,
+        });
+        Ok(Some(accuracy))
+    }
+
+    fn cap_corpus(&mut self) {
         let cap = self.cfg.retrain_corpus.max(1);
         if self.corpus_xs.len() > cap {
             let drop = self.corpus_xs.len() - cap;
             self.corpus_xs.drain(..drop);
             self.corpus_ys.drain(..drop);
         }
-
-        self.step(accuracy, mean_margin)?;
-        self.window_index += 1;
-        Ok(stats)
     }
 
     /// Block until a pending shadow search finishes and act on it.
     /// Returns true if a search was pending.  Serving traffic continues
     /// on the pool the whole time — only the policy thread waits.
     pub fn finish_pending_search(&mut self) -> Result<bool, ServeError> {
-        let Phase::Searching { trigger_accuracy } = self.phase else {
-            return Ok(false);
+        let trigger_accuracy = match &self.phase {
+            Phase::Searching { trigger_accuracy } => *trigger_accuracy,
+            _ => return Ok(false),
         };
         match self.poll_search(true) {
             SearchPoll::Done(outcome) => {
@@ -417,89 +777,226 @@ impl Autotuner {
         }
     }
 
-    fn step(&mut self, accuracy: f64, mean_margin: f64) -> Result<(), ServeError> {
-        match self.phase {
+    fn step(
+        &mut self,
+        accuracy: Option<f64>,
+        mean_margin: f64,
+        tel: &Telemetry,
+        xs: &[Vec<u8>],
+        ys: Option<&[usize]>,
+    ) -> Result<(), ServeError> {
+        // Take the phase out; every arm either leaves the default
+        // (Monitoring) or writes the successor phase back.
+        match std::mem::replace(&mut self.phase, Phase::Monitoring) {
             Phase::Monitoring => {
-                if self.detector.push(Some(accuracy), mean_margin) {
+                if self.detector.push(accuracy, mean_margin) {
                     self.report.events.push(AutotuneEvent::DriftDetected {
                         window: self.window_index,
                         accuracy,
                         mean_margin,
                     });
-                    self.launch_search(accuracy)?;
-                }
-            }
-            Phase::Searching { trigger_accuracy } => match self.poll_search(false) {
-                SearchPoll::Pending => {}
-                SearchPoll::Done(outcome) => self.finish_search(outcome, trigger_accuracy)?,
-                SearchPoll::Died => self.search_died(),
-            },
-            Phase::Validating { trigger_accuracy, windows_left, acc_sum, n } => {
-                let acc_sum = acc_sum + accuracy;
-                let n = n + 1;
-                if windows_left <= 1 {
-                    let mean = acc_sum / n as f64;
-                    // Healthy is good enough: a margin-triggered retune
-                    // can have trigger_accuracy near 1.0, where
-                    // "trigger + gain" is unreachable and would doom
-                    // every swap to rollback (a retrain-rollback loop).
-                    let kept = mean >= trigger_accuracy + self.cfg.min_gain
-                        || mean >= self.cfg.accuracy_floor;
-                    if !kept {
-                        // The retrain did not help: restore the previous
-                        // model (another fence-gated program — versions
-                        // stay strictly monotone).
-                        match self.previous.clone() {
-                            Some(prev) => {
-                                self.handle.program((*prev).clone())?;
-                                self.current = Some(prev);
-                                self.report.events.push(AutotuneEvent::RolledBack {
-                                    window: self.window_index,
-                                    mean_accuracy: mean,
-                                    version: self.handle.pool_stats().version,
-                                });
-                            }
-                            // Nothing to restore (the pool was programmed
-                            // behind the tuner's back): record honestly —
-                            // the regressing model keeps serving, NOT a
-                            // phantom rollback.
-                            None => self.report.events.push(AutotuneEvent::SwapFailed {
-                                window: self.window_index,
-                                error: format!(
-                                    "regression (mean accuracy {mean:.3}) with no previous \
-                                     model to roll back to"
-                                ),
-                            }),
-                        }
-                        // The old model is back (or was never recorded):
-                        // the margin baseline stays, only the streak
-                        // clears.
+                    if self.corpus_xs.len() < self.cfg.min_corpus.max(2) {
+                        // Label-free deployment with nothing to retrain
+                        // on yet: record the starvation, re-arm the
+                        // detector, wait for backfilled labels.
+                        self.report.events.push(AutotuneEvent::RetrainStarved {
+                            window: self.window_index,
+                            corpus: self.corpus_xs.len(),
+                        });
                         self.detector.reset();
                     } else {
-                        self.report.events.push(AutotuneEvent::Accepted {
+                        self.launch_search(accuracy)?;
+                    }
+                }
+            }
+            Phase::Searching { trigger_accuracy } => {
+                self.phase = Phase::Searching { trigger_accuracy };
+                match self.poll_search(false) {
+                    SearchPoll::Pending => {}
+                    SearchPoll::Done(outcome) => self.finish_search(outcome, trigger_accuracy)?,
+                    SearchPoll::Died => self.search_died(),
+                }
+            }
+            Phase::Canarying {
+                trigger_accuracy,
+                mut controller,
+                candidate,
+                started_window,
+                instructions,
+                luts,
+                brams,
+                watts,
+            } => {
+                // The monitor telemetry above already answered the FULL
+                // window on a baseline replica; reuse its stride-sampled
+                // half so the mirror costs one canary round-trip, not
+                // two pool round-trips.
+                // Extend and a transient request error (e.g. a replica
+                // panicked mid-mirror and was respawned) both keep the
+                // evaluation alive — one shared phase-restore site.  A
+                // vanished canary (ServeError::Canary: its replica died
+                // and DeathWatch dismissed it, or an external broadcast
+                // replaced the pool model) aborts the evaluation
+                // instead: restoring the phase would wedge the tuner on
+                // that error forever, and the pool is already healthy.
+                let mut keep_going = Ok(());
+                let verdict = match controller.observe_with_baseline(xs, ys, tel) {
+                    Ok((_paired, CanaryVerdict::Extend)) => None,
+                    Ok((_paired, verdict)) => Some(verdict),
+                    Err(ServeError::Canary(reason)) => {
+                        self.abort_canary(started_window, controller, reason);
+                        return Ok(());
+                    }
+                    Err(e) => {
+                        keep_going = Err(e);
+                        None
+                    }
+                };
+                let Some(verdict) = verdict else {
+                    self.phase = Phase::Canarying {
+                        trigger_accuracy,
+                        controller,
+                        candidate,
+                        started_window,
+                        instructions,
+                        luts,
+                        brams,
+                        watts,
+                    };
+                    return keep_going;
+                };
+                let windows = controller.into_windows();
+                let evaluated = windows.len();
+                match verdict {
+                    CanaryVerdict::Extend => unreachable!("handled above"),
+                    CanaryVerdict::Reject => {
+                        // Record the concluded evaluation BEFORE the
+                        // dismissal fence: a dismissal error must not
+                        // erase a verdict that was actually reached.
+                        self.report.events.push(AutotuneEvent::CanaryRejected {
                             window: self.window_index,
-                            mean_accuracy: mean,
+                            evaluated,
                         });
-                        // A different shape serves now; its healthy
-                        // margin scale may differ — re-learn it.
-                        self.detector.rebaseline();
-                        // And re-anchor the default shadow search to the
-                        // ACCEPTED shape, so the next retune explores the
-                        // deployed model's neighborhood, not the
-                        // install-time one.
-                        if self.reanchor {
-                            if let Some(cur) = &self.current {
-                                self.shape = cur.shape.clone();
-                                self.trainer = Arc::new(BudgetSearchTrainer {
-                                    shape: cur.shape.clone(),
-                                    budget: self.cfg.budget.clone(),
-                                    epochs: self.cfg.epochs,
-                                    seed: self.cfg.seed,
-                                });
+                        self.report.canaries.push(CanaryOutcome {
+                            started_window,
+                            resolved_window: self.window_index,
+                            verdict: CanaryVerdict::Reject,
+                            windows,
+                        });
+                        self.detector.reset();
+                        // The candidate loses: reprogram the lone canary
+                        // back.  No other replica ever served it, and
+                        // live traffic never saw it at all.
+                        self.handle.dismiss_canary()?;
+                    }
+                    CanaryVerdict::Promote => {
+                        if let Err(e) = self.handle.promote_canary() {
+                            // The broadcast failed mid-promote: replicas
+                            // may be unprogrammed — restore the serving
+                            // model immediately (it fit a moment ago).
+                            if let Some(cur) = self.current.clone() {
+                                self.handle.program((*cur).clone())?;
                             }
+                            self.report.events.push(AutotuneEvent::SwapFailed {
+                                window: self.window_index,
+                                error: e.to_string(),
+                            });
+                            // The verdict said promote but the fleet
+                            // never received it: the evaluation is
+                            // recorded UNRESOLVED (Extend), never as a
+                            // promotion that did not happen.
+                            self.report.canaries.push(CanaryOutcome {
+                                started_window,
+                                resolved_window: self.window_index,
+                                verdict: CanaryVerdict::Extend,
+                                windows,
+                            });
+                            self.detector.reset();
+                        } else {
+                            self.previous = self.current.clone();
+                            self.current = Some(candidate);
+                            self.report.events.push(AutotuneEvent::CanaryPromoted {
+                                window: self.window_index,
+                                evaluated,
+                            });
+                            self.report.events.push(AutotuneEvent::Swapped {
+                                window: self.window_index,
+                                version: self.handle.pool_stats().version,
+                                trigger_accuracy,
+                                instructions,
+                                luts,
+                                brams,
+                                watts,
+                            });
+                            self.report.canaries.push(CanaryOutcome {
+                                started_window,
+                                resolved_window: self.window_index,
+                                verdict: CanaryVerdict::Promote,
+                                windows,
+                            });
+                            self.phase = Phase::Validating {
+                                trigger_accuracy,
+                                windows_left: self.cfg.validation_windows.max(1),
+                                acc_sum: 0.0,
+                                n: 0,
+                            };
                         }
                     }
-                    self.phase = Phase::Monitoring;
+                }
+            }
+            Phase::Validating { trigger_accuracy, windows_left, acc_sum, n } => {
+                // Unlabeled validation windows contribute nothing to the
+                // mean; a fully unlabeled validation accepts (the canary
+                // verdict already judged the candidate on live mirrors).
+                let acc_sum = acc_sum + accuracy.unwrap_or(0.0);
+                let n = n + usize::from(accuracy.is_some());
+                if windows_left <= 1 {
+                    if n == 0 {
+                        self.accept_swap(f64::NAN);
+                    } else {
+                        let mean = acc_sum / n as f64;
+                        // Healthy is good enough: a margin-triggered
+                        // retune can have trigger accuracy near 1.0 (or
+                        // none at all), where "trigger + gain" is
+                        // unreachable and would doom every swap to
+                        // rollback (a retrain-rollback loop).
+                        let kept = mean >= self.cfg.accuracy_floor
+                            || trigger_accuracy.is_some_and(|t| mean >= t + self.cfg.min_gain);
+                        if !kept {
+                            // The retrain did not help: restore the
+                            // previous model (another fence-gated
+                            // program — versions stay strictly
+                            // monotone).
+                            match self.previous.clone() {
+                                Some(prev) => {
+                                    self.handle.program((*prev).clone())?;
+                                    self.current = Some(prev);
+                                    self.report.events.push(AutotuneEvent::RolledBack {
+                                        window: self.window_index,
+                                        mean_accuracy: mean,
+                                        version: self.handle.pool_stats().version,
+                                    });
+                                }
+                                // Nothing to restore (the pool was
+                                // programmed behind the tuner's back):
+                                // record honestly — the regressing model
+                                // keeps serving, NOT a phantom rollback.
+                                None => self.report.events.push(AutotuneEvent::SwapFailed {
+                                    window: self.window_index,
+                                    error: format!(
+                                        "regression (mean accuracy {mean:.3}) with no \
+                                         previous model to roll back to"
+                                    ),
+                                }),
+                            }
+                            // The old model is back (or was never
+                            // recorded): the margin baseline stays, only
+                            // the streak clears.
+                            self.detector.reset();
+                        } else {
+                            self.accept_swap(mean);
+                        }
+                    }
                 } else {
                     self.phase = Phase::Validating {
                         trigger_accuracy,
@@ -513,6 +1010,55 @@ impl Autotuner {
         Ok(())
     }
 
+    /// The canary vanished mid-evaluation (replica death, or an
+    /// external broadcast dismissed it): record the evaluation as
+    /// unresolved and resume monitoring.  The pool is already healthy —
+    /// whatever cleared the canary also restored consistent serving.
+    fn abort_canary(
+        &mut self,
+        started_window: usize,
+        controller: CanaryController,
+        reason: &'static str,
+    ) {
+        let windows = controller.into_windows();
+        self.report.events.push(AutotuneEvent::SwapFailed {
+            window: self.window_index,
+            error: format!("canary evaluation aborted: {reason}"),
+        });
+        self.report.canaries.push(CanaryOutcome {
+            started_window,
+            resolved_window: self.window_index,
+            // Extend = unresolved: no verdict was ever reached.
+            verdict: CanaryVerdict::Extend,
+            windows,
+        });
+        self.detector.reset();
+    }
+
+    /// Post-swap validation accepted the promoted model: log it,
+    /// re-learn the margin baseline (the new shape's healthy margin
+    /// scale may differ — a stale EWMA would flag every window as
+    /// collapsed), and re-anchor the default shadow search to the
+    /// accepted shape.
+    fn accept_swap(&mut self, mean_accuracy: f64) {
+        self.report.events.push(AutotuneEvent::Accepted {
+            window: self.window_index,
+            mean_accuracy,
+        });
+        self.detector.rebaseline();
+        if self.reanchor {
+            if let Some(cur) = &self.current {
+                self.shape = cur.shape.clone();
+                self.trainer = Arc::new(BudgetSearchTrainer {
+                    shape: cur.shape.clone(),
+                    budget: self.cfg.budget.clone(),
+                    epochs: self.cfg.epochs,
+                    seed: self.cfg.seed,
+                });
+            }
+        }
+    }
+
     fn corpus_dataset(&self) -> Dataset {
         let features = self.corpus_xs.first().map(|r| r.len()).unwrap_or(0);
         Dataset {
@@ -522,7 +1068,7 @@ impl Autotuner {
         }
     }
 
-    fn launch_search(&mut self, trigger_accuracy: f64) -> Result<(), ServeError> {
+    fn launch_search(&mut self, trigger_accuracy: Option<f64>) -> Result<(), ServeError> {
         let (train, valid) = self.corpus_dataset().split(0.75);
         self.phase = Phase::Searching { trigger_accuracy };
         if self.cfg.background {
@@ -573,7 +1119,7 @@ impl Autotuner {
     fn finish_search(
         &mut self,
         outcome: BudgetedSearch,
-        trigger_accuracy: f64,
+        trigger_accuracy: Option<f64>,
     ) -> Result<(), ServeError> {
         let admitted = outcome.trials.iter().filter(|t| t.admitted).count();
         self.report.events.push(AutotuneEvent::SearchCompleted {
@@ -608,6 +1154,60 @@ impl Autotuner {
         }
         let instructions = crate::isa::instruction_count(&model);
         let m = Arc::new(model);
+
+        // The canary gate: stage the candidate on exactly one replica
+        // and let paired mirror windows decide.  Pools that cannot
+        // spare a replica (or a disabled gate) fall through to the
+        // direct fence-gated swap below.
+        if self.cfg.canary_fraction > 0.0 {
+            match self.handle.program_canary((*m).clone()) {
+                Ok(replica) => {
+                    self.report.events.push(AutotuneEvent::CanaryStarted {
+                        window: self.window_index,
+                        replica,
+                        version: self.handle.pool_stats().version,
+                    });
+                    let ccfg = CanaryConfig {
+                        mirror_fraction: self.cfg.canary_fraction,
+                        min_windows: self.cfg.canary_min_windows,
+                        max_windows: self.cfg.canary_max_windows,
+                        margin_frac: self.cfg.canary_margin_frac,
+                        accuracy_eps: self.cfg.canary_accuracy_eps,
+                        baseline_t: self.current.as_ref().map(|c| c.shape.t).unwrap_or(1),
+                        candidate_t: m.shape.t,
+                    };
+                    self.phase = Phase::Canarying {
+                        trigger_accuracy,
+                        controller: CanaryController::new(self.handle.clone(), ccfg),
+                        candidate: m,
+                        started_window: self.window_index,
+                        instructions,
+                        luts: est.luts,
+                        brams: est.brams,
+                        watts,
+                    };
+                    return Ok(());
+                }
+                // Too few replicas / no baseline: direct swap instead.
+                Err(ServeError::Canary(_)) => {}
+                Err(e) => {
+                    // The canary program itself failed (e.g. the
+                    // candidate overflows the replica's memories):
+                    // restore the LONE disturbed replica and resume
+                    // monitoring — the rest of the pool never stopped
+                    // serving the old model.
+                    self.handle.dismiss_canary()?;
+                    self.report.events.push(AutotuneEvent::SwapFailed {
+                        window: self.window_index,
+                        error: e.to_string(),
+                    });
+                    self.detector.reset();
+                    self.phase = Phase::Monitoring;
+                    return Ok(());
+                }
+            }
+        }
+
         if let Err(e) = self.handle.program((*m).clone()) {
             // The broadcast failed — a failed swap deliberately leaves
             // replicas UNPROGRAMMED (never stale), so the serving model
@@ -704,6 +1304,41 @@ mod tests {
                     "case {name:?}, window {i}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn label_free_margin_only_triggering_table_driven() {
+        // Fully unlabeled streams: every push is (None, margin).
+        // margin_frac 0.5, patience 2.  Expected = index of the first
+        // window that declares drift, or None.
+        let cases: &[(&str, &[f64], Option<usize>)] = &[
+            ("healthy margins never trigger", &[10.0, 9.5, 10.5, 9.8], None),
+            ("sustained collapse triggers", &[10.0, 10.0, 2.0, 2.0], Some(3)),
+            (
+                "single collapsed windows never trigger",
+                &[10.0, 2.0, 10.0, 2.0, 10.0],
+                None,
+            ),
+            // With no baseline yet, collapse cannot be judged: the low
+            // margins BECOME the baseline (a model that is natively
+            // low-margin is not drifting).
+            ("collapse before any baseline never triggers", &[2.0, 2.0, 2.0], None),
+            (
+                "recovery resets the streak",
+                &[10.0, 10.0, 2.0, 9.9, 2.0, 10.1, 2.0],
+                None,
+            ),
+        ];
+        for (name, margins, expect) in cases {
+            let mut d = DriftDetector::new(0.8, 2);
+            let mut fired = None;
+            for (i, &m) in margins.iter().enumerate() {
+                if d.push(None, m) && fired.is_none() {
+                    fired = Some(i);
+                }
+            }
+            assert_eq!(fired, *expect, "case {name:?}");
         }
     }
 
@@ -932,7 +1567,9 @@ mod tests {
         tuner.install(good.clone()).unwrap();
         let before = tuner.handle.infer(clean.xs.clone()).unwrap();
 
-        // Trigger → swap broadcast fails → old model restored.
+        // Trigger → the canary program fails (candidate too big for the
+        // replica's memories) → the lone disturbed replica is restored.
+        // Only ONE replica was ever touched by the doomed candidate.
         tuner.observe_window(&drifted.xs, &drifted.ys).unwrap();
 
         assert!(tuner
@@ -944,8 +1581,248 @@ mod tests {
         assert_eq!(tuner.handle.infer(clean.xs.clone()).unwrap(), before);
         assert_eq!(tuner.current_model().unwrap(), &good);
         assert_eq!(tuner.phase_name(), "monitoring");
-        // install(1) + failed broadcast(2) + restore(3): monotone.
+        // install(1) + failed canary program(2) + dismissal(3): monotone.
         assert_eq!(tuner.handle.pool_stats().version, 3);
+        tuner.handle.shutdown();
+        join.join();
+    }
+
+    // ---- label-free deployment: margin triggers, backfill, starvation -
+
+    #[test]
+    fn label_free_windows_trigger_and_backfill_updates_without_retriggering() {
+        let clean = dataset(0.0, 128, 7);
+        let drifted = dataset(0.5, 128, 7);
+        let good = trained(&clean);
+        let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited());
+        cfg.patience = 2;
+        cfg.background = false;
+        cfg.margin_frac = 0.75;
+        cfg.min_corpus = 64;
+        let (mut tuner, mut join) = autotuner_on_pool(cfg, Arc::new(EmptySearchTrainer));
+        tuner.install(good).unwrap();
+
+        // Healthy unlabeled windows build the margin baseline.
+        tuner.observe_unlabeled(&clean.xs).unwrap();
+        tuner.observe_unlabeled(&clean.xs).unwrap();
+        // Sustained margin collapse on unlabeled windows declares
+        // drift with NO labels at all…
+        tuner.observe_unlabeled(&drifted.xs).unwrap();
+        tuner.observe_unlabeled(&drifted.xs).unwrap();
+        let drift_events = tuner
+            .report
+            .events
+            .iter()
+            .filter(|e| matches!(e, AutotuneEvent::DriftDetected { accuracy: None, .. }))
+            .count();
+        assert_eq!(drift_events, 1, "margin-only trigger: {:?}", tuner.report.events);
+        // …but with ZERO labeled corpus the retrain is starved, not
+        // launched on garbage.
+        assert!(tuner
+            .report
+            .events
+            .iter()
+            .any(|e| matches!(e, AutotuneEvent::RetrainStarved { corpus: 0, .. })));
+        assert!(!tuner
+            .report
+            .events
+            .iter()
+            .any(|e| matches!(e, AutotuneEvent::SearchCompleted { .. })));
+        assert!(tuner.report.windows.iter().all(|w| w.accuracy.is_none()));
+
+        // Delayed labels backfill window 0: accuracy lands in the
+        // report, the corpus grows, and NOTHING re-triggers.
+        let n_events = tuner.report.events.len();
+        let acc = tuner.backfill_labels(0, &clean.ys).unwrap().expect("window 0 pending");
+        assert_eq!(tuner.report.windows[0].accuracy, Some(acc));
+        assert!(acc > 0.8, "clean-window backfill accuracy {acc}");
+        assert_eq!(tuner.report.events.len(), n_events + 1);
+        assert!(matches!(
+            tuner.report.events.last(),
+            Some(AutotuneEvent::LabelsBackfilled { window: 0, .. })
+        ));
+        // Unknown / aged-out windows: None, not an error.
+        assert!(tuner.backfill_labels(99, &clean.ys).unwrap().is_none());
+        // Label-count mismatch is a typed error and records nothing.
+        assert!(matches!(
+            tuner.backfill_labels(1, &clean.ys[..10]),
+            Err(crate::coordinator::ServeError::Core(
+                crate::accel::core::CoreError::BadBatch { .. }
+            ))
+        ));
+        assert!(tuner.report.windows[1].accuracy.is_none());
+
+        // With the corpus backfilled past min_corpus, the next
+        // sustained collapse DOES launch the search.
+        tuner.observe_unlabeled(&drifted.xs).unwrap();
+        tuner.observe_unlabeled(&drifted.xs).unwrap();
+        assert!(
+            tuner
+                .report
+                .events
+                .iter()
+                .any(|e| matches!(e, AutotuneEvent::SearchCompleted { .. })),
+            "backfilled corpus must unblock the retrain: {:?}",
+            tuner.report.events
+        );
+        tuner.handle.shutdown();
+        join.join();
+    }
+
+    // ---- canary gate: reject restores, promote broadcasts -------------
+
+    #[test]
+    fn canary_gate_rejects_bad_candidate_without_exposing_it() {
+        let clean = dataset(0.0, 256, 7);
+        let drifted = dataset(0.35, 256, 7);
+        let good = trained(&clean);
+        let bad = TMModel::empty(shape());
+
+        let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited());
+        cfg.patience = 1;
+        cfg.background = false;
+        cfg.canary_fraction = 0.25;
+        cfg.canary_min_windows = 2;
+        let (handle, mut join) = spawn_pool(EngineSpec::base(), 2);
+        let mut tuner = Autotuner::with_trainer(handle, shape(), cfg, Arc::new(FixedTrainer(bad)));
+        tuner.install(good.clone()).unwrap();
+        let before = tuner.handle.infer(clean.xs.clone()).unwrap();
+
+        // Trigger: the candidate is staged on ONE replica only.
+        tuner.observe_window(&drifted.xs, &drifted.ys).unwrap();
+        assert_eq!(tuner.phase_name(), "canarying");
+        assert!(tuner.handle.canary_replica().is_some());
+        // Live traffic during the evaluation never sees the candidate.
+        assert_eq!(tuner.handle.infer(clean.xs.clone()).unwrap(), before);
+
+        // Two losing mirror windows -> unanimous reject.
+        tuner.observe_window(&drifted.xs, &drifted.ys).unwrap();
+        tuner.observe_window(&drifted.xs, &drifted.ys).unwrap();
+        assert_eq!(tuner.phase_name(), "monitoring");
+        assert!(tuner.handle.canary_replica().is_none());
+        assert!(tuner
+            .report
+            .events
+            .iter()
+            .any(|e| matches!(e, AutotuneEvent::CanaryRejected { evaluated: 2, .. })));
+        assert!(!tuner
+            .report
+            .events
+            .iter()
+            .any(|e| matches!(e, AutotuneEvent::Swapped { .. })));
+        // The outcome is recorded with its paired windows, all losses.
+        assert_eq!(tuner.report.canaries.len(), 1);
+        let outcome = &tuner.report.canaries[0];
+        assert!(matches!(outcome.verdict, crate::coordinator::CanaryVerdict::Reject));
+        assert_eq!(outcome.windows.len(), 2);
+        assert!(outcome.windows.iter().all(|w| !w.candidate_wins));
+        // The pool still serves the old model everywhere; versions are
+        // install(1) + canary(2) + dismiss(3).
+        assert_eq!(tuner.handle.infer(clean.xs.clone()).unwrap(), before);
+        assert_eq!(tuner.current_model().unwrap(), &good);
+        assert_eq!(tuner.handle.pool_stats().version, 3);
+        tuner.handle.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn canary_gate_promotes_good_candidate_and_rebaselines_margins() {
+        let clean = dataset(0.0, 256, 7);
+        let drifted = dataset(0.5, 256, 7);
+        let good = trained(&clean);
+        let better = trained(&drifted);
+
+        let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited());
+        cfg.patience = 2;
+        cfg.background = false;
+        cfg.canary_fraction = 0.25;
+        cfg.canary_min_windows = 1;
+        cfg.validation_windows = 1;
+        // Aggressive margin hysteresis: after the promote, a stale
+        // clean-data EWMA baseline would flag nearly any margin shift
+        // as collapse — the accept path must re-baseline instead.
+        cfg.margin_frac = 0.95;
+        let (handle, mut join) = spawn_pool(EngineSpec::base(), 2);
+        let mut tuner =
+            Autotuner::with_trainer(handle, shape(), cfg, Arc::new(FixedTrainer(better.clone())));
+        tuner.install(good).unwrap();
+
+        tuner.observe_window(&clean.xs, &clean.ys).unwrap(); // baseline
+        tuner.observe_window(&drifted.xs, &drifted.ys).unwrap(); // bad 1
+        tuner.observe_window(&drifted.xs, &drifted.ys).unwrap(); // trigger -> canary
+        assert_eq!(tuner.phase_name(), "canarying");
+        tuner.observe_window(&drifted.xs, &drifted.ys).unwrap(); // win -> promote
+        assert_eq!(tuner.phase_name(), "validating");
+        assert!(tuner
+            .report
+            .events
+            .iter()
+            .any(|e| matches!(e, AutotuneEvent::CanaryPromoted { evaluated: 1, .. })));
+        assert!(tuner
+            .report
+            .events
+            .iter()
+            .any(|e| matches!(e, AutotuneEvent::Swapped { .. })));
+        tuner.observe_window(&drifted.xs, &drifted.ys).unwrap(); // validate -> accept
+        assert!(tuner
+            .report
+            .events
+            .iter()
+            .any(|e| matches!(e, AutotuneEvent::Accepted { .. })));
+        assert_eq!(tuner.current_model().unwrap(), &better);
+
+        // Post-acceptance: the margin EWMA re-baselined to the NEW
+        // model's scale, so steady drifted windows must not re-trigger
+        // (no retune storm).
+        for _ in 0..4 {
+            tuner.observe_window(&drifted.xs, &drifted.ys).unwrap();
+        }
+        let drift_events = tuner
+            .report
+            .events
+            .iter()
+            .filter(|e| matches!(e, AutotuneEvent::DriftDetected { .. }))
+            .count();
+        assert_eq!(drift_events, 1, "retune storm after promote: {:?}", tuner.report.events);
+        // Versions: install(1) + canary(2) + promote(3), strictly
+        // monotone, and the promoted outcome is on record.
+        assert_eq!(tuner.handle.pool_stats().version, 3);
+        assert_eq!(tuner.report.canaries.len(), 1);
+        assert!(matches!(
+            tuner.report.canaries[0].verdict,
+            crate::coordinator::CanaryVerdict::Promote
+        ));
+        tuner.handle.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn report_json_is_well_formed_and_complete() {
+        let clean = dataset(0.0, 128, 7);
+        let good = trained(&clean);
+        let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited());
+        cfg.background = false;
+        let (mut tuner, mut join) = autotuner_on_pool(cfg, Arc::new(EmptySearchTrainer));
+        tuner.install(good).unwrap();
+        tuner.observe_window(&clean.xs, &clean.ys).unwrap();
+        tuner.observe_unlabeled(&clean.xs).unwrap();
+        let json = tuner.report.to_json();
+        // Structural pins (no JSON parser in the vendor set): the three
+        // top-level arrays, a labeled and an unlabeled window.
+        assert!(json.starts_with("{\n"));
+        assert!(json.ends_with("}\n"));
+        for key in ["\"windows\":", "\"events\":", "\"canaries\":"] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(json.contains("\"accuracy\": null"), "unlabeled window must be null");
+        assert!(json.contains("\"model_version\": 1"));
+        // Balanced braces/brackets (cheap well-formedness check).
+        let balance = |open: char, close: char| {
+            json.chars().filter(|&c| c == open).count()
+                == json.chars().filter(|&c| c == close).count()
+        };
+        assert!(balance('{', '}'));
+        assert!(balance('[', ']'));
         tuner.handle.shutdown();
         join.join();
     }

@@ -1,0 +1,382 @@
+//! Per-replica canary evaluation: the staged half of a model swap.
+//!
+//! MATADOR and the online-learning FPGA architecture (PAPERS.md) stage
+//! model updates through a validation path before committing; this
+//! module is that path at serving scale.  A candidate model is
+//! programmed onto exactly one replica ([`ServiceHandle::program_canary`]
+//! — the pool keeps serving, live traffic is routed away from the
+//! canary), then a configurable fraction of each observed window is
+//! *mirrored*: the same sampled rows are answered by a baseline replica
+//! and by the canary, producing one [`PairedWindow`] of
+//! margins/accuracy/agreement per window.  A sequential comparison over
+//! the paired windows yields a [`CanaryVerdict`]:
+//!
+//! * **Promote** — the candidate wins; broadcast it to the whole pool
+//!   ([`ServiceHandle::promote_canary`], one fence).
+//! * **Reject** — the candidate loses; reprogram the lone canary back
+//!   ([`ServiceHandle::dismiss_canary`]).  A bad candidate is never
+//!   served from more than one replica, and never to live traffic.
+//! * **Extend** — keep mirroring; the evidence is not decisive yet.
+//!
+//! Windows judge on labeled accuracy when labels are available and on
+//! **T-normalized confidence margins** when they are not (margins scale
+//! with a model's threshold T, so raw margins are not comparable across
+//! candidate shapes — the label-free canary compares margin/T).
+
+use super::server::{ServeError, ServiceHandle, Telemetry};
+
+/// Canary comparison knobs.
+#[derive(Debug, Clone)]
+pub struct CanaryConfig {
+    /// Fraction of each observed window mirrored to the canary (strided
+    /// sampling, deterministic).  Clamped to (0, 1].
+    pub mirror_fraction: f64,
+    /// Paired windows required before a unanimous early verdict.
+    pub min_windows: usize,
+    /// Forced (majority) verdict at this many paired windows.
+    pub max_windows: usize,
+    /// Label-free win rule: candidate mean margin/T must reach this
+    /// fraction of the baseline's mean margin/T.
+    pub margin_frac: f64,
+    /// Labeled win rule: candidate accuracy must be within this of the
+    /// baseline's (or better).
+    pub accuracy_eps: f64,
+    /// Baseline model's threshold T (margin normalization).
+    pub baseline_t: i32,
+    /// Candidate model's threshold T (margin normalization).
+    pub candidate_t: i32,
+}
+
+impl Default for CanaryConfig {
+    fn default() -> Self {
+        CanaryConfig {
+            mirror_fraction: 0.25,
+            min_windows: 2,
+            max_windows: 6,
+            margin_frac: 0.9,
+            accuracy_eps: 0.02,
+            baseline_t: 1,
+            candidate_t: 1,
+        }
+    }
+}
+
+/// Sequential-comparison outcome after a paired window.
+#[derive(Debug, Copy, Clone, PartialEq, Eq)]
+pub enum CanaryVerdict {
+    /// Candidate wins: broadcast it to the pool.
+    Promote,
+    /// Candidate loses: reprogram the lone canary back.
+    Reject,
+    /// Not decisive yet: keep mirroring.
+    Extend,
+}
+
+impl CanaryVerdict {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CanaryVerdict::Promote => "promote",
+            CanaryVerdict::Reject => "reject",
+            CanaryVerdict::Extend => "extend",
+        }
+    }
+}
+
+/// One mirrored window: the same sampled rows answered by a baseline
+/// replica and by the canary.
+#[derive(Debug, Clone)]
+pub struct PairedWindow {
+    /// Mirrored (sampled) rows in this window.
+    pub samples: usize,
+    /// Baseline mean confidence margin, normalized by the baseline
+    /// model's T.
+    pub baseline_margin: f64,
+    /// Candidate mean confidence margin, normalized by the candidate
+    /// model's T.
+    pub candidate_margin: f64,
+    /// Labeled-window accuracies (None when the window is unlabeled).
+    pub baseline_accuracy: Option<f64>,
+    pub candidate_accuracy: Option<f64>,
+    /// Fraction of mirrored rows where both models predicted the same
+    /// class.
+    pub agreement: f64,
+    /// Did the candidate win this window (labeled rule when labels
+    /// exist, normalized-margin rule otherwise)?
+    pub candidate_wins: bool,
+}
+
+/// Drives one canary evaluation: mirrors windows, accumulates
+/// [`PairedWindow`]s, and renders the sequential verdict.  Owns nothing
+/// but a [`ServiceHandle`] — every probe rides the pool's supervised
+/// request path, exactly like live traffic.
+pub struct CanaryController {
+    handle: ServiceHandle,
+    cfg: CanaryConfig,
+    windows: Vec<PairedWindow>,
+}
+
+impl CanaryController {
+    pub fn new(handle: ServiceHandle, cfg: CanaryConfig) -> Self {
+        CanaryController { handle, cfg, windows: Vec::new() }
+    }
+
+    /// Paired windows accumulated so far.
+    pub fn windows(&self) -> &[PairedWindow] {
+        &self.windows
+    }
+
+    /// Mirror one observed window: stride-sample `mirror_fraction` of
+    /// `xs`, answer the sample on a baseline replica AND on the canary,
+    /// record the paired comparison, and return it with the running
+    /// sequential verdict.  `ys` (when present) must be row-aligned
+    /// with `xs`.
+    pub fn observe(
+        &mut self,
+        xs: &[Vec<u8>],
+        ys: Option<&[usize]>,
+    ) -> Result<(PairedWindow, CanaryVerdict), ServeError> {
+        check_labels(xs, ys)?;
+        let (sample_xs, sample_ys) = stride_sample(xs, ys, self.cfg.mirror_fraction);
+        let base = self.handle.infer_telemetry(sample_xs.clone())?;
+        let cand = self.handle.infer_telemetry_canary(sample_xs)?;
+        Ok(self.record(base.preds, base.margins, &cand, sample_ys))
+    }
+
+    /// Like [`Self::observe`], but reuse baseline answers the caller
+    /// already holds for the FULL window (the autotuner's monitor
+    /// telemetry, served by a baseline replica moments earlier —
+    /// inference is deterministic and the fence keeps every baseline
+    /// replica on one model, so the stride-sampled subset is exactly
+    /// what a fresh probe would return).  Only the canary half costs a
+    /// pool round-trip.
+    pub fn observe_with_baseline(
+        &mut self,
+        xs: &[Vec<u8>],
+        ys: Option<&[usize]>,
+        baseline: &Telemetry,
+    ) -> Result<(PairedWindow, CanaryVerdict), ServeError> {
+        check_labels(xs, ys)?;
+        if baseline.preds.len() != xs.len() || baseline.margins.len() != xs.len() {
+            return Err(ServeError::Core(crate::accel::core::CoreError::BadBatch {
+                rows: xs.len(),
+                reason: "baseline telemetry does not match window rows",
+            }));
+        }
+        let (sample_xs, sample_ys) = stride_sample(xs, ys, self.cfg.mirror_fraction);
+        let stride = stride_for(self.cfg.mirror_fraction);
+        let base_preds: Vec<usize> = baseline.preds.iter().step_by(stride).copied().collect();
+        let base_margins: Vec<i32> = baseline.margins.iter().step_by(stride).copied().collect();
+        let cand = self.handle.infer_telemetry_canary(sample_xs)?;
+        Ok(self.record(base_preds, base_margins, &cand, sample_ys))
+    }
+
+    /// Shared tail of both observe flavours: compute the paired
+    /// comparison, record it, return it with the running verdict.
+    fn record(
+        &mut self,
+        base_preds: Vec<usize>,
+        base_margins: Vec<i32>,
+        cand: &Telemetry,
+        sample_ys: Option<Vec<usize>>,
+    ) -> (PairedWindow, CanaryVerdict) {
+        let norm = |margins: &[i32], t: i32| {
+            margins.iter().map(|&m| m as f64).sum::<f64>() / margins.len().max(1) as f64
+                / t.max(1) as f64
+        };
+        let baseline_margin = norm(&base_margins, self.cfg.baseline_t);
+        let candidate_margin = norm(&cand.margins, self.cfg.candidate_t);
+        let accuracy = |preds: &[usize]| {
+            sample_ys.as_ref().map(|ys| {
+                preds.iter().zip(ys).filter(|(p, y)| p == y).count() as f64
+                    / preds.len().max(1) as f64
+            })
+        };
+        let baseline_accuracy = accuracy(&base_preds);
+        let candidate_accuracy = accuracy(&cand.preds);
+        let agreement = base_preds
+            .iter()
+            .zip(&cand.preds)
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / base_preds.len().max(1) as f64;
+        let candidate_wins = match (baseline_accuracy, candidate_accuracy) {
+            (Some(b), Some(c)) => c >= b - self.cfg.accuracy_eps,
+            // A non-positive baseline margin is degenerate (fully
+            // collapsed or single-class baseline): `0 >= frac * 0`
+            // would mark ANY zero-margin candidate a winner, so demand
+            // strictly positive candidate confidence instead.
+            _ if baseline_margin <= 0.0 => candidate_margin > 0.0,
+            _ => candidate_margin >= self.cfg.margin_frac * baseline_margin,
+        };
+        let window = PairedWindow {
+            samples: base_preds.len(),
+            baseline_margin,
+            candidate_margin,
+            baseline_accuracy,
+            candidate_accuracy,
+            agreement,
+            candidate_wins,
+        };
+        self.windows.push(window.clone());
+        (window, self.verdict())
+    }
+
+    /// The running sequential verdict over the accumulated paired
+    /// windows (see [`sequential_verdict`]).
+    pub fn verdict(&self) -> CanaryVerdict {
+        sequential_verdict(&self.windows, self.cfg.min_windows, self.cfg.max_windows)
+    }
+
+    /// Consume the controller, returning its paired windows (for the
+    /// autotune report / JSON persistence).
+    pub fn into_windows(self) -> Vec<PairedWindow> {
+        self.windows
+    }
+}
+
+/// The sequential comparison over a paired-window record — a pure
+/// function of the record and the window bounds:
+///
+/// * fewer than `min_windows` windows → Extend (never decide on a
+///   single noisy window);
+/// * at `min_windows`+ with a unanimous record → early Promote /
+///   Reject;
+/// * at `max_windows` → forced majority verdict (ties reject: a
+///   candidate that cannot beat the incumbent does not ship);
+/// * otherwise → Extend.
+pub fn sequential_verdict(
+    windows: &[PairedWindow],
+    min_windows: usize,
+    max_windows: usize,
+) -> CanaryVerdict {
+    let n = windows.len();
+    if n < min_windows.max(1) {
+        return CanaryVerdict::Extend;
+    }
+    let wins = windows.iter().filter(|w| w.candidate_wins).count();
+    let losses = n - wins;
+    if losses == 0 {
+        return CanaryVerdict::Promote;
+    }
+    if wins == 0 {
+        return CanaryVerdict::Reject;
+    }
+    if n >= max_windows.max(min_windows) {
+        if wins > losses {
+            CanaryVerdict::Promote
+        } else {
+            CanaryVerdict::Reject
+        }
+    } else {
+        CanaryVerdict::Extend
+    }
+}
+
+fn check_labels(xs: &[Vec<u8>], ys: Option<&[usize]>) -> Result<(), ServeError> {
+    if let Some(ys) = ys {
+        if ys.len() != xs.len() {
+            return Err(ServeError::Core(crate::accel::core::CoreError::BadBatch {
+                rows: xs.len(),
+                reason: "window labels do not match rows",
+            }));
+        }
+    }
+    Ok(())
+}
+
+/// The sampling stride for a mirror fraction: every k-th row where
+/// k = ceil(1/fraction), so the effective mirrored fraction is
+/// 1/k <= fraction — the knob is an upper bound on the evaluation
+/// load, never exceeded (round() would mirror 100% of every window
+/// for any fraction above 2/3).
+fn stride_for(fraction: f64) -> usize {
+    let fraction = fraction.clamp(f64::MIN_POSITIVE, 1.0);
+    (1.0 / fraction).ceil().max(1.0) as usize
+}
+
+/// Deterministic strided sample of `fraction` of the rows (and the
+/// matching labels).  Stride sampling spreads the mirror across the
+/// window instead of taking a prefix, so the pair sees the same
+/// temporal mix the pool does.
+fn stride_sample(
+    xs: &[Vec<u8>],
+    ys: Option<&[usize]>,
+    fraction: f64,
+) -> (Vec<Vec<u8>>, Option<Vec<usize>>) {
+    let stride = stride_for(fraction);
+    let sample_xs: Vec<Vec<u8>> = xs.iter().step_by(stride).cloned().collect();
+    let sample_ys = ys.map(|ys| ys.iter().step_by(stride).copied().collect());
+    (sample_xs, sample_ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn window(wins: bool) -> PairedWindow {
+        PairedWindow {
+            samples: 8,
+            baseline_margin: 10.0,
+            candidate_margin: if wins { 11.0 } else { 2.0 },
+            baseline_accuracy: None,
+            candidate_accuracy: None,
+            agreement: 0.5,
+            candidate_wins: wins,
+        }
+    }
+
+    #[test]
+    fn sequential_verdict_table_driven() {
+        // The verdict is a pure function of the window record — no pool
+        // needed.  (window record, min, max, expected)
+        let cases: &[(&[bool], usize, usize, CanaryVerdict)] = &[
+            (&[], 2, 6, CanaryVerdict::Extend),
+            (&[true], 2, 6, CanaryVerdict::Extend),
+            (&[false], 2, 6, CanaryVerdict::Extend),
+            (&[true, true], 2, 6, CanaryVerdict::Promote),
+            (&[false, false], 2, 6, CanaryVerdict::Reject),
+            (&[true, false], 2, 6, CanaryVerdict::Extend),
+            (&[true, false, true, true], 2, 6, CanaryVerdict::Extend),
+            // Forced majority at max_windows.
+            (&[true, false, true, true, false, true], 2, 6, CanaryVerdict::Promote),
+            (&[true, false, false, true, false, false], 2, 6, CanaryVerdict::Reject),
+            // A tie at the cap rejects: the candidate must BEAT the
+            // incumbent to ship.
+            (&[true, false, true, false, true, false], 2, 6, CanaryVerdict::Reject),
+            // min_windows = 1 allows a one-window unanimous verdict.
+            (&[true], 1, 6, CanaryVerdict::Promote),
+            (&[false], 1, 6, CanaryVerdict::Reject),
+        ];
+        for (record, min, max, expect) in cases {
+            let windows: Vec<PairedWindow> = record.iter().map(|&w| window(w)).collect();
+            assert_eq!(
+                sequential_verdict(&windows, *min, *max),
+                *expect,
+                "record {record:?} min {min} max {max}"
+            );
+        }
+    }
+
+    #[test]
+    fn stride_sampling_is_deterministic_and_label_aligned() {
+        let xs: Vec<Vec<u8>> = (0..16u8).map(|i| vec![i; 4]).collect();
+        let ys: Vec<usize> = (0..16).collect();
+        let (sx, sy) = stride_sample(&xs, Some(&ys), 0.25);
+        assert_eq!(sx.len(), 4);
+        let sy = sy.unwrap();
+        assert_eq!(sy, vec![0, 4, 8, 12]);
+        for (x, &y) in sx.iter().zip(&sy) {
+            assert_eq!(x[0] as usize, y, "rows and labels must stay paired");
+        }
+        // Fraction 1.0 mirrors everything; tiny fractions still sample
+        // at least one row.
+        let (all, _) = stride_sample(&xs, None, 1.0);
+        assert_eq!(all.len(), 16);
+        let (one, _) = stride_sample(&xs, None, 0.01);
+        assert_eq!(one.len(), 1);
+        // The fraction is an UPPER bound: 0.7 must not mirror 100%
+        // (ceil stride 2 -> effective 0.5), and never exceeds the knob.
+        let (most, _) = stride_sample(&xs, None, 0.7);
+        assert_eq!(most.len(), 8);
+    }
+}

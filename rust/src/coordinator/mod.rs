@@ -18,20 +18,30 @@
 //!   same shape;
 //! * the [`autotune`] subsystem: a live drift-aware autotuner that runs
 //!   against the pool *while it serves* — sliding-window telemetry with
-//!   hysteresis, a budget-constrained shadow shape search on sustained
-//!   drift, and zero-downtime swap with rollback.  Policy code talks
-//!   only to [`server::ServiceHandle`]; the old [`tuner`] loop is a
-//!   thin offline wrapper over the same policy core.
+//!   hysteresis (fully label-free if need be: margins trigger, delayed
+//!   labels backfill), a budget-constrained shadow shape search on
+//!   sustained drift, and staged swaps with rollback.  Policy code
+//!   talks only to [`server::ServiceHandle`]; the old [`tuner`] loop is
+//!   a thin offline wrapper over the same policy core;
+//! * the [`canary`] gate: every autotune swap is first programmed onto
+//!   exactly ONE replica, a fraction of live traffic is mirrored to it,
+//!   and a sequential comparison over paired baseline-vs-candidate
+//!   windows renders promote / reject / extend — a bad candidate is
+//!   never served from more than one replica, and never to live
+//!   traffic.
 
 pub mod autotune;
+pub mod canary;
 pub mod hyperparam;
 pub mod server;
 pub mod service;
 pub mod tuner;
 
 pub use autotune::{
-    AutotuneConfig, AutotuneEvent, AutotuneReport, Autotuner, DriftDetector, WindowStats,
+    AutotuneConfig, AutotuneEvent, AutotuneReport, Autotuner, CanaryOutcome, DriftDetector,
+    WindowStats,
 };
+pub use canary::{CanaryConfig, CanaryController, CanaryVerdict, PairedWindow};
 pub use server::{
     spawn, spawn_pool, PoolJoin, PoolStats, ReplicaStats, ServeError, ServerStats, ServiceHandle,
     Telemetry,

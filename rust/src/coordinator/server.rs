@@ -27,7 +27,7 @@
 
 use std::collections::VecDeque;
 use std::panic::{self, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -58,6 +58,10 @@ pub enum ServeError {
     /// supervision could not intercept).
     #[error("replica worker died without replying")]
     WorkerGone,
+    /// A canary operation could not proceed (no canary active, pool too
+    /// small to dedicate a replica, no baseline model to fall back to).
+    #[error("canary: {0}")]
+    Canary(&'static str),
 }
 
 /// Per-replica snapshot inside [`PoolStats`].
@@ -77,11 +81,14 @@ pub struct ReplicaStats {
 pub struct PoolStats {
     pub replicas: Vec<ReplicaStats>,
     /// Rollup across replicas: counters are summed; `reprograms` is the
-    /// number of pool-level `program` broadcasts (not the per-replica
-    /// sum — each broadcast reprograms every replica once).
+    /// pool model VERSION — one bump per `program` broadcast and per
+    /// canary program/dismiss (not the per-replica reprogram sum).
     pub total: Metrics,
-    /// Current target model version (bumped by every `program` call).
+    /// Current target model version (bumped by every `program` call
+    /// and every canary program/dismiss).
     pub version: u64,
+    /// Replica currently serving a canary candidate, if any.
+    pub canary: Option<usize>,
 }
 
 /// One telemetry probe reply: predictions, per-datapoint confidence
@@ -97,37 +104,93 @@ pub struct Telemetry {
     pub model_version: u64,
 }
 
+/// Which replicas may serve a job.  While a canary is active, `Pool`
+/// jobs are served by every replica EXCEPT the canary (a candidate
+/// under evaluation is never exposed to live traffic) and `CanaryOnly`
+/// jobs exclusively by it (the mirrored evaluation stream).  With no
+/// canary active, `Pool` means any replica and `CanaryOnly` jobs are
+/// rejected at submission.
+#[derive(Debug, Copy, Clone, PartialEq, Eq)]
+enum Target {
+    Pool,
+    CanaryOnly,
+}
+
 /// One queued unit of work.
 enum Job {
     Infer {
         rows: Vec<Vec<u8>>,
+        target: Target,
         reply: mpsc::Sender<Result<Vec<usize>, ServeError>>,
     },
     /// Inference plus the confidence-margin telemetry the drift monitor
-    /// consumes.  Rides the same queue as plain requests — telemetry IS
-    /// traffic, so the monitor observes exactly what clients do.
+    /// and the canary comparator consume.  Rides the same queue as
+    /// plain requests — telemetry IS traffic, so the monitor observes
+    /// exactly what clients do.
     Telemetry {
         rows: Vec<Vec<u8>>,
+        target: Target,
         reply: mpsc::Sender<Result<Telemetry, ServeError>>,
     },
     /// Fault injection: panic inside the owning worker.  Exercises the
-    /// real supervision path (tests, chaos drills).
+    /// real supervision path (tests, chaos drills) — targetable, so the
+    /// canary replica's respawn-with-candidate path is reachable too.
     Crash {
+        target: Target,
         reply: mpsc::Sender<Result<Vec<usize>, ServeError>>,
     },
 }
+
+impl Job {
+    fn target(&self) -> Target {
+        match self {
+            Job::Infer { target, .. }
+            | Job::Telemetry { target, .. }
+            | Job::Crash { target, .. } => *target,
+        }
+    }
+
+    /// Reply with a canary error (the job was targeted at a canary that
+    /// no longer exists).
+    fn fail_canary(self, reason: &'static str) {
+        match self {
+            Job::Infer { reply, .. } | Job::Crash { reply, .. } => {
+                let _ = reply.send(Err(ServeError::Canary(reason)));
+            }
+            Job::Telemetry { reply, .. } => {
+                let _ = reply.send(Err(ServeError::Canary(reason)));
+            }
+        }
+    }
+}
+
+/// Sentinel for "no canary active" in the lock-free replica mirror.
+const NO_CANARY: usize = usize::MAX;
 
 struct QueueState {
     jobs: VecDeque<Job>,
     shutdown: bool,
 }
 
+/// An active canary: one replica serving a candidate model while the
+/// rest of the pool stays on [`ModelCell::model`].
+struct CanaryCell {
+    replica: usize,
+    model: Arc<TMModel>,
+}
+
 /// The versioned model cell — the fence state.
 struct ModelCell {
-    /// Target version; bumped by every `program` broadcast.
+    /// Target version; bumped by every `program` broadcast AND every
+    /// canary program/dismiss (versions stay strictly monotone across
+    /// canary lifecycles).
     version: u64,
-    /// Last-programmed model (what replicas swap to / respawn from).
+    /// Last-programmed pool model (what non-canary replicas swap to /
+    /// respawn from).
     model: Option<Arc<TMModel>>,
+    /// Active canary, if any.  The canary replica programs
+    /// `canary.model` instead of `model` at the fence.
+    canary: Option<CanaryCell>,
     /// Per-replica acknowledged version (monotone).
     acks: Vec<u64>,
     /// Per-replica swap failure, tagged with the version it failed at.
@@ -152,6 +215,10 @@ struct Shared {
     /// workers' queue-wait loop polls it; never lock cell inside the
     /// queue lock).
     version: AtomicU64,
+    /// Mirror of the canary replica index ([`NO_CANARY`] when none),
+    /// readable without the cell lock — the queue-wait eligibility
+    /// check polls it alongside `version`.
+    canary_replica: AtomicUsize,
     metrics: Mutex<Vec<ReplicaMetrics>>,
     spec: EngineSpec,
 }
@@ -208,12 +275,14 @@ pub fn spawn_pool(spec: EngineSpec, replicas: usize) -> (ServiceHandle, PoolJoin
         cell: Mutex::new(ModelCell {
             version: 0,
             model: None,
+            canary: None,
             acks: vec![0; n],
             errors: (0..n).map(|_| None).collect(),
             alive: vec![true; n],
         }),
         fence_cv: Condvar::new(),
         version: AtomicU64::new(0),
+        canary_replica: AtomicUsize::new(NO_CANARY),
         metrics: Mutex::new(vec![ReplicaMetrics::default(); n]),
         spec,
     });
@@ -232,20 +301,38 @@ pub fn spawn_pool(spec: EngineSpec, replicas: usize) -> (ServiceHandle, PoolJoin
 
 impl ServiceHandle {
     /// Blocking inference RPC.  Any number of rows; the replica splits
-    /// them into 32-lane batches through the bulk scheduler.
+    /// them into 32-lane batches through the bulk scheduler.  Never
+    /// served by an active canary replica.
     pub fn infer(&self, rows: Vec<Vec<u8>>) -> Result<Vec<usize>, ServeError> {
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::Infer { rows, reply })?;
+        self.submit(Job::Infer { rows, target: Target::Pool, reply })?;
+        rx.recv().map_err(|_| ServeError::WorkerGone)?
+    }
+
+    /// Blocking inference RPC served EXCLUSIVELY by the canary replica
+    /// (the mirrored evaluation stream).  Errors with
+    /// [`ServeError::Canary`] when no canary is active.
+    pub fn infer_canary(&self, rows: Vec<Vec<u8>>) -> Result<Vec<usize>, ServeError> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(Job::Infer { rows, target: Target::CanaryOnly, reply })?;
         rx.recv().map_err(|_| ServeError::WorkerGone)?
     }
 
     /// Blocking telemetry RPC: inference plus confidence margins and
     /// the serving replica's acknowledged model version.  The autotune
     /// monitor's probe path — it queues behind (and alongside) regular
-    /// traffic on purpose.
+    /// traffic on purpose, and is never served by an active canary.
     pub fn infer_telemetry(&self, rows: Vec<Vec<u8>>) -> Result<Telemetry, ServeError> {
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::Telemetry { rows, reply })?;
+        self.submit(Job::Telemetry { rows, target: Target::Pool, reply })?;
+        rx.recv().map_err(|_| ServeError::WorkerGone)?
+    }
+
+    /// Telemetry served exclusively by the canary replica — the
+    /// candidate half of a paired canary window.
+    pub fn infer_telemetry_canary(&self, rows: Vec<Vec<u8>>) -> Result<Telemetry, ServeError> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(Job::Telemetry { rows, target: Target::CanaryOnly, reply })?;
         rx.recv().map_err(|_| ServeError::WorkerGone)?
     }
 
@@ -254,9 +341,14 @@ impl ServiceHandle {
     /// replicas serve the new model.  A failed swap (e.g. model too big
     /// for the configured memories) leaves the failing replicas
     /// *unprogrammed* — never on a stale model — so the pool still
-    /// cannot serve mixed versions.
+    /// cannot serve mixed versions.  An active canary is dismissed by
+    /// the broadcast (the whole pool converges on `model`).
     pub fn program(&self, model: TMModel) -> Result<(), ServeError> {
-        let target = {
+        self.program_arc(Arc::new(model))
+    }
+
+    fn program_arc(&self, model: Arc<TMModel>) -> Result<(), ServeError> {
+        let (target, had_canary) = {
             let q = self.shared.queue.lock().unwrap();
             if q.shutdown {
                 return Err(ServeError::ShutDown);
@@ -264,17 +356,128 @@ impl ServiceHandle {
             drop(q);
             let mut cell = self.shared.cell.lock().unwrap();
             cell.version += 1;
-            cell.model = Some(Arc::new(model));
+            cell.model = Some(model);
+            let had_canary = cell.canary.take().is_some();
+            if had_canary {
+                self.shared.canary_replica.store(NO_CANARY, Ordering::Release);
+            }
             // Publish under the cell lock so the mirror stays ordered.
+            self.shared.version.store(cell.version, Ordering::Release);
+            (cell.version, had_canary)
+        };
+        // Only a broadcast that actually dismissed a canary can have
+        // stranded CanaryOnly jobs; the common path skips the queue
+        // rebuild entirely.
+        if had_canary {
+            self.drain_canary_jobs("canary dismissed by a pool broadcast");
+        }
+        self.fence_wait(target)
+    }
+
+    /// Program `model` onto EXACTLY ONE replica — the canary — behind
+    /// the version fence; the rest of the pool keeps serving the
+    /// current model, and live traffic is routed away from the canary
+    /// until it is promoted ([`Self::promote_canary`]) or dismissed
+    /// ([`Self::dismiss_canary`]).  Returns the canary replica index.
+    ///
+    /// Re-programming an active canary replaces its candidate in
+    /// place.  Requires a programmed pool (the baseline to compare
+    /// against) and at least two live replicas (a 1-replica "canary"
+    /// would be a whole-pool swap).  On error the canary replica is
+    /// left unprogrammed — call [`Self::dismiss_canary`] to restore it
+    /// to the pool model.
+    pub fn program_canary(&self, model: TMModel) -> Result<usize, ServeError> {
+        let (target, replica) = {
+            let q = self.shared.queue.lock().unwrap();
+            if q.shutdown {
+                return Err(ServeError::ShutDown);
+            }
+            drop(q);
+            let mut cell = self.shared.cell.lock().unwrap();
+            if cell.model.is_none() {
+                return Err(ServeError::Canary("pool has no baseline model"));
+            }
+            if cell.alive.iter().filter(|&&a| a).count() < 2 {
+                return Err(ServeError::Canary("need at least 2 live replicas"));
+            }
+            // Keep an already-chosen canary replica; otherwise dedicate
+            // the highest-index live replica.
+            let replica = match &cell.canary {
+                Some(c) => c.replica,
+                None => cell.alive.iter().rposition(|&a| a).expect("checked above"),
+            };
+            cell.canary = Some(CanaryCell { replica, model: Arc::new(model) });
+            self.shared.canary_replica.store(replica, Ordering::Release);
+            cell.version += 1;
+            self.shared.version.store(cell.version, Ordering::Release);
+            (cell.version, replica)
+        };
+        self.fence_wait(target)?;
+        Ok(replica)
+    }
+
+    /// Broadcast the active canary's candidate to the whole pool (the
+    /// promote half of a canary verdict).  One fence: every replica —
+    /// canary included — converges on the candidate.
+    pub fn promote_canary(&self) -> Result<(), ServeError> {
+        let model = {
+            let cell = self.shared.cell.lock().unwrap();
+            match &cell.canary {
+                Some(c) => Arc::clone(&c.model),
+                None => return Err(ServeError::Canary("no canary active")),
+            }
+        };
+        self.program_arc(model)
+    }
+
+    /// Tear the canary down: the canary replica is re-programmed with
+    /// the pool model behind the fence (the reject half of a verdict,
+    /// and the cleanup after a failed [`Self::program_canary`]).
+    /// Returns `false` (without touching anything) when no canary is
+    /// active — dismissal is idempotent.
+    pub fn dismiss_canary(&self) -> Result<bool, ServeError> {
+        let target = {
+            let q = self.shared.queue.lock().unwrap();
+            if q.shutdown {
+                return Err(ServeError::ShutDown);
+            }
+            drop(q);
+            let mut cell = self.shared.cell.lock().unwrap();
+            if cell.canary.is_none() {
+                return Ok(false);
+            }
+            cell.canary = None;
+            self.shared.canary_replica.store(NO_CANARY, Ordering::Release);
+            cell.version += 1;
             self.shared.version.store(cell.version, Ordering::Release);
             cell.version
         };
+        self.drain_canary_jobs("canary dismissed");
+        self.fence_wait(target)?;
+        Ok(true)
+    }
+
+    /// Replica currently serving a canary candidate, if any.
+    pub fn canary_replica(&self) -> Option<usize> {
+        match self.shared.canary_replica.load(Ordering::Acquire) {
+            NO_CANARY => None,
+            idx => Some(idx),
+        }
+    }
+
+    /// Wake workers, wait until every live replica acked `target`, and
+    /// surface a swap failure recorded for EXACTLY this fence.  Version
+    /// targets are unique per broadcast, so only this caller can own a
+    /// matching error; failures belonging to a newer concurrent
+    /// broadcast are left for that caller (a superseded model returns
+    /// Ok — the fence still guarantees no replica serves anything older
+    /// than it).
+    fn fence_wait(&self, target: u64) -> Result<(), ServeError> {
         // Wake parked workers so they observe the fence.
         {
             let _q = self.shared.queue.lock().unwrap();
             self.shared.queue_cv.notify_all();
         }
-        // The fence: wait until every live replica acked `target`.
         let mut cell = self.shared.cell.lock().unwrap();
         loop {
             if !cell.alive.iter().any(|&a| a) {
@@ -290,14 +493,6 @@ impl ServiceHandle {
             }
             cell = self.shared.fence_cv.wait(cell).unwrap();
         }
-        // Surface a swap failure recorded for EXACTLY this broadcast.
-        // Version targets are unique per program() call, so only this
-        // caller can own a matching error; failures belonging to a
-        // newer concurrent broadcast are left for that caller (a
-        // superseded model returns Ok — the fence still guarantees no
-        // replica serves anything older than it).  All replicas share
-        // one config, so failures are uniform; the first recorded one
-        // is representative.
         for slot in cell.errors.iter_mut() {
             if slot.as_ref().is_some_and(|(v, _)| *v == target) {
                 let (_, err) = slot.take().expect("checked above");
@@ -307,17 +502,27 @@ impl ServiceHandle {
         Ok(())
     }
 
+    fn drain_canary_jobs(&self, reason: &'static str) {
+        drain_canary_jobs(&self.shared, reason);
+    }
+
     /// Pool rollup in the old single-service shape (counters summed,
-    /// `reprograms` = number of `program` broadcasts).
+    /// `reprograms` = the pool model version: broadcasts plus canary
+    /// lifecycle fences — see [`PoolStats::total`]).
     pub fn stats(&self) -> Result<ServerStats, ServeError> {
         Ok(self.pool_stats().total)
     }
 
     /// Full per-replica + rollup snapshot.
     pub fn pool_stats(&self) -> PoolStats {
-        let (version, acks, alive) = {
+        let (version, acks, alive, canary) = {
             let cell = self.shared.cell.lock().unwrap();
-            (cell.version, cell.acks.clone(), cell.alive.clone())
+            (
+                cell.version,
+                cell.acks.clone(),
+                cell.alive.clone(),
+                cell.canary.as_ref().map(|c| c.replica),
+            )
         };
         let per = self.shared.metrics.lock().unwrap();
         let replicas: Vec<ReplicaStats> = per
@@ -339,7 +544,7 @@ impl ServiceHandle {
             total.errors += r.metrics.errors;
         }
         total.reprograms = version;
-        PoolStats { replicas, total, version }
+        PoolStats { replicas, total, version, canary }
     }
 
     /// Ask the pool to stop.  Queued requests are drained first; new
@@ -354,11 +559,22 @@ impl ServiceHandle {
     /// Fault injection: make the replica that picks this request panic
     /// mid-request.  Returns the same typed error a real panic would,
     /// after supervision has respawned the replica.  For tests and
-    /// chaos drills.
+    /// chaos drills.  Never lands on an active canary (like any Pool
+    /// job).
     #[doc(hidden)]
     pub fn inject_panic(&self) -> Result<Vec<usize>, ServeError> {
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::Crash { reply })?;
+        self.submit(Job::Crash { target: Target::Pool, reply })?;
+        rx.recv().map_err(|_| ServeError::WorkerGone)?
+    }
+
+    /// Fault injection on the CANARY replica: exercises the
+    /// respawn-while-canary supervision path (the rebuilt replica must
+    /// come back serving the CANDIDATE, not the pool model).
+    #[doc(hidden)]
+    pub fn inject_panic_canary(&self) -> Result<Vec<usize>, ServeError> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(Job::Crash { target: Target::CanaryOnly, reply })?;
         rx.recv().map_err(|_| ServeError::WorkerGone)?
     }
 
@@ -367,8 +583,27 @@ impl ServiceHandle {
         if q.shutdown {
             return Err(ServeError::ShutDown);
         }
+        // Canary existence is checked UNDER the queue lock: dismissal
+        // clears the mirror first and then drains the queue (also under
+        // this lock), so a CanaryOnly job admitted here is either
+        // rejected now or found by the drain — never stranded.
+        if job.target() == Target::CanaryOnly && self.canary_replica().is_none() {
+            return Err(ServeError::Canary("no canary active"));
+        }
         q.jobs.push_back(job);
-        self.shared.queue_cv.notify_one();
+        // With a canary active, the one woken worker might be
+        // ineligible for the new job (e.g. the canary woken for a Pool
+        // job) and would park again without another wake-up — wake
+        // everyone.  With no canary, every worker is eligible for every
+        // admissible job, so notify_one avoids a per-request thundering
+        // herd on the serving hot path.  (A canary appearing right
+        // after this check is fine: program_canary's fence does its own
+        // notify_all.)
+        if self.canary_replica().is_none() {
+            self.shared.queue_cv.notify_one();
+        } else {
+            self.shared.queue_cv.notify_all();
+        }
         Ok(())
     }
 }
@@ -394,12 +629,41 @@ struct DeathWatch<'a> {
 
 impl Drop for DeathWatch<'_> {
     fn drop(&mut self) {
-        let all_dead = {
+        let (all_dead, canary_cleared) = {
             let mut cell = self.shared.cell.lock().unwrap();
             cell.alive[self.idx] = false;
-            !cell.alive.iter().any(|&a| a)
+            // A dying canary takes its candidate with it: clear the
+            // canary state so Pool traffic stops avoiding a corpse and
+            // new CanaryOnly submissions are rejected instead of
+            // stranded.  Symmetrically, if this death leaves ONLY the
+            // canary alive, the canary must be dismissed — Pool jobs
+            // would otherwise have no eligible worker and their callers
+            // would block forever.  The version bump makes the
+            // surviving canary resync onto the pool model before it
+            // serves live traffic.
+            let was_canary = cell.canary.as_ref().is_some_and(|c| c.replica == self.idx);
+            let only_canary_left = cell
+                .canary
+                .as_ref()
+                .is_some_and(|c| {
+                    cell.alive.iter().enumerate().all(|(i, &a)| !a || i == c.replica)
+                });
+            let canary_cleared = was_canary || only_canary_left;
+            if canary_cleared {
+                cell.canary = None;
+                self.shared.canary_replica.store(NO_CANARY, Ordering::Release);
+                cell.version += 1;
+                self.shared.version.store(cell.version, Ordering::Release);
+            }
+            (!cell.alive.iter().any(|&a| a), canary_cleared)
         };
         self.shared.fence_cv.notify_all();
+        if canary_cleared && !all_dead {
+            drain_canary_jobs(self.shared, "canary replica died");
+            // Wake survivors: the version bump above needs a resync.
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.queue_cv.notify_all();
+        }
         if all_dead {
             let mut q = self.shared.queue.lock().unwrap();
             q.shutdown = true;
@@ -410,16 +674,75 @@ impl Drop for DeathWatch<'_> {
     }
 }
 
+/// Fail any still-queued canary-targeted jobs with a typed error.
+/// Called after the canary is cleared (dismissal, pool broadcast, or
+/// canary-worker death): no worker is eligible for them anymore, so
+/// leaving them queued would strand their callers.  The replies are
+/// sent outside the queue lock.
+fn drain_canary_jobs(shared: &Shared, reason: &'static str) {
+    let stranded: Vec<Job> = {
+        let mut q = shared.queue.lock().unwrap();
+        let mut kept = VecDeque::with_capacity(q.jobs.len());
+        let mut out = Vec::new();
+        for job in q.jobs.drain(..) {
+            if job.target() == Target::CanaryOnly {
+                out.push(job);
+            } else {
+                kept.push_back(job);
+            }
+        }
+        q.jobs = kept;
+        out
+    };
+    for job in stranded {
+        job.fail_canary(reason);
+    }
+}
+
+/// May a worker serve a job with this target?  While a worker is the
+/// canary it serves ONLY CanaryOnly jobs and every other worker serves
+/// ONLY Pool jobs — a candidate under evaluation is never exposed to
+/// live traffic, and the baseline never answers the mirrored stream.
+///
+/// `am_canary` is the worker-local answer learned at its last fence
+/// resync from the AUTHORITATIVE cell (every canary mutation bumps the
+/// version, so a worker always resyncs before taking work under a new
+/// canary assignment) — deliberately not the lock-free mirror, whose
+/// propagation lag could otherwise let a freshly-assigned canary pick
+/// up one live request.
+fn eligible(target: Target, am_canary: bool) -> bool {
+    match target {
+        Target::Pool => !am_canary,
+        Target::CanaryOnly => am_canary,
+    }
+}
+
+/// Worker-local execution state: the service, the model Arc it last
+/// programmed (so fences that do not change THIS replica's model — e.g.
+/// a sibling becoming the canary — ack without a redundant reprogram),
+/// and whether the cell named this worker the canary at its last
+/// resync.
+struct WorkerState {
+    service: InferenceService,
+    last_model: Option<Arc<TMModel>>,
+    am_canary: bool,
+}
+
 fn worker_loop(shared: &Shared, idx: usize) {
     let _watch = DeathWatch { shared, idx };
-    let mut service = InferenceService::new(shared.spec.build());
+    let mut state = WorkerState {
+        service: InferenceService::new(shared.spec.build()),
+        last_model: None,
+        am_canary: false,
+    };
     let mut my_version = 0u64;
     loop {
         // Fence check between requests: drain (we are between jobs),
         // swap, resume.
         if shared.version.load(Ordering::Acquire) != my_version {
-            my_version = program_from_cell(shared, idx, &mut service);
+            my_version = program_from_cell(shared, idx, &mut state);
         }
+        let am_canary = state.am_canary;
         let next = {
             let mut q = shared.queue.lock().unwrap();
             loop {
@@ -428,8 +751,9 @@ fn worker_loop(shared: &Shared, idx: usize) {
                 if shared.version.load(Ordering::Acquire) != my_version {
                     break Next::Resync;
                 }
-                if let Some(job) = q.jobs.pop_front() {
-                    break Next::Work(job);
+                let slot = q.jobs.iter().position(|j| eligible(j.target(), am_canary));
+                if let Some(s) = slot {
+                    break Next::Work(q.jobs.remove(s).expect("position just found"));
                 }
                 if q.shutdown {
                     break Next::Exit;
@@ -441,41 +765,35 @@ fn worker_loop(shared: &Shared, idx: usize) {
             Next::Resync => continue,
             // DeathWatch marks the replica dead on the way out.
             Next::Exit => return,
-            Next::Work(job) => run_job(shared, idx, &mut service, &mut my_version, job),
+            Next::Work(job) => run_job(shared, idx, &mut state, &mut my_version, job),
         }
     }
 }
 
-fn run_job(
-    shared: &Shared,
-    idx: usize,
-    service: &mut InferenceService,
-    my_version: &mut u64,
-    job: Job,
-) {
+fn run_job(shared: &Shared, idx: usize, state: &mut WorkerState, my_version: &mut u64, job: Job) {
     match job {
-        Job::Infer { rows, reply } => {
-            let outcome = panic::catch_unwind(AssertUnwindSafe(|| service.infer_all(&rows)));
-            reply_or_respawn(shared, idx, service, my_version, outcome, reply);
+        Job::Infer { rows, reply, .. } => {
+            let outcome =
+                panic::catch_unwind(AssertUnwindSafe(|| state.service.infer_all(&rows)));
+            reply_or_respawn(shared, idx, state, my_version, outcome, reply);
         }
-        Job::Telemetry { rows, reply } => {
+        Job::Telemetry { rows, reply, .. } => {
             // Capture the fence version the request runs under BEFORE
             // the work: a panic respawn may advance `my_version`.
             let version = *my_version;
             let outcome = panic::catch_unwind(AssertUnwindSafe(|| {
-                service.infer_with_margins(&rows).map(|(preds, margins)| Telemetry {
-                    preds,
-                    margins,
-                    model_version: version,
-                })
+                state
+                    .service
+                    .infer_with_margins(&rows)
+                    .map(|(preds, margins)| Telemetry { preds, margins, model_version: version })
             }));
-            reply_or_respawn(shared, idx, service, my_version, outcome, reply);
+            reply_or_respawn(shared, idx, state, my_version, outcome, reply);
         }
-        Job::Crash { reply } => {
+        Job::Crash { reply, .. } => {
             let outcome = panic::catch_unwind(AssertUnwindSafe(|| -> Result<Vec<usize>, CoreError> {
                 panic!("injected fault (ServiceHandle::inject_panic)")
             }));
-            reply_or_respawn(shared, idx, service, my_version, outcome, reply);
+            reply_or_respawn(shared, idx, state, my_version, outcome, reply);
         }
     }
 }
@@ -488,18 +806,18 @@ fn run_job(
 fn reply_or_respawn<T>(
     shared: &Shared,
     idx: usize,
-    service: &mut InferenceService,
+    state: &mut WorkerState,
     my_version: &mut u64,
     outcome: std::thread::Result<Result<T, CoreError>>,
     reply: mpsc::Sender<Result<T, ServeError>>,
 ) {
     match outcome {
         Ok(result) => {
-            shared.metrics.lock().unwrap()[idx].metrics = service.metrics.clone();
+            shared.metrics.lock().unwrap()[idx].metrics = state.service.metrics.clone();
             let _ = reply.send(result.map_err(ServeError::Core));
         }
         Err(_panic) => {
-            respawn_replica(shared, idx, service, my_version);
+            respawn_replica(shared, idx, state, my_version);
             let _ = reply.send(Err(ServeError::WorkerPanicked { replica: idx }));
         }
     }
@@ -509,38 +827,53 @@ fn reply_or_respawn<T>(
 /// arbitrary state.  Rebuild the engine from the spec, carry the
 /// counters over (plus the error), reprogram from the last-programmed
 /// model, then let the caller fail only the offending request.
-fn respawn_replica(
-    shared: &Shared,
-    idx: usize,
-    service: &mut InferenceService,
-    my_version: &mut u64,
-) {
-    let mut carried = service.metrics.clone();
+fn respawn_replica(shared: &Shared, idx: usize, state: &mut WorkerState, my_version: &mut u64) {
+    let mut carried = state.service.metrics.clone();
     carried.errors += 1;
-    *service = InferenceService::new(shared.spec.build());
-    service.metrics = carried;
+    state.service = InferenceService::new(shared.spec.build());
+    // The fresh engine is unprogrammed: the reprogram-skip memo must
+    // not survive the rebuild.
+    state.last_model = None;
+    state.service.metrics = carried;
     {
         let mut per = shared.metrics.lock().unwrap();
         per[idx].respawns += 1;
-        per[idx].metrics = service.metrics.clone();
+        per[idx].metrics = state.service.metrics.clone();
     }
-    *my_version = program_from_cell(shared, idx, service);
+    *my_version = program_from_cell(shared, idx, state);
 }
 
-/// Swap `service` to the cell's current model and acknowledge the
-/// version (the worker half of the fence).  Also the respawn path —
-/// called with a freshly built engine, it re-installs the
-/// last-programmed model.  Returns the version applied.
-fn program_from_cell(shared: &Shared, idx: usize, service: &mut InferenceService) -> u64 {
+/// Swap this worker's service to the model the cell assigns IT — the
+/// canary candidate when this replica is the canary, the pool model
+/// otherwise — and acknowledge the version (the worker half of the
+/// fence).  Also the respawn path: called with a freshly built engine,
+/// it re-installs the assigned model.  Returns the version applied.
+///
+/// A fence that does not change this replica's model (same Arc as the
+/// last programmed one — e.g. a sibling became the canary) acks without
+/// touching the engine, so canary lifecycle operations cost the
+/// non-participating replicas one drain, not one reprogram.
+fn program_from_cell(shared: &Shared, idx: usize, state: &mut WorkerState) -> u64 {
     let (target, model) = {
         let cell = shared.cell.lock().unwrap();
-        (cell.version, cell.model.clone())
+        let am_canary = cell.canary.as_ref().is_some_and(|c| c.replica == idx);
+        state.am_canary = am_canary;
+        let model = if am_canary {
+            cell.canary.as_ref().map(|c| Arc::clone(&c.model))
+        } else {
+            cell.model.clone()
+        };
+        (cell.version, model)
     };
     // Program outside the lock: encoding + programming a large model is
     // the slow part, and siblings must be able to ack concurrently.
     let failure = match &model {
-        Some(m) => match service.reprogram(m) {
-            Ok(()) => None,
+        Some(m) if state.last_model.as_ref().is_some_and(|l| Arc::ptr_eq(l, m)) => None,
+        Some(m) => match state.service.reprogram(m) {
+            Ok(()) => {
+                state.last_model = Some(Arc::clone(m));
+                None
+            }
             Err(e) => {
                 // A failed swap must not leave this replica on the
                 // stale model: a single core keeps its old program
@@ -548,9 +881,10 @@ fn program_from_cell(shared: &Shared, idx: usize, service: &mut InferenceService
                 // multi-core can stop half-programmed.  Rebuild the
                 // engine unprogrammed (counters carried) so the
                 // replica serves NotProgrammed, never version N-1.
-                let carried = service.metrics.clone();
-                *service = InferenceService::new(shared.spec.build());
-                service.metrics = carried;
+                let carried = state.service.metrics.clone();
+                state.service = InferenceService::new(shared.spec.build());
+                state.service.metrics = carried;
+                state.last_model = None;
                 Some(e)
             }
         },
@@ -558,7 +892,7 @@ fn program_from_cell(shared: &Shared, idx: usize, service: &mut InferenceService
     };
     // Keep the published per-replica metrics fresh (reprogram bumps a
     // counter outside the job path).
-    shared.metrics.lock().unwrap()[idx].metrics = service.metrics.clone();
+    shared.metrics.lock().unwrap()[idx].metrics = state.service.metrics.clone();
     let mut cell = shared.cell.lock().unwrap();
     if cell.acks[idx] < target {
         cell.acks[idx] = target;
@@ -780,6 +1114,203 @@ mod tests {
             h.infer(data.xs.clone()),
             Err(ServeError::ShutDown) | Err(ServeError::WorkerGone)
         ));
+    }
+
+    #[test]
+    fn canary_serves_only_the_mirrored_stream() {
+        let (model_a, data) = trained();
+        let drifted = SynthSpec::new(12, 3, 96).noise(0.05).seed(8).drift(0.4).generate();
+        let shape = TMShape::synthetic(12, 3, 8);
+        let model_b = crate::trainer::train_model(&shape, &drifted, 4, 3);
+
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 3);
+        h.program(model_a.clone()).unwrap();
+        let want_a = h.infer(data.xs.clone()).unwrap();
+
+        // Reference answers for both models.
+        let mut svc_b = InferenceService::new(EngineSpec::base().build());
+        svc_b.reprogram(&model_b).unwrap();
+        let want_b = svc_b.infer_all(&data.xs).unwrap();
+        assert_ne!(want_a, want_b, "test premise: the models must disagree");
+
+        // No canary yet: canary-targeted requests are typed errors.
+        assert!(matches!(
+            h.infer_canary(data.xs.clone()),
+            Err(ServeError::Canary(_))
+        ));
+        assert!(h.canary_replica().is_none());
+
+        let replica = h.program_canary(model_b.clone()).unwrap();
+        assert_eq!(replica, 2, "highest-index live replica is the canary");
+        assert_eq!(h.canary_replica(), Some(2));
+        assert_eq!(h.pool_stats().canary, Some(2));
+
+        // Live traffic NEVER sees the candidate; the mirror ONLY does.
+        for _ in 0..6 {
+            assert_eq!(h.infer(data.xs.clone()).unwrap(), want_a);
+        }
+        assert_eq!(h.infer_canary(data.xs.clone()).unwrap(), want_b);
+        let tel = h.infer_telemetry_canary(data.xs.clone()).unwrap();
+        assert_eq!(tel.preds, want_b);
+        let tel = h.infer_telemetry(data.xs.clone()).unwrap();
+        assert_eq!(tel.preds, want_a);
+
+        // Dismiss: the canary replica returns to the pool model.
+        assert!(h.dismiss_canary().unwrap());
+        assert!(h.canary_replica().is_none());
+        assert!(matches!(
+            h.infer_canary(data.xs.clone()),
+            Err(ServeError::Canary(_))
+        ));
+        for _ in 0..6 {
+            assert_eq!(h.infer(data.xs.clone()).unwrap(), want_a);
+        }
+        // Dismissal is idempotent.
+        assert!(!h.dismiss_canary().unwrap());
+
+        // Versions strictly monotone: program(1), canary(2), dismiss(3).
+        let stats = h.pool_stats();
+        assert_eq!(stats.version, 3);
+        for r in &stats.replicas {
+            assert_eq!(r.model_version, 3);
+        }
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn canary_promote_broadcasts_the_candidate() {
+        let (model_a, data) = trained();
+        let drifted = SynthSpec::new(12, 3, 96).noise(0.05).seed(8).drift(0.4).generate();
+        let shape = TMShape::synthetic(12, 3, 8);
+        let model_b = crate::trainer::train_model(&shape, &drifted, 4, 3);
+        let mut svc_b = InferenceService::new(EngineSpec::base().build());
+        svc_b.reprogram(&model_b).unwrap();
+        let want_b = svc_b.infer_all(&data.xs).unwrap();
+
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 3);
+        // Promote with no canary is a typed error.
+        assert!(matches!(h.promote_canary(), Err(ServeError::Canary(_))));
+        h.program(model_a).unwrap();
+        h.program_canary(model_b).unwrap();
+        h.promote_canary().unwrap();
+        assert!(h.canary_replica().is_none());
+        // Every replica now serves the candidate.
+        for _ in 0..6 {
+            assert_eq!(h.infer(data.xs.clone()).unwrap(), want_b);
+        }
+        let stats = h.pool_stats();
+        assert_eq!(stats.version, 3); // program, canary, promote
+        for r in &stats.replicas {
+            assert_eq!(r.model_version, 3);
+        }
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn canary_panic_respawns_with_the_candidate_not_the_pool_model() {
+        let (model_a, data) = trained();
+        let drifted = SynthSpec::new(12, 3, 96).noise(0.05).seed(8).drift(0.4).generate();
+        let shape = TMShape::synthetic(12, 3, 8);
+        let model_b = crate::trainer::train_model(&shape, &drifted, 4, 3);
+        let mut svc_b = InferenceService::new(EngineSpec::base().build());
+        svc_b.reprogram(&model_b).unwrap();
+        let want_b = svc_b.infer_all(&data.xs).unwrap();
+
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 3);
+        // No canary yet: canary-targeted injection is a typed error.
+        assert!(matches!(h.inject_panic_canary(), Err(ServeError::Canary(_))));
+        h.program(model_a).unwrap();
+        let want_a = h.infer(data.xs.clone()).unwrap();
+        let replica = h.program_canary(model_b).unwrap();
+
+        // Panic the CANARY worker mid-request: supervision must rebuild
+        // it serving the CANDIDATE (a respawn onto the pool model would
+        // make every paired window tie and promote any candidate).
+        match h.inject_panic_canary() {
+            Err(ServeError::WorkerPanicked { replica: r }) => assert_eq!(r, replica),
+            other => panic!("expected WorkerPanicked, got {other:?}"),
+        }
+        assert_eq!(h.infer_canary(data.xs.clone()).unwrap(), want_b);
+        // And the pool half is untouched throughout.
+        for _ in 0..4 {
+            assert_eq!(h.infer(data.xs.clone()).unwrap(), want_a);
+        }
+        let stats = h.pool_stats();
+        assert_eq!(stats.replicas[replica].respawns, 1);
+        assert!(stats.replicas[replica].alive);
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn canary_requires_a_baseline_and_two_replicas() {
+        let (model, _) = trained();
+        // No baseline model programmed yet.
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 2);
+        assert!(matches!(
+            h.program_canary(model.clone()),
+            Err(ServeError::Canary(_))
+        ));
+        h.shutdown();
+        join.join();
+        // Single-replica pool: a "canary" would be a whole-pool swap.
+        let (h, mut join) = spawn(EngineSpec::base());
+        h.program(model.clone()).unwrap();
+        assert!(matches!(
+            h.program_canary(model),
+            Err(ServeError::Canary(_))
+        ));
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn failed_canary_program_is_recoverable_by_dismissal() {
+        use crate::accel::core::AccelConfig;
+
+        let (small, data) = trained();
+        let big_shape = TMShape::synthetic(12, 3, 48);
+        let big_data = SynthSpec::new(12, 3, 96).noise(0.05).seed(9).generate();
+        let big = crate::trainer::train_model(&big_shape, &big_data, 4, 2);
+        let n_small = crate::isa::instruction_count(&small);
+        assert!(crate::isa::instruction_count(&big) > n_small, "test premise");
+
+        let spec = EngineSpec::custom(AccelConfig::base().with_depths(n_small, 2048));
+        let (h, mut join) = spawn_pool(spec, 3);
+        h.program(small).unwrap();
+        let want = h.infer(data.xs.clone()).unwrap();
+
+        // The candidate overflows the canary replica's memories: typed
+        // error, and ONLY that replica was ever disturbed.
+        assert!(matches!(h.program_canary(big), Err(ServeError::Core(_))));
+        assert_eq!(h.infer(data.xs.clone()).unwrap(), want);
+        // Dismissal restores the canary replica to the pool model.
+        assert!(h.dismiss_canary().unwrap());
+        assert!(h.canary_replica().is_none());
+        for _ in 0..6 {
+            assert_eq!(h.infer(data.xs.clone()).unwrap(), want);
+        }
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn pool_broadcast_dismisses_an_active_canary() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 2);
+        h.program(model.clone()).unwrap();
+        h.program_canary(model.clone()).unwrap();
+        assert_eq!(h.canary_replica(), Some(1));
+        h.program(model).unwrap();
+        assert!(h.canary_replica().is_none());
+        assert!(matches!(
+            h.infer_canary(data.xs.clone()),
+            Err(ServeError::Canary(_))
+        ));
+        h.shutdown();
+        join.join();
     }
 
     #[test]

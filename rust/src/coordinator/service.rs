@@ -126,35 +126,6 @@ impl Engine {
         }
     }
 
-    /// Like [`Engine::run_rows`], but also returns the per-datapoint
-    /// confidence margin (top-1 minus top-2 class sum) — the label-free
-    /// drift signal the autotuner's telemetry monitor consumes.
-    pub fn run_rows_margins(
-        &mut self,
-        rows: &[Vec<u8>],
-    ) -> Result<(Vec<usize>, Vec<i32>, u64), CoreError> {
-        sched::validate_rows(rows, 32)?;
-        let packed = crate::isa::pack_features(rows);
-        match self {
-            Engine::Single(c) => {
-                let r = c.run_batch(&packed)?;
-                Ok((
-                    r.preds[..rows.len()].iter().map(|&p| p as usize).collect(),
-                    margins_from_sums(&r.class_sums, rows.len()),
-                    r.cycles.total(),
-                ))
-            }
-            Engine::Multi(m) => {
-                let r = m.run_batch(&packed)?;
-                Ok((
-                    r.preds[..rows.len()].iter().map(|&p| p as usize).collect(),
-                    margins_from_sums(&r.class_sums, rows.len()),
-                    r.batch_cycles,
-                ))
-            }
-        }
-    }
-
     pub fn freq_mhz(&self) -> f64 {
         match self {
             Engine::Single(c) => c.cfg.freq_mhz,
@@ -163,31 +134,9 @@ impl Engine {
     }
 }
 
-/// Per-lane confidence margin: winning class sum minus runner-up.  A
-/// drifting input distribution collapses this *before* labels arrive —
-/// the autotuner's label-free early-warning signal.  With a single
-/// class the margin is the winning sum itself.
-pub fn margins_from_sums(sums: &[[i32; 32]], n: usize) -> Vec<i32> {
-    (0..n.min(32))
-        .map(|b| {
-            let (mut best, mut second) = (i32::MIN, i32::MIN);
-            for row in sums {
-                let v = row[b];
-                if v > best {
-                    second = best;
-                    best = v;
-                } else if v > second {
-                    second = v;
-                }
-            }
-            if second == i32::MIN {
-                best
-            } else {
-                best - second
-            }
-        })
-        .collect()
-}
+/// Re-exported from the batch scheduler, where the margins-aware bulk
+/// paths live (`classify_rows_margins_{core,multicore}`).
+pub use crate::accel::engine::margins_from_sums;
 
 /// Service counters (simulated time is cycle-derived, not wall time).
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -288,45 +237,39 @@ impl InferenceService {
 
     /// Serve an arbitrary-size request, returning predictions *and* the
     /// per-datapoint confidence margins — the telemetry flavour of
-    /// [`Self::infer_all`] the autotuner's monitor rides on.  Counters
-    /// update exactly like a normal request (telemetry IS traffic).
+    /// [`Self::infer_all`] the autotuner's monitor and the canary
+    /// mirror ride on.  Counters update exactly like a normal request
+    /// (telemetry IS traffic).
     ///
-    /// Unlike `infer_all`, this runs per-32-row batches (the bulk
-    /// scheduler does not surface class sums): on a multi-core engine,
-    /// `ParallelMode::Auto` keeps small per-batch walks serial, so the
-    /// per-chunk thread-spawn cost only appears for large programs.
-    /// Probe windows are small and per-window; a margins-aware bulk
-    /// path is a known follow-on (ROADMAP).
+    /// Routes through the margins-aware bulk scheduler
+    /// (`classify_rows_margins_{core,multicore}`): one pack pass, a
+    /// reused batch scratch, and — on a multi-core engine — the
+    /// chunk-amortized thread spawn, so a probe or mirror window costs
+    /// the same as the equivalent [`Self::infer_all`] call.
     pub fn infer_with_margins(
         &mut self,
         rows: &[Vec<u8>],
     ) -> Result<(Vec<usize>, Vec<i32>), CoreError> {
-        if let Err(e) = sched::validate_rows(rows, usize::MAX) {
+        if rows.is_empty() {
             self.metrics.errors += 1;
-            return Err(e);
+            return Err(CoreError::BadBatch { rows: 0, reason: "empty request" });
         }
-        let mut preds = Vec::with_capacity(rows.len());
-        let mut margins = Vec::with_capacity(rows.len());
-        let mut cycles = 0u64;
-        let mut batches = 0u64;
-        for chunk in rows.chunks(32) {
-            match self.engine.run_rows_margins(chunk) {
-                Ok((p, m, c)) => {
-                    preds.extend(p);
-                    margins.extend(m);
-                    cycles += c;
-                    batches += 1;
-                }
-                Err(e) => {
-                    self.metrics.errors += 1;
-                    return Err(e);
-                }
+        let run = match &mut self.engine {
+            Engine::Single(c) => sched::classify_rows_margins_core(c, rows),
+            Engine::Multi(m) => sched::classify_rows_margins_multicore(m, rows),
+        };
+        match run {
+            Ok((preds, margins, stats)) => {
+                self.metrics.inferences += stats.inferences;
+                self.metrics.batches += stats.batches;
+                self.metrics.simulated_cycles += stats.simulated_cycles;
+                Ok((preds, margins))
+            }
+            Err(e) => {
+                self.metrics.errors += 1;
+                Err(e)
             }
         }
-        self.metrics.inferences += rows.len() as u64;
-        self.metrics.batches += batches;
-        self.metrics.simulated_cycles += cycles;
-        Ok((preds, margins))
     }
 
     /// Accuracy over a labeled set (the recalibration monitor's probe).

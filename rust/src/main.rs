@@ -64,7 +64,9 @@ fn usage() {
          \x20 infer   --workload W [--engine base|single|multi] [--n N]\n\
          \x20 serve   --workload W [--engine ...] [--requests N] [--replicas N]\n\
          \x20         [--autotune [--schedule abrupt|gradual|recurring]\n\
-         \x20          [--budget LUTS,BRAMS,WATTS] [--windows N] [--window-n N] [--drift F]]\n\
+         \x20          [--budget LUTS,BRAMS,WATTS] [--windows N] [--window-n N] [--drift F]\n\
+         \x20          [--canary-fraction F] [--label-free [--label-delay N]]\n\
+         \x20          [--report-json PATH]]\n\
          \x20 retune  --workload W [--drift F] [--threshold F]\n\
          \x20 report  --workload W\n\
          \x20 save    --workload W --out model.rttm\n\
@@ -335,6 +337,19 @@ fn cmd_serve_autotune(opts: &Opts) -> anyhow::Result<()> {
     let window_n = opts.get_usize("window-n", 256);
     let drift = opts.get_f64("drift", 0.35);
     let threshold = opts.get_f64("threshold", 0.85);
+    // Canary gate: fraction of each window mirrored to the staged
+    // candidate; 0 disables the gate (direct fence swap).
+    let canary_fraction = opts.get_f64("canary-fraction", 0.25);
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&canary_fraction),
+        "--canary-fraction must be in [0, 1]"
+    );
+    // Fully label-free deployment: windows are observed unlabeled
+    // (margin-only drift detection, canary judged on margins), with
+    // labels backfilled `--label-delay` windows late.
+    let label_free = opts.has("label-free");
+    let label_delay = opts.get_usize("label-delay", 2).max(1);
+    let report_json = opts.get("report-json", "");
 
     // --budget "<luts>,<brams>,<watts>" or per-axis flags; unset axes
     // stay unconstrained.
@@ -382,25 +397,60 @@ fn cmd_serve_autotune(opts: &Opts) -> anyhow::Result<()> {
 
     let mut cfg = AutotuneConfig::new(budget);
     cfg.accuracy_floor = threshold;
+    cfg.canary_fraction = canary_fraction;
+    // The pending-window horizon must outlast the label delay, or every
+    // window would age out right before its labels arrive and no
+    // backfill would ever land.
+    cfg.label_backfill_horizon = cfg.label_backfill_horizon.max(label_delay + 1);
     let mut tuner = Autotuner::new(handle.clone(), w.shape.clone(), cfg);
     tuner.install(model)?;
 
     println!(
-        "autotuned serving: workload={} replicas={replicas} schedule={:?} threshold={threshold}",
-        w.name, sched.kind
+        "autotuned serving: workload={} replicas={replicas} schedule={:?} threshold={threshold} \
+         canary_fraction={canary_fraction}{}",
+        w.name,
+        sched.kind,
+        if label_free {
+            format!(" label_free=true label_delay={label_delay}")
+        } else {
+            String::new()
+        }
     );
-    for (step, win) in sched.stream(&w).iter().enumerate() {
-        let stats = tuner.observe_window(&win.xs, &win.ys)?;
+    let stream = sched.stream(&w);
+    for (step, win) in stream.iter().enumerate() {
+        let stats = if label_free {
+            // Margin-only monitoring; the window's labels arrive
+            // `label_delay` windows late and backfill the report (and
+            // the retrain corpus) without re-triggering.
+            let stats = tuner.observe_unlabeled(&win.xs)?;
+            if step >= label_delay {
+                tuner.backfill_labels(step - label_delay, &stream[step - label_delay].ys)?;
+            }
+            stats
+        } else {
+            tuner.observe_window(&win.xs, &win.ys)?
+        };
         println!(
-            "window {step:>3}  drift={:.2}  acc={:.3}  margin={:>7.2}  version={}  [{}]",
+            "window {step:>3}  drift={:.2}  acc={}  margin={:>7.2}  version={}  [{}]",
             sched.drift_at(step),
-            stats.accuracy.unwrap_or(f64::NAN),
+            stats
+                .accuracy
+                .map(|a| format!("{a:.3}"))
+                .unwrap_or_else(|| "  -  ".into()),
             stats.mean_margin,
             stats.model_version,
             tuner.phase_name(),
         );
         if tuner.is_searching() {
             tuner.finish_pending_search()?;
+        }
+    }
+    if label_free {
+        // Drain the tail: the last `label_delay` windows' labels arrive
+        // after the stream ends, but they are known here — backfill them
+        // so the report (and its JSON) is complete.
+        for step in windows.saturating_sub(label_delay)..windows {
+            tuner.backfill_labels(step, &stream[step].ys)?;
         }
     }
     for e in &tuner.report.events {
@@ -414,6 +464,15 @@ fn cmd_serve_autotune(opts: &Opts) -> anyhow::Result<()> {
             other => println!("{other:?}"),
         }
     }
+    for c in &tuner.report.canaries {
+        println!(
+            "canary: staged at window {}, {} at window {} after {} paired windows",
+            c.started_window,
+            c.verdict.as_str(),
+            c.resolved_window,
+            c.windows.len()
+        );
+    }
     let stats = handle.pool_stats();
     println!(
         "served {} inferences across {} replicas, {} reprograms, 0 downtime",
@@ -421,6 +480,10 @@ fn cmd_serve_autotune(opts: &Opts) -> anyhow::Result<()> {
         stats.replicas.len(),
         stats.version
     );
+    if !report_json.is_empty() {
+        std::fs::write(&report_json, tuner.report.to_json())?;
+        println!("wrote autotune report to {report_json}");
+    }
     handle.shutdown();
     join.join();
     Ok(())

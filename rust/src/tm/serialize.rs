@@ -37,6 +37,12 @@ pub enum FileError {
     /// yet *claim* more payload than it carries.
     #[error("truncated file: {needed} more bytes required")]
     Truncated { needed: usize },
+    /// The file carries MORE payload than its fields declare (e.g. a
+    /// CRC-resealed `count` understated by one).  The inverse of
+    /// [`FileError::Truncated`]: undeclared bytes are never silently
+    /// ignored — they would be an unauthenticated side channel.
+    #[error("malformed file: {extra} undeclared trailing bytes")]
+    TrailingBytes { extra: usize },
     #[error("unsupported version {0}")]
     BadVersion(u16),
     #[error("checksum mismatch (corrupted file)")]
@@ -153,6 +159,12 @@ pub fn from_bytes(data: &[u8]) -> Result<(TMShape, Vec<Instr>), FileError> {
     for _ in 0..count {
         instrs.push(Instr(c.u16()?));
     }
+    // Every body byte must be declared by some field: leftover bytes
+    // mean the count understates the stream (or the file smuggles
+    // undeclared payload past the field layout).
+    if c.pos != c.data.len() {
+        return Err(FileError::TrailingBytes { extra: c.data.len() - c.pos });
+    }
     let shape = TMShape {
         name,
         features,
@@ -255,6 +267,16 @@ mod tests {
         assert!(matches!(
             from_bytes(&bytes),
             Err(FileError::Truncated { needed: 2 })
+        ));
+
+        // An off-by-one UNDERstatement leaves 2 undeclared body bytes:
+        // rejected as TrailingBytes, never silently ignored.
+        let mut bytes = to_bytes(&model);
+        bytes[off..off + 4].copy_from_slice(&(count - 1).to_le_bytes());
+        reseal(&mut bytes);
+        assert!(matches!(
+            from_bytes(&bytes),
+            Err(FileError::TrailingBytes { extra: 2 })
         ));
     }
 

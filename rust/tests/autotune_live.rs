@@ -1,51 +1,47 @@
 //! Live autotune acceptance: a drift-schedule workload served through a
-//! multi-replica pool with the autotuner on.
+//! multi-replica pool with the autotuner on, every swap staged through
+//! the canary gate.
 //!
-//! Asserts the PR 3 acceptance criteria end to end:
+//! Asserts the acceptance criteria end to end:
 //! * windowed accuracy recovers to within 5 points of pre-drift after
-//!   the swap;
+//!   the promoted swap;
 //! * a concurrent client hammering the pool sees ZERO request errors,
-//!   including during the reprogram fence;
+//!   including through the canary program, the promote broadcast and
+//!   every fence in between;
 //! * `model_version` is strictly monotone across the deployment;
 //! * the swapped shape's fitted `ResourceEstimate` is within the
 //!   configured budget.
+//!
+//! Slow (full drift schedules, real retrains): `#[ignore]`d out of
+//! tier-1 and run by the CI `cargo test -- --ignored` job.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+#[path = "common/pool_harness.rs"]
+mod pool_harness;
 
+use pool_harness::{
+    assert_versions_strictly_monotone, drifty_workload, mean_accuracy, spawn_harness,
+    train_initial, Traffic,
+};
 use rttm::coordinator::autotune::{AutotuneConfig, AutotuneEvent, Autotuner};
-use rttm::coordinator::server::spawn_pool;
-use rttm::coordinator::EngineSpec;
-use rttm::datasets::workloads::{DriftSchedule, Workload};
+use rttm::coordinator::{CanaryVerdict, EngineSpec};
+use rttm::datasets::workloads::DriftSchedule;
 use rttm::model_cost::energy::EnergyModel;
 use rttm::model_cost::resources::{estimate, fitted_config, ResourceBudget};
-use rttm::TMShape;
-
-fn test_workload() -> Workload {
-    Workload {
-        name: "drifty",
-        shape: TMShape::synthetic(16, 3, 10),
-        noise: 0.05,
-        informative: 1.0,
-        paper_accuracy: None,
-        recalibration: "integration test",
-    }
-}
 
 #[test]
-fn autotuner_recovers_from_abrupt_drift_on_a_live_pool() {
-    let w = test_workload();
-    // 10 windows x 256 labeled samples; drift 0.4 arrives at window 4.
-    let sched = DriftSchedule::abrupt(10, 256, 4, 0.4).seed(7);
+#[ignore = "slow (live drift schedule + retrains); runs in the CI --ignored job"]
+fn autotuner_recovers_from_abrupt_drift_through_the_canary_gate() {
+    let w = drifty_workload();
+    // 12 windows x 256 labeled samples; drift 0.4 arrives at window 4.
+    // The tail is long enough for trigger -> canary (2 paired windows)
+    // -> promote -> validate -> recovered windows.
+    let sched = DriftSchedule::abrupt(12, 256, 4, 0.4).seed(7);
+    let model0 = train_initial(&w, &sched, 512);
 
-    // Initial model trained on the clean universe — on fresh draws
-    // PAST the monitored stream, so windowed accuracy measures
-    // generalization, never memorized training samples.
-    let clean = sched.training_set(&w, 512);
-    let model0 = rttm::trainer::train_model(&w.shape, &clean, 4, 2);
-
-    // >= 2 replicas behind one queue (acceptance: 3).
-    let (handle, mut join) = spawn_pool(EngineSpec::base(), 3);
+    // >= 2 replicas behind one queue (acceptance: 3 — one can canary
+    // while two keep serving).
+    let pool = spawn_harness(EngineSpec::base(), 3);
+    let handle = pool.handle.clone();
 
     let budget = ResourceBudget::unlimited()
         .with_luts(1340)
@@ -60,36 +56,17 @@ fn autotuner_recovers_from_abrupt_drift_on_a_live_pool() {
     cfg.seed = 17;
     cfg.background = true; // the live mode: search on a background thread
     cfg.retrain_corpus = 512; // exactly the two most recent windows
+    cfg.canary_fraction = 0.25; // the gate under test
+    cfg.canary_min_windows = 2;
 
     let mut tuner = Autotuner::new(handle.clone(), w.shape.clone(), cfg);
     tuner.install(model0).unwrap();
 
     // Concurrent client traffic for the WHOLE deployment, including
-    // through the reprogram fence: every request must succeed.
-    let stop = Arc::new(AtomicBool::new(false));
-    let served = Arc::new(AtomicU64::new(0));
-    let failed = Arc::new(AtomicU64::new(0));
-    let client = {
-        let h = handle.clone();
-        let stop = Arc::clone(&stop);
-        let served = Arc::clone(&served);
-        let failed = Arc::clone(&failed);
-        let rows: Vec<Vec<u8>> = clean.xs[..32].to_vec();
-        std::thread::spawn(move || {
-            while !stop.load(Ordering::Relaxed) {
-                match h.infer(rows.clone()) {
-                    Ok(preds) => {
-                        assert_eq!(preds.len(), 32);
-                        served.fetch_add(1, Ordering::Relaxed);
-                    }
-                    Err(_) => {
-                        failed.fetch_add(1, Ordering::Relaxed);
-                    }
-                }
-                std::thread::yield_now();
-            }
-        })
-    };
+    // through the canary program and the promote fence: every request
+    // must succeed.
+    let clean = sched.training_set(&w, 64);
+    let traffic = Traffic::start(handle.clone(), clean.xs[..32].to_vec());
 
     // Drive the monitored deployment.
     for win in &sched.stream(&w) {
@@ -98,27 +75,24 @@ fn autotuner_recovers_from_abrupt_drift_on_a_live_pool() {
         // keeps hammering the pool; block the POLICY thread (only) so
         // the test timeline is deterministic.
         if tuner.is_searching() {
-            let served_before = served.load(Ordering::Relaxed);
+            let served_before = traffic.served();
             tuner.finish_pending_search().unwrap();
-            // Traffic flowed during the retrain + swap.
+            // Traffic flowed during the retrain + canary program.
             assert!(
-                served.load(Ordering::Relaxed) >= served_before,
+                traffic.served() >= served_before,
                 "client stalled during retune"
             );
         }
     }
-    stop.store(true, Ordering::Relaxed);
-    client.join().unwrap();
-
-    // --- no request errors, traffic actually flowed -------------------
-    assert_eq!(failed.load(Ordering::Relaxed), 0, "request errors during deployment");
-    assert!(served.load(Ordering::Relaxed) > 0);
+    traffic.stop_assert_clean();
 
     let report = &tuner.report;
     assert_eq!(report.windows.len(), sched.windows);
 
-    // --- the story: drift detected, one swap, accepted, no rollback ---
+    // --- the story: drift detected, one canary, promoted, one swap ----
     assert!(report.events.iter().any(|e| matches!(e, AutotuneEvent::DriftDetected { .. })));
+    assert!(report.events.iter().any(|e| matches!(e, AutotuneEvent::CanaryStarted { .. })));
+    assert!(report.events.iter().any(|e| matches!(e, AutotuneEvent::CanaryPromoted { .. })));
     let swapped: Vec<_> = report
         .events
         .iter()
@@ -127,37 +101,37 @@ fn autotuner_recovers_from_abrupt_drift_on_a_live_pool() {
     assert_eq!(swapped.len(), 1, "exactly one retune: {:?}", report.events);
     assert!(report.events.iter().any(|e| matches!(e, AutotuneEvent::Accepted { .. })));
     assert!(!report.events.iter().any(|e| matches!(e, AutotuneEvent::RolledBack { .. })));
+    assert!(!report.events.iter().any(|e| matches!(e, AutotuneEvent::CanaryRejected { .. })));
+
+    // The canary record: one evaluation, promoted, every paired window
+    // won by the candidate (it was retrained on the drifted corpus).
+    assert_eq!(report.canaries.len(), 1);
+    let canary = &report.canaries[0];
+    assert_eq!(canary.verdict, CanaryVerdict::Promote);
+    assert!(canary.windows.len() >= 2);
+    assert!(canary.windows.iter().all(|w| w.candidate_wins));
+    // No canary is left active after resolution.
+    assert!(handle.canary_replica().is_none());
 
     // --- accuracy recovers to within 5 points of pre-drift ------------
-    let acc = |i: usize| report.windows[i].accuracy.unwrap();
-    let pre_drift = (0..4).map(acc).sum::<f64>() / 4.0;
+    let pre_drift = mean_accuracy(report, 0..4);
     assert!(pre_drift > 0.85, "pre-drift accuracy {pre_drift}");
-    let drifted = acc(4).min(acc(5));
+    let drifted = mean_accuracy(report, 4..6);
     assert!(drifted < 0.85, "drift must actually degrade accuracy, got {drifted}");
-    let recovered = (8..10).map(acc).sum::<f64>() / 2.0;
+    let recovered = mean_accuracy(report, 10..12);
     assert!(
         recovered >= pre_drift - 0.05,
         "windowed accuracy did not recover: pre {pre_drift:.3} vs post {recovered:.3}"
     );
 
     // --- model_version strictly monotone -------------------------------
-    for pair in report.windows.windows(2) {
-        assert!(
-            pair[1].model_version >= pair[0].model_version,
-            "version went backwards"
-        );
-    }
-    let mut distinct: Vec<u64> = report.windows.iter().map(|s| s.model_version).collect();
-    distinct.dedup();
-    for pair in distinct.windows(2) {
-        assert!(pair[0] < pair[1], "versions not strictly monotone: {distinct:?}");
-    }
-    // install(1) + exactly one swap(2).
-    assert_eq!(handle.pool_stats().version, 2);
+    assert_versions_strictly_monotone(report);
+    // install(1) + canary program(2) + promote broadcast(3).
+    assert_eq!(handle.pool_stats().version, 3);
     let AutotuneEvent::Swapped { version, luts, brams, watts, .. } = swapped[0] else {
         unreachable!()
     };
-    assert_eq!(*version, 2);
+    assert_eq!(*version, 3);
 
     // --- swapped shape's ResourceEstimate is within the budget ---------
     assert!(*luts <= 1340 && *brams <= 14 && *watts <= 0.4);
@@ -170,20 +144,23 @@ fn autotuner_recovers_from_abrupt_drift_on_a_live_pool() {
         "deployed model exceeds budget: {est:?} @ {wattage} W"
     );
 
-    handle.shutdown();
-    join.join();
+    pool.shutdown();
 }
 
 #[test]
+#[ignore = "slow (live drift schedule + retrains); runs in the CI --ignored job"]
 fn recurring_drift_retunes_each_phase_change_without_storms() {
     // Recurring drift: the hysteresis must produce bounded, phase-aligned
-    // retunes rather than one per noisy window.
-    let w = test_workload();
+    // retunes rather than one per noisy window.  Canary gate off: this
+    // test pins the DETECTOR's retune cadence, and direct swaps keep
+    // the swap-per-trigger mapping 1:1 (the gate's own behavior is
+    // pinned by canary_live.rs and the autotune unit tests).
+    let w = drifty_workload();
     let sched = DriftSchedule::recurring(12, 192, 3, 0.4).seed(9);
-    let clean = sched.training_set(&w, 512);
-    let model0 = rttm::trainer::train_model(&w.shape, &clean, 4, 2);
+    let model0 = train_initial(&w, &sched, 512);
 
-    let (handle, mut join) = spawn_pool(EngineSpec::base(), 2);
+    let pool = spawn_harness(EngineSpec::base(), 2);
+    let handle = pool.handle.clone();
     let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited());
     cfg.accuracy_floor = 0.85;
     cfg.patience = 2;
@@ -192,6 +169,7 @@ fn recurring_drift_retunes_each_phase_change_without_storms() {
     cfg.background = false; // inline: deterministic retune timing
     cfg.retrain_corpus = 384;
     cfg.epochs = 3;
+    cfg.canary_fraction = 0.0; // direct swaps (see above)
     let mut tuner = Autotuner::new(handle.clone(), w.shape.clone(), cfg);
     tuner.install(model0).unwrap();
 
@@ -210,12 +188,7 @@ fn recurring_drift_retunes_each_phase_change_without_storms() {
     assert!(swaps >= 1, "recurring drift never retuned: {:?}", tuner.report.events);
     assert!(swaps <= 3, "retune storm: {swaps} swaps in 12 windows");
     // Versions strictly monotone here too.
-    let mut versions: Vec<u64> = tuner.report.windows.iter().map(|s| s.model_version).collect();
-    versions.dedup();
-    for pair in versions.windows(2) {
-        assert!(pair[0] < pair[1]);
-    }
+    assert_versions_strictly_monotone(&tuner.report);
 
-    handle.shutdown();
-    join.join();
+    pool.shutdown();
 }

@@ -1,0 +1,169 @@
+//! Canary-gate acceptance on a live pool: under an abrupt drift
+//! schedule, a BAD candidate is rejected at the canary stage — at most
+//! one replica ever serves it, and pool predictions stay byte-identical
+//! to the baseline for the entire canary window — then a GOOD candidate
+//! promotes; versions stay strictly monotone and a concurrent client
+//! sees zero request errors throughout.
+//!
+//! Slow (full drift schedule, real windows): `#[ignore]`d out of tier-1
+//! and run by the CI `cargo test -- --ignored` job.
+
+#[path = "common/pool_harness.rs"]
+mod pool_harness;
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use pool_harness::{
+    assert_versions_strictly_monotone, drifty_workload, spawn_harness, train_initial, Traffic,
+};
+use rttm::coordinator::autotune::{AutotuneConfig, AutotuneEvent, Autotuner, ShadowTrainer};
+use rttm::coordinator::hyperparam::{BudgetedSearch, BudgetedTrial};
+use rttm::coordinator::{CanaryVerdict, EngineSpec, InferenceService};
+use rttm::datasets::synth::Dataset;
+use rttm::datasets::workloads::DriftSchedule;
+use rttm::model_cost::energy::EnergyModel;
+use rttm::model_cost::resources::{estimate, fitted_config, ResourceBudget};
+use rttm::TMModel;
+
+/// Deterministic trainer that hands out a scripted sequence of
+/// candidates, one per retrain — first the bad one, then the good one.
+struct QueueTrainer(Mutex<VecDeque<TMModel>>);
+
+impl ShadowTrainer for QueueTrainer {
+    fn retrain(&self, _train: &Dataset, _valid: &Dataset) -> BudgetedSearch {
+        let model = self
+            .0
+            .lock()
+            .unwrap()
+            .pop_front()
+            .expect("scripted trainer exhausted: unexpected extra retune");
+        let cfg = fitted_config(&model);
+        let est = estimate(&cfg);
+        let watts = EnergyModel::for_config(&cfg).watts;
+        BudgetedSearch {
+            trials: vec![BudgetedTrial {
+                t: model.shape.t,
+                s: model.shape.s,
+                clauses: model.shape.clauses,
+                accuracy: 0.0,
+                instructions: rttm::isa::instruction_count(&model),
+                estimate: est,
+                watts,
+                admitted: true,
+            }],
+            winner: Some(model),
+        }
+    }
+}
+
+#[test]
+#[ignore = "slow (live drift schedule); runs in the CI --ignored job"]
+fn bad_candidate_rejected_at_canary_then_good_candidate_promotes() {
+    let w = drifty_workload();
+    // 14 windows x 256 samples; drift 0.4 from window 3 onward.
+    let sched = DriftSchedule::abrupt(14, 256, 3, 0.4).seed(7);
+    let model0 = train_initial(&w, &sched, 512);
+
+    // The BAD candidate: untrained, tautology killers only — predicts
+    // one class everywhere.  The GOOD candidate: trained on drifted
+    // draws from the same universe, NOT overlapping the monitored
+    // stream (the stream is sliced past sample 768; these are 0..512).
+    let bad = TMModel::empty(w.shape.clone());
+    let good = rttm::trainer::train_model(&w.shape, &w.drifted_dataset(512, sched.seed, 0.4), 4, 5);
+
+    let pool = spawn_harness(EngineSpec::base(), 3);
+    let handle = pool.handle.clone();
+
+    let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited());
+    cfg.accuracy_floor = 0.85;
+    cfg.patience = 2;
+    cfg.validation_windows = 1;
+    cfg.background = false; // inline retrains: deterministic timeline
+    cfg.canary_fraction = 0.25;
+    cfg.canary_min_windows = 2;
+    let trainer = Arc::new(QueueTrainer(Mutex::new(VecDeque::from([bad, good.clone()]))));
+    let mut tuner = Autotuner::with_trainer(handle.clone(), w.shape.clone(), cfg, trainer);
+    tuner.install(model0).unwrap();
+
+    // Baseline answers on a fixed probe, pinned before any canary: the
+    // pool (minus canary) must keep producing EXACTLY these for as long
+    // as no promote happened.
+    let probe: Vec<Vec<u8>> = sched.training_set(&w, 192).xs;
+    let baseline_preds = handle.infer(probe.clone()).unwrap();
+
+    // Zero-request-error witness across the whole deployment.
+    let traffic = Traffic::start(handle.clone(), probe[..32].to_vec());
+
+    let mut canary_probes = 0usize;
+    let mut promoted = false;
+    for win in &sched.stream(&w) {
+        tuner.observe_window(&win.xs, &win.ys).unwrap();
+        promoted = promoted
+            || tuner
+                .report
+                .events
+                .iter()
+                .any(|e| matches!(e, AutotuneEvent::CanaryPromoted { .. }));
+        if tuner.phase_name() == "canarying" && !promoted {
+            // A candidate (bad OR good) is live on one replica: the
+            // pool-minus-canary answers must be byte-identical to the
+            // pre-canary baseline — live traffic cannot observe the
+            // candidate, however the verdict turns out.
+            assert_eq!(
+                handle.infer(probe.clone()).unwrap(),
+                baseline_preds,
+                "live traffic observed a canary candidate"
+            );
+            canary_probes += 1;
+        }
+    }
+    traffic.stop_assert_clean();
+    assert!(canary_probes >= 2, "canary phases were never probed");
+
+    // --- the story: reject then promote, in that order ----------------
+    let report = &tuner.report;
+    assert_eq!(report.canaries.len(), 2, "two canary evaluations: {:?}", report.events);
+    assert_eq!(report.canaries[0].verdict, CanaryVerdict::Reject);
+    assert_eq!(report.canaries[1].verdict, CanaryVerdict::Promote);
+    // The bad candidate lost every paired window; the good one won all.
+    assert!(report.canaries[0].windows.iter().all(|p| !p.candidate_wins));
+    assert!(report.canaries[1].windows.iter().all(|p| p.candidate_wins));
+    assert!(report.events.iter().any(|e| matches!(e, AutotuneEvent::CanaryRejected { .. })));
+    assert!(report.events.iter().any(|e| matches!(e, AutotuneEvent::CanaryPromoted { .. })));
+    // The rejected candidate never reached a Swapped broadcast: exactly
+    // one swap (the promote).
+    let swaps = report
+        .events
+        .iter()
+        .filter(|e| matches!(e, AutotuneEvent::Swapped { .. }))
+        .count();
+    assert_eq!(swaps, 1);
+    assert!(!report.events.iter().any(|e| matches!(e, AutotuneEvent::RolledBack { .. })));
+
+    // ≤ 1 replica ever served each candidate: every canary staged on
+    // the same dedicated replica (the highest-index one of the
+    // 3-replica pool), and no canary is left active.
+    for e in &report.events {
+        if let AutotuneEvent::CanaryStarted { replica, .. } = e {
+            assert_eq!(*replica, 2, "canary must use the dedicated replica");
+        }
+    }
+    assert!(handle.canary_replica().is_none());
+
+    // --- the promoted model serves the whole pool ----------------------
+    let mut reference = InferenceService::new(EngineSpec::base().build());
+    reference.reprogram(&good).unwrap();
+    let want_good = reference.infer_all(&probe).unwrap();
+    for _ in 0..6 {
+        assert_eq!(handle.infer(probe.clone()).unwrap(), want_good);
+    }
+    assert_eq!(tuner.current_model().unwrap(), &good);
+
+    // --- versions strictly monotone through every lifecycle ------------
+    // install(1), canary bad(2), dismiss(3), canary good(4), promote(5).
+    assert_versions_strictly_monotone(report);
+    assert_eq!(handle.pool_stats().version, 5);
+
+    pool.shutdown();
+}

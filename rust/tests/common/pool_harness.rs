@@ -1,0 +1,155 @@
+//! Shared serving-pool test harness: spawn helpers, trained fixtures,
+//! drift-schedule workloads, a background request generator, and the
+//! assertion helpers every pool integration test needs.
+//!
+//! Included per test binary via `#[path = "common/pool_harness.rs"]`
+//! (integration tests are separate crates; this is the same pattern the
+//! benches use for `benches/common`).  Keeps `serving_pool.rs`,
+//! `autotune_live.rs` and `canary_live.rs` from re-implementing the
+//! same setup three times.
+#![allow(dead_code)]
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use rttm::coordinator::autotune::AutotuneReport;
+use rttm::coordinator::server::spawn_pool;
+use rttm::coordinator::{EngineSpec, PoolJoin, ServiceHandle};
+use rttm::datasets::synth::{Dataset, SynthSpec};
+use rttm::datasets::workloads::{DriftSchedule, Workload};
+use rttm::{TMModel, TMShape};
+
+/// A trained model + the dataset it was trained on, at the small scale
+/// the pool regression tests use (16 features, 4 classes, 8 clauses).
+pub fn trained(seed: u64) -> (TMModel, Dataset) {
+    let shape = TMShape::synthetic(16, 4, 8);
+    let data = SynthSpec::new(16, 4, 192).noise(0.05).seed(seed).generate();
+    let model = rttm::trainer::train_model(&shape, &data, 4, seed + 1);
+    (model, data)
+}
+
+/// The drift-schedule integration workload shared by the live autotune
+/// and canary tests.
+pub fn drifty_workload() -> Workload {
+    Workload {
+        name: "drifty",
+        shape: TMShape::synthetic(16, 3, 10),
+        noise: 0.05,
+        informative: 1.0,
+        paper_accuracy: None,
+        recalibration: "integration test",
+    }
+}
+
+/// Train the initially-deployed model on fresh draws PAST the monitored
+/// stream (same prototype universe), so windowed accuracy measures
+/// generalization, never memorized training samples.
+pub fn train_initial(w: &Workload, sched: &DriftSchedule, n: usize) -> TMModel {
+    rttm::trainer::train_model(&w.shape, &sched.training_set(w, n), 4, 2)
+}
+
+/// A spawned replica pool plus its joiner, with one-call teardown.
+pub struct PoolHarness {
+    pub handle: ServiceHandle,
+    pub join: PoolJoin,
+}
+
+pub fn spawn_harness(spec: EngineSpec, replicas: usize) -> PoolHarness {
+    let (handle, join) = spawn_pool(spec, replicas);
+    PoolHarness { handle, join }
+}
+
+impl PoolHarness {
+    /// Shut the pool down and join every worker.
+    pub fn shutdown(mut self) {
+        self.handle.shutdown();
+        self.join.join();
+    }
+}
+
+/// Background request generator: one client thread hammering the pool
+/// with a fixed request until stopped, counting successes and failures.
+/// The canonical "zero request errors during the whole deployment"
+/// witness — start it before the scenario, `stop_assert_clean` after.
+pub struct Traffic {
+    stop: Arc<AtomicBool>,
+    served: Arc<AtomicU64>,
+    failed: Arc<AtomicU64>,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl Traffic {
+    pub fn start(handle: ServiceHandle, rows: Vec<Vec<u8>>) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicU64::new(0));
+        let failed = Arc::new(AtomicU64::new(0));
+        let thread = {
+            let stop = Arc::clone(&stop);
+            let served = Arc::clone(&served);
+            let failed = Arc::clone(&failed);
+            std::thread::spawn(move || {
+                let n = rows.len();
+                while !stop.load(Ordering::Relaxed) {
+                    match handle.infer(rows.clone()) {
+                        Ok(preds) => {
+                            assert_eq!(preds.len(), n, "malformed reply");
+                            served.fetch_add(preds.len() as u64, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    std::thread::yield_now();
+                }
+            })
+        };
+        Traffic { stop, served, failed, thread }
+    }
+
+    /// Inferences served so far (live, for "traffic flowed during X"
+    /// assertions).
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
+    }
+
+    /// Stop the client; returns (served, failed).
+    pub fn stop(self) -> (u64, u64) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.thread.join().expect("traffic client panicked");
+        (self.served.load(Ordering::Relaxed), self.failed.load(Ordering::Relaxed))
+    }
+
+    /// Stop and assert a clean deployment: zero request errors, some
+    /// traffic actually served.  Returns the served count.
+    pub fn stop_assert_clean(self) -> u64 {
+        let (served, failed) = self.stop();
+        assert_eq!(failed, 0, "request errors during deployment");
+        assert!(served > 0, "no traffic flowed");
+        served
+    }
+}
+
+/// Window-observed model versions must never go backwards.  (Strict
+/// increase across DISTINCT adjacent values follows: non-decreasing
+/// plus unequal is greater.)
+pub fn assert_versions_strictly_monotone(report: &AutotuneReport) {
+    for pair in report.windows.windows(2) {
+        assert!(
+            pair[1].model_version >= pair[0].model_version,
+            "version went backwards"
+        );
+    }
+}
+
+/// Mean labeled accuracy over a half-open window index range.
+pub fn mean_accuracy(report: &AutotuneReport, range: std::ops::Range<usize>) -> f64 {
+    let n = range.len().max(1);
+    range
+        .map(|i| report.windows[i].accuracy.expect("labeled window"))
+        .sum::<f64>()
+        / n as f64
+}

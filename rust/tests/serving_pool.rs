@@ -1,28 +1,24 @@
 //! Regression coverage for the replica-pool serving front-end
 //! (coordinator::server): the hardened request path, byte-identical
 //! pool predictions, and the version fence under concurrent
-//! program+infer load.
+//! program+infer load.  Setup lives in the shared pool harness.
+
+#[path = "common/pool_harness.rs"]
+mod pool_harness;
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+use pool_harness::{spawn_harness, trained, Traffic};
 use rttm::accel::core::CoreError;
-use rttm::coordinator::server::{spawn_pool, ServeError};
+use rttm::coordinator::server::ServeError;
 use rttm::coordinator::{EngineSpec, InferenceService};
-use rttm::datasets::synth::{Dataset, SynthSpec};
-use rttm::{TMModel, TMShape};
-
-fn trained(seed: u64) -> (TMModel, Dataset) {
-    let shape = TMShape::synthetic(16, 4, 8);
-    let data = SynthSpec::new(16, 4, 192).noise(0.05).seed(seed).generate();
-    let model = rttm::trainer::train_model(&shape, &data, 4, seed + 1);
-    (model, data)
-}
 
 #[test]
 fn pool_survives_malformed_requests_and_keeps_serving() {
     let (model, data) = trained(3);
-    let (h, mut join) = spawn_pool(EngineSpec::base(), 4);
+    let pool = spawn_harness(EngineSpec::base(), 4);
+    let h = pool.handle.clone();
     h.program(model).unwrap();
 
     let good = h.infer(data.xs.clone()).unwrap();
@@ -50,8 +46,7 @@ fn pool_survives_malformed_requests_and_keeps_serving() {
     assert_eq!(stats.total.errors, 2);
     assert!(stats.replicas.iter().all(|r| r.alive));
     assert_eq!(stats.replicas.iter().map(|r| r.respawns).sum::<u64>(), 0);
-    h.shutdown();
-    join.join();
+    pool.shutdown();
 }
 
 #[test]
@@ -61,13 +56,13 @@ fn pool_predictions_match_single_service_exactly() {
     single.reprogram(&model).unwrap();
     let want = single.infer_all(&data.xs).unwrap();
 
-    let (h, mut join) = spawn_pool(EngineSpec::base(), 4);
-    h.program(model.clone()).unwrap();
+    let pool = spawn_harness(EngineSpec::base(), 4);
+    pool.handle.program(model.clone()).unwrap();
     // Concurrent clients: every reply must be byte-identical to the
     // single-service answer no matter which replica served it.
     let mut clients = Vec::new();
     for _ in 0..8 {
-        let h = h.clone();
+        let h = pool.handle.clone();
         let xs = data.xs.clone();
         let want = want.clone();
         clients.push(std::thread::spawn(move || {
@@ -79,25 +74,24 @@ fn pool_predictions_match_single_service_exactly() {
     for c in clients {
         c.join().unwrap();
     }
-    h.shutdown();
-    join.join();
+    pool.shutdown();
 
     // Same through the multi-core spec.
     let mut single_mc = InferenceService::new(EngineSpec::five_core().build());
     single_mc.reprogram(&model).unwrap();
     assert_eq!(single_mc.infer_all(&data.xs).unwrap(), want);
-    let (h, mut join) = spawn_pool(EngineSpec::five_core(), 2);
-    h.program(model).unwrap();
-    assert_eq!(h.infer(data.xs.clone()).unwrap(), want);
-    h.shutdown();
-    join.join();
+    let pool = spawn_harness(EngineSpec::five_core(), 2);
+    pool.handle.program(model).unwrap();
+    assert_eq!(pool.handle.infer(data.xs.clone()).unwrap(), want);
+    pool.shutdown();
 }
 
 #[test]
 fn model_version_is_monotone_and_uniform_under_load() {
     let (model_a, data) = trained(21);
     let (model_b, _) = trained(22);
-    let (h, mut join) = spawn_pool(EngineSpec::base(), 4);
+    let pool = spawn_harness(EngineSpec::base(), 4);
+    let h = pool.handle.clone();
     h.program(model_a.clone()).unwrap();
 
     let stop = Arc::new(AtomicBool::new(false));
@@ -137,14 +131,14 @@ fn model_version_is_monotone_and_uniform_under_load() {
         t.join().unwrap();
     }
     assert_eq!(h.pool_stats().version, 7); // initial program + 6 rounds
-    h.shutdown();
-    join.join();
+    pool.shutdown();
 }
 
 #[test]
 fn injected_panic_respawns_and_answers_stay_correct() {
     let (model, data) = trained(31);
-    let (h, mut join) = spawn_pool(EngineSpec::base(), 2);
+    let pool = spawn_harness(EngineSpec::base(), 2);
+    let h = pool.handle.clone();
     h.program(model).unwrap();
     let want = h.infer(data.xs.clone()).unwrap();
 
@@ -161,6 +155,31 @@ fn injected_panic_respawns_and_answers_stay_correct() {
     let stats = h.pool_stats();
     assert_eq!(stats.replicas.iter().map(|r| r.respawns).sum::<u64>(), 4);
     assert!(stats.replicas.iter().all(|r| r.alive));
-    h.shutdown();
-    join.join();
+    pool.shutdown();
+}
+
+#[test]
+fn canary_isolation_holds_under_concurrent_traffic() {
+    let (model_a, data) = trained(41);
+    let (model_b, _) = trained(42);
+    let pool = spawn_harness(EngineSpec::base(), 3);
+    let h = pool.handle.clone();
+    h.program(model_a).unwrap();
+    let want = h.infer(data.xs.clone()).unwrap();
+
+    // Continuous live traffic through the whole canary lifecycle.
+    let traffic = Traffic::start(h.clone(), data.xs[..32].to_vec());
+    let replica = h.program_canary(model_b).unwrap();
+    assert_eq!(h.pool_stats().canary, Some(replica));
+    // Pool answers stay byte-identical to the baseline while the
+    // canary is up — live traffic never routes to the candidate.
+    for _ in 0..8 {
+        assert_eq!(h.infer(data.xs.clone()).unwrap(), want);
+    }
+    assert!(h.dismiss_canary().unwrap());
+    for _ in 0..4 {
+        assert_eq!(h.infer(data.xs.clone()).unwrap(), want);
+    }
+    traffic.stop_assert_clean();
+    pool.shutdown();
 }

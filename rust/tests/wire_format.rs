@@ -11,10 +11,17 @@
 
 use rttm::isa;
 use rttm::tm::model::TMModel;
-use rttm::tm::serialize::{from_bytes, to_bytes};
+use rttm::tm::serialize::{crc32, from_bytes, to_bytes, FileError};
 use rttm::TMShape;
 
 const GOLDEN: &[u8] = include_bytes!("fixtures/golden_v1.rttm");
+
+// Field boundaries of the golden file (62 bytes total):
+// magic 0..4 | version 4..6 | name_len 6..8 | name 8..22 |
+// features 22..26 | classes 26..30 | clauses 30..34 | T 34..38 |
+// s_milli 38..42 | count 42..46 | instrs 46..58 | crc 58..62.
+const COUNT_OFF: usize = 42;
+const BODY_END: usize = 58;
 
 /// The fixture's model: shape synthetic(4, 3, 4) — name
 /// "synth_4f_3m_4c", T = 1, s = 3.0 — with four includes and one empty
@@ -59,6 +66,120 @@ fn golden_instruction_words_are_pinned() {
     let (_, instrs) = from_bytes(GOLDEN).unwrap();
     let words: Vec<u16> = instrs.iter().map(|i| i.0).collect();
     assert_eq!(words, vec![0x0000, 0x000B, 0xC004, 0xA00F, 0x4000, 0x4003]);
+}
+
+/// What a mutated file must fail with — the EXACT variant, not just
+/// "some error".
+enum Expect {
+    Truncated,
+    TrailingBytes(usize),
+    BadCrc,
+    BadMagic,
+    BadVersion(u16),
+}
+
+fn assert_expected(name: &str, bytes: &[u8], expect: &Expect) {
+    let got = from_bytes(bytes);
+    match (expect, got) {
+        (Expect::Truncated, Err(FileError::Truncated { .. })) => {}
+        (Expect::TrailingBytes(extra), Err(FileError::TrailingBytes { extra: got })) => {
+            assert_eq!(got, *extra, "case {name:?}: wrong trailing-byte count")
+        }
+        (Expect::BadCrc, Err(FileError::BadCrc)) => {}
+        (Expect::BadMagic, Err(FileError::BadMagic)) => {}
+        (Expect::BadVersion(v), Err(FileError::BadVersion(got))) => {
+            assert_eq!(got, *v, "case {name:?}: wrong version surfaced")
+        }
+        (_, other) => panic!("case {name:?}: got {other:?}"),
+    }
+}
+
+/// Truncate the golden body at `cut` and re-seal the CRC, so the only
+/// remaining defect is the missing payload (what an adversary — or a
+/// torn write — controlling the file produces).
+fn truncated_resealed(cut: usize) -> Vec<u8> {
+    let mut bytes = GOLDEN[..cut].to_vec();
+    let crc = crc32(&bytes).to_le_bytes();
+    bytes.extend_from_slice(&crc);
+    bytes
+}
+
+fn resealed(mut bytes: Vec<u8>) -> Vec<u8> {
+    let body = bytes.len() - 4;
+    let crc = crc32(&bytes[..body]).to_le_bytes();
+    bytes[body..].copy_from_slice(&crc);
+    bytes
+}
+
+#[test]
+fn mutated_golden_corpus_fails_with_exact_variants() {
+    let mut corpus: Vec<(String, Vec<u8>, Expect)> = Vec::new();
+
+    // 1. CRC-resealed truncation at EVERY field boundary, and inside
+    //    every multi-byte field: always Truncated, never BadMagic, a
+    //    panic, or an allocation sized by the declared count.
+    for cut in [
+        0, 4, 5, 6, 7, 8, 15, 22, 24, 26, 28, 30, 32, 34, 36, 38, 40, 42, 44, 46, 47, 48, 52, 57,
+    ] {
+        corpus.push((
+            format!("resealed truncation at byte {cut}"),
+            truncated_resealed(cut),
+            Expect::Truncated,
+        ));
+    }
+
+    // 2. Truncation WITHOUT resealing: the CRC check fires first (the
+    //    trailer no longer matches the shortened body).
+    for cut in [22, 46] {
+        corpus.push((
+            format!("raw truncation at byte {cut}"),
+            GOLDEN[..cut].to_vec(),
+            Expect::BadCrc,
+        ));
+    }
+
+    // 3. Count off-by-one, both directions, CRC-valid.
+    let mut over = GOLDEN.to_vec();
+    over[COUNT_OFF..COUNT_OFF + 4].copy_from_slice(&7u32.to_le_bytes());
+    corpus.push(("count overstated by one".into(), resealed(over), Expect::Truncated));
+    let mut under = GOLDEN.to_vec();
+    under[COUNT_OFF..COUNT_OFF + 4].copy_from_slice(&5u32.to_le_bytes());
+    corpus.push((
+        "count understated by one".into(),
+        resealed(under),
+        Expect::TrailingBytes(2),
+    ));
+
+    // 4. Adversarial count = u32::MAX, CRC-valid: must fail Truncated
+    //    BEFORE any allocation sized by the claim (~8 GB otherwise).
+    let mut huge = GOLDEN.to_vec();
+    huge[COUNT_OFF..COUNT_OFF + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    corpus.push(("count u32::MAX".into(), resealed(huge), Expect::Truncated));
+
+    // 5. Flipped CRC bits.
+    let mut crc_flip = GOLDEN.to_vec();
+    crc_flip[BODY_END] ^= 0x01;
+    corpus.push(("flipped CRC low bit".into(), crc_flip, Expect::BadCrc));
+    let mut crc_flip_hi = GOLDEN.to_vec();
+    crc_flip_hi[BODY_END + 3] ^= 0x80;
+    corpus.push(("flipped CRC high bit".into(), crc_flip_hi, Expect::BadCrc));
+
+    // 6. Wrong magic / unsupported version, CRC-valid.
+    let mut magic = GOLDEN.to_vec();
+    magic[0] = b'X';
+    corpus.push(("wrong magic".into(), resealed(magic), Expect::BadMagic));
+    let mut version = GOLDEN.to_vec();
+    version[4..6].copy_from_slice(&2u16.to_le_bytes());
+    corpus.push(("version 2".into(), resealed(version), Expect::BadVersion(2)));
+
+    // 7. Body-flip anywhere without resealing: BadCrc.
+    let mut flip = GOLDEN.to_vec();
+    flip[30] ^= 0x40;
+    corpus.push(("unsealed body flip".into(), flip, Expect::BadCrc));
+
+    for (name, bytes, expect) in &corpus {
+        assert_expected(name, bytes, expect);
+    }
 }
 
 #[test]
