@@ -186,8 +186,8 @@ fn main() {
         "single core, run_batches:      {:>10.0} batches/s",
         per(stream_ns)
     );
-    json.push(("single_run_batch_loop_batches_per_s".into(), per(loop_ns)));
-    json.push(("single_run_batches_batches_per_s".into(), per(stream_ns)));
+    push_throughput(&mut json, "single_run_batch_loop_batches_per_s", per(loop_ns), 32, 1);
+    push_throughput(&mut json, "single_run_batches_batches_per_s", per(stream_ns), 32, 1);
 
     // 5-core stock memories are shallow; deepen to fit the model.
     let deep = AccelConfig::multicore_core().with_depths(need, 2048);
@@ -213,8 +213,8 @@ fn main() {
         per(threads_ns),
         serial_ns / threads_ns
     );
-    json.push(("multicore_serial_batches_per_s".into(), per(serial_ns)));
-    json.push(("multicore_threads_batches_per_s".into(), per(threads_ns)));
+    push_throughput(&mut json, "multicore_serial_batches_per_s", per(serial_ns), 32, 1);
+    push_throughput(&mut json, "multicore_threads_batches_per_s", per(threads_ns), 32, 5);
     json.push(("multicore_thread_speedup".into(), serial_ns / threads_ns));
 
     // 2b. Scheduler end-to-end (pack + stream + unpack).
@@ -233,7 +233,70 @@ fn main() {
         many_rows.len(),
         wall.as_secs_f64() * 1e3
     );
-    json.push(("scheduler_inferences_per_s".into(), e2e_per_s));
+    // classify_rows_core auto-picks the kernel from the row count
+    // (sliced at SLICED_MIN_ROWS+; smoke streams can sit below it).
+    let scheduler_lanes = if many_rows.len() >= engine::SLICED_MIN_ROWS { 64 } else { 32 };
+    push_throughput(&mut json, "scheduler_inferences_per_s", e2e_per_s, scheduler_lanes, 1);
+
+    // 2b'. Bit-sliced row-parallel kernel (the §Bit-sliced tentpole):
+    //      64 rows per bitwise op over transposed literal planes vs the
+    //      32-lane per-batch walk.  EQUIVALENCE-GATED: predictions must
+    //      be byte-identical before anything is timed — a fast wrong
+    //      kernel must fail the bench, not set a record.
+    println!("\n--- bit-sliced kernel (64 rows per bitwise op, single core) ---");
+    let sliced_rows: Vec<Vec<u8>> = (0..32 * scale(256))
+        .map(|i| data.xs[i % data.len()].clone())
+        .collect();
+    assert!(
+        sliced_rows.len() >= engine::SLICED_MIN_ROWS,
+        "bench batch must clear the sliced threshold ({} rows)",
+        sliced_rows.len()
+    );
+    let (want_preds, _) = engine::classify_rows_core_soa(&mut core, &sliced_rows).unwrap();
+    let (got_preds, _) = engine::classify_rows_core_sliced(&mut core, &sliced_rows).unwrap();
+    assert_eq!(
+        want_preds, got_preds,
+        "sliced kernel must be byte-identical to the SoA path before timing"
+    );
+
+    let soa_bulk_ns = bench_ns(2, scale(20), || {
+        let (p, _) = engine::classify_rows_core_soa(&mut core, &sliced_rows).unwrap();
+        std::hint::black_box(p.len());
+    });
+    let sliced_bulk_ns = bench_ns(2, scale(20), || {
+        let (p, _) = engine::classify_rows_core_sliced(&mut core, &sliced_rows).unwrap();
+        std::hint::black_box(p.len());
+    });
+    let n_sliced = sliced_rows.len() as f64;
+    let soa_inf_s = n_sliced / (soa_bulk_ns / 1e9);
+    let sliced_inf_s = n_sliced / (sliced_bulk_ns / 1e9);
+    println!(
+        "32-lane SoA bulk walk:         {:>10.0} inferences/s ({} rows)",
+        soa_inf_s,
+        sliced_rows.len()
+    );
+    println!(
+        "64-lane sliced kernel:         {:>10.0} inferences/s (speedup {:.2}x)",
+        sliced_inf_s,
+        sliced_inf_s / soa_inf_s
+    );
+    push_throughput(&mut json, "soa_single_core_inf_per_s", soa_inf_s, 32, 1);
+    push_throughput(&mut json, "sliced_single_core_inf_per_s", sliced_inf_s, 64, 1);
+    json.push(("sliced_speedup_vs_soa".into(), sliced_inf_s / soa_inf_s));
+
+    // 5-core threaded sliced path (equivalence-gated like the rest).
+    let (mc_preds, _) = engine::classify_rows_multicore(&mut mc_threads, &sliced_rows).unwrap();
+    assert_eq!(mc_preds, want_preds, "multicore sliced path must match");
+    let mc_sliced_ns = bench_ns(2, scale(20), || {
+        let (p, _) = engine::classify_rows_multicore(&mut mc_threads, &sliced_rows).unwrap();
+        std::hint::black_box(p.len());
+    });
+    let mc_sliced_inf_s = n_sliced / (mc_sliced_ns / 1e9);
+    println!(
+        "64-lane sliced, 5-core:        {:>10.0} inferences/s",
+        mc_sliced_inf_s
+    );
+    push_throughput(&mut json, "sliced_multicore_inf_per_s", mc_sliced_inf_s, 64, 5);
 
     // 2c. Serving front-end: single-worker vs replica pool (the
     //     coordinator::server request path, queue + reply channels
@@ -309,7 +372,11 @@ fn main() {
     }
     let single = measured[0].1;
     let pool = measured[1].1;
-    json.extend(measured);
+    // 1024-row requests ride the 64-lane sliced kernel inside each
+    // replica; host threads = replicas serving.
+    for (i, (k, v)) in measured.into_iter().enumerate() {
+        push_throughput(&mut json, &k, v, 64, if i == 0 { 1 } else { pool_replicas });
+    }
     json.push(("serving_pool_replicas".into(), pool_replicas as f64));
     json.push(("serving_pool_speedup".into(), pool / single));
     println!(
@@ -403,7 +470,14 @@ fn main() {
             "served during retune:    {rps_during_retune:>10.0} inferences/s (pool stays live)"
         );
         json.push(("autotune_detect_to_recover_ms".into(), detect_to_recover_ms));
-        json.push(("autotune_served_during_retune_inf_per_s".into(), rps_during_retune));
+        // 32-row client requests (below the sliced threshold), 4 replicas.
+        push_throughput(
+            &mut json,
+            "autotune_served_during_retune_inf_per_s",
+            rps_during_retune,
+            32,
+            4,
+        );
         json.push((
             "autotune_swaps".into(),
             tuner
@@ -492,7 +566,14 @@ fn main() {
             "served during eval:      {eval_rps:>10.0} inferences/s (pool minus canary stays live)"
         );
         json.push(("canary_promote_latency_ms".into(), promote_ms));
-        json.push(("canary_served_during_eval_inf_per_s".into(), eval_rps));
+        // 32-row client requests, 4 replicas (minus the canary).
+        push_throughput(
+            &mut json,
+            "canary_served_during_eval_inf_per_s",
+            eval_rps,
+            32,
+            4,
+        );
         json.push(("canary_eval_windows".into(), eval_windows as f64));
         h.shutdown();
         join.join();
@@ -575,6 +656,23 @@ fn main() {
     }
 
     write_json("BENCH_hotpath.json", &json);
+}
+
+/// Push one throughput key plus its machine-readable context — the
+/// rows-per-batch of the kernel that produced it and the host threads
+/// engaged — so BENCH trajectories stay comparable across PRs when
+/// either changes (a 64-lane number must never be mistaken for a
+/// 32-lane regression or vice versa).
+fn push_throughput(
+    json: &mut Vec<(String, f64)>,
+    key: &str,
+    value: f64,
+    rows_per_batch: usize,
+    threads: usize,
+) {
+    json.push((key.to_string(), value));
+    json.push((format!("{key}_rows_per_batch"), rows_per_batch as f64));
+    json.push((format!("{key}_threads"), threads as f64));
 }
 
 /// Flat-object JSON writer (no serde in the offline vendor set).

@@ -26,7 +26,7 @@
 use super::fifo::OutputFifo;
 use super::memory::{FeatureMemory, InstrMemory, MemError};
 use super::stream::{decode_stream, HeaderWidth, Message, StreamCodec, StreamError};
-use crate::isa::{self, Instr, SoaProgram};
+use crate::isa::{self, Instr, SlicedBatch, SlicedProgram, SoaProgram};
 
 /// Deploy-time configuration of one core (the Fig 8 "one-time
 /// implementation" choices).
@@ -150,6 +150,57 @@ impl Default for BatchResult {
     }
 }
 
+/// Result (and reusable buffers) of one bit-sliced bulk run — any row
+/// count, 64 rows per bitwise op (§Bit-sliced in EXPERIMENTS.md).
+///
+/// Observable values are byte-identical to running the same rows
+/// through [`Core::run_batch_into`] in 32-row chunks: the per-row
+/// `class_sums`, the per-row argmax `preds` (padding rows argmax the
+/// all-zero-feature row, exactly like the unused lanes of a ragged
+/// batch), and the simulated cycle model — the sliced kernel is a HOST
+/// fast path, never a different accelerator.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SlicedResult {
+    /// Class-major per-row sums: `class_sums[class * padded_rows + row]`.
+    pub class_sums: Vec<i32>,
+    /// Row count including the padding lanes of the last 64-row slice.
+    pub padded_rows: usize,
+    /// Real rows of the run.
+    pub rows: usize,
+    /// argmax per padded row (first-max tie-break, like `argmax_lanes`).
+    pub preds: Vec<u8>,
+    /// Simulated cycles of ONE equivalent 32-row batch.  Every batch of
+    /// a run costs the same (the packed word count is the feature
+    /// count, full or ragged), so per-batch cycles times `batches` is
+    /// the run's total.
+    pub batch_cycles: CycleStats,
+    /// 32-row batches the equivalent SoA walk would run
+    /// (`rows.div_ceil(32)`).
+    pub batches: u64,
+}
+
+impl SlicedResult {
+    /// One row's sum for one class.
+    #[inline]
+    pub fn class_sum(&self, class: usize, row: usize) -> i32 {
+        self.class_sums[class * self.padded_rows + row]
+    }
+
+    /// Classes of the programmed model this run evaluated.
+    pub fn classes(&self) -> usize {
+        if self.padded_rows == 0 {
+            0
+        } else {
+            self.class_sums.len() / self.padded_rows
+        }
+    }
+
+    /// Total simulated cycles of the run (all batches).
+    pub fn total_cycles(&self) -> u64 {
+        self.batch_cycles.total() * self.batches
+    }
+}
+
 /// Errors surfaced by the core's stream front-end.
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum CoreError {
@@ -195,9 +246,19 @@ pub struct Core {
     pub clauses: usize,
     /// Predecoded SoA program (rebuilt in place on every reprogram).
     prog: SoaProgram,
+    /// The 64-lane derivation of `prog` (rebuilt alongside it).
+    sliced: SlicedProgram,
     /// Reusable result scratch for the convenience entry points
     /// (`run_rows`): keeps steady-state serving allocation-free.
     scratch: BatchResult,
+    /// Reusable transpose scratch for `run_rows_sliced` (the pack-once
+    /// half of the sliced path).
+    sliced_batch: SlicedBatch,
+    /// Reusable clause accumulator of the sliced walk (one `u64` per
+    /// 64-row slice).
+    sliced_cur: Vec<u64>,
+    /// Reusable result scratch for the sliced convenience entry points.
+    sliced_scratch: SlicedResult,
     /// Lifetime cycle counters.
     pub stats: CycleStats,
     /// Batches inferred since power-up.
@@ -218,7 +279,11 @@ impl Core {
             classes: 0,
             clauses: 0,
             prog: SoaProgram::default(),
+            sliced: SlicedProgram::default(),
             scratch: BatchResult::default(),
+            sliced_batch: SlicedBatch::default(),
+            sliced_cur: Vec::new(),
+            sliced_scratch: SlicedResult::default(),
             stats: CycleStats::default(),
             batches_run: 0,
             trace_enabled: false,
@@ -236,6 +301,7 @@ impl Core {
         self.classes = 0;
         self.clauses = 0;
         self.prog.clear();
+        self.sliced.clear();
         self.trace.clear();
     }
 
@@ -272,8 +338,13 @@ impl Core {
             self.classes = 0;
             self.clauses = 0;
             self.prog.clear();
+            self.sliced.clear();
             return Err(e.into());
         }
+        // Derive the 64-lane twin (buffers reused; exclude-only and
+        // tautology-killer clauses resolved here so the sliced inner
+        // loop stays branch-free).
+        isa::derive_sliced_into(&self.prog, classes, &mut self.sliced);
         // 2 header words + payload, one word per cycle — counted only
         // for accepted streams so lifetime stats match a core that
         // never saw a rejected one.
@@ -419,12 +490,137 @@ impl Core {
         Ok(preds[..n].iter().map(|&p| p as usize).collect())
     }
 
+    /// Execute the 64-lane bit-sliced kernel over a transposed batch,
+    /// overwriting `out` in place (zero heap allocation once `out`'s
+    /// buffers have capacity).  Observable behavior — per-row sums,
+    /// preds, simulated cycles, FIFO contents, lifetime counters — is
+    /// byte-identical to running the same rows through
+    /// [`Self::run_batch_into`] in 32-row chunks; only host wall-clock
+    /// changes (§Bit-sliced in EXPERIMENTS.md).  The sliced path does
+    /// not record pipeline traces (use `run_batch` for the Fig 5
+    /// diagram).
+    pub fn run_sliced_into(
+        &mut self,
+        batch: &SlicedBatch,
+        out: &mut SlicedResult,
+    ) -> Result<(), CoreError> {
+        if !self.is_programmed() {
+            return Err(CoreError::NotProgrammed);
+        }
+        if batch.rows == 0 {
+            return Err(CoreError::BadBatch { rows: 0, reason: "empty request" });
+        }
+        // Bounds parity with `run_batch`: the UNDERIVED program's
+        // largest feature address must sit inside this batch (the
+        // derivation may have dropped the clause holding it).
+        if let Some(max_feat) = self.prog.max_feat {
+            if max_feat as usize >= batch.features {
+                return Err(CoreError::Isa(isa::IsaError::OffsetOverrun {
+                    index: 0,
+                    ta: 2 * max_feat as usize,
+                    literals: 2 * batch.features,
+                }));
+            }
+        }
+        // Capacity parity: a batch the Feature Memory cannot hold is
+        // rejected with the same typed error either way.
+        if batch.features > self.cfg.feature_depth {
+            return Err(CoreError::Mem(MemError::FeatureOverflow {
+                need: batch.features,
+                depth: self.cfg.feature_depth,
+            }));
+        }
+
+        let padded = batch.padded_rows();
+        out.rows = batch.rows;
+        out.padded_rows = padded;
+        out.class_sums.clear();
+        out.class_sums.resize(self.classes * padded, 0);
+        self.sliced
+            .execute_into(batch, &mut out.class_sums, &mut self.sliced_cur);
+
+        argmax_rows(&out.class_sums, padded, self.classes, &mut out.preds);
+
+        // Fig 5 timing of the EQUIVALENT 32-lane walk: every 32-row
+        // batch of this run costs the same (the packed word count is
+        // the feature count, full or ragged), and resolved clauses
+        // still cost their commit cycle.
+        let n = self.imem.len() as u64;
+        out.batch_cycles = CycleStats {
+            program: 0,
+            feature_load: 2 + self.codec.feature_payload_len(batch.features) as u64,
+            execute: match self.cfg.pipeline {
+                PipelineMode::Pipelined => {
+                    if n == 0 {
+                        0
+                    } else {
+                        3 + n
+                    }
+                }
+                PipelineMode::Iterative => 4 * n,
+            },
+            commit: self.prog.clause_count() as u64,
+            argmax: self.classes as u64,
+            fifo: (32 * 8 / 32) as u64,
+        };
+        out.batches = (batch.rows as u64).div_ceil(32);
+
+        // Observable side effects of the equivalent per-batch walk:
+        // the FIFO sees exactly ceil(rows/32) batches of 32 preds
+        // (padding rows argmax the all-zero-feature row, matching the
+        // unused lanes of a ragged batch), lifetime counters advance
+        // by `batches` worth of cycles.  `padded >= batches * 32`
+        // always: ceil(r/64)*64 >= ceil(r/32)*32.
+        self.trace.clear();
+        for chunk in out.preds[..out.batches as usize * 32].chunks(32) {
+            self.fifo.push_batch(chunk);
+        }
+        self.accumulate_scaled(&out.batch_cycles, out.batches);
+        self.batches_run += out.batches;
+        Ok(())
+    }
+
+    /// Pack `rows` (any count >= 1) into the core-owned transpose
+    /// scratch and run the sliced kernel into the core-owned result
+    /// scratch; returns a borrow of that result.  The bulk scheduler's
+    /// entry point — steady-state serving performs no heap allocation.
+    pub fn run_rows_sliced_ref(&mut self, rows: &[Vec<u8>]) -> Result<&SlicedResult, CoreError> {
+        if rows.is_empty() {
+            return Err(CoreError::BadBatch { rows: 0, reason: "empty request" });
+        }
+        let mut batch = std::mem::take(&mut self.sliced_batch);
+        isa::pack_literals_sliced_into(rows, &mut batch);
+        let mut out = std::mem::take(&mut self.sliced_scratch);
+        let res = self.run_sliced_into(&batch, &mut out);
+        self.sliced_batch = batch;
+        self.sliced_scratch = out;
+        res.map(|()| &self.sliced_scratch)
+    }
+
+    /// Convenience mirror of [`Self::run_rows`] on the sliced kernel:
+    /// any row count, per-datapoint predictions.
+    pub fn run_rows_sliced(&mut self, rows: &[Vec<u8>]) -> Result<Vec<usize>, CoreError> {
+        let n = rows.len();
+        let r = self.run_rows_sliced_ref(rows)?;
+        Ok(r.preds[..n].iter().map(|&p| p as usize).collect())
+    }
+
     fn accumulate(&mut self, c: &CycleStats) {
         self.stats.feature_load += c.feature_load;
         self.stats.execute += c.execute;
         self.stats.commit += c.commit;
         self.stats.argmax += c.argmax;
         self.stats.fifo += c.fifo;
+    }
+
+    /// Accumulate `batches` identical per-batch cycle records at once
+    /// (the sliced bulk path's lifetime accounting).
+    fn accumulate_scaled(&mut self, c: &CycleStats, batches: u64) {
+        self.stats.feature_load += c.feature_load * batches;
+        self.stats.execute += c.execute * batches;
+        self.stats.commit += c.commit * batches;
+        self.stats.argmax += c.argmax * batches;
+        self.stats.fifo += c.fifo * batches;
     }
 
     fn record_trace(&mut self, i: usize, _clauses: u64, base: u64) {
@@ -449,6 +645,23 @@ impl Core {
     /// shape (excludes programming).
     pub fn batch_latency_us(&self, cycles: &CycleStats) -> f64 {
         self.seconds(cycles.total() - cycles.program) * 1e6
+    }
+}
+
+/// argmax per row over class-major sums (`sums[class * padded + row]`),
+/// first-max tie-break like [`argmax_lanes`].  Shared by the single-
+/// and multi-core sliced paths so their predictions can never diverge.
+pub fn argmax_rows(sums: &[i32], padded: usize, classes: usize, preds: &mut Vec<u8>) {
+    preds.clear();
+    preds.resize(padded, 0);
+    for (row, p) in preds.iter_mut().enumerate() {
+        let mut best = 0usize;
+        for class in 1..classes {
+            if sums[class * padded + row] > sums[best * padded + row] {
+                best = class;
+            }
+        }
+        *p = best as u8;
     }
 }
 
@@ -688,6 +901,91 @@ mod tests {
         let (model, _) = trained_tiny();
         let err = core.program_model(&model);
         assert!(matches!(err, Err(CoreError::Mem(_))));
+    }
+
+    #[test]
+    fn sliced_path_matches_per_batch_walk_exactly() {
+        // Same rows through run_batch_into (32-row chunks) and through
+        // the sliced kernel: preds, per-row sums, simulated cycles,
+        // lifetime counters and FIFO contents must all agree.
+        let (model, data) = trained_tiny();
+        let rows: Vec<Vec<u8>> = (0..100).map(|i| data.xs[i % data.len()].clone()).collect();
+
+        let mut soa = Core::new(AccelConfig::base());
+        soa.program_model(&model).unwrap();
+        let mut per_batch = Vec::new();
+        for chunk in rows.chunks(32) {
+            per_batch.push(soa.run_batch(&isa::pack_features(chunk)).unwrap());
+        }
+
+        let mut sliced = Core::new(AccelConfig::base());
+        sliced.program_model(&model).unwrap();
+        // Clone out of the scratch so the core is free for the
+        // lifetime-counter asserts below.
+        let r = sliced.run_rows_sliced_ref(&rows).unwrap().clone();
+        assert_eq!(r.rows, 100);
+        assert_eq!(r.batches, 4);
+        for (row, _) in rows.iter().enumerate() {
+            let b = &per_batch[row / 32];
+            let lane = row % 32;
+            assert_eq!(r.preds[row], b.preds[lane], "row {row}: preds");
+            for class in 0..model.shape.classes {
+                assert_eq!(
+                    r.class_sum(class, row),
+                    b.class_sums[class][lane],
+                    "row {row} class {class}: sums"
+                );
+            }
+        }
+        assert_eq!(r.batch_cycles, per_batch[0].cycles);
+        assert_eq!(r.total_cycles(), per_batch.iter().map(|b| b.cycles.total()).sum::<u64>());
+        // Lifetime accounting and FIFO contents keep parity (FIFO
+        // includes the final batch's padding lanes either way).
+        assert_eq!(sliced.stats, soa.stats);
+        assert_eq!(sliced.batches_run, soa.batches_run);
+        assert_eq!(sliced.fifo.drain(), soa.fifo.drain());
+
+        // The convenience wrapper clips the ragged tail.
+        let preds = sliced.run_rows_sliced(&rows).unwrap();
+        assert_eq!(preds.len(), 100);
+        let soa_preds: Vec<usize> = (0..100)
+            .map(|row| per_batch[row / 32].preds[row % 32] as usize)
+            .collect();
+        assert_eq!(preds, soa_preds);
+    }
+
+    #[test]
+    fn sliced_path_errors_match_the_batch_walk() {
+        let (model, data) = trained_tiny();
+        let mut core = Core::new(AccelConfig::base());
+        // Not programmed.
+        assert!(matches!(
+            core.run_rows_sliced(&data.xs[..4].to_vec()),
+            Err(CoreError::NotProgrammed)
+        ));
+        core.program_model(&model).unwrap();
+        // Empty requests are typed errors, not pack panics.
+        assert!(matches!(
+            core.run_rows_sliced(&[]),
+            Err(CoreError::BadBatch { rows: 0, .. })
+        ));
+        // Too few features for the programmed walk: same OffsetOverrun
+        // the 32-lane path raises.
+        let narrow = vec![vec![0u8; 2]; 8];
+        assert!(matches!(
+            core.run_rows_sliced(&narrow),
+            Err(CoreError::Isa(isa::IsaError::OffsetOverrun { .. }))
+        ));
+        // A batch wider than Feature Memory: same capacity error.
+        let mut shallow = Core::new(AccelConfig::base().with_depths(8192, 4));
+        shallow.program_model(&model).unwrap();
+        let wide = vec![vec![0u8; 12]; 8];
+        assert!(matches!(
+            shallow.run_rows_sliced(&wide),
+            Err(CoreError::Mem(MemError::FeatureOverflow { .. }))
+        ));
+        // Errors leave the scratch reusable: a good run still works.
+        assert_eq!(core.run_rows_sliced(&data.xs[..65].to_vec()).unwrap().len(), 65);
     }
 
     #[test]

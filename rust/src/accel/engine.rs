@@ -127,11 +127,42 @@ pub fn run_multicore_stream(
 /// enough to keep retained results O(chunk), not O(stream).
 pub const MULTICORE_CHUNK_BATCHES: usize = 256;
 
-/// Bulk-classify rows on a single core: pack, stream, unpack
-/// predictions.  The serving-example entry point.  Memory stays O(1)
-/// per batch: one reused [`BatchResult`] scratch, predictions appended
-/// as each batch completes.
+/// Row count at and above which the bulk classify paths switch from
+/// the 32-lane per-batch walk to the 64-lane bit-sliced kernel
+/// (§Bit-sliced in EXPERIMENTS.md).  Below it the transpose is not
+/// worth setting up; above it one `u64` op does useful work for 64
+/// rows and the kernel streams contiguous literal planes.  Results are
+/// byte-identical either way (enforced by `tests/engine_equivalence.rs`
+/// §sliced), so the threshold is purely a host-speed policy.
+pub const SLICED_MIN_ROWS: usize = 256;
+
+/// Rows per sliced pass: bounds the O(classes x rows) sums scratch the
+/// same way [`MULTICORE_CHUNK_BATCHES`] bounds retained batch results,
+/// and (being a multiple of 64) keeps every chunk boundary aligned to
+/// whole 64-row slices — no partially-filled slice except the stream's
+/// final one.
+pub const SLICED_CHUNK_ROWS: usize = MULTICORE_CHUNK_BATCHES * 32;
+
+/// Bulk-classify rows on a single core.  The serving-example entry
+/// point: picks the 64-lane bit-sliced kernel automatically at
+/// [`SLICED_MIN_ROWS`] and above, the 32-lane per-batch walk below
+/// (byte-identical results, different host speed).
 pub fn classify_rows_core(
+    core: &mut Core,
+    rows: &[Vec<u8>],
+) -> Result<(Vec<usize>, StreamStats), CoreError> {
+    if rows.len() >= SLICED_MIN_ROWS {
+        classify_rows_core_sliced(core, rows)
+    } else {
+        classify_rows_core_soa(core, rows)
+    }
+}
+
+/// The 32-lane per-batch path, pinnable explicitly (the hotpath bench
+/// pins it for before/after comparisons): pack, stream, unpack.
+/// Memory stays O(1) per batch: one reused [`BatchResult`] scratch,
+/// predictions appended as each batch completes.
+pub fn classify_rows_core_soa(
     core: &mut Core,
     rows: &[Vec<u8>],
 ) -> Result<(Vec<usize>, StreamStats), CoreError> {
@@ -158,11 +189,154 @@ pub fn classify_rows_core(
     Ok((preds, stats))
 }
 
-/// Bulk-classify rows on a multi-core engine.  The stream is driven in
-/// [`MULTICORE_CHUNK_BATCHES`]-sized chunks: thread-spawn cost is
+/// The 64-lane bit-sliced path, pinnable explicitly: the rows are
+/// transposed once per [`SLICED_CHUNK_ROWS`]-sized chunk into 64-row
+/// literal planes and each clause evaluates 64 rows per bitwise op.
+/// All scratch (transpose planes, clause accumulator, per-row sums)
+/// lives in the [`Core`] and is reused — no per-batch allocation.
+pub fn classify_rows_core_sliced(
+    core: &mut Core,
+    rows: &[Vec<u8>],
+) -> Result<(Vec<usize>, StreamStats), CoreError> {
+    let (preds, _margins, stats) = sliced_run(core, rows, false)?;
+    Ok((preds, stats))
+}
+
+/// Borrowed view of one sliced chunk's outputs: lets [`sliced_run`]
+/// drive the single- and multi-core engines through one loop, so their
+/// StreamStats accounting can never desynchronize.
+struct SlicedView<'a> {
+    sums: &'a [i32],
+    padded: usize,
+    rows: usize,
+    preds: &'a [u8],
+    batches: u64,
+    cycles: u64,
+}
+
+/// An engine the sliced bulk scheduler can drive chunk by chunk.
+trait SlicedEngine {
+    fn run_sliced_chunk(&mut self, chunk: &[Vec<u8>]) -> Result<SlicedView<'_>, CoreError>;
+}
+
+impl SlicedEngine for Core {
+    fn run_sliced_chunk(&mut self, chunk: &[Vec<u8>]) -> Result<SlicedView<'_>, CoreError> {
+        let r = self.run_rows_sliced_ref(chunk)?;
+        Ok(SlicedView {
+            sums: &r.class_sums,
+            padded: r.padded_rows,
+            rows: r.rows,
+            preds: &r.preds,
+            batches: r.batches,
+            cycles: r.total_cycles(),
+        })
+    }
+}
+
+impl SlicedEngine for MultiCore {
+    fn run_sliced_chunk(&mut self, chunk: &[Vec<u8>]) -> Result<SlicedView<'_>, CoreError> {
+        let r = self.run_rows_sliced_ref(chunk)?;
+        Ok(SlicedView {
+            sums: &r.class_sums,
+            padded: r.padded_rows,
+            rows: r.rows,
+            preds: &r.preds,
+            batches: r.batches,
+            cycles: r.total_cycles(),
+        })
+    }
+}
+
+/// Shared body of every sliced bulk path (preds-only and margins-aware
+/// — the margin scan is the only difference): 64-row-aligned chunks
+/// through the engine's sliced kernel, preds/margins appended per
+/// chunk, StreamStats accumulated.
+fn sliced_run<E: SlicedEngine>(
+    engine: &mut E,
+    rows: &[Vec<u8>],
+    want_margins: bool,
+) -> Result<(Vec<usize>, Vec<i32>, StreamStats), CoreError> {
+    if rows.is_empty() {
+        return Ok((Vec::new(), Vec::new(), StreamStats::default()));
+    }
+    validate_rows(rows, usize::MAX)?;
+    let t0 = std::time::Instant::now();
+    let mut preds = Vec::with_capacity(rows.len());
+    let mut margins = Vec::with_capacity(if want_margins { rows.len() } else { 0 });
+    let mut batches = 0u64;
+    let mut cycles = 0u64;
+    for chunk in rows.chunks(SLICED_CHUNK_ROWS) {
+        let v = engine.run_sliced_chunk(chunk)?;
+        extend_from_sliced(
+            &mut preds,
+            want_margins.then_some(&mut margins),
+            v.sums,
+            v.padded,
+            v.rows,
+            v.preds,
+        );
+        batches += v.batches;
+        cycles += v.cycles;
+    }
+    let stats = StreamStats {
+        batches,
+        inferences: rows.len() as u64,
+        simulated_cycles: cycles,
+        wall: t0.elapsed(),
+    };
+    Ok((preds, margins, stats))
+}
+
+/// Append one sliced run's per-row predictions (and, when asked,
+/// confidence margins) to the output vectors.  Margin semantics are
+/// identical to [`margins_from_sums`]: winner minus runner-up, the
+/// winning sum itself for a single class.
+fn extend_from_sliced(
+    preds: &mut Vec<usize>,
+    margins: Option<&mut Vec<i32>>,
+    sums: &[i32],
+    padded: usize,
+    rows: usize,
+    row_preds: &[u8],
+) {
+    preds.extend(row_preds[..rows].iter().map(|&p| p as usize));
+    if let Some(margins) = margins {
+        let classes = sums.len() / padded.max(1);
+        for row in 0..rows {
+            let (mut best, mut second) = (i32::MIN, i32::MIN);
+            for class in 0..classes {
+                let v = sums[class * padded + row];
+                if v > best {
+                    second = best;
+                    best = v;
+                } else if v > second {
+                    second = v;
+                }
+            }
+            margins.push(if second == i32::MIN { best } else { best - second });
+        }
+    }
+}
+
+/// Bulk-classify rows on a multi-core engine: the sliced kernel at
+/// [`SLICED_MIN_ROWS`] and above (chunk boundaries aligned to 64-row
+/// slices), the 32-lane chunked stream below.
+pub fn classify_rows_multicore(
+    mc: &mut MultiCore,
+    rows: &[Vec<u8>],
+) -> Result<(Vec<usize>, StreamStats), CoreError> {
+    if rows.len() >= SLICED_MIN_ROWS {
+        let (preds, _margins, stats) = sliced_run(mc, rows, false)?;
+        return Ok((preds, stats));
+    }
+    classify_rows_multicore_soa(mc, rows)
+}
+
+/// The 32-lane multi-core bulk path: the stream is driven in
+/// [`MULTICORE_CHUNK_BATCHES`]-sized chunks — thread-spawn cost is
 /// amortized within each chunk while retained results stay bounded by
 /// the chunk, not the whole stream.
-pub fn classify_rows_multicore(
+pub fn classify_rows_multicore_soa(
     mc: &mut MultiCore,
     rows: &[Vec<u8>],
 ) -> Result<(Vec<usize>, StreamStats), CoreError> {
@@ -226,12 +400,23 @@ pub fn margins_from_sums(sums: &[[i32; 32]], n: usize) -> Vec<i32> {
 
 /// Bulk-classify rows on a single core, returning per-datapoint
 /// confidence margins alongside predictions — the margins-aware twin of
-/// [`classify_rows_core`].  Same amortization: one pack pass, one
-/// reused [`BatchResult`] scratch (class sums are already in it, so the
-/// margin costs only the 32-lane max/runner-up scan), preds and margins
-/// appended per batch.  The canary mirror and the autotune telemetry
-/// probe ride this so a probe window costs the same as plain traffic.
+/// [`classify_rows_core`], with the same [`SLICED_MIN_ROWS`] kernel
+/// pick.  The canary mirror and the autotune telemetry probe ride this
+/// so a probe window costs the same as plain traffic.
 pub fn classify_rows_margins_core(
+    core: &mut Core,
+    rows: &[Vec<u8>],
+) -> Result<(Vec<usize>, Vec<i32>, StreamStats), CoreError> {
+    if rows.len() >= SLICED_MIN_ROWS {
+        return sliced_run(core, rows, true);
+    }
+    classify_rows_margins_core_soa(core, rows)
+}
+
+/// The 32-lane margins path: one pack pass, one reused [`BatchResult`]
+/// scratch (class sums are already in it, so the margin costs only the
+/// 32-lane max/runner-up scan), preds and margins appended per batch.
+pub fn classify_rows_margins_core_soa(
     core: &mut Core,
     rows: &[Vec<u8>],
 ) -> Result<(Vec<usize>, Vec<i32>, StreamStats), CoreError> {
@@ -261,11 +446,23 @@ pub fn classify_rows_margins_core(
     Ok((preds, margins, stats))
 }
 
-/// Margins-aware bulk classify on a multi-core engine: chunked like
-/// [`classify_rows_multicore`] so the per-call thread spawn amortizes
-/// within each [`MULTICORE_CHUNK_BATCHES`]-sized chunk while retained
-/// results stay bounded by the chunk.
+/// Margins-aware bulk classify on a multi-core engine, with the same
+/// [`SLICED_MIN_ROWS`] kernel pick as [`classify_rows_multicore`].
 pub fn classify_rows_margins_multicore(
+    mc: &mut MultiCore,
+    rows: &[Vec<u8>],
+) -> Result<(Vec<usize>, Vec<i32>, StreamStats), CoreError> {
+    if rows.len() >= SLICED_MIN_ROWS {
+        return sliced_run(mc, rows, true);
+    }
+    classify_rows_margins_multicore_soa(mc, rows)
+}
+
+/// The 32-lane margins path on a multi-core engine: chunked like
+/// [`classify_rows_multicore_soa`] so the per-call thread spawn
+/// amortizes within each [`MULTICORE_CHUNK_BATCHES`]-sized chunk while
+/// retained results stay bounded by the chunk.
+pub fn classify_rows_margins_multicore_soa(
     mc: &mut MultiCore,
     rows: &[Vec<u8>],
 ) -> Result<(Vec<usize>, Vec<i32>, StreamStats), CoreError> {
@@ -436,6 +633,72 @@ mod tests {
         let (preds, margins, stats) = classify_rows_margins_core(&mut core, &[]).unwrap();
         assert!(preds.is_empty() && margins.is_empty());
         assert_eq!(stats.batches, 0);
+    }
+
+    #[test]
+    fn sliced_and_soa_bulk_paths_are_byte_identical() {
+        // Above SLICED_MIN_ROWS the auto paths ride the 64-lane kernel;
+        // preds, margins AND StreamStats counters must match the pinned
+        // 32-lane path exactly.
+        let (model, data) = trained();
+        let rows: Vec<Vec<u8>> = (0..SLICED_MIN_ROWS + 37)
+            .map(|i| data.xs[i % data.len()].clone())
+            .collect();
+
+        let mut core = Core::new(AccelConfig::base());
+        core.program_model(&model).unwrap();
+        let (soa_preds, soa_stats) = classify_rows_core_soa(&mut core, &rows).unwrap();
+        let (auto_preds, auto_stats) = classify_rows_core(&mut core, &rows).unwrap();
+        assert_eq!(auto_preds, soa_preds);
+        assert_eq!(auto_stats.batches, soa_stats.batches);
+        assert_eq!(auto_stats.inferences, soa_stats.inferences);
+        assert_eq!(auto_stats.simulated_cycles, soa_stats.simulated_cycles);
+
+        let (m_soa_preds, m_soa_margins, _) =
+            classify_rows_margins_core_soa(&mut core, &rows).unwrap();
+        let (m_preds, m_margins, m_stats) =
+            classify_rows_margins_core(&mut core, &rows).unwrap();
+        assert_eq!(m_preds, m_soa_preds);
+        assert_eq!(m_margins, m_soa_margins);
+        assert_eq!(m_stats.simulated_cycles, soa_stats.simulated_cycles);
+
+        // Multi-core: auto (sliced) vs the pinned 32-lane chunked path.
+        let mut mc = MultiCore::five_core().with_parallel(ParallelMode::Threads);
+        mc.program_model(&model).unwrap();
+        let (mc_soa_preds, mc_soa_stats) = classify_rows_multicore_soa(&mut mc, &rows).unwrap();
+        let (mc_preds, mc_stats) = classify_rows_multicore(&mut mc, &rows).unwrap();
+        assert_eq!(mc_preds, mc_soa_preds);
+        assert_eq!(mc_preds, soa_preds);
+        assert_eq!(mc_stats.batches, mc_soa_stats.batches);
+        assert_eq!(mc_stats.simulated_cycles, mc_soa_stats.simulated_cycles);
+        let (mm_preds, mm_margins, _) = classify_rows_margins_multicore(&mut mc, &rows).unwrap();
+        assert_eq!(mm_preds, m_preds);
+        assert_eq!(mm_margins, m_margins);
+    }
+
+    #[test]
+    fn sliced_bulk_path_rejects_malformed_requests() {
+        let (model, _) = trained();
+        let mut core = Core::new(AccelConfig::base());
+        core.program_model(&model).unwrap();
+        // A ragged stream above the threshold still dies in
+        // validate_rows, never in the transpose asserts.
+        let mut ragged: Vec<Vec<u8>> = vec![vec![0u8; 12]; SLICED_MIN_ROWS + 1];
+        ragged[100] = vec![0u8; 5];
+        assert!(matches!(
+            classify_rows_core(&mut core, &ragged),
+            Err(CoreError::BadBatch { .. })
+        ));
+        assert!(matches!(
+            classify_rows_margins_core(&mut core, &ragged),
+            Err(CoreError::BadBatch { .. })
+        ));
+        let mut mc = MultiCore::five_core();
+        mc.program_model(&model).unwrap();
+        assert!(matches!(
+            classify_rows_multicore(&mut mc, &ragged),
+            Err(CoreError::BadBatch { .. })
+        ));
     }
 
     #[test]

@@ -8,8 +8,10 @@
 //! counts), not class counts — include-heavy classes dominate a core's
 //! walk time.
 
-use super::core::{argmax_lanes, AccelConfig, BatchResult, Core, CoreError};
-use crate::isa;
+use super::core::{
+    argmax_lanes, argmax_rows, AccelConfig, BatchResult, Core, CoreError, SlicedResult,
+};
+use crate::isa::{self, SlicedBatch};
 use crate::tm::model::TMModel;
 
 /// How the HOST schedules the per-core walks.  The simulated cycle
@@ -41,6 +43,46 @@ pub struct MultiCore {
     pub classes: usize,
     /// Host scheduling policy for `run_batch`/`run_batches`.
     pub parallel: ParallelMode,
+    /// Transpose scratch of the sliced bulk path: the batch is packed
+    /// ONCE here and broadcast to every core (the features are shared;
+    /// only the class partition differs).
+    sliced_batch: SlicedBatch,
+    /// Per-core result scratch of the sliced path (local class ranges).
+    per_core_sliced: Vec<SlicedResult>,
+    /// Merged (global-class-order) result of the last sliced run.
+    sliced_merged: MultiSlicedRun,
+}
+
+/// Merged result of a multi-core bit-sliced run — the per-row analog of
+/// [`MultiBatchResult`]: global class sums gathered from the
+/// class-partitioned cores, global argmax, parallel timing.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MultiSlicedRun {
+    /// Class-major per-row sums in GLOBAL class order:
+    /// `class_sums[class * padded_rows + row]`.
+    pub class_sums: Vec<i32>,
+    pub padded_rows: usize,
+    pub rows: usize,
+    /// Global argmax per padded row.
+    pub preds: Vec<u8>,
+    /// Simulated cycles per 32-row batch: slowest core + merge (the
+    /// cores are parallel hardware).
+    pub batch_cycles: u64,
+    /// 32-row batches of the equivalent 32-lane walk.
+    pub batches: u64,
+}
+
+impl MultiSlicedRun {
+    /// One row's sum for one (global) class.
+    #[inline]
+    pub fn class_sum(&self, class: usize, row: usize) -> i32 {
+        self.class_sums[class * self.padded_rows + row]
+    }
+
+    /// Total simulated cycles of the run (all batches, parallel model).
+    pub fn total_cycles(&self) -> u64 {
+        self.batch_cycles * self.batches
+    }
 }
 
 impl MultiCore {
@@ -56,6 +98,9 @@ impl MultiCore {
             assign: Vec::new(),
             classes: 0,
             parallel: ParallelMode::Auto,
+            sliced_batch: SlicedBatch::default(),
+            per_core_sliced: Vec::new(),
+            sliced_merged: MultiSlicedRun::default(),
         }
     }
 
@@ -268,6 +313,113 @@ impl MultiCore {
         Ok(out)
     }
 
+    /// Bit-sliced bulk execution across the class-partitioned cores:
+    /// the rows are transposed ONCE into 64-row literal planes
+    /// (broadcast — every core reads the same planes, like the AXIS
+    /// feature broadcast), each core runs the sliced kernel over its
+    /// class range (on its own OS thread when the scheduling policy
+    /// threads this much work), and per-row class sums are gathered
+    /// into global order for the global argmax.  Chunking is the
+    /// CALLER's job (`accel::engine` drives this in 64-row-aligned
+    /// chunks); per-call scratch is owned by the engine and reused.
+    ///
+    /// Observable per-core state (lifetime counters, FIFOs) advances
+    /// exactly as under [`Self::run_batches`] over the equivalent
+    /// 32-row batches.  Error semantics mirror `run_batches`: the first
+    /// failing core's error in core order, with the same
+    /// threaded-siblings caveat.
+    pub fn run_rows_sliced_ref(&mut self, rows: &[Vec<u8>]) -> Result<&MultiSlicedRun, CoreError> {
+        if self.assign.is_empty() {
+            return Err(CoreError::NotProgrammed);
+        }
+        if rows.is_empty() {
+            return Err(CoreError::BadBatch { rows: 0, reason: "empty request" });
+        }
+        let mut batch = std::mem::take(&mut self.sliced_batch);
+        isa::pack_literals_sliced_into(rows, &mut batch);
+        let batches = rows.len().div_ceil(32);
+        let run = self.run_sliced_cores(&batch, batches);
+        self.sliced_batch = batch;
+        run?;
+
+        // Merge: gather local class ranges into global order, slowest
+        // core + merge cycles, global argmax per row.
+        let padded = self.sliced_batch.padded_rows();
+        let merged = &mut self.sliced_merged;
+        merged.rows = self.sliced_batch.rows;
+        merged.padded_rows = padded;
+        merged.batches = batches as u64;
+        merged.class_sums.clear();
+        merged.class_sums.resize(self.classes * padded, 0);
+        let mut slowest = 0u64;
+        for (out, &(s, e)) in self.per_core_sliced.iter().zip(&self.assign) {
+            if s == e {
+                continue;
+            }
+            slowest = slowest.max(out.batch_cycles.total());
+            for (local, class) in (s..e).enumerate() {
+                merged.class_sums[class * padded..(class + 1) * padded]
+                    .copy_from_slice(&out.class_sums[local * padded..(local + 1) * padded]);
+            }
+        }
+        merged.batch_cycles = slowest + self.classes as u64 + 1;
+        argmax_rows(&merged.class_sums, padded, self.classes, &mut merged.preds);
+        Ok(&self.sliced_merged)
+    }
+
+    /// Convenience mirror of [`Self::run_rows`] on the sliced kernel.
+    pub fn run_rows_sliced(&mut self, rows: &[Vec<u8>]) -> Result<Vec<usize>, CoreError> {
+        let n = rows.len();
+        let r = self.run_rows_sliced_ref(rows)?;
+        Ok(r.preds[..n].iter().map(|&p| p as usize).collect())
+    }
+
+    /// The fan-out half of the sliced run: every non-idle core executes
+    /// the (broadcast) transposed batch over its class range, threaded
+    /// per [`Self::parallel`] — byte-identical results either way.
+    fn run_sliced_cores(&mut self, batch: &SlicedBatch, batches: usize) -> Result<(), CoreError> {
+        if self.per_core_sliced.len() != self.assign.len() {
+            self.per_core_sliced
+                .resize_with(self.assign.len(), SlicedResult::default);
+        }
+        if self.use_threads(batches) {
+            let mut slots: Vec<Option<CoreError>> = Vec::new();
+            slots.resize_with(self.assign.len(), || None);
+            std::thread::scope(|scope| {
+                for (((core, &(s, e)), out), slot) in self
+                    .cores
+                    .iter_mut()
+                    .zip(&self.assign)
+                    .zip(self.per_core_sliced.iter_mut())
+                    .zip(slots.iter_mut())
+                {
+                    if s == e {
+                        continue;
+                    }
+                    scope.spawn(move || {
+                        *slot = core.run_sliced_into(batch, out).err();
+                    });
+                }
+            });
+            if let Some(e) = slots.into_iter().flatten().next() {
+                return Err(e);
+            }
+        } else {
+            for ((core, &(s, e)), out) in self
+                .cores
+                .iter_mut()
+                .zip(&self.assign)
+                .zip(self.per_core_sliced.iter_mut())
+            {
+                if s == e {
+                    continue;
+                }
+                core.run_sliced_into(batch, out)?;
+            }
+        }
+        Ok(())
+    }
+
     /// Merge per-core batch results: gather class sums into global
     /// order, take the slowest core + merge cycles, global argmax.
     fn merge_batch(&self, per_core: Vec<Option<BatchResult>>) -> MultiBatchResult {
@@ -464,6 +616,72 @@ mod tests {
         assert_eq!(rs.len(), 2);
         assert_multi_eq(&rs[0], &r1);
         assert_multi_eq(&rs[1], &r2);
+    }
+
+    #[test]
+    fn sliced_multicore_matches_batch_walk_and_is_schedule_invariant() {
+        let (model, data) = trained(6);
+        let rows: Vec<Vec<u8>> = (0..100).map(|i| data.xs[i % data.len()].clone()).collect();
+
+        // 32-lane reference: per-batch multicore walk.
+        let mut reference = MultiCore::five_core().with_parallel(ParallelMode::Serial);
+        reference.program_model(&model).unwrap();
+        let per_batch: Vec<MultiBatchResult> = rows
+            .chunks(32)
+            .map(|c| reference.run_batch(&isa::pack_features(c)).unwrap())
+            .collect();
+
+        for mode in [ParallelMode::Serial, ParallelMode::Threads] {
+            let mut mc = MultiCore::five_core().with_parallel(mode);
+            mc.program_model(&model).unwrap();
+            // Clone out of the scratch so `mc.cores` is free for the
+            // lifetime-stats asserts below.
+            let r = mc.run_rows_sliced_ref(&rows).unwrap().clone();
+            assert_eq!(r.rows, 100);
+            assert_eq!(r.batches, 4);
+            for row in 0..rows.len() {
+                let b = &per_batch[row / 32];
+                let lane = row % 32;
+                assert_eq!(r.preds[row], b.preds[lane], "{mode:?} row {row}");
+                for class in 0..6 {
+                    assert_eq!(
+                        r.class_sum(class, row),
+                        b.class_sums[class][lane],
+                        "{mode:?} row {row} class {class}"
+                    );
+                }
+            }
+            assert_eq!(r.batch_cycles, per_batch[0].batch_cycles, "{mode:?}");
+            // Per-core lifetime stats advance exactly like the
+            // 32-lane walk over the same batches.
+            for (a, b) in mc.cores.iter().zip(&reference.cores) {
+                assert_eq!(a.stats, b.stats, "{mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sliced_multicore_handles_idle_cores_and_errors() {
+        // More cores than classes: idle cores skipped, preds match the
+        // dense reference.
+        let (model, data) = trained(3);
+        let mut mc =
+            MultiCore::new(5, AccelConfig::multicore_core()).with_parallel(ParallelMode::Threads);
+        assert!(matches!(
+            mc.run_rows_sliced(&data.xs[..4].to_vec()),
+            Err(CoreError::NotProgrammed)
+        ));
+        mc.program_model(&model).unwrap();
+        assert!(matches!(
+            mc.run_rows_sliced(&[]),
+            Err(CoreError::BadBatch { rows: 0, .. })
+        ));
+        let rows: Vec<Vec<u8>> = data.xs[..70].to_vec();
+        let preds = mc.run_rows_sliced(&rows).unwrap();
+        for (x, &p) in rows.iter().zip(&preds) {
+            let lits = reference::literals_from_features(x);
+            assert_eq!(p, reference::predict_dense(&model, &lits));
+        }
     }
 
     #[test]

@@ -828,7 +828,7 @@ impl Autotuner {
                 watts,
             } => {
                 // The monitor telemetry above already answered the FULL
-                // window on a baseline replica; reuse its stride-sampled
+                // window on a baseline replica; reuse its hash-sampled
                 // half so the mirror costs one canary round-trip, not
                 // two pool round-trips.
                 // Extend and a transient request error (e.g. a replica
@@ -1175,6 +1175,7 @@ impl Autotuner {
                         accuracy_eps: self.cfg.canary_accuracy_eps,
                         baseline_t: self.current.as_ref().map(|c| c.shape.t).unwrap_or(1),
                         candidate_t: m.shape.t,
+                        ..CanaryConfig::default()
                     };
                     self.phase = Phase::Canarying {
                         trigger_accuracy,

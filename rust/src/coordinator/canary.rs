@@ -28,8 +28,9 @@ use super::server::{ServeError, ServiceHandle, Telemetry};
 /// Canary comparison knobs.
 #[derive(Debug, Clone)]
 pub struct CanaryConfig {
-    /// Fraction of each observed window mirrored to the canary (strided
-    /// sampling, deterministic).  Clamped to (0, 1].
+    /// Expected fraction of each observed window mirrored to the canary
+    /// (seeded hash-of-row sampling, deterministic; at least one row is
+    /// always mirrored).  Clamped to [0, 1].
     pub mirror_fraction: f64,
     /// Paired windows required before a unanimous early verdict.
     pub min_windows: usize,
@@ -45,6 +46,10 @@ pub struct CanaryConfig {
     pub baseline_t: i32,
     /// Candidate model's threshold T (margin normalization).
     pub candidate_t: i32,
+    /// Base seed of the per-window hash-of-row sampling (mixed with the
+    /// window ordinal, so repeated identical windows mirror
+    /// different-but-deterministic subsets).
+    pub sample_seed: u64,
 }
 
 impl Default for CanaryConfig {
@@ -57,6 +62,7 @@ impl Default for CanaryConfig {
             accuracy_eps: 0.02,
             baseline_t: 1,
             candidate_t: 1,
+            sample_seed: 0xC0FF_EE5E_ED,
         }
     }
 }
@@ -125,18 +131,42 @@ impl CanaryController {
         &self.windows
     }
 
-    /// Mirror one observed window: stride-sample `mirror_fraction` of
-    /// `xs`, answer the sample on a baseline replica AND on the canary,
-    /// record the paired comparison, and return it with the running
-    /// sequential verdict.  `ys` (when present) must be row-aligned
-    /// with `xs`.
+    /// The seed of the NEXT paired window's hash sample: the config's
+    /// base seed mixed with the window ordinal, so two identical
+    /// windows mirror different-but-deterministic subsets.
+    fn window_sample_seed(&self) -> u64 {
+        window_seed(self.cfg.sample_seed, self.windows.len() as u64)
+    }
+
+    /// Materialize this window's mirrored sample: the selected row
+    /// indices plus the cloned rows and gathered labels.  One site, so
+    /// the labeled and baseline-reuse observe paths can never sample
+    /// differently.
+    fn sample_window(
+        &self,
+        xs: &[Vec<u8>],
+        ys: Option<&[usize]>,
+    ) -> (Vec<usize>, Vec<Vec<u8>>, Option<Vec<usize>>) {
+        let idxs = hash_sample_indices(xs, self.cfg.mirror_fraction, self.window_sample_seed());
+        let sample_xs: Vec<Vec<u8>> = idxs.iter().map(|&i| xs[i].clone()).collect();
+        let sample_ys: Option<Vec<usize>> =
+            ys.map(|ys| idxs.iter().map(|&i| ys[i]).collect());
+        (idxs, sample_xs, sample_ys)
+    }
+
+    /// Mirror one observed window: hash-sample `mirror_fraction` of
+    /// `xs` (seeded FxHash-style mix of the packed row bytes — see
+    /// [`hash_sample_indices`]), answer the sample on a baseline
+    /// replica AND on the canary, record the paired comparison, and
+    /// return it with the running sequential verdict.  `ys` (when
+    /// present) must be row-aligned with `xs`.
     pub fn observe(
         &mut self,
         xs: &[Vec<u8>],
         ys: Option<&[usize]>,
     ) -> Result<(PairedWindow, CanaryVerdict), ServeError> {
         check_labels(xs, ys)?;
-        let (sample_xs, sample_ys) = stride_sample(xs, ys, self.cfg.mirror_fraction);
+        let (_idxs, sample_xs, sample_ys) = self.sample_window(xs, ys);
         let base = self.handle.infer_telemetry(sample_xs.clone())?;
         let cand = self.handle.infer_telemetry_canary(sample_xs)?;
         Ok(self.record(base.preds, base.margins, &cand, sample_ys))
@@ -146,7 +176,7 @@ impl CanaryController {
     /// already holds for the FULL window (the autotuner's monitor
     /// telemetry, served by a baseline replica moments earlier —
     /// inference is deterministic and the fence keeps every baseline
-    /// replica on one model, so the stride-sampled subset is exactly
+    /// replica on one model, so the hash-sampled subset is exactly
     /// what a fresh probe would return).  Only the canary half costs a
     /// pool round-trip.
     pub fn observe_with_baseline(
@@ -162,10 +192,9 @@ impl CanaryController {
                 reason: "baseline telemetry does not match window rows",
             }));
         }
-        let (sample_xs, sample_ys) = stride_sample(xs, ys, self.cfg.mirror_fraction);
-        let stride = stride_for(self.cfg.mirror_fraction);
-        let base_preds: Vec<usize> = baseline.preds.iter().step_by(stride).copied().collect();
-        let base_margins: Vec<i32> = baseline.margins.iter().step_by(stride).copied().collect();
+        let (idxs, sample_xs, sample_ys) = self.sample_window(xs, ys);
+        let base_preds: Vec<usize> = idxs.iter().map(|&i| baseline.preds[i]).collect();
+        let base_margins: Vec<i32> = idxs.iter().map(|&i| baseline.margins[i]).collect();
         let cand = self.handle.infer_telemetry_canary(sample_xs)?;
         Ok(self.record(base_preds, base_margins, &cand, sample_ys))
     }
@@ -284,29 +313,53 @@ fn check_labels(xs: &[Vec<u8>], ys: Option<&[usize]>) -> Result<(), ServeError> 
     Ok(())
 }
 
-/// The sampling stride for a mirror fraction: every k-th row where
-/// k = ceil(1/fraction), so the effective mirrored fraction is
-/// 1/k <= fraction — the knob is an upper bound on the evaluation
-/// load, never exceeded (round() would mirror 100% of every window
-/// for any fraction above 2/3).
-fn stride_for(fraction: f64) -> usize {
-    let fraction = fraction.clamp(f64::MIN_POSITIVE, 1.0);
-    (1.0 / fraction).ceil().max(1.0) as usize
+/// FxHash-style mix of one packed row's bytes under `seed`: the
+/// multiply-rotate byte fold FxHash uses, with a murmur-style final
+/// avalanche so short rows still spread over the full 64-bit space.
+fn mix_row(seed: u64, row: &[u8]) -> u64 {
+    const FX_K: u64 = 0x517c_c1b7_2722_0a95;
+    let mut h = seed ^ 0x9e37_79b9_7f4a_7c15;
+    for &b in row {
+        h = (h.rotate_left(5) ^ b as u64).wrapping_mul(FX_K);
+    }
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^ (h >> 33)
 }
 
-/// Deterministic strided sample of `fraction` of the rows (and the
-/// matching labels).  Stride sampling spreads the mirror across the
-/// window instead of taking a prefix, so the pair sees the same
-/// temporal mix the pool does.
-fn stride_sample(
-    xs: &[Vec<u8>],
-    ys: Option<&[usize]>,
-    fraction: f64,
-) -> (Vec<Vec<u8>>, Option<Vec<usize>>) {
-    let stride = stride_for(fraction);
-    let sample_xs: Vec<Vec<u8>> = xs.iter().step_by(stride).cloned().collect();
-    let sample_ys = ys.map(|ys| ys.iter().step_by(stride).copied().collect());
-    (sample_xs, sample_ys)
+/// One splitmix64 step: derives a window's sampling seed from the base
+/// seed and the window ordinal.
+fn window_seed(base: u64, window: u64) -> u64 {
+    let mut z = base.wrapping_add(window.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Deterministic hash-of-row sample: row `r` is mirrored when the
+/// seeded mix of its packed bytes lands in the bottom `fraction` of
+/// the hash space.  Replaces the old deterministic strides, which
+/// mirrored the IDENTICAL subset every time a window repeated — a
+/// periodic workload could park the same rows on the canary forever.
+/// Hashing makes the subset a pseudo-random function of (seed, row
+/// bytes): still fully deterministic and replayable, but two identical
+/// windows under different window seeds mirror different subsets, and
+/// duplicate rows within a window stand or fall together.  At least
+/// one row (the minimum-hash row) is always mirrored so a paired
+/// window can never be empty.
+fn hash_sample_indices(xs: &[Vec<u8>], fraction: f64, seed: u64) -> Vec<usize> {
+    let fraction = fraction.clamp(0.0, 1.0);
+    let threshold = (fraction * u64::MAX as f64) as u64;
+    let idxs: Vec<usize> = (0..xs.len())
+        .filter(|&r| mix_row(seed, &xs[r]) <= threshold)
+        .collect();
+    if idxs.is_empty() && !xs.is_empty() {
+        let r = (0..xs.len())
+            .min_by_key(|&r| mix_row(seed, &xs[r]))
+            .expect("non-empty window");
+        return vec![r];
+    }
+    idxs
 }
 
 #[cfg(test)]
@@ -358,25 +411,45 @@ mod tests {
     }
 
     #[test]
-    fn stride_sampling_is_deterministic_and_label_aligned() {
-        let xs: Vec<Vec<u8>> = (0..16u8).map(|i| vec![i; 4]).collect();
-        let ys: Vec<usize> = (0..16).collect();
-        let (sx, sy) = stride_sample(&xs, Some(&ys), 0.25);
-        assert_eq!(sx.len(), 4);
-        let sy = sy.unwrap();
-        assert_eq!(sy, vec![0, 4, 8, 12]);
-        for (x, &y) in sx.iter().zip(&sy) {
-            assert_eq!(x[0] as usize, y, "rows and labels must stay paired");
-        }
-        // Fraction 1.0 mirrors everything; tiny fractions still sample
-        // at least one row.
-        let (all, _) = stride_sample(&xs, None, 1.0);
-        assert_eq!(all.len(), 16);
-        let (one, _) = stride_sample(&xs, None, 0.01);
+    fn hash_sampling_differs_across_identical_windows_but_stays_deterministic() {
+        // The ROADMAP item this replaces strides for: two IDENTICAL
+        // windows must mirror different-but-deterministic subsets, so a
+        // periodic workload cannot park the same rows on the canary
+        // forever.  Subsets pinned for the default base seed.
+        let xs: Vec<Vec<u8>> = (0..32u8).map(|i| vec![i; 8]).collect();
+        let base = CanaryConfig::default().sample_seed;
+        let w0 = hash_sample_indices(&xs, 0.25, window_seed(base, 0));
+        let w1 = hash_sample_indices(&xs, 0.25, window_seed(base, 1));
+        assert_eq!(w0, vec![1, 3, 4, 6, 7, 24, 25, 30]);
+        assert_eq!(w1, vec![4, 10, 11, 22, 25, 28, 30]);
+        assert_ne!(w0, w1, "identical windows must not mirror identical subsets");
+        // Deterministic: the same (rows, fraction, seed) replays the
+        // same subset.
+        assert_eq!(w0, hash_sample_indices(&xs, 0.25, window_seed(base, 0)));
+        // The subset is a function of the ROW BYTES, not the position:
+        // duplicate rows stand or fall together.
+        let dup = vec![xs[1].clone(), xs[2].clone(), xs[1].clone()];
+        let picked = hash_sample_indices(&dup, 0.25, window_seed(base, 0));
+        assert_eq!(picked, vec![0, 2], "both copies of a sampled row are sampled");
+    }
+
+    #[test]
+    fn hash_sampling_covers_the_fraction_extremes() {
+        let xs: Vec<Vec<u8>> = (0..32u8).map(|i| vec![i; 8]).collect();
+        let base = CanaryConfig::default().sample_seed;
+        // Fraction 1.0 mirrors everything, in window order.
+        let all = hash_sample_indices(&xs, 1.0, window_seed(base, 0));
+        assert_eq!(all, (0..32).collect::<Vec<_>>());
+        // A vanishing fraction still mirrors at least one row (the
+        // minimum-hash row), deterministically.
+        let one = hash_sample_indices(&xs, 1e-9, window_seed(base, 0));
         assert_eq!(one.len(), 1);
-        // The fraction is an UPPER bound: 0.7 must not mirror 100%
-        // (ceil stride 2 -> effective 0.5), and never exceeds the knob.
-        let (most, _) = stride_sample(&xs, None, 0.7);
-        assert_eq!(most.len(), 8);
+        assert_eq!(one, hash_sample_indices(&xs, 1e-9, window_seed(base, 0)));
+        // Indices are always in-range and strictly increasing (label
+        // alignment relies on it).
+        let sub = hash_sample_indices(&xs, 0.5, window_seed(base, 3));
+        assert!(sub.windows(2).all(|w| w[0] < w[1]));
+        assert!(sub.iter().all(|&i| i < xs.len()));
+        assert!(!sub.is_empty());
     }
 }

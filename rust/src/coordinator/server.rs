@@ -62,6 +62,12 @@ pub enum ServeError {
     /// small to dedicate a replica, no baseline model to fall back to).
     #[error("canary: {0}")]
     Canary(&'static str),
+    /// The request's deadline passed before a replica produced an
+    /// answer (see [`ServiceHandle::infer_deadline`]).  The pool is
+    /// fine — the job was either dropped unexecuted by the first worker
+    /// to pick it up, or its late answer was discarded.
+    #[error("request deadline exceeded before a replica could serve it")]
+    DeadlineExceeded,
 }
 
 /// Per-replica snapshot inside [`PoolStats`].
@@ -121,6 +127,18 @@ enum Job {
     Infer {
         rows: Vec<Vec<u8>>,
         target: Target,
+        /// Expiry instant of a deadline request: a worker that pops an
+        /// already-expired job replies [`ServeError::DeadlineExceeded`]
+        /// without executing it, so a saturated queue sheds abandoned
+        /// work instead of computing answers nobody is waiting for.
+        deadline: Option<std::time::Instant>,
+        reply: mpsc::Sender<Result<Vec<usize>, ServeError>>,
+    },
+    /// Fault injection: occupy the owning worker for `dur` (tests and
+    /// chaos drills — the deterministic "saturated pool" for deadline
+    /// coverage).
+    Stall {
+        dur: std::time::Duration,
         reply: mpsc::Sender<Result<Vec<usize>, ServeError>>,
     },
     /// Inference plus the confidence-margin telemetry the drift monitor
@@ -147,6 +165,8 @@ impl Job {
             Job::Infer { target, .. }
             | Job::Telemetry { target, .. }
             | Job::Crash { target, .. } => *target,
+            // Stalls are a pool-wide chaos tool, never canary-targeted.
+            Job::Stall { .. } => Target::Pool,
         }
     }
 
@@ -154,7 +174,7 @@ impl Job {
     /// no longer exists).
     fn fail_canary(self, reason: &'static str) {
         match self {
-            Job::Infer { reply, .. } | Job::Crash { reply, .. } => {
+            Job::Infer { reply, .. } | Job::Crash { reply, .. } | Job::Stall { reply, .. } => {
                 let _ = reply.send(Err(ServeError::Canary(reason)));
             }
             Job::Telemetry { reply, .. } => {
@@ -305,8 +325,35 @@ impl ServiceHandle {
     /// served by an active canary replica.
     pub fn infer(&self, rows: Vec<Vec<u8>>) -> Result<Vec<usize>, ServeError> {
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::Infer { rows, target: Target::Pool, reply })?;
+        self.submit(Job::Infer { rows, target: Target::Pool, deadline: None, reply })?;
         rx.recv().map_err(|_| ServeError::WorkerGone)?
+    }
+
+    /// Inference RPC with a per-request deadline: blocks at most
+    /// `timeout`, then returns [`ServeError::DeadlineExceeded`] instead
+    /// of waiting forever on a saturated queue.  An expired job is shed
+    /// by the first worker to pop it (it replies the same typed error
+    /// without executing), so abandoned requests cost the pool a queue
+    /// slot, not an inference; a job that was already mid-execution at
+    /// expiry completes and its late answer is discarded.
+    pub fn infer_deadline(
+        &self,
+        rows: Vec<Vec<u8>>,
+        timeout: std::time::Duration,
+    ) -> Result<Vec<usize>, ServeError> {
+        let deadline = std::time::Instant::now() + timeout;
+        let (reply, rx) = mpsc::channel();
+        self.submit(Job::Infer {
+            rows,
+            target: Target::Pool,
+            deadline: Some(deadline),
+            reply,
+        })?;
+        match rx.recv_timeout(timeout) {
+            Ok(result) => result,
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(ServeError::DeadlineExceeded),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServeError::WorkerGone),
+        }
     }
 
     /// Blocking inference RPC served EXCLUSIVELY by the canary replica
@@ -314,7 +361,7 @@ impl ServiceHandle {
     /// [`ServeError::Canary`] when no canary is active.
     pub fn infer_canary(&self, rows: Vec<Vec<u8>>) -> Result<Vec<usize>, ServeError> {
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::Infer { rows, target: Target::CanaryOnly, reply })?;
+        self.submit(Job::Infer { rows, target: Target::CanaryOnly, deadline: None, reply })?;
         rx.recv().map_err(|_| ServeError::WorkerGone)?
     }
 
@@ -578,6 +625,20 @@ impl ServiceHandle {
         rx.recv().map_err(|_| ServeError::WorkerGone)?
     }
 
+    /// Fault injection: occupy whichever replica pops this job for
+    /// `dur` — the deterministic "saturated pool" for deadline tests
+    /// and chaos drills.  Returns immediately; the returned receiver
+    /// resolves when the stall ends (drop it to fire and forget).
+    #[doc(hidden)]
+    pub fn inject_stall(
+        &self,
+        dur: std::time::Duration,
+    ) -> Result<mpsc::Receiver<Result<Vec<usize>, ServeError>>, ServeError> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(Job::Stall { dur, reply })?;
+        Ok(rx)
+    }
+
     fn submit(&self, job: Job) -> Result<(), ServeError> {
         let mut q = self.shared.queue.lock().unwrap();
         if q.shutdown {
@@ -772,10 +833,21 @@ fn worker_loop(shared: &Shared, idx: usize) {
 
 fn run_job(shared: &Shared, idx: usize, state: &mut WorkerState, my_version: &mut u64, job: Job) {
     match job {
-        Job::Infer { rows, reply, .. } => {
+        Job::Infer { rows, deadline, reply, .. } => {
+            // Shed expired work before computing it: the client already
+            // got DeadlineExceeded from its recv_timeout, so executing
+            // the job would burn the replica for a discarded answer.
+            if deadline.is_some_and(|d| std::time::Instant::now() > d) {
+                let _ = reply.send(Err(ServeError::DeadlineExceeded));
+                return;
+            }
             let outcome =
                 panic::catch_unwind(AssertUnwindSafe(|| state.service.infer_all(&rows)));
             reply_or_respawn(shared, idx, state, my_version, outcome, reply);
+        }
+        Job::Stall { dur, reply } => {
+            std::thread::sleep(dur);
+            let _ = reply.send(Ok(Vec::new()));
         }
         Job::Telemetry { rows, reply, .. } => {
             // Capture the fence version the request runs under BEFORE
@@ -1309,6 +1381,39 @@ mod tests {
             h.infer_canary(data.xs.clone()),
             Err(ServeError::Canary(_))
         ));
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn deadline_request_errors_on_a_stalled_pool() {
+        use std::time::{Duration, Instant};
+
+        let (model, data) = trained();
+        let (h, mut join) = spawn(EngineSpec::base());
+        h.program(model).unwrap();
+        // Idle pool: a generous deadline behaves exactly like infer().
+        let want = h.infer(data.xs.clone()).unwrap();
+        assert_eq!(
+            h.infer_deadline(data.xs.clone(), Duration::from_secs(30)).unwrap(),
+            want
+        );
+        // Stall the lone replica; a tight deadline must come back as a
+        // typed error instead of blocking until the stall clears.
+        let stall = h.inject_stall(Duration::from_millis(400)).unwrap();
+        let t0 = Instant::now();
+        assert!(matches!(
+            h.infer_deadline(data.xs.clone(), Duration::from_millis(40)),
+            Err(ServeError::DeadlineExceeded)
+        ));
+        assert!(
+            t0.elapsed() < Duration::from_millis(350),
+            "deadline must not wait out the stall"
+        );
+        // Once the stall ends the pool recovers; the expired job was
+        // shed unexecuted (its late answer had nowhere to go anyway).
+        stall.recv().unwrap().unwrap();
+        assert_eq!(h.infer(data.xs.clone()).unwrap(), want);
         h.shutdown();
         join.join();
     }

@@ -445,6 +445,254 @@ pub fn pack_features(rows: &[Vec<u8>]) -> Vec<u32> {
     pack_literals(rows) // identical packing, different row semantics
 }
 
+/// Row lanes per word of the 64-wide bit-sliced engine.
+pub const SLICE_LANES: usize = 64;
+
+/// Transposed literal planes for an arbitrary row count — the input
+/// layout of the 64-lane bit-sliced kernel ([`SlicedProgram`]).
+///
+/// Plane `f` is a contiguous run of `slices` `u64` words; bit `b` of
+/// `planes[f * slices + s]` is Boolean feature `f` of row
+/// `64*s + b`.  One `u64` therefore holds the SAME literal across 64
+/// rows, so every bitwise op of the clause walk does useful work for 64
+/// datapoints at once.  Rows past `rows` (the padding lanes of the last
+/// slice) read as all-zero feature rows — exactly the semantics of the
+/// unused lanes of a ragged 32-row batch in the Feature Memory layout.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SlicedBatch {
+    /// Feature-major planes: `features * slices` words.
+    pub planes: Vec<u64>,
+    /// Real row count (<= `slices * 64`).
+    pub rows: usize,
+    pub features: usize,
+    /// 64-row slices (`rows.div_ceil(64)`).
+    pub slices: usize,
+}
+
+impl SlicedBatch {
+    /// Rows including the padding lanes of the last slice.
+    pub fn padded_rows(&self) -> usize {
+        self.slices * SLICE_LANES
+    }
+
+    /// The contiguous plane of one feature.
+    #[inline]
+    pub fn plane(&self, feature: usize) -> &[u64] {
+        &self.planes[feature * self.slices..(feature + 1) * self.slices]
+    }
+}
+
+/// Transpose feature rows into 64-row literal planes, reusing `out`'s
+/// buffers (the zero-alloc steady state of the sliced bulk path).  The
+/// 64-lane, any-row-count mirror of [`pack_features`]; like the 32-lane
+/// packers it asserts non-empty input and uniform widths (serving entry
+/// points reject both as typed errors before packing).
+pub fn pack_literals_sliced_into(rows: &[Vec<u8>], out: &mut SlicedBatch) {
+    assert!(!rows.is_empty());
+    let features = rows[0].len();
+    let slices = rows.len().div_ceil(SLICE_LANES);
+    out.rows = rows.len();
+    out.features = features;
+    out.slices = slices;
+    out.planes.clear();
+    out.planes.resize(features * slices, 0);
+    for (r, row) in rows.iter().enumerate() {
+        assert_eq!(row.len(), features);
+        let (s, b) = (r / SLICE_LANES, r % SLICE_LANES);
+        for (f, &v) in row.iter().enumerate() {
+            out.planes[f * slices + s] |= (v as u64 & 1) << b;
+        }
+    }
+}
+
+/// Transpose into a fresh [`SlicedBatch`].
+pub fn pack_literals_sliced(rows: &[Vec<u8>]) -> SlicedBatch {
+    let mut out = SlicedBatch::default();
+    pack_literals_sliced_into(rows, &mut out);
+    out
+}
+
+/// One clause of a [`SlicedProgram`]: ops `start..end` of the flat
+/// arrays AND together; the 64-row output word commits `pol` into
+/// `class`.
+#[derive(Debug, Copy, Clone, PartialEq, Eq)]
+pub struct SlicedClause {
+    pub start: u32,
+    pub end: u32,
+    pub class: u16,
+    pub pol: i8,
+}
+
+/// The 64-lane transposed twin of [`SoaProgram`], derived from it once
+/// at program time (`derive_sliced_into`).  Two things change versus
+/// the 32-lane walk:
+///
+/// * literal planes are `u64` (one word = one literal across 64 rows),
+///   read contiguously per clause op — the inner loop is a streaming
+///   AND-reduction over whole plane rows, which the compiler
+///   auto-vectorizes;
+/// * degenerate clauses are resolved at derivation so the inner loop
+///   stays branch-free: an *exclude-only* clause (empty op range — an
+///   empty AND is true) becomes a per-class constant in `base_sums`,
+///   and a *tautology-killer* (a literal ANDed with its own complement,
+///   the encoder's empty-class filler) can never fire and is dropped.
+#[derive(Debug, Clone, Default)]
+pub struct SlicedProgram {
+    pub feats: Vec<u32>,
+    /// XOR masks folding the L bit: 0 for the feature, `u64::MAX` for
+    /// its complement.
+    pub masks: Vec<u64>,
+    pub clauses: Vec<SlicedClause>,
+    /// Per-class constant contribution of the clauses resolved away at
+    /// derivation (+pol per exclude-only clause, for every row —
+    /// padding lanes included, matching the 32-lane walk where an empty
+    /// segment commits a full `u32::MAX` word).
+    pub base_sums: Vec<i32>,
+    /// Clause commits of the UNDERIVED program: resolved clauses still
+    /// cost their commit cycle on the modeled hardware, so cycle
+    /// accounting keeps parity with the 32-lane walk.
+    pub total_clauses: u64,
+    pub classes: usize,
+    /// Copied from the source [`SoaProgram`] (the underived bound), so
+    /// the O(1) batch bounds check rejects exactly the batches the
+    /// 32-lane walk rejects even when derivation dropped the clause
+    /// holding the maximum address.
+    pub max_feat: Option<u32>,
+}
+
+impl SlicedProgram {
+    pub fn clause_count(&self) -> usize {
+        self.clauses.len()
+    }
+
+    /// Drop the program, keeping buffers for the next derivation.
+    pub fn clear(&mut self) {
+        self.feats.clear();
+        self.masks.clear();
+        self.clauses.clear();
+        self.base_sums.clear();
+        self.total_clauses = 0;
+        self.classes = 0;
+        self.max_feat = None;
+    }
+
+    /// Evaluate every clause over `batch`, accumulating per-row class
+    /// sums into `sums` (class-major: `sums[class * padded_rows + row]`,
+    /// caller-zeroed, length `classes * batch.padded_rows()`).  `cur` is
+    /// the reusable clause accumulator (one word per slice).  Returns
+    /// the commit count of the equivalent 32-lane walk
+    /// (`total_clauses`).
+    ///
+    /// Callers must bounds-check `max_feat < batch.features` first,
+    /// like [`SoaProgram::execute_into`].
+    pub fn execute_into(&self, batch: &SlicedBatch, sums: &mut [i32], cur: &mut Vec<u64>) -> u64 {
+        let slices = batch.slices;
+        let padded = batch.padded_rows();
+        debug_assert_eq!(sums.len(), self.classes * padded);
+        for (class, &base) in self.base_sums.iter().enumerate() {
+            if base != 0 {
+                for v in &mut sums[class * padded..(class + 1) * padded] {
+                    *v += base;
+                }
+            }
+        }
+        cur.clear();
+        cur.resize(slices, 0);
+        for clause in &self.clauses {
+            let (s, e) = (clause.start as usize, clause.end as usize);
+            cur.fill(u64::MAX);
+            for (&f, &m) in self.feats[s..e].iter().zip(&self.masks[s..e]) {
+                let plane = &batch.planes[f as usize * slices..(f as usize + 1) * slices];
+                // Split on the mask OUTSIDE the slice loop: both arms
+                // are straight-line streaming reductions over contiguous
+                // words, which the auto-vectorizer turns into wide SIMD.
+                if m == 0 {
+                    for (c, &p) in cur.iter_mut().zip(plane) {
+                        *c &= p;
+                    }
+                } else {
+                    for (c, &p) in cur.iter_mut().zip(plane) {
+                        *c &= !p;
+                    }
+                }
+            }
+            // Commit 64 rows at a time: clause outputs are mostly-zero
+            // words on real models (see `apply_commit`), so iterating
+            // set bits beats a 64-lane branchless unpack.
+            let row0 = clause.class as usize * padded;
+            let pol = clause.pol as i32;
+            for (slice, &word) in cur.iter().enumerate() {
+                let mut w = word;
+                let base = row0 + slice * SLICE_LANES;
+                while w != 0 {
+                    let b = w.trailing_zeros() as usize;
+                    sums[base + b] += pol;
+                    w &= w - 1;
+                }
+            }
+        }
+        self.total_clauses
+    }
+}
+
+/// Derive the 64-lane [`SlicedProgram`] from a predecoded
+/// [`SoaProgram`], reusing `out`'s buffers (the zero-alloc reprogram
+/// path).  Exclude-only and tautology-killer clauses are resolved here
+/// — see the [`SlicedProgram`] docs.
+pub fn derive_sliced_into(prog: &SoaProgram, classes: usize, out: &mut SlicedProgram) {
+    out.clear();
+    out.classes = classes;
+    out.base_sums.resize(classes, 0);
+    out.total_clauses = prog.clauses.len() as u64;
+    out.max_feat = prog.max_feat;
+    out.feats.reserve(prog.feats.len());
+    out.masks.reserve(prog.feats.len());
+    // Scratch: per-clause map feature -> seen-mask bits (1 = plain,
+    // 2 = complement); both bits set means f AND !f — a tautology
+    // killer that can never fire.
+    let mut seen: std::collections::HashMap<u32, u8> = std::collections::HashMap::new();
+    for seg in &prog.clauses {
+        let (s, e) = (seg.start as usize, seg.end as usize);
+        if s == e {
+            // Exclude-only clause: the empty AND is true for every row.
+            out.base_sums[seg.class as usize] += seg.pol as i32;
+            continue;
+        }
+        seen.clear();
+        let mut dead = false;
+        for (&f, &m) in prog.feats[s..e].iter().zip(&prog.masks[s..e]) {
+            let bit = if m == 0 { 1u8 } else { 2u8 };
+            let entry = seen.entry(f).or_insert(0);
+            *entry |= bit;
+            if *entry == 3 {
+                dead = true;
+                break;
+            }
+        }
+        if dead {
+            continue;
+        }
+        let start = out.feats.len() as u32;
+        for (&f, &m) in prog.feats[s..e].iter().zip(&prog.masks[s..e]) {
+            out.feats.push(f);
+            out.masks.push(if m == 0 { 0 } else { u64::MAX });
+        }
+        out.clauses.push(SlicedClause {
+            start,
+            end: out.feats.len() as u32,
+            class: seg.class,
+            pol: seg.pol,
+        });
+    }
+}
+
+/// Derive into a fresh [`SlicedProgram`].
+pub fn derive_sliced(prog: &SoaProgram, classes: usize) -> SlicedProgram {
+    let mut out = SlicedProgram::default();
+    derive_sliced_into(prog, classes, &mut out);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -631,5 +879,156 @@ mod tests {
         assert_eq!(sums[1][3], -1);
         assert_eq!(sums[1][1], 0);
         assert_eq!(sums[0][0], 0);
+    }
+
+    #[test]
+    fn sliced_pack_bit_layout_and_padding() {
+        // 3 rows, 2 features: plane f, slice 0, bit b = rows[b][f].
+        let rows = vec![vec![1u8, 0], vec![0u8, 1], vec![1u8, 1]];
+        let b = pack_literals_sliced(&rows);
+        assert_eq!(b.rows, 3);
+        assert_eq!(b.features, 2);
+        assert_eq!(b.slices, 1);
+        assert_eq!(b.padded_rows(), 64);
+        assert_eq!(b.plane(0), &[0b101u64]);
+        assert_eq!(b.plane(1), &[0b110u64]);
+
+        // 65 rows forces a second slice; row 64 lands in bit 0 of it.
+        let rows: Vec<Vec<u8>> = (0..65).map(|r| vec![u8::from(r == 64)]).collect();
+        let b = pack_literals_sliced(&rows);
+        assert_eq!(b.slices, 2);
+        assert_eq!(b.plane(0), &[0u64, 1u64]);
+
+        // Reuse: repacking a smaller batch leaves no residue.
+        let mut reused = b;
+        pack_literals_sliced_into(&[vec![1u8]], &mut reused);
+        assert_eq!(reused.slices, 1);
+        assert_eq!(reused.plane(0), &[1u64]);
+    }
+
+    #[test]
+    fn sliced_walk_matches_packed_walk_on_32_rows() {
+        // Same program and rows as `soa_walk_matches_packed_walk`: the
+        // 64-lane kernel must agree bit lane for bit lane.
+        let instrs = vec![
+            Instr::new(false, false, false, 0, false),
+            Instr::new(false, false, false, 3, true),
+            Instr::new(true, true, false, 2, false),
+            Instr::new(false, false, true, 1, true),
+        ];
+        let packed = vec![0b1010u32, 0b0110u32];
+        let reference = decode_infer_packed(&instrs, &packed, 2).unwrap();
+
+        let prog = predecode(&instrs, 2, MAX_LITERALS).unwrap();
+        let sliced = derive_sliced(&prog, 2);
+        assert_eq!(sliced.clause_count(), 3);
+        assert_eq!(sliced.total_clauses, 3);
+        assert_eq!(sliced.max_feat, prog.max_feat);
+        assert_eq!(sliced.masks, vec![0, u64::MAX, 0, u64::MAX]);
+
+        // Rows 0..32 reconstructed from the packed lanes.
+        let rows: Vec<Vec<u8>> = (0..32)
+            .map(|b| packed.iter().map(|&w| (w >> b & 1) as u8).collect())
+            .collect();
+        let batch = pack_literals_sliced(&rows);
+        let mut sums = vec![0i32; 2 * batch.padded_rows()];
+        let mut cur = Vec::new();
+        let commits = sliced.execute_into(&batch, &mut sums, &mut cur);
+        assert_eq!(commits, 3);
+        for class in 0..2 {
+            for b in 0..32 {
+                assert_eq!(
+                    sums[class * batch.padded_rows() + b],
+                    reference[class][b],
+                    "class {class} lane {b}"
+                );
+            }
+        }
+        // Padding rows behave like all-zero feature rows: class 1's
+        // clause is !f0, which FIRES on them.
+        assert_eq!(sums[batch.padded_rows() + 63], 1);
+    }
+
+    #[test]
+    fn sliced_derivation_drops_tautology_killers() {
+        // Class 0 has real clauses; class 1 is the encoder's
+        // tautology-killer pair (f0 AND !f0) — it can never fire, so
+        // derivation resolves it out while keeping commit-count parity.
+        let instrs = vec![
+            Instr::new(false, false, false, 0, false), // class 0: f0
+            Instr::new(false, true, true, 0, false),   // class 1 killer: f0
+            Instr::new(false, true, true, 1, true),    // ... AND !f0
+        ];
+        let prog = predecode(&instrs, 2, MAX_LITERALS).unwrap();
+        assert_eq!(prog.clause_count(), 2);
+        let sliced = derive_sliced(&prog, 2);
+        assert_eq!(sliced.clause_count(), 1, "killer clause dropped");
+        assert_eq!(sliced.total_clauses, 2, "commit cycles keep parity");
+        assert_eq!(sliced.base_sums, vec![0, 0]);
+
+        let rows = vec![vec![1u8], vec![0u8]];
+        let batch = pack_literals_sliced(&rows);
+        let mut sums = vec![0i32; 2 * batch.padded_rows()];
+        assert_eq!(sliced.execute_into(&batch, &mut sums, &mut Vec::new()), 2);
+        assert_eq!(sums[0], 1); // class 0, row 0: f0=1
+        assert_eq!(sums[1], 0); // class 0, row 1: f0=0
+        // Class 1 never fires anywhere.
+        let padded = batch.padded_rows();
+        assert!(sums[padded..].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn sliced_derivation_resolves_exclude_only_clauses() {
+        // An empty clause segment (exclude-only: the empty AND is true)
+        // cannot come out of `predecode`, but a hand-built SoaProgram
+        // can hold one; the 32-lane walk commits a full u32::MAX word
+        // for it, and the sliced derivation must match via `base_sums`.
+        let prog = SoaProgram {
+            feats: vec![0],
+            masks: vec![0],
+            clauses: vec![
+                ClauseSeg { start: 0, end: 0, class: 0, pol: -1 }, // exclude-only
+                ClauseSeg { start: 0, end: 1, class: 1, pol: 1 },  // f0
+            ],
+            max_feat: Some(0),
+        };
+        let mut soa_sums = vec![[0i32; 32]; 2];
+        prog.execute_into(&[0b01u32], &mut soa_sums);
+
+        let sliced = derive_sliced(&prog, 2);
+        assert_eq!(sliced.clause_count(), 1);
+        assert_eq!(sliced.base_sums, vec![-1, 0]);
+        assert_eq!(sliced.total_clauses, 2);
+
+        let rows = vec![vec![1u8], vec![0u8]];
+        let batch = pack_literals_sliced(&rows);
+        let mut sums = vec![0i32; 2 * batch.padded_rows()];
+        sliced.execute_into(&batch, &mut sums, &mut Vec::new());
+        let padded = batch.padded_rows();
+        for b in 0..2 {
+            assert_eq!(sums[b], soa_sums[0][b], "class 0 row {b}");
+            assert_eq!(sums[padded + b], soa_sums[1][b], "class 1 row {b}");
+        }
+        // The exclude-only constant covers padding rows too, exactly
+        // like the u32::MAX commit covers unused lanes.
+        assert_eq!(sums[padded - 1], -1);
+    }
+
+    #[test]
+    fn sliced_derivation_reuses_buffers() {
+        let instrs = vec![Instr::new(false, false, false, 0, false)];
+        let prog = predecode(&instrs, 1, 8).unwrap();
+        let mut sliced = derive_sliced(&prog, 1);
+        assert_eq!(sliced.clause_count(), 1);
+        // Re-derive in place from a different program: no residue.
+        let killer = vec![
+            Instr::new(false, false, false, 0, false),
+            Instr::new(false, false, false, 1, true),
+        ];
+        let prog2 = predecode(&killer, 1, 8).unwrap();
+        derive_sliced_into(&prog2, 1, &mut sliced);
+        assert_eq!(sliced.clause_count(), 0);
+        assert_eq!(sliced.total_clauses, 1);
+        assert_eq!(sliced.base_sums, vec![0]);
     }
 }

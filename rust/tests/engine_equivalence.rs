@@ -225,6 +225,162 @@ fn multicore_threaded_serial_and_single_core_agree() {
     }
 }
 
+// ---------------------------------------------------------------------
+// §sliced — the 64-lane bit-sliced kernel must be byte-identical to the
+// 32-lane SoA walk and the dense reference: preds, per-row class sums
+// AND margins, for random models (tautology-killer classes and
+// exclude-only clauses included) over ragged row counts.
+// ---------------------------------------------------------------------
+
+/// Rows of a random batch of arbitrary size.
+fn random_rows_n(rng: &mut XorShift64Star, features: usize, n: usize) -> Vec<Vec<u8>> {
+    (0..n)
+        .map(|_| (0..features).map(|_| u8::from(rng.next_f64() < 0.5)).collect())
+        .collect()
+}
+
+/// Clear some clauses entirely (exclude-only clauses: no includes —
+/// the encoder skips them, so every path must agree they contribute
+/// nothing).
+fn clear_clause(m: &mut TMModel, class: usize, clause: usize) {
+    for lit in 0..m.shape.literals() {
+        m.set_include(class, clause, lit, false);
+    }
+}
+
+#[test]
+fn sliced_kernel_matches_soa_and_dense_reference_over_ragged_row_counts() {
+    for seed in 0..12u64 {
+        let mut rng = XorShift64Star::new(70_000 + seed);
+        let shape = TMShape::synthetic(
+            2 + rng.below(20) as usize,
+            1 + rng.below(5) as usize,
+            1 + rng.below(10) as usize,
+        );
+        // Tautology-killer coverage: every third model gets an
+        // include-free class; exclude-only coverage: every fourth
+        // model gets clause 0 of class 0 cleared after fill.
+        let empty: Vec<usize> = if seed % 3 == 0 { vec![0] } else { vec![] };
+        let mut model = random_model(&mut rng, &shape, rng.next_f64() * 0.3, &empty);
+        if seed % 4 == 0 && !empty.contains(&0) {
+            clear_clause(&mut model, 0, 0);
+        }
+        let instrs = isa::encode(&model);
+
+        for n in [1usize, 63, 64, 65, 1000] {
+            // Keep the big case to a few seeds so tier-1 stays fast.
+            if n == 1000 && seed >= 4 {
+                continue;
+            }
+            let rows = random_rows_n(&mut rng, shape.features, n);
+
+            // 32-lane oracle: per-batch SoA walk.
+            let mut soa = Core::new(AccelConfig::base());
+            soa.program(shape.classes, shape.clauses, &instrs).unwrap();
+            let mut soa_preds: Vec<u8> = Vec::new();
+            let mut soa_sums: Vec<Vec<i32>> = Vec::new(); // per row, per class
+            let mut soa_margins: Vec<i32> = Vec::new();
+            for chunk in rows.chunks(32) {
+                let r = soa.run_batch(&isa::pack_features(chunk)).unwrap();
+                for lane in 0..chunk.len() {
+                    soa_preds.push(r.preds[lane]);
+                    soa_sums.push(r.class_sums.iter().map(|s| s[lane]).collect());
+                }
+                soa_margins
+                    .extend(rttm::accel::engine::margins_from_sums(&r.class_sums, chunk.len()));
+            }
+
+            // Sliced path, via the core-level kernel (cloned out of
+            // the scratch so the core is free for the stats asserts).
+            let mut sliced = Core::new(AccelConfig::base());
+            sliced.program(shape.classes, shape.clauses, &instrs).unwrap();
+            let r = sliced.run_rows_sliced_ref(&rows).unwrap().clone();
+            assert_eq!(r.rows, n, "seed {seed} n {n}");
+            for row in 0..n {
+                assert_eq!(r.preds[row], soa_preds[row], "seed {seed} n {n} row {row}: preds");
+                for class in 0..shape.classes {
+                    assert_eq!(
+                        r.class_sum(class, row),
+                        soa_sums[row][class],
+                        "seed {seed} n {n} row {row} class {class}: sums"
+                    );
+                }
+            }
+            // Lifetime accounting keeps parity with the per-batch walk.
+            assert_eq!(sliced.stats, soa.stats, "seed {seed} n {n}: stats");
+            assert_eq!(sliced.batches_run, soa.batches_run, "seed {seed} n {n}");
+
+            // Dense reference per row.
+            for (row, x) in rows.iter().enumerate() {
+                let lits = reference::literals_from_features(x);
+                assert_eq!(
+                    r.preds[row] as usize,
+                    reference::predict_dense(&model, &lits),
+                    "seed {seed} n {n} row {row}: dense preds"
+                );
+            }
+
+            // Engine-level margins path (pinned kernels on fresh cores
+            // so StreamStats and scratch reuse are exercised too).
+            let mut a = Core::new(AccelConfig::base());
+            a.program(shape.classes, shape.clauses, &instrs).unwrap();
+            let (p_soa, m_soa, s_soa) =
+                rttm::accel::engine::classify_rows_margins_core_soa(&mut a, &rows).unwrap();
+            let mut b = Core::new(AccelConfig::base());
+            b.program(shape.classes, shape.clauses, &instrs).unwrap();
+            let (p_sl, m_sl, s_sl) =
+                rttm::accel::engine::classify_rows_margins_core(&mut b, &rows).unwrap();
+            if n >= rttm::accel::engine::SLICED_MIN_ROWS {
+                // Above the threshold the auto path really is sliced —
+                // same answers, same simulated accounting.
+                assert_eq!(s_sl.simulated_cycles, s_soa.simulated_cycles, "seed {seed} n {n}");
+                assert_eq!(s_sl.batches, s_soa.batches, "seed {seed} n {n}");
+            }
+            assert_eq!(p_sl, p_soa, "seed {seed} n {n}: engine preds");
+            assert_eq!(m_sl, m_soa, "seed {seed} n {n}: engine margins");
+            assert_eq!(m_sl, soa_margins, "seed {seed} n {n}: margins vs oracle");
+        }
+    }
+}
+
+#[test]
+fn sliced_multicore_matches_sliced_single_core_over_ragged_row_counts() {
+    for seed in 0..6u64 {
+        let mut rng = XorShift64Star::new(80_000 + seed);
+        let classes = 2 + rng.below(7) as usize;
+        let features = 2 + rng.below(16) as usize;
+        let shape = TMShape::synthetic(features, classes, 1 + rng.below(8) as usize);
+        let empty: Vec<usize> = if seed % 2 == 0 { vec![classes - 1] } else { vec![] };
+        let model = random_model(&mut rng, &shape, 0.2, &empty);
+        let n = [1usize, 65, 300][(seed % 3) as usize];
+        let rows = random_rows_n(&mut rng, shape.features, n);
+
+        let mut single = Core::new(AccelConfig::single_core());
+        single.program_model(&model).unwrap();
+        let sref = single.run_rows_sliced_ref(&rows).unwrap();
+        let want: Vec<u8> = sref.preds[..n].to_vec();
+        let want_sums: Vec<Vec<i32>> = (0..n)
+            .map(|row| (0..classes).map(|c| sref.class_sum(c, row)).collect())
+            .collect();
+
+        for mode in [ParallelMode::Serial, ParallelMode::Threads] {
+            let mut mc = MultiCore::five_core().with_parallel(mode);
+            mc.program_model(&model).unwrap();
+            let r = mc.run_rows_sliced_ref(&rows).unwrap();
+            assert_eq!(&r.preds[..n], &want[..], "seed {seed} {mode:?} n {n}");
+            for row in 0..n {
+                for class in 0..classes {
+                    assert_eq!(
+                        r.class_sum(class, row),
+                        want_sums[row][class],
+                        "seed {seed} {mode:?} row {row} class {class}"
+                    );
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn reprogramming_soa_core_is_idempotent_with_tautology_killers() {
     // Program A (with an empty class), program B, program A again: the

@@ -159,6 +159,50 @@ fn injected_panic_respawns_and_answers_stay_correct() {
 }
 
 #[test]
+fn deadline_requests_type_out_on_a_saturated_pool_and_serving_recovers() {
+    use std::time::{Duration, Instant};
+
+    let (model, data) = trained(61);
+    // One replica so a single stall saturates the whole pool
+    // deterministically.
+    let pool = spawn_harness(EngineSpec::base(), 1);
+    let h = pool.handle.clone();
+    h.program(model).unwrap();
+    let want = h.infer(data.xs.clone()).unwrap();
+
+    // Deadline requests on an idle pool behave exactly like infer().
+    assert_eq!(
+        h.infer_deadline(data.xs.clone(), Duration::from_secs(30)).unwrap(),
+        want
+    );
+
+    // Stall the lone replica, then pile deadline requests behind it:
+    // every one must come back as the typed error well before the
+    // stall clears, instead of blocking forever.
+    let stall = h.inject_stall(Duration::from_millis(500)).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..3 {
+        assert!(matches!(
+            h.infer_deadline(data.xs.clone(), Duration::from_millis(30)),
+            Err(ServeError::DeadlineExceeded)
+        ));
+    }
+    assert!(
+        t0.elapsed() < Duration::from_millis(400),
+        "deadline requests must not wait out the stall"
+    );
+
+    // The stall ends, the expired jobs are shed unexecuted, and the
+    // pool serves correctly again — no respawns, no dead replicas.
+    stall.recv().unwrap().unwrap();
+    assert_eq!(h.infer(data.xs.clone()).unwrap(), want);
+    let stats = h.pool_stats();
+    assert!(stats.replicas.iter().all(|r| r.alive));
+    assert_eq!(stats.replicas.iter().map(|r| r.respawns).sum::<u64>(), 0);
+    pool.shutdown();
+}
+
+#[test]
 fn canary_isolation_holds_under_concurrent_traffic() {
     let (model_a, data) = trained(41);
     let (model_b, _) = trained(42);
