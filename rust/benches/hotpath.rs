@@ -655,6 +655,105 @@ fn main() {
         _ => println!("(artifacts not built or pjrt feature off; skipping PJRT rows)"),
     }
 
+    // 8. §saturation — admission front-end under classed overload.
+    //    A 4-replica pool with tight data-class queues; one Critical
+    //    client is timed per request while background Low/Normal
+    //    clients push the offered load (client count over replica
+    //    count) to 1x, 2x and 10x.  Emits the Critical p99 at each
+    //    load plus the shed fraction at 10x — the CI gate requires the
+    //    keys to exist and the 2x p99 to stay within 2x of uncontended
+    //    (control traffic must ride through data-plane storms).
+    {
+        use rttm::coordinator::server::spawn_pool_cfg;
+        use rttm::coordinator::{AdmissionConfig, PoolConfig, Priority, ShedPolicy};
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        println!("\n--- admission saturation (4 replicas, classed storms) ---");
+        let sat_replicas = 4usize;
+        let cfg = PoolConfig {
+            replicas: sat_replicas,
+            admission: AdmissionConfig {
+                // Data classes small enough that 10x load visibly
+                // sheds; control classes deep and blocking.
+                queue_cap: [4, 4, 256, 256],
+                policy: [
+                    ShedPolicy::ShedOldest,
+                    ShedPolicy::Reject,
+                    ShedPolicy::Block,
+                    ShedPolicy::Block,
+                ],
+            },
+            autoscale: None,
+        };
+        let (h, mut join) = spawn_pool_cfg(spec.clone(), cfg);
+        h.program(model.clone()).unwrap();
+        let sat_rows: Vec<Vec<u8>> = (0..64).map(|j| data.xs[j % data.len()].clone()).collect();
+        let n_timed = scale(200).max(40);
+
+        // One storm at `bg_clients` background clients; returns the
+        // timed Critical client's p99 (ms) and the shed fraction over
+        // every class, both from this storm only (counter deltas).
+        let storm = |bg_clients: usize| -> (f64, f64) {
+            let before = h.admission_stats();
+            let stop = Arc::new(AtomicBool::new(false));
+            let bg: Vec<_> = (0..bg_clients)
+                .map(|i| {
+                    let h = h.clone();
+                    let rows = sat_rows.clone();
+                    let stop = Arc::clone(&stop);
+                    let class = if i % 3 == 0 { Priority::Normal } else { Priority::Low };
+                    std::thread::spawn(move || {
+                        while !stop.load(Ordering::Relaxed) {
+                            // Overload refusals are the point at 10x.
+                            let _ = h.infer_class(rows.clone(), class);
+                        }
+                    })
+                })
+                .collect();
+            let mut lat_ms = Vec::with_capacity(n_timed);
+            for _ in 0..n_timed {
+                let t0 = std::time::Instant::now();
+                h.infer_class(sat_rows.clone(), Priority::Critical).unwrap();
+                lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            stop.store(true, Ordering::Relaxed);
+            for t in bg {
+                t.join().unwrap();
+            }
+            let after = h.admission_stats();
+            let submitted: u64 = after
+                .classes
+                .iter()
+                .zip(before.classes.iter())
+                .map(|(a, b)| (a.admitted + a.rejected) - (b.admitted + b.rejected))
+                .sum();
+            let lost = after.lost_total() - before.lost_total();
+            lat_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+            let p99 = lat_ms[(lat_ms.len() * 99 / 100).min(lat_ms.len() - 1)];
+            (p99, lost as f64 / submitted.max(1) as f64)
+        };
+
+        let (p99_unc, _) = storm(0);
+        let (p99_2x, shed_2x) = storm(2 * sat_replicas - 1);
+        let (p99_10x, shed_10x) = storm(10 * sat_replicas - 1);
+        println!(
+            "critical p99 uncontended:  {p99_unc:>10.3} ms   (64-row requests, 1 client)"
+        );
+        println!(
+            "critical p99 at 2x load:   {p99_2x:>10.3} ms   (shed frac {shed_2x:.3})"
+        );
+        println!(
+            "critical p99 at 10x load:  {p99_10x:>10.3} ms   (shed frac {shed_10x:.3})"
+        );
+        json.push(("admission_p99_ms_uncontended".into(), p99_unc));
+        json.push(("admission_p99_ms_2x".into(), p99_2x));
+        json.push(("admission_p99_ms_10x".into(), p99_10x));
+        json.push(("admission_shed_frac_10x".into(), shed_10x));
+        h.shutdown();
+        join.join();
+    }
+
     write_json("BENCH_hotpath.json", &json);
 }
 

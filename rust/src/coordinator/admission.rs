@@ -1,0 +1,644 @@
+//! Admission front-end policy for the replica-pool server: priority
+//! classes, per-class bounded queues with backpressure policies,
+//! deadline-aware admission, and the pool autoscaler/fault-injection
+//! configuration.  (EXPERIMENTS.md §Admission.)
+//!
+//! This module owns the *policy* half of the front-end — what gets in,
+//! what gets shed, and what the counters mean.  The *mechanics* (the
+//! sharded per-replica work queues, work stealing, the worker pop loop)
+//! live in [`super::server`], which consults these types at every
+//! submit and pop:
+//!
+//! * [`Priority`] — four request classes, `Low < Normal < Critical`.
+//!   Workers always pop the highest class first, so under overload the
+//!   control plane (autotune telemetry at `High`, canary mirrors at
+//!   `Critical`) keeps flowing while bulk `Low` traffic queues or sheds.
+//! * [`ShedPolicy`] — what a full class queue does to a new submission:
+//!   block until space, reject it (`ServeError::Overloaded`), or shed
+//!   the oldest queued request of the same class to make room.
+//! * [`ClassCounters`] / [`ClassStats`] — per-class accounting with a
+//!   closed-form reconciliation invariant (see [`ClassStats`]): every
+//!   submitted request is admitted or rejected, and every admitted
+//!   request is served, shed, or still queued.
+//! * [`ServiceEstimator`] — an EWMA of observed per-request service
+//!   time; the submit path uses it to reject requests whose deadline
+//!   cannot be met given current queue depth (deadline-aware admission:
+//!   infeasible work is refused at submit, not discovered at pop).
+//! * [`AutoscaleConfig`] — the supervisor policy scaling the pool
+//!   between `min..=max` replicas from queue depth and deadline misses.
+//! * [`FaultPlan`] — the generalized fault-injection surface (stall /
+//!   panic-on-nth-job / drop-reply on a chosen replica) that overload
+//!   and supervision tests share instead of hand-rolling failure modes.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Number of priority classes (the length of every per-class array).
+pub const PRIORITY_COUNT: usize = 4;
+
+/// Request priority class.  Ordered: a worker looking for its next job
+/// always drains higher classes first, across every queue shard it can
+/// see, so `Critical` requests overtake queued `Low` ones everywhere.
+///
+/// The default for every pre-existing `ServiceHandle` RPC is `Normal`;
+/// canary-targeted requests default to `Critical` (the mirrored
+/// evaluation stream is control traffic — starving it under overload
+/// would stall promote/reject verdicts exactly when they matter).
+#[derive(Debug, Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    Low,
+    Normal,
+    High,
+    Critical,
+}
+
+impl Priority {
+    /// All classes, lowest first (index order).
+    pub const ALL: [Priority; PRIORITY_COUNT] =
+        [Priority::Low, Priority::Normal, Priority::High, Priority::Critical];
+
+    /// Stable index into per-class arrays (`Low = 0 … Critical = 3`).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+            Priority::Critical => "critical",
+        }
+    }
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "low" => Ok(Priority::Low),
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            "critical" => Ok(Priority::Critical),
+            other => Err(format!(
+                "unknown priority {other:?} (expected low|normal|high|critical)"
+            )),
+        }
+    }
+}
+
+/// What a full class queue does to the next submission of that class.
+#[derive(Debug, Copy, Clone, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Hold the submitting client until a slot frees up (or the pool
+    /// shuts down).  The pre-admission behaviour for every class —
+    /// nothing is ever refused, clients just wait.
+    Block,
+    /// Refuse the new submission with `ServeError::Overloaded`.  The
+    /// client finds out immediately and can back off or downgrade.
+    Reject,
+    /// Evict the oldest queued request of the SAME class (its client
+    /// gets `ServeError::Overloaded`) and admit the new one — freshest
+    /// data wins, which is what a telemetry or sensor stream wants.
+    ShedOldest,
+}
+
+impl std::fmt::Display for ShedPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ShedPolicy::Block => "block",
+            ShedPolicy::Reject => "reject",
+            ShedPolicy::ShedOldest => "shed-oldest",
+        })
+    }
+}
+
+impl std::str::FromStr for ShedPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "block" => Ok(ShedPolicy::Block),
+            "reject" => Ok(ShedPolicy::Reject),
+            "shed-oldest" | "shed_oldest" | "shedoldest" => Ok(ShedPolicy::ShedOldest),
+            other => Err(format!(
+                "unknown shed policy {other:?} (expected block|reject|shed-oldest)"
+            )),
+        }
+    }
+}
+
+/// Per-class queue bounds and backpressure policies.
+///
+/// The default (`cap = 1024`, `Block` everywhere) reproduces the
+/// pre-admission single-queue behaviour for every existing caller: no
+/// request is ever refused, submitters just queue.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Per-class queue capacity, indexed by [`Priority::index`].  The
+    /// bound is enforced at submit time; under concurrent submitters it
+    /// is a soft cap (a handful of in-flight submissions may overshoot
+    /// by one each — never unbounded).
+    pub queue_cap: [usize; PRIORITY_COUNT],
+    /// Per-class policy when the class queue is at capacity.
+    pub policy: [ShedPolicy; PRIORITY_COUNT],
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            queue_cap: [1024; PRIORITY_COUNT],
+            policy: [ShedPolicy::Block; PRIORITY_COUNT],
+        }
+    }
+}
+
+impl AdmissionConfig {
+    /// The `rttm serve --queue-cap N --shed-policy P` shape: one cap
+    /// for every class, `P` applied to the *data* classes (`Low`,
+    /// `Normal`) while the control classes (`High`, `Critical`) always
+    /// block — control traffic is delayed under overload, never shed.
+    pub fn uniform(queue_cap: usize, data_policy: ShedPolicy) -> Self {
+        AdmissionConfig {
+            queue_cap: [queue_cap; PRIORITY_COUNT],
+            policy: [data_policy, data_policy, ShedPolicy::Block, ShedPolicy::Block],
+        }
+    }
+
+    pub fn cap(&self, p: Priority) -> usize {
+        self.queue_cap[p.index()]
+    }
+
+    pub fn policy(&self, p: Priority) -> ShedPolicy {
+        self.policy[p.index()]
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for p in Priority::ALL {
+            if self.cap(p) == 0 {
+                return Err(format!("queue cap for class {p} must be >= 1"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Snapshot of one class's admission counters.
+///
+/// Reconciliation invariants (the overload tests assert both):
+///
+/// * every submission is accounted exactly once at the front door:
+///   `submitted_by_clients == admitted + rejected`;
+/// * every admitted request is accounted exactly once at the back:
+///   `admitted == served + shed + depth`.
+///
+/// `deadline_misses` overlaps the other counters (an infeasible-at-
+/// submit request is also `rejected`; an expired-at-pop job is also
+/// `shed`) — it answers "how often are deadlines missed", not "where
+/// did the request go".
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ClassStats {
+    /// Requests currently queued (admitted, not yet popped).
+    pub depth: u64,
+    /// Requests accepted into a queue.
+    pub admitted: u64,
+    /// Requests refused at submit (`Overloaded` under the `Reject`
+    /// policy, or `DeadlineExceeded` from deadline-aware admission).
+    pub rejected: u64,
+    /// Admitted requests dropped without execution: evicted by
+    /// `ShedOldest`, expired at pop, or discarded at pool teardown.
+    pub shed: u64,
+    /// Admitted requests popped for execution.
+    pub served: u64,
+    /// Deadline misses: infeasible at submit plus expired at pop.
+    pub deadline_misses: u64,
+}
+
+/// Lock-free per-class counters (the live half of [`ClassStats`]).
+/// `depth` is maintained under the queue shard locks (increment before
+/// push, decrement on removal), so it can never underflow.
+#[derive(Debug, Default)]
+pub struct ClassCounters {
+    depth: AtomicU64,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    shed: AtomicU64,
+    served: AtomicU64,
+    deadline_misses: AtomicU64,
+}
+
+impl ClassCounters {
+    pub fn depth(&self) -> u64 {
+        self.depth.load(Ordering::Acquire)
+    }
+
+    /// A request was accepted and enqueued (call before the push is
+    /// visible to poppers).
+    pub fn admit(&self) {
+        self.admitted.fetch_add(1, Ordering::AcqRel);
+        self.depth.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// A request was refused at submit under the `Reject` policy.
+    pub fn reject_overloaded(&self) {
+        self.rejected.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// A request was refused at submit because its deadline is
+    /// infeasible at current queue depth.
+    pub fn reject_deadline(&self) {
+        self.rejected.fetch_add(1, Ordering::AcqRel);
+        self.deadline_misses.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// A queued request was removed to be executed.
+    pub fn pop_served(&self) {
+        self.depth.fetch_sub(1, Ordering::AcqRel);
+        self.served.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// A queued request was removed and dropped unexecuted (eviction,
+    /// canary drain, pool teardown).
+    pub fn pop_shed(&self) {
+        self.depth.fetch_sub(1, Ordering::AcqRel);
+        self.shed.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// A queued request was removed already past its deadline: shed
+    /// unexecuted AND counted as a deadline miss.
+    pub fn pop_expired(&self) {
+        self.pop_shed();
+        self.deadline_misses.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// A popped request expired between pop and execution (e.g. behind
+    /// an injected stall): it was already counted `served`, so only the
+    /// deadline miss is recorded — the reconciliation invariant holds.
+    pub fn expire_in_service(&self) {
+        self.deadline_misses.fetch_add(1, Ordering::AcqRel);
+    }
+
+    pub fn snapshot(&self) -> ClassStats {
+        ClassStats {
+            depth: self.depth.load(Ordering::Acquire),
+            admitted: self.admitted.load(Ordering::Acquire),
+            rejected: self.rejected.load(Ordering::Acquire),
+            shed: self.shed.load(Ordering::Acquire),
+            served: self.served.load(Ordering::Acquire),
+            deadline_misses: self.deadline_misses.load(Ordering::Acquire),
+        }
+    }
+}
+
+/// Per-class admission snapshot plus supervisor activity, reported
+/// inside `PoolStats`.
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionStats {
+    /// Indexed by [`Priority::index`].
+    pub classes: [ClassStats; PRIORITY_COUNT],
+    /// Replicas started by the autoscaling supervisor.
+    pub scale_ups: u64,
+    /// Replicas retired by the autoscaling supervisor.
+    pub scale_downs: u64,
+}
+
+impl AdmissionStats {
+    pub fn class(&self, p: Priority) -> &ClassStats {
+        &self.classes[p.index()]
+    }
+
+    /// Total queued requests across all classes.
+    pub fn depth_total(&self) -> u64 {
+        self.classes.iter().map(|c| c.depth).sum()
+    }
+
+    /// Total requests that never executed (rejected at submit or shed
+    /// after admission), across all classes.
+    pub fn lost_total(&self) -> u64 {
+        self.classes.iter().map(|c| c.rejected + c.shed).sum()
+    }
+
+    pub fn deadline_misses_total(&self) -> u64 {
+        self.classes.iter().map(|c| c.deadline_misses).sum()
+    }
+}
+
+/// EWMA of observed per-request service time, feeding deadline-aware
+/// admission: a request whose projected queue wait already exceeds its
+/// deadline is refused at submit.
+///
+/// The estimate starts at zero ("unknown"), in which case admission
+/// never rejects on feasibility — the estimator only gains authority
+/// after real requests have been timed, and a long idle gap never makes
+/// it MORE aggressive.  The projection is deliberately conservative
+/// (it ignores work-stealing overlap and counts only same-or-higher
+/// class work ahead), so borderline requests are admitted and left to
+/// the pop-side expiry shed.
+#[derive(Debug, Default)]
+pub struct ServiceEstimator {
+    /// EWMA of request service time in microseconds (alpha = 1/8);
+    /// zero means "no observation yet".
+    est_us: AtomicU64,
+}
+
+impl ServiceEstimator {
+    /// Fold one observed request service time into the EWMA.
+    pub fn observe(&self, service: Duration) {
+        let sample = service.as_micros().min(u64::MAX as u128) as u64;
+        let old = self.est_us.load(Ordering::Acquire);
+        let new = if old == 0 { sample } else { old - old / 8 + sample / 8 };
+        // Plain store: a lost update under a race is just one skipped
+        // EWMA step; the estimator is advisory.
+        self.est_us.store(new.max(1), Ordering::Release);
+    }
+
+    /// Current estimate, `None` until the first observation.
+    pub fn estimate(&self) -> Option<Duration> {
+        match self.est_us.load(Ordering::Acquire) {
+            0 => None,
+            us => Some(Duration::from_micros(us)),
+        }
+    }
+
+    /// Projected queue wait for a request with `ahead` same-or-higher
+    /// class requests queued in front of it on a pool of `replicas`
+    /// live workers.  `None` while the estimator has no data.
+    pub fn projected_wait(&self, ahead: u64, replicas: usize) -> Option<Duration> {
+        let est = self.est_us.load(Ordering::Acquire);
+        if est == 0 {
+            return None;
+        }
+        let us = est.saturating_mul(ahead) / replicas.max(1) as u64;
+        Some(Duration::from_micros(us))
+    }
+}
+
+/// Supervisor policy: autoscale the live replica count between
+/// `min..=max` from observed queue depth and deadline misses.
+///
+/// Scale **up** one replica when total queue depth exceeds
+/// `depth_per_replica * live` or any deadline miss was recorded in the
+/// last interval.  Scale **down** one replica (never the canary, never
+/// below `min`) after `idle_ticks` consecutive intervals with an empty
+/// queue and no misses.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    pub min: usize,
+    pub max: usize,
+    /// Supervisor sampling interval.
+    pub interval: Duration,
+    /// Queue depth per live replica that triggers a scale-up.
+    pub depth_per_replica: usize,
+    /// Consecutive idle intervals before one replica is retired.
+    pub idle_ticks: u32,
+}
+
+impl AutoscaleConfig {
+    pub fn new(min: usize, max: usize) -> Self {
+        AutoscaleConfig {
+            min,
+            max,
+            interval: Duration::from_millis(25),
+            depth_per_replica: 4,
+            idle_ticks: 8,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.min == 0 {
+            return Err("autoscale min must be >= 1".into());
+        }
+        if self.min > self.max {
+            return Err(format!(
+                "autoscale min {} must be <= max {}",
+                self.min, self.max
+            ));
+        }
+        if self.interval.is_zero() {
+            return Err("autoscale interval must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+/// Full pool configuration: initial replica count, admission policy,
+/// and (optionally) the autoscaling supervisor.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Initial replica count (clamped into the autoscale range when a
+    /// supervisor is configured).
+    pub replicas: usize,
+    pub admission: AdmissionConfig,
+    pub autoscale: Option<AutoscaleConfig>,
+}
+
+impl PoolConfig {
+    /// A fixed-size pool with default (block-everywhere) admission —
+    /// the `spawn_pool(spec, n)` shape.
+    pub fn fixed(replicas: usize) -> Self {
+        PoolConfig {
+            replicas,
+            admission: AdmissionConfig::default(),
+            autoscale: None,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.admission.validate()?;
+        if let Some(a) = &self.autoscale {
+            a.validate()?;
+        }
+        Ok(())
+    }
+}
+
+/// One injected fault, armed against a chosen replica.
+#[derive(Debug, Copy, Clone)]
+pub enum Fault {
+    /// Sleep for the duration before executing the replica's next job
+    /// (the deterministic "one replica wedged" saturation).
+    Stall(Duration),
+    /// Panic inside the replica's `nth` next job (1 = the very next),
+    /// exercising the real catch-unwind/respawn supervision path.
+    PanicOnJob { nth: u64 },
+    /// Drop the replica's next job without replying — the client
+    /// observes `WorkerGone`, the supervision blind spot every caller
+    /// must tolerate.
+    DropReply,
+}
+
+/// A fault armed against one replica.  Replaces the ad-hoc
+/// `inject_stall`-style hooks: tests compose stall / panic-on-nth-job /
+/// drop-reply against any replica through one surface
+/// (`ServiceHandle::inject_fault`).
+#[derive(Debug, Copy, Clone)]
+pub struct FaultPlan {
+    pub replica: usize,
+    pub fault: Fault,
+}
+
+impl FaultPlan {
+    pub fn stall(replica: usize, dur: Duration) -> Self {
+        FaultPlan { replica, fault: Fault::Stall(dur) }
+    }
+
+    pub fn panic_on_job(replica: usize, nth: u64) -> Self {
+        FaultPlan { replica, fault: Fault::PanicOnJob { nth: nth.max(1) } }
+    }
+
+    pub fn drop_reply(replica: usize) -> Self {
+        FaultPlan { replica, fault: Fault::DropReply }
+    }
+}
+
+/// Armed faults, polled by workers once per popped job.  At most a
+/// handful are ever armed (tests), so a single mutex-guarded vec is
+/// plenty and keeps the job hot path to one uncontended lock when the
+/// armory is empty — guarded by a lock-free emptiness check.
+#[derive(Debug, Default)]
+pub struct FaultArmory {
+    armed: Mutex<Vec<FaultPlan>>,
+    count: AtomicU64,
+}
+
+impl FaultArmory {
+    /// Arm a fault against a replica.  Multiple faults may be armed
+    /// (even against the same replica); each triggers once, in arming
+    /// order.
+    pub fn arm(&self, plan: FaultPlan) {
+        self.armed.lock().unwrap().push(plan);
+        self.count.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Called by worker `replica` for each job it pops.  Returns the
+    /// fault to apply to THIS job, if any.  `PanicOnJob` counts down
+    /// across calls and fires when its countdown reaches zero.
+    pub fn poll(&self, replica: usize) -> Option<Fault> {
+        if self.count.load(Ordering::Acquire) == 0 {
+            return None;
+        }
+        let mut armed = self.armed.lock().unwrap();
+        let slot = armed.iter().position(|p| p.replica == replica)?;
+        match &mut armed[slot].fault {
+            Fault::PanicOnJob { nth } if *nth > 1 => {
+                *nth -= 1;
+                None
+            }
+            _ => {
+                let plan = armed.remove(slot);
+                self.count.fetch_sub(1, Ordering::AcqRel);
+                Some(plan.fault)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priorities_are_ordered_and_indexed() {
+        assert!(Priority::Low < Priority::Normal);
+        assert!(Priority::Normal < Priority::High);
+        assert!(Priority::High < Priority::Critical);
+        for (i, p) in Priority::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+            // Round-trip through the CLI spelling.
+            assert_eq!(p.name().parse::<Priority>().unwrap(), *p);
+        }
+        assert!("urgent".parse::<Priority>().is_err());
+    }
+
+    #[test]
+    fn shed_policy_parses_cli_spellings() {
+        assert_eq!("block".parse::<ShedPolicy>().unwrap(), ShedPolicy::Block);
+        assert_eq!("reject".parse::<ShedPolicy>().unwrap(), ShedPolicy::Reject);
+        assert_eq!(
+            "shed-oldest".parse::<ShedPolicy>().unwrap(),
+            ShedPolicy::ShedOldest
+        );
+        assert!("drop".parse::<ShedPolicy>().is_err());
+    }
+
+    #[test]
+    fn uniform_config_shields_control_classes() {
+        let cfg = AdmissionConfig::uniform(8, ShedPolicy::Reject);
+        assert_eq!(cfg.policy(Priority::Low), ShedPolicy::Reject);
+        assert_eq!(cfg.policy(Priority::Normal), ShedPolicy::Reject);
+        assert_eq!(cfg.policy(Priority::High), ShedPolicy::Block);
+        assert_eq!(cfg.policy(Priority::Critical), ShedPolicy::Block);
+        assert!(cfg.validate().is_ok());
+        let mut bad = cfg;
+        bad.queue_cap[0] = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn counters_reconcile() {
+        let c = ClassCounters::default();
+        for _ in 0..10 {
+            c.admit();
+        }
+        for _ in 0..3 {
+            c.reject_overloaded();
+        }
+        c.reject_deadline();
+        for _ in 0..6 {
+            c.pop_served();
+        }
+        c.pop_shed();
+        c.pop_expired();
+        let s = c.snapshot();
+        // Front door: submitted (14) == admitted + rejected.
+        assert_eq!(s.admitted + s.rejected, 14);
+        // Back door: admitted == served + shed + depth.
+        assert_eq!(s.admitted, s.served + s.shed + s.depth);
+        assert_eq!(s.depth, 2);
+        assert_eq!(s.deadline_misses, 2);
+    }
+
+    #[test]
+    fn estimator_warms_up_then_projects() {
+        let e = ServiceEstimator::default();
+        assert!(e.estimate().is_none());
+        assert!(e.projected_wait(100, 1).is_none(), "no authority before data");
+        e.observe(Duration::from_micros(800));
+        let first = e.estimate().unwrap();
+        assert_eq!(first, Duration::from_micros(800), "first sample adopted whole");
+        // EWMA pulls toward later samples without jumping.
+        for _ in 0..64 {
+            e.observe(Duration::from_micros(1600));
+        }
+        let settled = e.estimate().unwrap();
+        assert!(settled > first && settled <= Duration::from_micros(1601));
+        // Ten requests ahead on two replicas ≈ five service times.
+        let wait = e.projected_wait(10, 2).unwrap();
+        assert!(wait >= Duration::from_micros(4000));
+        assert_eq!(e.projected_wait(0, 2).unwrap(), Duration::ZERO);
+    }
+
+    #[test]
+    fn fault_armory_counts_down_and_fires_once() {
+        let a = FaultArmory::default();
+        assert!(a.poll(0).is_none());
+        a.arm(FaultPlan::panic_on_job(1, 3));
+        a.arm(FaultPlan::drop_reply(0));
+        // Replica 0: fires immediately, exactly once.
+        assert!(matches!(a.poll(0), Some(Fault::DropReply)));
+        assert!(a.poll(0).is_none());
+        // Replica 1: two jobs pass, the third panics.
+        assert!(a.poll(1).is_none());
+        assert!(a.poll(1).is_none());
+        assert!(matches!(a.poll(1), Some(Fault::PanicOnJob { .. })));
+        assert!(a.poll(1).is_none());
+    }
+}

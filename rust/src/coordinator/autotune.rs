@@ -662,7 +662,12 @@ impl Autotuner {
                 }));
             }
         }
-        let tel = self.handle.infer_telemetry(xs.to_vec())?;
+        // Monitor probes are control traffic: at `High` class they keep
+        // flowing — and drift detection keeps working — while bulk
+        // `Low`/`Normal` traffic queues or sheds under overload.
+        let tel = self
+            .handle
+            .infer_telemetry_class(xs.to_vec(), super::admission::Priority::High)?;
         let accuracy = ys.map(|ys| {
             tel.preds.iter().zip(ys).filter(|(p, y)| p == y).count() as f64
                 / xs.len().max(1) as f64

@@ -167,7 +167,13 @@ impl CanaryController {
     ) -> Result<(PairedWindow, CanaryVerdict), ServeError> {
         check_labels(xs, ys)?;
         let (_idxs, sample_xs, sample_ys) = self.sample_window(xs, ys);
-        let base = self.handle.infer_telemetry(sample_xs.clone())?;
+        // Both halves of a paired window are control traffic: the
+        // canary mirror is Critical by construction, and the baseline
+        // probe rides at High so a saturated pool cannot starve one
+        // side of the comparison and wedge the verdict.
+        let base = self
+            .handle
+            .infer_telemetry_class(sample_xs.clone(), super::admission::Priority::High)?;
         let cand = self.handle.infer_telemetry_canary(sample_xs)?;
         Ok(self.record(base.preds, base.margins, &cand, sample_ys))
     }

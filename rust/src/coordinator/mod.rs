@@ -10,9 +10,13 @@
 //!   reprograms the accelerator with a freshly trained model when drift
 //!   degrades it — the paper's headline runtime-tunability story;
 //! * a replica-pool [`server`] front-end: N worker threads, each owning
-//!   an `InferenceService` replica, fed from one shared request queue,
-//!   with versioned broadcast reprogramming (no inference ever observes
-//!   a mixed-version pool) and panic supervision (a dying replica is
+//!   an `InferenceService` replica, fed through the [`admission`]
+//!   front-end — four priority classes over per-class bounded queues
+//!   with backpressure policies (block / reject / shed-oldest), sharded
+//!   per-replica work queues with work stealing, deadline-aware
+//!   admission, and an optional autoscaling supervisor — with versioned
+//!   broadcast reprogramming (no inference ever observes a
+//!   mixed-version pool) and panic supervision (a dying replica is
 //!   respawned from the last-programmed model) — std primitives only;
 //!   the offline toolchain has no tokio, and the request loop is the
 //!   same shape;
@@ -30,6 +34,7 @@
 //!   never served from more than one replica, and never to live
 //!   traffic.
 
+pub mod admission;
 pub mod autotune;
 pub mod canary;
 pub mod hyperparam;
@@ -37,14 +42,18 @@ pub mod server;
 pub mod service;
 pub mod tuner;
 
+pub use admission::{
+    AdmissionConfig, AdmissionStats, AutoscaleConfig, ClassStats, Fault, FaultPlan, PoolConfig,
+    Priority, ShedPolicy,
+};
 pub use autotune::{
     AutotuneConfig, AutotuneEvent, AutotuneReport, Autotuner, CanaryOutcome, DriftDetector,
     WindowStats,
 };
 pub use canary::{CanaryConfig, CanaryController, CanaryVerdict, PairedWindow};
 pub use server::{
-    spawn, spawn_pool, PoolJoin, PoolStats, ReplicaStats, ServeError, ServerStats, ServiceHandle,
-    Telemetry,
+    spawn, spawn_pool, spawn_pool_cfg, PoolJoin, PoolStats, ReplicaStats, ServeError, ServerStats,
+    ServiceHandle, Telemetry,
 };
 pub use service::{Engine, EngineSpec, InferenceService, Metrics};
 pub use tuner::{RecalReport, RecalibrationLoop, TrainBackend, TrainingNode};

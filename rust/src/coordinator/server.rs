@@ -1,10 +1,11 @@
 //! Replica-pool request front-end: the AXIS/queue interface of the
 //! deployed system scaled across N worker threads, each owning an
-//! [`InferenceService`] replica, fed from one shared request queue
+//! [`InferenceService`] replica, fed through the admission front-end
 //! (offline toolchain has no tokio; std primitives give the same
-//! shape: shared queue, condvars, message-passing replies).
+//! shape: sharded queues, condvars, message-passing replies).
 //!
-//! Properties the pool guarantees (EXPERIMENTS.md §Serving):
+//! Properties the pool guarantees (EXPERIMENTS.md §Serving and
+//! §Admission):
 //!
 //! * **Versioned broadcast reprogram.**  [`ServiceHandle::program`]
 //!   publishes the model under a monotonically increasing version and
@@ -17,20 +18,47 @@
 //!   typed [`ServeError::WorkerPanicked`], and the replica is rebuilt
 //!   from its [`EngineSpec`] and reprogrammed from the last-programmed
 //!   model before taking more work.  Counters survive the respawn.
+//! * **Classed admission.**  Every request carries a [`Priority`]
+//!   class (`Normal` by default, `Critical` for canary mirrors).
+//!   Workers pop class-major — `Critical` overtakes queued `Low`
+//!   everywhere — and each class has a bounded queue with a
+//!   [`ShedPolicy`] (block / reject / shed-oldest), so under overload
+//!   the control plane keeps flowing while bulk traffic queues or
+//!   sheds ([`ServeError::Overloaded`]).
+//! * **Sharded queues with work stealing.**  Jobs are routed
+//!   round-robin to per-replica shards; a worker pops its own shard
+//!   first and steals from siblings, so replicas no longer contend on
+//!   one global lock and an idle replica never watches a busy one.
+//! * **Deadline-aware admission.**  A request whose deadline cannot be
+//!   met given current same-or-higher-class queue depth (projected by
+//!   a service-time EWMA) is refused at submit with
+//!   [`ServeError::DeadlineExceeded`] — not discovered at pop.  Queued
+//!   requests that expire anyway are shed unexecuted by the first
+//!   worker to pop them.
+//! * **Autoscaling.**  With an [`AutoscaleConfig`], a supervisor
+//!   thread scales the live replica count between `min..=max` from
+//!   observed queue depth and deadline-miss rate (never retiring the
+//!   canary).
 //! * **Typed errors.**  Engine rejections ([`CoreError`], including
-//!   the `BadBatch` malformed-request validation), worker panics and
-//!   pool shutdown are distinct [`ServeError`] variants — no more
-//!   opaque "service worker gone".
+//!   the `BadBatch` malformed-request validation), worker panics,
+//!   admission refusals and pool shutdown are distinct [`ServeError`]
+//!   variants — no more opaque "service worker gone".
 //! * **Aggregated metrics.**  [`ServiceHandle::pool_stats`] reports
-//!   per-replica [`Metrics`] plus a pool rollup; [`ServiceHandle::stats`]
-//!   keeps the old single-service shape (the rollup).
+//!   per-replica [`Metrics`], a pool rollup, and the per-class
+//!   [`AdmissionStats`]; [`ServiceHandle::stats`] keeps the old
+//!   single-service shape (the rollup).
 
 use std::collections::VecDeque;
 use std::panic::{self, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
+use super::admission::{
+    AdmissionConfig, AdmissionStats, AutoscaleConfig, ClassCounters, Fault, FaultArmory,
+    FaultPlan, PoolConfig, Priority, ServiceEstimator, ShedPolicy, PRIORITY_COUNT,
+};
 use super::service::{EngineSpec, InferenceService, Metrics};
 use crate::accel::core::CoreError;
 use crate::tm::model::TMModel;
@@ -39,8 +67,8 @@ use crate::tm::model::TMModel;
 pub type ServerStats = Metrics;
 
 /// Errors a request can come back with.  Worker death, engine
-/// rejection and shutdown are distinguishable, so a client can retry,
-/// fix its request, or stop.
+/// rejection, admission refusal and shutdown are distinguishable, so a
+/// client can retry, back off, fix its request, or stop.
 #[derive(Debug, thiserror::Error)]
 pub enum ServeError {
     /// The engine rejected the request (malformed batch, model not
@@ -63,11 +91,18 @@ pub enum ServeError {
     #[error("canary: {0}")]
     Canary(&'static str),
     /// The request's deadline passed before a replica produced an
-    /// answer (see [`ServiceHandle::infer_deadline`]).  The pool is
-    /// fine — the job was either dropped unexecuted by the first worker
-    /// to pick it up, or its late answer was discarded.
+    /// answer, or admission projected it could never be met (see
+    /// [`ServiceHandle::infer_deadline`]).  The pool is fine — the job
+    /// was refused at submit, dropped unexecuted by the first worker to
+    /// pick it up, or its late answer was discarded.
     #[error("request deadline exceeded before a replica could serve it")]
     DeadlineExceeded,
+    /// The request's class queue is at capacity and its backpressure
+    /// policy refuses new work (`Reject`), or this request was evicted
+    /// by a newer one (`ShedOldest`).  Retry with backoff, downgrade,
+    /// or drop — the pool is saturated, not broken.
+    #[error("pool overloaded: request refused by admission control")]
+    Overloaded,
 }
 
 /// Per-replica snapshot inside [`PoolStats`].
@@ -82,7 +117,8 @@ pub struct ReplicaStats {
     pub alive: bool,
 }
 
-/// Aggregated pool snapshot: per-replica metrics plus the rollup.
+/// Aggregated pool snapshot: per-replica metrics plus the rollup and
+/// the per-class admission counters.
 #[derive(Debug, Clone)]
 pub struct PoolStats {
     pub replicas: Vec<ReplicaStats>,
@@ -95,6 +131,8 @@ pub struct PoolStats {
     pub version: u64,
     /// Replica currently serving a canary candidate, if any.
     pub canary: Option<usize>,
+    /// Per-class admission counters plus autoscaler activity.
+    pub admission: AdmissionStats,
 }
 
 /// One telemetry probe reply: predictions, per-datapoint confidence
@@ -122,7 +160,8 @@ enum Target {
     CanaryOnly,
 }
 
-/// One queued unit of work.
+/// One queued unit of work.  The class it was admitted under is the
+/// queue it sits in, not a field.
 enum Job {
     Infer {
         rows: Vec<Vec<u8>>,
@@ -131,23 +170,25 @@ enum Job {
         /// already-expired job replies [`ServeError::DeadlineExceeded`]
         /// without executing it, so a saturated queue sheds abandoned
         /// work instead of computing answers nobody is waiting for.
-        deadline: Option<std::time::Instant>,
+        deadline: Option<Instant>,
         reply: mpsc::Sender<Result<Vec<usize>, ServeError>>,
     },
     /// Fault injection: occupy the owning worker for `dur` (tests and
     /// chaos drills — the deterministic "saturated pool" for deadline
     /// coverage).
     Stall {
-        dur: std::time::Duration,
+        dur: Duration,
         reply: mpsc::Sender<Result<Vec<usize>, ServeError>>,
     },
     /// Inference plus the confidence-margin telemetry the drift monitor
-    /// and the canary comparator consume.  Rides the same queue as
+    /// and the canary comparator consume.  Rides the same queues as
     /// plain requests — telemetry IS traffic, so the monitor observes
     /// exactly what clients do.
     Telemetry {
         rows: Vec<Vec<u8>>,
         target: Target,
+        /// Same shed-unexecuted expiry semantics as `Infer::deadline`.
+        deadline: Option<Instant>,
         reply: mpsc::Sender<Result<Telemetry, ServeError>>,
     },
     /// Fault injection: panic inside the owning worker.  Exercises the
@@ -170,26 +211,51 @@ impl Job {
         }
     }
 
+    fn deadline(&self) -> Option<Instant> {
+        match self {
+            Job::Infer { deadline, .. } | Job::Telemetry { deadline, .. } => *deadline,
+            Job::Stall { .. } | Job::Crash { .. } => None,
+        }
+    }
+
+    /// Reply with a typed error without executing (shed, eviction,
+    /// canary drain).
+    fn fail(self, err: impl FnOnce() -> ServeError) {
+        match self {
+            Job::Infer { reply, .. } | Job::Crash { reply, .. } | Job::Stall { reply, .. } => {
+                let _ = reply.send(Err(err()));
+            }
+            Job::Telemetry { reply, .. } => {
+                let _ = reply.send(Err(err()));
+            }
+        }
+    }
+
     /// Reply with a canary error (the job was targeted at a canary that
     /// no longer exists).
     fn fail_canary(self, reason: &'static str) {
-        match self {
-            Job::Infer { reply, .. } | Job::Crash { reply, .. } | Job::Stall { reply, .. } => {
-                let _ = reply.send(Err(ServeError::Canary(reason)));
-            }
-            Job::Telemetry { reply, .. } => {
-                let _ = reply.send(Err(ServeError::Canary(reason)));
-            }
-        }
+        self.fail(|| ServeError::Canary(reason));
     }
 }
 
 /// Sentinel for "no canary active" in the lock-free replica mirror.
 const NO_CANARY: usize = usize::MAX;
 
-struct QueueState {
-    jobs: VecDeque<Job>,
-    shutdown: bool,
+/// One replica's work-queue shard: a bounded-by-admission FIFO per
+/// priority class.  Workers pop their own shard first, then steal.
+#[derive(Default)]
+struct ShardQueue {
+    /// Per-class FIFOs, indexed by [`Priority::index`].
+    classes: [VecDeque<Job>; PRIORITY_COUNT],
+    /// Set at pool teardown: a closed shard accepts no new jobs, so a
+    /// submission racing the last replica's death cannot strand its
+    /// client.
+    closed: bool,
+}
+
+#[derive(Default)]
+struct Shard {
+    q: Mutex<ShardQueue>,
 }
 
 /// An active canary: one replica serving a candidate model while the
@@ -225,19 +291,60 @@ struct ReplicaMetrics {
 }
 
 struct Shared {
-    queue: Mutex<QueueState>,
-    /// Wakes workers: new job, shutdown, or a pending version fence.
-    queue_cv: Condvar,
+    /// Per-replica work-queue shards; workers pop their own shard first
+    /// and steal from siblings, class-major.
+    shards: Vec<Shard>,
+    /// Guards parking of idle workers and blocked submitters.  Held
+    /// only to park or wake — never while queueing or serving.
+    park: Mutex<()>,
+    /// Workers park here when every shard they can serve is empty.
+    work_cv: Condvar,
+    /// Submitters blocked by a full class queue (`ShedPolicy::Block`)
+    /// park here until a pop frees a slot.
+    space_cv: Condvar,
+    /// Bumped under `park` by every enqueue, fence and shutdown wake; a
+    /// worker records it before scanning the shards and refuses to park
+    /// if it moved — the lost-wakeup guard, without holding any shard
+    /// lock while parked.
+    epoch: AtomicU64,
+    shutdown: AtomicBool,
+    /// Submitters currently blocked on a full class queue (lets the pop
+    /// hot path skip the park lock when nobody waits).
+    space_waiters: AtomicUsize,
+    /// Round-robin cursor for Pool job routing.
+    rr: AtomicUsize,
+    /// Admission policy (per-class caps and shed policies).
+    config: AdmissionConfig,
+    /// Per-class admission accounting, indexed by [`Priority::index`].
+    counters: [ClassCounters; PRIORITY_COUNT],
+    /// Service-time EWMA feeding deadline-aware admission.
+    estimator: ServiceEstimator,
+    /// Lock-free liveness mirror of `cell.alive` (routing and
+    /// feasibility read it without the cell lock).
+    alive_mirror: Vec<AtomicBool>,
+    /// Scale-down requests from the supervisor; the flagged worker
+    /// exits at its next pop instead of taking work.
+    retire: Vec<AtomicBool>,
+    /// Set when a worker thread has fully exited (its DeathWatch ran);
+    /// the supervisor only revives slots whose previous thread is gone.
+    exited: Vec<AtomicBool>,
+    scale_ups: AtomicU64,
+    scale_downs: AtomicU64,
+    /// Worker threads started by the supervisor after spawn (joined by
+    /// [`PoolJoin`]).
+    extra_workers: Mutex<Vec<JoinHandle<()>>>,
+    /// Armed fault plans, polled by workers once per popped job.
+    faults: FaultArmory,
     cell: Mutex<ModelCell>,
     /// Wakes `program` callers waiting on replica acks.
     fence_cv: Condvar,
     /// Mirror of `cell.version`, readable without the cell lock (the
-    /// workers' queue-wait loop polls it; never lock cell inside the
-    /// queue lock).
+    /// workers' pop loop polls it; never lock cell inside a shard
+    /// lock).
     version: AtomicU64,
     /// Mirror of the canary replica index ([`NO_CANARY`] when none),
-    /// readable without the cell lock — the queue-wait eligibility
-    /// check polls it alongside `version`.
+    /// readable without the cell lock — routing and the submit-time
+    /// canary check poll it alongside `version`.
     canary_replica: AtomicUsize,
     metrics: Mutex<Vec<ReplicaMetrics>>,
     spec: EngineSpec,
@@ -249,11 +356,13 @@ pub struct ServiceHandle {
     shared: Arc<Shared>,
 }
 
-/// Joiner for the pool's worker threads.  `join` is idempotent: the
-/// first call joins everything, later calls are no-ops.  Dropping the
-/// joiner shuts the pool down (queued requests drain first) and joins.
+/// Joiner for the pool's worker threads (and the autoscaling
+/// supervisor, when configured).  `join` is idempotent: the first call
+/// joins everything, later calls are no-ops.  Dropping the joiner
+/// shuts the pool down (queued requests drain first) and joins.
 pub struct PoolJoin {
     workers: Vec<JoinHandle<()>>,
+    supervisor: Option<JoinHandle<()>>,
     shared: Arc<Shared>,
 }
 
@@ -265,16 +374,29 @@ impl PoolJoin {
             // already recorded in `alive`.
             let _ = h.join();
         }
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
+        }
+        // Workers the supervisor scaled up after spawn.  The supervisor
+        // is joined above, so no more can appear while we drain.
+        loop {
+            let extra: Vec<JoinHandle<()>> = {
+                let mut held = self.shared.extra_workers.lock().unwrap();
+                held.drain(..).collect()
+            };
+            if extra.is_empty() {
+                break;
+            }
+            for h in extra {
+                let _ = h.join();
+            }
+        }
     }
 }
 
 impl Drop for PoolJoin {
     fn drop(&mut self) {
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            q.shutdown = true;
-            self.shared.queue_cv.notify_all();
-        }
+        shutdown_shared(&self.shared);
         self.join();
     }
 }
@@ -285,84 +407,140 @@ pub fn spawn(spec: EngineSpec) -> (ServiceHandle, PoolJoin) {
     spawn_pool(spec, 1)
 }
 
-/// Spawn a pool of `replicas` workers, each owning one engine built
-/// from `spec`, all fed from one shared FIFO request queue.
+/// Spawn a fixed pool of `replicas` workers with default admission
+/// (every class: cap 1024, block when full — nothing is ever refused).
 pub fn spawn_pool(spec: EngineSpec, replicas: usize) -> (ServiceHandle, PoolJoin) {
-    let n = replicas.max(1);
+    spawn_pool_cfg(spec, PoolConfig::fixed(replicas))
+}
+
+/// Spawn a pool under a full [`PoolConfig`]: initial replica count,
+/// per-class admission policy, and (optionally) the autoscaling
+/// supervisor.  Panics on an invalid config (zero caps, `min > max`) —
+/// configs come from validated CLI flags or test literals.
+pub fn spawn_pool_cfg(spec: EngineSpec, cfg: PoolConfig) -> (ServiceHandle, PoolJoin) {
+    if let Err(e) = cfg.validate() {
+        panic!("invalid pool config: {e}");
+    }
+    let initial = match &cfg.autoscale {
+        Some(a) => cfg.replicas.clamp(a.min, a.max),
+        None => cfg.replicas.max(1),
+    };
+    // Slots above `initial` are pre-provisioned for the autoscaler:
+    // they exist in every per-replica structure but start dead/exited.
+    let slots = cfg.autoscale.as_ref().map_or(initial, |a| a.max.max(initial));
     let shared = Arc::new(Shared {
-        queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
-        queue_cv: Condvar::new(),
+        shards: (0..slots).map(|_| Shard::default()).collect(),
+        park: Mutex::new(()),
+        work_cv: Condvar::new(),
+        space_cv: Condvar::new(),
+        epoch: AtomicU64::new(0),
+        shutdown: AtomicBool::new(false),
+        space_waiters: AtomicUsize::new(0),
+        rr: AtomicUsize::new(0),
+        config: cfg.admission.clone(),
+        counters: Default::default(),
+        estimator: ServiceEstimator::default(),
+        alive_mirror: (0..slots).map(|i| AtomicBool::new(i < initial)).collect(),
+        retire: (0..slots).map(|_| AtomicBool::new(false)).collect(),
+        exited: (0..slots).map(|i| AtomicBool::new(i >= initial)).collect(),
+        scale_ups: AtomicU64::new(0),
+        scale_downs: AtomicU64::new(0),
+        extra_workers: Mutex::new(Vec::new()),
+        faults: FaultArmory::default(),
         cell: Mutex::new(ModelCell {
             version: 0,
             model: None,
             canary: None,
-            acks: vec![0; n],
-            errors: (0..n).map(|_| None).collect(),
-            alive: vec![true; n],
+            acks: vec![0; slots],
+            errors: (0..slots).map(|_| None).collect(),
+            alive: (0..slots).map(|i| i < initial).collect(),
         }),
         fence_cv: Condvar::new(),
         version: AtomicU64::new(0),
         canary_replica: AtomicUsize::new(NO_CANARY),
-        metrics: Mutex::new(vec![ReplicaMetrics::default(); n]),
+        metrics: Mutex::new(vec![ReplicaMetrics::default(); slots]),
         spec,
     });
-    let workers = (0..n)
-        .map(|i| {
-            let s = Arc::clone(&shared);
-            std::thread::Builder::new()
-                .name(format!("rttm-replica-{i}"))
-                .spawn(move || worker_loop(&s, i))
-                .expect("spawn replica worker")
-        })
-        .collect();
-    let join = PoolJoin { workers, shared: Arc::clone(&shared) };
+    let workers = (0..initial).map(|i| spawn_worker(&shared, i)).collect();
+    let supervisor = cfg.autoscale.map(|auto| {
+        let s = Arc::clone(&shared);
+        std::thread::Builder::new()
+            .name("rttm-supervisor".into())
+            .spawn(move || supervisor_loop(&s, &auto))
+            .expect("spawn pool supervisor")
+    });
+    let join = PoolJoin { workers, supervisor, shared: Arc::clone(&shared) };
     (ServiceHandle { shared }, join)
 }
 
+fn spawn_worker(shared: &Arc<Shared>, idx: usize) -> JoinHandle<()> {
+    let s = Arc::clone(shared);
+    std::thread::Builder::new()
+        .name(format!("rttm-replica-{idx}"))
+        .spawn(move || worker_loop(&s, idx))
+        .expect("spawn replica worker")
+}
+
 impl ServiceHandle {
-    /// Blocking inference RPC.  Any number of rows; the replica splits
-    /// them into 32-lane batches through the bulk scheduler.  Never
-    /// served by an active canary replica.
+    /// Blocking inference RPC at [`Priority::Normal`].  Any number of
+    /// rows; the replica splits them into 32-lane batches through the
+    /// bulk scheduler.  Never served by an active canary replica.
     pub fn infer(&self, rows: Vec<Vec<u8>>) -> Result<Vec<usize>, ServeError> {
-        let (reply, rx) = mpsc::channel();
-        self.submit(Job::Infer { rows, target: Target::Pool, deadline: None, reply })?;
-        rx.recv().map_err(|_| ServeError::WorkerGone)?
+        self.infer_class(rows, Priority::Normal)
+    }
+
+    /// Blocking inference RPC at an explicit priority class.
+    pub fn infer_class(
+        &self,
+        rows: Vec<Vec<u8>>,
+        class: Priority,
+    ) -> Result<Vec<usize>, ServeError> {
+        self.infer_job(rows, Target::Pool, class, None)
     }
 
     /// Inference RPC with a per-request deadline: blocks at most
     /// `timeout`, then returns [`ServeError::DeadlineExceeded`] instead
-    /// of waiting forever on a saturated queue.  An expired job is shed
-    /// by the first worker to pop it (it replies the same typed error
-    /// without executing), so abandoned requests cost the pool a queue
-    /// slot, not an inference; a job that was already mid-execution at
+    /// of waiting forever on a saturated queue.  Admission refuses the
+    /// request outright when projected queue wait already exceeds the
+    /// deadline; an admitted job that expires anyway is shed by the
+    /// first worker to pop it (it replies the same typed error without
+    /// executing), so abandoned requests cost the pool a queue slot,
+    /// not an inference; a job that was already mid-execution at
     /// expiry completes and its late answer is discarded.
     pub fn infer_deadline(
         &self,
         rows: Vec<Vec<u8>>,
-        timeout: std::time::Duration,
+        timeout: Duration,
     ) -> Result<Vec<usize>, ServeError> {
-        let deadline = std::time::Instant::now() + timeout;
-        let (reply, rx) = mpsc::channel();
-        self.submit(Job::Infer {
-            rows,
-            target: Target::Pool,
-            deadline: Some(deadline),
-            reply,
-        })?;
-        match rx.recv_timeout(timeout) {
-            Ok(result) => result,
-            Err(mpsc::RecvTimeoutError::Timeout) => Err(ServeError::DeadlineExceeded),
-            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServeError::WorkerGone),
-        }
+        self.infer_deadline_class(rows, timeout, Priority::Normal)
+    }
+
+    /// [`Self::infer_deadline`] at an explicit priority class.
+    pub fn infer_deadline_class(
+        &self,
+        rows: Vec<Vec<u8>>,
+        timeout: Duration,
+        class: Priority,
+    ) -> Result<Vec<usize>, ServeError> {
+        self.infer_job(rows, Target::Pool, class, Some(timeout))
     }
 
     /// Blocking inference RPC served EXCLUSIVELY by the canary replica
-    /// (the mirrored evaluation stream).  Errors with
+    /// (the mirrored evaluation stream), at [`Priority::Critical`] —
+    /// the verdict pipeline must survive overload.  Errors with
     /// [`ServeError::Canary`] when no canary is active.
     pub fn infer_canary(&self, rows: Vec<Vec<u8>>) -> Result<Vec<usize>, ServeError> {
-        let (reply, rx) = mpsc::channel();
-        self.submit(Job::Infer { rows, target: Target::CanaryOnly, deadline: None, reply })?;
-        rx.recv().map_err(|_| ServeError::WorkerGone)?
+        self.infer_job(rows, Target::CanaryOnly, Priority::Critical, None)
+    }
+
+    /// [`Self::infer_canary`] with a deadline, riding the same
+    /// shed-unexecuted path as [`Self::infer_deadline`].
+    pub fn infer_canary_deadline(
+        &self,
+        rows: Vec<Vec<u8>>,
+        timeout: Duration,
+    ) -> Result<Vec<usize>, ServeError> {
+        self.infer_job(rows, Target::CanaryOnly, Priority::Critical, Some(timeout))
     }
 
     /// Blocking telemetry RPC: inference plus confidence margins and
@@ -370,17 +548,70 @@ impl ServiceHandle {
     /// monitor's probe path — it queues behind (and alongside) regular
     /// traffic on purpose, and is never served by an active canary.
     pub fn infer_telemetry(&self, rows: Vec<Vec<u8>>) -> Result<Telemetry, ServeError> {
-        let (reply, rx) = mpsc::channel();
-        self.submit(Job::Telemetry { rows, target: Target::Pool, reply })?;
-        rx.recv().map_err(|_| ServeError::WorkerGone)?
+        self.telemetry_job(rows, Target::Pool, Priority::Normal, None)
+    }
+
+    /// [`Self::infer_telemetry`] at an explicit priority class (the
+    /// autotuner probes at [`Priority::High`] so drift detection keeps
+    /// working under saturation).
+    pub fn infer_telemetry_class(
+        &self,
+        rows: Vec<Vec<u8>>,
+        class: Priority,
+    ) -> Result<Telemetry, ServeError> {
+        self.telemetry_job(rows, Target::Pool, class, None)
+    }
+
+    /// [`Self::infer_telemetry`] with a deadline, riding the same
+    /// shed-unexecuted path as [`Self::infer_deadline`].
+    pub fn infer_telemetry_deadline(
+        &self,
+        rows: Vec<Vec<u8>>,
+        timeout: Duration,
+    ) -> Result<Telemetry, ServeError> {
+        self.telemetry_job(rows, Target::Pool, Priority::Normal, Some(timeout))
     }
 
     /// Telemetry served exclusively by the canary replica — the
-    /// candidate half of a paired canary window.
+    /// candidate half of a paired canary window, at
+    /// [`Priority::Critical`].
     pub fn infer_telemetry_canary(&self, rows: Vec<Vec<u8>>) -> Result<Telemetry, ServeError> {
+        self.telemetry_job(rows, Target::CanaryOnly, Priority::Critical, None)
+    }
+
+    /// [`Self::infer_telemetry_canary`] with a deadline.
+    pub fn infer_telemetry_canary_deadline(
+        &self,
+        rows: Vec<Vec<u8>>,
+        timeout: Duration,
+    ) -> Result<Telemetry, ServeError> {
+        self.telemetry_job(rows, Target::CanaryOnly, Priority::Critical, Some(timeout))
+    }
+
+    fn infer_job(
+        &self,
+        rows: Vec<Vec<u8>>,
+        target: Target,
+        class: Priority,
+        timeout: Option<Duration>,
+    ) -> Result<Vec<usize>, ServeError> {
+        let deadline = timeout.map(|t| Instant::now() + t);
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::Telemetry { rows, target: Target::CanaryOnly, reply })?;
-        rx.recv().map_err(|_| ServeError::WorkerGone)?
+        self.submit(Job::Infer { rows, target, deadline, reply }, class)?;
+        recv_reply(&rx, timeout)
+    }
+
+    fn telemetry_job(
+        &self,
+        rows: Vec<Vec<u8>>,
+        target: Target,
+        class: Priority,
+        timeout: Option<Duration>,
+    ) -> Result<Telemetry, ServeError> {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let (reply, rx) = mpsc::channel();
+        self.submit(Job::Telemetry { rows, target, deadline, reply }, class)?;
+        recv_reply(&rx, timeout)
     }
 
     /// Blocking reprogram RPC (the runtime-tuning path), broadcast to
@@ -395,12 +626,10 @@ impl ServiceHandle {
     }
 
     fn program_arc(&self, model: Arc<TMModel>) -> Result<(), ServeError> {
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return Err(ServeError::ShutDown);
+        }
         let (target, had_canary) = {
-            let q = self.shared.queue.lock().unwrap();
-            if q.shutdown {
-                return Err(ServeError::ShutDown);
-            }
-            drop(q);
             let mut cell = self.shared.cell.lock().unwrap();
             cell.version += 1;
             cell.model = Some(model);
@@ -413,10 +642,10 @@ impl ServiceHandle {
             (cell.version, had_canary)
         };
         // Only a broadcast that actually dismissed a canary can have
-        // stranded CanaryOnly jobs; the common path skips the queue
-        // rebuild entirely.
+        // stranded CanaryOnly jobs; the common path skips the shard
+        // sweep entirely.
         if had_canary {
-            self.drain_canary_jobs("canary dismissed by a pool broadcast");
+            drain_canary_jobs(&self.shared, "canary dismissed by a pool broadcast");
         }
         self.fence_wait(target)
     }
@@ -434,12 +663,10 @@ impl ServiceHandle {
     /// left unprogrammed — call [`Self::dismiss_canary`] to restore it
     /// to the pool model.
     pub fn program_canary(&self, model: TMModel) -> Result<usize, ServeError> {
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return Err(ServeError::ShutDown);
+        }
         let (target, replica) = {
-            let q = self.shared.queue.lock().unwrap();
-            if q.shutdown {
-                return Err(ServeError::ShutDown);
-            }
-            drop(q);
             let mut cell = self.shared.cell.lock().unwrap();
             if cell.model.is_none() {
                 return Err(ServeError::Canary("pool has no baseline model"));
@@ -483,12 +710,10 @@ impl ServiceHandle {
     /// Returns `false` (without touching anything) when no canary is
     /// active — dismissal is idempotent.
     pub fn dismiss_canary(&self) -> Result<bool, ServeError> {
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return Err(ServeError::ShutDown);
+        }
         let target = {
-            let q = self.shared.queue.lock().unwrap();
-            if q.shutdown {
-                return Err(ServeError::ShutDown);
-            }
-            drop(q);
             let mut cell = self.shared.cell.lock().unwrap();
             if cell.canary.is_none() {
                 return Ok(false);
@@ -499,7 +724,7 @@ impl ServiceHandle {
             self.shared.version.store(cell.version, Ordering::Release);
             cell.version
         };
-        self.drain_canary_jobs("canary dismissed");
+        drain_canary_jobs(&self.shared, "canary dismissed");
         self.fence_wait(target)?;
         Ok(true)
     }
@@ -521,10 +746,7 @@ impl ServiceHandle {
     /// than it).
     fn fence_wait(&self, target: u64) -> Result<(), ServeError> {
         // Wake parked workers so they observe the fence.
-        {
-            let _q = self.shared.queue.lock().unwrap();
-            self.shared.queue_cv.notify_all();
-        }
+        wake_work(&self.shared, true);
         let mut cell = self.shared.cell.lock().unwrap();
         loop {
             if !cell.alive.iter().any(|&a| a) {
@@ -549,10 +771,6 @@ impl ServiceHandle {
         Ok(())
     }
 
-    fn drain_canary_jobs(&self, reason: &'static str) {
-        drain_canary_jobs(&self.shared, reason);
-    }
-
     /// Pool rollup in the old single-service shape (counters summed,
     /// `reprograms` = the pool model version: broadcasts plus canary
     /// lifecycle fences — see [`PoolStats::total`]).
@@ -560,7 +778,20 @@ impl ServiceHandle {
         Ok(self.pool_stats().total)
     }
 
-    /// Full per-replica + rollup snapshot.
+    /// Per-class admission counters plus autoscaler activity.
+    pub fn admission_stats(&self) -> AdmissionStats {
+        let mut stats = AdmissionStats {
+            classes: Default::default(),
+            scale_ups: self.shared.scale_ups.load(Ordering::Acquire),
+            scale_downs: self.shared.scale_downs.load(Ordering::Acquire),
+        };
+        for (slot, counters) in stats.classes.iter_mut().zip(&self.shared.counters) {
+            *slot = counters.snapshot();
+        }
+        stats
+    }
+
+    /// Full per-replica + rollup + admission snapshot.
     pub fn pool_stats(&self) -> PoolStats {
         let (version, acks, alive, canary) = {
             let cell = self.shared.cell.lock().unwrap();
@@ -588,19 +819,27 @@ impl ServiceHandle {
             total.inferences += r.metrics.inferences;
             total.batches += r.metrics.batches;
             total.simulated_cycles += r.metrics.simulated_cycles;
+            total.busy_micros += r.metrics.busy_micros;
             total.errors += r.metrics.errors;
         }
         total.reprograms = version;
-        PoolStats { replicas, total, version, canary }
+        PoolStats { replicas, total, version, canary, admission: self.admission_stats() }
     }
 
     /// Ask the pool to stop.  Queued requests are drained first; new
     /// submissions are rejected with [`ServeError::ShutDown`].
     /// Idempotent.
     pub fn shutdown(&self) {
-        let mut q = self.shared.queue.lock().unwrap();
-        q.shutdown = true;
-        self.shared.queue_cv.notify_all();
+        shutdown_shared(&self.shared);
+    }
+
+    /// Arm a [`FaultPlan`] against a chosen replica: its next popped
+    /// job is stalled, panicked on, or dropped without a reply.  The
+    /// generalized fault-injection surface overload and supervision
+    /// tests share instead of hand-rolling failure modes.
+    #[doc(hidden)]
+    pub fn inject_fault(&self, plan: FaultPlan) {
+        self.shared.faults.arm(plan);
     }
 
     /// Fault injection: make the replica that picks this request panic
@@ -611,7 +850,7 @@ impl ServiceHandle {
     #[doc(hidden)]
     pub fn inject_panic(&self) -> Result<Vec<usize>, ServeError> {
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::Crash { target: Target::Pool, reply })?;
+        self.submit(Job::Crash { target: Target::Pool, reply }, Priority::Normal)?;
         rx.recv().map_err(|_| ServeError::WorkerGone)?
     }
 
@@ -621,7 +860,7 @@ impl ServiceHandle {
     #[doc(hidden)]
     pub fn inject_panic_canary(&self) -> Result<Vec<usize>, ServeError> {
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::Crash { target: Target::CanaryOnly, reply })?;
+        self.submit(Job::Crash { target: Target::CanaryOnly, reply }, Priority::Critical)?;
         rx.recv().map_err(|_| ServeError::WorkerGone)?
     }
 
@@ -629,60 +868,245 @@ impl ServiceHandle {
     /// `dur` — the deterministic "saturated pool" for deadline tests
     /// and chaos drills.  Returns immediately; the returned receiver
     /// resolves when the stall ends (drop it to fire and forget).
+    /// Queued like a normal request; [`Self::inject_fault`] with
+    /// [`FaultPlan::stall`] targets a specific replica instead.
     #[doc(hidden)]
     pub fn inject_stall(
         &self,
-        dur: std::time::Duration,
+        dur: Duration,
     ) -> Result<mpsc::Receiver<Result<Vec<usize>, ServeError>>, ServeError> {
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::Stall { dur, reply })?;
+        self.submit(Job::Stall { dur, reply }, Priority::Normal)?;
         Ok(rx)
     }
 
-    fn submit(&self, job: Job) -> Result<(), ServeError> {
-        let mut q = self.shared.queue.lock().unwrap();
-        if q.shutdown {
+    /// The admission front-end: shutdown and canary validity, deadline
+    /// feasibility, the per-class bound with its backpressure policy,
+    /// then routing to a shard.
+    fn submit(&self, job: Job, class: Priority) -> Result<(), ServeError> {
+        let shared = &*self.shared;
+        let ci = class.index();
+        if shared.shutdown.load(Ordering::Acquire) {
             return Err(ServeError::ShutDown);
         }
-        // Canary existence is checked UNDER the queue lock: dismissal
-        // clears the mirror first and then drains the queue (also under
-        // this lock), so a CanaryOnly job admitted here is either
-        // rejected now or found by the drain — never stranded.
-        if job.target() == Target::CanaryOnly && self.canary_replica().is_none() {
+        let target = job.target();
+        if target == Target::CanaryOnly && self.canary_replica().is_none() {
             return Err(ServeError::Canary("no canary active"));
         }
-        q.jobs.push_back(job);
+        // Deadline-aware admission (Pool targets only — the canary
+        // mirror is control traffic and never feasibility-rejected):
+        // refuse a request whose projected queue wait behind
+        // same-or-higher-class work already exceeds its deadline.
+        let feasibility = job.deadline().filter(|_| target == Target::Pool);
+        if let Some(deadline) = feasibility {
+            let ahead: u64 = Priority::ALL[ci..]
+                .iter()
+                .map(|p| shared.counters[p.index()].depth())
+                .sum();
+            let replicas = self.live_pool_replicas();
+            if let Some(wait) = shared.estimator.projected_wait(ahead, replicas) {
+                let slack = deadline.saturating_duration_since(Instant::now());
+                if wait > slack {
+                    shared.counters[ci].reject_deadline();
+                    return Err(ServeError::DeadlineExceeded);
+                }
+            }
+        }
+        // Per-class bound + backpressure policy.
+        let cap = shared.config.cap(class) as u64;
+        loop {
+            if shared.shutdown.load(Ordering::Acquire) {
+                return Err(ServeError::ShutDown);
+            }
+            if shared.counters[ci].depth() < cap {
+                break;
+            }
+            match shared.config.policy(class) {
+                ShedPolicy::Reject => {
+                    shared.counters[ci].reject_overloaded();
+                    return Err(ServeError::Overloaded);
+                }
+                ShedPolicy::ShedOldest => {
+                    // Evict the oldest queued request of this class (its
+                    // client gets the typed Overloaded error).  If a
+                    // popper emptied the class first, the loop re-checks
+                    // the bound and admits.
+                    self.shed_oldest(class);
+                }
+                ShedPolicy::Block => {
+                    shared.space_waiters.fetch_add(1, Ordering::AcqRel);
+                    let guard = shared.park.lock().unwrap();
+                    // Re-check under the park lock: a pop between the
+                    // depth check and here would otherwise be a lost
+                    // wake.  The bounded wait is a belt-and-braces
+                    // backstop, not the wake mechanism.
+                    if shared.counters[ci].depth() < cap
+                        || shared.shutdown.load(Ordering::Acquire)
+                    {
+                        shared.space_waiters.fetch_sub(1, Ordering::AcqRel);
+                        continue;
+                    }
+                    let timeout = Duration::from_millis(10);
+                    let _ = shared.space_cv.wait_timeout(guard, timeout).unwrap();
+                    shared.space_waiters.fetch_sub(1, Ordering::AcqRel);
+                }
+            }
+        }
+        // Route: canary jobs to the canary's shard, pool jobs
+        // round-robin over live, non-canary, non-retiring replicas.
+        let shard = match target {
+            Target::CanaryOnly => match self.canary_replica() {
+                Some(i) => i,
+                None => return Err(ServeError::Canary("no canary active")),
+            },
+            Target::Pool => self.route_pool(),
+        };
+        {
+            let mut q = shared.shards[shard].q.lock().unwrap();
+            if q.closed {
+                return Err(ServeError::ShutDown);
+            }
+            // Re-checked UNDER the shard lock: dismissal clears the
+            // mirror and then drains this shard (also under this lock),
+            // so a CanaryOnly job admitted here is either rejected now
+            // or found by the drain — never stranded.
+            if target == Target::CanaryOnly
+                && shared.canary_replica.load(Ordering::Acquire) != shard
+            {
+                return Err(ServeError::Canary("no canary active"));
+            }
+            shared.counters[ci].admit();
+            q.classes[ci].push_back(job);
+        }
         // With a canary active, the one woken worker might be
         // ineligible for the new job (e.g. the canary woken for a Pool
         // job) and would park again without another wake-up — wake
         // everyone.  With no canary, every worker is eligible for every
         // admissible job, so notify_one avoids a per-request thundering
-        // herd on the serving hot path.  (A canary appearing right
-        // after this check is fine: program_canary's fence does its own
-        // notify_all.)
-        if self.canary_replica().is_none() {
-            self.shared.queue_cv.notify_one();
-        } else {
-            self.shared.queue_cv.notify_all();
-        }
+        // herd on the serving hot path.
+        wake_work(shared, self.canary_replica().is_some());
         Ok(())
     }
+
+    /// Live replicas eligible for Pool traffic (feasibility divisor).
+    fn live_pool_replicas(&self) -> usize {
+        let shared = &*self.shared;
+        let canary = shared.canary_replica.load(Ordering::Acquire);
+        shared
+            .alive_mirror
+            .iter()
+            .enumerate()
+            .filter(|(i, a)| *i != canary && a.load(Ordering::Acquire))
+            .count()
+            .max(1)
+    }
+
+    /// Pick a shard for a Pool job: round-robin over live, non-canary,
+    /// non-retiring replicas.  With none eligible right now (mass death
+    /// or mid-scale), park the job anywhere — work stealing or the
+    /// teardown drain will find it.
+    fn route_pool(&self) -> usize {
+        let shared = &*self.shared;
+        let n = shared.shards.len();
+        let start = shared.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let canary = shared.canary_replica.load(Ordering::Acquire);
+        for k in 0..n {
+            let i = (start + k) % n;
+            if i != canary
+                && shared.alive_mirror[i].load(Ordering::Acquire)
+                && !shared.retire[i].load(Ordering::Acquire)
+            {
+                return i;
+            }
+        }
+        start
+    }
+
+    /// Evict the oldest queued request of `class` (scanning shards in
+    /// index order — "oldest" is per-shard FIFO order, which is exact
+    /// on a single shard and the oldest front across shards otherwise).
+    fn shed_oldest(&self, class: Priority) {
+        let shared = &*self.shared;
+        let ci = class.index();
+        let mut victim = None;
+        for shard in &shared.shards {
+            let mut q = shard.q.lock().unwrap();
+            if let Some(job) = q.classes[ci].pop_front() {
+                shared.counters[ci].pop_shed();
+                victim = Some(job);
+                break;
+            }
+        }
+        if let Some(job) = victim {
+            wake_space(shared);
+            job.fail(|| ServeError::Overloaded);
+        }
+    }
+}
+
+/// Blocking receive with the optional deadline semantics every RPC
+/// wrapper shares.
+fn recv_reply<T>(
+    rx: &mpsc::Receiver<Result<T, ServeError>>,
+    timeout: Option<Duration>,
+) -> Result<T, ServeError> {
+    match timeout {
+        None => rx.recv().map_err(|_| ServeError::WorkerGone)?,
+        Some(t) => match rx.recv_timeout(t) {
+            Ok(result) => result,
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(ServeError::DeadlineExceeded),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServeError::WorkerGone),
+        },
+    }
+}
+
+/// Wake parked workers after enqueueing work (or raising a fence):
+/// the epoch is bumped UNDER the park lock, so a worker that scanned
+/// the shards before this enqueue cannot park past it.
+fn wake_work(shared: &Shared, all: bool) {
+    let _guard = shared.park.lock().unwrap();
+    shared.epoch.fetch_add(1, Ordering::Release);
+    if all {
+        shared.work_cv.notify_all();
+    } else {
+        shared.work_cv.notify_one();
+    }
+}
+
+/// Wake submitters blocked on a full class queue, if any.
+fn wake_space(shared: &Shared) {
+    if shared.space_waiters.load(Ordering::Acquire) == 0 {
+        return;
+    }
+    let _guard = shared.park.lock().unwrap();
+    shared.space_cv.notify_all();
+}
+
+/// Flip the pool to shutdown and wake everything parked on it.
+/// Idempotent.
+fn shutdown_shared(shared: &Shared) {
+    shared.shutdown.store(true, Ordering::Release);
+    let _guard = shared.park.lock().unwrap();
+    shared.epoch.fetch_add(1, Ordering::Release);
+    shared.work_cv.notify_all();
+    shared.space_cv.notify_all();
 }
 
 /// What the queue wait resolved to.
 enum Next {
-    Work(Job),
+    Work { job: Job, class: Priority },
     /// A newer model version is pending — swap before taking work.
     Resync,
     Exit,
 }
 
-/// Runs on every worker exit — normal return or a panic that escaped
-/// `catch_unwind` (e.g. an invalid spec panicking in `build()`): marks
-/// the replica dead and wakes fence waiters so `program` can never
-/// hang on a corpse.  When the LAST replica dies, flips the pool to
-/// shutdown and drops any parked jobs, so clients blocked on replies
-/// get [`ServeError::WorkerGone`] instead of waiting forever.
+/// Runs on every worker exit — normal return, supervisor retirement,
+/// or a panic that escaped `catch_unwind` (e.g. an invalid spec
+/// panicking in `build()`): marks the replica dead and wakes fence
+/// waiters so `program` can never hang on a corpse.  When the LAST
+/// replica dies, flips the pool to shutdown and drops any parked jobs,
+/// so clients blocked on replies get [`ServeError::WorkerGone`]
+/// instead of waiting forever.
 struct DeathWatch<'a> {
     shared: &'a Shared,
     idx: usize,
@@ -690,6 +1114,7 @@ struct DeathWatch<'a> {
 
 impl Drop for DeathWatch<'_> {
     fn drop(&mut self) {
+        self.shared.alive_mirror[self.idx].store(false, Ordering::Release);
         let (all_dead, canary_cleared) = {
             let mut cell = self.shared.cell.lock().unwrap();
             cell.alive[self.idx] = false;
@@ -703,12 +1128,9 @@ impl Drop for DeathWatch<'_> {
             // surviving canary resync onto the pool model before it
             // serves live traffic.
             let was_canary = cell.canary.as_ref().is_some_and(|c| c.replica == self.idx);
-            let only_canary_left = cell
-                .canary
-                .as_ref()
-                .is_some_and(|c| {
-                    cell.alive.iter().enumerate().all(|(i, &a)| !a || i == c.replica)
-                });
+            let only_canary_left = cell.canary.as_ref().is_some_and(|c| {
+                cell.alive.iter().enumerate().all(|(i, &a)| !a || i == c.replica)
+            });
             let canary_cleared = was_canary || only_canary_left;
             if canary_cleared {
                 cell.canary = None;
@@ -722,39 +1144,62 @@ impl Drop for DeathWatch<'_> {
         if canary_cleared && !all_dead {
             drain_canary_jobs(self.shared, "canary replica died");
             // Wake survivors: the version bump above needs a resync.
-            let _q = self.shared.queue.lock().unwrap();
-            self.shared.queue_cv.notify_all();
+            wake_work(self.shared, true);
         }
         if all_dead {
-            let mut q = self.shared.queue.lock().unwrap();
-            q.shutdown = true;
-            // Dropping a Job drops its reply Sender -> clients unblock.
-            q.jobs.clear();
-            self.shared.queue_cv.notify_all();
+            close_shards(self.shared);
+            shutdown_shared(self.shared);
+        }
+        // Last: the supervisor may revive this slot only once the
+        // worker is fully gone.
+        self.shared.retire[self.idx].store(false, Ordering::Release);
+        self.shared.exited[self.idx].store(true, Ordering::Release);
+    }
+}
+
+/// Teardown: close every shard and drop whatever is still queued.
+/// Dropping a job drops its reply sender, so blocked clients get
+/// [`ServeError::WorkerGone`].
+fn close_shards(shared: &Shared) {
+    let mut dropped: Vec<Job> = Vec::new();
+    for shard in &shared.shards {
+        let mut q = shard.q.lock().unwrap();
+        q.closed = true;
+        for (ci, class) in q.classes.iter_mut().enumerate() {
+            while let Some(job) = class.pop_front() {
+                shared.counters[ci].pop_shed();
+                dropped.push(job);
+            }
         }
     }
+    drop(dropped);
 }
 
 /// Fail any still-queued canary-targeted jobs with a typed error.
 /// Called after the canary is cleared (dismissal, pool broadcast, or
 /// canary-worker death): no worker is eligible for them anymore, so
 /// leaving them queued would strand their callers.  The replies are
-/// sent outside the queue lock.
+/// sent outside the shard locks.
 fn drain_canary_jobs(shared: &Shared, reason: &'static str) {
-    let stranded: Vec<Job> = {
-        let mut q = shared.queue.lock().unwrap();
-        let mut kept = VecDeque::with_capacity(q.jobs.len());
-        let mut out = Vec::new();
-        for job in q.jobs.drain(..) {
-            if job.target() == Target::CanaryOnly {
-                out.push(job);
-            } else {
-                kept.push_back(job);
+    let mut stranded: Vec<Job> = Vec::new();
+    for shard in &shared.shards {
+        let mut q = shard.q.lock().unwrap();
+        for (ci, class) in q.classes.iter_mut().enumerate() {
+            let mut kept = VecDeque::with_capacity(class.len());
+            while let Some(job) = class.pop_front() {
+                if job.target() == Target::CanaryOnly {
+                    shared.counters[ci].pop_shed();
+                    stranded.push(job);
+                } else {
+                    kept.push_back(job);
+                }
             }
+            *class = kept;
         }
-        q.jobs = kept;
-        out
-    };
+    }
+    if !stranded.is_empty() {
+        wake_space(shared);
+    }
     for job in stranded {
         job.fail_canary(reason);
     }
@@ -796,6 +1241,9 @@ fn worker_loop(shared: &Shared, idx: usize) {
         last_model: None,
         am_canary: false,
     };
+    // A revived slot carries the counters its previous incarnation
+    // published (scale-down must not erase served history).
+    state.service.metrics = shared.metrics.lock().unwrap()[idx].metrics.clone();
     let mut my_version = 0u64;
     loop {
         // Fence check between requests: drain (we are between jobs),
@@ -804,67 +1252,184 @@ fn worker_loop(shared: &Shared, idx: usize) {
             my_version = program_from_cell(shared, idx, &mut state);
         }
         let am_canary = state.am_canary;
-        let next = {
-            let mut q = shared.queue.lock().unwrap();
-            loop {
-                // Pending reprogram outranks new work: no job may start
-                // on a stale replica once the fence is up.
-                if shared.version.load(Ordering::Acquire) != my_version {
-                    break Next::Resync;
-                }
-                let slot = q.jobs.iter().position(|j| eligible(j.target(), am_canary));
-                if let Some(s) = slot {
-                    break Next::Work(q.jobs.remove(s).expect("position just found"));
-                }
-                if q.shutdown {
-                    break Next::Exit;
-                }
-                q = shared.queue_cv.wait(q).unwrap();
+        let next = loop {
+            // Pending reprogram outranks new work: no job may start
+            // on a stale replica once the fence is up.
+            if shared.version.load(Ordering::Acquire) != my_version {
+                break Next::Resync;
+            }
+            // Supervisor retirement: exit instead of taking work.  (An
+            // active canary ignores the flag; the supervisor never
+            // targets it, and the race where it just became one must
+            // not kill the mirror.)
+            if shared.retire[idx].load(Ordering::Acquire) && !am_canary {
+                break Next::Exit;
+            }
+            let epoch = shared.epoch.load(Ordering::Acquire);
+            if let Some((job, class)) = next_job(shared, idx, am_canary) {
+                break Next::Work { job, class };
+            }
+            if shared.shutdown.load(Ordering::Acquire) {
+                break Next::Exit;
+            }
+            // Nothing to do: park — unless an enqueue raced the scan
+            // (the epoch moved), then rescan instead.  The bounded wait
+            // is a backstop; the epoch check is the correctness.
+            let guard = shared.park.lock().unwrap();
+            if shared.epoch.load(Ordering::Acquire) == epoch {
+                let _ = shared.work_cv.wait_timeout(guard, Duration::from_millis(10)).unwrap();
             }
         };
         match next {
             Next::Resync => continue,
             // DeathWatch marks the replica dead on the way out.
             Next::Exit => return,
-            Next::Work(job) => run_job(shared, idx, &mut state, &mut my_version, job),
+            Next::Work { job, class } => {
+                run_job(shared, idx, &mut state, &mut my_version, job, class);
+            }
         }
     }
 }
 
-fn run_job(shared: &Shared, idx: usize, state: &mut WorkerState, my_version: &mut u64, job: Job) {
+/// Class-major pop with work stealing: scan `Critical` down to `Low`,
+/// own shard first then siblings, skipping jobs this worker is not
+/// eligible for and shedding expired ones unexecuted.
+fn next_job(shared: &Shared, idx: usize, am_canary: bool) -> Option<(Job, Priority)> {
+    let n = shared.shards.len();
+    let mut expired: Vec<Job> = Vec::new();
+    let mut found: Option<(Job, Priority)> = None;
+    'classes: for class in Priority::ALL.iter().rev() {
+        let ci = class.index();
+        // Lock-free skip of empty classes (depth is bumped before the
+        // push becomes visible, so a miss here is re-driven by the
+        // submitter's epoch bump).
+        if shared.counters[ci].depth() == 0 {
+            continue;
+        }
+        for k in 0..n {
+            let shard = (idx + k) % n;
+            let mut q = shared.shards[shard].q.lock().unwrap();
+            loop {
+                let pos = q.classes[ci]
+                    .iter()
+                    .position(|j| eligible(j.target(), am_canary));
+                let Some(pos) = pos else { break };
+                let job = q.classes[ci].remove(pos).expect("position just found");
+                if job.deadline().is_some_and(|d| Instant::now() > d) {
+                    // Shed expired work before computing it: the client
+                    // already got DeadlineExceeded from its
+                    // recv_timeout, so executing the job would burn the
+                    // replica for a discarded answer.
+                    shared.counters[ci].pop_expired();
+                    expired.push(job);
+                } else {
+                    shared.counters[ci].pop_served();
+                    found = Some((job, *class));
+                    break;
+                }
+            }
+            drop(q);
+            if found.is_some() {
+                break 'classes;
+            }
+        }
+    }
+    if !expired.is_empty() || found.is_some() {
+        wake_space(shared);
+    }
+    for job in expired {
+        job.fail(|| ServeError::DeadlineExceeded);
+    }
+    found
+}
+
+fn run_job(
+    shared: &Shared,
+    idx: usize,
+    state: &mut WorkerState,
+    my_version: &mut u64,
+    job: Job,
+    class: Priority,
+) {
+    // Armed fault plans apply to the next popped job on this replica.
+    let mut force_panic = false;
+    match shared.faults.poll(idx) {
+        Some(Fault::Stall(dur)) => std::thread::sleep(dur),
+        Some(Fault::PanicOnJob { .. }) => force_panic = true,
+        Some(Fault::DropReply) => {
+            // Dropping the job drops its reply sender: the client
+            // observes WorkerGone — the supervision blind spot every
+            // caller must tolerate.
+            drop(job);
+            return;
+        }
+        None => {}
+    }
     match job {
         Job::Infer { rows, deadline, reply, .. } => {
-            // Shed expired work before computing it: the client already
-            // got DeadlineExceeded from its recv_timeout, so executing
-            // the job would burn the replica for a discarded answer.
-            if deadline.is_some_and(|d| std::time::Instant::now() > d) {
+            // The pop-side shed already filtered expired jobs, but an
+            // injected stall may have burned the budget since: shed
+            // here too rather than compute a discarded answer.  (The
+            // pop already counted it served, so only the miss is
+            // recorded.)
+            if deadline.is_some_and(|d| Instant::now() > d) {
+                shared.counters[class.index()].expire_in_service();
                 let _ = reply.send(Err(ServeError::DeadlineExceeded));
                 return;
             }
-            let outcome =
-                panic::catch_unwind(AssertUnwindSafe(|| state.service.infer_all(&rows)));
+            let t0 = Instant::now();
+            let outcome = panic::catch_unwind(AssertUnwindSafe(|| {
+                if force_panic {
+                    panic!("injected fault (FaultPlan::PanicOnJob)");
+                }
+                state.service.infer_all(&rows)
+            }));
+            if matches!(&outcome, Ok(Ok(_))) {
+                shared.estimator.observe(t0.elapsed());
+            }
             reply_or_respawn(shared, idx, state, my_version, outcome, reply);
         }
         Job::Stall { dur, reply } => {
             std::thread::sleep(dur);
-            let _ = reply.send(Ok(Vec::new()));
+            if force_panic {
+                let outcome =
+                    panic::catch_unwind(AssertUnwindSafe(|| -> Result<Vec<usize>, CoreError> {
+                        panic!("injected fault (FaultPlan::PanicOnJob)")
+                    }));
+                reply_or_respawn(shared, idx, state, my_version, outcome, reply);
+            } else {
+                let _ = reply.send(Ok(Vec::new()));
+            }
         }
-        Job::Telemetry { rows, reply, .. } => {
+        Job::Telemetry { rows, deadline, reply, .. } => {
+            if deadline.is_some_and(|d| Instant::now() > d) {
+                shared.counters[class.index()].expire_in_service();
+                let _ = reply.send(Err(ServeError::DeadlineExceeded));
+                return;
+            }
             // Capture the fence version the request runs under BEFORE
             // the work: a panic respawn may advance `my_version`.
             let version = *my_version;
+            let t0 = Instant::now();
             let outcome = panic::catch_unwind(AssertUnwindSafe(|| {
+                if force_panic {
+                    panic!("injected fault (FaultPlan::PanicOnJob)");
+                }
                 state
                     .service
                     .infer_with_margins(&rows)
                     .map(|(preds, margins)| Telemetry { preds, margins, model_version: version })
             }));
+            if matches!(&outcome, Ok(Ok(_))) {
+                shared.estimator.observe(t0.elapsed());
+            }
             reply_or_respawn(shared, idx, state, my_version, outcome, reply);
         }
         Job::Crash { reply, .. } => {
-            let outcome = panic::catch_unwind(AssertUnwindSafe(|| -> Result<Vec<usize>, CoreError> {
-                panic!("injected fault (ServiceHandle::inject_panic)")
-            }));
+            let outcome =
+                panic::catch_unwind(AssertUnwindSafe(|| -> Result<Vec<usize>, CoreError> {
+                    panic!("injected fault (ServiceHandle::inject_panic)")
+                }));
             reply_or_respawn(shared, idx, state, my_version, outcome, reply);
         }
     }
@@ -972,6 +1537,92 @@ fn program_from_cell(shared: &Shared, idx: usize, state: &mut WorkerState) -> u6
         shared.fence_cv.notify_all();
     }
     target
+}
+
+/// Autoscaling supervisor: samples total queue depth and the
+/// deadline-miss delta every `interval`; grows the pool toward `max`
+/// under pressure (depth above `depth_per_replica` per live replica,
+/// or any miss this interval) and retires one replica toward `min`
+/// (never the canary) after `idle_ticks` consecutive idle intervals.
+fn supervisor_loop(shared: &Arc<Shared>, cfg: &AutoscaleConfig) {
+    let mut idle_ticks = 0u32;
+    let mut last_misses = 0u64;
+    loop {
+        std::thread::sleep(cfg.interval);
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let depth: u64 = shared.counters.iter().map(|c| c.depth()).sum();
+        let misses: u64 = shared
+            .counters
+            .iter()
+            .map(|c| c.snapshot().deadline_misses)
+            .sum();
+        let new_misses = misses.saturating_sub(last_misses);
+        last_misses = misses;
+        // Retiring replicas are on their way out: count them neither
+        // for pressure nor for the `min` floor.
+        let live = shared
+            .alive_mirror
+            .iter()
+            .zip(&shared.retire)
+            .filter(|(a, r)| a.load(Ordering::Acquire) && !r.load(Ordering::Acquire))
+            .count();
+        let pressured =
+            depth > (cfg.depth_per_replica * live.max(1)) as u64 || new_misses > 0;
+        if pressured {
+            idle_ticks = 0;
+            if live < cfg.max {
+                scale_up(shared);
+            }
+        } else if depth == 0 {
+            idle_ticks += 1;
+            if idle_ticks >= cfg.idle_ticks && live > cfg.min {
+                idle_ticks = 0;
+                scale_down(shared);
+            }
+        } else {
+            idle_ticks = 0;
+        }
+    }
+}
+
+/// Revive one dead slot whose previous worker has fully exited.
+fn scale_up(shared: &Arc<Shared>) {
+    let idx = {
+        let mut cell = shared.cell.lock().unwrap();
+        let slot = (0..cell.alive.len())
+            .find(|&i| !cell.alive[i] && shared.exited[i].load(Ordering::Acquire));
+        let Some(i) = slot else { return };
+        cell.alive[i] = true;
+        cell.acks[i] = 0;
+        cell.errors[i] = None;
+        i
+    };
+    shared.retire[idx].store(false, Ordering::Release);
+    shared.exited[idx].store(false, Ordering::Release);
+    shared.alive_mirror[idx].store(true, Ordering::Release);
+    let handle = spawn_worker(shared, idx);
+    shared.extra_workers.lock().unwrap().push(handle);
+    shared.scale_ups.fetch_add(1, Ordering::AcqRel);
+}
+
+/// Flag the highest-index live, non-canary, non-retiring replica for
+/// retirement; it exits at its next pop and its queued jobs are stolen
+/// by the survivors.
+fn scale_down(shared: &Shared) {
+    let victim = {
+        let cell = shared.cell.lock().unwrap();
+        let canary = cell.canary.as_ref().map(|c| c.replica);
+        (0..cell.alive.len()).rev().find(|&i| {
+            cell.alive[i] && Some(i) != canary && !shared.retire[i].load(Ordering::Acquire)
+        })
+    };
+    let Some(idx) = victim else { return };
+    shared.retire[idx].store(true, Ordering::Release);
+    shared.scale_downs.fetch_add(1, Ordering::AcqRel);
+    // Wake everyone: the retiring worker must notice the flag.
+    wake_work(shared, true);
 }
 
 #[cfg(test)]
@@ -1430,5 +2081,317 @@ mod tests {
         assert!(matches!(h.program(m), Err(ServeError::ShutDown)));
         // Stats still readable after shutdown (final reporting).
         assert_eq!(h.stats().unwrap().inferences, 0);
+    }
+
+    #[test]
+    fn critical_overtakes_queued_low_under_stall() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn(EngineSpec::base());
+        h.program(model).unwrap();
+        h.infer(data.xs.clone()).unwrap();
+
+        // Wedge the lone replica so everything below queues behind it.
+        let stall = h.inject_stall(Duration::from_millis(200)).unwrap();
+        std::thread::sleep(Duration::from_millis(40)); // stall now being served
+        let mut lows = Vec::new();
+        for _ in 0..3 {
+            let h = h.clone();
+            let rows = data.xs[..16].to_vec();
+            lows.push(std::thread::spawn(move || {
+                h.infer_class(rows, Priority::Low).unwrap();
+                Instant::now()
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(40)); // lows are queued
+        let crit = {
+            let h = h.clone();
+            let rows = data.xs[..16].to_vec();
+            std::thread::spawn(move || {
+                h.infer_class(rows, Priority::Critical).unwrap();
+                Instant::now()
+            })
+        };
+        // Class-major pop: the Critical request submitted LAST finishes
+        // before every queued Low one.
+        let crit_done = crit.join().unwrap();
+        for t in lows {
+            let low_done = t.join().unwrap();
+            assert!(
+                crit_done < low_done,
+                "Critical must overtake queued Low requests"
+            );
+        }
+        stall.recv().unwrap().unwrap();
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn reject_policy_returns_typed_overloaded() {
+        let (model, data) = trained();
+        let cfg = PoolConfig {
+            replicas: 1,
+            admission: AdmissionConfig::uniform(1, ShedPolicy::Reject),
+            autoscale: None,
+        };
+        let (h, mut join) = spawn_pool_cfg(EngineSpec::base(), cfg);
+        h.program(model).unwrap();
+        let want = h.infer(data.xs.clone()).unwrap();
+
+        let stall = h.inject_stall(Duration::from_millis(250)).unwrap();
+        // Wait until the stall is being served (Normal queue empty).
+        while h.admission_stats().class(Priority::Normal).depth > 0 {
+            std::thread::yield_now();
+        }
+        // Fill the Low queue (cap 1) with one queued request…
+        let queued = {
+            let h = h.clone();
+            let rows = data.xs.clone();
+            std::thread::spawn(move || h.infer_class(rows, Priority::Low))
+        };
+        while h.admission_stats().class(Priority::Low).depth == 0 {
+            std::thread::yield_now();
+        }
+        // …so the next Low submission is refused with the typed error.
+        assert!(matches!(
+            h.infer_class(data.xs.clone(), Priority::Low),
+            Err(ServeError::Overloaded)
+        ));
+        assert_eq!(queued.join().unwrap().unwrap(), want);
+        stall.recv().unwrap().unwrap();
+        let stats = h.admission_stats();
+        let low = stats.class(Priority::Low);
+        assert_eq!(low.admitted, 1);
+        assert_eq!(low.rejected, 1);
+        assert_eq!(low.served, 1);
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn shed_oldest_evicts_the_oldest_queued_request() {
+        let (model, data) = trained();
+        let cfg = PoolConfig {
+            replicas: 1,
+            admission: AdmissionConfig::uniform(1, ShedPolicy::ShedOldest),
+            autoscale: None,
+        };
+        let (h, mut join) = spawn_pool_cfg(EngineSpec::base(), cfg);
+        h.program(model).unwrap();
+        let want = h.infer(data.xs.clone()).unwrap();
+
+        let stall = h.inject_stall(Duration::from_millis(250)).unwrap();
+        while h.admission_stats().class(Priority::Normal).depth > 0 {
+            std::thread::yield_now();
+        }
+        // A queues first, then B arrives: B's admission evicts A
+        // (freshest data wins), and B gets A's slot.
+        let first = {
+            let h = h.clone();
+            let rows = data.xs.clone();
+            std::thread::spawn(move || h.infer_class(rows, Priority::Low))
+        };
+        while h.admission_stats().class(Priority::Low).depth == 0 {
+            std::thread::yield_now();
+        }
+        let second = h.infer_class(data.xs.clone(), Priority::Low);
+        assert!(matches!(first.join().unwrap(), Err(ServeError::Overloaded)));
+        assert_eq!(second.unwrap(), want);
+        stall.recv().unwrap().unwrap();
+        let stats = h.admission_stats();
+        let low = stats.class(Priority::Low);
+        assert_eq!(low.admitted, 2);
+        assert_eq!(low.shed, 1);
+        assert_eq!(low.served, 1);
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn infeasible_deadline_is_rejected_at_submit() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn(EngineSpec::base());
+        h.program(model).unwrap();
+        // Warm the service-time estimator with a real request.
+        h.infer(data.xs.clone()).unwrap();
+
+        // Pile up queued work so est × ahead dwarfs any slack.
+        let stalls: Vec<_> = (0..64)
+            .map(|_| h.inject_stall(Duration::from_millis(2)).unwrap())
+            .collect();
+        assert!(matches!(
+            h.infer_deadline(data.xs.clone(), Duration::from_micros(1)),
+            Err(ServeError::DeadlineExceeded)
+        ));
+        let stats = h.admission_stats();
+        let normal = stats.class(Priority::Normal);
+        assert!(normal.rejected >= 1, "feasibility reject must be counted");
+        assert!(normal.deadline_misses >= 1);
+        for s in stalls {
+            s.recv().unwrap().unwrap();
+        }
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn admission_counters_reconcile_when_idle() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 2);
+        h.program(model).unwrap();
+        for class in Priority::ALL {
+            for _ in 0..3 {
+                h.infer_class(data.xs[..8].to_vec(), class).unwrap();
+            }
+        }
+        h.infer_telemetry_class(data.xs[..8].to_vec(), Priority::High).unwrap();
+        let stats = h.admission_stats();
+        for class in Priority::ALL {
+            let c = stats.class(class);
+            let want = if class == Priority::High { 4 } else { 3 };
+            assert_eq!(c.admitted, want, "class {class}");
+            assert_eq!(c.served, want, "class {class}");
+            assert_eq!(c.depth, 0);
+            assert_eq!(c.rejected + c.shed + c.deadline_misses, 0);
+        }
+        assert_eq!(stats.depth_total(), 0);
+        assert_eq!(stats.lost_total(), 0);
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn drop_reply_fault_surfaces_worker_gone() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn(EngineSpec::base());
+        h.program(model).unwrap();
+        let want = h.infer(data.xs.clone()).unwrap();
+        h.inject_fault(FaultPlan::drop_reply(0));
+        assert!(matches!(
+            h.infer(data.xs.clone()),
+            Err(ServeError::WorkerGone)
+        ));
+        // The fault consumed itself; the replica is healthy.
+        assert_eq!(h.infer(data.xs.clone()).unwrap(), want);
+        let stats = h.pool_stats();
+        assert_eq!(stats.replicas[0].respawns, 0);
+        assert!(stats.replicas[0].alive);
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn panic_on_nth_job_fault_fires_once_and_respawns() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn(EngineSpec::base());
+        h.program(model).unwrap();
+        let want = h.infer(data.xs.clone()).unwrap();
+        // nth = 2: the next job sails through, the one after panics.
+        h.inject_fault(FaultPlan::panic_on_job(0, 2));
+        assert_eq!(h.infer(data.xs.clone()).unwrap(), want);
+        assert!(matches!(
+            h.infer(data.xs.clone()),
+            Err(ServeError::WorkerPanicked { replica: 0 })
+        ));
+        assert_eq!(h.infer(data.xs.clone()).unwrap(), want);
+        let stats = h.pool_stats();
+        assert_eq!(stats.replicas[0].respawns, 1);
+        assert!(stats.replicas[0].alive);
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn stall_fault_wedges_only_the_chosen_replica() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 2);
+        h.program(model).unwrap();
+        let want = h.infer(data.xs.clone()).unwrap();
+        h.inject_fault(FaultPlan::stall(0, Duration::from_millis(150)));
+        // Requests keep answering correctly; at most one rides out the
+        // stall.  No panics, no respawns, nobody stuck forever.
+        let t0 = Instant::now();
+        for _ in 0..4 {
+            assert_eq!(h.infer(data.xs.clone()).unwrap(), want);
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        let stats = h.pool_stats();
+        assert!(stats.replicas.iter().all(|r| r.alive));
+        assert_eq!(stats.replicas.iter().map(|r| r.respawns).sum::<u64>(), 0);
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn autoscaler_grows_under_pressure_and_shrinks_when_idle() {
+        let (model, data) = trained();
+        let cfg = PoolConfig {
+            replicas: 1,
+            admission: AdmissionConfig::default(),
+            autoscale: Some(AutoscaleConfig {
+                min: 1,
+                max: 3,
+                interval: Duration::from_millis(10),
+                depth_per_replica: 2,
+                idle_ticks: 3,
+            }),
+        };
+        let (h, mut join) = spawn_pool_cfg(EngineSpec::base(), cfg);
+        h.program(model).unwrap();
+        // Saturate the lone replica so queue depth builds up.
+        let stall = h.inject_stall(Duration::from_millis(150)).unwrap();
+        let clients: Vec<_> = (0..8)
+            .map(|_| {
+                let h = h.clone();
+                let rows = data.xs[..16].to_vec();
+                std::thread::spawn(move || h.infer(rows).unwrap())
+            })
+            .collect();
+        let t0 = Instant::now();
+        while h.admission_stats().scale_ups == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "no scale-up");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        for c in clients {
+            assert_eq!(c.join().unwrap().len(), 16);
+        }
+        stall.recv().unwrap().unwrap();
+        // Idle again: the supervisor retires back toward min.
+        let t0 = Instant::now();
+        while h.admission_stats().scale_downs == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "no scale-down");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn deadline_telemetry_and_canary_variants_work() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 2);
+        h.program(model.clone()).unwrap();
+        // Idle pool: generous deadlines behave like the plain RPCs.
+        let tel = h
+            .infer_telemetry_deadline(data.xs.clone(), Duration::from_secs(30))
+            .unwrap();
+        assert_eq!(tel.preds.len(), data.len());
+        h.program_canary(model).unwrap();
+        let preds = h
+            .infer_canary_deadline(data.xs.clone(), Duration::from_secs(30))
+            .unwrap();
+        assert_eq!(preds.len(), data.len());
+        let tel = h
+            .infer_telemetry_canary_deadline(data.xs.clone(), Duration::from_secs(30))
+            .unwrap();
+        assert_eq!(tel.preds.len(), data.len());
+        h.dismiss_canary().unwrap();
+        // With no canary, the deadline canary RPCs are typed errors.
+        assert!(matches!(
+            h.infer_canary_deadline(data.xs.clone(), Duration::from_millis(50)),
+            Err(ServeError::Canary(_))
+        ));
+        h.shutdown();
+        join.join();
     }
 }

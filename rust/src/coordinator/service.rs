@@ -1,6 +1,8 @@
 //! The inference service: accelerator ownership, request execution,
 //! live reprogramming, metrics.
 
+use std::time::Instant;
+
 use crate::accel::core::{AccelConfig, Core, CoreError};
 use crate::accel::engine as sched;
 use crate::accel::multicore::{MultiCore, ParallelMode};
@@ -145,6 +147,12 @@ pub struct Metrics {
     pub batches: u64,
     pub reprograms: u64,
     pub simulated_cycles: u64,
+    /// Host wall-clock time spent executing successful requests, in
+    /// microseconds — unlike `simulated_cycles`, which is accelerator
+    /// time at the configured clock.  The admission front-end's
+    /// utilization view: busy time over wall time is how loaded a
+    /// replica actually is, regardless of simulator speed.
+    pub busy_micros: u64,
     pub errors: u64,
 }
 
@@ -190,11 +198,13 @@ impl InferenceService {
 
     /// Serve one request of up to 32 datapoints.
     pub fn infer(&mut self, rows: &[Vec<u8>]) -> Result<Vec<usize>, CoreError> {
+        let t0 = Instant::now();
         match self.engine.run_rows(rows) {
             Ok((preds, cycles)) => {
                 self.metrics.inferences += rows.len() as u64;
                 self.metrics.batches += 1;
                 self.metrics.simulated_cycles += cycles;
+                self.metrics.busy_micros += t0.elapsed().as_micros() as u64;
                 Ok(preds)
             }
             Err(e) => {
@@ -217,6 +227,7 @@ impl InferenceService {
             self.metrics.errors += 1;
             return Err(CoreError::BadBatch { rows: 0, reason: "empty request" });
         }
+        let t0 = Instant::now();
         let run = match &mut self.engine {
             Engine::Single(c) => sched::classify_rows_core(c, rows),
             Engine::Multi(m) => sched::classify_rows_multicore(m, rows),
@@ -226,6 +237,7 @@ impl InferenceService {
                 self.metrics.inferences += stats.inferences;
                 self.metrics.batches += stats.batches;
                 self.metrics.simulated_cycles += stats.simulated_cycles;
+                self.metrics.busy_micros += t0.elapsed().as_micros() as u64;
                 Ok(preds)
             }
             Err(e) => {
@@ -254,6 +266,7 @@ impl InferenceService {
             self.metrics.errors += 1;
             return Err(CoreError::BadBatch { rows: 0, reason: "empty request" });
         }
+        let t0 = Instant::now();
         let run = match &mut self.engine {
             Engine::Single(c) => sched::classify_rows_margins_core(c, rows),
             Engine::Multi(m) => sched::classify_rows_margins_multicore(m, rows),
@@ -263,6 +276,7 @@ impl InferenceService {
                 self.metrics.inferences += stats.inferences;
                 self.metrics.batches += stats.batches;
                 self.metrics.simulated_cycles += stats.simulated_cycles;
+                self.metrics.busy_micros += t0.elapsed().as_micros() as u64;
                 Ok((preds, margins))
             }
             Err(e) => {

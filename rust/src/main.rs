@@ -6,6 +6,7 @@
 //! rttm train   --workload emg [--backend pjrt|native] [--epochs N] [--n N]
 //! rttm infer   --workload emg [--engine base|single|multi] [--n N]
 //! rttm serve   --workload emg [--engine ...] [--requests N] [--replicas N]
+//!              [--queue-cap N] [--shed-policy block|reject|shed-oldest]
 //! rttm serve   --workload emg --autotune [--schedule abrupt|gradual|recurring]
 //!              [--budget LUTS,BRAMS,WATTS] [--windows N] [--drift F]
 //! rttm retune  --workload emg [--drift 0.35] [--threshold 0.8]
@@ -63,6 +64,7 @@ fn usage() {
          \x20 train   --workload W [--backend pjrt|native] [--epochs N] [--n N]\n\
          \x20 infer   --workload W [--engine base|single|multi] [--n N]\n\
          \x20 serve   --workload W [--engine ...] [--requests N] [--replicas N]\n\
+         \x20         [--queue-cap N] [--shed-policy block|reject|shed-oldest]\n\
          \x20         [--autotune [--schedule abrupt|gradual|recurring]\n\
          \x20          [--budget LUTS,BRAMS,WATTS] [--windows N] [--window-n N] [--drift F]\n\
          \x20          [--canary-fraction F] [--label-free [--label-delay N]]\n\
@@ -264,15 +266,29 @@ fn cmd_serve(opts: &Opts) -> anyhow::Result<()> {
     let requests = opts.get_usize("requests", 100);
     let replicas = opts.get_usize("replicas", 1);
     let engine_name = opts.get("engine", "base");
+    // Admission front-end: per-class queue cap and the backpressure
+    // policy applied to the data classes (Low/Normal); control classes
+    // (High/Critical) always block rather than shed.
+    let queue_cap = opts.get_usize("queue-cap", 1024);
+    anyhow::ensure!(queue_cap >= 1, "--queue-cap must be >= 1");
+    let shed_policy: rttm::coordinator::ShedPolicy = opts
+        .get("shed-policy", "block")
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))?;
     let data = w.dataset(32 * requests, 11);
     let node = TrainingNode::native(w.shape.clone());
     let model = node.retrain(&w.dataset(1024, 7))?;
 
     // Replica pool: N workers, each owning one engine replica built
-    // from the same spec, fed from a shared request queue.
-    let (handle, mut join) = rttm::coordinator::server::spawn_pool(
+    // from the same spec, fed through sharded per-class queues behind
+    // the admission front-end.
+    let (handle, mut join) = rttm::coordinator::server::spawn_pool_cfg(
         fitted_engine_for(&engine_name, &model)?.to_spec(),
-        replicas,
+        rttm::coordinator::PoolConfig {
+            replicas,
+            admission: rttm::coordinator::AdmissionConfig::uniform(queue_cap, shed_policy),
+            autoscale: None,
+        },
     );
     handle.program(model)?;
     let t0 = std::time::Instant::now();
@@ -287,30 +303,47 @@ fn cmd_serve(opts: &Opts) -> anyhow::Result<()> {
             .filter(|(i, _)| i % replicas.max(1) == c)
             .map(|(_, chunk)| chunk.to_vec())
             .collect();
-        clients.push(std::thread::spawn(move || -> anyhow::Result<()> {
+        clients.push(std::thread::spawn(move || -> anyhow::Result<u64> {
+            let mut refused = 0u64;
             for chunk in chunks {
-                h.infer(chunk)?;
+                match h.infer(chunk) {
+                    Ok(_) => {}
+                    // Under --shed-policy reject the front-end refuses
+                    // work instead of queueing it; that is the operator's
+                    // choice, not a serving failure.
+                    Err(rttm::coordinator::ServeError::Overloaded) => refused += 1,
+                    Err(e) => return Err(e.into()),
+                }
             }
-            Ok(())
+            Ok(refused)
         }));
     }
+    let mut refused = 0u64;
     for c in clients {
-        c.join().expect("client thread")?;
+        refused += c.join().expect("client thread")?;
     }
     let wall = t0.elapsed();
-    let stats = handle.stats()?;
+    let stats = handle.pool_stats();
     handle.shutdown();
     join.join();
     let f = engine_for(&engine_name)?.freq_mhz();
     println!(
         "served {} requests ({} inferences) engine={} replicas={} sim_us_total={:.1} wall_ms={:.1} host_rps={:.0}",
-        stats.batches,
-        stats.inferences,
+        stats.total.batches,
+        stats.total.inferences,
         engine_name,
         replicas,
-        stats.simulated_us(f),
+        stats.total.simulated_us(f),
         wall.as_secs_f64() * 1e3,
-        stats.batches as f64 / wall.as_secs_f64(),
+        stats.total.batches as f64 / wall.as_secs_f64(),
+    );
+    println!(
+        "admission queue_cap={} shed_policy={} refused={} lost={} deadline_misses={}",
+        queue_cap,
+        shed_policy,
+        refused,
+        stats.admission.lost_total(),
+        stats.admission.deadline_misses_total(),
     );
     Ok(())
 }
@@ -330,6 +363,12 @@ fn cmd_serve_autotune(opts: &Opts) -> anyhow::Result<()> {
         anyhow::bail!(
             "--autotune serves a drift-schedule stream on fitted base-config replicas; \
              --engine/--requests do not apply (use --replicas/--windows/--window-n/--drift)"
+        );
+    }
+    if opts.has("queue-cap") || opts.has("shed-policy") {
+        anyhow::bail!(
+            "--autotune drives its own control-class traffic through default (block) \
+             admission; --queue-cap/--shed-policy apply to plain `serve` only"
         );
     }
     let replicas = opts.get_usize("replicas", 2).max(1);

@@ -13,8 +13,8 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use rttm::coordinator::autotune::AutotuneReport;
-use rttm::coordinator::server::spawn_pool;
-use rttm::coordinator::{EngineSpec, PoolJoin, ServiceHandle};
+use rttm::coordinator::server::{spawn_pool, spawn_pool_cfg, ServeError};
+use rttm::coordinator::{EngineSpec, PoolConfig, PoolJoin, Priority, ServiceHandle};
 use rttm::datasets::synth::{Dataset, SynthSpec};
 use rttm::datasets::workloads::{DriftSchedule, Workload};
 use rttm::{TMModel, TMShape};
@@ -56,6 +56,13 @@ pub struct PoolHarness {
 
 pub fn spawn_harness(spec: EngineSpec, replicas: usize) -> PoolHarness {
     let (handle, join) = spawn_pool(spec, replicas);
+    PoolHarness { handle, join }
+}
+
+/// [`spawn_harness`] under a full [`PoolConfig`] (classed admission
+/// caps/policies, optional autoscaler) — the overload tests' entry.
+pub fn spawn_harness_cfg(spec: EngineSpec, cfg: PoolConfig) -> PoolHarness {
+    let (handle, join) = spawn_pool_cfg(spec, cfg);
     PoolHarness { handle, join }
 }
 
@@ -131,6 +138,69 @@ impl Traffic {
         assert!(served > 0, "no traffic flowed");
         served
     }
+}
+
+/// Outcome tally of a synchronous classed hammer ([`classed_load`]):
+/// one bucket per interesting [`ServeError`] flavour, so overload tests
+/// can reconcile client-side observations against the pool's admission
+/// counters.
+#[derive(Debug, Default, Clone)]
+pub struct LoadOutcome {
+    pub ok: u64,
+    pub overloaded: u64,
+    pub deadline: u64,
+    pub other: u64,
+}
+
+impl LoadOutcome {
+    /// Total requests this tally accounts for.
+    pub fn submitted(&self) -> u64 {
+        self.ok + self.overloaded + self.deadline + self.other
+    }
+
+    pub fn absorb(&mut self, o: &LoadOutcome) {
+        self.ok += o.ok;
+        self.overloaded += o.overloaded;
+        self.deadline += o.deadline;
+        self.other += o.other;
+    }
+}
+
+/// Fire `clients` synchronous client threads, each sending `per_client`
+/// copies of `rows` at `class`, and tally what came back.  Blocks until
+/// every client drains — the deterministic "offered load of N clients"
+/// used by the saturation tests (offered load is controlled by client
+/// count, not a rate, so the test is timing-independent).
+pub fn classed_load(
+    handle: &ServiceHandle,
+    rows: &[Vec<u8>],
+    class: Priority,
+    clients: usize,
+    per_client: usize,
+) -> LoadOutcome {
+    let threads: Vec<_> = (0..clients)
+        .map(|_| {
+            let h = handle.clone();
+            let rows = rows.to_vec();
+            std::thread::spawn(move || {
+                let mut out = LoadOutcome::default();
+                for _ in 0..per_client {
+                    match h.infer_class(rows.clone(), class) {
+                        Ok(_) => out.ok += 1,
+                        Err(ServeError::Overloaded) => out.overloaded += 1,
+                        Err(ServeError::DeadlineExceeded) => out.deadline += 1,
+                        Err(_) => out.other += 1,
+                    }
+                }
+                out
+            })
+        })
+        .collect();
+    let mut total = LoadOutcome::default();
+    for t in threads {
+        total.absorb(&t.join().expect("load client panicked"));
+    }
+    total
 }
 
 /// Window-observed model versions must never go backwards.  (Strict
