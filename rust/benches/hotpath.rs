@@ -754,6 +754,103 @@ fn main() {
         join.join();
     }
 
+    // 9. §multi-model — two tenants through ONE pool under a 50/50
+    //    request mix, Dedicated (replicas pinned per tenant, zero
+    //    reprogram jitter) vs TimeShared (affinity-aware with the dwell
+    //    thrash guard).  Both runs are equivalence-gated per tenant
+    //    before timing, and the TimeShared run also reports the
+    //    reprogram-thrash fraction (model switches per admitted job) —
+    //    the number the dwell guard exists to keep near zero.  The CI
+    //    gate requires TimeShared to hold >= 0.5x Dedicated here.
+    {
+        use rttm::coordinator::server::spawn_pool_sharded;
+        use rttm::coordinator::{PoolConfig, ShardingPolicy};
+
+        println!("\n--- multi-model serving (two tenants, 50/50 mix, 4 replicas) ---");
+        // Tenant B: same shape, different prototype draw (a drifted
+        // re-train), so cross-tenant contamination would show up as a
+        // byte-level mismatch in the equivalence gate.
+        let drifted = w.drifted_dataset(corpus, 9, 0.4);
+        let model_b = rttm::trainer::train_model(&w.shape, &drifted, epochs, 11);
+        let mut ref_b = InferenceService::new(spec.build());
+        ref_b.reprogram(&model_b).unwrap();
+
+        let mut mm_inf_per_s: Vec<f64> = Vec::new();
+        let mut thrash_frac = 0.0f64;
+        for sharding in [ShardingPolicy::Dedicated, ShardingPolicy::time_shared()] {
+            let (h, mut join) = spawn_pool_sharded(spec.clone(), PoolConfig::fixed(4), sharding);
+            let ida = h.register_model("tenant-a", model.clone()).unwrap();
+            let idb = h.register_model("tenant-b", model_b.clone()).unwrap();
+            let ha = h.with_model(ida);
+            let hb = h.with_model(idb);
+            // Per-tenant equivalence gate: a wrong route is a failure,
+            // not a data point.
+            assert_eq!(
+                ha.infer(serving_reqs[0].clone()).unwrap(),
+                reference_svc.infer_all(&serving_reqs[0]).unwrap(),
+                "tenant A through the {} pool must match its own model",
+                sharding.name()
+            );
+            assert_eq!(
+                hb.infer(serving_reqs[0].clone()).unwrap(),
+                ref_b.infer_all(&serving_reqs[0]).unwrap(),
+                "tenant B through the {} pool must match its own model",
+                sharding.name()
+            );
+            // Two clients per tenant, interleaved over the shared
+            // request corpus: warm-up pass, then the timed pass.
+            for pass in 0..2 {
+                let t0 = std::time::Instant::now();
+                std::thread::scope(|s| {
+                    for (ci, handle) in
+                        [ha.clone(), hb.clone(), ha.clone(), hb.clone()].into_iter().enumerate()
+                    {
+                        let reqs = &serving_reqs;
+                        s.spawn(move || {
+                            for (i, r) in reqs.iter().enumerate() {
+                                if i % 4 == ci {
+                                    let p = handle.infer(r.clone()).unwrap();
+                                    std::hint::black_box(p.len());
+                                }
+                            }
+                        });
+                    }
+                });
+                if pass == 1 {
+                    let wall = t0.elapsed();
+                    let inf_per_s =
+                        (n_requests * req_rows) as f64 / wall.as_secs_f64().max(1e-12);
+                    println!(
+                        "{:<14} (2 tenants):   {inf_per_s:>12.0} inferences/s host",
+                        sharding.name()
+                    );
+                    mm_inf_per_s.push(inf_per_s);
+                }
+            }
+            let stats = h.pool_stats();
+            let admitted: u64 = stats.models.iter().map(|m| m.admitted()).sum();
+            match sharding {
+                ShardingPolicy::Dedicated => assert_eq!(
+                    stats.sharding_switches, 0,
+                    "dedicated pools must never reprogram for traffic"
+                ),
+                ShardingPolicy::TimeShared { .. } => {
+                    thrash_frac = stats.sharding_switches as f64 / admitted.max(1) as f64;
+                }
+            }
+            h.shutdown();
+            join.join();
+        }
+        println!(
+            "time-shared vs dedicated:       {:>10.2}x  (reprogram thrash frac {thrash_frac:.4})",
+            mm_inf_per_s[1] / mm_inf_per_s[0]
+        );
+        // 1024-row requests ride the 64-lane sliced kernel; 4 replicas.
+        push_throughput(&mut json, "multimodel_dedicated_inf_per_s", mm_inf_per_s[0], 64, 4);
+        push_throughput(&mut json, "multimodel_timeshared_inf_per_s", mm_inf_per_s[1], 64, 4);
+        json.push(("multimodel_reprogram_thrash_frac".into(), thrash_frac));
+    }
+
     write_json("BENCH_hotpath.json", &json);
 }
 

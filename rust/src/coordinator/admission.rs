@@ -331,6 +331,85 @@ impl AdmissionStats {
     }
 }
 
+/// Lock-free per-model admission counters: one [`ClassCounters`] per
+/// priority class plus the sharding-switch count.  Every routed job
+/// carries an `Arc<ModelCounters>` resolved once at submit, and every
+/// site that touches the pool-wide counters mirrors the same transition
+/// here — so the per-model arrays obey exactly the [`ClassStats`]
+/// reconciliation invariants, model by model.
+#[derive(Debug, Default)]
+pub struct ModelCounters {
+    /// Indexed by [`Priority::index`].
+    pub classes: [ClassCounters; PRIORITY_COUNT],
+    /// Replica self-reassignments TO this model under the `TimeShared`
+    /// sharding policy (the reprogram-thrash metric's numerator).
+    pub switches: AtomicU64,
+}
+
+impl ModelCounters {
+    pub fn record_switch(&self) {
+        self.switches.fetch_add(1, Ordering::AcqRel);
+    }
+
+    pub fn snapshot(&self) -> [ClassStats; PRIORITY_COUNT] {
+        [
+            self.classes[0].snapshot(),
+            self.classes[1].snapshot(),
+            self.classes[2].snapshot(),
+            self.classes[3].snapshot(),
+        ]
+    }
+}
+
+/// One model's admission/serving rollup, reported inside `PoolStats`
+/// and by `ServiceHandle::model_stats`.
+#[derive(Debug, Clone)]
+pub struct ModelStats {
+    pub id: super::registry::ModelId,
+    /// Registered deployment name, or `m<id>` for routes that carried
+    /// traffic without ever being registered.
+    pub name: String,
+    /// Indexed by [`Priority::index`]; each class reconciles on its own
+    /// (see [`ClassStats`]).
+    pub classes: [ClassStats; PRIORITY_COUNT],
+    /// Replica self-reassignments to this model (`TimeShared` thrash).
+    pub switches: u64,
+}
+
+impl ModelStats {
+    pub fn class(&self, p: Priority) -> &ClassStats {
+        &self.classes[p.index()]
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.classes.iter().map(|c| c.admitted + c.rejected).sum()
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.classes.iter().map(|c| c.admitted).sum()
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.classes.iter().map(|c| c.rejected).sum()
+    }
+
+    pub fn served(&self) -> u64 {
+        self.classes.iter().map(|c| c.served).sum()
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.classes.iter().map(|c| c.shed).sum()
+    }
+
+    pub fn depth(&self) -> u64 {
+        self.classes.iter().map(|c| c.depth).sum()
+    }
+
+    pub fn deadline_misses(&self) -> u64 {
+        self.classes.iter().map(|c| c.deadline_misses).sum()
+    }
+}
+
 /// EWMA of observed per-request service time, feeding deadline-aware
 /// admission: a request whose projected queue wait already exceeds its
 /// deadline is refused at submit.
@@ -604,6 +683,33 @@ mod tests {
         assert_eq!(s.admitted, s.served + s.shed + s.depth);
         assert_eq!(s.depth, 2);
         assert_eq!(s.deadline_misses, 2);
+    }
+
+    #[test]
+    fn model_counters_reconcile_per_class() {
+        let m = ModelCounters::default();
+        let hi = Priority::High.index();
+        let lo = Priority::Low.index();
+        for _ in 0..5 {
+            m.classes[hi].admit();
+        }
+        m.classes[hi].pop_served();
+        m.classes[hi].pop_expired();
+        m.classes[lo].admit();
+        m.classes[lo].reject_overloaded();
+        m.record_switch();
+        let snap = ModelStats {
+            id: super::super::registry::ModelId(3),
+            name: "t".into(),
+            classes: m.snapshot(),
+            switches: m.switches.load(Ordering::Acquire),
+        };
+        assert_eq!(snap.submitted(), 7);
+        assert_eq!(snap.admitted(), snap.served() + snap.shed() + snap.depth());
+        assert_eq!(snap.class(Priority::High).depth, 3);
+        assert_eq!(snap.deadline_misses(), 1);
+        assert_eq!(snap.switches, 1);
+        assert_eq!(snap.id.to_string(), "m3");
     }
 
     #[test]

@@ -42,6 +42,13 @@
 //! alone, the canary compares T-normalized margins, and labels that
 //! arrive late ([`Autotuner::backfill_labels`]) backfill accuracy into
 //! the [`AutotuneReport`] and the retrain corpus without re-triggering.
+//!
+//! On a multi-tenant pool the tuner is scoped per model for free: hand
+//! it a route-scoped handle ([`ServiceHandle::with_model`]) and every
+//! probe, canary stage and swap it performs targets that tenant only —
+//! one `Autotuner` instance per registered model, constrained by that
+//! model's own [`ResourceBudget`] from the registry, with no
+//! cross-tenant traffic or reprograms.
 
 use std::sync::{mpsc, Arc};
 

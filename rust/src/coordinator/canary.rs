@@ -22,6 +22,13 @@
 //! **T-normalized confidence margins** when they are not (margins scale
 //! with a model's threshold T, so raw margins are not comparable across
 //! candidate shapes — the label-free canary compares margin/T).
+//!
+//! Under the multi-tenant registry a canary is just another routed
+//! model: build the controller on a route-scoped handle
+//! ([`ServiceHandle::with_model`]) and the staged candidate, its
+//! mirrors and its verdict touch that tenant's replicas only.  K
+//! controllers on K routes evaluate K candidates concurrently
+//! (multi-canary) with no extra machinery.
 
 use super::server::{ServeError, ServiceHandle, Telemetry};
 

@@ -34,26 +34,38 @@
 //!   never served from more than one replica, and never to live
 //!   traffic.
 
+//! * the [`registry`] identity layer: every model a pool can serve is
+//!   registered under a stable [`registry::ModelId`] (content-hash
+//!   deduplicated, with per-model deployment metadata and resource
+//!   budgets), every request carries a model route, and replicas hold
+//!   per-model affinity under a [`server::ShardingPolicy`] — pinned
+//!   (`Dedicated`) or affinity-aware with a reprogram-thrash dwell
+//!   guard (`TimeShared`) — which turns the pool into a multi-tenant
+//!   serving platform; autotuners and canary controllers become
+//!   per-model instances simply by holding a route-scoped handle.
+
 pub mod admission;
 pub mod autotune;
 pub mod canary;
 pub mod hyperparam;
+pub mod registry;
 pub mod server;
 pub mod service;
 pub mod tuner;
 
 pub use admission::{
-    AdmissionConfig, AdmissionStats, AutoscaleConfig, ClassStats, Fault, FaultPlan, PoolConfig,
-    Priority, ShedPolicy,
+    AdmissionConfig, AdmissionStats, AutoscaleConfig, ClassStats, Fault, FaultPlan, ModelCounters,
+    ModelStats, PoolConfig, Priority, ShedPolicy,
 };
 pub use autotune::{
     AutotuneConfig, AutotuneEvent, AutotuneReport, Autotuner, CanaryOutcome, DriftDetector,
     WindowStats,
 };
 pub use canary::{CanaryConfig, CanaryController, CanaryVerdict, PairedWindow};
+pub use registry::{ModelEntry, ModelId, ModelRegistry, RegisterOutcome};
 pub use server::{
-    spawn, spawn_pool, spawn_pool_cfg, PoolJoin, PoolStats, ReplicaStats, ServeError, ServerStats,
-    ServiceHandle, Telemetry,
+    spawn, spawn_pool, spawn_pool_cfg, spawn_pool_sharded, PoolJoin, PoolStats, ReplicaStats,
+    ServeError, ServerStats, ServiceHandle, ShardingPolicy, Telemetry,
 };
 pub use service::{Engine, EngineSpec, InferenceService, Metrics};
 pub use tuner::{RecalReport, RecalibrationLoop, TrainBackend, TrainingNode};

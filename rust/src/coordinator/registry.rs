@@ -1,0 +1,260 @@
+//! Model registry: the identity layer of the multi-model serving
+//! platform.
+//!
+//! A [`ModelRegistry`] owns every model a replica pool can serve, keyed
+//! by [`ModelId`].  Registration deduplicates by content hash — the
+//! FNV-1a-64 digest of the model's canonical `.rttm` v1 wire bytes
+//! ([`crate::tm::serialize::content_hash`]) — so registering the same
+//! trained model twice hands back the existing id instead of burning a
+//! replica partition on a duplicate.  Entries carry deployment
+//! metadata: a human-readable name, the content hash, and an optional
+//! per-model [`ResourceBudget`] (the frontier an autotuner scoped to
+//! this model must respect).
+//!
+//! The registry is pure bookkeeping — it never touches replicas.  The
+//! serving half (per-replica assignment, sharding policies, reprogram
+//! fences) lives in [`super::server`], which embeds a registry inside
+//! its versioned model cell and re-exposes it through
+//! `ServiceHandle::register_model` / `retire_model`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::Arc;
+
+use crate::model_cost::resources::ResourceBudget;
+use crate::tm::model::TMModel;
+use crate::tm::serialize::content_hash;
+
+/// Opaque route key for one registered model.
+///
+/// `ModelId::DEFAULT` (id 0) is reserved for the single-model
+/// compatibility wrappers: a plain `ServiceHandle` routes everything —
+/// programs, requests, canaries — at the default model, which is why
+/// pools that never call `register_model` behave exactly like the
+/// pre-registry single-model pool.  Freshly registered models get ids
+/// from 1 up; ids are never reused, even after `retire`.
+#[derive(Debug, Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ModelId(pub u64);
+
+impl ModelId {
+    /// The single-model compatibility route (see type docs).
+    pub const DEFAULT: ModelId = ModelId(0);
+}
+
+impl fmt::Display for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "m{}", self.0)
+    }
+}
+
+/// One registered model: the shared trained artifact plus its
+/// deployment metadata.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub id: ModelId,
+    /// Deployment name (tenant/application label) — distinct from the
+    /// model's internal shape name, which tracks architecture.
+    pub name: String,
+    /// FNV-1a-64 over the model's canonical v1 wire bytes.
+    pub content_hash: u64,
+    pub model: Arc<TMModel>,
+    /// Optional per-model resource frontier for scoped autotuners.
+    pub budget: Option<ResourceBudget>,
+}
+
+/// What [`ModelRegistry::register`] did.
+#[derive(Debug, Copy, Clone, PartialEq, Eq)]
+pub struct RegisterOutcome {
+    pub id: ModelId,
+    /// True when an identical model (same content hash) was already
+    /// registered and `id` names that existing entry.
+    pub deduped: bool,
+}
+
+/// Id-ordered model table with content-hash dedup.
+#[derive(Debug, Default)]
+pub struct ModelRegistry {
+    entries: BTreeMap<ModelId, ModelEntry>,
+    /// Next fresh id; starts at 1 (0 is [`ModelId::DEFAULT`]).
+    next: u64,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        ModelRegistry { entries: BTreeMap::new(), next: 1 }
+    }
+
+    /// Register `model` under a fresh id, or hand back the existing id
+    /// when an entry with the same content hash is already present.
+    pub fn register(&mut self, name: &str, model: Arc<TMModel>) -> RegisterOutcome {
+        let hash = content_hash(&model);
+        if let Some(e) = self.entries.values().find(|e| e.content_hash == hash) {
+            return RegisterOutcome { id: e.id, deduped: true };
+        }
+        let id = ModelId(self.next);
+        self.next += 1;
+        self.entries.insert(
+            id,
+            ModelEntry {
+                id,
+                name: name.to_string(),
+                content_hash: hash,
+                model,
+                budget: None,
+            },
+        );
+        RegisterOutcome { id, deduped: false }
+    }
+
+    /// Upsert by id — no dedup.  This is the primitive behind scoped
+    /// `program()`: installing new content under an existing route
+    /// (promote, retrain swap) replaces the model but keeps the entry's
+    /// registered name and budget.  Returns true when `id` was new.
+    pub fn install(&mut self, id: ModelId, name_hint: &str, model: Arc<TMModel>) -> bool {
+        let hash = content_hash(&model);
+        match self.entries.get_mut(&id) {
+            Some(e) => {
+                e.model = model;
+                e.content_hash = hash;
+                false
+            }
+            None => {
+                self.next = self.next.max(id.0 + 1);
+                self.entries.insert(
+                    id,
+                    ModelEntry {
+                        id,
+                        name: name_hint.to_string(),
+                        content_hash: hash,
+                        model,
+                        budget: None,
+                    },
+                );
+                true
+            }
+        }
+    }
+
+    /// Remove a model; true if it was present.  Its id is never reused.
+    pub fn retire(&mut self, id: ModelId) -> bool {
+        self.entries.remove(&id).is_some()
+    }
+
+    pub fn get(&self, id: ModelId) -> Option<&ModelEntry> {
+        self.entries.get(&id)
+    }
+
+    pub fn model(&self, id: ModelId) -> Option<Arc<TMModel>> {
+        self.entries.get(&id).map(|e| Arc::clone(&e.model))
+    }
+
+    pub fn contains(&self, id: ModelId) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    pub fn name_of(&self, id: ModelId) -> Option<&str> {
+        self.entries.get(&id).map(|e| e.name.as_str())
+    }
+
+    /// Registered ids in ascending order (the rebalance partition order).
+    pub fn ids(&self) -> Vec<ModelId> {
+        self.entries.keys().copied().collect()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &ModelEntry> {
+        self.entries.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Attach (or clear) a per-model resource budget; false if `id` is
+    /// unknown.
+    pub fn set_budget(&mut self, id: ModelId, budget: Option<ResourceBudget>) -> bool {
+        match self.entries.get_mut(&id) {
+            Some(e) => {
+                e.budget = budget;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TMShape;
+
+    fn model(tag: u8) -> Arc<TMModel> {
+        let mut m = TMModel::empty(TMShape::synthetic(4, 2, 4));
+        m.set_include(0, 0, usize::from(tag) % 8, true);
+        Arc::new(m)
+    }
+
+    #[test]
+    fn register_allocates_sequential_ids_from_one() {
+        let mut reg = ModelRegistry::new();
+        let a = reg.register("a", model(0));
+        let b = reg.register("b", model(1));
+        assert_eq!(a.id, ModelId(1));
+        assert_eq!(b.id, ModelId(2));
+        assert!(!a.deduped && !b.deduped);
+        assert_eq!(reg.ids(), vec![ModelId(1), ModelId(2)]);
+    }
+
+    #[test]
+    fn register_dedups_identical_content() {
+        let mut reg = ModelRegistry::new();
+        let first = reg.register("orig", model(3));
+        let dup = reg.register("copy", model(3));
+        assert_eq!(dup.id, first.id);
+        assert!(dup.deduped);
+        assert_eq!(reg.len(), 1);
+        // The original registration's name wins.
+        assert_eq!(reg.name_of(first.id), Some("orig"));
+    }
+
+    #[test]
+    fn retired_ids_are_never_reused() {
+        let mut reg = ModelRegistry::new();
+        let a = reg.register("a", model(0)).id;
+        assert!(reg.retire(a));
+        assert!(!reg.retire(a));
+        let b = reg.register("a-again", model(0)).id;
+        assert_eq!(b, ModelId(2), "retired id 1 must not be recycled");
+    }
+
+    #[test]
+    fn install_upserts_without_dedup_and_keeps_metadata() {
+        let mut reg = ModelRegistry::new();
+        assert!(reg.install(ModelId::DEFAULT, "default", model(0)));
+        assert!(reg.set_budget(ModelId::DEFAULT, Some(ResourceBudget::unlimited())));
+        // Re-install under the same id: content changes, name and
+        // budget survive, no new entry.
+        assert!(!reg.install(ModelId::DEFAULT, "ignored", model(1)));
+        let e = reg.get(ModelId::DEFAULT).unwrap();
+        assert_eq!(e.name, "default");
+        assert!(e.budget.is_some());
+        assert_eq!(reg.len(), 1);
+        // Fresh ids still start above any installed id.
+        assert_eq!(reg.register("next", model(2)).id, ModelId(1));
+    }
+
+    #[test]
+    fn model_id_display_and_default() {
+        assert_eq!(ModelId::DEFAULT.to_string(), "m0");
+        assert_eq!(ModelId(7).to_string(), "m7");
+    }
+
+    #[test]
+    fn set_budget_on_unknown_id_is_false() {
+        let mut reg = ModelRegistry::new();
+        assert!(!reg.set_budget(ModelId(9), None));
+    }
+}

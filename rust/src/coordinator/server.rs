@@ -4,8 +4,8 @@
 //! (offline toolchain has no tokio; std primitives give the same
 //! shape: sharded queues, condvars, message-passing replies).
 //!
-//! Properties the pool guarantees (EXPERIMENTS.md §Serving and
-//! §Admission):
+//! Properties the pool guarantees (EXPERIMENTS.md §Serving,
+//! §Admission and §Multi-tenant):
 //!
 //! * **Versioned broadcast reprogram.**  [`ServiceHandle::program`]
 //!   publishes the model under a monotonically increasing version and
@@ -13,11 +13,20 @@
 //!   each worker drains its in-flight request, swaps, then resumes).
 //!   Once `program` returns, no later inference can observe an older
 //!   model, and all replicas report the same version.
+//! * **Multi-model routing.**  The pool embeds a [`ModelRegistry`];
+//!   [`ServiceHandle::register_model`] adds tenants (content-hash
+//!   deduplicated) and [`ServiceHandle::with_model`] scopes a handle so
+//!   every RPC on it carries that [`ModelId`] route.  Replicas hold a
+//!   per-replica model *affinity*; a [`ShardingPolicy`] decides whether
+//!   affinity is fixed (`Dedicated`) or traffic-driven (`TimeShared`,
+//!   with a dwell-time reprogram-thrash guard).  A plain handle routes
+//!   at [`ModelId::DEFAULT`], which is why single-model pools behave
+//!   exactly like the pre-registry front-end.
 //! * **Panic supervision.**  A request that panics its worker does not
 //!   kill the pool: the panic is caught, the failing request gets a
 //!   typed [`ServeError::WorkerPanicked`], and the replica is rebuilt
-//!   from its [`EngineSpec`] and reprogrammed from the last-programmed
-//!   model before taking more work.  Counters survive the respawn.
+//!   from its [`EngineSpec`] and reprogrammed from its assigned model
+//!   before taking more work.  Counters survive the respawn.
 //! * **Classed admission.**  Every request carries a [`Priority`]
 //!   class (`Normal` by default, `Critical` for canary mirrors).
 //!   Workers pop class-major — `Critical` overtakes queued `Low`
@@ -26,7 +35,7 @@
 //!   the control plane keeps flowing while bulk traffic queues or
 //!   sheds ([`ServeError::Overloaded`]).
 //! * **Sharded queues with work stealing.**  Jobs are routed
-//!   round-robin to per-replica shards; a worker pops its own shard
+//!   affinity-first to per-replica shards; a worker pops its own shard
 //!   first and steals from siblings, so replicas no longer contend on
 //!   one global lock and an idle replica never watches a busy one.
 //! * **Deadline-aware admission.**  A request whose deadline cannot be
@@ -37,18 +46,18 @@
 //!   worker to pop them.
 //! * **Autoscaling.**  With an [`AutoscaleConfig`], a supervisor
 //!   thread scales the live replica count between `min..=max` from
-//!   observed queue depth and deadline-miss rate (never retiring the
-//!   canary).
+//!   observed queue depth and deadline-miss rate (never retiring a
+//!   canary, and never retiring a model's last dedicated replica).
 //! * **Typed errors.**  Engine rejections ([`CoreError`], including
 //!   the `BadBatch` malformed-request validation), worker panics,
-//!   admission refusals and pool shutdown are distinct [`ServeError`]
-//!   variants — no more opaque "service worker gone".
+//!   admission refusals, unroutable models and pool shutdown are
+//!   distinct [`ServeError`] variants.
 //! * **Aggregated metrics.**  [`ServiceHandle::pool_stats`] reports
-//!   per-replica [`Metrics`], a pool rollup, and the per-class
-//!   [`AdmissionStats`]; [`ServiceHandle::stats`] keeps the old
-//!   single-service shape (the rollup).
+//!   per-replica [`Metrics`], a pool rollup, the per-class
+//!   [`AdmissionStats`] and the per-model [`ModelStats`] rollups;
+//!   [`ServiceHandle::stats`] keeps the old single-service shape.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -57,10 +66,13 @@ use std::time::{Duration, Instant};
 
 use super::admission::{
     AdmissionConfig, AdmissionStats, AutoscaleConfig, ClassCounters, Fault, FaultArmory,
-    FaultPlan, PoolConfig, Priority, ServiceEstimator, ShedPolicy, PRIORITY_COUNT,
+    FaultPlan, ModelCounters, ModelStats, PoolConfig, Priority, ServiceEstimator, ShedPolicy,
+    PRIORITY_COUNT,
 };
+use super::registry::{ModelEntry, ModelId, ModelRegistry};
 use super::service::{EngineSpec, InferenceService, Metrics};
 use crate::accel::core::CoreError;
+use crate::model_cost::resources::ResourceBudget;
 use crate::tm::model::TMModel;
 
 /// Snapshot returned by [`ServiceHandle::stats`] (the pool rollup).
@@ -76,7 +88,7 @@ pub enum ServeError {
     #[error(transparent)]
     Core(#[from] CoreError),
     /// The replica serving this request panicked.  It has been rebuilt
-    /// from the last-programmed model; retrying on the pool is safe.
+    /// from its assigned model; retrying on the pool is safe.
     #[error("replica {replica} panicked serving this request (replica respawned)")]
     WorkerPanicked { replica: usize },
     /// The pool has been shut down; no further requests are accepted.
@@ -103,6 +115,16 @@ pub enum ServeError {
     /// or drop — the pool is saturated, not broken.
     #[error("pool overloaded: request refused by admission control")]
     Overloaded,
+    /// The request's model route has no live replica pinned (or
+    /// pinnable) to it under the `Dedicated` sharding policy — every
+    /// eligible replica is dedicated to a different model.  Register
+    /// the model on a larger pool or switch to `TimeShared`.
+    #[error("model {model} has no live replica under the Dedicated sharding policy")]
+    NoReplica { model: ModelId },
+    /// The model id is not (or no longer) in the pool's registry.
+    /// Queued requests for a retiring model are failed with this.
+    #[error("model {0} is not registered")]
+    UnknownModel(ModelId),
 }
 
 /// Per-replica snapshot inside [`PoolStats`].
@@ -115,24 +137,41 @@ pub struct ReplicaStats {
     /// Times this replica was rebuilt after a caught panic.
     pub respawns: u64,
     pub alive: bool,
+    /// Model this replica is currently affine to (programs at fences,
+    /// serves Pool traffic for).  `None` until first assignment.
+    pub assigned: Option<ModelId>,
+    /// When this replica hosts a canary: the model whose candidate it
+    /// is evaluating.
+    pub canary_of: Option<ModelId>,
 }
 
-/// Aggregated pool snapshot: per-replica metrics plus the rollup and
-/// the per-class admission counters.
+/// Aggregated pool snapshot: per-replica metrics plus the rollup, the
+/// per-class admission counters and the per-model rollups.
 #[derive(Debug, Clone)]
 pub struct PoolStats {
     pub replicas: Vec<ReplicaStats>,
     /// Rollup across replicas: counters are summed; `reprograms` is the
-    /// pool model VERSION — one bump per `program` broadcast and per
-    /// canary program/dismiss (not the per-replica reprogram sum).
+    /// pool model VERSION — one bump per `program` broadcast, per
+    /// canary program/dismiss, and per registry mutation (not the
+    /// per-replica reprogram sum).
     pub total: Metrics,
-    /// Current target model version (bumped by every `program` call
-    /// and every canary program/dismiss).
+    /// Current target model version (bumped by every fence-raising
+    /// operation: program, canary lifecycle, register/retire, and
+    /// `TimeShared` replica switches onto registered models).
     pub version: u64,
-    /// Replica currently serving a canary candidate, if any.
+    /// Replica serving a canary candidate FOR THIS HANDLE'S ROUTE, if
+    /// any (the single-model view; [`PoolStats::canaries`] lists all).
     pub canary: Option<usize>,
+    /// Every active canary, `(model, replica)`, sorted by model id.
+    pub canaries: Vec<(ModelId, usize)>,
     /// Per-class admission counters plus autoscaler activity.
     pub admission: AdmissionStats,
+    /// Per-model counter rollups, sorted by model id (only routes that
+    /// carried traffic or were registered appear).
+    pub models: Vec<ModelStats>,
+    /// Replica self-reassignments between models (`TimeShared`
+    /// adoption; the reprogram-thrash numerator, pool-wide).
+    pub sharding_switches: u64,
 }
 
 /// One telemetry probe reply: predictions, per-datapoint confidence
@@ -148,20 +187,86 @@ pub struct Telemetry {
     pub model_version: u64,
 }
 
-/// Which replicas may serve a job.  While a canary is active, `Pool`
-/// jobs are served by every replica EXCEPT the canary (a candidate
-/// under evaluation is never exposed to live traffic) and `CanaryOnly`
-/// jobs exclusively by it (the mirrored evaluation stream).  With no
-/// canary active, `Pool` means any replica and `CanaryOnly` jobs are
-/// rejected at submission.
+/// How replicas relate to the models they serve.
+///
+/// Parsed from the CLI via [`std::str::FromStr`] (`"dedicated"`,
+/// `"time-shared"`).
+#[derive(Debug, Copy, Clone, PartialEq, Eq)]
+pub enum ShardingPolicy {
+    /// Replicas are pinned to a model at registration rebalance and
+    /// never reprogram for traffic.  A model whose pinned replicas are
+    /// all gone is unroutable ([`ServeError::NoReplica`]) — strict
+    /// per-tenant isolation, zero reprogram jitter.
+    Dedicated,
+    /// Affinity-aware routing: requests prefer an affine replica, and a
+    /// replica adopts (reprograms onto) a foreign model only when no
+    /// affine replica is free — rate-limited by `dwell`, the minimum
+    /// time a replica holds a model before it may switch again (the
+    /// reprogram-thrash guard).
+    TimeShared {
+        /// Minimum residency before a replica may switch models again.
+        dwell: Duration,
+    },
+}
+
+impl ShardingPolicy {
+    /// [`ShardingPolicy::TimeShared`] with the default 25 ms dwell —
+    /// long enough to amortize a reprogram, short enough to follow
+    /// shifting tenant mixes.
+    pub fn time_shared() -> Self {
+        ShardingPolicy::TimeShared { dwell: Duration::from_millis(25) }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardingPolicy::Dedicated => "dedicated",
+            ShardingPolicy::TimeShared { .. } => "time-shared",
+        }
+    }
+}
+
+impl Default for ShardingPolicy {
+    fn default() -> Self {
+        ShardingPolicy::time_shared()
+    }
+}
+
+impl std::fmt::Display for ShardingPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for ShardingPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "dedicated" => Ok(ShardingPolicy::Dedicated),
+            "time-shared" | "timeshared" | "time_shared" => Ok(ShardingPolicy::time_shared()),
+            other => Err(format!(
+                "unknown sharding policy {other:?} (expected dedicated|time-shared)"
+            )),
+        }
+    }
+}
+
+/// Which replicas may serve a job.  `Pool(m)` is live traffic for
+/// model `m`: served by replicas affine to `m` (or adopting it under
+/// `TimeShared`), never by a canary replica.  `CanaryOnly(m)` is the
+/// mirrored evaluation stream for `m`'s candidate, served exclusively
+/// by `m`'s canary replica.  `Any` is model-agnostic work (stall
+/// injection) that any non-canary replica may take.
 #[derive(Debug, Copy, Clone, PartialEq, Eq)]
 enum Target {
-    Pool,
-    CanaryOnly,
+    Pool(ModelId),
+    CanaryOnly(ModelId),
+    Any,
 }
 
 /// One queued unit of work.  The class it was admitted under is the
-/// queue it sits in, not a field.
+/// queue it sits in, not a field; the per-model counter handle rides
+/// along so pop/shed sites can mirror without a directory lookup.
 enum Job {
     Infer {
         rows: Vec<Vec<u8>>,
@@ -171,6 +276,7 @@ enum Job {
         /// without executing it, so a saturated queue sheds abandoned
         /// work instead of computing answers nobody is waiting for.
         deadline: Option<Instant>,
+        mstats: Option<Arc<ModelCounters>>,
         reply: mpsc::Sender<Result<Vec<usize>, ServeError>>,
     },
     /// Fault injection: occupy the owning worker for `dur` (tests and
@@ -189,13 +295,15 @@ enum Job {
         target: Target,
         /// Same shed-unexecuted expiry semantics as `Infer::deadline`.
         deadline: Option<Instant>,
+        mstats: Option<Arc<ModelCounters>>,
         reply: mpsc::Sender<Result<Telemetry, ServeError>>,
     },
     /// Fault injection: panic inside the owning worker.  Exercises the
-    /// real supervision path (tests, chaos drills) — targetable, so the
+    /// real supervision path (tests, chaos drills) — targetable, so a
     /// canary replica's respawn-with-candidate path is reachable too.
     Crash {
         target: Target,
+        mstats: Option<Arc<ModelCounters>>,
         reply: mpsc::Sender<Result<Vec<usize>, ServeError>>,
     },
 }
@@ -206,8 +314,8 @@ impl Job {
             Job::Infer { target, .. }
             | Job::Telemetry { target, .. }
             | Job::Crash { target, .. } => *target,
-            // Stalls are a pool-wide chaos tool, never canary-targeted.
-            Job::Stall { .. } => Target::Pool,
+            // Stalls are a pool-wide chaos tool, never model-routed.
+            Job::Stall { .. } => Target::Any,
         }
     }
 
@@ -215,6 +323,26 @@ impl Job {
         match self {
             Job::Infer { deadline, .. } | Job::Telemetry { deadline, .. } => *deadline,
             Job::Stall { .. } | Job::Crash { .. } => None,
+        }
+    }
+
+    /// Per-model counter handle attached at submit (None for untargeted
+    /// work).
+    fn mstats(&self) -> Option<&Arc<ModelCounters>> {
+        match self {
+            Job::Infer { mstats, .. }
+            | Job::Telemetry { mstats, .. }
+            | Job::Crash { mstats, .. } => mstats.as_ref(),
+            Job::Stall { .. } => None,
+        }
+    }
+
+    fn attach(&mut self, counters: Option<Arc<ModelCounters>>) {
+        match self {
+            Job::Infer { mstats, .. }
+            | Job::Telemetry { mstats, .. }
+            | Job::Crash { mstats, .. } => *mstats = counters,
+            Job::Stall { .. } => {}
         }
     }
 
@@ -238,9 +366,6 @@ impl Job {
     }
 }
 
-/// Sentinel for "no canary active" in the lock-free replica mirror.
-const NO_CANARY: usize = usize::MAX;
-
 /// One replica's work-queue shard: a bounded-by-admission FIFO per
 /// priority class.  Workers pop their own shard first, then steal.
 #[derive(Default)]
@@ -258,30 +383,51 @@ struct Shard {
     q: Mutex<ShardQueue>,
 }
 
-/// An active canary: one replica serving a candidate model while the
-/// rest of the pool stays on [`ModelCell::model`].
+/// An active canary: one replica serving a candidate for `model_id`
+/// while the rest of the pool stays on the registered models.  At most
+/// one canary per model; canaries of different models occupy distinct
+/// replicas (multi-canary: racing K candidates on K replicas).
 struct CanaryCell {
+    model_id: ModelId,
     replica: usize,
-    model: Arc<TMModel>,
+    candidate: Arc<TMModel>,
 }
 
-/// The versioned model cell — the fence state.
+/// The versioned model cell — the fence state plus the registry and
+/// the per-replica affinity table.
 struct ModelCell {
-    /// Target version; bumped by every `program` broadcast AND every
-    /// canary program/dismiss (versions stay strictly monotone across
-    /// canary lifecycles).
+    /// Target version; bumped by every fence-raising mutation —
+    /// program broadcasts, canary lifecycle, register/retire
+    /// rebalances, and `TimeShared` adoption switches — so versions
+    /// stay strictly monotone across all of them.
     version: u64,
-    /// Last-programmed pool model (what non-canary replicas swap to /
-    /// respawn from).
-    model: Option<Arc<TMModel>>,
-    /// Active canary, if any.  The canary replica programs
-    /// `canary.model` instead of `model` at the fence.
-    canary: Option<CanaryCell>,
+    /// Registered models (the authoritative model table).  The
+    /// single-model wrappers install under [`ModelId::DEFAULT`].
+    registry: ModelRegistry,
+    /// Per-replica model affinity: which registered model each replica
+    /// programs at a fence and serves Pool traffic for.
+    assign: Vec<Option<ModelId>>,
+    /// Active canaries (at most one per model, distinct replicas).
+    canaries: Vec<CanaryCell>,
     /// Per-replica acknowledged version (monotone).
     acks: Vec<u64>,
     /// Per-replica swap failure, tagged with the version it failed at.
     errors: Vec<Option<(u64, CoreError)>>,
     alive: Vec<bool>,
+}
+
+impl ModelCell {
+    fn canary_for(&self, m: ModelId) -> Option<&CanaryCell> {
+        self.canaries.iter().find(|c| c.model_id == m)
+    }
+
+    fn canary_on(&self, replica: usize) -> Option<&CanaryCell> {
+        self.canaries.iter().find(|c| c.replica == replica)
+    }
+
+    fn is_canary(&self, replica: usize) -> bool {
+        self.canary_on(replica).is_some()
+    }
 }
 
 #[derive(Clone, Default)]
@@ -322,6 +468,11 @@ struct Shared {
     /// Lock-free liveness mirror of `cell.alive` (routing and
     /// feasibility read it without the cell lock).
     alive_mirror: Vec<AtomicBool>,
+    /// Lock-free mirror of `cell.assign`: `0` = unassigned, else
+    /// `model_id + 1`.  Routing and the Dedicated reachability check
+    /// read it without the cell lock; the authoritative table stays in
+    /// the cell.
+    assign_mirror: Vec<AtomicU64>,
     /// Scale-down requests from the supervisor; the flagged worker
     /// exits at its next pop instead of taking work.
     retire: Vec<AtomicBool>,
@@ -342,18 +493,39 @@ struct Shared {
     /// workers' pop loop polls it; never lock cell inside a shard
     /// lock).
     version: AtomicU64,
-    /// Mirror of the canary replica index ([`NO_CANARY`] when none),
-    /// readable without the cell lock — routing and the submit-time
-    /// canary check poll it alongside `version`.
-    canary_replica: AtomicUsize,
+    /// Lock-free mirror of `cell.canaries` by replica: `0` = this
+    /// replica hosts no canary, else `model_id + 1` of the model whose
+    /// candidate it serves.  Routing and the submit-time canary check
+    /// poll it alongside `version`.
+    canary_mirror: Vec<AtomicU64>,
+    /// Number of active canaries (fast-path gate: zero means every
+    /// canary_mirror slot is zero).
+    canary_count: AtomicUsize,
+    /// Set once a second model route appears; single-model pools keep
+    /// the notify_one submit hot path.
+    multi_model: AtomicBool,
+    /// Replica self-reassignments between models (`TimeShared`
+    /// adoption) — the pool-wide thrash counter.
+    switches: AtomicU64,
+    /// Per-model counter directory, keyed by `ModelId.0`, created on
+    /// first touch (register, program, or first routed request).
+    model_dir: Mutex<HashMap<u64, Arc<ModelCounters>>>,
+    sharding: ShardingPolicy,
     metrics: Mutex<Vec<ReplicaMetrics>>,
     spec: EngineSpec,
 }
 
-/// Cloneable client handle to a running replica pool.
+/// Cloneable client handle to a running replica pool, scoped to one
+/// model route.  [`spawn_pool`] hands back a handle routing at
+/// [`ModelId::DEFAULT`]; [`ServiceHandle::with_model`] derives a
+/// handle for another registered model — every RPC (infer, telemetry,
+/// program, canary lifecycle) on the derived handle targets that
+/// model, which is what makes autotuners and canary controllers
+/// per-model instances without any internal changes.
 #[derive(Clone)]
 pub struct ServiceHandle {
     shared: Arc<Shared>,
+    route: ModelId,
 }
 
 /// Joiner for the pool's worker threads (and the autoscaling
@@ -413,11 +585,22 @@ pub fn spawn_pool(spec: EngineSpec, replicas: usize) -> (ServiceHandle, PoolJoin
     spawn_pool_cfg(spec, PoolConfig::fixed(replicas))
 }
 
-/// Spawn a pool under a full [`PoolConfig`]: initial replica count,
-/// per-class admission policy, and (optionally) the autoscaling
+/// Spawn a pool under a full [`PoolConfig`] with the default
+/// [`ShardingPolicy`] (`TimeShared`, 25 ms dwell).
+pub fn spawn_pool_cfg(spec: EngineSpec, cfg: PoolConfig) -> (ServiceHandle, PoolJoin) {
+    spawn_pool_sharded(spec, cfg, ShardingPolicy::default())
+}
+
+/// Spawn a pool under a full [`PoolConfig`] and an explicit
+/// [`ShardingPolicy`]: initial replica count, per-class admission
+/// policy, model-to-replica sharding, and (optionally) the autoscaling
 /// supervisor.  Panics on an invalid config (zero caps, `min > max`) —
 /// configs come from validated CLI flags or test literals.
-pub fn spawn_pool_cfg(spec: EngineSpec, cfg: PoolConfig) -> (ServiceHandle, PoolJoin) {
+pub fn spawn_pool_sharded(
+    spec: EngineSpec,
+    cfg: PoolConfig,
+    sharding: ShardingPolicy,
+) -> (ServiceHandle, PoolJoin) {
     if let Err(e) = cfg.validate() {
         panic!("invalid pool config: {e}");
     }
@@ -441,6 +624,7 @@ pub fn spawn_pool_cfg(spec: EngineSpec, cfg: PoolConfig) -> (ServiceHandle, Pool
         counters: Default::default(),
         estimator: ServiceEstimator::default(),
         alive_mirror: (0..slots).map(|i| AtomicBool::new(i < initial)).collect(),
+        assign_mirror: (0..slots).map(|_| AtomicU64::new(0)).collect(),
         retire: (0..slots).map(|_| AtomicBool::new(false)).collect(),
         exited: (0..slots).map(|i| AtomicBool::new(i >= initial)).collect(),
         scale_ups: AtomicU64::new(0),
@@ -449,15 +633,21 @@ pub fn spawn_pool_cfg(spec: EngineSpec, cfg: PoolConfig) -> (ServiceHandle, Pool
         faults: FaultArmory::default(),
         cell: Mutex::new(ModelCell {
             version: 0,
-            model: None,
-            canary: None,
+            registry: ModelRegistry::new(),
+            assign: vec![None; slots],
+            canaries: Vec::new(),
             acks: vec![0; slots],
             errors: (0..slots).map(|_| None).collect(),
             alive: (0..slots).map(|i| i < initial).collect(),
         }),
         fence_cv: Condvar::new(),
         version: AtomicU64::new(0),
-        canary_replica: AtomicUsize::new(NO_CANARY),
+        canary_mirror: (0..slots).map(|_| AtomicU64::new(0)).collect(),
+        canary_count: AtomicUsize::new(0),
+        multi_model: AtomicBool::new(false),
+        switches: AtomicU64::new(0),
+        model_dir: Mutex::new(HashMap::new()),
+        sharding,
         metrics: Mutex::new(vec![ReplicaMetrics::default(); slots]),
         spec,
     });
@@ -470,7 +660,7 @@ pub fn spawn_pool_cfg(spec: EngineSpec, cfg: PoolConfig) -> (ServiceHandle, Pool
             .expect("spawn pool supervisor")
     });
     let join = PoolJoin { workers, supervisor, shared: Arc::clone(&shared) };
-    (ServiceHandle { shared }, join)
+    (ServiceHandle { shared, route: ModelId::DEFAULT }, join)
 }
 
 fn spawn_worker(shared: &Arc<Shared>, idx: usize) -> JoinHandle<()> {
@@ -482,6 +672,165 @@ fn spawn_worker(shared: &Arc<Shared>, idx: usize) -> JoinHandle<()> {
 }
 
 impl ServiceHandle {
+    /// Derive a handle routing at `id`: every RPC on the returned
+    /// handle — inference, telemetry, program, the whole canary
+    /// lifecycle — targets that model.  Ids come from
+    /// [`Self::register_model`]; routing at an unregistered id yields
+    /// [`CoreError::NotProgrammed`] answers (nothing to serve), and
+    /// under `Dedicated` sharding [`ServeError::NoReplica`] once every
+    /// replica is pinned elsewhere.
+    pub fn with_model(&self, id: ModelId) -> ServiceHandle {
+        ServiceHandle { shared: Arc::clone(&self.shared), route: id }
+    }
+
+    /// The model this handle routes at ([`ModelId::DEFAULT`] for
+    /// handles straight from [`spawn_pool`]).
+    pub fn model_route(&self) -> ModelId {
+        self.route
+    }
+
+    /// The pool's sharding policy.
+    pub fn sharding(&self) -> ShardingPolicy {
+        self.shared.sharding
+    }
+
+    /// Register a model under a deployment `name`: content-hash
+    /// deduplicated (re-registering an identical model returns the
+    /// existing id without touching replicas), otherwise the replica
+    /// affinity table is rebalanced across all registered models
+    /// behind one version fence.
+    pub fn register_model(&self, name: &str, model: TMModel) -> Result<ModelId, ServeError> {
+        self.register_model_arc(name, Arc::new(model))
+    }
+
+    /// [`Self::register_model`] for an already-shared model.
+    pub fn register_model_arc(
+        &self,
+        name: &str,
+        model: Arc<TMModel>,
+    ) -> Result<ModelId, ServeError> {
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return Err(ServeError::ShutDown);
+        }
+        let (target, id) = {
+            let mut cell = self.shared.cell.lock().unwrap();
+            let outcome = cell.registry.register(name, model);
+            if outcome.deduped {
+                return Ok(outcome.id);
+            }
+            rebalance_locked(&self.shared, &mut cell);
+            cell.version += 1;
+            self.shared.version.store(cell.version, Ordering::Release);
+            (cell.version, outcome.id)
+        };
+        resolve_model_counters(&self.shared, id);
+        self.fence_wait(target)?;
+        Ok(id)
+    }
+
+    /// Retire a model: remove it from the registry, dismiss its canary
+    /// if one is active, rebalance the freed replicas across the
+    /// remaining models, and fail its still-queued requests with
+    /// [`ServeError::UnknownModel`] — all behind one version fence.
+    /// Requests submitted after retirement find no model to program
+    /// and answer [`CoreError::NotProgrammed`] (`TimeShared`) or
+    /// [`ServeError::NoReplica`] (`Dedicated`).  Ids are never reused.
+    pub fn retire_model(&self, id: ModelId) -> Result<(), ServeError> {
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return Err(ServeError::ShutDown);
+        }
+        let (target, had_canary) = {
+            let mut cell = self.shared.cell.lock().unwrap();
+            if !cell.registry.retire(id) {
+                return Err(ServeError::UnknownModel(id));
+            }
+            let had_canary = match cell.canaries.iter().position(|c| c.model_id == id) {
+                Some(pos) => {
+                    cell.canaries.remove(pos);
+                    true
+                }
+                None => false,
+            };
+            if had_canary {
+                publish_canaries(&self.shared, &cell);
+            }
+            rebalance_locked(&self.shared, &mut cell);
+            cell.version += 1;
+            self.shared.version.store(cell.version, Ordering::Release);
+            (cell.version, had_canary)
+        };
+        if had_canary {
+            drain_canary_jobs_for(&self.shared, id, "canary dismissed: its model was retired");
+        }
+        // Queued live traffic for the retired model has no replica left
+        // to adopt it once the rebalance lands — fail it typed.
+        drain_jobs(
+            &self.shared,
+            |t| t == Target::Pool(id) || t == Target::CanaryOnly(id),
+            || ServeError::UnknownModel(id),
+        );
+        self.fence_wait(target)
+    }
+
+    /// Every registered model's entry (id, name, content hash, budget).
+    pub fn registered_models(&self) -> Vec<ModelEntry> {
+        self.shared.cell.lock().unwrap().registry.entries().cloned().collect()
+    }
+
+    /// Attach (or clear) a per-model resource budget — the frontier a
+    /// scoped autotuner must respect.  Pure metadata: no fence.
+    pub fn set_model_budget(
+        &self,
+        id: ModelId,
+        budget: Option<ResourceBudget>,
+    ) -> Result<(), ServeError> {
+        if self.shared.cell.lock().unwrap().registry.set_budget(id, budget) {
+            Ok(())
+        } else {
+            Err(ServeError::UnknownModel(id))
+        }
+    }
+
+    pub fn model_budget(&self, id: ModelId) -> Option<ResourceBudget> {
+        self.shared.cell.lock().unwrap().registry.get(id).and_then(|e| e.budget.clone())
+    }
+
+    /// Per-model counter rollups, sorted by model id.  Routes appear
+    /// once registered or once they carry traffic; unregistered routes
+    /// are named `m<id>`.
+    pub fn model_stats(&self) -> Vec<ModelStats> {
+        let names: HashMap<u64, String> = {
+            let cell = self.shared.cell.lock().unwrap();
+            cell.registry.entries().map(|e| (e.id.0, e.name.clone())).collect()
+        };
+        let dir = self.shared.model_dir.lock().unwrap();
+        let mut out: Vec<ModelStats> = dir
+            .iter()
+            .map(|(&id, counters)| ModelStats {
+                id: ModelId(id),
+                name: names
+                    .get(&id)
+                    .cloned()
+                    .unwrap_or_else(|| ModelId(id).to_string()),
+                classes: counters.snapshot(),
+                switches: counters.switches.load(Ordering::Acquire),
+            })
+            .collect();
+        drop(dir);
+        out.sort_by_key(|m| m.id);
+        out
+    }
+
+    /// Every active canary as `(model, replica)`, sorted by model id.
+    pub fn canary_replicas(&self) -> Vec<(ModelId, usize)> {
+        let cell = self.shared.cell.lock().unwrap();
+        let mut out: Vec<(ModelId, usize)> =
+            cell.canaries.iter().map(|c| (c.model_id, c.replica)).collect();
+        drop(cell);
+        out.sort();
+        out
+    }
+
     /// Blocking inference RPC at [`Priority::Normal`].  Any number of
     /// rows; the replica splits them into 32-lane batches through the
     /// bulk scheduler.  Never served by an active canary replica.
@@ -495,7 +844,7 @@ impl ServiceHandle {
         rows: Vec<Vec<u8>>,
         class: Priority,
     ) -> Result<Vec<usize>, ServeError> {
-        self.infer_job(rows, Target::Pool, class, None)
+        self.infer_job(rows, Target::Pool(self.route), class, None)
     }
 
     /// Inference RPC with a per-request deadline: blocks at most
@@ -522,15 +871,16 @@ impl ServiceHandle {
         timeout: Duration,
         class: Priority,
     ) -> Result<Vec<usize>, ServeError> {
-        self.infer_job(rows, Target::Pool, class, Some(timeout))
+        self.infer_job(rows, Target::Pool(self.route), class, Some(timeout))
     }
 
-    /// Blocking inference RPC served EXCLUSIVELY by the canary replica
-    /// (the mirrored evaluation stream), at [`Priority::Critical`] —
-    /// the verdict pipeline must survive overload.  Errors with
-    /// [`ServeError::Canary`] when no canary is active.
+    /// Blocking inference RPC served EXCLUSIVELY by this route's canary
+    /// replica (the mirrored evaluation stream), at
+    /// [`Priority::Critical`] — the verdict pipeline must survive
+    /// overload.  Errors with [`ServeError::Canary`] when no canary is
+    /// active for this route.
     pub fn infer_canary(&self, rows: Vec<Vec<u8>>) -> Result<Vec<usize>, ServeError> {
-        self.infer_job(rows, Target::CanaryOnly, Priority::Critical, None)
+        self.infer_job(rows, Target::CanaryOnly(self.route), Priority::Critical, None)
     }
 
     /// [`Self::infer_canary`] with a deadline, riding the same
@@ -540,7 +890,7 @@ impl ServiceHandle {
         rows: Vec<Vec<u8>>,
         timeout: Duration,
     ) -> Result<Vec<usize>, ServeError> {
-        self.infer_job(rows, Target::CanaryOnly, Priority::Critical, Some(timeout))
+        self.infer_job(rows, Target::CanaryOnly(self.route), Priority::Critical, Some(timeout))
     }
 
     /// Blocking telemetry RPC: inference plus confidence margins and
@@ -548,7 +898,7 @@ impl ServiceHandle {
     /// monitor's probe path — it queues behind (and alongside) regular
     /// traffic on purpose, and is never served by an active canary.
     pub fn infer_telemetry(&self, rows: Vec<Vec<u8>>) -> Result<Telemetry, ServeError> {
-        self.telemetry_job(rows, Target::Pool, Priority::Normal, None)
+        self.telemetry_job(rows, Target::Pool(self.route), Priority::Normal, None)
     }
 
     /// [`Self::infer_telemetry`] at an explicit priority class (the
@@ -559,7 +909,7 @@ impl ServiceHandle {
         rows: Vec<Vec<u8>>,
         class: Priority,
     ) -> Result<Telemetry, ServeError> {
-        self.telemetry_job(rows, Target::Pool, class, None)
+        self.telemetry_job(rows, Target::Pool(self.route), class, None)
     }
 
     /// [`Self::infer_telemetry`] with a deadline, riding the same
@@ -569,14 +919,14 @@ impl ServiceHandle {
         rows: Vec<Vec<u8>>,
         timeout: Duration,
     ) -> Result<Telemetry, ServeError> {
-        self.telemetry_job(rows, Target::Pool, Priority::Normal, Some(timeout))
+        self.telemetry_job(rows, Target::Pool(self.route), Priority::Normal, Some(timeout))
     }
 
-    /// Telemetry served exclusively by the canary replica — the
-    /// candidate half of a paired canary window, at
+    /// Telemetry served exclusively by this route's canary replica —
+    /// the candidate half of a paired canary window, at
     /// [`Priority::Critical`].
     pub fn infer_telemetry_canary(&self, rows: Vec<Vec<u8>>) -> Result<Telemetry, ServeError> {
-        self.telemetry_job(rows, Target::CanaryOnly, Priority::Critical, None)
+        self.telemetry_job(rows, Target::CanaryOnly(self.route), Priority::Critical, None)
     }
 
     /// [`Self::infer_telemetry_canary`] with a deadline.
@@ -585,7 +935,7 @@ impl ServiceHandle {
         rows: Vec<Vec<u8>>,
         timeout: Duration,
     ) -> Result<Telemetry, ServeError> {
-        self.telemetry_job(rows, Target::CanaryOnly, Priority::Critical, Some(timeout))
+        self.telemetry_job(rows, Target::CanaryOnly(self.route), Priority::Critical, Some(timeout))
     }
 
     fn infer_job(
@@ -597,7 +947,7 @@ impl ServiceHandle {
     ) -> Result<Vec<usize>, ServeError> {
         let deadline = timeout.map(|t| Instant::now() + t);
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::Infer { rows, target, deadline, reply }, class)?;
+        self.submit(Job::Infer { rows, target, deadline, mstats: None, reply }, class)?;
         recv_reply(&rx, timeout)
     }
 
@@ -610,17 +960,18 @@ impl ServiceHandle {
     ) -> Result<Telemetry, ServeError> {
         let deadline = timeout.map(|t| Instant::now() + t);
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::Telemetry { rows, target, deadline, reply }, class)?;
+        self.submit(Job::Telemetry { rows, target, deadline, mstats: None, reply }, class)?;
         recv_reply(&rx, timeout)
     }
 
-    /// Blocking reprogram RPC (the runtime-tuning path), broadcast to
-    /// every replica behind the version fence: returns once all live
-    /// replicas serve the new model.  A failed swap (e.g. model too big
-    /// for the configured memories) leaves the failing replicas
-    /// *unprogrammed* — never on a stale model — so the pool still
-    /// cannot serve mixed versions.  An active canary is dismissed by
-    /// the broadcast (the whole pool converges on `model`).
+    /// Blocking reprogram RPC (the runtime-tuning path) for THIS
+    /// HANDLE'S ROUTE, behind the version fence: installs `model` as
+    /// the route's registered content and returns once every affine
+    /// replica serves it.  A failed swap (e.g. model too big for the
+    /// configured memories) leaves the failing replicas *unprogrammed*
+    /// — never on a stale model — so the pool still cannot serve mixed
+    /// versions.  An active canary FOR THIS ROUTE is dismissed by the
+    /// broadcast; other models' replicas and canaries are untouched.
     pub fn program(&self, model: TMModel) -> Result<(), ServeError> {
         self.program_arc(Arc::new(model))
     }
@@ -629,59 +980,112 @@ impl ServiceHandle {
         if self.shared.shutdown.load(Ordering::Acquire) {
             return Err(ServeError::ShutDown);
         }
+        let route = self.route;
+        let hint = model.shape.name.clone();
         let (target, had_canary) = {
             let mut cell = self.shared.cell.lock().unwrap();
-            cell.version += 1;
-            cell.model = Some(model);
-            let had_canary = cell.canary.take().is_some();
-            if had_canary {
-                self.shared.canary_replica.store(NO_CANARY, Ordering::Release);
+            let is_new = cell.registry.install(route, &hint, model);
+            if is_new {
+                // First install of this id: fold it into the affinity
+                // partition.  (With a single registered model this
+                // assigns every replica — the old broadcast semantics.)
+                rebalance_locked(&self.shared, &mut cell);
             }
+            let had_canary = match cell.canaries.iter().position(|c| c.model_id == route) {
+                Some(pos) => {
+                    cell.canaries.remove(pos);
+                    true
+                }
+                None => false,
+            };
+            if had_canary {
+                publish_canaries(&self.shared, &cell);
+            }
+            cell.version += 1;
             // Publish under the cell lock so the mirror stays ordered.
             self.shared.version.store(cell.version, Ordering::Release);
             (cell.version, had_canary)
         };
+        resolve_model_counters(&self.shared, route);
         // Only a broadcast that actually dismissed a canary can have
         // stranded CanaryOnly jobs; the common path skips the shard
         // sweep entirely.
         if had_canary {
-            drain_canary_jobs(&self.shared, "canary dismissed by a pool broadcast");
+            drain_canary_jobs_for(&self.shared, route, "canary dismissed by a pool broadcast");
         }
         self.fence_wait(target)
     }
 
-    /// Program `model` onto EXACTLY ONE replica — the canary — behind
-    /// the version fence; the rest of the pool keeps serving the
-    /// current model, and live traffic is routed away from the canary
-    /// until it is promoted ([`Self::promote_canary`]) or dismissed
-    /// ([`Self::dismiss_canary`]).  Returns the canary replica index.
+    /// Program `model` onto EXACTLY ONE replica — this route's canary —
+    /// behind the version fence; the rest of the pool keeps serving the
+    /// registered models, and live traffic is routed away from the
+    /// canary until it is promoted ([`Self::promote_canary`]) or
+    /// dismissed ([`Self::dismiss_canary`]).  Returns the canary
+    /// replica index.  Each model may run its own canary concurrently
+    /// on a distinct replica (multi-canary).
     ///
     /// Re-programming an active canary replaces its candidate in
-    /// place.  Requires a programmed pool (the baseline to compare
-    /// against) and at least two live replicas (a 1-replica "canary"
-    /// would be a whole-pool swap).  On error the canary replica is
-    /// left unprogrammed — call [`Self::dismiss_canary`] to restore it
-    /// to the pool model.
+    /// place.  Requires this route to have a registered baseline (the
+    /// model to compare against) and at least two live replicas (a
+    /// 1-replica "canary" would be a whole-pool swap); under
+    /// `Dedicated` sharding the canary replica is taken from the
+    /// route's own pinned replicas, never another tenant's.  On error
+    /// the canary replica is left unprogrammed — call
+    /// [`Self::dismiss_canary`] to restore it to its pool model.
     pub fn program_canary(&self, model: TMModel) -> Result<usize, ServeError> {
         if self.shared.shutdown.load(Ordering::Acquire) {
             return Err(ServeError::ShutDown);
         }
+        let route = self.route;
+        let dedicated = self.shared.sharding == ShardingPolicy::Dedicated;
         let (target, replica) = {
             let mut cell = self.shared.cell.lock().unwrap();
-            if cell.model.is_none() {
+            if cell.registry.model(route).is_none() {
                 return Err(ServeError::Canary("pool has no baseline model"));
             }
             if cell.alive.iter().filter(|&&a| a).count() < 2 {
                 return Err(ServeError::Canary("need at least 2 live replicas"));
             }
             // Keep an already-chosen canary replica; otherwise dedicate
-            // the highest-index live replica.
-            let replica = match &cell.canary {
+            // the highest-index live non-canary replica (under
+            // Dedicated: one of this route's own).
+            let replica = match cell.canary_for(route) {
                 Some(c) => c.replica,
-                None => cell.alive.iter().rposition(|&a| a).expect("checked above"),
+                None => {
+                    let pick = (0..cell.alive.len()).rev().find(|&i| {
+                        cell.alive[i]
+                            && !cell.is_canary(i)
+                            && (!dedicated || cell.assign[i] == Some(route))
+                    });
+                    match pick {
+                        Some(i) => i,
+                        None => {
+                            return Err(ServeError::Canary(
+                                "no replica available to host this model's canary",
+                            ))
+                        }
+                    }
+                }
             };
-            cell.canary = Some(CanaryCell { replica, model: Arc::new(model) });
-            self.shared.canary_replica.store(replica, Ordering::Release);
+            // Dedicating `replica` must leave the route at least one
+            // live non-canary server for the baseline half.
+            let rest_ok = (0..cell.alive.len()).any(|i| {
+                i != replica
+                    && cell.alive[i]
+                    && !cell.is_canary(i)
+                    && (!dedicated
+                        || cell.assign[i] == Some(route)
+                        || cell.assign[i].is_none())
+            });
+            if !rest_ok {
+                return Err(ServeError::Canary("need at least 2 live replicas"));
+            }
+            let candidate = Arc::new(model);
+            match cell.canaries.iter_mut().find(|c| c.model_id == route) {
+                Some(c) => c.candidate = candidate,
+                None => cell.canaries.push(CanaryCell { model_id: route, replica, candidate }),
+            }
+            publish_canaries(&self.shared, &cell);
             cell.version += 1;
             self.shared.version.store(cell.version, Ordering::Release);
             (cell.version, replica)
@@ -690,51 +1094,65 @@ impl ServiceHandle {
         Ok(replica)
     }
 
-    /// Broadcast the active canary's candidate to the whole pool (the
-    /// promote half of a canary verdict).  One fence: every replica —
-    /// canary included — converges on the candidate.
+    /// Broadcast this route's canary candidate to the route's replicas
+    /// (the promote half of a canary verdict).  One fence: the
+    /// candidate becomes the route's registered content, the canary
+    /// replica rejoins the route's pool, and other models never notice.
     pub fn promote_canary(&self) -> Result<(), ServeError> {
-        let model = {
-            let cell = self.shared.cell.lock().unwrap();
-            match &cell.canary {
-                Some(c) => Arc::clone(&c.model),
-                None => return Err(ServeError::Canary("no canary active")),
-            }
-        };
-        self.program_arc(model)
-    }
-
-    /// Tear the canary down: the canary replica is re-programmed with
-    /// the pool model behind the fence (the reject half of a verdict,
-    /// and the cleanup after a failed [`Self::program_canary`]).
-    /// Returns `false` (without touching anything) when no canary is
-    /// active — dismissal is idempotent.
-    pub fn dismiss_canary(&self) -> Result<bool, ServeError> {
         if self.shared.shutdown.load(Ordering::Acquire) {
             return Err(ServeError::ShutDown);
         }
+        let route = self.route;
         let target = {
             let mut cell = self.shared.cell.lock().unwrap();
-            if cell.canary.is_none() {
-                return Ok(false);
-            }
-            cell.canary = None;
-            self.shared.canary_replica.store(NO_CANARY, Ordering::Release);
+            let Some(pos) = cell.canaries.iter().position(|c| c.model_id == route) else {
+                return Err(ServeError::Canary("no canary active"));
+            };
+            let c = cell.canaries.remove(pos);
+            publish_canaries(&self.shared, &cell);
+            let hint = c.candidate.shape.name.clone();
+            cell.registry.install(route, &hint, c.candidate);
+            cell.assign[c.replica] = Some(route);
+            self.shared.assign_mirror[c.replica].store(route.0 + 1, Ordering::Release);
             cell.version += 1;
             self.shared.version.store(cell.version, Ordering::Release);
             cell.version
         };
-        drain_canary_jobs(&self.shared, "canary dismissed");
+        drain_canary_jobs_for(&self.shared, route, "canary promoted to the pool model");
+        self.fence_wait(target)
+    }
+
+    /// Tear this route's canary down: the canary replica is
+    /// re-programmed with the route's pool model behind the fence (the
+    /// reject half of a verdict, and the cleanup after a failed
+    /// [`Self::program_canary`]).  Returns `false` (without touching
+    /// anything) when no canary is active for this route — dismissal
+    /// is idempotent.
+    pub fn dismiss_canary(&self) -> Result<bool, ServeError> {
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return Err(ServeError::ShutDown);
+        }
+        let route = self.route;
+        let target = {
+            let mut cell = self.shared.cell.lock().unwrap();
+            let Some(pos) = cell.canaries.iter().position(|c| c.model_id == route) else {
+                return Ok(false);
+            };
+            cell.canaries.remove(pos);
+            publish_canaries(&self.shared, &cell);
+            cell.version += 1;
+            self.shared.version.store(cell.version, Ordering::Release);
+            cell.version
+        };
+        drain_canary_jobs_for(&self.shared, route, "canary dismissed");
         self.fence_wait(target)?;
         Ok(true)
     }
 
-    /// Replica currently serving a canary candidate, if any.
+    /// Replica currently serving a canary candidate FOR THIS ROUTE, if
+    /// any.
     pub fn canary_replica(&self) -> Option<usize> {
-        match self.shared.canary_replica.load(Ordering::Acquire) {
-            NO_CANARY => None,
-            idx => Some(idx),
-        }
+        canary_replica_of(&self.shared, self.route)
     }
 
     /// Wake workers, wait until every live replica acked `target`, and
@@ -772,8 +1190,7 @@ impl ServiceHandle {
     }
 
     /// Pool rollup in the old single-service shape (counters summed,
-    /// `reprograms` = the pool model version: broadcasts plus canary
-    /// lifecycle fences — see [`PoolStats::total`]).
+    /// `reprograms` = the pool model version — see [`PoolStats::total`]).
     pub fn stats(&self) -> Result<ServerStats, ServeError> {
         Ok(self.pool_stats().total)
     }
@@ -791,16 +1208,14 @@ impl ServiceHandle {
         stats
     }
 
-    /// Full per-replica + rollup + admission snapshot.
+    /// Full per-replica + rollup + admission + per-model snapshot.
     pub fn pool_stats(&self) -> PoolStats {
-        let (version, acks, alive, canary) = {
+        let (version, acks, alive, assign, canaries) = {
             let cell = self.shared.cell.lock().unwrap();
-            (
-                cell.version,
-                cell.acks.clone(),
-                cell.alive.clone(),
-                cell.canary.as_ref().map(|c| c.replica),
-            )
+            let mut canaries: Vec<(ModelId, usize)> =
+                cell.canaries.iter().map(|c| (c.model_id, c.replica)).collect();
+            canaries.sort();
+            (cell.version, cell.acks.clone(), cell.alive.clone(), cell.assign.clone(), canaries)
         };
         let per = self.shared.metrics.lock().unwrap();
         let replicas: Vec<ReplicaStats> = per
@@ -811,6 +1226,8 @@ impl ServiceHandle {
                 model_version: acks[i],
                 respawns: r.respawns,
                 alive: alive[i],
+                assigned: assign[i],
+                canary_of: canaries.iter().find(|(_, rep)| *rep == i).map(|(m, _)| *m),
             })
             .collect();
         drop(per);
@@ -823,7 +1240,17 @@ impl ServiceHandle {
             total.errors += r.metrics.errors;
         }
         total.reprograms = version;
-        PoolStats { replicas, total, version, canary, admission: self.admission_stats() }
+        let canary = canaries.iter().find(|(m, _)| *m == self.route).map(|(_, rep)| *rep);
+        PoolStats {
+            replicas,
+            total,
+            version,
+            canary,
+            canaries,
+            admission: self.admission_stats(),
+            models: self.model_stats(),
+            sharding_switches: self.shared.switches.load(Ordering::Acquire),
+        }
     }
 
     /// Ask the pool to stop.  Queued requests are drained first; new
@@ -850,17 +1277,23 @@ impl ServiceHandle {
     #[doc(hidden)]
     pub fn inject_panic(&self) -> Result<Vec<usize>, ServeError> {
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::Crash { target: Target::Pool, reply }, Priority::Normal)?;
+        self.submit(
+            Job::Crash { target: Target::Pool(self.route), mstats: None, reply },
+            Priority::Normal,
+        )?;
         rx.recv().map_err(|_| ServeError::WorkerGone)?
     }
 
-    /// Fault injection on the CANARY replica: exercises the
+    /// Fault injection on this route's CANARY replica: exercises the
     /// respawn-while-canary supervision path (the rebuilt replica must
     /// come back serving the CANDIDATE, not the pool model).
     #[doc(hidden)]
     pub fn inject_panic_canary(&self) -> Result<Vec<usize>, ServeError> {
         let (reply, rx) = mpsc::channel();
-        self.submit(Job::Crash { target: Target::CanaryOnly, reply }, Priority::Critical)?;
+        self.submit(
+            Job::Crash { target: Target::CanaryOnly(self.route), mstats: None, reply },
+            Priority::Critical,
+        )?;
         rx.recv().map_err(|_| ServeError::WorkerGone)?
     }
 
@@ -880,34 +1313,70 @@ impl ServiceHandle {
         Ok(rx)
     }
 
-    /// The admission front-end: shutdown and canary validity, deadline
-    /// feasibility, the per-class bound with its backpressure policy,
-    /// then routing to a shard.
-    fn submit(&self, job: Job, class: Priority) -> Result<(), ServeError> {
+    /// The admission front-end: shutdown / canary / routability
+    /// validity, deadline feasibility, the per-class bound with its
+    /// backpressure policy, then routing to a shard.  Every counter
+    /// site mirrors into the job's per-model [`ModelCounters`].
+    fn submit(&self, mut job: Job, class: Priority) -> Result<(), ServeError> {
         let shared = &*self.shared;
         let ci = class.index();
         if shared.shutdown.load(Ordering::Acquire) {
             return Err(ServeError::ShutDown);
         }
         let target = job.target();
-        if target == Target::CanaryOnly && self.canary_replica().is_none() {
-            return Err(ServeError::Canary("no canary active"));
+        let mstats = match target {
+            Target::Pool(m) | Target::CanaryOnly(m) => {
+                Some(resolve_model_counters(shared, m))
+            }
+            Target::Any => None,
+        };
+        job.attach(mstats.clone());
+        if let Target::CanaryOnly(m) = target {
+            if canary_replica_of(shared, m).is_none() {
+                return Err(ServeError::Canary("no canary active"));
+            }
+        }
+        // Dedicated reachability: a model whose pinned replicas are all
+        // gone (and with no unassigned replica left to pin) can never
+        // be served — fail fast instead of queueing forever.
+        if let Target::Pool(m) = target {
+            if shared.sharding == ShardingPolicy::Dedicated {
+                let tag = m.0 + 1;
+                let reachable = (0..shared.shards.len()).any(|i| {
+                    shared.alive_mirror[i].load(Ordering::Acquire)
+                        && !shared.retire[i].load(Ordering::Acquire)
+                        && !is_canary_replica(shared, i)
+                        && matches!(
+                            shared.assign_mirror[i].load(Ordering::Acquire),
+                            v if v == tag || v == 0
+                        )
+                });
+                if !reachable {
+                    return Err(ServeError::NoReplica { model: m });
+                }
+            }
         }
         // Deadline-aware admission (Pool targets only — the canary
         // mirror is control traffic and never feasibility-rejected):
         // refuse a request whose projected queue wait behind
         // same-or-higher-class work already exceeds its deadline.
-        let feasibility = job.deadline().filter(|_| target == Target::Pool);
+        let feasibility = job.deadline().filter(|_| matches!(target, Target::Pool(_)));
         if let Some(deadline) = feasibility {
             let ahead: u64 = Priority::ALL[ci..]
                 .iter()
                 .map(|p| shared.counters[p.index()].depth())
                 .sum();
-            let replicas = self.live_pool_replicas();
+            let replicas = match target {
+                Target::Pool(m) => self.live_pool_replicas(m),
+                _ => 1,
+            };
             if let Some(wait) = shared.estimator.projected_wait(ahead, replicas) {
                 let slack = deadline.saturating_duration_since(Instant::now());
                 if wait > slack {
                     shared.counters[ci].reject_deadline();
+                    if let Some(ms) = &mstats {
+                        ms.classes[ci].reject_deadline();
+                    }
                     return Err(ServeError::DeadlineExceeded);
                 }
             }
@@ -924,6 +1393,9 @@ impl ServiceHandle {
             match shared.config.policy(class) {
                 ShedPolicy::Reject => {
                     shared.counters[ci].reject_overloaded();
+                    if let Some(ms) = &mstats {
+                        ms.classes[ci].reject_overloaded();
+                    }
                     return Err(ServeError::Overloaded);
                 }
                 ShedPolicy::ShedOldest => {
@@ -952,14 +1424,15 @@ impl ServiceHandle {
                 }
             }
         }
-        // Route: canary jobs to the canary's shard, pool jobs
-        // round-robin over live, non-canary, non-retiring replicas.
+        // Route: canary jobs to their model's canary shard, pool jobs
+        // affinity-first over live, non-canary, non-retiring replicas.
         let shard = match target {
-            Target::CanaryOnly => match self.canary_replica() {
+            Target::CanaryOnly(m) => match canary_replica_of(shared, m) {
                 Some(i) => i,
                 None => return Err(ServeError::Canary("no canary active")),
             },
-            Target::Pool => self.route_pool(),
+            Target::Pool(m) => self.route_pool(m),
+            Target::Any => self.route_any(),
         };
         {
             let mut q = shared.shards[shard].q.lock().unwrap();
@@ -970,49 +1443,95 @@ impl ServiceHandle {
             // mirror and then drains this shard (also under this lock),
             // so a CanaryOnly job admitted here is either rejected now
             // or found by the drain — never stranded.
-            if target == Target::CanaryOnly
-                && shared.canary_replica.load(Ordering::Acquire) != shard
-            {
-                return Err(ServeError::Canary("no canary active"));
+            if let Target::CanaryOnly(m) = target {
+                if shared.canary_mirror[shard].load(Ordering::Acquire) != m.0 + 1 {
+                    return Err(ServeError::Canary("no canary active"));
+                }
             }
             shared.counters[ci].admit();
+            if let Some(ms) = &mstats {
+                ms.classes[ci].admit();
+            }
             q.classes[ci].push_back(job);
         }
-        // With a canary active, the one woken worker might be
-        // ineligible for the new job (e.g. the canary woken for a Pool
-        // job) and would park again without another wake-up — wake
-        // everyone.  With no canary, every worker is eligible for every
-        // admissible job, so notify_one avoids a per-request thundering
-        // herd on the serving hot path.
-        wake_work(shared, self.canary_replica().is_some());
+        // With a canary active or several models in play, the one woken
+        // worker might be ineligible for the new job (wrong canary,
+        // foreign affinity) and would park again without another
+        // wake-up — wake everyone.  A single-model, canary-free pool
+        // keeps notify_one and avoids a per-request thundering herd.
+        wake_work(shared, wake_all_needed(shared));
         Ok(())
     }
 
-    /// Live replicas eligible for Pool traffic (feasibility divisor).
-    fn live_pool_replicas(&self) -> usize {
+    /// Live replicas eligible for `m`'s Pool traffic — affine or still
+    /// unassigned (feasibility divisor).
+    fn live_pool_replicas(&self, m: ModelId) -> usize {
         let shared = &*self.shared;
-        let canary = shared.canary_replica.load(Ordering::Acquire);
+        let tag = m.0 + 1;
         shared
             .alive_mirror
             .iter()
             .enumerate()
-            .filter(|(i, a)| *i != canary && a.load(Ordering::Acquire))
+            .filter(|(i, a)| {
+                a.load(Ordering::Acquire)
+                    && !is_canary_replica(shared, *i)
+                    && matches!(
+                        shared.assign_mirror[*i].load(Ordering::Acquire),
+                        v if v == tag || v == 0
+                    )
+            })
             .count()
             .max(1)
     }
 
-    /// Pick a shard for a Pool job: round-robin over live, non-canary,
-    /// non-retiring replicas.  With none eligible right now (mass death
-    /// or mid-scale), park the job anywhere — work stealing or the
+    /// Pick a shard for `m`'s Pool job: round-robin over live,
+    /// non-canary, non-retiring replicas, preferring one already affine
+    /// to `m`, then an unassigned one, then any (whose owner adopts the
+    /// model under `TimeShared`, or which work stealing rescues under
+    /// `Dedicated`).  With none eligible right now (mass death or
+    /// mid-scale), park the job anywhere — work stealing or the
     /// teardown drain will find it.
-    fn route_pool(&self) -> usize {
+    fn route_pool(&self, m: ModelId) -> usize {
         let shared = &*self.shared;
         let n = shared.shards.len();
         let start = shared.rr.fetch_add(1, Ordering::Relaxed) % n;
-        let canary = shared.canary_replica.load(Ordering::Acquire);
+        let tag = m.0 + 1;
+        let mut unassigned = None;
+        let mut fallback = None;
         for k in 0..n {
             let i = (start + k) % n;
-            if i != canary
+            if is_canary_replica(shared, i)
+                || !shared.alive_mirror[i].load(Ordering::Acquire)
+                || shared.retire[i].load(Ordering::Acquire)
+            {
+                continue;
+            }
+            match shared.assign_mirror[i].load(Ordering::Acquire) {
+                v if v == tag => return i,
+                0 => {
+                    if unassigned.is_none() {
+                        unassigned = Some(i);
+                    }
+                }
+                _ => {
+                    if fallback.is_none() {
+                        fallback = Some(i);
+                    }
+                }
+            }
+        }
+        unassigned.or(fallback).unwrap_or(start)
+    }
+
+    /// Pick a shard for model-agnostic work: round-robin over live,
+    /// non-canary, non-retiring replicas.
+    fn route_any(&self) -> usize {
+        let shared = &*self.shared;
+        let n = shared.shards.len();
+        let start = shared.rr.fetch_add(1, Ordering::Relaxed) % n;
+        for k in 0..n {
+            let i = (start + k) % n;
+            if !is_canary_replica(shared, i)
                 && shared.alive_mirror[i].load(Ordering::Acquire)
                 && !shared.retire[i].load(Ordering::Acquire)
             {
@@ -1033,6 +1552,9 @@ impl ServiceHandle {
             let mut q = shard.q.lock().unwrap();
             if let Some(job) = q.classes[ci].pop_front() {
                 shared.counters[ci].pop_shed();
+                if let Some(ms) = job.mstats() {
+                    ms.classes[ci].pop_shed();
+                }
                 victim = Some(job);
                 break;
             }
@@ -1044,8 +1566,6 @@ impl ServiceHandle {
     }
 }
 
-/// Blocking receive with the optional deadline semantics every RPC
-/// wrapper shares.
 fn recv_reply<T>(
     rx: &mpsc::Receiver<Result<T, ServeError>>,
     timeout: Option<Duration>,
@@ -1073,6 +1593,16 @@ fn wake_work(shared: &Shared, all: bool) {
     }
 }
 
+/// Must enqueues wake EVERY worker?  Yes once a canary is active or a
+/// second model has carried traffic: the one woken worker might be
+/// ineligible (wrong canary, foreign affinity) and would park again
+/// without another wake.  A single-model, canary-free pool keeps
+/// notify_one and avoids a per-request thundering herd.
+fn wake_all_needed(shared: &Shared) -> bool {
+    shared.canary_count.load(Ordering::Acquire) > 0
+        || shared.multi_model.load(Ordering::Acquire)
+}
+
 /// Wake submitters blocked on a full class queue, if any.
 fn wake_space(shared: &Shared) {
     if shared.space_waiters.load(Ordering::Acquire) == 0 {
@@ -1090,6 +1620,72 @@ fn shutdown_shared(shared: &Shared) {
     shared.epoch.fetch_add(1, Ordering::Release);
     shared.work_cv.notify_all();
     shared.space_cv.notify_all();
+}
+
+/// Re-publish the lock-free canary mirrors from the authoritative cell
+/// (call under the cell lock after any canary mutation).
+fn publish_canaries(shared: &Shared, cell: &ModelCell) {
+    for (i, mirror) in shared.canary_mirror.iter().enumerate() {
+        let tag = cell.canary_on(i).map_or(0, |c| c.model_id.0 + 1);
+        mirror.store(tag, Ordering::Release);
+    }
+    shared.canary_count.store(cell.canaries.len(), Ordering::Release);
+}
+
+/// Replica hosting `m`'s canary right now, per the lock-free mirror.
+fn canary_replica_of(shared: &Shared, m: ModelId) -> Option<usize> {
+    if shared.canary_count.load(Ordering::Acquire) == 0 {
+        return None;
+    }
+    shared
+        .canary_mirror
+        .iter()
+        .position(|c| c.load(Ordering::Acquire) == m.0 + 1)
+}
+
+/// Is replica `i` hosting ANY model's canary, per the mirror?
+fn is_canary_replica(shared: &Shared, i: usize) -> bool {
+    shared.canary_count.load(Ordering::Acquire) > 0
+        && shared.canary_mirror[i].load(Ordering::Acquire) != 0
+}
+
+/// The per-model counter block for `m`, creating it on first touch.
+/// Once a second model appears in the directory, enqueue wakes switch
+/// to notify_all (see [`wake_all_needed`]).
+fn resolve_model_counters(shared: &Shared, m: ModelId) -> Arc<ModelCounters> {
+    let mut dir = shared.model_dir.lock().unwrap();
+    let counters = Arc::clone(dir.entry(m.0).or_default());
+    if dir.len() > 1 {
+        shared.multi_model.store(true, Ordering::Release);
+    }
+    counters
+}
+
+/// Recompute the replica→model affinity partition (call under the cell
+/// lock after register/retire): registered ids round-robin across live
+/// non-canary replicas, dead slots pre-assigned to the first id so a
+/// later scale-up revives them onto real work.  With a single
+/// registered model this assigns every replica — the pre-registry
+/// broadcast semantics.
+fn rebalance_locked(shared: &Shared, cell: &mut ModelCell) {
+    let ids = cell.registry.ids();
+    let mut k = 0usize;
+    for i in 0..cell.assign.len() {
+        if cell.is_canary(i) {
+            continue;
+        }
+        let next = if ids.is_empty() {
+            None
+        } else if cell.alive[i] {
+            let id = ids[k % ids.len()];
+            k += 1;
+            Some(id)
+        } else {
+            Some(ids[0])
+        };
+        cell.assign[i] = next;
+        shared.assign_mirror[i].store(next.map_or(0, |m| m.0 + 1), Ordering::Release);
+    }
 }
 
 /// What the queue wait resolved to.
@@ -1115,34 +1711,43 @@ struct DeathWatch<'a> {
 impl Drop for DeathWatch<'_> {
     fn drop(&mut self) {
         self.shared.alive_mirror[self.idx].store(false, Ordering::Release);
-        let (all_dead, canary_cleared) = {
+        let (all_dead, cleared) = {
             let mut cell = self.shared.cell.lock().unwrap();
             cell.alive[self.idx] = false;
-            // A dying canary takes its candidate with it: clear the
-            // canary state so Pool traffic stops avoiding a corpse and
-            // new CanaryOnly submissions are rejected instead of
-            // stranded.  Symmetrically, if this death leaves ONLY the
-            // canary alive, the canary must be dismissed — Pool jobs
-            // would otherwise have no eligible worker and their callers
-            // would block forever.  The version bump makes the
-            // surviving canary resync onto the pool model before it
-            // serves live traffic.
-            let was_canary = cell.canary.as_ref().is_some_and(|c| c.replica == self.idx);
-            let only_canary_left = cell.canary.as_ref().is_some_and(|c| {
-                cell.alive.iter().enumerate().all(|(i, &a)| !a || i == c.replica)
-            });
-            let canary_cleared = was_canary || only_canary_left;
-            if canary_cleared {
-                cell.canary = None;
-                self.shared.canary_replica.store(NO_CANARY, Ordering::Release);
+            // A dying canary takes its candidate with it: clear its
+            // canary state so that model's Pool traffic stops avoiding
+            // a corpse and new CanaryOnly submissions are rejected
+            // instead of stranded.  Symmetrically, if this death
+            // leaves ONLY canaries alive, every canary must be
+            // dismissed — Pool jobs would otherwise have no eligible
+            // worker and their callers would block forever.  The
+            // version bump makes surviving canaries resync onto their
+            // pool models before serving live traffic.
+            let mut cleared: Vec<ModelId> = Vec::new();
+            if let Some(pos) = cell.canaries.iter().position(|c| c.replica == self.idx) {
+                cleared.push(cell.canaries.remove(pos).model_id);
+            }
+            let only_canaries_left = !cell.canaries.is_empty()
+                && cell
+                    .alive
+                    .iter()
+                    .enumerate()
+                    .all(|(i, &a)| !a || cell.is_canary(i));
+            if only_canaries_left {
+                cleared.extend(cell.canaries.drain(..).map(|c| c.model_id));
+            }
+            if !cleared.is_empty() {
+                publish_canaries(self.shared, &cell);
                 cell.version += 1;
                 self.shared.version.store(cell.version, Ordering::Release);
             }
-            (!cell.alive.iter().any(|&a| a), canary_cleared)
+            (!cell.alive.iter().any(|&a| a), cleared)
         };
         self.shared.fence_cv.notify_all();
-        if canary_cleared && !all_dead {
-            drain_canary_jobs(self.shared, "canary replica died");
+        if !cleared.is_empty() && !all_dead {
+            for m in &cleared {
+                drain_canary_jobs_for(self.shared, *m, "canary replica died");
+            }
             // Wake survivors: the version bump above needs a resync.
             wake_work(self.shared, true);
         }
@@ -1168,6 +1773,9 @@ fn close_shards(shared: &Shared) {
         for (ci, class) in q.classes.iter_mut().enumerate() {
             while let Some(job) = class.pop_front() {
                 shared.counters[ci].pop_shed();
+                if let Some(ms) = job.mstats() {
+                    ms.classes[ci].pop_shed();
+                }
                 dropped.push(job);
             }
         }
@@ -1175,20 +1783,57 @@ fn close_shards(shared: &Shared) {
     drop(dropped);
 }
 
-/// Fail any still-queued canary-targeted jobs with a typed error.
-/// Called after the canary is cleared (dismissal, pool broadcast, or
-/// canary-worker death): no worker is eligible for them anymore, so
-/// leaving them queued would strand their callers.  The replies are
-/// sent outside the shard locks.
-fn drain_canary_jobs(shared: &Shared, reason: &'static str) {
+/// Sweep every shard and fail still-queued jobs whose target matches
+/// `pred` with a typed error — no worker is (or will be) eligible for
+/// them, so leaving them queued would strand their callers.  Replies
+/// are sent outside the shard locks.
+fn drain_jobs(
+    shared: &Shared,
+    pred: impl Fn(Target) -> bool,
+    err: impl Fn() -> ServeError,
+) {
     let mut stranded: Vec<Job> = Vec::new();
     for shard in &shared.shards {
         let mut q = shard.q.lock().unwrap();
         for (ci, class) in q.classes.iter_mut().enumerate() {
             let mut kept = VecDeque::with_capacity(class.len());
             while let Some(job) = class.pop_front() {
-                if job.target() == Target::CanaryOnly {
+                if pred(job.target()) {
                     shared.counters[ci].pop_shed();
+                    if let Some(ms) = job.mstats() {
+                        ms.classes[ci].pop_shed();
+                    }
+                    stranded.push(job);
+                } else {
+                    kept.push_back(job);
+                }
+            }
+            *class = kept;
+        }
+    }
+    if !stranded.is_empty() {
+        wake_space(shared);
+    }
+    for job in stranded {
+        job.fail(&err);
+    }
+}
+
+/// Fail `m`'s still-queued canary-targeted jobs (after its canary was
+/// cleared by dismissal, a pool broadcast, promotion, retirement, or
+/// canary-worker death).  Other models' canary streams are untouched.
+fn drain_canary_jobs_for(shared: &Shared, m: ModelId, reason: &'static str) {
+    let mut stranded: Vec<Job> = Vec::new();
+    for shard in &shared.shards {
+        let mut q = shard.q.lock().unwrap();
+        for (ci, class) in q.classes.iter_mut().enumerate() {
+            let mut kept = VecDeque::with_capacity(class.len());
+            while let Some(job) = class.pop_front() {
+                if job.target() == Target::CanaryOnly(m) {
+                    shared.counters[ci].pop_shed();
+                    if let Some(ms) = job.mstats() {
+                        ms.classes[ci].pop_shed();
+                    }
                     stranded.push(job);
                 } else {
                     kept.push_back(job);
@@ -1205,33 +1850,63 @@ fn drain_canary_jobs(shared: &Shared, reason: &'static str) {
     }
 }
 
-/// May a worker serve a job with this target?  While a worker is the
-/// canary it serves ONLY CanaryOnly jobs and every other worker serves
-/// ONLY Pool jobs — a candidate under evaluation is never exposed to
-/// live traffic, and the baseline never answers the mirrored stream.
+/// May a worker serve a job with this target?  A worker hosting model
+/// X's canary serves ONLY `CanaryOnly(X)` jobs — a candidate under
+/// evaluation is never exposed to live traffic, and the baseline never
+/// answers the mirrored stream.  Non-canary workers serve Pool jobs
+/// for their affine model as-is, and foreign models' Pool jobs only on
+/// an adoption pass (`adopt` — gated by [`may_adopt`]).
 ///
-/// `am_canary` is the worker-local answer learned at its last fence
-/// resync from the AUTHORITATIVE cell (every canary mutation bumps the
-/// version, so a worker always resyncs before taking work under a new
-/// canary assignment) — deliberately not the lock-free mirror, whose
-/// propagation lag could otherwise let a freshly-assigned canary pick
-/// up one live request.
-fn eligible(target: Target, am_canary: bool) -> bool {
+/// `assigned` / `canary_of` are the worker-local answers learned at
+/// its last fence resync from the AUTHORITATIVE cell (every canary or
+/// affinity mutation bumps the version, so a worker always resyncs
+/// before taking work under a new assignment) — deliberately not the
+/// lock-free mirrors, whose propagation lag could otherwise let a
+/// freshly-assigned canary pick up one live request.
+fn eligible(
+    target: Target,
+    assigned: Option<ModelId>,
+    canary_of: Option<ModelId>,
+    adopt: bool,
+) -> bool {
     match target {
-        Target::Pool => !am_canary,
-        Target::CanaryOnly => am_canary,
+        Target::Any => canary_of.is_none(),
+        Target::Pool(m) => canary_of.is_none() && (assigned == Some(m) || adopt),
+        Target::CanaryOnly(m) => canary_of == Some(m),
+    }
+}
+
+/// May this worker adopt a foreign model's Pool job (reprogramming
+/// itself to serve it)?  Canaries never adopt.  An unassigned worker
+/// always may.  Under `Dedicated`, an assigned worker never switches.
+/// Under `TimeShared`, the dwell window since its last switch is the
+/// thrash guard: adversarially alternating traffic costs at most one
+/// reprogram per dwell per replica instead of one per request.
+fn may_adopt(shared: &Shared, state: &WorkerState) -> bool {
+    if state.canary_of.is_some() {
+        return false;
+    }
+    match (state.assigned, shared.sharding) {
+        (None, _) => true,
+        (Some(_), ShardingPolicy::Dedicated) => false,
+        (Some(_), ShardingPolicy::TimeShared { dwell }) => {
+            state.last_switch.is_none_or(|t| t.elapsed() >= dwell)
+        }
     }
 }
 
 /// Worker-local execution state: the service, the model Arc it last
 /// programmed (so fences that do not change THIS replica's model — e.g.
-/// a sibling becoming the canary — ack without a redundant reprogram),
-/// and whether the cell named this worker the canary at its last
-/// resync.
+/// a sibling becoming a canary — ack without a redundant reprogram),
+/// which model the cell assigned this worker at its last resync, which
+/// model's canary it hosts (if any), and when it last switched models
+/// (the `TimeShared` dwell clock).
 struct WorkerState {
     service: InferenceService,
     last_model: Option<Arc<TMModel>>,
-    am_canary: bool,
+    assigned: Option<ModelId>,
+    canary_of: Option<ModelId>,
+    last_switch: Option<Instant>,
 }
 
 fn worker_loop(shared: &Shared, idx: usize) {
@@ -1239,7 +1914,9 @@ fn worker_loop(shared: &Shared, idx: usize) {
     let mut state = WorkerState {
         service: InferenceService::new(shared.spec.build()),
         last_model: None,
-        am_canary: false,
+        assigned: None,
+        canary_of: None,
+        last_switch: None,
     };
     // A revived slot carries the counters its previous incarnation
     // published (scale-down must not erase served history).
@@ -1251,7 +1928,8 @@ fn worker_loop(shared: &Shared, idx: usize) {
         if shared.version.load(Ordering::Acquire) != my_version {
             my_version = program_from_cell(shared, idx, &mut state);
         }
-        let am_canary = state.am_canary;
+        let assigned = state.assigned;
+        let canary_of = state.canary_of;
         let next = loop {
             // Pending reprogram outranks new work: no job may start
             // on a stale replica once the fence is up.
@@ -1262,11 +1940,12 @@ fn worker_loop(shared: &Shared, idx: usize) {
             // active canary ignores the flag; the supervisor never
             // targets it, and the race where it just became one must
             // not kill the mirror.)
-            if shared.retire[idx].load(Ordering::Acquire) && !am_canary {
+            if shared.retire[idx].load(Ordering::Acquire) && canary_of.is_none() {
                 break Next::Exit;
             }
             let epoch = shared.epoch.load(Ordering::Acquire);
-            if let Some((job, class)) = next_job(shared, idx, am_canary) {
+            let adopt = may_adopt(shared, &state);
+            if let Some((job, class)) = next_job(shared, idx, assigned, canary_of, adopt) {
                 break Next::Work { job, class };
             }
             if shared.shutdown.load(Ordering::Acquire) {
@@ -1285,16 +1964,57 @@ fn worker_loop(shared: &Shared, idx: usize) {
             // DeathWatch marks the replica dead on the way out.
             Next::Exit => return,
             Next::Work { job, class } => {
+                // An adopted foreign-model job: re-pin this worker to
+                // the job's model behind a fence, program it, then
+                // serve.  (Unregistered routes — e.g. infer before any
+                // program — pin without a version bump and serve
+                // NotProgrammed, preserving single-model numbering.)
+                if let Target::Pool(m) = job.target() {
+                    if state.canary_of.is_none() && state.assigned != Some(m) {
+                        self_assign(shared, idx, m, job.mstats());
+                        state.last_switch = Some(Instant::now());
+                        my_version = program_from_cell(shared, idx, &mut state);
+                    }
+                }
                 run_job(shared, idx, &mut state, &mut my_version, job, class);
             }
         }
     }
 }
 
+/// Re-pin worker `idx` to model `m` (the adoption half of `TimeShared`
+/// sharding, and first-touch pinning of unassigned replicas).  Bumps
+/// the fence version ONLY for registered models: pinning to an
+/// unregistered route (nothing to program) must not shift the version
+/// numbering that single-model tests and fence callers observe.
+fn self_assign(shared: &Shared, idx: usize, m: ModelId, mstats: Option<&Arc<ModelCounters>>) {
+    let mut cell = shared.cell.lock().unwrap();
+    let registered = cell.registry.contains(m);
+    cell.assign[idx] = Some(m);
+    shared.assign_mirror[idx].store(m.0 + 1, Ordering::Release);
+    if registered {
+        cell.version += 1;
+        shared.version.store(cell.version, Ordering::Release);
+        shared.switches.fetch_add(1, Ordering::AcqRel);
+        if let Some(ms) = mstats {
+            ms.record_switch();
+        }
+    }
+}
+
 /// Class-major pop with work stealing: scan `Critical` down to `Low`,
 /// own shard first then siblings, skipping jobs this worker is not
-/// eligible for and shedding expired ones unexecuted.
-fn next_job(shared: &Shared, idx: usize, am_canary: bool) -> Option<(Job, Priority)> {
+/// eligible for and shedding expired ones unexecuted.  Within a class
+/// the affine pass runs before the adoption pass: a worker only
+/// reprograms for a foreign model when no job it can serve as-is
+/// exists at that class.
+fn next_job(
+    shared: &Shared,
+    idx: usize,
+    assigned: Option<ModelId>,
+    canary_of: Option<ModelId>,
+    may_adopt: bool,
+) -> Option<(Job, Priority)> {
     let n = shared.shards.len();
     let mut expired: Vec<Job> = Vec::new();
     let mut found: Option<(Job, Priority)> = None;
@@ -1306,31 +2026,42 @@ fn next_job(shared: &Shared, idx: usize, am_canary: bool) -> Option<(Job, Priori
         if shared.counters[ci].depth() == 0 {
             continue;
         }
-        for k in 0..n {
-            let shard = (idx + k) % n;
-            let mut q = shared.shards[shard].q.lock().unwrap();
-            loop {
-                let pos = q.classes[ci]
-                    .iter()
-                    .position(|j| eligible(j.target(), am_canary));
-                let Some(pos) = pos else { break };
-                let job = q.classes[ci].remove(pos).expect("position just found");
-                if job.deadline().is_some_and(|d| Instant::now() > d) {
-                    // Shed expired work before computing it: the client
-                    // already got DeadlineExceeded from its
-                    // recv_timeout, so executing the job would burn the
-                    // replica for a discarded answer.
-                    shared.counters[ci].pop_expired();
-                    expired.push(job);
-                } else {
-                    shared.counters[ci].pop_served();
-                    found = Some((job, *class));
-                    break;
-                }
+        for adopt in [false, true] {
+            if adopt && !may_adopt {
+                break;
             }
-            drop(q);
-            if found.is_some() {
-                break 'classes;
+            for k in 0..n {
+                let shard = (idx + k) % n;
+                let mut q = shared.shards[shard].q.lock().unwrap();
+                loop {
+                    let pos = q.classes[ci]
+                        .iter()
+                        .position(|j| eligible(j.target(), assigned, canary_of, adopt));
+                    let Some(pos) = pos else { break };
+                    let job = q.classes[ci].remove(pos).expect("position just found");
+                    if job.deadline().is_some_and(|d| Instant::now() > d) {
+                        // Shed expired work before computing it: the
+                        // client already got DeadlineExceeded from its
+                        // recv_timeout, so executing the job would burn
+                        // the replica for a discarded answer.
+                        shared.counters[ci].pop_expired();
+                        if let Some(ms) = job.mstats() {
+                            ms.classes[ci].pop_expired();
+                        }
+                        expired.push(job);
+                    } else {
+                        shared.counters[ci].pop_served();
+                        if let Some(ms) = job.mstats() {
+                            ms.classes[ci].pop_served();
+                        }
+                        found = Some((job, *class));
+                        break;
+                    }
+                }
+                drop(q);
+                if found.is_some() {
+                    break 'classes;
+                }
             }
         }
     }
@@ -1366,7 +2097,7 @@ fn run_job(
         None => {}
     }
     match job {
-        Job::Infer { rows, deadline, reply, .. } => {
+        Job::Infer { rows, deadline, mstats, reply, .. } => {
             // The pop-side shed already filtered expired jobs, but an
             // injected stall may have burned the budget since: shed
             // here too rather than compute a discarded answer.  (The
@@ -1374,6 +2105,9 @@ fn run_job(
             // recorded.)
             if deadline.is_some_and(|d| Instant::now() > d) {
                 shared.counters[class.index()].expire_in_service();
+                if let Some(ms) = &mstats {
+                    ms.classes[class.index()].expire_in_service();
+                }
                 let _ = reply.send(Err(ServeError::DeadlineExceeded));
                 return;
             }
@@ -1401,9 +2135,12 @@ fn run_job(
                 let _ = reply.send(Ok(Vec::new()));
             }
         }
-        Job::Telemetry { rows, deadline, reply, .. } => {
+        Job::Telemetry { rows, deadline, mstats, reply, .. } => {
             if deadline.is_some_and(|d| Instant::now() > d) {
                 shared.counters[class.index()].expire_in_service();
+                if let Some(ms) = &mstats {
+                    ms.classes[class.index()].expire_in_service();
+                }
                 let _ = reply.send(Err(ServeError::DeadlineExceeded));
                 return;
             }
@@ -1462,8 +2199,10 @@ fn reply_or_respawn<T>(
 
 /// Supervision: a panicking request may have left the replica in an
 /// arbitrary state.  Rebuild the engine from the spec, carry the
-/// counters over (plus the error), reprogram from the last-programmed
-/// model, then let the caller fail only the offending request.
+/// counters over (plus the error), reprogram from the cell's current
+/// assignment for this replica (its affine model — or its canary
+/// candidate, if it hosts one), then let the caller fail only the
+/// offending request.
 fn respawn_replica(shared: &Shared, idx: usize, state: &mut WorkerState, my_version: &mut u64) {
     let mut carried = state.service.metrics.clone();
     carried.errors += 1;
@@ -1480,25 +2219,28 @@ fn respawn_replica(shared: &Shared, idx: usize, state: &mut WorkerState, my_vers
     *my_version = program_from_cell(shared, idx, state);
 }
 
-/// Swap this worker's service to the model the cell assigns IT — the
-/// canary candidate when this replica is the canary, the pool model
-/// otherwise — and acknowledge the version (the worker half of the
-/// fence).  Also the respawn path: called with a freshly built engine,
-/// it re-installs the assigned model.  Returns the version applied.
+/// Swap this worker's service to the model the cell assigns IT — its
+/// canary candidate when this replica hosts one, its affine registered
+/// model otherwise — and acknowledge the version (the worker half of
+/// the fence).  Also the respawn path: called with a freshly built
+/// engine, it re-installs the assigned model.  Returns the version
+/// applied.
 ///
 /// A fence that does not change this replica's model (same Arc as the
-/// last programmed one — e.g. a sibling became the canary) acks without
-/// touching the engine, so canary lifecycle operations cost the
-/// non-participating replicas one drain, not one reprogram.
+/// last programmed one — e.g. a sibling became a canary, or another
+/// model was registered) acks without touching the engine, so fences
+/// cost the non-participating replicas one drain, not one reprogram.
 fn program_from_cell(shared: &Shared, idx: usize, state: &mut WorkerState) -> u64 {
     let (target, model) = {
         let cell = shared.cell.lock().unwrap();
-        let am_canary = cell.canary.as_ref().is_some_and(|c| c.replica == idx);
-        state.am_canary = am_canary;
-        let model = if am_canary {
-            cell.canary.as_ref().map(|c| Arc::clone(&c.model))
-        } else {
-            cell.model.clone()
+        let canary = cell
+            .canary_on(idx)
+            .map(|c| (c.model_id, Arc::clone(&c.candidate)));
+        state.canary_of = canary.as_ref().map(|(m, _)| *m);
+        state.assigned = cell.assign[idx];
+        let model = match canary {
+            Some((_, candidate)) => Some(candidate),
+            None => state.assigned.and_then(|m| cell.registry.model(m)),
         };
         (cell.version, model)
     };
@@ -1525,7 +2267,19 @@ fn program_from_cell(shared: &Shared, idx: usize, state: &mut WorkerState) -> u6
                 Some(e)
             }
         },
-        None => None,
+        None => {
+            // Nothing assigned — or the assigned model was retired.  A
+            // replica must never keep serving retired content, so
+            // rebuild unprogrammed; a never-programmed engine is
+            // already in that state and acks without a rebuild.
+            if state.last_model.is_some() {
+                let carried = state.service.metrics.clone();
+                state.service = InferenceService::new(shared.spec.build());
+                state.service.metrics = carried;
+                state.last_model = None;
+            }
+            None
+        }
     };
     // Keep the published per-replica metrics fresh (reprogram bumps a
     // counter outside the job path).
@@ -1543,7 +2297,8 @@ fn program_from_cell(shared: &Shared, idx: usize, state: &mut WorkerState) -> u6
 /// deadline-miss delta every `interval`; grows the pool toward `max`
 /// under pressure (depth above `depth_per_replica` per live replica,
 /// or any miss this interval) and retires one replica toward `min`
-/// (never the canary) after `idle_ticks` consecutive idle intervals.
+/// (never a canary, and under `Dedicated` never a model's last pinned
+/// replica) after `idle_ticks` consecutive idle intervals.
 fn supervisor_loop(shared: &Arc<Shared>, cfg: &AutoscaleConfig) {
     let mut idle_ticks = 0u32;
     let mut last_misses = 0u64;
@@ -1609,13 +2364,30 @@ fn scale_up(shared: &Arc<Shared>) {
 
 /// Flag the highest-index live, non-canary, non-retiring replica for
 /// retirement; it exits at its next pop and its queued jobs are stolen
-/// by the survivors.
+/// by the survivors.  Under `Dedicated` sharding a model's LAST pinned
+/// replica is never retired — no survivor could adopt its traffic.
 fn scale_down(shared: &Shared) {
     let victim = {
         let cell = shared.cell.lock().unwrap();
-        let canary = cell.canary.as_ref().map(|c| c.replica);
         (0..cell.alive.len()).rev().find(|&i| {
-            cell.alive[i] && Some(i) != canary && !shared.retire[i].load(Ordering::Acquire)
+            if !cell.alive[i]
+                || cell.is_canary(i)
+                || shared.retire[i].load(Ordering::Acquire)
+            {
+                return false;
+            }
+            match (shared.sharding, cell.assign[i]) {
+                (ShardingPolicy::Dedicated, Some(m)) if cell.registry.contains(m) => {
+                    (0..cell.alive.len()).any(|j| {
+                        j != i
+                            && cell.alive[j]
+                            && !cell.is_canary(j)
+                            && !shared.retire[j].load(Ordering::Acquire)
+                            && cell.assign[j] == Some(m)
+                    })
+                }
+                _ => true,
+            }
         })
     };
     let Some(idx) = victim else { return };
@@ -1624,7 +2396,6 @@ fn scale_down(shared: &Shared) {
     // Wake everyone: the retiring worker must notice the flag.
     wake_work(shared, true);
 }
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2390,6 +3161,113 @@ mod tests {
         assert!(matches!(
             h.infer_canary_deadline(data.xs.clone(), Duration::from_millis(50)),
             Err(ServeError::Canary(_))
+        ));
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn register_retire_and_route_models() {
+        let (model_a, data) = trained();
+        let drifted = SynthSpec::new(12, 3, 96).noise(0.05).seed(8).drift(0.4).generate();
+        let shape = TMShape::synthetic(12, 3, 8);
+        let model_b = crate::trainer::train_model(&shape, &drifted, 4, 3);
+
+        // Reference answers for both models.
+        let mut svc_a = InferenceService::new(EngineSpec::base().build());
+        svc_a.reprogram(&model_a).unwrap();
+        let want_a = svc_a.infer_all(&data.xs).unwrap();
+        let mut svc_b = InferenceService::new(EngineSpec::base().build());
+        svc_b.reprogram(&model_b).unwrap();
+        let want_b = svc_b.infer_all(&data.xs).unwrap();
+        assert_ne!(want_a, want_b, "test premise: the models must disagree");
+
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 3);
+        let a = h.register_model("tenant-a", model_a.clone()).unwrap();
+        let b = h.register_model("tenant-b", model_b).unwrap();
+        assert_eq!(a, ModelId(1));
+        assert_eq!(b, ModelId(2));
+        // Content-hash dedup: re-registering identical content hands
+        // back the existing id.
+        assert_eq!(h.register_model("tenant-a-copy", model_a).unwrap(), a);
+
+        let ha = h.with_model(a);
+        let hb = h.with_model(b);
+        assert_eq!(ha.infer(data.xs.clone()).unwrap(), want_a);
+        assert_eq!(hb.infer(data.xs.clone()).unwrap(), want_b);
+
+        let names: Vec<String> =
+            h.model_stats().into_iter().map(|m| m.name).collect();
+        assert!(names.contains(&"tenant-a".to_string()));
+        assert!(names.contains(&"tenant-b".to_string()));
+
+        // Retirement is typed and idempotent-by-error; the other
+        // tenant keeps serving.
+        h.retire_model(b).unwrap();
+        assert!(matches!(h.retire_model(b), Err(ServeError::UnknownModel(m)) if m == b));
+        assert!(matches!(
+            hb.infer(data.xs.clone()),
+            Err(ServeError::Core(CoreError::NotProgrammed))
+        ));
+        assert_eq!(ha.infer(data.xs.clone()).unwrap(), want_a);
+
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn dedicated_pool_pins_replicas_and_types_unroutable_models() {
+        let (model_a, data) = trained();
+        let drifted = SynthSpec::new(12, 3, 96).noise(0.05).seed(8).drift(0.4).generate();
+        let shape = TMShape::synthetic(12, 3, 8);
+        let model_b = crate::trainer::train_model(&shape, &drifted, 4, 3);
+
+        let mut svc_a = InferenceService::new(EngineSpec::base().build());
+        svc_a.reprogram(&model_a).unwrap();
+        let want_a = svc_a.infer_all(&data.xs).unwrap();
+        let mut svc_b = InferenceService::new(EngineSpec::base().build());
+        svc_b.reprogram(&model_b).unwrap();
+        let want_b = svc_b.infer_all(&data.xs).unwrap();
+
+        let (h, mut join) = spawn_pool_sharded(
+            EngineSpec::base(),
+            PoolConfig::fixed(2),
+            ShardingPolicy::Dedicated,
+        );
+        let a = h.register_model("tenant-a", model_a).unwrap();
+        let b = h.register_model("tenant-b", model_b).unwrap();
+        let ha = h.with_model(a);
+        let hb = h.with_model(b);
+        assert_eq!(ha.infer(data.xs.clone()).unwrap(), want_a);
+        assert_eq!(hb.infer(data.xs.clone()).unwrap(), want_b);
+        // Dedicated replicas never switch models for foreign traffic.
+        assert_eq!(h.pool_stats().sharding_switches, 0);
+
+        // Retiring B re-pins both replicas onto A; B's route becomes a
+        // typed NoReplica instead of queueing forever.
+        h.retire_model(b).unwrap();
+        assert!(matches!(
+            hb.infer(data.xs.clone()),
+            Err(ServeError::NoReplica { model }) if model == b
+        ));
+        assert_eq!(ha.infer(data.xs.clone()).unwrap(), want_a);
+
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn per_model_budgets_live_on_the_registry() {
+        let (model, _data) = trained();
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 2);
+        let id = h.register_model("budgeted", model).unwrap();
+        assert!(h.model_budget(id).is_none());
+        h.set_model_budget(id, Some(ResourceBudget::unlimited().with_luts(5000)))
+            .unwrap();
+        assert_eq!(h.model_budget(id).unwrap().max_luts, Some(5000));
+        assert!(matches!(
+            h.set_model_budget(ModelId(9), None),
+            Err(ServeError::UnknownModel(_))
         ));
         h.shutdown();
         join.join();

@@ -7,6 +7,8 @@
 //! rttm infer   --workload emg [--engine base|single|multi] [--n N]
 //! rttm serve   --workload emg [--engine ...] [--requests N] [--replicas N]
 //!              [--queue-cap N] [--shed-policy block|reject|shed-oldest]
+//! rttm serve   --models a.rttm,b.rttm [--sharding dedicated|time-shared]
+//!              [--requests N] [--replicas N] [--report-json PATH]
 //! rttm serve   --workload emg --autotune [--schedule abrupt|gradual|recurring]
 //!              [--budget LUTS,BRAMS,WATTS] [--windows N] [--drift F]
 //! rttm retune  --workload emg [--drift 0.35] [--threshold 0.8]
@@ -65,6 +67,8 @@ fn usage() {
          \x20 infer   --workload W [--engine base|single|multi] [--n N]\n\
          \x20 serve   --workload W [--engine ...] [--requests N] [--replicas N]\n\
          \x20         [--queue-cap N] [--shed-policy block|reject|shed-oldest]\n\
+         \x20         [--report-json PATH]\n\
+         \x20         [--models a.rttm,b.rttm [--sharding dedicated|time-shared]]\n\
          \x20         [--autotune [--schedule abrupt|gradual|recurring]\n\
          \x20          [--budget LUTS,BRAMS,WATTS] [--windows N] [--window-n N] [--drift F]\n\
          \x20          [--canary-fraction F] [--label-free [--label-delay N]]\n\
@@ -262,6 +266,9 @@ fn cmd_serve(opts: &Opts) -> anyhow::Result<()> {
     if opts.has("autotune") {
         return cmd_serve_autotune(opts);
     }
+    if opts.has("models") {
+        return cmd_serve_multi(opts);
+    }
     let w = workload(&opts.get("workload", "emg"))?;
     let requests = opts.get_usize("requests", 100);
     let replicas = opts.get_usize("replicas", 1);
@@ -345,7 +352,216 @@ fn cmd_serve(opts: &Opts) -> anyhow::Result<()> {
         stats.admission.lost_total(),
         stats.admission.deadline_misses_total(),
     );
+    print_model_summary(&stats.models);
+    let report_json = opts.get("report-json", "");
+    if !report_json.is_empty() {
+        std::fs::write(&report_json, serve_report_json(&stats, handle.sharding().name()))?;
+        println!("wrote serve report to {report_json}");
+    }
     Ok(())
+}
+
+/// `rttm serve --models a.rttm,b.rttm`: the multi-tenant platform path.
+/// Every file is registered on ONE replica pool under the chosen
+/// sharding policy and driven with interleaved per-model traffic; the
+/// summary reports requests/sheds/deadline-misses per model.
+fn cmd_serve_multi(opts: &Opts) -> anyhow::Result<()> {
+    use rttm::coordinator::server::ShardingPolicy;
+
+    anyhow::ensure!(
+        !opts.has("engine") && !opts.has("workload"),
+        "--models serves the listed .rttm files on fitted base-config replicas; \
+         --engine/--workload apply to single-model serve"
+    );
+    let list = opts.get("models", "");
+    let paths: Vec<&str> = list.split(',').filter(|p| !p.is_empty()).collect();
+    anyhow::ensure!(!paths.is_empty(), "--models needs a comma-separated list of .rttm files");
+    let sharding: ShardingPolicy = opts
+        .get("sharding", "time-shared")
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))?;
+    let requests = opts.get_usize("requests", 100);
+    let replicas = opts.get_usize("replicas", paths.len().max(2));
+    let queue_cap = opts.get_usize("queue-cap", 1024);
+    anyhow::ensure!(queue_cap >= 1, "--queue-cap must be >= 1");
+    let shed_policy: rttm::coordinator::ShedPolicy = opts
+        .get("shed-policy", "block")
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))?;
+
+    // Load every model up front: the engine spec must fit the largest
+    // stream and the widest feature row across ALL tenants.
+    let mut tenants: Vec<(String, rttm::TMModel)> = Vec::new();
+    for p in &paths {
+        let (model, tag) = rttm::tm::serialize::load_model(p)?;
+        let name = tag.map(|t| t.name).unwrap_or_else(|| {
+            std::path::Path::new(p)
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| p.to_string())
+        });
+        tenants.push((name, model));
+    }
+    let need = tenants
+        .iter()
+        .map(|(_, m)| rttm::isa::instruction_count(m))
+        .max()
+        .unwrap_or(0)
+        .next_power_of_two()
+        .max(8192);
+    let feats = tenants
+        .iter()
+        .map(|(_, m)| m.shape.features)
+        .max()
+        .unwrap_or(0)
+        .next_power_of_two()
+        .max(2048);
+    let spec = Engine::custom(AccelConfig::base().with_depths(need, feats)).to_spec();
+
+    let (handle, mut join) = rttm::coordinator::server::spawn_pool_sharded(
+        spec,
+        rttm::coordinator::PoolConfig {
+            replicas,
+            admission: rttm::coordinator::AdmissionConfig::uniform(queue_cap, shed_policy),
+            autoscale: None,
+        },
+        sharding,
+    );
+    // Register every tenant, then drive interleaved traffic: one client
+    // per model, all concurrent, fresh rows from the model's own
+    // workload generator.
+    let per_model = (requests / tenants.len()).max(1);
+    let t0 = std::time::Instant::now();
+    let mut clients = Vec::new();
+    for (name, model) in tenants {
+        let w = workload(&model.shape.name).map_err(|_| {
+            anyhow::anyhow!(
+                "model '{name}' was trained on unknown workload {:?}; \
+                 cannot generate traffic for it",
+                model.shape.name
+            )
+        })?;
+        let rows = w.dataset(32 * per_model, 11).xs;
+        let id = handle.register_model(&name, model)?;
+        let h = handle.with_model(id);
+        clients.push(std::thread::spawn(move || -> anyhow::Result<u64> {
+            let mut refused = 0u64;
+            for chunk in rows.chunks(32) {
+                match h.infer(chunk.to_vec()) {
+                    Ok(_) => {}
+                    Err(rttm::coordinator::ServeError::Overloaded) => refused += 1,
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            Ok(refused)
+        }));
+    }
+    let mut refused = 0u64;
+    for c in clients {
+        refused += c.join().expect("client thread")?;
+    }
+    let wall = t0.elapsed();
+    let stats = handle.pool_stats();
+    handle.shutdown();
+    join.join();
+    println!(
+        "served {} requests ({} inferences) models={} sharding={} replicas={} \
+         wall_ms={:.1} host_rps={:.0} switches={}",
+        stats.total.batches,
+        stats.total.inferences,
+        stats.models.len(),
+        sharding,
+        replicas,
+        wall.as_secs_f64() * 1e3,
+        stats.total.batches as f64 / wall.as_secs_f64(),
+        stats.sharding_switches,
+    );
+    println!(
+        "admission queue_cap={} shed_policy={} refused={} lost={} deadline_misses={}",
+        queue_cap,
+        shed_policy,
+        refused,
+        stats.admission.lost_total(),
+        stats.admission.deadline_misses_total(),
+    );
+    print_model_summary(&stats.models);
+    let report_json = opts.get("report-json", "");
+    if !report_json.is_empty() {
+        std::fs::write(&report_json, serve_report_json(&stats, sharding.name()))?;
+        println!("wrote serve report to {report_json}");
+    }
+    Ok(())
+}
+
+/// One summary line per registered model: the per-tenant view of the
+/// pool (requests / sheds / deadline misses per ModelId).
+fn print_model_summary(models: &[rttm::coordinator::ModelStats]) {
+    for m in models {
+        let served: u64 = m.classes.iter().map(|c| c.served).sum();
+        let shed: u64 = m.classes.iter().map(|c| c.shed).sum();
+        let misses: u64 = m.classes.iter().map(|c| c.deadline_misses).sum();
+        println!(
+            "model {} name={} requests={} served={} shed={} rejected={} \
+             deadline_misses={} switches={}",
+            m.id,
+            m.name,
+            m.submitted(),
+            served,
+            shed,
+            m.rejected(),
+            misses,
+            m.switches,
+        );
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// The per-model rollups as a JSON array (shared by the plain-serve
+/// report and the autotune report's `models` field).
+fn models_json(models: &[rttm::coordinator::ModelStats]) -> String {
+    let items: Vec<String> = models
+        .iter()
+        .map(|m| {
+            let served: u64 = m.classes.iter().map(|c| c.served).sum();
+            let shed: u64 = m.classes.iter().map(|c| c.shed).sum();
+            let misses: u64 = m.classes.iter().map(|c| c.deadline_misses).sum();
+            format!(
+                "{{\"id\": \"{}\", \"name\": \"{}\", \"submitted\": {}, \"admitted\": {}, \
+                 \"rejected\": {}, \"served\": {}, \"shed\": {}, \"deadline_misses\": {}, \
+                 \"switches\": {}}}",
+                m.id,
+                json_escape(&m.name),
+                m.submitted(),
+                m.admitted(),
+                m.rejected(),
+                served,
+                shed,
+                misses,
+                m.switches,
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(", "))
+}
+
+/// The plain-serve `--report-json` document: pool rollup plus the
+/// per-model array.
+fn serve_report_json(stats: &rttm::coordinator::PoolStats, sharding: &str) -> String {
+    format!(
+        "{{\n  \"requests\": {},\n  \"inferences\": {},\n  \"replicas\": {},\n  \
+         \"version\": {},\n  \"sharding\": \"{}\",\n  \"sharding_switches\": {},\n  \
+         \"models\": {}\n}}\n",
+        stats.total.batches,
+        stats.total.inferences,
+        stats.replicas.len(),
+        stats.version,
+        sharding,
+        stats.sharding_switches,
+        models_json(&stats.models),
+    )
 }
 
 /// `rttm serve --autotune`: the Fig 8 deployment at serving scale — a
@@ -520,7 +736,14 @@ fn cmd_serve_autotune(opts: &Opts) -> anyhow::Result<()> {
         stats.version
     );
     if !report_json.is_empty() {
-        std::fs::write(&report_json, tuner.report.to_json())?;
+        // Splice the per-model rollups into the tuner's own report so one
+        // JSON file carries both the tuning timeline and the tenant view.
+        let mut json = tuner.report.to_json();
+        let tail = json.rfind('}').expect("autotune report is a JSON object");
+        json.truncate(tail);
+        json.truncate(json.trim_end().len());
+        json.push_str(&format!(",\n  \"models\": {}\n}}\n", models_json(&stats.models)));
+        std::fs::write(&report_json, json)?;
         println!("wrote autotune report to {report_json}");
     }
     handle.shutdown();

@@ -7,15 +7,26 @@
 //! Layout (little endian):
 //! ```text
 //! magic   "RTTM"            4 B
-//! version u16               (currently 1)
-//! name    u16 len + bytes
+//! version u16               (1 = unnamed, 2 = named-model extension)
+//! name    u16 len + bytes   (shape/architecture name)
 //! features/classes/clauses  u32 x 3
 //! T       i32
 //! s_milli u32               (s * 1000, fixed point)
+//! -- version 2 only --------------------------------------------
+//! deploy  u16 len + bytes   (deployment/tenant name)
+//! hash    u64               FNV-1a-64 of the model's v1 wire bytes
+//! --------------------------------------------------------------
 //! count   u32               instruction count
 //! instrs  count x u16
 //! crc32   u32               over everything above
 //! ```
+//!
+//! Version 2 is a strict header extension for the multi-model registry:
+//! the deployment name labels the tenant/application the file belongs
+//! to, and the content hash pins the payload to its canonical v1
+//! serialization so a registry can dedup without decoding, and a
+//! swapped-stream splice under a stale tag is rejected at load.
+//! Version 1 files load unchanged (tag absent).
 
 use crate::config::TMShape;
 use crate::isa::{self, Instr};
@@ -24,6 +35,8 @@ use std::io::{Read, Write};
 
 const MAGIC: &[u8; 4] = b"RTTM";
 const VERSION: u16 = 1;
+/// Minor wire version carrying the named-model header extension.
+pub const VERSION_NAMED: u16 = 2;
 
 /// Errors loading a model file.
 #[derive(Debug, thiserror::Error)]
@@ -47,8 +60,31 @@ pub enum FileError {
     BadVersion(u16),
     #[error("checksum mismatch (corrupted file)")]
     BadCrc,
+    /// A v2 named-model tag's content hash disagrees with the payload
+    /// it frames: the instruction stream was swapped or spliced under a
+    /// stale tag.  The CRC cannot catch this (an adversary reseals it);
+    /// the content hash is recomputed from the decoded payload's
+    /// canonical v1 bytes instead of trusted from the header.
+    #[error("named-model tag mismatch: tag claims {stored:#018x}, payload hashes to {computed:#018x}")]
+    TagMismatch { stored: u64, computed: u64 },
     #[error("malformed stream: {0}")]
     BadStream(#[from] isa::IsaError),
+    /// The decoded stream carries more clauses of one polarity than the
+    /// declared shape has slots for (each polarity owns half the clause
+    /// indices) — a forged shape/stream combination.
+    #[error("stream decodes to more clauses than the declared shape holds")]
+    ShapeOverflow,
+}
+
+/// The v2 named-model header extension.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelTag {
+    /// Deployment/tenant name (NOT the shape name, which tracks
+    /// architecture).
+    pub name: String,
+    /// FNV-1a-64 over the model's canonical v1 wire bytes — the same
+    /// digest the model registry dedups on.
+    pub content_hash: u64,
 }
 
 /// CRC-32 (IEEE, bitwise — cold path, no table needed).
@@ -64,19 +100,76 @@ pub fn crc32(data: &[u8]) -> u32 {
     !crc
 }
 
+/// FNV-1a 64-bit: the registry's content digest.  Not cryptographic —
+/// it guards against accidents and splices, not a determined forger
+/// (who would need to also forge the payload that hashes to it).
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in data {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Content hash of a model: FNV-1a-64 over its canonical v1 wire bytes
+/// (CRC trailer included).  Identical models — same shape, same include
+/// set — hash identically regardless of deployment name.
+pub fn content_hash(model: &TMModel) -> u64 {
+    fnv1a64(&to_bytes(model))
+}
+
 fn put_u16(buf: &mut Vec<u8>, v: u16) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
 
-/// Serialize a model (shape + compressed stream) to bytes.
-pub fn to_bytes(model: &TMModel) -> Vec<u8> {
-    let instrs = isa::encode(model);
-    let mut buf = Vec::with_capacity(32 + model.shape.name.len() + 2 * instrs.len());
+/// Shared v1 header + stream writer (no CRC): `to_bytes` seals this
+/// directly; the v2 hash verification replays it from decoded fields.
+fn v1_body(shape: &TMShape, instrs: &[Instr]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(32 + shape.name.len() + 2 * instrs.len());
     buf.extend_from_slice(MAGIC);
     put_u16(&mut buf, VERSION);
+    put_u16(&mut buf, shape.name.len() as u16);
+    buf.extend_from_slice(shape.name.as_bytes());
+    put_u32(&mut buf, shape.features as u32);
+    put_u32(&mut buf, shape.classes as u32);
+    put_u32(&mut buf, shape.clauses as u32);
+    buf.extend_from_slice(&shape.t.to_le_bytes());
+    put_u32(&mut buf, (shape.s * 1000.0).round() as u32);
+    put_u32(&mut buf, instrs.len() as u32);
+    for i in instrs {
+        put_u16(&mut buf, i.0);
+    }
+    buf
+}
+
+fn seal(mut buf: Vec<u8>) -> Vec<u8> {
+    let crc = crc32(&buf);
+    put_u32(&mut buf, crc);
+    buf
+}
+
+/// Serialize a model (shape + compressed stream) to v1 bytes —
+/// byte-identical to every file this writer has ever produced.
+pub fn to_bytes(model: &TMModel) -> Vec<u8> {
+    seal(v1_body(&model.shape, &isa::encode(model)))
+}
+
+/// Serialize a model as a v2 named file: v1 fields plus the deployment
+/// name and the payload's canonical content hash.
+pub fn to_bytes_named(model: &TMModel, deploy_name: &str) -> Vec<u8> {
+    let instrs = isa::encode(model);
+    let hash = fnv1a64(&seal(v1_body(&model.shape, &instrs)));
+    let mut buf =
+        Vec::with_capacity(48 + model.shape.name.len() + deploy_name.len() + 2 * instrs.len());
+    buf.extend_from_slice(MAGIC);
+    put_u16(&mut buf, VERSION_NAMED);
     put_u16(&mut buf, model.shape.name.len() as u16);
     buf.extend_from_slice(model.shape.name.as_bytes());
     put_u32(&mut buf, model.shape.features as u32);
@@ -84,13 +177,14 @@ pub fn to_bytes(model: &TMModel) -> Vec<u8> {
     put_u32(&mut buf, model.shape.clauses as u32);
     buf.extend_from_slice(&model.shape.t.to_le_bytes());
     put_u32(&mut buf, (model.shape.s * 1000.0).round() as u32);
+    put_u16(&mut buf, deploy_name.len() as u16);
+    buf.extend_from_slice(deploy_name.as_bytes());
+    put_u64(&mut buf, hash);
     put_u32(&mut buf, instrs.len() as u32);
     for i in &instrs {
         put_u16(&mut buf, i.0);
     }
-    let crc = crc32(&buf);
-    put_u32(&mut buf, crc);
-    buf
+    seal(buf)
 }
 
 struct Cursor<'a> {
@@ -116,11 +210,15 @@ impl<'a> Cursor<'a> {
     fn i32(&mut self) -> Result<i32, FileError> {
         Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
+    fn u64(&mut self) -> Result<u64, FileError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
 }
 
-/// Parse bytes back into (shape, instruction stream), verifying CRC and
-/// stream well-formedness.
-pub fn from_bytes(data: &[u8]) -> Result<(TMShape, Vec<Instr>), FileError> {
+/// Parse bytes back into (shape, instruction stream, optional named-
+/// model tag), verifying CRC, stream well-formedness, and — for v2
+/// files — that the tag's content hash matches the payload.
+pub fn from_bytes_full(data: &[u8]) -> Result<(TMShape, Vec<Instr>, Option<ModelTag>), FileError> {
     // Minimum framing: magic + at least the CRC trailer.
     if data.len() < 8 {
         return Err(FileError::Truncated { needed: 8 - data.len() });
@@ -135,7 +233,7 @@ pub fn from_bytes(data: &[u8]) -> Result<(TMShape, Vec<Instr>), FileError> {
         return Err(FileError::BadMagic);
     }
     let version = c.u16()?;
-    if version != VERSION {
+    if version != VERSION && version != VERSION_NAMED {
         return Err(FileError::BadVersion(version));
     }
     let name_len = c.u16()? as usize;
@@ -145,6 +243,13 @@ pub fn from_bytes(data: &[u8]) -> Result<(TMShape, Vec<Instr>), FileError> {
     let clauses = c.u32()? as usize;
     let t = c.i32()?;
     let s = c.u32()? as f64 / 1000.0;
+    let raw_tag = if version == VERSION_NAMED {
+        let deploy_len = c.u16()? as usize;
+        let deploy = String::from_utf8_lossy(c.take(deploy_len)?).into_owned();
+        Some((deploy, c.u64()?))
+    } else {
+        None
+    };
     let count = c.u32()? as usize;
     // Validate the declared count against the bytes actually remaining
     // BEFORE sizing any allocation: a CRC-valid adversarial file
@@ -177,13 +282,41 @@ pub fn from_bytes(data: &[u8]) -> Result<(TMShape, Vec<Instr>), FileError> {
     };
     // Validate the stream decodes within this shape.
     isa::encoder::decode_clauses(&instrs, shape.literals(), shape.classes)?;
-    Ok((shape, instrs))
+    let tag = match raw_tag {
+        Some((deploy, claimed)) => {
+            let computed = fnv1a64(&seal(v1_body(&shape, &instrs)));
+            if computed != claimed {
+                return Err(FileError::TagMismatch { stored: claimed, computed });
+            }
+            Some(ModelTag { name: deploy, content_hash: claimed })
+        }
+        None => None,
+    };
+    Ok((shape, instrs, tag))
 }
 
-/// Write a model file.
+/// Parse bytes back into (shape, instruction stream), verifying CRC and
+/// stream well-formedness.  Accepts both wire versions; the v2 tag (if
+/// any) is verified then discarded — use [`from_bytes_full`] to keep it.
+pub fn from_bytes(data: &[u8]) -> Result<(TMShape, Vec<Instr>), FileError> {
+    from_bytes_full(data).map(|(shape, instrs, _)| (shape, instrs))
+}
+
+/// Write a model file (v1).
 pub fn save(model: &TMModel, path: impl AsRef<std::path::Path>) -> Result<(), FileError> {
     let mut f = std::fs::File::create(path)?;
     f.write_all(&to_bytes(model))?;
+    Ok(())
+}
+
+/// Write a v2 named model file.
+pub fn save_named(
+    model: &TMModel,
+    deploy_name: &str,
+    path: impl AsRef<std::path::Path>,
+) -> Result<(), FileError> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&to_bytes_named(model, deploy_name))?;
     Ok(())
 }
 
@@ -192,6 +325,49 @@ pub fn load(path: impl AsRef<std::path::Path>) -> Result<(TMShape, Vec<Instr>), 
     let mut data = Vec::new();
     std::fs::File::open(path)?.read_to_end(&mut data)?;
     from_bytes(&data)
+}
+
+/// Read a model file, keeping the v2 named-model tag when present.
+pub fn load_full(
+    path: impl AsRef<std::path::Path>,
+) -> Result<(TMShape, Vec<Instr>, Option<ModelTag>), FileError> {
+    let mut data = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut data)?;
+    from_bytes_full(&data)
+}
+
+/// Rebuild a dense model from a decoded (shape, stream) pair.  Decoded
+/// clauses are placed back by polarity in stream order — positives at
+/// even clause indices, negatives at odd (polarity is a fixed function
+/// of the index).  Encode skips empty clauses, so indices may compact
+/// relative to the model that produced the stream; class sums are
+/// order-free within a polarity, so inference behavior is identical.
+pub fn to_model(shape: TMShape, instrs: &[Instr]) -> Result<TMModel, FileError> {
+    let decoded = isa::encoder::decode_clauses(instrs, shape.literals(), shape.classes)?;
+    let mut model = TMModel::empty(shape);
+    for (class, clauses) in decoded.iter().enumerate() {
+        let mut next = [0usize, 1usize];
+        for (polarity, literals) in clauses {
+            let slot = &mut next[usize::from(*polarity < 0)];
+            if *slot >= model.shape.clauses {
+                return Err(FileError::ShapeOverflow);
+            }
+            for &lit in literals {
+                model.set_include(class, *slot, lit, true);
+            }
+            *slot += 2;
+        }
+    }
+    Ok(model)
+}
+
+/// Read a model file all the way back to a programmable dense model
+/// (see [`to_model`]) — the loader behind `rttm serve --models`.
+pub fn load_model(
+    path: impl AsRef<std::path::Path>,
+) -> Result<(TMModel, Option<ModelTag>), FileError> {
+    let (shape, instrs, tag) = load_full(path)?;
+    Ok((to_model(shape, &instrs)?, tag))
 }
 
 #[cfg(test)]
@@ -206,6 +382,22 @@ mod tests {
     }
 
     #[test]
+    fn to_model_rebuilds_an_inference_identical_model() {
+        let model = trained();
+        let (shape, instrs) = from_bytes(&to_bytes(&model)).unwrap();
+        let rebuilt = to_model(shape, &instrs).unwrap();
+        let probe = SynthSpec::new(10, 3, 64).noise(0.05).seed(9).generate();
+        for x in &probe.xs {
+            let lits = crate::tm::reference::literals_from_features(x);
+            assert_eq!(
+                crate::tm::reference::class_sums_dense(&model, &lits),
+                crate::tm::reference::class_sums_dense(&rebuilt, &lits),
+                "rebuilt model must produce identical class sums"
+            );
+        }
+    }
+
+    #[test]
     fn roundtrip_preserves_stream_and_shape() {
         let model = trained();
         let bytes = to_bytes(&model);
@@ -216,6 +408,79 @@ mod tests {
         assert_eq!(shape.t, model.shape.t);
         assert!((shape.s - model.shape.s).abs() < 1e-3);
         assert_eq!(instrs, isa::encode(&model));
+    }
+
+    #[test]
+    fn named_roundtrip_preserves_tag() {
+        let model = trained();
+        let bytes = to_bytes_named(&model, "tenant-a");
+        let (shape, instrs, tag) = from_bytes_full(&bytes).unwrap();
+        assert_eq!(shape.features, model.shape.features);
+        assert_eq!(instrs, isa::encode(&model));
+        let tag = tag.expect("v2 file must carry a tag");
+        assert_eq!(tag.name, "tenant-a");
+        assert_eq!(tag.content_hash, content_hash(&model));
+        // The plain loader accepts v2 too, discarding the tag.
+        assert!(from_bytes(&bytes).is_ok());
+    }
+
+    #[test]
+    fn v1_files_load_with_no_tag() {
+        let model = trained();
+        let (_, _, tag) = from_bytes_full(&to_bytes(&model)).unwrap();
+        assert!(tag.is_none(), "v1 files carry no named-model tag");
+    }
+
+    #[test]
+    fn content_hash_ignores_deploy_name_and_separates_models() {
+        let model = trained();
+        // Two different deployment names frame the identical payload:
+        // same content hash in both files.
+        let a = from_bytes_full(&to_bytes_named(&model, "a")).unwrap().2.unwrap();
+        let b = from_bytes_full(&to_bytes_named(&model, "b")).unwrap().2.unwrap();
+        assert_eq!(a.content_hash, b.content_hash);
+        // A different model hashes differently.
+        let mut other = model.clone();
+        other.set_include(0, 0, 0, !other.include(0, 0, 0));
+        assert_ne!(content_hash(&other), content_hash(&model));
+    }
+
+    #[test]
+    fn tampered_tag_hash_rejected_even_when_resealed() {
+        let model = trained();
+        let mut bytes = to_bytes_named(&model, "t");
+        // The u64 hash sits right before the count field: body is
+        // magic(4)+ver(2)+name(2+len)+12+4+4 + deploy(2+1) + hash(8).
+        let hash_off = 4 + 2 + 2 + model.shape.name.len() + 12 + 4 + 4 + 2 + 1;
+        bytes[hash_off] ^= 0xFF;
+        reseal(&mut bytes);
+        assert!(matches!(
+            from_bytes_full(&bytes),
+            Err(FileError::TagMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn v2_trailing_bytes_still_rejected() {
+        let model = trained();
+        let mut bytes = to_bytes_named(&model, "t");
+        let count_off = 4 + 2 + 2 + model.shape.name.len() + 12 + 4 + 4 + 2 + 1 + 8;
+        let count = u32::from_le_bytes(bytes[count_off..count_off + 4].try_into().unwrap());
+        bytes[count_off..count_off + 4].copy_from_slice(&(count - 1).to_le_bytes());
+        reseal(&mut bytes);
+        assert!(matches!(
+            from_bytes_full(&bytes),
+            Err(FileError::TrailingBytes { extra: 2 })
+        ));
+    }
+
+    #[test]
+    fn unknown_version_rejected() {
+        let model = trained();
+        let mut bytes = to_bytes(&model);
+        bytes[4..6].copy_from_slice(&3u16.to_le_bytes());
+        reseal(&mut bytes);
+        assert!(matches!(from_bytes(&bytes), Err(FileError::BadVersion(3))));
     }
 
     #[test]
@@ -322,11 +587,23 @@ mod tests {
         assert_eq!(shape.classes, 3);
         assert_eq!(instrs.len(), isa::instruction_count(&model));
         std::fs::remove_file(&path).ok();
+
+        let named = std::env::temp_dir().join("rttm_test_model_named.rttm");
+        save_named(&model, "edge-7", &named).unwrap();
+        let (_, _, tag) = load_full(&named).unwrap();
+        assert_eq!(tag.unwrap().name, "edge-7");
+        std::fs::remove_file(&named).ok();
     }
 
     #[test]
     fn crc32_known_answer() {
         // IEEE CRC-32 of "123456789".
         assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+
+    #[test]
+    fn fnv1a64_known_answers() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
     }
 }

@@ -13,8 +13,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use rttm::coordinator::autotune::AutotuneReport;
-use rttm::coordinator::server::{spawn_pool, spawn_pool_cfg, ServeError};
-use rttm::coordinator::{EngineSpec, PoolConfig, PoolJoin, Priority, ServiceHandle};
+use rttm::coordinator::server::{spawn_pool, spawn_pool_cfg, spawn_pool_sharded, ServeError};
+use rttm::coordinator::{
+    EngineSpec, ModelId, ModelStats, PoolConfig, PoolJoin, Priority, ServiceHandle, ShardingPolicy,
+};
 use rttm::datasets::synth::{Dataset, SynthSpec};
 use rttm::datasets::workloads::{DriftSchedule, Workload};
 use rttm::{TMModel, TMShape};
@@ -66,11 +68,57 @@ pub fn spawn_harness_cfg(spec: EngineSpec, cfg: PoolConfig) -> PoolHarness {
     PoolHarness { handle, join }
 }
 
+/// [`spawn_harness_cfg`] under an explicit [`ShardingPolicy`] — the
+/// multi-tenant tests' entry.
+pub fn spawn_harness_sharded(
+    spec: EngineSpec,
+    cfg: PoolConfig,
+    sharding: ShardingPolicy,
+) -> PoolHarness {
+    let (handle, join) = spawn_pool_sharded(spec, cfg, sharding);
+    PoolHarness { handle, join }
+}
+
+/// Two distinct trained tenants at the shared pool-test scale.  Same
+/// shape (so one engine spec fits both), different prototype draws —
+/// the models disagree on enough rows that cross-tenant contamination
+/// is observable as a byte-level prediction mismatch.
+pub fn two_tenants() -> ((TMModel, Dataset), (TMModel, Dataset)) {
+    (trained(101), trained(102))
+}
+
 impl PoolHarness {
     /// Shut the pool down and join every worker.
     pub fn shutdown(mut self) {
         self.handle.shutdown();
         self.join.join();
+    }
+}
+
+/// One model's rollup out of [`ServiceHandle::model_stats`], by id.
+pub fn model_stats_for(handle: &ServiceHandle, id: ModelId) -> ModelStats {
+    handle
+        .model_stats()
+        .into_iter()
+        .find(|m| m.id == id)
+        .unwrap_or_else(|| panic!("no stats rollup for model {id}"))
+}
+
+/// Per-model, per-class admission reconciliation: every admitted
+/// request is accounted exactly once at the back (`admitted == served +
+/// shed + depth`), class by class.  (The front-door half, `submitted ==
+/// admitted + rejected`, is reconciled against CLIENT-side tallies by
+/// the callers — the pool derives `submitted` from the same two
+/// counters, so asserting it here would be circular.)
+pub fn assert_model_reconciled(m: &ModelStats) {
+    for (i, c) in m.classes.iter().enumerate() {
+        assert_eq!(
+            c.admitted,
+            c.served + c.shed + c.depth,
+            "model {} ({}) class {i}: admitted != served + shed + depth ({c:?})",
+            m.id,
+            m.name,
+        );
     }
 }
 

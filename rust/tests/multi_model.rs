@@ -1,0 +1,262 @@
+//! Multi-tenant serving regression coverage: interleaved per-model
+//! traffic must be byte-identical to isolated single-tenant pools,
+//! per-model admission counters must reconcile exactly, a canary staged
+//! on one tenant must never perturb another tenant's replicas, and the
+//! `TimeShared` dwell guard must bound reprogram thrash under
+//! adversarial alternation.  Setup lives in the shared pool harness.
+
+#[path = "common/pool_harness.rs"]
+mod pool_harness;
+
+use std::time::{Duration, Instant};
+
+use pool_harness::{
+    assert_model_reconciled, classed_load, model_stats_for, spawn_harness_sharded, trained,
+    two_tenants, Traffic,
+};
+use rttm::coordinator::{
+    AdmissionConfig, EngineSpec, InferenceService, PoolConfig, Priority, ShardingPolicy, ShedPolicy,
+};
+
+/// Interleaved two-tenant traffic through one `TimeShared` pool returns
+/// exactly what two isolated single-model services would have returned,
+/// request for request, byte for byte.
+#[test]
+fn interleaved_tenants_match_isolated_pools_byte_for_byte() {
+    let ((model_a, data_a), (model_b, data_b)) = two_tenants();
+
+    // Isolated references: one dedicated service per tenant.
+    let mut single_a = InferenceService::new(EngineSpec::base().build());
+    single_a.reprogram(&model_a).unwrap();
+    let want_a = single_a.infer_all(&data_a.xs).unwrap();
+    let mut single_b = InferenceService::new(EngineSpec::base().build());
+    single_b.reprogram(&model_b).unwrap();
+    let want_b = single_b.infer_all(&data_b.xs).unwrap();
+    // The tenants must disagree on tenant A's own rows, or serving the
+    // wrong model would be invisible below.
+    assert_ne!(want_a, single_b.infer_all(&data_a.xs).unwrap());
+
+    let pool = spawn_harness_sharded(
+        EngineSpec::base(),
+        PoolConfig::fixed(4),
+        ShardingPolicy::time_shared(),
+    );
+    let ida = pool.handle.register_model("tenant-a", model_a).unwrap();
+    let idb = pool.handle.register_model("tenant-b", model_b).unwrap();
+    let ha = pool.handle.with_model(ida);
+    let hb = pool.handle.with_model(idb);
+
+    // Two concurrent clients, one per tenant, plus the main thread
+    // alternating between them — maximally interleaved on a 4-replica
+    // pool.
+    let clients: Vec<_> = [
+        (ha.clone(), data_a.xs.clone(), want_a.clone()),
+        (hb.clone(), data_b.xs.clone(), want_b.clone()),
+    ]
+    .into_iter()
+    .map(|(h, xs, want)| {
+        std::thread::spawn(move || {
+            for _ in 0..24 {
+                assert_eq!(h.infer(xs.clone()).unwrap(), want, "cross-tenant contamination");
+            }
+        })
+    })
+    .collect();
+    for _ in 0..12 {
+        assert_eq!(ha.infer(data_a.xs[..48].to_vec()).unwrap(), want_a[..48]);
+        assert_eq!(hb.infer(data_b.xs[..48].to_vec()).unwrap(), want_b[..48]);
+    }
+    for c in clients {
+        c.join().expect("tenant client panicked");
+    }
+
+    // Both tenants' rollups exist, reconcile, and show a fully drained
+    // pool: block admission never rejects or sheds.
+    for id in [ida, idb] {
+        let m = model_stats_for(&pool.handle, id);
+        assert_model_reconciled(&m);
+        assert!(m.served() > 0, "tenant {id} served nothing");
+        assert_eq!(m.rejected(), 0);
+        assert_eq!(m.shed(), 0);
+        assert_eq!(m.depth(), 0);
+    }
+    pool.shutdown();
+}
+
+/// Client-side tallies and the pool's per-model counters must agree
+/// exactly under rejection pressure, and the per-model rollups must
+/// partition the pool-wide class counters with nothing lost.
+#[test]
+fn per_model_counters_reconcile_under_reject_pressure() {
+    let ((model_a, data_a), (model_b, data_b)) = two_tenants();
+    let cfg = PoolConfig {
+        replicas: 2,
+        admission: AdmissionConfig::uniform(2, ShedPolicy::Reject),
+        autoscale: None,
+    };
+    let pool = spawn_harness_sharded(EngineSpec::base(), cfg, ShardingPolicy::time_shared());
+    let ida = pool.handle.register_model("tenant-a", model_a).unwrap();
+    let idb = pool.handle.register_model("tenant-b", model_b).unwrap();
+    let ha = pool.handle.with_model(ida);
+    let hb = pool.handle.with_model(idb);
+
+    // <= 32 rows per request so every classed_load call is exactly one
+    // admission decision; 8 clients against 2 replicas with cap 2 keeps
+    // the Reject policy busy on both tenants at once.
+    let rows_a = data_a.xs[..16].to_vec();
+    let rows_b = data_b.xs[..16].to_vec();
+    let tb = {
+        let hb = hb.clone();
+        std::thread::spawn(move || classed_load(&hb, &rows_b, Priority::Normal, 8, 12))
+    };
+    let out_a = classed_load(&ha, &rows_a, Priority::Normal, 8, 12);
+    let out_b = tb.join().expect("tenant-b load panicked");
+
+    for (id, out) in [(ida, &out_a), (idb, &out_b)] {
+        let m = model_stats_for(&pool.handle, id);
+        // Front door: the pool saw exactly the requests the clients
+        // sent, and refused exactly the ones the clients saw refused.
+        assert_eq!(out.submitted(), 96);
+        assert_eq!(out.other, 0, "unexpected error flavour for {id}");
+        assert_eq!(m.submitted(), out.submitted());
+        assert_eq!(m.rejected(), out.overloaded + out.deadline);
+        // Back door, class by class; all clients drained, so nothing is
+        // still queued and everything admitted was served.
+        assert_model_reconciled(&m);
+        assert_eq!(m.depth(), 0);
+        assert_eq!(m.shed(), 0);
+        assert_eq!(m.served(), out.ok);
+    }
+
+    // The per-model rollups partition the pool-wide Normal-class
+    // counters exactly: no transition is double-counted or dropped.
+    let sa = model_stats_for(&pool.handle, ida);
+    let sb = model_stats_for(&pool.handle, idb);
+    let pool_normal = pool.handle.admission_stats().classes[Priority::Normal.index()].clone();
+    let ca = sa.class(Priority::Normal);
+    let cb = sb.class(Priority::Normal);
+    assert_eq!(pool_normal.admitted, ca.admitted + cb.admitted);
+    assert_eq!(pool_normal.rejected, ca.rejected + cb.rejected);
+    assert_eq!(pool_normal.served, ca.served + cb.served);
+    assert_eq!(pool_normal.shed, ca.shed + cb.shed);
+    pool.shutdown();
+}
+
+/// A canary staged on tenant A steals one of A's OWN pinned replicas
+/// and leaves tenant B untouched: B's replicas never reprogram, B's
+/// predictions stay byte-identical, and B records zero sharding
+/// switches — before, during, and after promotion.
+#[test]
+fn canary_on_one_tenant_never_perturbs_the_other() {
+    let ((model_a, data_a), (model_b, data_b)) = two_tenants();
+    let (candidate_a, _) = trained(103);
+    let mut single_c = InferenceService::new(EngineSpec::base().build());
+    single_c.reprogram(&candidate_a).unwrap();
+    let want_candidate = single_c.infer_all(&data_a.xs).unwrap();
+
+    let pool = spawn_harness_sharded(
+        EngineSpec::base(),
+        PoolConfig::fixed(4),
+        ShardingPolicy::Dedicated,
+    );
+    let ida = pool.handle.register_model("tenant-a", model_a).unwrap();
+    let idb = pool.handle.register_model("tenant-b", model_b).unwrap();
+    let ha = pool.handle.with_model(ida);
+    let hb = pool.handle.with_model(idb);
+    let want_b = hb.infer(data_b.xs.clone()).unwrap();
+
+    // Snapshot tenant B's pinned replicas before any canary exists.
+    let before = pool.handle.pool_stats();
+    let b_replicas: Vec<usize> = before
+        .replicas
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.assigned == Some(idb))
+        .map(|(i, _)| i)
+        .collect();
+    assert!(!b_replicas.is_empty(), "dedicated rebalance left tenant B unpinned");
+    let b_reprograms: Vec<u64> =
+        b_replicas.iter().map(|&i| before.replicas[i].metrics.reprograms).collect();
+
+    // Stage the canary on A; it must claim one of A's replicas.
+    let c = ha.program_canary(candidate_a).unwrap();
+    assert_eq!(pool.handle.canary_replicas(), vec![(ida, c)]);
+    assert!(!b_replicas.contains(&c), "canary stole a replica pinned to tenant B");
+
+    // Drive live traffic at both tenants and mirrored traffic at A's
+    // canary while it is staged.
+    for _ in 0..6 {
+        assert_eq!(hb.infer(data_b.xs.clone()).unwrap(), want_b);
+        assert_eq!(ha.infer_canary(data_a.xs[..32].to_vec()).unwrap(), want_candidate[..32]);
+    }
+
+    // Promote: A's fleet converges on the candidate...
+    ha.promote_canary().unwrap();
+    assert!(pool.handle.canary_replicas().is_empty());
+    for _ in 0..4 {
+        assert_eq!(ha.infer(data_a.xs.clone()).unwrap(), want_candidate);
+        assert_eq!(hb.infer(data_b.xs.clone()).unwrap(), want_b);
+    }
+
+    // ...while tenant B never reprogrammed, never hosted a canary, and
+    // never switched models.
+    let after = pool.handle.pool_stats();
+    for (&i, &was) in b_replicas.iter().zip(&b_reprograms) {
+        assert_eq!(after.replicas[i].assigned, Some(idb), "tenant B replica reassigned");
+        assert_eq!(after.replicas[i].canary_of, None);
+        assert_eq!(
+            after.replicas[i].metrics.reprograms, was,
+            "tenant B replica {i} reprogrammed during tenant A's canary"
+        );
+    }
+    assert_eq!(model_stats_for(&pool.handle, idb).switches, 0);
+    pool.shutdown();
+}
+
+/// Adversarial alternation on a single `TimeShared` replica: both
+/// tenants hammer the pool at once, forcing the lone replica to host
+/// each in turn.  The dwell guard must cap model switches near
+/// `elapsed / dwell` — not one reprogram per request — while both
+/// tenants still make progress.
+#[test]
+fn dwell_guard_bounds_reprogram_thrash_under_alternation() {
+    let ((model_a, data_a), (model_b, data_b)) = two_tenants();
+    let dwell = Duration::from_millis(40);
+    let pool = spawn_harness_sharded(
+        EngineSpec::base(),
+        PoolConfig::fixed(1),
+        ShardingPolicy::TimeShared { dwell },
+    );
+    let ida = pool.handle.register_model("tenant-a", model_a).unwrap();
+    let idb = pool.handle.register_model("tenant-b", model_b).unwrap();
+
+    let t0 = Instant::now();
+    let ta = Traffic::start(pool.handle.with_model(ida), data_a.xs[..16].to_vec());
+    let tb = Traffic::start(pool.handle.with_model(idb), data_b.xs[..16].to_vec());
+    std::thread::sleep(Duration::from_millis(400));
+    let (served_a, failed_a) = ta.stop();
+    let (served_b, failed_b) = tb.stop();
+    let elapsed = t0.elapsed();
+
+    assert_eq!(failed_a + failed_b, 0, "request errors during alternation");
+    assert!(served_a > 0, "tenant A starved");
+    assert!(served_b > 0, "tenant B starved");
+
+    // Each switch needs `dwell` of residency first (the very first
+    // adoption is free), so the count is bounded by elapsed/dwell plus
+    // slack for the boundary switches.  Without the guard this would be
+    // one switch per alternation — hundreds.
+    let stats = pool.handle.pool_stats();
+    let ceiling = (elapsed.as_millis() / dwell.as_millis()) as u64 + 2;
+    assert!(
+        (1..=ceiling).contains(&stats.sharding_switches),
+        "sharding_switches = {} outside [1, {ceiling}] over {elapsed:?}",
+        stats.sharding_switches
+    );
+    let switch_sum: u64 = pool.handle.model_stats().iter().map(|m| m.switches).sum();
+    assert_eq!(
+        switch_sum, stats.sharding_switches,
+        "per-model switch counts must partition the total"
+    );
+    pool.shutdown();
+}

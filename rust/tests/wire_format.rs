@@ -1,4 +1,4 @@
-//! Golden-fixture pin of the `.rttm` v1 wire format.
+//! Golden-fixture pin of the `.rttm` wire formats.
 //!
 //! `tests/fixtures/golden_v1.rttm` is a committed byte-for-byte
 //! artifact of `tm::serialize::to_bytes` for a small hand-built model.
@@ -8,13 +8,21 @@
 //! `tm::serialize` pins the checksum algorithm; this pins the whole
 //! file.)  A DELIBERATE format change must bump the format version and
 //! add a new fixture, never rewrite this one.
+//!
+//! `tests/fixtures/golden_v2.rttm` pins the version-2 named-model
+//! extension the same way: the v1 fields plus a deployment name
+//! ("tenant-a") and the payload's FNV-1a-64 content hash, for the same
+//! model.  v1 files must keep loading forever.
 
 use rttm::isa;
 use rttm::tm::model::TMModel;
-use rttm::tm::serialize::{crc32, from_bytes, to_bytes, FileError};
+use rttm::tm::serialize::{
+    content_hash, crc32, from_bytes, from_bytes_full, to_bytes, to_bytes_named, FileError,
+};
 use rttm::TMShape;
 
 const GOLDEN: &[u8] = include_bytes!("fixtures/golden_v1.rttm");
+const GOLDEN_V2: &[u8] = include_bytes!("fixtures/golden_v2.rttm");
 
 // Field boundaries of the golden file (62 bytes total):
 // magic 0..4 | version 4..6 | name_len 6..8 | name 8..22 |
@@ -168,9 +176,12 @@ fn mutated_golden_corpus_fails_with_exact_variants() {
     let mut magic = GOLDEN.to_vec();
     magic[0] = b'X';
     corpus.push(("wrong magic".into(), resealed(magic), Expect::BadMagic));
+    // Version 2 became the named-model extension (golden_v2 below), so
+    // the unsupported-version probe moved to 3 — exactly the deliberate
+    // bump-and-add-a-fixture path this file's header prescribes.
     let mut version = GOLDEN.to_vec();
-    version[4..6].copy_from_slice(&2u16.to_le_bytes());
-    corpus.push(("version 2".into(), resealed(version), Expect::BadVersion(2)));
+    version[4..6].copy_from_slice(&3u16.to_le_bytes());
+    corpus.push(("version 3".into(), resealed(version), Expect::BadVersion(3)));
 
     // 7. Body-flip anywhere without resealing: BadCrc.
     let mut flip = GOLDEN.to_vec();
@@ -194,4 +205,99 @@ fn golden_fixture_framing_is_pinned() {
     let stored = u32::from_le_bytes(GOLDEN[58..].try_into().unwrap());
     assert_eq!(stored, rttm::tm::serialize::crc32(&GOLDEN[..58]));
     assert_eq!(stored, 0xD57C_4F69);
+}
+
+// ---------------------------------------------------------------------
+// v2 named-model extension pins.
+//
+// Field boundaries of golden_v2.rttm (80 bytes total): the v1 header
+// through s_milli unchanged (0..42), then
+// deploy_len 42..44 | deploy 44..52 ("tenant-a") | hash 52..60 |
+// count 60..64 | instrs 64..76 | crc 76..80.
+const V2_HASH_OFF: usize = 52;
+const V2_COUNT_OFF: usize = 60;
+
+#[test]
+fn to_bytes_named_reproduces_the_golden_v2_fixture() {
+    let bytes = to_bytes_named(&golden_model(), "tenant-a");
+    assert_eq!(
+        bytes,
+        GOLDEN_V2.to_vec(),
+        "the v2 .rttm layout changed — if deliberate, bump the format \
+         version and add golden_v3 instead of rewriting this fixture"
+    );
+}
+
+#[test]
+fn golden_v2_parses_back_with_its_tag() {
+    let (shape, instrs, tag) = from_bytes_full(GOLDEN_V2).expect("golden_v2 must stay loadable");
+    assert_eq!(shape.name, "synth_4f_3m_4c");
+    assert_eq!(instrs, isa::encode(&golden_model()));
+    let tag = tag.expect("v2 fixture must carry a tag");
+    assert_eq!(tag.name, "tenant-a");
+    assert_eq!(tag.content_hash, content_hash(&golden_model()));
+    // The tag hash is, by construction, the FNV-1a-64 of the ENTIRE v1
+    // fixture file — the two goldens pin each other.
+    assert_eq!(tag.content_hash, rttm::tm::serialize::fnv1a64(GOLDEN));
+}
+
+#[test]
+fn golden_v1_still_loads_and_carries_no_tag() {
+    // Backward compat is the contract: v1 files keep loading unchanged
+    // after the v2 extension, through both entry points.
+    let (shape, instrs, tag) = from_bytes_full(GOLDEN).unwrap();
+    assert!(tag.is_none());
+    assert_eq!(shape.classes, 3);
+    assert_eq!(instrs.len(), 6);
+}
+
+#[test]
+fn golden_v2_framing_is_pinned() {
+    assert_eq!(GOLDEN_V2.len(), 80);
+    assert_eq!(&GOLDEN_V2[..4], b"RTTM");
+    assert_eq!(&GOLDEN_V2[4..6], &2u16.to_le_bytes()); // version
+    // v1 header fields (name through s_milli) are byte-identical.
+    assert_eq!(&GOLDEN_V2[6..42], &GOLDEN[6..42]);
+    assert_eq!(&GOLDEN_V2[42..44], &8u16.to_le_bytes()); // deploy length
+    assert_eq!(&GOLDEN_V2[44..52], b"tenant-a");
+    let hash = u64::from_le_bytes(GOLDEN_V2[V2_HASH_OFF..V2_COUNT_OFF].try_into().unwrap());
+    assert_eq!(hash, 0x0172_D7DB_9454_5634);
+    // count + instrs are byte-identical to the v1 fixture's.
+    assert_eq!(&GOLDEN_V2[V2_COUNT_OFF..76], &GOLDEN[COUNT_OFF..BODY_END]);
+    let stored = u32::from_le_bytes(GOLDEN_V2[76..].try_into().unwrap());
+    assert_eq!(stored, crc32(&GOLDEN_V2[..76]));
+    assert_eq!(stored, 0xA74D_CB0A);
+}
+
+#[test]
+fn golden_v2_mutation_corpus() {
+    // Count understated: TrailingBytes semantics are preserved in v2.
+    let mut under = GOLDEN_V2.to_vec();
+    under[V2_COUNT_OFF..V2_COUNT_OFF + 4].copy_from_slice(&5u32.to_le_bytes());
+    assert_expected(
+        "v2 count understated by one",
+        &resealed(under),
+        &Expect::TrailingBytes(2),
+    );
+
+    // Tampered content hash, CRC resealed: the splice is caught by
+    // recomputing the hash from the decoded payload.
+    let mut spliced = GOLDEN_V2.to_vec();
+    spliced[V2_HASH_OFF] ^= 0xFF;
+    assert!(matches!(
+        from_bytes_full(&resealed(spliced)),
+        Err(FileError::TagMismatch { .. })
+    ));
+
+    // Resealed truncation inside the v2 extension fields: Truncated.
+    for cut in [43, 48, 56] {
+        let mut bytes = GOLDEN_V2[..cut].to_vec();
+        let crc = crc32(&bytes).to_le_bytes();
+        bytes.extend_from_slice(&crc);
+        assert_expected(
+            &format!("v2 resealed truncation at byte {cut}"),
+            &bytes,
+            &Expect::Truncated,
+        );
+    }
 }
