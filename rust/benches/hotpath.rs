@@ -298,6 +298,73 @@ fn main() {
     );
     push_throughput(&mut json, "sliced_multicore_inf_per_s", mc_sliced_inf_s, 64, 5);
 
+    // 2b''. Compressed include-list kernel (the §Compressed tentpole):
+    //       sparse gather-AND over only each clause's OWN includes vs
+    //       the dense sliced plane walk, on a high-sparsity fixture —
+    //       128 features, one include per clause, the regime ETHEREAL
+    //       targets and trained edge models actually occupy.
+    //       EQUIVALENCE-GATED like everything else: byte-identical
+    //       preds before a single measurement.
+    println!("\n--- compressed kernel (sparse include-list gather, single core) ---");
+    let sparse_shape = rttm::TMShape::synthetic(128, 4, 32);
+    let mut sparse_model = rttm::TMModel::empty(sparse_shape.clone());
+    for class in 0..sparse_shape.classes {
+        for clause in 0..sparse_shape.clauses {
+            let lit = (class * sparse_shape.clauses + clause) * 7 % sparse_shape.literals();
+            sparse_model.set_include(class, clause, lit, true);
+        }
+    }
+    let mut rng = rttm::datasets::synth::XorShift64Star::new(2024);
+    let sparse_rows: Vec<Vec<u8>> = (0..32 * scale(256))
+        .map(|_| {
+            (0..sparse_shape.features)
+                .map(|_| u8::from(rng.next_f64() < 0.5))
+                .collect()
+        })
+        .collect();
+    let mut sparse_core = Core::new(AccelConfig::base());
+    sparse_core.program_model(&sparse_model).unwrap();
+    let density = sparse_core.compressed_program().density;
+    let avg_includes = sparse_core.compressed_program().avg_includes();
+    assert!(
+        sparse_core.uses_compressed_kernel(),
+        "sparse fixture (density {density:.4}) must auto-select the compressed kernel"
+    );
+    let (want_sparse, _) =
+        engine::classify_rows_core_soa(&mut sparse_core, &sparse_rows).unwrap();
+    let (sliced_sparse, _) =
+        engine::classify_rows_core_sliced(&mut sparse_core, &sparse_rows).unwrap();
+    let (comp_sparse, _) =
+        engine::classify_rows_core_compressed(&mut sparse_core, &sparse_rows).unwrap();
+    assert_eq!(comp_sparse, want_sparse, "compressed kernel must match the SoA path");
+    assert_eq!(comp_sparse, sliced_sparse, "compressed kernel must match the sliced path");
+
+    let sliced_sparse_ns = bench_ns(2, scale(20), || {
+        let (p, _) = engine::classify_rows_core_sliced(&mut sparse_core, &sparse_rows).unwrap();
+        std::hint::black_box(p.len());
+    });
+    let comp_sparse_ns = bench_ns(2, scale(20), || {
+        let (p, _) =
+            engine::classify_rows_core_compressed(&mut sparse_core, &sparse_rows).unwrap();
+        std::hint::black_box(p.len());
+    });
+    let n_sparse = sparse_rows.len() as f64;
+    let sliced_sparse_inf_s = n_sparse / (sliced_sparse_ns / 1e9);
+    let comp_sparse_inf_s = n_sparse / (comp_sparse_ns / 1e9);
+    println!(
+        "64-lane sliced on sparse:      {:>10.0} inferences/s (density {:.4}, {:.1} includes/clause)",
+        sliced_sparse_inf_s, density, avg_includes
+    );
+    println!(
+        "compressed gather on sparse:   {:>10.0} inferences/s (speedup {:.2}x over sliced)",
+        comp_sparse_inf_s,
+        comp_sparse_inf_s / sliced_sparse_inf_s
+    );
+    push_throughput(&mut json, "compressed_sparse_inf_per_s", comp_sparse_inf_s, 64, 1);
+    json.push(("compressed_speedup_vs_sliced".into(), comp_sparse_inf_s / sliced_sparse_inf_s));
+    json.push(("compressed_include_density".into(), density));
+    json.push(("compressed_avg_includes_per_clause".into(), avg_includes));
+
     // 2c. Serving front-end: single-worker vs replica pool (the
     //     coordinator::server request path, queue + reply channels
     //     included).  Requests are 1024-row bulk inferences so compute

@@ -26,7 +26,24 @@
 use super::fifo::OutputFifo;
 use super::memory::{FeatureMemory, InstrMemory, MemError};
 use super::stream::{decode_stream, HeaderWidth, Message, StreamCodec, StreamError};
-use crate::isa::{self, Instr, SlicedBatch, SlicedProgram, SoaProgram};
+use crate::isa::{self, CompressedProgram, Instr, SlicedBatch, SlicedProgram, SoaProgram};
+
+/// Which 64-lane bulk kernel a run uses.  Both concrete kernels are
+/// byte-identical in every observable (preds, sums, simulated cycles,
+/// FIFO, lifetime counters); the choice only moves host wall-clock, so
+/// `Auto` is always safe and resolves to the density-based decision
+/// made once at program time (sparse include lists -> `Compressed`,
+/// dense -> `Sliced`).  Pinned variants exist for benches and
+/// equivalence tests.
+#[derive(Debug, Copy, Clone, PartialEq, Eq, Default)]
+pub enum SlicedKernel {
+    #[default]
+    Auto,
+    /// The dense 64-lane plane walk ([`SlicedProgram`]).
+    Sliced,
+    /// The sparse include-list gather ([`CompressedProgram`]).
+    Compressed,
+}
 
 /// Deploy-time configuration of one core (the Fig 8 "one-time
 /// implementation" choices).
@@ -248,6 +265,14 @@ pub struct Core {
     prog: SoaProgram,
     /// The 64-lane derivation of `prog` (rebuilt alongside it).
     sliced: SlicedProgram,
+    /// The compressed include-list derivation of `prog` (rebuilt
+    /// alongside it, pruning off — always equivalence-safe).
+    compressed: CompressedProgram,
+    /// Program-time kernel decision for [`SlicedKernel::Auto`] runs:
+    /// true when the compressed derivation measured sparse enough to
+    /// beat the dense plane walk
+    /// ([`super::engine::COMPRESSED_MAX_DENSITY`]).
+    use_compressed: bool,
     /// Reusable result scratch for the convenience entry points
     /// (`run_rows`): keeps steady-state serving allocation-free.
     scratch: BatchResult,
@@ -280,6 +305,8 @@ impl Core {
             clauses: 0,
             prog: SoaProgram::default(),
             sliced: SlicedProgram::default(),
+            compressed: CompressedProgram::default(),
+            use_compressed: false,
             scratch: BatchResult::default(),
             sliced_batch: SlicedBatch::default(),
             sliced_cur: Vec::new(),
@@ -302,6 +329,8 @@ impl Core {
         self.clauses = 0;
         self.prog.clear();
         self.sliced.clear();
+        self.compressed.clear();
+        self.use_compressed = false;
         self.trace.clear();
     }
 
@@ -339,12 +368,21 @@ impl Core {
             self.clauses = 0;
             self.prog.clear();
             self.sliced.clear();
+            self.compressed.clear();
+            self.use_compressed = false;
             return Err(e.into());
         }
         // Derive the 64-lane twin (buffers reused; exclude-only and
         // tautology-killer clauses resolved here so the sliced inner
         // loop stays branch-free).
         isa::derive_sliced_into(&self.prog, classes, &mut self.sliced);
+        // ... and its compressed include-list twin, deciding the Auto
+        // bulk kernel ONCE from the density measured at derivation.
+        // Both kernels are byte-identical, so this moves only host
+        // wall-clock, never a simulated cycle.
+        isa::derive_compressed_into(&self.prog, classes, &mut self.compressed);
+        self.use_compressed =
+            self.compressed.density <= super::engine::COMPRESSED_MAX_DENSITY;
         // 2 header words + payload, one word per cycle — counted only
         // for accepted streams so lifetime stats match a core that
         // never saw a rejected one.
@@ -504,6 +542,30 @@ impl Core {
         batch: &SlicedBatch,
         out: &mut SlicedResult,
     ) -> Result<(), CoreError> {
+        self.run_kernel_into(batch, out, SlicedKernel::Sliced)
+    }
+
+    /// [`Self::run_sliced_into`] pinned to the sparse include-list
+    /// kernel — same observables (the compressed derivation is pruning-
+    /// free), different host loop.
+    pub fn run_compressed_into(
+        &mut self,
+        batch: &SlicedBatch,
+        out: &mut SlicedResult,
+    ) -> Result<(), CoreError> {
+        self.run_kernel_into(batch, out, SlicedKernel::Compressed)
+    }
+
+    /// The shared 64-lane bulk run: every check, the cycle model, FIFO
+    /// and lifetime accounting are kernel-independent; `kernel` picks
+    /// only which derived program walks the planes (`Auto` resolves to
+    /// the program-time density decision).
+    pub fn run_kernel_into(
+        &mut self,
+        batch: &SlicedBatch,
+        out: &mut SlicedResult,
+        kernel: SlicedKernel,
+    ) -> Result<(), CoreError> {
         if !self.is_programmed() {
             return Err(CoreError::NotProgrammed);
         }
@@ -536,8 +598,15 @@ impl Core {
         out.padded_rows = padded;
         out.class_sums.clear();
         out.class_sums.resize(self.classes * padded, 0);
-        self.sliced
-            .execute_into(batch, &mut out.class_sums, &mut self.sliced_cur);
+        match self.resolve_kernel(kernel) {
+            SlicedKernel::Compressed => {
+                self.compressed
+                    .execute_into(batch, &mut out.class_sums, &mut self.sliced_cur)
+            }
+            _ => self
+                .sliced
+                .execute_into(batch, &mut out.class_sums, &mut self.sliced_cur),
+        };
 
         argmax_rows(&out.class_sums, padded, self.classes, &mut out.preds);
 
@@ -585,13 +654,31 @@ impl Core {
     /// scratch; returns a borrow of that result.  The bulk scheduler's
     /// entry point — steady-state serving performs no heap allocation.
     pub fn run_rows_sliced_ref(&mut self, rows: &[Vec<u8>]) -> Result<&SlicedResult, CoreError> {
+        self.run_rows_kernel_ref(rows, SlicedKernel::Sliced)
+    }
+
+    /// [`Self::run_rows_sliced_ref`] pinned to the sparse include-list
+    /// kernel.
+    pub fn run_rows_compressed_ref(&mut self, rows: &[Vec<u8>]) -> Result<&SlicedResult, CoreError> {
+        self.run_rows_kernel_ref(rows, SlicedKernel::Compressed)
+    }
+
+    /// Pack `rows` into the core-owned scratch and run the chosen
+    /// 64-lane kernel — the kernel-generic body behind the pinned
+    /// `run_rows_{sliced,compressed}_ref` entry points and the engine's
+    /// auto path.
+    pub fn run_rows_kernel_ref(
+        &mut self,
+        rows: &[Vec<u8>],
+        kernel: SlicedKernel,
+    ) -> Result<&SlicedResult, CoreError> {
         if rows.is_empty() {
             return Err(CoreError::BadBatch { rows: 0, reason: "empty request" });
         }
         let mut batch = std::mem::take(&mut self.sliced_batch);
         isa::pack_literals_sliced_into(rows, &mut batch);
         let mut out = std::mem::take(&mut self.sliced_scratch);
-        let res = self.run_sliced_into(&batch, &mut out);
+        let res = self.run_kernel_into(&batch, &mut out, kernel);
         self.sliced_batch = batch;
         self.sliced_scratch = out;
         res.map(|()| &self.sliced_scratch)
@@ -603,6 +690,37 @@ impl Core {
         let n = rows.len();
         let r = self.run_rows_sliced_ref(rows)?;
         Ok(r.preds[..n].iter().map(|&p| p as usize).collect())
+    }
+
+    /// [`Self::run_rows_sliced`] pinned to the sparse include-list
+    /// kernel.
+    pub fn run_rows_compressed(&mut self, rows: &[Vec<u8>]) -> Result<Vec<usize>, CoreError> {
+        let n = rows.len();
+        let r = self.run_rows_compressed_ref(rows)?;
+        Ok(r.preds[..n].iter().map(|&p| p as usize).collect())
+    }
+
+    /// Resolve `Auto` to the program-time density decision.
+    #[inline]
+    fn resolve_kernel(&self, kernel: SlicedKernel) -> SlicedKernel {
+        match kernel {
+            SlicedKernel::Auto if self.use_compressed => SlicedKernel::Compressed,
+            SlicedKernel::Auto => SlicedKernel::Sliced,
+            pinned => pinned,
+        }
+    }
+
+    /// True when `Auto` bulk runs ride the compressed kernel (decided
+    /// once at program time from measured include density).
+    pub fn uses_compressed_kernel(&self) -> bool {
+        self.use_compressed
+    }
+
+    /// The compressed derivation of the programmed model — its measured
+    /// `density`, `include_bytes()` and `avg_includes()` are the bench
+    /// and resource-model context values.
+    pub fn compressed_program(&self) -> &CompressedProgram {
+        &self.compressed
     }
 
     fn accumulate(&mut self, c: &CycleStats) {

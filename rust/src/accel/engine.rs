@@ -12,7 +12,7 @@
 //! "as fast as the hardware allows", the cycle model stays the
 //! hardware's.
 
-use super::core::{BatchResult, Core, CoreError};
+use super::core::{BatchResult, Core, CoreError, SlicedKernel};
 use super::multicore::{MultiBatchResult, MultiCore};
 use crate::isa;
 
@@ -136,6 +136,20 @@ pub const MULTICORE_CHUNK_BATCHES: usize = 256;
 /// §sliced), so the threshold is purely a host-speed policy.
 pub const SLICED_MIN_ROWS: usize = 256;
 
+/// Include-density ceiling below which [`SlicedKernel::Auto`] bulk runs
+/// pick the compressed include-list kernel over the dense 64-lane plane
+/// walk (§Compressed in EXPERIMENTS.md).  Density is MEASURED at
+/// derivation time (kept include entries over the underived literal
+/// space — see `isa::CompressedProgram::density`), so the decision is
+/// per-model, made once per (re)program, and free on the request path.
+/// At 5% the average clause touches a handful of planes, where the
+/// compressed kernel's fused single-include commits and early exits
+/// beat the dense walk's fill + AND + commit passes; denser programs
+/// stream planes better through the sliced walk.  Both kernels are
+/// byte-identical in every observable, so this is purely a host-speed
+/// policy — never a correctness or cycle-model decision.
+pub const COMPRESSED_MAX_DENSITY: f64 = 0.05;
+
 /// Rows per sliced pass: bounds the O(classes x rows) sums scratch the
 /// same way [`MULTICORE_CHUNK_BATCHES`] bounds retained batch results,
 /// and (being a multiple of 64) keeps every chunk boundary aligned to
@@ -152,7 +166,8 @@ pub fn classify_rows_core(
     rows: &[Vec<u8>],
 ) -> Result<(Vec<usize>, StreamStats), CoreError> {
     if rows.len() >= SLICED_MIN_ROWS {
-        classify_rows_core_sliced(core, rows)
+        let (preds, _margins, stats) = sliced_run(core, rows, false, SlicedKernel::Auto)?;
+        Ok((preds, stats))
     } else {
         classify_rows_core_soa(core, rows)
     }
@@ -198,7 +213,19 @@ pub fn classify_rows_core_sliced(
     core: &mut Core,
     rows: &[Vec<u8>],
 ) -> Result<(Vec<usize>, StreamStats), CoreError> {
-    let (preds, _margins, stats) = sliced_run(core, rows, false)?;
+    let (preds, _margins, stats) = sliced_run(core, rows, false, SlicedKernel::Sliced)?;
+    Ok((preds, stats))
+}
+
+/// The compressed include-list path, pinnable explicitly (the hotpath
+/// bench pins it against [`classify_rows_core_sliced`] for the sparse
+/// speedup ratio): same transpose and chunking, sparse gather-AND walk.
+/// Byte-identical results — the compressed derivation never prunes.
+pub fn classify_rows_core_compressed(
+    core: &mut Core,
+    rows: &[Vec<u8>],
+) -> Result<(Vec<usize>, StreamStats), CoreError> {
+    let (preds, _margins, stats) = sliced_run(core, rows, false, SlicedKernel::Compressed)?;
     Ok((preds, stats))
 }
 
@@ -215,13 +242,24 @@ struct SlicedView<'a> {
 }
 
 /// An engine the sliced bulk scheduler can drive chunk by chunk.
+/// `kernel` selects the 64-lane walk ([`SlicedKernel`]); `Auto`
+/// resolves per engine (per core on the multi-core engine) to the
+/// program-time density decision.
 trait SlicedEngine {
-    fn run_sliced_chunk(&mut self, chunk: &[Vec<u8>]) -> Result<SlicedView<'_>, CoreError>;
+    fn run_sliced_chunk(
+        &mut self,
+        chunk: &[Vec<u8>],
+        kernel: SlicedKernel,
+    ) -> Result<SlicedView<'_>, CoreError>;
 }
 
 impl SlicedEngine for Core {
-    fn run_sliced_chunk(&mut self, chunk: &[Vec<u8>]) -> Result<SlicedView<'_>, CoreError> {
-        let r = self.run_rows_sliced_ref(chunk)?;
+    fn run_sliced_chunk(
+        &mut self,
+        chunk: &[Vec<u8>],
+        kernel: SlicedKernel,
+    ) -> Result<SlicedView<'_>, CoreError> {
+        let r = self.run_rows_kernel_ref(chunk, kernel)?;
         Ok(SlicedView {
             sums: &r.class_sums,
             padded: r.padded_rows,
@@ -234,8 +272,12 @@ impl SlicedEngine for Core {
 }
 
 impl SlicedEngine for MultiCore {
-    fn run_sliced_chunk(&mut self, chunk: &[Vec<u8>]) -> Result<SlicedView<'_>, CoreError> {
-        let r = self.run_rows_sliced_ref(chunk)?;
+    fn run_sliced_chunk(
+        &mut self,
+        chunk: &[Vec<u8>],
+        kernel: SlicedKernel,
+    ) -> Result<SlicedView<'_>, CoreError> {
+        let r = self.run_rows_kernel_ref(chunk, kernel)?;
         Ok(SlicedView {
             sums: &r.class_sums,
             padded: r.padded_rows,
@@ -249,12 +291,13 @@ impl SlicedEngine for MultiCore {
 
 /// Shared body of every sliced bulk path (preds-only and margins-aware
 /// — the margin scan is the only difference): 64-row-aligned chunks
-/// through the engine's sliced kernel, preds/margins appended per
-/// chunk, StreamStats accumulated.
+/// through the engine's chosen 64-lane kernel, preds/margins appended
+/// per chunk, StreamStats accumulated.
 fn sliced_run<E: SlicedEngine>(
     engine: &mut E,
     rows: &[Vec<u8>],
     want_margins: bool,
+    kernel: SlicedKernel,
 ) -> Result<(Vec<usize>, Vec<i32>, StreamStats), CoreError> {
     if rows.is_empty() {
         return Ok((Vec::new(), Vec::new(), StreamStats::default()));
@@ -266,7 +309,7 @@ fn sliced_run<E: SlicedEngine>(
     let mut batches = 0u64;
     let mut cycles = 0u64;
     for chunk in rows.chunks(SLICED_CHUNK_ROWS) {
-        let v = engine.run_sliced_chunk(chunk)?;
+        let v = engine.run_sliced_chunk(chunk, kernel)?;
         extend_from_sliced(
             &mut preds,
             want_margins.then_some(&mut margins),
@@ -326,10 +369,21 @@ pub fn classify_rows_multicore(
     rows: &[Vec<u8>],
 ) -> Result<(Vec<usize>, StreamStats), CoreError> {
     if rows.len() >= SLICED_MIN_ROWS {
-        let (preds, _margins, stats) = sliced_run(mc, rows, false)?;
+        let (preds, _margins, stats) = sliced_run(mc, rows, false, SlicedKernel::Auto)?;
         return Ok((preds, stats));
     }
     classify_rows_multicore_soa(mc, rows)
+}
+
+/// The compressed include-list path on a multi-core engine, pinnable
+/// explicitly for benches — every class-partitioned core walks its
+/// include lists instead of dense planes.
+pub fn classify_rows_multicore_compressed(
+    mc: &mut MultiCore,
+    rows: &[Vec<u8>],
+) -> Result<(Vec<usize>, StreamStats), CoreError> {
+    let (preds, _margins, stats) = sliced_run(mc, rows, false, SlicedKernel::Compressed)?;
+    Ok((preds, stats))
 }
 
 /// The 32-lane multi-core bulk path: the stream is driven in
@@ -408,7 +462,7 @@ pub fn classify_rows_margins_core(
     rows: &[Vec<u8>],
 ) -> Result<(Vec<usize>, Vec<i32>, StreamStats), CoreError> {
     if rows.len() >= SLICED_MIN_ROWS {
-        return sliced_run(core, rows, true);
+        return sliced_run(core, rows, true, SlicedKernel::Auto);
     }
     classify_rows_margins_core_soa(core, rows)
 }
@@ -453,7 +507,7 @@ pub fn classify_rows_margins_multicore(
     rows: &[Vec<u8>],
 ) -> Result<(Vec<usize>, Vec<i32>, StreamStats), CoreError> {
     if rows.len() >= SLICED_MIN_ROWS {
-        return sliced_run(mc, rows, true);
+        return sliced_run(mc, rows, true, SlicedKernel::Auto);
     }
     classify_rows_margins_multicore_soa(mc, rows)
 }

@@ -23,6 +23,6 @@ pub mod memory;
 pub mod multicore;
 pub mod stream;
 
-pub use self::core::{AccelConfig, BatchResult, Core, CycleStats, PipelineMode};
+pub use self::core::{AccelConfig, BatchResult, Core, CycleStats, PipelineMode, SlicedKernel};
 pub use self::engine::StreamStats;
 pub use self::multicore::{MultiCore, ParallelMode};

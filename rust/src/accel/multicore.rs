@@ -9,7 +9,8 @@
 //! walk time.
 
 use super::core::{
-    argmax_lanes, argmax_rows, AccelConfig, BatchResult, Core, CoreError, SlicedResult,
+    argmax_lanes, argmax_rows, AccelConfig, BatchResult, Core, CoreError, SlicedKernel,
+    SlicedResult,
 };
 use crate::isa::{self, SlicedBatch};
 use crate::tm::model::TMModel;
@@ -329,6 +330,18 @@ impl MultiCore {
     /// failing core's error in core order, with the same
     /// threaded-siblings caveat.
     pub fn run_rows_sliced_ref(&mut self, rows: &[Vec<u8>]) -> Result<&MultiSlicedRun, CoreError> {
+        self.run_rows_kernel_ref(rows, SlicedKernel::Sliced)
+    }
+
+    /// [`Self::run_rows_sliced_ref`] with an explicit bulk-kernel pick.
+    /// `Auto` resolves PER CORE against each core's own derived include
+    /// density — the kernels are byte-identical, so a mixed fleet (some
+    /// cores compressed, some sliced) still merges exactly.
+    pub fn run_rows_kernel_ref(
+        &mut self,
+        rows: &[Vec<u8>],
+        kernel: SlicedKernel,
+    ) -> Result<&MultiSlicedRun, CoreError> {
         if self.assign.is_empty() {
             return Err(CoreError::NotProgrammed);
         }
@@ -338,7 +351,7 @@ impl MultiCore {
         let mut batch = std::mem::take(&mut self.sliced_batch);
         isa::pack_literals_sliced_into(rows, &mut batch);
         let batches = rows.len().div_ceil(32);
-        let run = self.run_sliced_cores(&batch, batches);
+        let run = self.run_sliced_cores(&batch, batches, kernel);
         self.sliced_batch = batch;
         run?;
 
@@ -374,10 +387,31 @@ impl MultiCore {
         Ok(r.preds[..n].iter().map(|&p| p as usize).collect())
     }
 
+    /// Bulk execution pinned to every core's compressed include-list
+    /// kernel (bench/diagnostic twin of [`Self::run_rows_sliced_ref`]).
+    pub fn run_rows_compressed_ref(
+        &mut self,
+        rows: &[Vec<u8>],
+    ) -> Result<&MultiSlicedRun, CoreError> {
+        self.run_rows_kernel_ref(rows, SlicedKernel::Compressed)
+    }
+
+    /// Convenience mirror of [`Self::run_rows`] on the compressed kernel.
+    pub fn run_rows_compressed(&mut self, rows: &[Vec<u8>]) -> Result<Vec<usize>, CoreError> {
+        let n = rows.len();
+        let r = self.run_rows_compressed_ref(rows)?;
+        Ok(r.preds[..n].iter().map(|&p| p as usize).collect())
+    }
+
     /// The fan-out half of the sliced run: every non-idle core executes
     /// the (broadcast) transposed batch over its class range, threaded
     /// per [`Self::parallel`] — byte-identical results either way.
-    fn run_sliced_cores(&mut self, batch: &SlicedBatch, batches: usize) -> Result<(), CoreError> {
+    fn run_sliced_cores(
+        &mut self,
+        batch: &SlicedBatch,
+        batches: usize,
+        kernel: SlicedKernel,
+    ) -> Result<(), CoreError> {
         if self.per_core_sliced.len() != self.assign.len() {
             self.per_core_sliced
                 .resize_with(self.assign.len(), SlicedResult::default);
@@ -397,7 +431,7 @@ impl MultiCore {
                         continue;
                     }
                     scope.spawn(move || {
-                        *slot = core.run_sliced_into(batch, out).err();
+                        *slot = core.run_kernel_into(batch, out, kernel).err();
                     });
                 }
             });
@@ -414,7 +448,7 @@ impl MultiCore {
                 if s == e {
                     continue;
                 }
-                core.run_sliced_into(batch, out)?;
+                core.run_kernel_into(batch, out, kernel)?;
             }
         }
         Ok(())

@@ -430,13 +430,20 @@ pub struct ServiceEstimator {
 
 impl ServiceEstimator {
     /// Fold one observed request service time into the EWMA.
+    ///
+    /// CAS loop, not load→store: with N workers finishing requests
+    /// concurrently, racing plain stores overwrite each other and the
+    /// estimate can stall on one worker's stale value under exactly the
+    /// load where deadline admission needs it.  `fetch_update` retries
+    /// against the freshest value, so every sample lands.
     pub fn observe(&self, service: Duration) {
         let sample = service.as_micros().min(u64::MAX as u128) as u64;
-        let old = self.est_us.load(Ordering::Acquire);
-        let new = if old == 0 { sample } else { old - old / 8 + sample / 8 };
-        // Plain store: a lost update under a race is just one skipped
-        // EWMA step; the estimator is advisory.
-        self.est_us.store(new.max(1), Ordering::Release);
+        let _ = self
+            .est_us
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |old| {
+                let new = if old == 0 { sample } else { old - old / 8 + sample / 8 };
+                Some(new.max(1))
+            });
     }
 
     /// Current estimate, `None` until the first observation.
@@ -730,6 +737,40 @@ mod tests {
         let wait = e.projected_wait(10, 2).unwrap();
         assert!(wait >= Duration::from_micros(4000));
         assert_eq!(e.projected_wait(0, 2).unwrap(), Duration::ZERO);
+    }
+
+    #[test]
+    fn estimator_concurrent_observes_are_never_lost() {
+        // Regression for the load→compute→store race: warm the EWMA on
+        // a low value, then hammer it from N threads with a much higher
+        // one.  Every sample pulls the estimate up by at least 1/8 of
+        // the remaining gap, so after THREADS x PER_THREAD folded
+        // samples the estimate must sit essentially at the new level;
+        // with racing plain stores, overwritten updates routinely leave
+        // it far below.  Single alpha=1/8 step from 100us toward
+        // 100_000us ≈ 12_587us — reaching >= 90_000us needs ~17
+        // *applied* samples, far fewer than the 1024 issued.
+        let e = std::sync::Arc::new(ServiceEstimator::default());
+        e.observe(Duration::from_micros(100));
+        assert_eq!(e.estimate().unwrap(), Duration::from_micros(100));
+        const THREADS: usize = 8;
+        const PER_THREAD: usize = 128;
+        std::thread::scope(|scope| {
+            for _ in 0..THREADS {
+                let e = std::sync::Arc::clone(&e);
+                scope.spawn(move || {
+                    for _ in 0..PER_THREAD {
+                        e.observe(Duration::from_micros(100_000));
+                    }
+                });
+            }
+        });
+        let settled = e.estimate().unwrap();
+        assert!(
+            settled >= Duration::from_micros(90_000),
+            "estimate stalled at {settled:?}: concurrent observes were lost"
+        );
+        assert!(settled <= Duration::from_micros(100_000));
     }
 
     #[test]

@@ -11,7 +11,9 @@
 use crate::config::TMShape;
 use crate::datasets::synth::Dataset;
 use crate::model_cost::energy::EnergyModel;
-use crate::model_cost::resources::{estimate, fitted_config, ResourceBudget, ResourceEstimate};
+use crate::model_cost::resources::{
+    compressed_model_bytes, estimate, fitted_config, ResourceBudget, ResourceEstimate,
+};
 use crate::tm::model::TMModel;
 use crate::tm::reference;
 
@@ -130,6 +132,9 @@ pub struct BudgetedTrial {
     /// ([`fitted_config`]).
     pub estimate: ResourceEstimate,
     pub watts: f64,
+    /// Compressed include-list size ([`compressed_model_bytes`]) — the
+    /// byte axis the budget's `max_model_bytes` is checked against.
+    pub model_bytes: u32,
     pub admitted: bool,
 }
 
@@ -164,7 +169,8 @@ pub fn budget_search(
         let cfg = fitted_config(&model);
         let est = estimate(&cfg);
         let watts = EnergyModel::for_config(&cfg).watts;
-        let admitted = budget.admits(&est, watts);
+        let model_bytes = compressed_model_bytes(&model);
+        let admitted = budget.admits_model(&est, watts, model_bytes);
         trials.push(BudgetedTrial {
             t: model.shape.t,
             s: model.shape.s,
@@ -173,6 +179,7 @@ pub fn budget_search(
             instructions,
             estimate: est,
             watts,
+            model_bytes,
             admitted,
         });
         if admitted
@@ -279,7 +286,34 @@ mod tests {
         }
         // The admitted flag matches a recomputed admission check.
         for t in &out.trials {
-            assert_eq!(t.admitted, budget.admits(&t.estimate, t.watts));
+            assert_eq!(t.admitted, budget.admits_model(&t.estimate, t.watts, t.model_bytes));
+        }
+    }
+
+    #[test]
+    fn budget_search_model_byte_axis_trades_accuracy_for_size() {
+        let shape = crate::TMShape::synthetic(16, 2, 10);
+        let (train, valid) = data();
+        let space = SearchSpace::around(&shape);
+        let open = budget_search(&shape, &train, &valid, &space, &ResourceBudget::unlimited());
+        // Cap at the median candidate's compressed size: some candidates
+        // must fall out, and the winner's include-list bytes must fit.
+        let mut sizes: Vec<u32> = open.trials.iter().map(|t| t.model_bytes).collect();
+        sizes.sort_unstable();
+        let cap = sizes[sizes.len() / 2];
+        let budget = ResourceBudget::unlimited().with_model_bytes(cap);
+        let out = budget_search(&shape, &train, &valid, &space, &budget);
+        assert!(out.trials.iter().any(|t| !t.admitted) || sizes.iter().all(|&s| s <= cap));
+        for t in &out.trials {
+            assert_eq!(t.admitted, t.model_bytes <= cap);
+            assert_eq!(t.model_bytes, t.instructions as u32 * 2);
+        }
+        if let Some(winner) = &out.winner {
+            assert!(compressed_model_bytes(winner) <= cap);
+            // The byte-capped winner can never beat the open winner.
+            let open_acc = open.trials[0].accuracy;
+            let capped_acc = reference::accuracy(winner, &valid.xs, &valid.ys);
+            assert!(capped_acc <= open_acc + 1e-12);
         }
     }
 

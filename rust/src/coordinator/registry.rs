@@ -2,11 +2,13 @@
 //! platform.
 //!
 //! A [`ModelRegistry`] owns every model a replica pool can serve, keyed
-//! by [`ModelId`].  Registration deduplicates by content hash — the
-//! FNV-1a-64 digest of the model's canonical `.rttm` v1 wire bytes
-//! ([`crate::tm::serialize::content_hash`]) — so registering the same
-//! trained model twice hands back the existing id instead of burning a
-//! replica partition on a duplicate.  Entries carry deployment
+//! by [`ModelId`].  Registration deduplicates by `(name, content hash)`
+//! — the FNV-1a-64 digest of the model's canonical `.rttm` v1 wire
+//! bytes ([`crate::tm::serialize::content_hash`]) scoped to the tenant
+//! name — so one tenant registering the same trained model twice hands
+//! back the existing id instead of burning a replica partition on a
+//! duplicate, while two tenants registering byte-identical bytes stay
+//! isolated under distinct ids.  Entries carry deployment
 //! metadata: a human-readable name, the content hash, and an optional
 //! per-model [`ResourceBudget`] (the frontier an autotuner scoped to
 //! this model must respect).
@@ -63,15 +65,23 @@ pub struct ModelEntry {
 }
 
 /// What [`ModelRegistry::register`] did.
-#[derive(Debug, Copy, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RegisterOutcome {
     pub id: ModelId,
-    /// True when an identical model (same content hash) was already
-    /// registered and `id` names that existing entry.
+    /// True when the SAME tenant (same name) had already registered an
+    /// identical model (same content hash) and `id` names that existing
+    /// entry.  Dedup never spans names: two tenants registering
+    /// byte-identical bytes get distinct ids, so a retrain/promote on
+    /// one can never rewrite the other's serving model.
     pub deduped: bool,
+    /// The entry's registered name.  On a dedup hit this is the
+    /// existing entry's name, so callers (`spawn_pool_sharded`,
+    /// `rttm serve --models`) can surface the true duplicate to the
+    /// operator instead of silently aliasing.
+    pub name: String,
 }
 
-/// Id-ordered model table with content-hash dedup.
+/// Id-ordered model table with per-name content-hash dedup.
 #[derive(Debug, Default)]
 pub struct ModelRegistry {
     entries: BTreeMap<ModelId, ModelEntry>,
@@ -85,11 +95,19 @@ impl ModelRegistry {
     }
 
     /// Register `model` under a fresh id, or hand back the existing id
-    /// when an entry with the same content hash is already present.
+    /// when THIS name already registered the same content.  The dedup
+    /// key is `(name, content_hash)`: hashing alone would alias two
+    /// tenants that happen to register byte-identical models onto one
+    /// id, merging their budgets/counters and letting a retrain swap on
+    /// one tenant silently mutate the other's serving model.
     pub fn register(&mut self, name: &str, model: Arc<TMModel>) -> RegisterOutcome {
         let hash = content_hash(&model);
-        if let Some(e) = self.entries.values().find(|e| e.content_hash == hash) {
-            return RegisterOutcome { id: e.id, deduped: true };
+        if let Some(e) = self
+            .entries
+            .values()
+            .find(|e| e.content_hash == hash && e.name == name)
+        {
+            return RegisterOutcome { id: e.id, deduped: true, name: e.name.clone() };
         }
         let id = ModelId(self.next);
         self.next += 1;
@@ -103,7 +121,7 @@ impl ModelRegistry {
                 budget: None,
             },
         );
-        RegisterOutcome { id, deduped: false }
+        RegisterOutcome { id, deduped: false, name: name.to_string() }
     }
 
     /// Upsert by id — no dedup.  This is the primitive behind scoped
@@ -209,15 +227,39 @@ mod tests {
     }
 
     #[test]
-    fn register_dedups_identical_content() {
+    fn register_dedups_identical_content_within_one_name() {
         let mut reg = ModelRegistry::new();
         let first = reg.register("orig", model(3));
-        let dup = reg.register("copy", model(3));
+        let dup = reg.register("orig", model(3));
         assert_eq!(dup.id, first.id);
         assert!(dup.deduped);
+        assert_eq!(dup.name, "orig", "dedup surfaces the existing entry's name");
         assert_eq!(reg.len(), 1);
-        // The original registration's name wins.
         assert_eq!(reg.name_of(first.id), Some("orig"));
+    }
+
+    #[test]
+    fn register_never_dedups_across_tenant_names() {
+        // The PR-7 aliasing bug: hash-only dedup handed tenant B
+        // tenant A's id for byte-identical bytes, so installs on A
+        // rewrote B's serving model.  `(name, hash)` keeps them apart.
+        let mut reg = ModelRegistry::new();
+        let a = reg.register("tenant-a", model(3));
+        let b = reg.register("tenant-b", model(3));
+        assert_ne!(a.id, b.id, "identical bytes under two names must not alias");
+        assert!(!b.deduped);
+        assert_eq!((a.name.as_str(), b.name.as_str()), ("tenant-a", "tenant-b"));
+        assert_eq!(reg.len(), 2);
+        // An install (retrain swap) on A leaves B's entry untouched.
+        let b_hash = reg.get(b.id).unwrap().content_hash;
+        assert!(!reg.install(a.id, "tenant-a", model(4)));
+        assert_eq!(reg.get(b.id).unwrap().content_hash, b_hash);
+        assert_ne!(reg.get(a.id).unwrap().content_hash, b_hash);
+        // ... and same-name dedup still works afterwards: A's content
+        // changed, so re-registering A's ORIGINAL bytes is a fresh id,
+        // while B's bytes under B's name dedup onto B.
+        assert!(reg.register("tenant-b", model(3)).deduped);
+        assert!(!reg.register("tenant-a", model(3)).deduped);
     }
 
     #[test]

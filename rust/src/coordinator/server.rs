@@ -14,8 +14,9 @@
 //!   Once `program` returns, no later inference can observe an older
 //!   model, and all replicas report the same version.
 //! * **Multi-model routing.**  The pool embeds a [`ModelRegistry`];
-//!   [`ServiceHandle::register_model`] adds tenants (content-hash
-//!   deduplicated) and [`ServiceHandle::with_model`] scopes a handle so
+//!   [`ServiceHandle::register_model`] adds tenants (deduplicated on
+//!   `(name, content hash)` — never across tenant names) and
+//!   [`ServiceHandle::with_model`] scopes a handle so
 //!   every RPC on it carries that [`ModelId`] route.  Replicas hold a
 //!   per-replica model *affinity*; a [`ShardingPolicy`] decides whether
 //!   affinity is fixed (`Dedicated`) or traffic-driven (`TimeShared`,
@@ -69,7 +70,7 @@ use super::admission::{
     FaultPlan, ModelCounters, ModelStats, PoolConfig, Priority, ServiceEstimator, ShedPolicy,
     PRIORITY_COUNT,
 };
-use super::registry::{ModelEntry, ModelId, ModelRegistry};
+use super::registry::{ModelEntry, ModelId, ModelRegistry, RegisterOutcome};
 use super::service::{EngineSpec, InferenceService, Metrics};
 use crate::accel::core::CoreError;
 use crate::model_cost::resources::ResourceBudget;
@@ -694,13 +695,15 @@ impl ServiceHandle {
         self.shared.sharding
     }
 
-    /// Register a model under a deployment `name`: content-hash
-    /// deduplicated (re-registering an identical model returns the
-    /// existing id without touching replicas), otherwise the replica
-    /// affinity table is rebalanced across all registered models
-    /// behind one version fence.
+    /// Register a model under a deployment `name`: deduplicated on
+    /// `(name, content hash)` — the SAME tenant re-registering an
+    /// identical model returns the existing id without touching
+    /// replicas, while identical bytes under a different name are a
+    /// fresh, isolated tenant — otherwise the replica affinity table is
+    /// rebalanced across all registered models behind one version
+    /// fence.
     pub fn register_model(&self, name: &str, model: TMModel) -> Result<ModelId, ServeError> {
-        self.register_model_arc(name, Arc::new(model))
+        Ok(self.register_model_outcome(name, Arc::new(model))?.id)
     }
 
     /// [`Self::register_model`] for an already-shared model.
@@ -709,23 +712,35 @@ impl ServiceHandle {
         name: &str,
         model: Arc<TMModel>,
     ) -> Result<ModelId, ServeError> {
+        Ok(self.register_model_outcome(name, model)?.id)
+    }
+
+    /// [`Self::register_model_arc`] returning the full
+    /// [`RegisterOutcome`], so multi-tenant front-ends
+    /// (`spawn_pool_sharded` setup, `rttm serve --models`) can surface
+    /// true duplicates — same name AND same bytes — to the operator.
+    pub fn register_model_outcome(
+        &self,
+        name: &str,
+        model: Arc<TMModel>,
+    ) -> Result<RegisterOutcome, ServeError> {
         if self.shared.shutdown.load(Ordering::Acquire) {
             return Err(ServeError::ShutDown);
         }
-        let (target, id) = {
+        let (target, outcome) = {
             let mut cell = self.shared.cell.lock().unwrap();
             let outcome = cell.registry.register(name, model);
             if outcome.deduped {
-                return Ok(outcome.id);
+                return Ok(outcome);
             }
             rebalance_locked(&self.shared, &mut cell);
             cell.version += 1;
             self.shared.version.store(cell.version, Ordering::Release);
-            (cell.version, outcome.id)
+            (cell.version, outcome)
         };
-        resolve_model_counters(&self.shared, id);
+        resolve_model_counters(&self.shared, outcome.id);
         self.fence_wait(target)?;
-        Ok(id)
+        Ok(outcome)
     }
 
     /// Retire a model: remove it from the registry, dismiss its canary
@@ -3187,9 +3202,19 @@ mod tests {
         let b = h.register_model("tenant-b", model_b).unwrap();
         assert_eq!(a, ModelId(1));
         assert_eq!(b, ModelId(2));
-        // Content-hash dedup: re-registering identical content hands
-        // back the existing id.
-        assert_eq!(h.register_model("tenant-a-copy", model_a).unwrap(), a);
+        // Dedup is scoped to the tenant name: the SAME name with
+        // identical content hands back the existing id, while identical
+        // content under a NEW name is a fresh, isolated tenant.
+        let same = h
+            .register_model_outcome("tenant-a", Arc::new(model_a.clone()))
+            .unwrap();
+        assert_eq!((same.id, same.deduped, same.name.as_str()), (a, true, "tenant-a"));
+        let copy = h
+            .register_model_outcome("tenant-a-copy", Arc::new(model_a))
+            .unwrap();
+        assert_ne!(copy.id, a, "identical bytes under a new name must not alias");
+        assert!(!copy.deduped);
+        h.retire_model(copy.id).unwrap();
 
         let ha = h.with_model(a);
         let hb = h.with_model(b);

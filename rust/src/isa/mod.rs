@@ -693,6 +693,279 @@ pub fn derive_sliced(prog: &SoaProgram, classes: usize) -> SlicedProgram {
     out
 }
 
+/// One clause of a [`CompressedProgram`]: include-list entries
+/// `start..end` of the flat `lits` array AND together; the 64-row
+/// output word commits `pol` into `class`.
+#[derive(Debug, Copy, Clone, PartialEq, Eq)]
+pub struct CompressedClause {
+    pub start: u32,
+    pub end: u32,
+    pub class: u16,
+    pub pol: i8,
+}
+
+/// The ETHEREAL-style compressed form of a clause program: per-clause
+/// *include lists* instead of per-op plane masks.  Each entry is a
+/// 16-bit word `feature << 1 | complement` — 2 bytes per included
+/// literal versus the sliced form's 12 (`u32` feat + `u64` mask), which
+/// is both the on-device BRAM footprint the resource model charges
+/// ([`crate::model_cost::resources::compressed_model_bytes`]) and the
+/// reason the sparse kernel wins: on include-sparse trained models a
+/// clause touches one or two planes, and the fused gather below turns
+/// those into a single streaming pass instead of the dense walk's
+/// fill + AND + commit triple pass.
+///
+/// Degenerate clauses resolve exactly like [`SlicedProgram`]:
+/// exclude-only clauses fold into `base_sums`, tautology killers drop.
+/// Optional *weak-clause pruning* ([`derive_compressed_pruned_into`])
+/// additionally drops clauses whose include list is longer than a cap —
+/// those are the most specific, rarest-firing clauses, so dropping them
+/// moves class sums the least per byte saved.  Pruning CHANGES class
+/// sums, so it is strictly opt-in: nothing on the equivalence-gated
+/// auto path ever selects it.
+#[derive(Debug, Clone, Default)]
+pub struct CompressedProgram {
+    /// Flat include lists: `feature << 1 | complement` per entry.
+    /// `MAX_LITERALS` bounds feature addresses to 11 bits, so the
+    /// packed entry always fits 16.
+    pub lits: Vec<u16>,
+    pub clauses: Vec<CompressedClause>,
+    /// Per-class constant contribution of the exclude-only clauses
+    /// resolved at derivation (see [`SlicedProgram::base_sums`]).
+    pub base_sums: Vec<i32>,
+    /// Clause commits of the UNDERIVED program minus pruned clauses:
+    /// with pruning off this equals the underived clause count, so
+    /// cycle accounting keeps parity with the 32-lane walk.
+    pub total_clauses: u64,
+    pub classes: usize,
+    /// Copied from the source [`SoaProgram`] (the underived bound) for
+    /// identical batch bounds errors — see [`SlicedProgram::max_feat`].
+    pub max_feat: Option<u32>,
+    /// Measured include density at derivation: kept include entries
+    /// over the underived program's full literal space
+    /// (`clauses * 2 * (max_feat + 1)`).  The kernel-selection
+    /// threshold ([`crate::accel::engine::COMPRESSED_MAX_DENSITY`])
+    /// compares against this.
+    pub density: f64,
+    /// Clauses dropped by opt-in pruning (always 0 on the
+    /// equivalence-gated path).
+    pub pruned: u64,
+}
+
+impl CompressedProgram {
+    pub fn clause_count(&self) -> usize {
+        self.clauses.len()
+    }
+
+    /// Include-list bytes — the compressed model's storage cost (what
+    /// `ResourceBudget.max_model_bytes` gates), NOT the dense plane
+    /// bytes.
+    pub fn include_bytes(&self) -> usize {
+        self.lits.len() * std::mem::size_of::<u16>()
+    }
+
+    /// Mean include-list length over kept clauses (0 for an empty
+    /// program) — the bench's sparsity context key.
+    pub fn avg_includes(&self) -> f64 {
+        if self.clauses.is_empty() {
+            0.0
+        } else {
+            self.lits.len() as f64 / self.clauses.len() as f64
+        }
+    }
+
+    /// Drop the program, keeping buffers for the next derivation.
+    pub fn clear(&mut self) {
+        self.lits.clear();
+        self.clauses.clear();
+        self.base_sums.clear();
+        self.total_clauses = 0;
+        self.classes = 0;
+        self.max_feat = None;
+        self.density = 0.0;
+        self.pruned = 0;
+    }
+
+    #[inline]
+    fn unpack(lit: u16) -> (usize, u64) {
+        ((lit >> 1) as usize, if lit & 1 == 1 { u64::MAX } else { 0 })
+    }
+
+    /// Evaluate every clause over `batch` with the sparse gather-AND
+    /// kernel, accumulating per-row class sums into `sums` — same
+    /// contract as [`SlicedProgram::execute_into`] (class-major
+    /// caller-zeroed sums, reusable `cur` accumulator, returns the
+    /// modeled commit count, caller bounds-checks `max_feat`).
+    ///
+    /// Three sparsity levers over the dense sliced walk, all
+    /// semantics-preserving:
+    /// * a 1-include clause commits straight off `plane ^ mask` —
+    ///   one fused pass, no accumulator traffic (the common case on
+    ///   trained sparse models and the source of the >=2x headroom);
+    /// * longer clauses seed `cur` from their first literal instead of
+    ///   `fill(u64::MAX)` + AND;
+    /// * a clause whose accumulator goes all-zero stops reading planes
+    ///   — a zero word commits nothing, so skipping the rest of the
+    ///   include list (and the commit scan) is exact.
+    pub fn execute_into(&self, batch: &SlicedBatch, sums: &mut [i32], cur: &mut Vec<u64>) -> u64 {
+        let slices = batch.slices;
+        let padded = batch.padded_rows();
+        debug_assert_eq!(sums.len(), self.classes * padded);
+        for (class, &base) in self.base_sums.iter().enumerate() {
+            if base != 0 {
+                for v in &mut sums[class * padded..(class + 1) * padded] {
+                    *v += base;
+                }
+            }
+        }
+        cur.clear();
+        cur.resize(slices, 0);
+        for clause in &self.clauses {
+            let (s, e) = (clause.start as usize, clause.end as usize);
+            let row0 = clause.class as usize * padded;
+            let pol = clause.pol as i32;
+            let lits = &self.lits[s..e];
+            let (f0, m0) = Self::unpack(lits[0]);
+            let plane0 = &batch.planes[f0 * slices..(f0 + 1) * slices];
+            if lits.len() == 1 {
+                for (slice, &p) in plane0.iter().enumerate() {
+                    let mut w = p ^ m0;
+                    let base = row0 + slice * SLICE_LANES;
+                    while w != 0 {
+                        let b = w.trailing_zeros() as usize;
+                        sums[base + b] += pol;
+                        w &= w - 1;
+                    }
+                }
+                continue;
+            }
+            let mut any = 0u64;
+            for (c, &p) in cur.iter_mut().zip(plane0) {
+                *c = p ^ m0;
+                any |= *c;
+            }
+            for &lit in &lits[1..] {
+                if any == 0 {
+                    break;
+                }
+                let (f, m) = Self::unpack(lit);
+                let plane = &batch.planes[f * slices..(f + 1) * slices];
+                any = 0;
+                for (c, &p) in cur.iter_mut().zip(plane) {
+                    *c &= p ^ m;
+                    any |= *c;
+                }
+            }
+            if any == 0 {
+                continue;
+            }
+            for (slice, &word) in cur.iter().enumerate() {
+                let mut w = word;
+                let base = row0 + slice * SLICE_LANES;
+                while w != 0 {
+                    let b = w.trailing_zeros() as usize;
+                    sums[base + b] += pol;
+                    w &= w - 1;
+                }
+            }
+        }
+        self.total_clauses
+    }
+}
+
+/// Derive the compressed include-list form from a predecoded
+/// [`SoaProgram`], reusing `out`'s buffers — pruning OFF, so the result
+/// is byte-identical to the SoA and sliced walks (the equivalence-gated
+/// path).
+pub fn derive_compressed_into(prog: &SoaProgram, classes: usize, out: &mut CompressedProgram) {
+    derive_compressed_opts_into(prog, classes, None, out);
+}
+
+/// [`derive_compressed_into`] with weak-clause pruning: clauses with
+/// MORE than `max_includes` include entries are dropped entirely.
+/// Pruned clauses change class sums (and the modeled commit count), so
+/// this derivation must never feed the equivalence-gated auto path —
+/// callers opt in explicitly and own the accuracy consequences
+/// (EXPERIMENTS.md §Compressed).
+pub fn derive_compressed_pruned_into(
+    prog: &SoaProgram,
+    classes: usize,
+    max_includes: usize,
+    out: &mut CompressedProgram,
+) {
+    derive_compressed_opts_into(prog, classes, Some(max_includes), out);
+}
+
+fn derive_compressed_opts_into(
+    prog: &SoaProgram,
+    classes: usize,
+    prune_over: Option<usize>,
+    out: &mut CompressedProgram,
+) {
+    out.clear();
+    out.classes = classes;
+    out.base_sums.resize(classes, 0);
+    out.max_feat = prog.max_feat;
+    out.lits.reserve(prog.feats.len());
+    // Commits the compressed walk still models: every underived clause
+    // except pruned ones (resolved clauses keep their commit cycle,
+    // exactly like `derive_sliced_into`).
+    let mut committed = 0u64;
+    let mut seen: std::collections::HashMap<u32, u8> = std::collections::HashMap::new();
+    for seg in &prog.clauses {
+        let (s, e) = (seg.start as usize, seg.end as usize);
+        if s == e {
+            out.base_sums[seg.class as usize] += seg.pol as i32;
+            committed += 1;
+            continue;
+        }
+        if let Some(cap) = prune_over {
+            if e - s > cap {
+                out.pruned += 1;
+                continue;
+            }
+        }
+        committed += 1;
+        seen.clear();
+        let mut dead = false;
+        for (&f, &m) in prog.feats[s..e].iter().zip(&prog.masks[s..e]) {
+            let bit = if m == 0 { 1u8 } else { 2u8 };
+            let entry = seen.entry(f).or_insert(0);
+            *entry |= bit;
+            if *entry == 3 {
+                dead = true;
+                break;
+            }
+        }
+        if dead {
+            continue;
+        }
+        let start = out.lits.len() as u32;
+        for (&f, &m) in prog.feats[s..e].iter().zip(&prog.masks[s..e]) {
+            debug_assert!(f < (MAX_LITERALS as u32) / 2, "feature address exceeds 11 bits");
+            out.lits.push(((f as u16) << 1) | u16::from(m != 0));
+        }
+        out.clauses.push(CompressedClause {
+            start,
+            end: out.lits.len() as u32,
+            class: seg.class,
+            pol: seg.pol,
+        });
+    }
+    out.total_clauses = committed;
+    let lit_space = prog.clauses.len() as f64
+        * 2.0
+        * prog.max_feat.map_or(0.0, |f| (f + 1) as f64);
+    out.density = if lit_space > 0.0 { out.lits.len() as f64 / lit_space } else { 0.0 };
+}
+
+/// Derive into a fresh [`CompressedProgram`] (pruning off).
+pub fn derive_compressed(prog: &SoaProgram, classes: usize) -> CompressedProgram {
+    let mut out = CompressedProgram::default();
+    derive_compressed_into(prog, classes, &mut out);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1030,5 +1303,173 @@ mod tests {
         assert_eq!(sliced.clause_count(), 0);
         assert_eq!(sliced.total_clauses, 1);
         assert_eq!(sliced.base_sums, vec![0]);
+    }
+
+    #[test]
+    fn compressed_walk_matches_sliced_walk_on_32_rows() {
+        // Same program and rows as `sliced_walk_matches_packed_walk…`:
+        // the sparse gather kernel must agree bit lane for bit lane,
+        // including its 1-include fused fast path (clauses here have
+        // both 1- and 2-entry include lists).
+        let instrs = vec![
+            Instr::new(false, false, false, 0, false),
+            Instr::new(false, false, false, 3, true),
+            Instr::new(true, true, false, 2, false),
+            Instr::new(false, false, true, 1, true),
+        ];
+        let packed = vec![0b1010u32, 0b0110u32];
+        let reference = decode_infer_packed(&instrs, &packed, 2).unwrap();
+
+        let prog = predecode(&instrs, 2, MAX_LITERALS).unwrap();
+        let comp = derive_compressed(&prog, 2);
+        assert_eq!(comp.clause_count(), 3);
+        assert_eq!(comp.total_clauses, 3);
+        assert_eq!(comp.pruned, 0);
+        assert_eq!(comp.max_feat, prog.max_feat);
+        // lits pack feature<<1 | complement, flat across clauses.
+        assert_eq!(comp.lits, vec![0 << 1, (1 << 1) | 1, 1 << 1, (0 << 1) | 1]);
+        assert_eq!(comp.include_bytes(), 8);
+        assert!((comp.avg_includes() - 4.0 / 3.0).abs() < 1e-12);
+        // Density: 4 kept entries over 3 clauses * 2 * (max_feat+1).
+        assert!((comp.density - 4.0 / 12.0).abs() < 1e-12);
+
+        let rows: Vec<Vec<u8>> = (0..32)
+            .map(|b| packed.iter().map(|&w| (w >> b & 1) as u8).collect())
+            .collect();
+        let batch = pack_literals_sliced(&rows);
+        let mut sums = vec![0i32; 2 * batch.padded_rows()];
+        let mut cur = Vec::new();
+        assert_eq!(comp.execute_into(&batch, &mut sums, &mut cur), 3);
+        for class in 0..2 {
+            for b in 0..32 {
+                assert_eq!(
+                    sums[class * batch.padded_rows() + b],
+                    reference[class][b],
+                    "class {class} lane {b}"
+                );
+            }
+        }
+        // Padding-lane parity with the sliced walk (!f0 fires on the
+        // all-zero padding rows).
+        assert_eq!(sums[batch.padded_rows() + 63], 1);
+    }
+
+    #[test]
+    fn compressed_derivation_resolves_degenerates_like_sliced() {
+        // Killer pair drops (but keeps its commit cycle); exclude-only
+        // folds into base_sums — identical to derive_sliced.
+        let prog = SoaProgram {
+            feats: vec![0, 0, 0],
+            masks: vec![0, 0, u32::MAX],
+            clauses: vec![
+                ClauseSeg { start: 0, end: 0, class: 0, pol: -1 }, // exclude-only
+                ClauseSeg { start: 0, end: 1, class: 1, pol: 1 },  // f0
+                ClauseSeg { start: 1, end: 3, class: 1, pol: 1 },  // f0 AND !f0
+            ],
+            max_feat: Some(0),
+        };
+        let comp = derive_compressed(&prog, 2);
+        let sliced = derive_sliced(&prog, 2);
+        assert_eq!(comp.clause_count(), 1);
+        assert_eq!(comp.total_clauses, 3);
+        assert_eq!(comp.base_sums, sliced.base_sums);
+        assert_eq!(comp.base_sums, vec![-1, 0]);
+
+        let rows = vec![vec![1u8], vec![0u8]];
+        let batch = pack_literals_sliced(&rows);
+        let padded = batch.padded_rows();
+        let mut comp_sums = vec![0i32; 2 * padded];
+        let mut sliced_sums = vec![0i32; 2 * padded];
+        assert_eq!(
+            comp.execute_into(&batch, &mut comp_sums, &mut Vec::new()),
+            sliced.execute_into(&batch, &mut sliced_sums, &mut Vec::new())
+        );
+        assert_eq!(comp_sums, sliced_sums);
+    }
+
+    #[test]
+    fn compressed_early_exit_never_changes_sums() {
+        // A 3-include clause that dies on its first literal for every
+        // row: the early-exit must skip the rest without touching sums,
+        // exactly as the dense AND would produce an all-zero word.
+        let prog = SoaProgram {
+            feats: vec![0, 1, 2, 0],
+            masks: vec![0, 0, 0, 0],
+            clauses: vec![
+                ClauseSeg { start: 0, end: 3, class: 0, pol: 1 }, // f0 AND f1 AND f2
+                ClauseSeg { start: 3, end: 4, class: 0, pol: -1 }, // f0
+            ],
+            max_feat: Some(2),
+        };
+        let comp = derive_compressed(&prog, 1);
+        let sliced = derive_sliced(&prog, 1);
+        // Every row has f0 = 0, so clause 0's seed word is zero.
+        let rows = vec![vec![0u8, 1, 1]; 70];
+        let batch = pack_literals_sliced(&rows);
+        let padded = batch.padded_rows();
+        let mut comp_sums = vec![0i32; padded];
+        let mut sliced_sums = vec![0i32; padded];
+        comp.execute_into(&batch, &mut comp_sums, &mut Vec::new());
+        sliced.execute_into(&batch, &mut sliced_sums, &mut Vec::new());
+        assert_eq!(comp_sums, sliced_sums);
+        assert!(comp_sums.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn compressed_pruning_is_opt_in_and_counted() {
+        // Pruning drops clauses with MORE than max_includes entries;
+        // the modeled commit count shrinks with them, and the pruned
+        // counter reports exactly what was lost.  The unpruned
+        // derivation of the same program keeps everything.
+        let prog = SoaProgram {
+            feats: vec![0, 0, 1, 2],
+            masks: vec![0, 0, 0, 0],
+            clauses: vec![
+                ClauseSeg { start: 0, end: 1, class: 0, pol: 1 },  // f0 (1 include)
+                ClauseSeg { start: 1, end: 4, class: 0, pol: -1 }, // f0 AND f1 AND f2
+            ],
+            max_feat: Some(2),
+        };
+        let mut pruned = CompressedProgram::default();
+        derive_compressed_pruned_into(&prog, 1, 2, &mut pruned);
+        assert_eq!(pruned.clause_count(), 1);
+        assert_eq!(pruned.pruned, 1);
+        assert_eq!(pruned.total_clauses, 1, "pruned clause loses its commit cycle");
+
+        let full = derive_compressed(&prog, 1);
+        assert_eq!(full.clause_count(), 2);
+        assert_eq!(full.pruned, 0);
+        assert_eq!(full.total_clauses, 2);
+
+        // On an all-ones row the pruned program diverges (+1 vs 0) —
+        // the reason pruning must never ride the equivalence path.
+        let batch = pack_literals_sliced(&[vec![1u8, 1, 1]]);
+        let padded = batch.padded_rows();
+        let (mut ps, mut fs) = (vec![0i32; padded], vec![0i32; padded]);
+        pruned.execute_into(&batch, &mut ps, &mut Vec::new());
+        full.execute_into(&batch, &mut fs, &mut Vec::new());
+        assert_eq!(ps[0], 1);
+        assert_eq!(fs[0], 0);
+    }
+
+    #[test]
+    fn compressed_derivation_reuses_buffers() {
+        let instrs = vec![Instr::new(false, false, false, 0, false)];
+        let prog = predecode(&instrs, 1, 8).unwrap();
+        let mut comp = derive_compressed(&prog, 1);
+        assert_eq!(comp.clause_count(), 1);
+        let killer = vec![
+            Instr::new(false, false, false, 0, false),
+            Instr::new(false, false, false, 1, true),
+        ];
+        let prog2 = predecode(&killer, 1, 8).unwrap();
+        derive_compressed_into(&prog2, 1, &mut comp);
+        assert_eq!(comp.clause_count(), 0);
+        assert_eq!(comp.total_clauses, 1);
+        assert_eq!(comp.base_sums, vec![0]);
+        assert_eq!(comp.include_bytes(), 0);
+        comp.clear();
+        assert_eq!(comp.classes, 0);
+        assert_eq!(comp.density, 0.0);
     }
 }

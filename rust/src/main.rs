@@ -442,8 +442,18 @@ fn cmd_serve_multi(opts: &Opts) -> anyhow::Result<()> {
             )
         })?;
         let rows = w.dataset(32 * per_model, 11).xs;
-        let id = handle.register_model(&name, model)?;
-        let h = handle.with_model(id);
+        let outcome = handle.register_model_outcome(&name, std::sync::Arc::new(model))?;
+        if outcome.deduped {
+            // (name, hash) dedup: this is a TRUE duplicate — the same
+            // tenant listed twice with identical bytes — not two
+            // tenants sharing bytes (those get distinct ids).
+            eprintln!(
+                "warning: model '{name}' duplicates already-registered '{}' ({}); \
+                 serving the existing registration",
+                outcome.name, outcome.id
+            );
+        }
+        let h = handle.with_model(outcome.id);
         clients.push(std::thread::spawn(move || -> anyhow::Result<u64> {
             let mut refused = 0u64;
             for chunk in rows.chunks(32) {

@@ -169,6 +169,17 @@ pub fn provisioned_config(model: &crate::tm::model::TMModel, headroom: usize) ->
     )
 }
 
+/// Bytes of the ETHEREAL-style compressed include-list form of `model`
+/// ([`crate::isa::CompressedProgram`]): one u16 entry
+/// (`feature << 1 | complement`) per include, i.e. per Include
+/// instruction of the programming stream.  This is the BRAM footprint a
+/// compressed deployment actually stores — include lists, not dense
+/// literal planes — and the byte axis [`ResourceBudget::admits_model`]
+/// trades accuracy against.
+pub fn compressed_model_bytes(model: &crate::tm::model::TMModel) -> u32 {
+    (crate::isa::instruction_count(model) * std::mem::size_of::<u16>()) as u32
+}
+
 /// A resource frontier for runtime model selection: the autotuner only
 /// installs models whose fitted deployment ([`fitted_config`] →
 /// [`estimate`] + [`crate::model_cost::energy::EnergyModel`]) stays
@@ -179,6 +190,11 @@ pub struct ResourceBudget {
     pub max_brams: Option<u32>,
     /// Average-power ceiling in watts.
     pub max_watts: Option<f64>,
+    /// Ceiling on the COMPRESSED model size in bytes
+    /// ([`compressed_model_bytes`]) — the include-list storage a sparse
+    /// deployment keeps resident, independent of the synthesized memory
+    /// depths the LUT/BRAM axes already price.
+    pub max_model_bytes: Option<u32>,
 }
 
 impl ResourceBudget {
@@ -202,11 +218,24 @@ impl ResourceBudget {
         self
     }
 
+    pub fn with_model_bytes(mut self, v: u32) -> Self {
+        self.max_model_bytes = Some(v);
+        self
+    }
+
     /// True when the estimated deployment fits every configured axis.
     pub fn admits(&self, est: &ResourceEstimate, watts: f64) -> bool {
         self.max_luts.map(|m| est.luts <= m).unwrap_or(true)
             && self.max_brams.map(|m| est.brams <= m).unwrap_or(true)
             && self.max_watts.map(|m| watts <= m).unwrap_or(true)
+    }
+
+    /// [`Self::admits`] plus the compressed-model-byte axis: the fitted
+    /// deployment must fit AND the candidate's include-list bytes
+    /// ([`compressed_model_bytes`]) must stay under `max_model_bytes`.
+    pub fn admits_model(&self, est: &ResourceEstimate, watts: f64, model_bytes: u32) -> bool {
+        self.admits(est, watts)
+            && self.max_model_bytes.map(|m| model_bytes <= m).unwrap_or(true)
     }
 }
 
@@ -304,6 +333,32 @@ mod tests {
         // headroom 0 is clamped to 1.
         assert_eq!(provisioned_config(&m, 0).instr_depth, 8192);
         assert_eq!(p1.name, "base");
+    }
+
+    #[test]
+    fn model_byte_axis_gates_admission() {
+        let est = estimate(&AccelConfig::base());
+        let watts = 0.3;
+        let mut m = crate::tm::model::TMModel::empty(crate::TMShape::synthetic(8, 2, 4));
+        m.set_include(0, 0, 0, true);
+        m.set_include(1, 1, 3, true);
+        // Two includes → 2 instructions → 4 bytes of u16 include entries.
+        let bytes = compressed_model_bytes(&m);
+        assert_eq!(bytes, 4);
+        assert!(ResourceBudget::unlimited().admits_model(&est, watts, bytes));
+        assert!(ResourceBudget::unlimited()
+            .with_model_bytes(4)
+            .admits_model(&est, watts, bytes));
+        assert!(!ResourceBudget::unlimited()
+            .with_model_bytes(3)
+            .admits_model(&est, watts, bytes));
+        // The byte axis composes with the existing axes.
+        assert!(!ResourceBudget::unlimited()
+            .with_luts(10)
+            .with_model_bytes(1 << 20)
+            .admits_model(&est, watts, bytes));
+        // Plain `admits` is unchanged by the new field.
+        assert!(ResourceBudget::unlimited().with_model_bytes(1).admits(&est, watts));
     }
 
     #[test]

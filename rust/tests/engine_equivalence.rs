@@ -381,6 +381,212 @@ fn sliced_multicore_matches_sliced_single_core_over_ragged_row_counts() {
     }
 }
 
+// ---------------------------------------------------------------------
+// §compressed — the sparse include-list gather kernel (pruning off)
+// must be byte-identical to BOTH the 32-lane SoA walk and the dense
+// 64-lane sliced kernel: preds, per-row class sums, margins AND the
+// simulated cycle model, on random SPARSE and DENSE models (tautology
+// killers and exclude-only clauses included) over ragged row counts.
+// Auto kernel selection is density-driven and must never change a byte.
+// ---------------------------------------------------------------------
+
+#[test]
+fn compressed_kernel_matches_soa_and_sliced_over_ragged_row_counts() {
+    for seed in 0..12u64 {
+        let mut rng = XorShift64Star::new(90_000 + seed);
+        let shape = TMShape::synthetic(
+            2 + rng.below(20) as usize,
+            1 + rng.below(5) as usize,
+            1 + rng.below(10) as usize,
+        );
+        // Even seeds: sparse models (the kernel's home turf); odd
+        // seeds: dense models (the equivalence still has to hold).
+        let density = if seed % 2 == 0 { 0.02 } else { 0.1 + rng.next_f64() * 0.3 };
+        let empty: Vec<usize> = if seed % 3 == 0 { vec![0] } else { vec![] };
+        let mut model = random_model(&mut rng, &shape, density, &empty);
+        if seed % 4 == 0 && !empty.contains(&0) {
+            clear_clause(&mut model, 0, 0);
+        }
+        let instrs = isa::encode(&model);
+
+        for n in [1usize, 63, 64, 65, 1000] {
+            if n == 1000 && seed >= 4 {
+                continue;
+            }
+            let rows = random_rows_n(&mut rng, shape.features, n);
+
+            // 32-lane oracle: per-batch SoA walk.
+            let mut soa = Core::new(AccelConfig::base());
+            soa.program(shape.classes, shape.clauses, &instrs).unwrap();
+            let mut soa_preds: Vec<u8> = Vec::new();
+            let mut soa_sums: Vec<Vec<i32>> = Vec::new();
+            for chunk in rows.chunks(32) {
+                let r = soa.run_batch(&isa::pack_features(chunk)).unwrap();
+                for lane in 0..chunk.len() {
+                    soa_preds.push(r.preds[lane]);
+                    soa_sums.push(r.class_sums.iter().map(|s| s[lane]).collect());
+                }
+            }
+
+            // Pinned sliced and pinned compressed runs on fresh cores:
+            // the ENTIRE result struct must match — per-row sums,
+            // preds, padding lanes, simulated cycles.
+            let mut sl = Core::new(AccelConfig::base());
+            sl.program(shape.classes, shape.clauses, &instrs).unwrap();
+            let want = sl.run_rows_sliced_ref(&rows).unwrap().clone();
+            let mut cp = Core::new(AccelConfig::base());
+            cp.program(shape.classes, shape.clauses, &instrs).unwrap();
+            let got = cp.run_rows_compressed_ref(&rows).unwrap().clone();
+            assert_eq!(got, want, "seed {seed} n {n}: compressed vs sliced result");
+            assert_eq!(cp.stats, sl.stats, "seed {seed} n {n}: lifetime stats");
+            assert_eq!(cp.stats, soa.stats, "seed {seed} n {n}: stats vs SoA walk");
+            assert_eq!(cp.batches_run, soa.batches_run, "seed {seed} n {n}");
+
+            // ... and row by row against the SoA oracle and the dense
+            // reference.
+            for row in 0..n {
+                assert_eq!(got.preds[row], soa_preds[row], "seed {seed} n {n} row {row}: preds");
+                for class in 0..shape.classes {
+                    assert_eq!(
+                        got.class_sum(class, row),
+                        soa_sums[row][class],
+                        "seed {seed} n {n} row {row} class {class}: sums"
+                    );
+                }
+            }
+            for (row, x) in rows.iter().enumerate() {
+                let lits = reference::literals_from_features(x);
+                assert_eq!(
+                    got.preds[row] as usize,
+                    reference::predict_dense(&model, &lits),
+                    "seed {seed} n {n} row {row}: dense preds"
+                );
+            }
+
+            // Engine-level pinned paths agree too (StreamStats and the
+            // chunked drive included).
+            let mut a = Core::new(AccelConfig::base());
+            a.program(shape.classes, shape.clauses, &instrs).unwrap();
+            let (p_sl, s_sl) =
+                rttm::accel::engine::classify_rows_core_sliced(&mut a, &rows).unwrap();
+            let mut b = Core::new(AccelConfig::base());
+            b.program(shape.classes, shape.clauses, &instrs).unwrap();
+            let (p_cp, s_cp) =
+                rttm::accel::engine::classify_rows_core_compressed(&mut b, &rows).unwrap();
+            assert_eq!(p_cp, p_sl, "seed {seed} n {n}: engine preds");
+            assert_eq!(s_cp.simulated_cycles, s_sl.simulated_cycles, "seed {seed} n {n}");
+            assert_eq!(s_cp.batches, s_sl.batches, "seed {seed} n {n}");
+        }
+    }
+}
+
+#[test]
+fn compressed_multicore_matches_compressed_single_core_over_ragged_row_counts() {
+    for seed in 0..6u64 {
+        let mut rng = XorShift64Star::new(95_000 + seed);
+        let classes = 2 + rng.below(7) as usize;
+        let features = 2 + rng.below(16) as usize;
+        let shape = TMShape::synthetic(features, classes, 1 + rng.below(8) as usize);
+        let empty: Vec<usize> = if seed % 2 == 0 { vec![classes - 1] } else { vec![] };
+        let density = if seed % 2 == 0 { 0.03 } else { 0.2 };
+        let model = random_model(&mut rng, &shape, density, &empty);
+        let n = [1usize, 65, 300][(seed % 3) as usize];
+        let rows = random_rows_n(&mut rng, shape.features, n);
+
+        let mut single = Core::new(AccelConfig::single_core());
+        single.program_model(&model).unwrap();
+        let sref = single.run_rows_compressed_ref(&rows).unwrap();
+        let want: Vec<u8> = sref.preds[..n].to_vec();
+        let want_sums: Vec<Vec<i32>> = (0..n)
+            .map(|row| (0..classes).map(|c| sref.class_sum(c, row)).collect())
+            .collect();
+
+        for mode in [ParallelMode::Serial, ParallelMode::Threads] {
+            let mut mc = MultiCore::five_core().with_parallel(mode);
+            mc.program_model(&model).unwrap();
+            let r = mc.run_rows_compressed_ref(&rows).unwrap();
+            assert_eq!(&r.preds[..n], &want[..], "seed {seed} {mode:?} n {n}");
+            for row in 0..n {
+                for class in 0..classes {
+                    assert_eq!(
+                        r.class_sum(class, row),
+                        want_sums[row][class],
+                        "seed {seed} {mode:?} row {row} class {class}"
+                    );
+                }
+            }
+            // The multicore sliced walk over the same rows is the same
+            // merged result, kernel notwithstanding.
+            let mut mc2 = MultiCore::five_core().with_parallel(mode);
+            mc2.program_model(&model).unwrap();
+            let r2 = mc2.run_rows_sliced_ref(&rows).unwrap();
+            assert_eq!(&r2.preds[..n], &want[..], "seed {seed} {mode:?} n {n}: vs sliced");
+        }
+    }
+}
+
+#[test]
+fn auto_kernel_selection_is_density_driven_and_never_changes_a_byte() {
+    // A hand-built high-sparsity tenant: 128 features, one include per
+    // clause — measured include density far under the threshold, so
+    // Auto resolves to the compressed kernel.
+    let mut rng = XorShift64Star::new(4242);
+    let shape = TMShape::synthetic(128, 3, 8);
+    let mut sparse = TMModel::empty(shape.clone());
+    for class in 0..shape.classes {
+        for clause in 0..shape.clauses {
+            let lit = (rng.below(2 * 128)) as usize;
+            sparse.set_include(class, clause, lit, true);
+        }
+    }
+    let mut core = Core::new(AccelConfig::base());
+    core.program_model(&sparse).unwrap();
+    assert!(
+        core.uses_compressed_kernel(),
+        "density {} should auto-select the compressed kernel",
+        core.compressed_program().density
+    );
+    assert!(core.compressed_program().density <= rttm::accel::engine::COMPRESSED_MAX_DENSITY);
+    assert_eq!(core.compressed_program().pruned, 0, "auto path must never prune");
+
+    // A dense model stays on the sliced kernel.
+    let dense_shape = TMShape::synthetic(12, 3, 8);
+    let dense = random_model(&mut rng, &dense_shape, 0.4, &[]);
+    let mut dense_core = Core::new(AccelConfig::base());
+    dense_core.program_model(&dense).unwrap();
+    assert!(
+        !dense_core.uses_compressed_kernel(),
+        "density {} should stay on the sliced kernel",
+        dense_core.compressed_program().density
+    );
+
+    // The Auto engine paths (bulk + margins) over the sparse tenant are
+    // byte-identical to the SoA reference — preds, margins, simulated
+    // accounting — while actually riding the compressed kernel.
+    let n = rttm::accel::engine::SLICED_MIN_ROWS + 37;
+    let rows = random_rows_n(&mut rng, shape.features, n);
+    let mut a = Core::new(AccelConfig::base());
+    a.program_model(&sparse).unwrap();
+    let (p_soa, m_soa, s_soa) =
+        rttm::accel::engine::classify_rows_margins_core_soa(&mut a, &rows).unwrap();
+    let mut b = Core::new(AccelConfig::base());
+    b.program_model(&sparse).unwrap();
+    let (p_auto, m_auto, s_auto) =
+        rttm::accel::engine::classify_rows_margins_core(&mut b, &rows).unwrap();
+    assert!(b.uses_compressed_kernel());
+    assert_eq!(p_auto, p_soa, "auto preds");
+    assert_eq!(m_auto, m_soa, "auto margins");
+    assert_eq!(s_auto.simulated_cycles, s_soa.simulated_cycles);
+    assert_eq!(s_auto.batches, s_soa.batches);
+
+    // Multicore Auto agrees as well.
+    let mut mc = MultiCore::five_core().with_parallel(ParallelMode::Threads);
+    mc.program_model(&sparse).unwrap();
+    let (p_mc, s_mc) = rttm::accel::engine::classify_rows_multicore(&mut mc, &rows).unwrap();
+    assert_eq!(p_mc, p_soa, "multicore auto preds");
+    assert_eq!(s_mc.batches, s_soa.batches);
+}
+
 #[test]
 fn reprogramming_soa_core_is_idempotent_with_tautology_killers() {
     // Program A (with an empty class), program B, program A again: the

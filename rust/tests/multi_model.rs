@@ -1,9 +1,11 @@
 //! Multi-tenant serving regression coverage: interleaved per-model
 //! traffic must be byte-identical to isolated single-tenant pools,
 //! per-model admission counters must reconcile exactly, a canary staged
-//! on one tenant must never perturb another tenant's replicas, and the
-//! `TimeShared` dwell guard must bound reprogram thrash under
-//! adversarial alternation.  Setup lives in the shared pool harness.
+//! on one tenant must never perturb another tenant's replicas, two
+//! tenants registering byte-identical models must stay isolated under
+//! distinct ids, and the `TimeShared` dwell guard must bound reprogram
+//! thrash under adversarial alternation.  Setup lives in the shared
+//! pool harness.
 
 #[path = "common/pool_harness.rs"]
 mod pool_harness;
@@ -209,6 +211,63 @@ fn canary_on_one_tenant_never_perturbs_the_other() {
             "tenant B replica {i} reprogrammed during tenant A's canary"
         );
     }
+    assert_eq!(model_stats_for(&pool.handle, idb).switches, 0);
+    pool.shutdown();
+}
+
+/// Regression for the registry tenant-aliasing bug: two tenants
+/// registering byte-identical models must get DISTINCT ids — under the
+/// old hash-only dedup, tenant B was handed tenant A's id, so a
+/// retrain/promote on A silently rewrote B's serving model.  Here A
+/// promotes a retrained candidate and B's predictions must stay
+/// byte-identical to the original model throughout.
+#[test]
+fn identical_bytes_under_two_tenants_stay_isolated_across_promotion() {
+    let (model, data) = trained(101);
+    let (candidate, _) = trained(102);
+
+    // Isolated references for the shared original and A's candidate.
+    let mut single = InferenceService::new(EngineSpec::base().build());
+    single.reprogram(&model).unwrap();
+    let want_original = single.infer_all(&data.xs).unwrap();
+    let mut single_c = InferenceService::new(EngineSpec::base().build());
+    single_c.reprogram(&candidate).unwrap();
+    let want_candidate = single_c.infer_all(&data.xs).unwrap();
+    assert_ne!(want_original, want_candidate, "test premise: retrain must change answers");
+
+    let pool = spawn_harness_sharded(
+        EngineSpec::base(),
+        PoolConfig::fixed(4),
+        ShardingPolicy::Dedicated,
+    );
+    // The SAME bytes under two tenant names: fresh, isolated ids.
+    let ida = pool.handle.register_model("tenant-a", model.clone()).unwrap();
+    let idb = pool.handle.register_model("tenant-b", model).unwrap();
+    assert_ne!(ida, idb, "identical bytes under two tenant names aliased onto one id");
+    let ha = pool.handle.with_model(ida);
+    let hb = pool.handle.with_model(idb);
+    assert_eq!(ha.infer(data.xs.clone()).unwrap(), want_original);
+    assert_eq!(hb.infer(data.xs.clone()).unwrap(), want_original);
+
+    // Retrain tenant A: canary the candidate on A and promote it.
+    ha.program_canary(candidate).unwrap();
+    ha.promote_canary().unwrap();
+
+    // A serves the candidate; B still serves the ORIGINAL bytes —
+    // byte-identical answers, no reassignment of B's route.
+    for _ in 0..4 {
+        assert_eq!(ha.infer(data.xs.clone()).unwrap(), want_candidate);
+        assert_eq!(
+            hb.infer(data.xs.clone()).unwrap(),
+            want_original,
+            "tenant A's promotion leaked into tenant B's serving model"
+        );
+    }
+    let stats = pool.handle.pool_stats();
+    assert!(
+        stats.replicas.iter().any(|r| r.assigned == Some(idb)),
+        "tenant B lost its dedicated replica during tenant A's promotion"
+    );
     assert_eq!(model_stats_for(&pool.handle, idb).switches, 0);
     pool.shutdown();
 }
