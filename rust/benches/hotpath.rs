@@ -452,6 +452,10 @@ fn main() {
         pool_replicas
     );
 
+    // Direct-retrain recovery latency, measured in §2d and compared
+    // against the online feedback path in §2f (the CI ratio gate).
+    let mut detect_to_recover_ms = -1.0f64;
+
     // 2d. Live autotune: detection-to-recovery latency and served
     //     throughput WHILE the shadow retrain + swap runs.  A client
     //     hammers the pool throughout; the drift windows arrive, the
@@ -505,7 +509,6 @@ fn main() {
             })
         };
 
-        let mut detect_to_recover_ms = -1.0f64;
         let mut rps_during_retune = -1.0f64;
         for win in &drift_sched.stream(&w) {
             tuner.observe_window(&win.xs, &win.ys).unwrap();
@@ -642,6 +645,114 @@ fn main() {
             4,
         );
         json.push(("canary_eval_windows".into(), eval_windows as f64));
+        h.shutdown();
+        join.join();
+    }
+
+    // 2f. §online — incremental TA feedback as the cheap recovery path.
+    //     Two measurements, both against the SAME drift family §2d
+    //     retrains on:
+    //     * the raw feedback kernel rate (rows/s through
+    //       `OnlineTrainer::feedback_batch`, 64-row sliced clause
+    //       evaluation gating scalar TA updates);
+    //     * the live recovery episode — drift detected, labeled windows
+    //       folded into the serving model through the version fence,
+    //       detector clears — timed end to end.  The CI gate holds this
+    //       at <= half the §2d direct-retrain recovery from the SAME
+    //       run: the cheap path must actually be cheap.
+    {
+        use rttm::coordinator::autotune::{AutotuneConfig, AutotuneEvent, Autotuner};
+        use rttm::datasets::workloads::DriftSchedule;
+        use rttm::model_cost::resources::ResourceBudget;
+        use rttm::trainer::online::OnlineTrainer;
+
+        println!("\n--- online feedback (TA fine-tune, detection -> recovery) ---");
+        let fb_n = 256.min(data.len());
+        let fb_xs = &data.xs[..fb_n];
+        let fb_ys = &data.ys[..fb_n];
+        let mut online = OnlineTrainer::from_model(&model, 5);
+        let fb_ns = bench_ns(scale(20), scale(200), || {
+            let n = online.feedback_batch(fb_xs, fb_ys).unwrap();
+            std::hint::black_box(n);
+        });
+        let fb_rows_per_s = fb_n as f64 / (fb_ns / 1e9);
+        println!(
+            "feedback_batch kernel:   {:>10.0} rows/s ({} rows, {:.1} us/window)",
+            fb_rows_per_s,
+            fb_n,
+            fb_ns / 1e3
+        );
+        push_throughput(&mut json, "online_feedback_rows_per_s", fb_rows_per_s, 64, 1);
+
+        let windows = 12usize;
+        let window_n = scale(256).max(128);
+        let fb_sched = DriftSchedule::abrupt(windows, window_n, 4, 0.4).seed(7);
+        let fb_model =
+            rttm::trainer::train_model(&w.shape, &fb_sched.training_set(&w, corpus), epochs, 3);
+        // Same 4x headroom as §2d: fine-tuned models may carry more
+        // includes than the seed they started from.
+        let fb_spec = EngineSpec::custom(rttm::model_cost::resources::provisioned_config(
+            &fb_model,
+            4,
+        ));
+        let (h, mut join) = spawn_pool(fb_spec, 4);
+        let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited());
+        cfg.accuracy_floor = 0.85;
+        cfg.online_feedback = true;
+        cfg.online_patience = 7; // every drifted window before escalating
+        cfg.epochs = if smoke { 1 } else { 2 };
+        cfg.retrain_corpus = 2 * window_n;
+        cfg.canary_fraction = 0.0;
+        let mut tuner = Autotuner::new(h.clone(), w.shape.clone(), cfg);
+        tuner.install(fb_model).unwrap();
+
+        let mut episode_ns = 0u128;
+        let mut online_recover_ms = -1.0f64;
+        let mut online_recover_windows = -1.0f64;
+        for win in &fb_sched.stream(&w) {
+            let t0 = std::time::Instant::now();
+            tuner.observe_window(&win.xs, &win.ys).unwrap();
+            let dt = t0.elapsed().as_nanos();
+            let detected = tuner
+                .report
+                .events
+                .iter()
+                .any(|e| matches!(e, AutotuneEvent::DriftDetected { .. }));
+            if detected && online_recover_ms < 0.0 {
+                // The episode: the trigger window's feedback through the
+                // window whose healthy accuracy cleared the detector.
+                episode_ns += dt;
+                if let Some(fed) = tuner.report.events.iter().find_map(|e| match e {
+                    AutotuneEvent::OnlineRecovered { fed_windows, .. } => Some(*fed_windows),
+                    _ => None,
+                }) {
+                    online_recover_ms = episode_ns as f64 / 1e6;
+                    online_recover_windows = fed as f64;
+                }
+            }
+        }
+        assert!(
+            online_recover_ms >= 0.0,
+            "online bench must actually recover: {:?}",
+            tuner.report.events
+        );
+        assert!(
+            !tuner
+                .report
+                .events
+                .iter()
+                .any(|e| matches!(e, AutotuneEvent::SearchCompleted { .. })),
+            "online bench must recover without a budget_search"
+        );
+        println!(
+            "detect->recover (online):{online_recover_ms:>10.1} ms ({online_recover_windows:.0} \
+             feedback windows, fence swaps included)"
+        );
+        println!(
+            "vs direct retrain (§2d): {detect_to_recover_ms:>10.1} ms (CI gates online <= 0.5x)"
+        );
+        json.push(("online_recover_ms".into(), online_recover_ms));
+        json.push(("online_recover_windows".into(), online_recover_windows));
         h.shutdown();
         join.join();
     }

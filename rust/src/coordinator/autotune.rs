@@ -226,6 +226,18 @@ pub struct AutotuneConfig {
     /// Unlabeled windows kept around (rows + predictions) for delayed
     /// label backfill; older windows age out.
     pub label_backfill_horizon: usize,
+    /// Route labeled windows (live or backfilled) into the pool's
+    /// online trainer FIRST when drift is sustained, instead of going
+    /// straight to the shadow shape search.  A feedback mini-fence
+    /// costs one TA-state sweep and one broadcast; a `budget_search`
+    /// costs a full grid of retrains — most drift is distributional,
+    /// not structural, and recovers from the cheap path.  Requires the
+    /// handle's route to be enabled ([`ServiceHandle::enable_online_feedback`];
+    /// [`Autotuner::install`] does this automatically).
+    pub online_feedback: bool,
+    /// Labeled feedback windows tolerated while the detector stays bad
+    /// before escalating to the full shape search.
+    pub online_patience: usize,
 }
 
 impl AutotuneConfig {
@@ -248,6 +260,8 @@ impl AutotuneConfig {
             canary_accuracy_eps: 0.02,
             min_corpus: 64,
             label_backfill_horizon: 8,
+            online_feedback: false,
+            online_patience: 3,
         }
     }
 }
@@ -290,6 +304,15 @@ pub enum AutotuneEvent {
     /// accuracy was backfilled (the drift detector is NOT re-run on
     /// backfill).
     LabelsBackfilled { window: usize, accuracy: f64 },
+    /// One labeled window was folded into the pool's online trainer;
+    /// the updated model was broadcast behind the fence at `version`.
+    OnlineFeedback { window: usize, version: u64, samples: usize },
+    /// Online feedback alone cleared the sustained drift after
+    /// `fed_windows` feedback windows — no shape search ran.
+    OnlineRecovered { window: usize, fed_windows: usize },
+    /// The detector stayed bad through `fed_windows` feedback windows:
+    /// escalating to the full budget-constrained shape search.
+    OnlineEscalated { window: usize, fed_windows: usize },
     Swapped {
         window: usize,
         version: u64,
@@ -469,6 +492,18 @@ fn event_json(e: &AutotuneEvent) -> String {
             "{{\"type\": \"labels_backfilled\", \"window\": {window}, \"accuracy\": {}}}",
             json_num(*accuracy)
         ),
+        AutotuneEvent::OnlineFeedback { window, version, samples } => format!(
+            "{{\"type\": \"online_feedback\", \"window\": {window}, \"version\": {version}, \
+             \"samples\": {samples}}}"
+        ),
+        AutotuneEvent::OnlineRecovered { window, fed_windows } => format!(
+            "{{\"type\": \"online_recovered\", \"window\": {window}, \
+             \"fed_windows\": {fed_windows}}}"
+        ),
+        AutotuneEvent::OnlineEscalated { window, fed_windows } => format!(
+            "{{\"type\": \"online_escalated\", \"window\": {window}, \
+             \"fed_windows\": {fed_windows}}}"
+        ),
         AutotuneEvent::Swapped {
             window,
             version,
@@ -498,6 +533,16 @@ fn event_json(e: &AutotuneEvent) -> String {
 
 enum Phase {
     Monitoring,
+    /// Sustained drift with online feedback enabled: labeled windows
+    /// (live or backfilled) are folded into the pool's online trainer
+    /// instead of launching a shape search.  `fed_windows` counts the
+    /// feedback windows applied; the detector staying bad through
+    /// [`AutotuneConfig::online_patience`] of them escalates to
+    /// [`Phase::Searching`].
+    FeedingBack {
+        trigger_accuracy: Option<f64>,
+        fed_windows: usize,
+    },
     Searching {
         trigger_accuracy: Option<f64>,
     },
@@ -610,10 +655,15 @@ impl Autotuner {
     }
 
     /// Program the initial model (recorded as the first rollback
-    /// baseline).
+    /// baseline).  With [`AutotuneConfig::online_feedback`] set this
+    /// also opts the route into online feedback, warm-starting the
+    /// pool's trainer from the installed model.
     pub fn install(&mut self, model: TMModel) -> Result<(), ServeError> {
         let m = Arc::new(model);
         self.handle.program((*m).clone())?;
+        if self.cfg.online_feedback {
+            self.handle.enable_online_feedback(self.cfg.seed)?;
+        }
         self.current = Some(m);
         Ok(())
     }
@@ -630,6 +680,7 @@ impl Autotuner {
     pub fn phase_name(&self) -> &'static str {
         match self.phase {
             Phase::Monitoring => "monitoring",
+            Phase::FeedingBack { .. } => "feeding_back",
             Phase::Searching { .. } => "searching",
             Phase::Canarying { .. } => "canarying",
             Phase::Validating { .. } => "validating",
@@ -756,6 +807,16 @@ impl Autotuner {
             window: p.window,
             accuracy,
         });
+        // A backfilled window IS a feedback window: while the tuner is
+        // in the cheap recovery path, fold it into the online trainer
+        // — this is how a delayed-label deployment recovers without a
+        // single shape search.
+        if matches!(self.phase, Phase::FeedingBack { .. }) {
+            self.feed_online(&p.xs, ys)?;
+            if let Phase::FeedingBack { fed_windows, .. } = &mut self.phase {
+                *fed_windows += 1;
+            }
+        }
         Ok(Some(accuracy))
     }
 
@@ -807,7 +868,21 @@ impl Autotuner {
                         accuracy,
                         mean_margin,
                     });
-                    if self.corpus_xs.len() < self.cfg.min_corpus.max(2) {
+                    if self.cfg.online_feedback {
+                        // Cheap recovery path first: fine-tune the
+                        // serving model in place with labeled windows.
+                        // The triggering window's own labels (if any)
+                        // are the first feedback window.
+                        let mut fed_windows = 0;
+                        if let Some(ys) = ys {
+                            self.feed_online(xs, ys)?;
+                            fed_windows = 1;
+                        }
+                        self.phase = Phase::FeedingBack {
+                            trigger_accuracy: accuracy,
+                            fed_windows,
+                        };
+                    } else if self.corpus_xs.len() < self.cfg.min_corpus.max(2) {
                         // Label-free deployment with nothing to retrain
                         // on yet: record the starvation, re-arm the
                         // detector, wait for backfilled labels.
@@ -819,6 +894,54 @@ impl Autotuner {
                     } else {
                         self.launch_search(accuracy)?;
                     }
+                }
+            }
+            Phase::FeedingBack { trigger_accuracy, mut fed_windows } => {
+                // Judge THIS window first — it was served by the
+                // already-fed model, so its accuracy/margin is the
+                // recovery evidence.
+                self.detector.push(accuracy, mean_margin);
+                if self.detector.consecutive_bad() == 0 {
+                    // A healthy window ends the episode: the drift was
+                    // distributional and the cheap path fixed it.  No
+                    // rebaseline — the shape did not change, and the
+                    // margin EWMA already updated on the good window.
+                    self.report.events.push(AutotuneEvent::OnlineRecovered {
+                        window: self.window_index,
+                        fed_windows,
+                    });
+                    return Ok(());
+                }
+                if let Some(ys) = ys {
+                    self.feed_online(xs, ys)?;
+                    fed_windows += 1;
+                }
+                // No-labels escape hatch: a bad streak that outlives
+                // the backfill horizon with zero feedback applied means
+                // labels are not coming (the pending windows have aged
+                // out) — the cheap path can never act, so escalate.
+                let starved_of_labels = fed_windows == 0
+                    && self.detector.consecutive_bad()
+                        >= self.cfg.patience.max(1) + self.cfg.label_backfill_horizon.max(1);
+                if fed_windows >= self.cfg.online_patience.max(1) || starved_of_labels {
+                    // The detector stayed bad through the patience
+                    // budget: the drift is structural — escalate to the
+                    // full shape search.
+                    self.report.events.push(AutotuneEvent::OnlineEscalated {
+                        window: self.window_index,
+                        fed_windows,
+                    });
+                    if self.corpus_xs.len() < self.cfg.min_corpus.max(2) {
+                        self.report.events.push(AutotuneEvent::RetrainStarved {
+                            window: self.window_index,
+                            corpus: self.corpus_xs.len(),
+                        });
+                        self.detector.reset();
+                    } else {
+                        self.launch_search(trigger_accuracy)?;
+                    }
+                } else {
+                    self.phase = Phase::FeedingBack { trigger_accuracy, fed_windows };
                 }
             }
             Phase::Searching { trigger_accuracy } => {
@@ -1078,6 +1201,22 @@ impl Autotuner {
             ys: self.corpus_ys.clone(),
             spec: SynthSpec::new(features, self.shape.classes, self.corpus_xs.len()),
         }
+    }
+
+    /// Fold one labeled window into the pool's online trainer
+    /// ([`ServiceHandle::feedback`]): one TA-state sweep on a replica,
+    /// one fence-gated broadcast of the updated model.  `current` is
+    /// deliberately NOT advanced — it stays the pre-drift rollback
+    /// baseline, so an escalated search that regresses still restores
+    /// a model that once served healthily.
+    fn feed_online(&mut self, xs: &[Vec<u8>], ys: &[usize]) -> Result<(), ServeError> {
+        self.handle.feedback(xs.to_vec(), ys.to_vec())?;
+        self.report.events.push(AutotuneEvent::OnlineFeedback {
+            window: self.window_index,
+            version: self.handle.pool_stats().version,
+            samples: xs.len(),
+        });
+        Ok(())
     }
 
     fn launch_search(&mut self, trigger_accuracy: Option<f64>) -> Result<(), ServeError> {
@@ -1443,6 +1582,7 @@ mod tests {
                     instructions: crate::isa::instruction_count(&self.0),
                     estimate: est,
                     watts,
+                    model_bytes: crate::model_cost::resources::compressed_model_bytes(&self.0),
                     admitted: true,
                 }],
                 winner: Some(self.0.clone()),
@@ -1868,6 +2008,150 @@ mod tests {
             .any(|e| matches!(e, AutotuneEvent::NoCandidateFitsBudget { .. })));
         assert_eq!(tuner.phase_name(), "monitoring");
         assert_eq!(tuner.handle.pool_stats().version, 1);
+        tuner.handle.shutdown();
+        join.join();
+    }
+
+    // ---- online feedback: recover cheap, escalate when it fails -------
+
+    /// Proves zero retrains by construction: any retrain panics.
+    struct NeverTrainer;
+
+    impl ShadowTrainer for NeverTrainer {
+        fn retrain(&self, _train: &Dataset, _valid: &Dataset) -> BudgetedSearch {
+            panic!("online feedback must recover without a shape search");
+        }
+    }
+
+    #[test]
+    fn online_feedback_recovers_without_a_search() {
+        let clean = dataset(0.0, 256, 7);
+        let drifted = dataset(0.4, 256, 7);
+        let good = trained(&clean);
+        let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited());
+        cfg.patience = 2;
+        cfg.background = false;
+        cfg.online_feedback = true;
+        cfg.online_patience = 12; // plenty of cheap-path budget
+        let (mut tuner, mut join) = autotuner_on_pool(cfg, Arc::new(NeverTrainer));
+        tuner.install(good).unwrap();
+
+        tuner.observe_window(&clean.xs, &clean.ys).unwrap();
+        // Labeled drifted windows: trigger, then feed until recovered.
+        let mut recovered = false;
+        for _ in 0..12 {
+            tuner.observe_window(&drifted.xs, &drifted.ys).unwrap();
+            if tuner
+                .report
+                .events
+                .iter()
+                .any(|e| matches!(e, AutotuneEvent::OnlineRecovered { .. }))
+            {
+                recovered = true;
+                break;
+            }
+        }
+        assert!(recovered, "cheap path never recovered: {:?}", tuner.report.events);
+        assert_eq!(tuner.phase_name(), "monitoring");
+        let fed = tuner
+            .report
+            .events
+            .iter()
+            .filter(|e| matches!(e, AutotuneEvent::OnlineFeedback { .. }))
+            .count();
+        assert!(fed >= 1, "recovery must come from feedback windows");
+        // NeverTrainer would have panicked, but pin it in the record
+        // too: no search-path events of any kind.
+        assert!(!tuner.report.events.iter().any(|e| matches!(
+            e,
+            AutotuneEvent::SearchCompleted { .. }
+                | AutotuneEvent::Swapped { .. }
+                | AutotuneEvent::OnlineEscalated { .. }
+        )));
+        // Every feedback was a fence-gated broadcast: install(1) + fed.
+        assert_eq!(tuner.handle.pool_stats().version, 1 + fed as u64);
+        // And the pool now actually serves well on the drifted stream.
+        let preds = tuner.handle.infer(drifted.xs.clone()).unwrap();
+        let acc = preds.iter().zip(&drifted.ys).filter(|(p, y)| p == y).count() as f64
+            / drifted.ys.len() as f64;
+        assert!(acc >= 0.85, "post-recovery accuracy {acc}");
+        tuner.handle.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn online_feedback_escalates_to_search_after_patience() {
+        let clean = dataset(0.0, 256, 7);
+        let drifted = dataset(0.35, 256, 7);
+        let good = trained(&clean);
+        let fixed = trained(&drifted);
+        let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited());
+        // A floor no window can reach makes recovery impossible: the
+        // escalation path is exercised deterministically.
+        cfg.accuracy_floor = 1.01;
+        cfg.patience = 2;
+        cfg.online_feedback = true;
+        cfg.online_patience = 2;
+        cfg.min_gain = -1.0; // validation keeps any swap
+        cfg.validation_windows = 1;
+        cfg.canary_fraction = 0.0; // direct swap (1-replica pool)
+        cfg.background = false;
+        let (mut tuner, mut join) = autotuner_on_pool(cfg, Arc::new(FixedTrainer(fixed)));
+        tuner.install(good).unwrap();
+
+        tuner.observe_window(&clean.xs, &clean.ys).unwrap(); // bad 1
+        tuner.observe_window(&clean.xs, &clean.ys).unwrap(); // trigger, feed #1
+        assert_eq!(tuner.phase_name(), "feeding_back");
+        tuner.observe_window(&clean.xs, &clean.ys).unwrap(); // feed #2 → escalate
+        let events = &tuner.report.events;
+        assert!(
+            events.iter().any(|e| matches!(
+                e,
+                AutotuneEvent::OnlineEscalated { fed_windows: 2, .. }
+            )),
+            "expected escalation after 2 fed windows: {events:?}"
+        );
+        assert!(events.iter().any(|e| matches!(e, AutotuneEvent::SearchCompleted { .. })));
+        assert!(events.iter().any(|e| matches!(e, AutotuneEvent::Swapped { .. })));
+        // install(1) + 2 feedback fences + the swap: strictly monotone.
+        assert_eq!(tuner.handle.pool_stats().version, 4);
+        tuner.handle.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn label_starved_feedback_escalates_at_the_horizon() {
+        let clean = dataset(0.0, 256, 7);
+        let drifted = dataset(0.5, 256, 7);
+        let good = trained(&clean);
+        let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited());
+        cfg.patience = 2;
+        cfg.margin_frac = 0.75;
+        cfg.online_feedback = true;
+        cfg.online_patience = 2;
+        cfg.label_backfill_horizon = 2; // escape at streak >= 4
+        cfg.min_corpus = 64;
+        cfg.background = false;
+        let (mut tuner, mut join) = autotuner_on_pool(cfg, Arc::new(EmptySearchTrainer));
+        tuner.install(good).unwrap();
+
+        // Labeled healthy windows: margin baseline + retrain corpus.
+        tuner.observe_window(&clean.xs, &clean.ys).unwrap();
+        tuner.observe_window(&clean.xs, &clean.ys).unwrap();
+        // Unlabeled margin collapse with labels that never arrive: the
+        // cheap path has nothing to feed and must not wedge.
+        for _ in 0..6 {
+            tuner.observe_unlabeled(&drifted.xs).unwrap();
+        }
+        let events = &tuner.report.events;
+        assert!(
+            events.iter().any(|e| matches!(
+                e,
+                AutotuneEvent::OnlineEscalated { fed_windows: 0, .. }
+            )),
+            "label-starved cheap path must escalate: {events:?}"
+        );
+        assert!(!events.iter().any(|e| matches!(e, AutotuneEvent::OnlineFeedback { .. })));
         tuner.handle.shutdown();
         join.join();
     }

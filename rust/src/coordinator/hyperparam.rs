@@ -33,6 +33,13 @@ pub struct SearchSpace {
     pub t_grid: Vec<i32>,
     pub s_grid: Vec<f64>,
     pub clause_grid: Vec<usize>,
+    /// TA memory depths (`n_states`) to sweep.  Depth sets the
+    /// include/exclude hysteresis of training: shallow memories commit
+    /// and un-commit literals quickly (fast adaptation, noisier
+    /// clauses), deep ones are stable but slow to re-learn after drift.
+    /// The right depth is workload-dependent, so the search sweeps it
+    /// like T and s instead of inheriting the deployed value.
+    pub n_states_grid: Vec<i32>,
     pub epochs: usize,
     pub seed: u64,
     /// Score = accuracy - size_weight * (instructions / total TAs).
@@ -50,6 +57,10 @@ impl SearchSpace {
                 .collect(),
             s_grid: vec![shape.s * 0.5, shape.s, shape.s * 2.0],
             clause_grid: vec![c / 2, c].into_iter().filter(|&v| v >= 2).collect(),
+            n_states_grid: vec![shape.n_states / 2, shape.n_states]
+                .into_iter()
+                .filter(|&n| n >= 2)
+                .collect(),
             epochs: 3,
             seed: 17,
             size_weight: 0.05,
@@ -76,14 +87,18 @@ fn train_grid(
                 continue;
             }
             for &s in &space.s_grid {
-                let mut shape = base.clone();
-                shape.clauses = clauses;
-                shape.t = t;
-                shape.s = s;
-                let model = crate::trainer::train_model(&shape, train, space.epochs, space.seed);
-                let accuracy = reference::accuracy(&model, &valid.xs, &valid.ys);
-                let instructions = crate::isa::instruction_count(&model);
-                consume(accuracy, instructions, model);
+                for &n_states in &space.n_states_grid {
+                    let mut shape = base.clone();
+                    shape.clauses = clauses;
+                    shape.t = t;
+                    shape.s = s;
+                    shape.n_states = n_states;
+                    let model =
+                        crate::trainer::train_model(&shape, train, space.epochs, space.seed);
+                    let accuracy = reference::accuracy(&model, &valid.xs, &valid.ys);
+                    let instructions = crate::isa::instruction_count(&model);
+                    consume(accuracy, instructions, model);
+                }
             }
         }
     }
@@ -235,6 +250,7 @@ mod tests {
             t_grid: vec![100], // unattainable for any clause budget here
             s_grid: vec![3.0],
             clause_grid: vec![10],
+            n_states_grid: vec![128],
             epochs: 1,
             seed: 1,
             size_weight: 0.0,
@@ -315,6 +331,25 @@ mod tests {
             let capped_acc = reference::accuracy(winner, &valid.xs, &valid.ys);
             assert!(capped_acc <= open_acc + 1e-12);
         }
+    }
+
+    #[test]
+    fn depth_axis_sweeps_every_memory_depth() {
+        let shape = crate::TMShape::synthetic(16, 2, 10);
+        let (train, valid) = data();
+        let mut space = SearchSpace::around(&shape);
+        space.epochs = 1;
+        let depths = space.n_states_grid.clone();
+        assert_eq!(depths, vec![shape.n_states / 2, shape.n_states]);
+        let two = budget_search(&shape, &train, &valid, &space, &ResourceBudget::unlimited());
+        space.n_states_grid = vec![shape.n_states];
+        let one = budget_search(&shape, &train, &valid, &space, &ResourceBudget::unlimited());
+        // Every (clauses, t, s) point is trained once per depth.
+        assert_eq!(two.trials.len(), 2 * one.trials.len());
+        // The winner carries the depth it was trained at, so a swap
+        // installs the searched memory depth, not the deployed one.
+        let winner = two.winner.expect("unlimited budget always has a winner");
+        assert!(depths.contains(&winner.shape.n_states));
     }
 
     #[test]

@@ -75,6 +75,7 @@ use super::service::{EngineSpec, InferenceService, Metrics};
 use crate::accel::core::CoreError;
 use crate::model_cost::resources::ResourceBudget;
 use crate::tm::model::TMModel;
+use crate::trainer::online::{FeedbackError, OnlineTrainer};
 
 /// Snapshot returned by [`ServiceHandle::stats`] (the pool rollup).
 pub type ServerStats = Metrics;
@@ -126,6 +127,16 @@ pub enum ServeError {
     /// Queued requests for a retiring model are failed with this.
     #[error("model {0} is not registered")]
     UnknownModel(ModelId),
+    /// A feedback window was submitted for a route that never opted in
+    /// ([`ServiceHandle::enable_online_feedback`]).  Online TA updates
+    /// mutate serving state, so they are strictly opt-in per model.
+    #[error("model {0} has online feedback disabled (call enable_online_feedback)")]
+    FeedbackDisabled(ModelId),
+    /// The feedback window itself was malformed (row/label count
+    /// mismatch, wrong feature width, out-of-range label).  Nothing was
+    /// applied; the trainer and the served model are untouched.
+    #[error("feedback: {0}")]
+    Feedback(#[from] FeedbackError),
 }
 
 /// Per-replica snapshot inside [`PoolStats`].
@@ -307,6 +318,20 @@ enum Job {
         mstats: Option<Arc<ModelCounters>>,
         reply: mpsc::Sender<Result<Vec<usize>, ServeError>>,
     },
+    /// Online-feedback control job: ONE replica applies the labeled
+    /// window to the route's [`OnlineTrainer`] (serialized by the
+    /// trainer map's lock) and replies with the updated model snapshot;
+    /// the submitting handle then installs that snapshot behind the
+    /// regular version fence, which re-derives every replica's
+    /// Soa/Sliced/Compressed programs — a mini-fence broadcast shaped
+    /// exactly like a canary promote.
+    Feedback {
+        xs: Vec<Vec<u8>>,
+        ys: Vec<usize>,
+        target: Target,
+        mstats: Option<Arc<ModelCounters>>,
+        reply: mpsc::Sender<Result<Arc<TMModel>, ServeError>>,
+    },
 }
 
 impl Job {
@@ -314,7 +339,8 @@ impl Job {
         match self {
             Job::Infer { target, .. }
             | Job::Telemetry { target, .. }
-            | Job::Crash { target, .. } => *target,
+            | Job::Crash { target, .. }
+            | Job::Feedback { target, .. } => *target,
             // Stalls are a pool-wide chaos tool, never model-routed.
             Job::Stall { .. } => Target::Any,
         }
@@ -323,7 +349,9 @@ impl Job {
     fn deadline(&self) -> Option<Instant> {
         match self {
             Job::Infer { deadline, .. } | Job::Telemetry { deadline, .. } => *deadline,
-            Job::Stall { .. } | Job::Crash { .. } => None,
+            // Feedback is control work: it must never be shed on a
+            // deadline — a dropped window is silently lost training.
+            Job::Stall { .. } | Job::Crash { .. } | Job::Feedback { .. } => None,
         }
     }
 
@@ -333,7 +361,8 @@ impl Job {
         match self {
             Job::Infer { mstats, .. }
             | Job::Telemetry { mstats, .. }
-            | Job::Crash { mstats, .. } => mstats.as_ref(),
+            | Job::Crash { mstats, .. }
+            | Job::Feedback { mstats, .. } => mstats.as_ref(),
             Job::Stall { .. } => None,
         }
     }
@@ -342,7 +371,8 @@ impl Job {
         match self {
             Job::Infer { mstats, .. }
             | Job::Telemetry { mstats, .. }
-            | Job::Crash { mstats, .. } => *mstats = counters,
+            | Job::Crash { mstats, .. }
+            | Job::Feedback { mstats, .. } => *mstats = counters,
             Job::Stall { .. } => {}
         }
     }
@@ -355,6 +385,9 @@ impl Job {
                 let _ = reply.send(Err(err()));
             }
             Job::Telemetry { reply, .. } => {
+                let _ = reply.send(Err(err()));
+            }
+            Job::Feedback { reply, .. } => {
                 let _ = reply.send(Err(err()));
             }
         }
@@ -514,6 +547,12 @@ struct Shared {
     sharding: ShardingPolicy,
     metrics: Mutex<Vec<ReplicaMetrics>>,
     spec: EngineSpec,
+    /// Opt-in online trainers, keyed by `ModelId.0`.  A `Job::Feedback`
+    /// locks the route's trainer on one replica, applies the window,
+    /// and the resulting model is re-installed through the version
+    /// fence like any other program — so the sliced/compressed
+    /// programs are re-derived once and broadcast, never per-replica.
+    online: Mutex<HashMap<u64, OnlineTrainer>>,
 }
 
 /// Cloneable client handle to a running replica pool, scoped to one
@@ -651,6 +690,7 @@ pub fn spawn_pool_sharded(
         sharding,
         metrics: Mutex::new(vec![ReplicaMetrics::default(); slots]),
         spec,
+        online: Mutex::new(HashMap::new()),
     });
     let workers = (0..initial).map(|i| spawn_worker(&shared, i)).collect();
     let supervisor = cfg.autoscale.map(|auto| {
@@ -777,6 +817,9 @@ impl ServiceHandle {
         if had_canary {
             drain_canary_jobs_for(&self.shared, id, "canary dismissed: its model was retired");
         }
+        // A retired model keeps no online trainer: its feedback stream
+        // is dead, and the id is never reused.
+        self.shared.online.lock().unwrap_or_else(|p| p.into_inner()).remove(&id.0);
         // Queued live traffic for the retired model has no replica left
         // to adopt it once the rebalance lands — fail it typed.
         drain_jobs(
@@ -992,11 +1035,21 @@ impl ServiceHandle {
     }
 
     fn program_arc(&self, model: Arc<TMModel>) -> Result<(), ServeError> {
+        // An externally-installed model supersedes whatever the online
+        // trainer had accumulated: reseed it so the next feedback
+        // window fine-tunes the model actually being served.
+        self.program_impl(model, true)
+    }
+
+    fn program_impl(&self, model: Arc<TMModel>, reseed: bool) -> Result<(), ServeError> {
         if self.shared.shutdown.load(Ordering::Acquire) {
             return Err(ServeError::ShutDown);
         }
         let route = self.route;
         let hint = model.shape.name.clone();
+        if reseed {
+            self.reseed_online(&model);
+        }
         let (target, had_canary) = {
             let mut cell = self.shared.cell.lock().unwrap();
             let is_new = cell.registry.install(route, &hint, model);
@@ -1126,6 +1179,9 @@ impl ServiceHandle {
             let c = cell.canaries.remove(pos);
             publish_canaries(&self.shared, &cell);
             let hint = c.candidate.shape.name.clone();
+            // The promoted candidate supersedes the online trainer's
+            // snapshot exactly like an external program would.
+            self.reseed_online(&c.candidate);
             cell.registry.install(route, &hint, c.candidate);
             cell.assign[c.replica] = Some(route);
             self.shared.assign_mirror[c.replica].store(route.0 + 1, Ordering::Release);
@@ -1168,6 +1224,75 @@ impl ServiceHandle {
     /// any.
     pub fn canary_replica(&self) -> Option<usize> {
         canary_replica_of(&self.shared, self.route)
+    }
+
+    /// Opt this route into online feedback: seed an [`OnlineTrainer`]
+    /// from the route's registered model so [`Self::feedback`] can
+    /// apply labeled windows incrementally.  Idempotent in effect — a
+    /// second call re-snapshots the trainer from the current model
+    /// (discarding fractional TA state, like any reseed).  Fails with
+    /// [`ServeError::UnknownModel`] when the route has no registered
+    /// model to warm-start from.
+    pub fn enable_online_feedback(&self, seed: u64) -> Result<(), ServeError> {
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return Err(ServeError::ShutDown);
+        }
+        let route = self.route;
+        let model = {
+            let cell = self.shared.cell.lock().unwrap();
+            cell.registry.model(route).ok_or(ServeError::UnknownModel(route))?
+        };
+        let tuner = OnlineTrainer::from_model(&model, seed);
+        self.shared
+            .online
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .insert(route.0, tuner);
+        Ok(())
+    }
+
+    /// Apply one labeled feedback window to this route's online
+    /// trainer and re-install the updated model behind the version
+    /// fence (a mini-fence: the sliced/compressed programs are derived
+    /// once and broadcast to every affine replica, exactly like a
+    /// retrain swap — so versions stay strictly monotone and the pool
+    /// never serves mixed models).  The TA-state update itself runs on
+    /// one pool replica as a [`Priority::High`] control job so it is
+    /// accounted (and fault-injected) like any other work.  Requires
+    /// [`Self::enable_online_feedback`] first.
+    pub fn feedback(&self, xs: Vec<Vec<u8>>, ys: Vec<usize>) -> Result<(), ServeError> {
+        let route = self.route;
+        let (reply, rx) = mpsc::channel();
+        self.submit(
+            Job::Feedback { xs, ys, target: Target::Pool(route), mstats: None, reply },
+            Priority::High,
+        )?;
+        let updated = rx.recv().map_err(|_| ServeError::WorkerGone)??;
+        // The trainer already holds the post-window TA states; a reseed
+        // here would quantize them back to the include/exclude
+        // boundary and lose the accumulated confidence.
+        self.program_impl(updated, false)
+    }
+
+    /// Total labeled rows folded into this route's online trainer, or
+    /// `None` while online feedback is disabled.
+    pub fn online_rows_fed(&self) -> Option<u64> {
+        self.shared
+            .online
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .get(&self.route.0)
+            .map(|t| t.rows_fed())
+    }
+
+    /// Reseed the route's online trainer (when one exists) from a
+    /// freshly-installed model so subsequent feedback windows fine-tune
+    /// what is actually being served.
+    fn reseed_online(&self, model: &TMModel) {
+        let mut online = self.shared.online.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(tuner) = online.get_mut(&self.route.0) {
+            tuner.reseed_from_model(model);
+        }
     }
 
     /// Wake workers, wait until every live replica acked `target`, and
@@ -2184,7 +2309,55 @@ fn run_job(
                 }));
             reply_or_respawn(shared, idx, state, my_version, outcome, reply);
         }
+        Job::Feedback { xs, ys, target, reply, .. } => {
+            // Feedback is always Pool-routed (`ServiceHandle::feedback`
+            // builds the job); an Any/CanaryOnly target here is a bug.
+            let Target::Pool(model) = target else {
+                let _ = reply.send(Err(ServeError::Canary(
+                    "feedback jobs must target a pool model",
+                )));
+                return;
+            };
+            let t0 = Instant::now();
+            let outcome = panic::catch_unwind(AssertUnwindSafe(|| {
+                if force_panic {
+                    panic!("injected fault (FaultPlan::PanicOnJob)");
+                }
+                apply_feedback(shared, model, &xs, &ys)
+            }));
+            match outcome {
+                Ok(result) => {
+                    // The TA-state update ran on this replica: account
+                    // its wall time like served work, then publish.
+                    state.service.metrics.busy_micros += t0.elapsed().as_micros() as u64;
+                    shared.metrics.lock().unwrap()[idx].metrics = state.service.metrics.clone();
+                    let _ = reply.send(result);
+                }
+                Err(_panic) => {
+                    // `reply_or_respawn` maps CoreError; feedback fails
+                    // with ServeError directly, so supervise by hand.
+                    respawn_replica(shared, idx, state, my_version);
+                    let _ = reply.send(Err(ServeError::WorkerPanicked { replica: idx }));
+                }
+            }
+        }
     }
+}
+
+/// Fold one labeled window into `model`'s online trainer and snapshot
+/// the updated model.  Runs on a worker replica under the trainer map
+/// lock — the lock serializes concurrent feedback windows for the same
+/// route, which keeps the PRNG replay deterministic.
+fn apply_feedback(
+    shared: &Shared,
+    model: ModelId,
+    xs: &[Vec<u8>],
+    ys: &[usize],
+) -> Result<Arc<TMModel>, ServeError> {
+    let mut online = shared.online.lock().unwrap_or_else(|p| p.into_inner());
+    let tuner = online.get_mut(&model.0).ok_or(ServeError::FeedbackDisabled(model))?;
+    tuner.feedback_batch(xs, ys)?;
+    Ok(Arc::new(tuner.model()))
 }
 
 /// Shared tail of the per-request supervision protocol, for every job
@@ -2485,6 +2658,102 @@ mod tests {
         for r in &stats.replicas {
             assert_eq!(r.model_version, 2);
         }
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn online_feedback_is_opt_in_and_rides_the_fence() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 2);
+        h.program(model.clone()).unwrap();
+
+        // Feedback before opting in is a typed error, not a pool death.
+        assert!(matches!(
+            h.feedback(data.xs.clone(), data.ys.clone()),
+            Err(ServeError::FeedbackDisabled(_))
+        ));
+        assert_eq!(h.online_rows_fed(), None);
+
+        h.enable_online_feedback(7).unwrap();
+        h.feedback(data.xs.clone(), data.ys.clone()).unwrap();
+        assert_eq!(h.online_rows_fed(), Some(96));
+
+        // The mini-fence: one version bump, every replica on it.
+        let stats = h.pool_stats();
+        assert_eq!(stats.version, 2);
+        for r in &stats.replicas {
+            assert_eq!(r.model_version, 2);
+        }
+
+        // The served model is exactly the one a lone OnlineTrainer
+        // produces from the same snapshot, seed and window.
+        let mut mirror = OnlineTrainer::from_model(&model, 7);
+        mirror.feedback_batch(&data.xs, &data.ys).unwrap();
+        let mut reference = InferenceService::new(EngineSpec::base().build());
+        reference.reprogram(&mirror.model()).unwrap();
+        assert_eq!(h.infer(data.xs.clone()).unwrap(), reference.infer_all(&data.xs).unwrap());
+
+        // A malformed window is rejected atomically: typed error, no
+        // version bump, no rows folded in.
+        let ragged = vec![vec![0u8; 12], vec![0u8; 5]];
+        assert!(matches!(
+            h.feedback(ragged, vec![0, 1]),
+            Err(ServeError::Feedback(FeedbackError::WidthMismatch { .. }))
+        ));
+        assert_eq!(h.online_rows_fed(), Some(96));
+        assert_eq!(h.pool_stats().version, 2);
+
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn external_reprogram_reseeds_the_online_trainer() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 2);
+        h.program(model.clone()).unwrap();
+        h.enable_online_feedback(11).unwrap();
+        h.feedback(data.xs.clone(), data.ys.clone()).unwrap();
+
+        // An offline retrain supersedes the trainer's accumulated TA
+        // state: the next feedback window must fine-tune the newly
+        // installed model, not the pre-swap one.
+        let drifted = SynthSpec::new(12, 3, 96).noise(0.05).seed(8).drift(0.4).generate();
+        let shape = TMShape::synthetic(12, 3, 8);
+        let new_model = crate::trainer::train_model(&shape, &drifted, 4, 3);
+        h.program(new_model.clone()).unwrap();
+        h.feedback(drifted.xs.clone(), drifted.ys.clone()).unwrap();
+
+        // Mirror: seed, feed the first window, reseed at the swap, feed
+        // the second — byte-identical serving proves the reseed landed.
+        let mut mirror = OnlineTrainer::from_model(&model, 11);
+        mirror.feedback_batch(&data.xs, &data.ys).unwrap();
+        mirror.reseed_from_model(&new_model);
+        mirror.feedback_batch(&drifted.xs, &drifted.ys).unwrap();
+        let mut reference = InferenceService::new(EngineSpec::base().build());
+        reference.reprogram(&mirror.model()).unwrap();
+        assert_eq!(
+            h.infer(drifted.xs.clone()).unwrap(),
+            reference.infer_all(&drifted.xs).unwrap()
+        );
+        // rows_fed is a lifetime counter: both windows count.
+        assert_eq!(h.online_rows_fed(), Some(192));
+
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn retiring_a_model_drops_its_online_trainer() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 2);
+        h.program(model).unwrap();
+        h.enable_online_feedback(3).unwrap();
+        h.feedback(data.xs.clone(), data.ys.clone()).unwrap();
+        assert!(h.online_rows_fed().is_some());
+        h.retire_model(h.model_route()).unwrap();
+        assert_eq!(h.online_rows_fed(), None);
         h.shutdown();
         join.join();
     }

@@ -7,6 +7,7 @@ use crate::accel::core::{AccelConfig, Core, CoreError};
 use crate::accel::engine as sched;
 use crate::accel::multicore::{MultiCore, ParallelMode};
 use crate::tm::model::TMModel;
+use crate::trainer::online::{FeedbackError, OnlineTrainer};
 
 /// Buildable description of an accelerator engine.  [`Engine`] itself is
 /// not `Clone` (it owns memories, FIFOs and lifetime counters), but the
@@ -171,21 +172,74 @@ impl Metrics {
     }
 }
 
+/// A fine-tune request against a service that never opted in, or a
+/// malformed feedback window.
+#[derive(Debug, thiserror::Error)]
+pub enum FineTuneError {
+    #[error("fine-tuning is not enabled on this service (call enable_fine_tune)")]
+    Disabled,
+    #[error("{0}")]
+    Feedback(#[from] FeedbackError),
+    /// The updated model no longer fits the engine (only reachable when
+    /// a reseed swapped in a larger shape than the engine provisions).
+    #[error("reprogram after feedback: {0}")]
+    Core(#[from] CoreError),
+}
+
 /// Accelerator + counters; every mutation goes through here so the
 /// metrics can never drift from reality.
 pub struct InferenceService {
     pub engine: Engine,
     pub metrics: Metrics,
     model_version: u64,
+    /// Opt-in online feedback state ([`Self::enable_fine_tune`]).
+    tuner: Option<OnlineTrainer>,
 }
 
 impl InferenceService {
     pub fn new(engine: Engine) -> Self {
-        InferenceService { engine, metrics: Metrics::default(), model_version: 0 }
+        InferenceService {
+            engine,
+            metrics: Metrics::default(),
+            model_version: 0,
+            tuner: None,
+        }
     }
 
     pub fn model_version(&self) -> u64 {
         self.model_version
+    }
+
+    /// Opt in to online fine-tuning: attach the incremental trainer
+    /// whose TA memory future [`Self::fine_tune`] windows update.
+    pub fn enable_fine_tune(&mut self, tuner: OnlineTrainer) {
+        self.tuner = Some(tuner);
+    }
+
+    pub fn fine_tune_enabled(&self) -> bool {
+        self.tuner.is_some()
+    }
+
+    /// The attached trainer, if fine-tuning is enabled (the pool layer
+    /// re-warm-starts it when an offline retrain replaces the model).
+    pub fn tuner_mut(&mut self) -> Option<&mut OnlineTrainer> {
+        self.tuner.as_mut()
+    }
+
+    /// Apply one labeled feedback window to the attached trainer and
+    /// reprogram the engine with the updated model — the single-service
+    /// shape of the pool's `Job::Feedback` + mini-fence sequence.
+    /// Feedback time lands in `busy_micros` (the replica is genuinely
+    /// busy, just not inferring); `reprogram` bumps the model version
+    /// like any other install.
+    pub fn fine_tune(&mut self, xs: &[Vec<u8>], ys: &[usize]) -> Result<TMModel, FineTuneError> {
+        let t0 = Instant::now();
+        let tuner = self.tuner.as_mut().ok_or(FineTuneError::Disabled)?;
+        tuner.feedback_batch(xs, ys)?;
+        let model = tuner.model();
+        self.metrics.busy_micros += t0.elapsed().as_micros() as u64;
+        self.reprogram(&model)?;
+        Ok(model)
     }
 
     /// Live reprogram (the paper's no-resynthesis model swap).
@@ -465,6 +519,41 @@ mod tests {
             Err(CoreError::BadBatch { rows: 2, .. })
         ));
         assert_eq!(svc.metrics.errors, 2);
+    }
+
+    #[test]
+    fn fine_tune_is_opt_in_and_updates_the_served_model() {
+        let (model, data) = trained();
+        let mut svc = InferenceService::new(Engine::base());
+        svc.reprogram(&model).unwrap();
+        // Not enabled: typed refusal, nothing mutated.
+        assert!(matches!(
+            svc.fine_tune(&data.xs, &data.ys),
+            Err(FineTuneError::Disabled)
+        ));
+        assert_eq!(svc.model_version(), 1);
+
+        svc.enable_fine_tune(OnlineTrainer::from_model(&model, 41));
+        assert!(svc.fine_tune_enabled());
+        let tuned = svc.fine_tune(&data.xs, &data.ys).unwrap();
+        // The engine now serves the tuned model, version bumped.
+        assert_eq!(svc.model_version(), 2);
+        let preds = svc.infer_all(&data.xs).unwrap();
+        let want: Vec<usize> = data
+            .xs
+            .iter()
+            .map(|x| {
+                let lits = crate::tm::reference::literals_from_features(x);
+                crate::tm::reference::predict_dense(&tuned, &lits)
+            })
+            .collect();
+        assert_eq!(preds, want);
+
+        // Malformed windows surface as typed feedback errors.
+        assert!(matches!(
+            svc.fine_tune(&data.xs[..2], &data.ys[..1]),
+            Err(FineTuneError::Feedback(_))
+        ));
     }
 
     #[test]

@@ -34,7 +34,12 @@ impl XorShift64Star {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Uniform in `[0, n)`.  `n` must be nonzero: the modulus has no
+    /// meaningful answer at 0, and the raw `% 0` would surface as a
+    /// bare division-by-zero panic far from the real bug (an empty
+    /// class set or zero-element draw at the call site).
     pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "XorShift64Star::below(0): empty range (n must be > 0)");
         self.next_u64() % n
     }
 }
@@ -204,6 +209,27 @@ mod tests {
     fn prng_zero_seed_not_stuck() {
         let mut r = XorShift64Star::new(0);
         assert_ne!(r.next_u64(), 0);
+    }
+
+    // Regression: below(0) used to surface as a bare division-by-zero
+    // panic deep in next_u64's caller.  The empty range is a caller bug
+    // (classes == 0 in SynthSpec::generate, or an unguarded
+    // negative-class draw at classes == 1) and must say so.
+    #[test]
+    #[should_panic(expected = "below(0)")]
+    fn below_zero_is_a_clear_panic() {
+        XorShift64Star::new(1).below(0);
+    }
+
+    #[test]
+    fn below_one_is_always_zero() {
+        // The smallest legal range: the classes == 1 edge its callers
+        // must themselves guard (Trainer::update skips the negative
+        // draw entirely) still behaves when reached with n == 1.
+        let mut r = XorShift64Star::new(3);
+        for _ in 0..16 {
+            assert_eq!(r.below(1), 0);
+        }
     }
 
     #[test]

@@ -480,6 +480,22 @@ impl SlicedBatch {
     pub fn plane(&self, feature: usize) -> &[u64] {
         &self.planes[feature * self.slices..(feature + 1) * self.slices]
     }
+
+    /// The 64-row word of one *literal* (interleaved indexing: literal
+    /// `2f` is feature `f`, literal `2f + 1` its complement) in slice
+    /// `slice` — the training-side read of the same transposed planes
+    /// the sliced inference kernel walks.  Note the complement of a
+    /// padding lane reads 1 (padding rows are all-zero feature rows);
+    /// callers must only interpret bits below [`SlicedBatch::rows`].
+    #[inline]
+    pub fn literal_word(&self, lit: usize, slice: usize) -> u64 {
+        let w = self.planes[(lit >> 1) * self.slices + slice];
+        if lit & 1 == 1 {
+            !w
+        } else {
+            w
+        }
+    }
 }
 
 /// Transpose feature rows into 64-row literal planes, reusing `out`'s
@@ -1177,6 +1193,18 @@ mod tests {
         pack_literals_sliced_into(&[vec![1u8]], &mut reused);
         assert_eq!(reused.slices, 1);
         assert_eq!(reused.plane(0), &[1u64]);
+    }
+
+    #[test]
+    fn sliced_literal_word_interleaves_complements() {
+        // literal 2f = feature f's plane word; literal 2f+1 = its
+        // bitwise complement (the online feedback kernel's read path).
+        let rows = vec![vec![1u8, 0], vec![0u8, 1], vec![1u8, 1]];
+        let b = pack_literals_sliced(&rows);
+        assert_eq!(b.literal_word(0, 0), 0b101);
+        assert_eq!(b.literal_word(1, 0), !0b101u64);
+        assert_eq!(b.literal_word(2, 0), 0b110);
+        assert_eq!(b.literal_word(3, 0), !0b110u64);
     }
 
     #[test]

@@ -72,6 +72,7 @@ fn usage() {
          \x20         [--autotune [--schedule abrupt|gradual|recurring]\n\
          \x20          [--budget LUTS,BRAMS,WATTS] [--windows N] [--window-n N] [--drift F]\n\
          \x20          [--canary-fraction F] [--label-free [--label-delay N]]\n\
+         \x20          [--online-feedback [--online-patience N]]\n\
          \x20          [--report-json PATH]]\n\
          \x20 retune  --workload W [--drift F] [--threshold F]\n\
          \x20 report  --workload W\n\
@@ -614,6 +615,12 @@ fn cmd_serve_autotune(opts: &Opts) -> anyhow::Result<()> {
     // labels backfilled `--label-delay` windows late.
     let label_free = opts.has("label-free");
     let label_delay = opts.get_usize("label-delay", 2).max(1);
+    // Online feedback: labeled (or backfilled) windows fine-tune the
+    // serving model through the pool's feedback path first; the full
+    // shape search only runs if the detector stays bad for
+    // `--online-patience` feedback windows.
+    let online_feedback = opts.has("online-feedback");
+    let online_patience = opts.get_usize("online-patience", 3).max(1);
     let report_json = opts.get("report-json", "");
 
     // --budget "<luts>,<brams>,<watts>" or per-axis flags; unset axes
@@ -667,16 +674,23 @@ fn cmd_serve_autotune(opts: &Opts) -> anyhow::Result<()> {
     // window would age out right before its labels arrive and no
     // backfill would ever land.
     cfg.label_backfill_horizon = cfg.label_backfill_horizon.max(label_delay + 1);
+    cfg.online_feedback = online_feedback;
+    cfg.online_patience = online_patience;
     let mut tuner = Autotuner::new(handle.clone(), w.shape.clone(), cfg);
     tuner.install(model)?;
 
     println!(
         "autotuned serving: workload={} replicas={replicas} schedule={:?} threshold={threshold} \
-         canary_fraction={canary_fraction}{}",
+         canary_fraction={canary_fraction}{}{}",
         w.name,
         sched.kind,
         if label_free {
             format!(" label_free=true label_delay={label_delay}")
+        } else {
+            String::new()
+        },
+        if online_feedback {
+            format!(" online_feedback=true online_patience={online_patience}")
         } else {
             String::new()
         }
@@ -745,6 +759,9 @@ fn cmd_serve_autotune(opts: &Opts) -> anyhow::Result<()> {
         stats.replicas.len(),
         stats.version
     );
+    if let Some(rows) = handle.online_rows_fed() {
+        println!("online feedback: {rows} labeled rows folded into the serving model");
+    }
     if !report_json.is_empty() {
         // Splice the per-model rollups into the tuner's own report so one
         // JSON file carries both the tuning timeline and the tenant view.

@@ -37,6 +37,8 @@ const MAGIC: &[u8; 4] = b"RTTM";
 const VERSION: u16 = 1;
 /// Minor wire version carrying the named-model header extension.
 pub const VERSION_NAMED: u16 = 2;
+/// Longest shape/deployment name the u16 length prefix can frame.
+pub const MAX_NAME_LEN: usize = u16::MAX as usize;
 
 /// Errors loading a model file.
 #[derive(Debug, thiserror::Error)]
@@ -69,6 +71,12 @@ pub enum FileError {
     TagMismatch { stored: u64, computed: u64 },
     #[error("malformed stream: {0}")]
     BadStream(#[from] isa::IsaError),
+    /// A shape or deployment name longer than the wire format's u16
+    /// length field can frame.  Rejected at save time: the unchecked
+    /// `len as u16` cast used to truncate the length field and emit a
+    /// CRC-valid but unreadable file.
+    #[error("{field} name is {len} bytes; the .rttm name length field caps at {MAX_NAME_LEN}")]
+    NameTooLong { field: &'static str, len: usize },
     /// The decoded stream carries more clauses of one polarity than the
     /// declared shape has slots for (each polarity owns half the clause
     /// indices) — a forged shape/stream combination.
@@ -302,8 +310,19 @@ pub fn from_bytes(data: &[u8]) -> Result<(TMShape, Vec<Instr>), FileError> {
     from_bytes_full(data).map(|(shape, instrs, _)| (shape, instrs))
 }
 
+/// Reject names the u16 length prefix cannot frame.  Checked BEFORE
+/// `File::create`, so an oversized name never leaves a corrupt (or
+/// even partial) file on disk.
+fn check_name(field: &'static str, name: &str) -> Result<(), FileError> {
+    if name.len() > MAX_NAME_LEN {
+        return Err(FileError::NameTooLong { field, len: name.len() });
+    }
+    Ok(())
+}
+
 /// Write a model file (v1).
 pub fn save(model: &TMModel, path: impl AsRef<std::path::Path>) -> Result<(), FileError> {
+    check_name("shape", &model.shape.name)?;
     let mut f = std::fs::File::create(path)?;
     f.write_all(&to_bytes(model))?;
     Ok(())
@@ -315,6 +334,8 @@ pub fn save_named(
     deploy_name: &str,
     path: impl AsRef<std::path::Path>,
 ) -> Result<(), FileError> {
+    check_name("shape", &model.shape.name)?;
+    check_name("deployment", deploy_name)?;
     let mut f = std::fs::File::create(path)?;
     f.write_all(&to_bytes_named(model, deploy_name))?;
     Ok(())
@@ -593,6 +614,55 @@ mod tests {
         let (_, _, tag) = load_full(&named).unwrap();
         assert_eq!(tag.unwrap().name, "edge-7");
         std::fs::remove_file(&named).ok();
+    }
+
+    // Regression: `name.len() as u16` used to truncate silently for
+    // names past 65535 bytes, sealing a CRC-valid file whose declared
+    // name length disagreed with the bytes that followed — unreadable
+    // on load, undetectable at save.  Both writers must now refuse
+    // before touching the filesystem.
+    #[test]
+    fn oversized_shape_name_rejected_at_save() {
+        let mut model = trained();
+        model.shape.name = "x".repeat(MAX_NAME_LEN + 1);
+        let path = std::env::temp_dir().join("rttm_test_name_too_long.rttm");
+        std::fs::remove_file(&path).ok();
+        let err = save(&model, &path).unwrap_err();
+        assert!(
+            matches!(err, FileError::NameTooLong { field: "shape", len } if len == MAX_NAME_LEN + 1),
+            "got {err:?}"
+        );
+        assert!(!path.exists(), "no file may be created for a rejected save");
+
+        // The longest legal name still round-trips.
+        model.shape.name = "y".repeat(MAX_NAME_LEN);
+        save(&model, &path).unwrap();
+        let (shape, _) = load(&path).unwrap();
+        assert_eq!(shape.name.len(), MAX_NAME_LEN);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn oversized_deploy_name_rejected_at_save_named() {
+        let model = trained();
+        let path = std::env::temp_dir().join("rttm_test_deploy_too_long.rttm");
+        std::fs::remove_file(&path).ok();
+        let long = "d".repeat(MAX_NAME_LEN + 1);
+        let err = save_named(&model, &long, &path).unwrap_err();
+        assert!(
+            matches!(err, FileError::NameTooLong { field: "deployment", len } if len == MAX_NAME_LEN + 1),
+            "got {err:?}"
+        );
+        assert!(!path.exists(), "no file may be created for a rejected save");
+
+        // save_named guards the shape name too (it frames both).
+        let mut bad_shape = trained();
+        bad_shape.shape.name = "x".repeat(MAX_NAME_LEN + 1);
+        assert!(matches!(
+            save_named(&bad_shape, "ok", &path),
+            Err(FileError::NameTooLong { field: "shape", .. })
+        ));
+        assert!(!path.exists());
     }
 
     #[test]

@@ -12,6 +12,8 @@ use crate::datasets::synth::{Dataset, XorShift64Star};
 use crate::tm::model::TMModel;
 use crate::tm::reference;
 
+pub mod online;
+
 /// TA-state trainer over a dense state vector `[class][clause][literal]`.
 pub struct Trainer {
     pub shape: TMShape,
@@ -115,8 +117,31 @@ impl Trainer {
         }
     }
 
-    /// Train for `epochs` passes over the dataset.
+    /// Train for `epochs` passes over the dataset, visiting the samples
+    /// in a fresh order each epoch.  The shuffle is Fisher–Yates off the
+    /// trainer's OWN PRNG stream, so the epoch orders are part of the
+    /// seeded training trajectory: same seed, same orders, same model —
+    /// but no two epochs replay the identical sample sequence (identical
+    /// order every epoch is a sample-order bias that compounds once the
+    /// same `update` path runs online).
     pub fn fit(&mut self, data: &Dataset, epochs: usize) {
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        for _ in 0..epochs {
+            for i in (1..order.len()).rev() {
+                // i >= 1, so the draw range is never empty.
+                let j = self.rng.below(i as u64 + 1) as usize;
+                order.swap(i, j);
+            }
+            for &k in &order {
+                self.update(&data.xs[k], data.ys[k]);
+            }
+        }
+    }
+
+    /// Train visiting the samples in raw dataset order every epoch —
+    /// the exact per-sample stream [`online::OnlineTrainer`] replays,
+    /// and what the bit-identical parity tests compare against.
+    pub fn fit_ordered(&mut self, data: &Dataset, epochs: usize) {
         for _ in 0..epochs {
             for (x, &y) in data.xs.iter().zip(&data.ys) {
                 self.update(x, y);
@@ -191,6 +216,9 @@ mod tests {
         assert!(model.sparsity() < 0.35, "sparsity {}", model.sparsity());
     }
 
+    // Re-pinned over the per-epoch shuffle: the epoch orders are drawn
+    // from the trainer's own seeded stream, so same-seed runs replay
+    // the identical trajectory, shuffle included.
     #[test]
     fn deterministic_given_seed() {
         let shape = quick_shape();
@@ -198,6 +226,22 @@ mod tests {
         let a = train_model(&shape, &data, 2, 9);
         let b = train_model(&shape, &data, 2, 9);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fit_shuffles_while_fit_ordered_replays_raw_order() {
+        let shape = quick_shape();
+        let data = SynthSpec::new(16, 2, 64).seed(4).generate();
+        let mut shuffled = Trainer::new(shape.clone(), 9);
+        shuffled.fit(&data, 3);
+        let mut ordered = Trainer::new(shape, 9);
+        ordered.fit_ordered(&data, 3);
+        // The shuffle consumes PRNG draws and reorders every epoch, so
+        // the two trajectories must diverge at the TA-state level.
+        assert_ne!(
+            shuffled.states, ordered.states,
+            "fit must not walk the dataset in raw order every epoch"
+        );
     }
 
     #[test]

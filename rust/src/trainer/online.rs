@@ -1,0 +1,414 @@
+//! Incremental TA feedback on the live path — the paper's on-field
+//! recalibration story, minus the resynthesis.
+//!
+//! [`OnlineTrainer::feedback_batch`] applies the exact Type I / Type II
+//! feedback of [`super::Trainer`] to a labeled sample window, but
+//! evaluates clause outputs through the same transposed literal planes
+//! the bit-sliced inference kernel walks ([`isa::SlicedBatch`]): one
+//! `u64` word per (class, clause) holds the clause's output across 64
+//! rows at once.  TA-state updates stay scalar (they are inherently
+//! per-sample, per-literal), but the clause walk — the part that is
+//! O(clauses x literals) per sample in the scalar trainer — amortizes
+//! to one AND-fold per include-set change per 64-row block.
+//!
+//! ## Bit-identical semantics
+//!
+//! The kernel is NOT an approximation: fed the same sample stream as
+//! [`super::Trainer::fit_ordered`] from the same seed, it produces
+//! bit-identical TA states (pinned by the parity tests below).  Two
+//! properties make that possible:
+//!
+//! * clause output depends only on the clause's own *include set* —
+//!   feedback to other clauses can never invalidate it, so a cached
+//!   64-row output word stays valid until one of the clause's own TA
+//!   states crosses the include boundary (tracked by a dirty flag and
+//!   recomputed lazily);
+//! * every PRNG draw of the scalar trainer is replayed in the same
+//!   order: per-clause gate draw, per-literal 1/s penalty draws (only
+//!   where the scalar path draws), and the negative-class draw between
+//!   the two class-feedback passes.
+
+use crate::config::TMShape;
+use crate::datasets::synth::XorShift64Star;
+use crate::isa::{self, SlicedBatch, SLICE_LANES};
+use crate::tm::model::TMModel;
+
+/// A malformed feedback window.  Validation runs BEFORE any state is
+/// touched: a rejected batch leaves the trainer exactly as it was.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum FeedbackError {
+    #[error("feedback batch has {xs} rows but {ys} labels")]
+    LengthMismatch { xs: usize, ys: usize },
+    #[error("feedback row {row} has {got} features; the model expects {want}")]
+    WidthMismatch { row: usize, got: usize, want: usize },
+    #[error("feedback row {row} labeled {label}, but the model has {classes} classes")]
+    BadLabel { row: usize, label: usize, classes: usize },
+}
+
+/// Incremental trainer state: the dense TA vector plus the sliced
+/// clause-output cache for the block currently being fed.
+pub struct OnlineTrainer {
+    pub shape: TMShape,
+    /// `[class][clause][literal]`, identical layout and boundary
+    /// semantics to [`super::Trainer::states`].
+    pub states: Vec<i32>,
+    rng: XorShift64Star,
+    /// Transposed feature planes of the current block (reused buffer).
+    batch: SlicedBatch,
+    /// 64-row clause-output words, `[class * clauses + clause]`, valid
+    /// for the slice currently being walked where `!dirty`.
+    masks: Vec<u64>,
+    dirty: Vec<bool>,
+    rows_fed: u64,
+}
+
+impl OnlineTrainer {
+    /// Fresh trainer with the same seeded init as
+    /// [`super::Trainer::new`] — draw-for-draw identical, so the two
+    /// start from bit-identical states.
+    pub fn new(shape: TMShape, seed: u64) -> Self {
+        let mut rng = XorShift64Star::new(seed);
+        let n = shape.n_states;
+        let states: Vec<i32> = (0..shape.total_tas())
+            .map(|_| n - 1 - i64::from(rng.next_f64() < 0.5) as i32)
+            .collect();
+        Self::assemble(shape, states, rng)
+    }
+
+    /// Warm-start from a deployed model's include set: included TAs sit
+    /// just above the boundary (`n_states`), excluded just below
+    /// (`n_states - 1`), so early feedback can still flip either way.
+    pub fn from_model(model: &TMModel, seed: u64) -> Self {
+        let mut s = Self::assemble(model.shape.clone(), Vec::new(), XorShift64Star::new(seed));
+        s.reseed_from_model(model);
+        s
+    }
+
+    fn assemble(shape: TMShape, states: Vec<i32>, rng: XorShift64Star) -> Self {
+        let total_clauses = shape.total_clauses();
+        OnlineTrainer {
+            shape,
+            states,
+            rng,
+            batch: SlicedBatch::default(),
+            masks: vec![0; total_clauses],
+            dirty: vec![true; total_clauses],
+            rows_fed: 0,
+        }
+    }
+
+    /// Re-warm-start from `model`, keeping the PRNG stream.  Called by
+    /// the serving layer whenever an *offline* retrain or canary
+    /// promote installs a model this trainer did not produce — its TA
+    /// memory is stale for the new include set.  Handles shape changes
+    /// (a `budget_search` winner may differ in clauses/t/s/n_states).
+    pub fn reseed_from_model(&mut self, model: &TMModel) {
+        self.shape = model.shape.clone();
+        let n = self.shape.n_states;
+        let lits = self.shape.literals();
+        self.states.clear();
+        self.states.reserve(self.shape.total_tas());
+        for class in 0..self.shape.classes {
+            for clause in 0..self.shape.clauses {
+                for lit in 0..lits {
+                    self.states
+                        .push(if model.include(class, clause, lit) { n } else { n - 1 });
+                }
+            }
+        }
+        self.masks = vec![0; self.shape.total_clauses()];
+        self.dirty = vec![true; self.shape.total_clauses()];
+    }
+
+    /// Total labeled rows applied over this trainer's lifetime.
+    pub fn rows_fed(&self) -> u64 {
+        self.rows_fed
+    }
+
+    /// Snapshot the include actions as a dense model (same boundary as
+    /// [`super::Trainer::model`]).
+    pub fn model(&self) -> TMModel {
+        TMModel::from_ta_states(self.shape.clone(), &self.states)
+    }
+
+    /// Apply one labeled feedback window.  Samples are processed in
+    /// order, one full `update` (positive + sampled-negative feedback)
+    /// each — the exact stream [`super::Trainer::fit_ordered`] walks.
+    /// Returns the number of rows applied.
+    pub fn feedback_batch(&mut self, xs: &[Vec<u8>], ys: &[usize]) -> Result<usize, FeedbackError> {
+        if xs.len() != ys.len() {
+            return Err(FeedbackError::LengthMismatch { xs: xs.len(), ys: ys.len() });
+        }
+        if xs.is_empty() {
+            return Ok(0);
+        }
+        let want = self.shape.features;
+        for (row, (x, &y)) in xs.iter().zip(ys).enumerate() {
+            if x.len() != want {
+                return Err(FeedbackError::WidthMismatch { row, got: x.len(), want });
+            }
+            if y >= self.shape.classes {
+                return Err(FeedbackError::BadLabel { row, label: y, classes: self.shape.classes });
+            }
+        }
+        isa::pack_literals_sliced_into(xs, &mut self.batch);
+        for slice in 0..self.batch.slices {
+            // New 64-row block: every cached clause-output word frames
+            // the previous block's rows.
+            self.dirty.iter_mut().for_each(|d| *d = true);
+            let lo = slice * SLICE_LANES;
+            let hi = (lo + SLICE_LANES).min(xs.len());
+            for r in lo..hi {
+                let bit = r - lo;
+                let y = ys[r];
+                self.class_feedback(y, slice, bit, 1);
+                if self.shape.classes > 1 {
+                    let neg = (y + 1 + self.rng.below(self.shape.classes as u64 - 1) as usize)
+                        % self.shape.classes;
+                    self.class_feedback(neg, slice, bit, -1);
+                }
+            }
+        }
+        self.rows_fed += xs.len() as u64;
+        Ok(xs.len())
+    }
+
+    #[inline]
+    fn ta_base(&self, class: usize, clause: usize) -> usize {
+        (class * self.shape.clauses + clause) * self.shape.literals()
+    }
+
+    /// Clause-output word for the current slice, recomputed from the
+    /// include set if a boundary crossing dirtied it.  An empty include
+    /// set AND-folds nothing: all 64 lanes output 1, matching the
+    /// scalar trainer's empty-clause-is-true convention.
+    fn ensure_mask(&mut self, class: usize, clause: usize, slice: usize) -> u64 {
+        let mi = class * self.shape.clauses + clause;
+        if self.dirty[mi] {
+            let base = self.ta_base(class, clause);
+            let n = self.shape.n_states;
+            let mut m = !0u64;
+            for lit in 0..self.shape.literals() {
+                if self.states[base + lit] >= n {
+                    m &= self.batch.literal_word(lit, slice);
+                }
+            }
+            self.masks[mi] = m;
+            self.dirty[mi] = false;
+        }
+        self.masks[mi]
+    }
+
+    fn class_sum(&mut self, class: usize, slice: usize, bit: usize) -> i32 {
+        let mut sum = 0;
+        for clause in 0..self.shape.clauses {
+            if (self.ensure_mask(class, clause, slice) >> bit) & 1 == 1 {
+                sum += TMModel::polarity(clause);
+            }
+        }
+        sum
+    }
+
+    /// One class slice of feedback for the sample at (`slice`, `bit`) —
+    /// the sliced twin of [`super::Trainer`]'s `class_feedback`, with
+    /// the identical draw order.
+    fn class_feedback(&mut self, class: usize, slice: usize, bit: usize, sign: i32) {
+        let t = self.shape.t;
+        let votes = self.class_sum(class, slice, bit).clamp(-t, t);
+        let p = (t as f64 - sign as f64 * votes as f64) / (2.0 * t as f64);
+        let inv_s = 1.0 / self.shape.s;
+        let literals = self.shape.literals();
+        let n = self.shape.n_states;
+        for clause in 0..self.shape.clauses {
+            if self.rng.next_f64() >= p {
+                continue; // feedback gate (one draw per clause, always)
+            }
+            let out = (self.ensure_mask(class, clause, slice) >> bit) & 1 == 1;
+            let pol = TMModel::polarity(clause);
+            let base = self.ta_base(class, clause);
+            let mut flipped = false;
+            if pol == sign {
+                // Type I: push the clause toward firing on this sample.
+                for lit in 0..literals {
+                    let i = base + lit;
+                    let lv = (self.batch.literal_word(lit, slice) >> bit) & 1;
+                    if out && lv == 1 {
+                        // boost-true-positive: deterministic, no draw.
+                        let old = self.states[i];
+                        self.states[i] = (old + 1).min(2 * n - 1);
+                        flipped |= old < n && self.states[i] >= n;
+                    } else if self.rng.next_f64() < inv_s {
+                        let old = self.states[i];
+                        self.states[i] = (old - 1).max(0);
+                        flipped |= old >= n && self.states[i] < n;
+                    }
+                }
+            } else if out {
+                // Type II: include a contradicting literal (no draws).
+                for lit in 0..literals {
+                    if (self.batch.literal_word(lit, slice) >> bit) & 1 == 0 {
+                        let i = base + lit;
+                        if self.states[i] < n {
+                            self.states[i] += 1;
+                            flipped |= self.states[i] >= n;
+                        }
+                    }
+                }
+            }
+            if flipped {
+                // An include-boundary crossing invalidates this
+                // clause's cached output word for later rows.
+                self.dirty[class * self.shape.clauses + clause] = true;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::SynthSpec;
+    use crate::tm::reference;
+    use crate::tm::serialize;
+    use crate::trainer::Trainer;
+
+    fn shape2() -> TMShape {
+        TMShape {
+            name: "online2".into(),
+            features: 16,
+            classes: 2,
+            clauses: 10,
+            t: 4,
+            s: 3.0,
+            train_batch: 32,
+            n_states: 128,
+        }
+    }
+
+    fn shape4() -> TMShape {
+        TMShape {
+            name: "online4".into(),
+            features: 12,
+            classes: 4,
+            clauses: 8,
+            t: 3,
+            s: 2.5,
+            train_batch: 32,
+            n_states: 64,
+        }
+    }
+
+    // The tentpole invariant: same seed, same sample stream => the
+    // sliced online kernel and the scalar offline trainer are the SAME
+    // trajectory, bit for bit, regardless of how the stream is chopped
+    // into feedback windows.
+    #[test]
+    fn parity_bit_identical_with_fit_ordered() {
+        let data = SynthSpec::new(16, 2, 192).noise(0.08).seed(7).generate();
+        let mut offline = Trainer::new(shape2(), 9);
+        offline.fit_ordered(&data, 1);
+        let mut online = OnlineTrainer::new(shape2(), 9);
+        // Uneven windows straddling the 64-row slice boundary.
+        for (xs, ys) in data.xs.chunks(50).zip(data.ys.chunks(50)) {
+            online.feedback_batch(xs, ys).unwrap();
+        }
+        assert_eq!(online.states, offline.states, "TA states must be bit-identical");
+        assert_eq!(
+            serialize::to_bytes(&online.model()),
+            serialize::to_bytes(&offline.model()),
+            "serialized models must be byte-identical"
+        );
+        assert_eq!(online.rows_fed(), 192);
+    }
+
+    #[test]
+    fn parity_holds_multiclass_and_multiple_epochs() {
+        // 4 classes exercises the negative-class draw and Type II on
+        // every sample; two passes = fit_ordered's epochs == 2.
+        let data = SynthSpec::new(12, 4, 150).noise(0.1).seed(3).generate();
+        let mut offline = Trainer::new(shape4(), 21);
+        offline.fit_ordered(&data, 2);
+        let mut online = OnlineTrainer::new(shape4(), 21);
+        for _ in 0..2 {
+            online.feedback_batch(&data.xs, &data.ys).unwrap();
+        }
+        assert_eq!(online.states, offline.states);
+    }
+
+    #[test]
+    fn single_row_windows_match_bulk_window() {
+        // Window framing is irrelevant: 1-row batches == one big batch.
+        let data = SynthSpec::new(16, 2, 70).noise(0.05).seed(11).generate();
+        let mut bulk = OnlineTrainer::new(shape2(), 5);
+        bulk.feedback_batch(&data.xs, &data.ys).unwrap();
+        let mut dripped = OnlineTrainer::new(shape2(), 5);
+        for (x, &y) in data.xs.iter().zip(&data.ys) {
+            dripped.feedback_batch(std::slice::from_ref(x), &[y]).unwrap();
+        }
+        assert_eq!(bulk.states, dripped.states);
+    }
+
+    #[test]
+    fn rejected_batches_leave_state_untouched() {
+        let mut tr = OnlineTrainer::new(shape2(), 1);
+        let before = tr.states.clone();
+        assert_eq!(
+            tr.feedback_batch(&[vec![0; 16]], &[0, 1]),
+            Err(FeedbackError::LengthMismatch { xs: 1, ys: 2 })
+        );
+        assert_eq!(
+            tr.feedback_batch(&[vec![0; 15]], &[0]),
+            Err(FeedbackError::WidthMismatch { row: 0, got: 15, want: 16 })
+        );
+        assert_eq!(
+            tr.feedback_batch(&[vec![0; 16], vec![0; 16]], &[0, 2]),
+            Err(FeedbackError::BadLabel { row: 1, label: 2, classes: 2 })
+        );
+        assert_eq!(tr.states, before, "validation must precede mutation");
+        assert_eq!(tr.rows_fed(), 0);
+        assert_eq!(tr.feedback_batch(&[], &[]), Ok(0));
+    }
+
+    #[test]
+    fn from_model_snapshot_roundtrips() {
+        let shape = shape2();
+        let data = SynthSpec::new(16, 2, 128).noise(0.05).seed(2).generate();
+        let model = crate::trainer::train_model(&shape, &data, 2, 4);
+        let tr = OnlineTrainer::from_model(&model, 77);
+        // Warm-started states snapshot straight back to the model.
+        assert_eq!(tr.model(), model);
+    }
+
+    #[test]
+    fn reseed_handles_shape_changes() {
+        let mut tr = OnlineTrainer::new(shape2(), 1);
+        let other = TMModel::empty(TMShape::synthetic(8, 3, 6));
+        tr.reseed_from_model(&other);
+        assert_eq!(tr.shape.features, 8);
+        assert_eq!(tr.states.len(), other.shape.total_tas());
+        // And it can immediately accept feedback for the new shape.
+        let data = SynthSpec::new(8, 3, 40).seed(6).generate();
+        tr.feedback_batch(&data.xs, &data.ys).unwrap();
+    }
+
+    #[test]
+    fn online_feedback_recovers_a_drifted_model() {
+        // The live-path story in miniature: a model trained pre-drift
+        // degrades on drifted data; labeled feedback windows pull its
+        // accuracy back without a retrain.
+        let shape = shape2();
+        let clean = SynthSpec::new(16, 2, 384).noise(0.05).seed(8).generate();
+        let model = crate::trainer::train_model(&shape, &clean, 4, 3);
+        let drifted = SynthSpec::new(16, 2, 384).noise(0.05).seed(8).drift(0.4).generate();
+        let before = reference::accuracy(&model, &drifted.xs, &drifted.ys);
+        let mut tr = OnlineTrainer::from_model(&model, 13);
+        for (xs, ys) in drifted.xs.chunks(64).zip(drifted.ys.chunks(64)) {
+            tr.feedback_batch(xs, ys).unwrap();
+        }
+        let after = reference::accuracy(&tr.model(), &drifted.xs, &drifted.ys);
+        assert!(
+            after > 0.9 && after > before,
+            "online feedback failed to recover: {before:.3} -> {after:.3}"
+        );
+    }
+}

@@ -27,6 +27,7 @@ use rttm::coordinator::{CanaryVerdict, EngineSpec};
 use rttm::datasets::workloads::DriftSchedule;
 use rttm::model_cost::energy::EnergyModel;
 use rttm::model_cost::resources::{estimate, fitted_config, ResourceBudget};
+use rttm::tm::serialize::{load_full, save_named, to_bytes_named, to_model};
 
 #[test]
 #[ignore = "slow (live drift schedule + retrains); runs in the CI --ignored job"]
@@ -143,6 +144,127 @@ fn autotuner_recovers_from_abrupt_drift_through_the_canary_gate() {
         budget.admits(&est, wattage),
         "deployed model exceeds budget: {est:?} @ {wattage} W"
     );
+
+    pool.shutdown();
+}
+
+#[test]
+#[ignore = "slow (live drift schedule + online feedback); runs in the CI --ignored job"]
+fn online_feedback_recovers_drift_with_zero_searches() {
+    // The cheap recovery path, live: drift arrives, labeled windows are
+    // folded into the serving model through `ServiceHandle::feedback`
+    // (one TA-state sweep per window, each broadcast behind the version
+    // fence), and the detector clears WITHOUT ever launching a
+    // budget_search — zero SearchCompleted / Swapped / canary events.
+    let w = drifty_workload();
+    // 14 windows x 256 labeled samples; drift 0.4 arrives at window 4.
+    let sched = DriftSchedule::abrupt(14, 256, 4, 0.4).seed(7);
+    let model0 = train_initial(&w, &sched, 512);
+
+    let pool = spawn_harness(EngineSpec::base(), 3);
+    let handle = pool.handle.clone();
+
+    let mut cfg = AutotuneConfig::new(ResourceBudget::unlimited());
+    cfg.accuracy_floor = 0.85;
+    cfg.patience = 2;
+    cfg.online_feedback = true; // the path under test
+    cfg.online_patience = 9; // every remaining window before escalating
+    cfg.background = false;
+    cfg.seed = 17;
+    let mut tuner = Autotuner::new(handle.clone(), w.shape.clone(), cfg);
+    tuner.install(model0.clone()).unwrap();
+
+    // Concurrent client traffic across every feedback mini-fence: every
+    // request must succeed.
+    let clean = sched.training_set(&w, 64);
+    let traffic = Traffic::start(handle.clone(), clean.xs[..32].to_vec());
+
+    for win in &sched.stream(&w) {
+        tuner.observe_window(&win.xs, &win.ys).unwrap();
+        assert!(!tuner.is_searching(), "online path must not launch a search");
+    }
+    traffic.stop_assert_clean();
+
+    let report = &tuner.report;
+    assert_eq!(report.windows.len(), sched.windows);
+
+    // --- the story: drift, feedback windows, recovery — no search ------
+    assert!(report.events.iter().any(|e| matches!(e, AutotuneEvent::DriftDetected { .. })));
+    let recovered_after = report
+        .events
+        .iter()
+        .find_map(|e| match e {
+            AutotuneEvent::OnlineRecovered { fed_windows, .. } => Some(*fed_windows),
+            _ => None,
+        })
+        .unwrap_or_else(|| panic!("online feedback never recovered: {:?}", report.events));
+    assert!((1..=9).contains(&recovered_after), "fed {recovered_after} windows");
+    assert!(
+        !report.events.iter().any(|e| matches!(
+            e,
+            AutotuneEvent::OnlineEscalated { .. }
+                | AutotuneEvent::SearchCompleted { .. }
+                | AutotuneEvent::Swapped { .. }
+                | AutotuneEvent::CanaryStarted { .. }
+        )),
+        "zero budget_search events allowed: {:?}",
+        report.events
+    );
+
+    // --- every feedback window rode the fence: strictly monotone -------
+    let fence_versions: Vec<u64> = report
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            AutotuneEvent::OnlineFeedback { version, samples, .. } => {
+                assert_eq!(*samples, 256);
+                Some(*version)
+            }
+            _ => None,
+        })
+        .collect();
+    assert!(!fence_versions.is_empty());
+    assert!(
+        fence_versions.windows(2).all(|p| p[1] > p[0]),
+        "feedback fence versions not strictly monotone: {fence_versions:?}"
+    );
+    // install(1) + one broadcast per feedback window, nothing else.
+    assert_eq!(handle.pool_stats().version, 1 + fence_versions.len() as u64);
+    assert_versions_strictly_monotone(report);
+    // The replica-side trainer folded exactly the fed rows.
+    assert_eq!(handle.online_rows_fed(), Some(256 * fence_versions.len() as u64));
+
+    // --- accuracy: dip at the drift, recovered on the drifted dist -----
+    let pre_drift = mean_accuracy(report, 0..4);
+    assert!(pre_drift > 0.85, "pre-drift accuracy {pre_drift}");
+    let dipped = mean_accuracy(report, 4..6);
+    assert!(dipped < 0.85, "drift must actually degrade accuracy, got {dipped}");
+    let holdout = w.drifted_dataset(256, sched.seed, 0.4);
+    let preds = handle.infer(holdout.xs.clone()).unwrap();
+    let hits = preds.iter().zip(&holdout.ys).filter(|(p, y)| p == y).count();
+    let recovered = hits as f64 / holdout.ys.len() as f64;
+    assert!(recovered >= 0.80, "fine-tuned model still drifted: {recovered:.3}");
+
+    // --- the online-updated model is durable: byte-identical round-trip
+    let deployed = handle
+        .registered_models()
+        .into_iter()
+        .find(|e| e.id == handle.model_route())
+        .expect("the serving model is registered")
+        .model;
+    assert_ne!(deployed.as_ref(), &model0, "feedback never reached the registry");
+    let path = std::env::temp_dir().join("rttm_live_online_tuned.rttm");
+    save_named(&deployed, "online-tuned", &path).unwrap();
+    let saved = std::fs::read(&path).unwrap();
+    let (shape, instrs, tag) = load_full(&path).unwrap();
+    assert_eq!(tag.unwrap().name, "online-tuned");
+    let reloaded = to_model(shape, &instrs).unwrap();
+    assert_eq!(
+        to_bytes_named(&reloaded, "online-tuned"),
+        saved,
+        "online-updated model does not round-trip byte-identically"
+    );
+    std::fs::remove_file(&path).ok();
 
     pool.shutdown();
 }

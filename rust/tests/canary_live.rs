@@ -23,7 +23,9 @@ use rttm::coordinator::{CanaryVerdict, EngineSpec, InferenceService};
 use rttm::datasets::synth::Dataset;
 use rttm::datasets::workloads::DriftSchedule;
 use rttm::model_cost::energy::EnergyModel;
-use rttm::model_cost::resources::{estimate, fitted_config, ResourceBudget};
+use rttm::model_cost::resources::{
+    compressed_model_bytes, estimate, fitted_config, ResourceBudget,
+};
 use rttm::TMModel;
 
 /// Deterministic trainer that hands out a scripted sequence of
@@ -50,6 +52,7 @@ impl ShadowTrainer for QueueTrainer {
                 instructions: rttm::isa::instruction_count(&model),
                 estimate: est,
                 watts,
+                model_bytes: compressed_model_bytes(&model),
                 admitted: true,
             }],
             winner: Some(model),
