@@ -396,6 +396,49 @@ impl Core {
         self.program(model.shape.classes, model.shape.clauses, &instrs)
     }
 
+    /// FNV-1a digest over EVERY derived program buffer this core could
+    /// execute from (SoA walk, sliced planes, compressed include lists,
+    /// plus the kernel-selection bit) — the scrub layer's fence-time
+    /// record and re-verify primitive.  `None` until programmed.
+    pub fn program_digest(&self) -> Option<u64> {
+        if !self.is_programmed() {
+            return None;
+        }
+        let mut d = isa::ProgramDigest::new();
+        d.u64(isa::digest_soa(&self.prog));
+        d.u64(isa::digest_sliced(&self.sliced));
+        d.u64(isa::digest_compressed(&self.compressed));
+        d.byte(self.use_compressed as u8);
+        Some(d.finish())
+    }
+
+    /// Fault injection: flip `n_bits` seeded pseudo-random bits across
+    /// this core's OWN derived-program buffers (never a shared model) —
+    /// the software analog of an SEU in model BRAM.  Bits are spread
+    /// over whichever derivations exist, so whichever kernel the auto
+    /// path selected is corrupted with certainty (distinct-bit flips
+    /// land in every non-empty derivation when `n_bits >= 3`).  Returns
+    /// bits actually flipped (0 when unprogrammed).
+    pub fn flip_program_bits(&mut self, seed: u64, n_bits: u32) -> u32 {
+        if !self.is_programmed() || n_bits == 0 {
+            return 0;
+        }
+        // Deterministic round-robin over the three derivations with
+        // per-derivation sub-seeds: every derivation that executes
+        // (use_compressed picks ONE bulk kernel, but run_batch may
+        // still walk the SoA form) gets at least one flip when
+        // n_bits >= 3.
+        let each = n_bits.div_ceil(3);
+        let a = isa::flip_soa_bits(&mut self.prog, seed, each);
+        let b = isa::flip_sliced_bits(&mut self.sliced, seed.wrapping_add(1), each);
+        let c = isa::flip_compressed_bits(
+            &mut self.compressed,
+            seed.wrapping_add(2),
+            n_bits.saturating_sub(2 * each).max(1),
+        );
+        a + b + c
+    }
+
     /// Feed raw stream words (the real programming interface).  Returns
     /// batch results for any inference payloads in the stream.
     pub fn feed_stream(&mut self, words: &[u64]) -> Result<Vec<BatchResult>, CoreError> {

@@ -166,6 +166,39 @@ impl MultiCore {
         Ok(())
     }
 
+    /// Combined FNV-1a digest over every programmed core's derived
+    /// program buffers (idle cores hash as absent) — see
+    /// [`Core::program_digest`].  `None` until any core is programmed.
+    pub fn program_digest(&self) -> Option<u64> {
+        let mut d = crate::isa::ProgramDigest::new();
+        let mut any = false;
+        for core in &self.cores {
+            match core.program_digest() {
+                Some(h) => {
+                    any = true;
+                    d.byte(1);
+                    d.u64(h);
+                }
+                None => d.byte(0),
+            }
+        }
+        any.then(|| d.finish())
+    }
+
+    /// Fault injection across the split: flip `n_bits` seeded bits in
+    /// ONE programmed core's derived buffers (seed picks the victim
+    /// core deterministically).  Returns bits flipped.
+    pub fn flip_program_bits(&mut self, seed: u64, n_bits: u32) -> u32 {
+        let programmed: Vec<usize> = (0..self.cores.len())
+            .filter(|&i| self.cores[i].is_programmed())
+            .collect();
+        if programmed.is_empty() {
+            return 0;
+        }
+        let victim = programmed[(seed % programmed.len() as u64) as usize];
+        self.cores[victim].flip_program_bits(seed, n_bits)
+    }
+
     /// True when the current policy threads `batches` worth of work.
     fn use_threads(&self, batches: usize) -> bool {
         match self.parallel {

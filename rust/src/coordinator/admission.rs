@@ -515,8 +515,114 @@ impl AutoscaleConfig {
     }
 }
 
+/// Self-healing integrity policy: model-memory scrubbing plus the
+/// per-replica flap circuit breaker (EXPERIMENTS.md §Integrity).
+///
+/// Scrubbing treats the registry's golden model `Arc` as the single
+/// point of truth: each replica records an FNV-1a digest of its derived
+/// program buffers at fence time, re-verifies it before serving and on
+/// every background scrub tick, and re-derives from the golden copy on
+/// mismatch.  The breaker quarantines a replica that keeps tripping
+/// (panic respawns, scrub corruptions, failed heals) with exponential
+/// backoff; a half-open probe gates rejoin.
+#[derive(Debug, Clone)]
+pub struct IntegrityConfig {
+    /// Background scrub cadence.  `None` disables the integrity layer
+    /// entirely (no digests recorded, no pre-serve verify, no scrubber
+    /// thread) — the zero-overhead default.
+    pub scrub_interval: Option<Duration>,
+    /// Trips inside `breaker_window` that quarantine a replica.
+    pub breaker_trips: u32,
+    /// Sliding window over which trips are counted.
+    pub breaker_window: Duration,
+    /// First quarantine hold; doubles per consecutive quarantine.
+    pub quarantine_base: Duration,
+    /// Backoff ceiling for the exponential quarantine hold.
+    pub quarantine_max: Duration,
+}
+
+impl Default for IntegrityConfig {
+    fn default() -> Self {
+        IntegrityConfig {
+            scrub_interval: None,
+            breaker_trips: 3,
+            breaker_window: Duration::from_secs(10),
+            quarantine_base: Duration::from_millis(50),
+            quarantine_max: Duration::from_secs(5),
+        }
+    }
+}
+
+impl IntegrityConfig {
+    /// Scrubbing on at `interval`, default breaker policy.
+    pub fn scrubbed(interval: Duration) -> Self {
+        IntegrityConfig { scrub_interval: Some(interval), ..IntegrityConfig::default() }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if let Some(iv) = self.scrub_interval {
+            if iv.is_zero() {
+                return Err("scrub interval must be > 0 (or None to disable)".into());
+            }
+        }
+        if self.breaker_trips == 0 {
+            return Err("breaker trip threshold must be >= 1".into());
+        }
+        if self.breaker_window.is_zero() || self.quarantine_base.is_zero() {
+            return Err("breaker window and quarantine base must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+/// Pool-wide integrity counters snapshot, reported inside `PoolStats`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct IntegrityStats {
+    /// Digest verifications performed (background ticks + pre-serve).
+    pub scrubs: u64,
+    /// Verifications whose recomputed digest differed from the fence
+    /// record — silent model-memory corruption caught in the act.
+    pub corruptions_detected: u64,
+    /// Corrupted replicas re-derived from the golden model `Arc` and
+    /// re-verified clean.
+    pub heals: u64,
+    /// Heal attempts that could not restore a clean digest (no golden
+    /// copy, program error, or still-dirty re-verify) — these trip the
+    /// circuit breaker.
+    pub failed_heals: u64,
+    /// Replicas moved to `Quarantined` by the flap breaker.
+    pub quarantines: u64,
+    /// Quarantined replicas readmitted through the half-open probe.
+    pub rejoins: u64,
+}
+
+/// Lock-free live half of [`IntegrityStats`].
+#[derive(Debug, Default)]
+pub struct IntegrityCounters {
+    pub scrubs: AtomicU64,
+    pub corruptions_detected: AtomicU64,
+    pub heals: AtomicU64,
+    pub failed_heals: AtomicU64,
+    pub quarantines: AtomicU64,
+    pub rejoins: AtomicU64,
+}
+
+impl IntegrityCounters {
+    pub fn snapshot(&self) -> IntegrityStats {
+        IntegrityStats {
+            scrubs: self.scrubs.load(Ordering::Acquire),
+            corruptions_detected: self.corruptions_detected.load(Ordering::Acquire),
+            heals: self.heals.load(Ordering::Acquire),
+            failed_heals: self.failed_heals.load(Ordering::Acquire),
+            quarantines: self.quarantines.load(Ordering::Acquire),
+            rejoins: self.rejoins.load(Ordering::Acquire),
+        }
+    }
+}
+
 /// Full pool configuration: initial replica count, admission policy,
-/// and (optionally) the autoscaling supervisor.
+/// the self-healing integrity layer, and (optionally) the autoscaling
+/// supervisor.
 #[derive(Debug, Clone)]
 pub struct PoolConfig {
     /// Initial replica count (clamped into the autoscale range when a
@@ -524,6 +630,7 @@ pub struct PoolConfig {
     pub replicas: usize,
     pub admission: AdmissionConfig,
     pub autoscale: Option<AutoscaleConfig>,
+    pub integrity: IntegrityConfig,
 }
 
 impl PoolConfig {
@@ -534,6 +641,7 @@ impl PoolConfig {
             replicas,
             admission: AdmissionConfig::default(),
             autoscale: None,
+            integrity: IntegrityConfig::default(),
         }
     }
 
@@ -542,6 +650,7 @@ impl PoolConfig {
         if let Some(a) = &self.autoscale {
             a.validate()?;
         }
+        self.integrity.validate()?;
         Ok(())
     }
 }
@@ -559,6 +668,11 @@ pub enum Fault {
     /// observes `WorkerGone`, the supervision blind spot every caller
     /// must tolerate.
     DropReply,
+    /// Flip `n_bits` pseudo-random bits (seeded, reproducible) in the
+    /// replica's own derived-program buffers — never the golden model
+    /// `Arc` — simulating an SEU / torn reprogram in model memory.
+    /// Detected by the scrub layer, healed from the golden copy.
+    FlipModelBits { seed: u64, n_bits: u32 },
 }
 
 /// A fault armed against one replica.  Replaces the ad-hoc
@@ -583,6 +697,10 @@ impl FaultPlan {
     pub fn drop_reply(replica: usize) -> Self {
         FaultPlan { replica, fault: Fault::DropReply }
     }
+
+    pub fn flip_model_bits(replica: usize, seed: u64, n_bits: u32) -> Self {
+        FaultPlan { replica, fault: Fault::FlipModelBits { seed, n_bits: n_bits.max(1) } }
+    }
 }
 
 /// Armed faults, polled by workers once per popped job.  At most a
@@ -600,7 +718,9 @@ impl FaultArmory {
     /// (even against the same replica); each triggers once, in arming
     /// order.
     pub fn arm(&self, plan: FaultPlan) {
-        self.armed.lock().unwrap().push(plan);
+        // Poison-tolerant like every pool-internal lock: a worker
+        // panicking mid-poll must not wedge fault arming.
+        self.armed.lock().unwrap_or_else(|p| p.into_inner()).push(plan);
         self.count.fetch_add(1, Ordering::AcqRel);
     }
 
@@ -611,7 +731,7 @@ impl FaultArmory {
         if self.count.load(Ordering::Acquire) == 0 {
             return None;
         }
-        let mut armed = self.armed.lock().unwrap();
+        let mut armed = self.armed.lock().unwrap_or_else(|p| p.into_inner());
         let slot = armed.iter().position(|p| p.replica == replica)?;
         match &mut armed[slot].fault {
             Fault::PanicOnJob { nth } if *nth > 1 => {

@@ -54,8 +54,8 @@ pub mod service;
 pub mod tuner;
 
 pub use admission::{
-    AdmissionConfig, AdmissionStats, AutoscaleConfig, ClassStats, Fault, FaultPlan, ModelCounters,
-    ModelStats, PoolConfig, Priority, ShedPolicy,
+    AdmissionConfig, AdmissionStats, AutoscaleConfig, ClassStats, Fault, FaultPlan,
+    IntegrityConfig, IntegrityStats, ModelCounters, ModelStats, PoolConfig, Priority, ShedPolicy,
 };
 pub use autotune::{
     AutotuneConfig, AutotuneEvent, AutotuneReport, Autotuner, CanaryOutcome, DriftDetector,

@@ -57,6 +57,17 @@
 //!   per-replica [`Metrics`], a pool rollup, the per-class
 //!   [`AdmissionStats`] and the per-model [`ModelStats`] rollups;
 //!   [`ServiceHandle::stats`] keeps the old single-service shape.
+//! * **Self-healing model integrity.**  With an [`IntegrityConfig`]
+//!   scrub cadence, every replica records an FNV-1a digest of its
+//!   derived program buffers at fence time, re-verifies it before
+//!   serving each request (and on background scrub ticks for idle
+//!   replicas), and on mismatch re-derives the programs from the
+//!   golden model `Arc` before any corrupted answer can leave the
+//!   pool.  A replica that keeps tripping (panic respawns, failed
+//!   heals) is quarantined by a per-replica circuit breaker with
+//!   exponential backoff — routing, stealing and feasibility treat it
+//!   like a dead replica, and a half-open verify probe gates its
+//!   rejoin.  [`PoolStats::integrity`] reports the counters.
 
 use std::collections::{HashMap, VecDeque};
 use std::panic::{self, AssertUnwindSafe};
@@ -67,8 +78,8 @@ use std::time::{Duration, Instant};
 
 use super::admission::{
     AdmissionConfig, AdmissionStats, AutoscaleConfig, ClassCounters, Fault, FaultArmory,
-    FaultPlan, ModelCounters, ModelStats, PoolConfig, Priority, ServiceEstimator, ShedPolicy,
-    PRIORITY_COUNT,
+    FaultPlan, IntegrityConfig, IntegrityCounters, IntegrityStats, ModelCounters, ModelStats,
+    PoolConfig, Priority, ServiceEstimator, ShedPolicy, PRIORITY_COUNT,
 };
 use super::registry::{ModelEntry, ModelId, ModelRegistry, RegisterOutcome};
 use super::service::{EngineSpec, InferenceService, Metrics};
@@ -184,6 +195,10 @@ pub struct PoolStats {
     /// Replica self-reassignments between models (`TimeShared`
     /// adoption; the reprogram-thrash numerator, pool-wide).
     pub sharding_switches: u64,
+    /// Scrub-and-repair plus circuit-breaker counters.  All zero
+    /// unless the pool was spawned with an [`IntegrityConfig`] scrub
+    /// cadence.
+    pub integrity: IntegrityStats,
 }
 
 /// One telemetry probe reply: predictions, per-datapoint confidence
@@ -332,6 +347,13 @@ enum Job {
         mstats: Option<Arc<ModelCounters>>,
         reply: mpsc::Sender<Result<Arc<TMModel>, ServeError>>,
     },
+    /// Background integrity scrub: replica `replica` recomputes its
+    /// program digest, compares it with the fence-time record, and
+    /// heals from the golden model on mismatch.  Control work with no
+    /// reply channel and no model counters; it rides the `Low` queue
+    /// of its replica's own shard and is never stolen by siblings
+    /// (the digest belongs to exactly one engine).
+    Scrub { replica: usize },
 }
 
 impl Job {
@@ -342,7 +364,9 @@ impl Job {
             | Job::Crash { target, .. }
             | Job::Feedback { target, .. } => *target,
             // Stalls are a pool-wide chaos tool, never model-routed.
-            Job::Stall { .. } => Target::Any,
+            // Scrubs are replica-pinned by [`next_job`]'s pop filter,
+            // not by target.
+            Job::Stall { .. } | Job::Scrub { .. } => Target::Any,
         }
     }
 
@@ -351,7 +375,9 @@ impl Job {
             Job::Infer { deadline, .. } | Job::Telemetry { deadline, .. } => *deadline,
             // Feedback is control work: it must never be shed on a
             // deadline — a dropped window is silently lost training.
-            Job::Stall { .. } | Job::Crash { .. } | Job::Feedback { .. } => None,
+            Job::Stall { .. } | Job::Crash { .. } | Job::Feedback { .. } | Job::Scrub { .. } => {
+                None
+            }
         }
     }
 
@@ -363,7 +389,7 @@ impl Job {
             | Job::Telemetry { mstats, .. }
             | Job::Crash { mstats, .. }
             | Job::Feedback { mstats, .. } => mstats.as_ref(),
-            Job::Stall { .. } => None,
+            Job::Stall { .. } | Job::Scrub { .. } => None,
         }
     }
 
@@ -373,7 +399,7 @@ impl Job {
             | Job::Telemetry { mstats, .. }
             | Job::Crash { mstats, .. }
             | Job::Feedback { mstats, .. } => *mstats = counters,
-            Job::Stall { .. } => {}
+            Job::Stall { .. } | Job::Scrub { .. } => {}
         }
     }
 
@@ -390,6 +416,9 @@ impl Job {
             Job::Feedback { reply, .. } => {
                 let _ = reply.send(Err(err()));
             }
+            // No reply channel: a shed scrub just evaporates (the
+            // scrubber re-issues one next tick).
+            Job::Scrub { .. } => {}
         }
     }
 
@@ -468,6 +497,23 @@ impl ModelCell {
 struct ReplicaMetrics {
     metrics: Metrics,
     respawns: u64,
+}
+
+/// Per-replica circuit-breaker flap tracker.  A "trip" is a panic
+/// respawn or a failed heal; `breaker_trips` of them inside the
+/// rolling `breaker_window` quarantine the replica for
+/// `quarantine_base * 2^level` (capped at `quarantine_max`), after
+/// which a half-open verify probe gates its rejoin.  `level` is NOT
+/// reset on rejoin: a repeat offender serves exponentially longer
+/// holds.
+#[derive(Default)]
+struct BreakerState {
+    /// Trip instants inside the rolling window (pruned on every trip).
+    trips: Vec<Instant>,
+    /// Quarantine count so far — the backoff exponent.
+    level: u32,
+    /// End of the current quarantine hold; `None` when routable.
+    until: Option<Instant>,
 }
 
 struct Shared {
@@ -553,6 +599,46 @@ struct Shared {
     /// fence like any other program — so the sliced/compressed
     /// programs are re-derived once and broadcast, never per-replica.
     online: Mutex<HashMap<u64, OnlineTrainer>>,
+    /// Scrub cadence + breaker policy (from [`PoolConfig::integrity`]).
+    /// `scrub_interval: None` turns the whole integrity layer off.
+    integrity_cfg: IntegrityConfig,
+    /// Live scrub/heal/breaker counters ([`PoolStats::integrity`]).
+    integrity: IntegrityCounters,
+    /// Per-replica program digest recorded at the last successful
+    /// fence program (`0` = nothing recorded: unprogrammed replica or
+    /// scrubbing off).  Workers verify against it before serving.
+    digests: Vec<AtomicU64>,
+    /// Lock-free quarantine mirror: routing, stealing-feasibility and
+    /// the autoscaler skip a quarantined replica like a dead one.
+    quarantined: Vec<AtomicBool>,
+    /// Authoritative per-replica breaker state behind the mirror.
+    breakers: Vec<Mutex<BreakerState>>,
+}
+
+/// Poison-tolerant mutex lock: a panicking thread must never wedge
+/// the pool.  Every critical section in this module completes its
+/// invariant-restoring writes before any call that can panic, so
+/// adopting a poisoned guard observes consistent state; supervision
+/// separately rebuilds whichever replica panicked.
+trait LockExt<T> {
+    fn plock(&self) -> std::sync::MutexGuard<'_, T>;
+}
+
+impl<T> LockExt<T> for Mutex<T> {
+    fn plock(&self) -> std::sync::MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// Poison-tolerant bounded condvar wait (same rationale as
+/// [`LockExt::plock`]; the timeout flag is deliberately dropped —
+/// every caller re-checks its predicate under the returned guard).
+fn pwait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: std::sync::MutexGuard<'a, T>,
+    dur: Duration,
+) -> std::sync::MutexGuard<'a, T> {
+    cv.wait_timeout(guard, dur).unwrap_or_else(|p| p.into_inner()).0
 }
 
 /// Cloneable client handle to a running replica pool, scoped to one
@@ -575,6 +661,7 @@ pub struct ServiceHandle {
 pub struct PoolJoin {
     workers: Vec<JoinHandle<()>>,
     supervisor: Option<JoinHandle<()>>,
+    scrubber: Option<JoinHandle<()>>,
     shared: Arc<Shared>,
 }
 
@@ -589,11 +676,14 @@ impl PoolJoin {
         if let Some(s) = self.supervisor.take() {
             let _ = s.join();
         }
+        if let Some(s) = self.scrubber.take() {
+            let _ = s.join();
+        }
         // Workers the supervisor scaled up after spawn.  The supervisor
         // is joined above, so no more can appear while we drain.
         loop {
             let extra: Vec<JoinHandle<()>> = {
-                let mut held = self.shared.extra_workers.lock().unwrap();
+                let mut held = self.shared.extra_workers.plock();
                 held.drain(..).collect()
             };
             if extra.is_empty() {
@@ -691,6 +781,11 @@ pub fn spawn_pool_sharded(
         metrics: Mutex::new(vec![ReplicaMetrics::default(); slots]),
         spec,
         online: Mutex::new(HashMap::new()),
+        integrity_cfg: cfg.integrity.clone(),
+        integrity: IntegrityCounters::default(),
+        digests: (0..slots).map(|_| AtomicU64::new(0)).collect(),
+        quarantined: (0..slots).map(|_| AtomicBool::new(false)).collect(),
+        breakers: (0..slots).map(|_| Mutex::new(BreakerState::default())).collect(),
     });
     let workers = (0..initial).map(|i| spawn_worker(&shared, i)).collect();
     let supervisor = cfg.autoscale.map(|auto| {
@@ -700,7 +795,14 @@ pub fn spawn_pool_sharded(
             .spawn(move || supervisor_loop(&s, &auto))
             .expect("spawn pool supervisor")
     });
-    let join = PoolJoin { workers, supervisor, shared: Arc::clone(&shared) };
+    let scrubber = cfg.integrity.scrub_interval.map(|interval| {
+        let s = Arc::clone(&shared);
+        std::thread::Builder::new()
+            .name("rttm-scrubber".into())
+            .spawn(move || scrubber_loop(&s, interval))
+            .expect("spawn pool scrubber")
+    });
+    let join = PoolJoin { workers, supervisor, scrubber, shared: Arc::clone(&shared) };
     (ServiceHandle { shared, route: ModelId::DEFAULT }, join)
 }
 
@@ -768,7 +870,7 @@ impl ServiceHandle {
             return Err(ServeError::ShutDown);
         }
         let (target, outcome) = {
-            let mut cell = self.shared.cell.lock().unwrap();
+            let mut cell = self.shared.cell.plock();
             let outcome = cell.registry.register(name, model);
             if outcome.deduped {
                 return Ok(outcome);
@@ -795,7 +897,7 @@ impl ServiceHandle {
             return Err(ServeError::ShutDown);
         }
         let (target, had_canary) = {
-            let mut cell = self.shared.cell.lock().unwrap();
+            let mut cell = self.shared.cell.plock();
             if !cell.registry.retire(id) {
                 return Err(ServeError::UnknownModel(id));
             }
@@ -819,7 +921,7 @@ impl ServiceHandle {
         }
         // A retired model keeps no online trainer: its feedback stream
         // is dead, and the id is never reused.
-        self.shared.online.lock().unwrap_or_else(|p| p.into_inner()).remove(&id.0);
+        self.shared.online.plock().remove(&id.0);
         // Queued live traffic for the retired model has no replica left
         // to adopt it once the rebalance lands — fail it typed.
         drain_jobs(
@@ -832,7 +934,7 @@ impl ServiceHandle {
 
     /// Every registered model's entry (id, name, content hash, budget).
     pub fn registered_models(&self) -> Vec<ModelEntry> {
-        self.shared.cell.lock().unwrap().registry.entries().cloned().collect()
+        self.shared.cell.plock().registry.entries().cloned().collect()
     }
 
     /// Attach (or clear) a per-model resource budget — the frontier a
@@ -842,7 +944,7 @@ impl ServiceHandle {
         id: ModelId,
         budget: Option<ResourceBudget>,
     ) -> Result<(), ServeError> {
-        if self.shared.cell.lock().unwrap().registry.set_budget(id, budget) {
+        if self.shared.cell.plock().registry.set_budget(id, budget) {
             Ok(())
         } else {
             Err(ServeError::UnknownModel(id))
@@ -850,7 +952,7 @@ impl ServiceHandle {
     }
 
     pub fn model_budget(&self, id: ModelId) -> Option<ResourceBudget> {
-        self.shared.cell.lock().unwrap().registry.get(id).and_then(|e| e.budget.clone())
+        self.shared.cell.plock().registry.get(id).and_then(|e| e.budget.clone())
     }
 
     /// Per-model counter rollups, sorted by model id.  Routes appear
@@ -858,10 +960,10 @@ impl ServiceHandle {
     /// are named `m<id>`.
     pub fn model_stats(&self) -> Vec<ModelStats> {
         let names: HashMap<u64, String> = {
-            let cell = self.shared.cell.lock().unwrap();
+            let cell = self.shared.cell.plock();
             cell.registry.entries().map(|e| (e.id.0, e.name.clone())).collect()
         };
-        let dir = self.shared.model_dir.lock().unwrap();
+        let dir = self.shared.model_dir.plock();
         let mut out: Vec<ModelStats> = dir
             .iter()
             .map(|(&id, counters)| ModelStats {
@@ -881,7 +983,7 @@ impl ServiceHandle {
 
     /// Every active canary as `(model, replica)`, sorted by model id.
     pub fn canary_replicas(&self) -> Vec<(ModelId, usize)> {
-        let cell = self.shared.cell.lock().unwrap();
+        let cell = self.shared.cell.plock();
         let mut out: Vec<(ModelId, usize)> =
             cell.canaries.iter().map(|c| (c.model_id, c.replica)).collect();
         drop(cell);
@@ -1051,7 +1153,7 @@ impl ServiceHandle {
             self.reseed_online(&model);
         }
         let (target, had_canary) = {
-            let mut cell = self.shared.cell.lock().unwrap();
+            let mut cell = self.shared.cell.plock();
             let is_new = cell.registry.install(route, &hint, model);
             if is_new {
                 // First install of this id: fold it into the affinity
@@ -1107,7 +1209,7 @@ impl ServiceHandle {
         let route = self.route;
         let dedicated = self.shared.sharding == ShardingPolicy::Dedicated;
         let (target, replica) = {
-            let mut cell = self.shared.cell.lock().unwrap();
+            let mut cell = self.shared.cell.plock();
             if cell.registry.model(route).is_none() {
                 return Err(ServeError::Canary("pool has no baseline model"));
             }
@@ -1172,7 +1274,7 @@ impl ServiceHandle {
         }
         let route = self.route;
         let target = {
-            let mut cell = self.shared.cell.lock().unwrap();
+            let mut cell = self.shared.cell.plock();
             let Some(pos) = cell.canaries.iter().position(|c| c.model_id == route) else {
                 return Err(ServeError::Canary("no canary active"));
             };
@@ -1205,7 +1307,7 @@ impl ServiceHandle {
         }
         let route = self.route;
         let target = {
-            let mut cell = self.shared.cell.lock().unwrap();
+            let mut cell = self.shared.cell.plock();
             let Some(pos) = cell.canaries.iter().position(|c| c.model_id == route) else {
                 return Ok(false);
             };
@@ -1239,15 +1341,11 @@ impl ServiceHandle {
         }
         let route = self.route;
         let model = {
-            let cell = self.shared.cell.lock().unwrap();
+            let cell = self.shared.cell.plock();
             cell.registry.model(route).ok_or(ServeError::UnknownModel(route))?
         };
         let tuner = OnlineTrainer::from_model(&model, seed);
-        self.shared
-            .online
-            .lock()
-            .unwrap_or_else(|p| p.into_inner())
-            .insert(route.0, tuner);
+        self.shared.online.plock().insert(route.0, tuner);
         Ok(())
     }
 
@@ -1277,19 +1375,14 @@ impl ServiceHandle {
     /// Total labeled rows folded into this route's online trainer, or
     /// `None` while online feedback is disabled.
     pub fn online_rows_fed(&self) -> Option<u64> {
-        self.shared
-            .online
-            .lock()
-            .unwrap_or_else(|p| p.into_inner())
-            .get(&self.route.0)
-            .map(|t| t.rows_fed())
+        self.shared.online.plock().get(&self.route.0).map(|t| t.rows_fed())
     }
 
     /// Reseed the route's online trainer (when one exists) from a
     /// freshly-installed model so subsequent feedback windows fine-tune
     /// what is actually being served.
     fn reseed_online(&self, model: &TMModel) {
-        let mut online = self.shared.online.lock().unwrap_or_else(|p| p.into_inner());
+        let mut online = self.shared.online.plock();
         if let Some(tuner) = online.get_mut(&self.route.0) {
             tuner.reseed_from_model(model);
         }
@@ -1305,7 +1398,7 @@ impl ServiceHandle {
     fn fence_wait(&self, target: u64) -> Result<(), ServeError> {
         // Wake parked workers so they observe the fence.
         wake_work(&self.shared, true);
-        let mut cell = self.shared.cell.lock().unwrap();
+        let mut cell = self.shared.cell.plock();
         loop {
             if !cell.alive.iter().any(|&a| a) {
                 return Err(ServeError::ShutDown);
@@ -1318,7 +1411,7 @@ impl ServiceHandle {
             if done {
                 break;
             }
-            cell = self.shared.fence_cv.wait(cell).unwrap();
+            cell = self.shared.fence_cv.wait(cell).unwrap_or_else(|p| p.into_inner());
         }
         for slot in cell.errors.iter_mut() {
             if slot.as_ref().is_some_and(|(v, _)| *v == target) {
@@ -1351,13 +1444,13 @@ impl ServiceHandle {
     /// Full per-replica + rollup + admission + per-model snapshot.
     pub fn pool_stats(&self) -> PoolStats {
         let (version, acks, alive, assign, canaries) = {
-            let cell = self.shared.cell.lock().unwrap();
+            let cell = self.shared.cell.plock();
             let mut canaries: Vec<(ModelId, usize)> =
                 cell.canaries.iter().map(|c| (c.model_id, c.replica)).collect();
             canaries.sort();
             (cell.version, cell.acks.clone(), cell.alive.clone(), cell.assign.clone(), canaries)
         };
-        let per = self.shared.metrics.lock().unwrap();
+        let per = self.shared.metrics.plock();
         let replicas: Vec<ReplicaStats> = per
             .iter()
             .enumerate()
@@ -1390,6 +1483,7 @@ impl ServiceHandle {
             admission: self.admission_stats(),
             models: self.model_stats(),
             sharding_switches: self.shared.switches.load(Ordering::Acquire),
+            integrity: self.shared.integrity.snapshot(),
         }
     }
 
@@ -1485,6 +1579,7 @@ impl ServiceHandle {
                 let reachable = (0..shared.shards.len()).any(|i| {
                     shared.alive_mirror[i].load(Ordering::Acquire)
                         && !shared.retire[i].load(Ordering::Acquire)
+                        && !shared.quarantined[i].load(Ordering::Acquire)
                         && !is_canary_replica(shared, i)
                         && matches!(
                             shared.assign_mirror[i].load(Ordering::Acquire),
@@ -1547,7 +1642,7 @@ impl ServiceHandle {
                 }
                 ShedPolicy::Block => {
                     shared.space_waiters.fetch_add(1, Ordering::AcqRel);
-                    let guard = shared.park.lock().unwrap();
+                    let guard = shared.park.plock();
                     // Re-check under the park lock: a pop between the
                     // depth check and here would otherwise be a lost
                     // wake.  The bounded wait is a belt-and-braces
@@ -1559,7 +1654,7 @@ impl ServiceHandle {
                         continue;
                     }
                     let timeout = Duration::from_millis(10);
-                    let _ = shared.space_cv.wait_timeout(guard, timeout).unwrap();
+                    let _ = pwait_timeout(&shared.space_cv, guard, timeout);
                     shared.space_waiters.fetch_sub(1, Ordering::AcqRel);
                 }
             }
@@ -1575,7 +1670,7 @@ impl ServiceHandle {
             Target::Any => self.route_any(),
         };
         {
-            let mut q = shared.shards[shard].q.lock().unwrap();
+            let mut q = shared.shards[shard].q.plock();
             if q.closed {
                 return Err(ServeError::ShutDown);
             }
@@ -1614,6 +1709,7 @@ impl ServiceHandle {
             .enumerate()
             .filter(|(i, a)| {
                 a.load(Ordering::Acquire)
+                    && !shared.quarantined[*i].load(Ordering::Acquire)
                     && !is_canary_replica(shared, *i)
                     && matches!(
                         shared.assign_mirror[*i].load(Ordering::Acquire),
@@ -1643,6 +1739,7 @@ impl ServiceHandle {
             if is_canary_replica(shared, i)
                 || !shared.alive_mirror[i].load(Ordering::Acquire)
                 || shared.retire[i].load(Ordering::Acquire)
+                || shared.quarantined[i].load(Ordering::Acquire)
             {
                 continue;
             }
@@ -1674,6 +1771,7 @@ impl ServiceHandle {
             if !is_canary_replica(shared, i)
                 && shared.alive_mirror[i].load(Ordering::Acquire)
                 && !shared.retire[i].load(Ordering::Acquire)
+                && !shared.quarantined[i].load(Ordering::Acquire)
             {
                 return i;
             }
@@ -1689,7 +1787,7 @@ impl ServiceHandle {
         let ci = class.index();
         let mut victim = None;
         for shard in &shared.shards {
-            let mut q = shard.q.lock().unwrap();
+            let mut q = shard.q.plock();
             if let Some(job) = q.classes[ci].pop_front() {
                 shared.counters[ci].pop_shed();
                 if let Some(ms) = job.mstats() {
@@ -1724,7 +1822,7 @@ fn recv_reply<T>(
 /// the epoch is bumped UNDER the park lock, so a worker that scanned
 /// the shards before this enqueue cannot park past it.
 fn wake_work(shared: &Shared, all: bool) {
-    let _guard = shared.park.lock().unwrap();
+    let _guard = shared.park.plock();
     shared.epoch.fetch_add(1, Ordering::Release);
     if all {
         shared.work_cv.notify_all();
@@ -1748,7 +1846,7 @@ fn wake_space(shared: &Shared) {
     if shared.space_waiters.load(Ordering::Acquire) == 0 {
         return;
     }
-    let _guard = shared.park.lock().unwrap();
+    let _guard = shared.park.plock();
     shared.space_cv.notify_all();
 }
 
@@ -1756,7 +1854,7 @@ fn wake_space(shared: &Shared) {
 /// Idempotent.
 fn shutdown_shared(shared: &Shared) {
     shared.shutdown.store(true, Ordering::Release);
-    let _guard = shared.park.lock().unwrap();
+    let _guard = shared.park.plock();
     shared.epoch.fetch_add(1, Ordering::Release);
     shared.work_cv.notify_all();
     shared.space_cv.notify_all();
@@ -1793,7 +1891,7 @@ fn is_canary_replica(shared: &Shared, i: usize) -> bool {
 /// Once a second model appears in the directory, enqueue wakes switch
 /// to notify_all (see [`wake_all_needed`]).
 fn resolve_model_counters(shared: &Shared, m: ModelId) -> Arc<ModelCounters> {
-    let mut dir = shared.model_dir.lock().unwrap();
+    let mut dir = shared.model_dir.plock();
     let counters = Arc::clone(dir.entry(m.0).or_default());
     if dir.len() > 1 {
         shared.multi_model.store(true, Ordering::Release);
@@ -1852,7 +1950,7 @@ impl Drop for DeathWatch<'_> {
     fn drop(&mut self) {
         self.shared.alive_mirror[self.idx].store(false, Ordering::Release);
         let (all_dead, cleared) = {
-            let mut cell = self.shared.cell.lock().unwrap();
+            let mut cell = self.shared.cell.plock();
             cell.alive[self.idx] = false;
             // A dying canary takes its candidate with it: clear its
             // canary state so that model's Pool traffic stops avoiding
@@ -1895,6 +1993,12 @@ impl Drop for DeathWatch<'_> {
             close_shards(self.shared);
             shutdown_shared(self.shared);
         }
+        // A dead replica is not quarantined — clear the breaker so a
+        // revived slot starts with a clean slate (the revive fence
+        // re-records its digest).
+        self.shared.quarantined[self.idx].store(false, Ordering::Release);
+        *self.shared.breakers[self.idx].plock() = BreakerState::default();
+        self.shared.digests[self.idx].store(0, Ordering::Release);
         // Last: the supervisor may revive this slot only once the
         // worker is fully gone.
         self.shared.retire[self.idx].store(false, Ordering::Release);
@@ -1908,7 +2012,7 @@ impl Drop for DeathWatch<'_> {
 fn close_shards(shared: &Shared) {
     let mut dropped: Vec<Job> = Vec::new();
     for shard in &shared.shards {
-        let mut q = shard.q.lock().unwrap();
+        let mut q = shard.q.plock();
         q.closed = true;
         for (ci, class) in q.classes.iter_mut().enumerate() {
             while let Some(job) = class.pop_front() {
@@ -1934,7 +2038,7 @@ fn drain_jobs(
 ) {
     let mut stranded: Vec<Job> = Vec::new();
     for shard in &shared.shards {
-        let mut q = shard.q.lock().unwrap();
+        let mut q = shard.q.plock();
         for (ci, class) in q.classes.iter_mut().enumerate() {
             let mut kept = VecDeque::with_capacity(class.len());
             while let Some(job) = class.pop_front() {
@@ -1965,7 +2069,7 @@ fn drain_jobs(
 fn drain_canary_jobs_for(shared: &Shared, m: ModelId, reason: &'static str) {
     let mut stranded: Vec<Job> = Vec::new();
     for shard in &shared.shards {
-        let mut q = shard.q.lock().unwrap();
+        let mut q = shard.q.plock();
         for (ci, class) in q.classes.iter_mut().enumerate() {
             let mut kept = VecDeque::with_capacity(class.len());
             while let Some(job) = class.pop_front() {
@@ -2060,7 +2164,7 @@ fn worker_loop(shared: &Shared, idx: usize) {
     };
     // A revived slot carries the counters its previous incarnation
     // published (scale-down must not erase served history).
-    state.service.metrics = shared.metrics.lock().unwrap()[idx].metrics.clone();
+    state.service.metrics = shared.metrics.plock()[idx].metrics.clone();
     let mut my_version = 0u64;
     loop {
         // Fence check between requests: drain (we are between jobs),
@@ -2083,6 +2187,22 @@ fn worker_loop(shared: &Shared, idx: usize) {
             if shared.retire[idx].load(Ordering::Acquire) && canary_of.is_none() {
                 break Next::Exit;
             }
+            // Circuit breaker: a quarantined replica takes no work.
+            // It still acks fences (the version check above outranks
+            // this one) and still honours retirement; once the hold
+            // expires, a half-open verify probe gates its rejoin.  A
+            // successful probe re-enters via Resync: the probe may
+            // have reprogrammed, so the captured assignment is stale.
+            if shared.quarantined[idx].load(Ordering::Acquire) {
+                if breaker_half_open(shared, idx, &mut state, &mut my_version) {
+                    break Next::Resync;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break Next::Exit;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+                continue;
+            }
             let epoch = shared.epoch.load(Ordering::Acquire);
             let adopt = may_adopt(shared, &state);
             if let Some((job, class)) = next_job(shared, idx, assigned, canary_of, adopt) {
@@ -2094,9 +2214,9 @@ fn worker_loop(shared: &Shared, idx: usize) {
             // Nothing to do: park — unless an enqueue raced the scan
             // (the epoch moved), then rescan instead.  The bounded wait
             // is a backstop; the epoch check is the correctness.
-            let guard = shared.park.lock().unwrap();
+            let guard = shared.park.plock();
             if shared.epoch.load(Ordering::Acquire) == epoch {
-                let _ = shared.work_cv.wait_timeout(guard, Duration::from_millis(10)).unwrap();
+                let _ = pwait_timeout(&shared.work_cv, guard, Duration::from_millis(10));
             }
         };
         match next {
@@ -2128,7 +2248,7 @@ fn worker_loop(shared: &Shared, idx: usize) {
 /// unregistered route (nothing to program) must not shift the version
 /// numbering that single-model tests and fence callers observe.
 fn self_assign(shared: &Shared, idx: usize, m: ModelId, mstats: Option<&Arc<ModelCounters>>) {
-    let mut cell = shared.cell.lock().unwrap();
+    let mut cell = shared.cell.plock();
     let registered = cell.registry.contains(m);
     cell.assign[idx] = Some(m);
     shared.assign_mirror[idx].store(m.0 + 1, Ordering::Release);
@@ -2172,11 +2292,16 @@ fn next_job(
             }
             for k in 0..n {
                 let shard = (idx + k) % n;
-                let mut q = shared.shards[shard].q.lock().unwrap();
+                let mut q = shared.shards[shard].q.plock();
                 loop {
-                    let pos = q.classes[ci]
-                        .iter()
-                        .position(|j| eligible(j.target(), assigned, canary_of, adopt));
+                    // A scrub belongs to exactly one replica's engine:
+                    // the owner pops it, thieves skip it (the stale
+                    // scrubs of a dead replica are swept by the
+                    // scrubber's next tick).
+                    let pos = q.classes[ci].iter().position(|j| match j {
+                        Job::Scrub { replica } => *replica == idx,
+                        _ => eligible(j.target(), assigned, canary_of, adopt),
+                    });
                     let Some(pos) = pos else { break };
                     let job = q.classes[ci].remove(pos).expect("position just found");
                     if job.deadline().is_some_and(|d| Instant::now() > d) {
@@ -2234,7 +2359,27 @@ fn run_job(
             drop(job);
             return;
         }
+        Some(Fault::FlipModelBits { seed, n_bits }) => {
+            // Corrupt THIS replica's derived program buffers — never
+            // the golden model Arc — then serve the popped job
+            // normally: the pre-serve verify below must catch the
+            // corruption before the answer is computed.
+            state.service.flip_program_bits(seed, n_bits);
+        }
         None => {}
+    }
+    // Pre-serve integrity verify (scrubbing on only): a corrupted
+    // program is detected and healed from the golden model BEFORE any
+    // inference executes on it — the zero-divergence guarantee the
+    // chaos tests pin.  Background [`Job::Scrub`] ticks give idle
+    // replicas the same check.
+    if shared.integrity_cfg.scrub_interval.is_some()
+        && matches!(job, Job::Infer { .. } | Job::Telemetry { .. })
+    {
+        // On a failed heal the replica is respawned from its spec and
+        // tripped toward quarantine; either way the engine is clean
+        // when the job proceeds below.
+        let _ = verify_and_heal(shared, idx, state, my_version);
     }
     match job {
         Job::Infer { rows, deadline, mstats, reply, .. } => {
@@ -2330,7 +2475,7 @@ fn run_job(
                     // The TA-state update ran on this replica: account
                     // its wall time like served work, then publish.
                     state.service.metrics.busy_micros += t0.elapsed().as_micros() as u64;
-                    shared.metrics.lock().unwrap()[idx].metrics = state.service.metrics.clone();
+                    shared.metrics.plock()[idx].metrics = state.service.metrics.clone();
                     let _ = reply.send(result);
                 }
                 Err(_panic) => {
@@ -2339,6 +2484,22 @@ fn run_job(
                     respawn_replica(shared, idx, state, my_version);
                     let _ = reply.send(Err(ServeError::WorkerPanicked { replica: idx }));
                 }
+            }
+        }
+        Job::Scrub { .. } => {
+            // Background integrity tick for an idle replica (busy ones
+            // are already verified on every pop above).  No reply to
+            // send; the counters are the observable outcome.  An armed
+            // panic fault still fires here — a scrub pop must not
+            // silently swallow the plan.
+            let outcome = panic::catch_unwind(AssertUnwindSafe(|| {
+                if force_panic {
+                    panic!("injected fault (FaultPlan::PanicOnJob)");
+                }
+                verify_and_heal(shared, idx, state, my_version)
+            }));
+            if outcome.is_err() {
+                respawn_replica(shared, idx, state, my_version);
             }
         }
     }
@@ -2354,7 +2515,7 @@ fn apply_feedback(
     xs: &[Vec<u8>],
     ys: &[usize],
 ) -> Result<Arc<TMModel>, ServeError> {
-    let mut online = shared.online.lock().unwrap_or_else(|p| p.into_inner());
+    let mut online = shared.online.plock();
     let tuner = online.get_mut(&model.0).ok_or(ServeError::FeedbackDisabled(model))?;
     tuner.feedback_batch(xs, ys)?;
     Ok(Arc::new(tuner.model()))
@@ -2375,7 +2536,7 @@ fn reply_or_respawn<T>(
 ) {
     match outcome {
         Ok(result) => {
-            shared.metrics.lock().unwrap()[idx].metrics = state.service.metrics.clone();
+            shared.metrics.plock()[idx].metrics = state.service.metrics.clone();
             let _ = reply.send(result.map_err(ServeError::Core));
         }
         Err(_panic) => {
@@ -2400,10 +2561,13 @@ fn respawn_replica(shared: &Shared, idx: usize, state: &mut WorkerState, my_vers
     state.last_model = None;
     state.service.metrics = carried;
     {
-        let mut per = shared.metrics.lock().unwrap();
+        let mut per = shared.metrics.plock();
         per[idx].respawns += 1;
         per[idx].metrics = state.service.metrics.clone();
     }
+    // Every respawn is a breaker strike: a replica that keeps dying is
+    // flapping and gets quarantined instead of thrashing the pool.
+    breaker_trip(shared, idx);
     *my_version = program_from_cell(shared, idx, state);
 }
 
@@ -2420,7 +2584,7 @@ fn respawn_replica(shared: &Shared, idx: usize, state: &mut WorkerState, my_vers
 /// cost the non-participating replicas one drain, not one reprogram.
 fn program_from_cell(shared: &Shared, idx: usize, state: &mut WorkerState) -> u64 {
     let (target, model) = {
-        let cell = shared.cell.lock().unwrap();
+        let cell = shared.cell.plock();
         let canary = cell
             .canary_on(idx)
             .map(|c| (c.model_id, Arc::clone(&c.candidate)));
@@ -2435,10 +2599,15 @@ fn program_from_cell(shared: &Shared, idx: usize, state: &mut WorkerState) -> u6
     // Program outside the lock: encoding + programming a large model is
     // the slow part, and siblings must be able to ack concurrently.
     let failure = match &model {
+        // Memo-skip: the engine is untouched, so the recorded digest
+        // stays valid (if a fault corrupted it meanwhile, the next
+        // verify catches the mismatch and heals — re-recording here
+        // would instead bless the corruption as golden).
         Some(m) if state.last_model.as_ref().is_some_and(|l| Arc::ptr_eq(l, m)) => None,
         Some(m) => match state.service.reprogram(m) {
             Ok(()) => {
                 state.last_model = Some(Arc::clone(m));
+                record_digest(shared, idx, &state.service);
                 None
             }
             Err(e) => {
@@ -2452,6 +2621,7 @@ fn program_from_cell(shared: &Shared, idx: usize, state: &mut WorkerState) -> u6
                 state.service = InferenceService::new(shared.spec.build());
                 state.service.metrics = carried;
                 state.last_model = None;
+                shared.digests[idx].store(0, Ordering::Release);
                 Some(e)
             }
         },
@@ -2466,19 +2636,215 @@ fn program_from_cell(shared: &Shared, idx: usize, state: &mut WorkerState) -> u6
                 state.service.metrics = carried;
                 state.last_model = None;
             }
+            shared.digests[idx].store(0, Ordering::Release);
             None
         }
     };
     // Keep the published per-replica metrics fresh (reprogram bumps a
     // counter outside the job path).
-    shared.metrics.lock().unwrap()[idx].metrics = state.service.metrics.clone();
-    let mut cell = shared.cell.lock().unwrap();
+    shared.metrics.plock()[idx].metrics = state.service.metrics.clone();
+    let mut cell = shared.cell.plock();
     if cell.acks[idx] < target {
         cell.acks[idx] = target;
         cell.errors[idx] = failure.map(|e| (target, e));
         shared.fence_cv.notify_all();
     }
     target
+}
+
+/// Record the digest of this replica's freshly-derived program
+/// buffers as the fence-time golden reference (no-op with scrubbing
+/// off — the integrity layer then costs literally nothing).
+fn record_digest(shared: &Shared, idx: usize, service: &InferenceService) {
+    if shared.integrity_cfg.scrub_interval.is_none() {
+        return;
+    }
+    shared.digests[idx].store(service.program_digest().unwrap_or(0), Ordering::Release);
+}
+
+/// Verify this replica's program memory against its fence-time digest
+/// and self-heal on mismatch: re-derive the programs from the golden
+/// model `Arc` (which replica-local corruption can never touch),
+/// re-verify, and only then serve.  A heal that cannot restore the
+/// digest respawns the replica from its spec and trips the breaker.
+/// Returns `false` only on that failed-heal path.
+fn verify_and_heal(
+    shared: &Shared,
+    idx: usize,
+    state: &mut WorkerState,
+    my_version: &mut u64,
+) -> bool {
+    let recorded = shared.digests[idx].load(Ordering::Acquire);
+    if recorded == 0 {
+        // Nothing recorded: unprogrammed replica, failed swap, or
+        // scrubbing off — nothing to verify against.
+        return true;
+    }
+    let Some(current) = state.service.program_digest() else {
+        return true;
+    };
+    shared.integrity.scrubs.fetch_add(1, Ordering::AcqRel);
+    if current == recorded {
+        return true;
+    }
+    shared.integrity.corruptions_detected.fetch_add(1, Ordering::AcqRel);
+    let healed = match &state.last_model {
+        Some(model) => {
+            // The memo Arc IS the golden copy this digest was recorded
+            // from; re-deriving from it must reproduce the digest
+            // exactly (program derivation is deterministic).
+            state.service.reprogram(model).is_ok()
+                && state.service.program_digest() == Some(recorded)
+        }
+        None => false,
+    };
+    if healed {
+        shared.integrity.heals.fetch_add(1, Ordering::AcqRel);
+        shared.metrics.plock()[idx].metrics = state.service.metrics.clone();
+        return true;
+    }
+    // Unhealable in place (golden Arc gone, or the re-derive itself
+    // misbehaved): heavy hammer — respawn from the spec, which also
+    // trips the breaker toward quarantine.
+    shared.integrity.failed_heals.fetch_add(1, Ordering::AcqRel);
+    respawn_replica(shared, idx, state, my_version);
+    false
+}
+
+/// One breaker strike against replica `idx` (panic respawn or failed
+/// heal).  `breaker_trips` strikes inside the rolling window
+/// quarantine the replica with exponential backoff.  Inert unless the
+/// integrity layer is on — pools without a scrub cadence keep the
+/// pre-breaker semantics exactly.
+fn breaker_trip(shared: &Shared, idx: usize) {
+    let cfg = &shared.integrity_cfg;
+    if cfg.scrub_interval.is_none() {
+        return;
+    }
+    let now = Instant::now();
+    let mut b = shared.breakers[idx].plock();
+    b.trips.retain(|t| now.duration_since(*t) <= cfg.breaker_window);
+    b.trips.push(now);
+    if b.trips.len() >= cfg.breaker_trips as usize && b.until.is_none() {
+        let hold = cfg
+            .quarantine_base
+            .saturating_mul(1u32 << b.level.min(16))
+            .min(cfg.quarantine_max);
+        b.level = b.level.saturating_add(1);
+        b.until = Some(now + hold);
+        b.trips.clear();
+        drop(b);
+        shared.quarantined[idx].store(true, Ordering::Release);
+        shared.integrity.quarantines.fetch_add(1, Ordering::AcqRel);
+    }
+}
+
+/// The half-open gate a quarantined replica must pass to rejoin: once
+/// the hold expires, re-derive from the cell (the authoritative golden
+/// source) and verify the digest.  A clean probe clears the mirror and
+/// counts a rejoin; a dirty one re-quarantines with doubled backoff.
+/// Returns whether the replica rejoined.
+fn breaker_half_open(
+    shared: &Shared,
+    idx: usize,
+    state: &mut WorkerState,
+    my_version: &mut u64,
+) -> bool {
+    let expired = {
+        let b = shared.breakers[idx].plock();
+        b.until.is_none_or(|t| Instant::now() >= t)
+    };
+    if !expired {
+        return false;
+    }
+    // The probe: a full re-derive from the cell plus a digest check —
+    // the same work a Critical verify request would drive, without
+    // occupying the admission queues.
+    *my_version = program_from_cell(shared, idx, state);
+    let recorded = shared.digests[idx].load(Ordering::Acquire);
+    let clean = recorded == 0 || state.service.program_digest() == Some(recorded);
+    let mut b = shared.breakers[idx].plock();
+    if clean {
+        b.until = None;
+        b.trips.clear();
+        drop(b);
+        shared.quarantined[idx].store(false, Ordering::Release);
+        shared.integrity.rejoins.fetch_add(1, Ordering::AcqRel);
+        true
+    } else {
+        let cfg = &shared.integrity_cfg;
+        let hold = cfg
+            .quarantine_base
+            .saturating_mul(1u32 << b.level.min(16))
+            .min(cfg.quarantine_max);
+        b.level = b.level.saturating_add(1);
+        b.until = Some(Instant::now() + hold);
+        false
+    }
+}
+
+/// Background scrubber: every `interval`, queue one [`Job::Scrub`] on
+/// each routable replica's own shard (Low class — scrubs never delay
+/// real traffic) and sweep scrubs stranded on dead replicas' shards
+/// (thieves never take a foreign scrub).  At most one scrub is queued
+/// per replica regardless of cadence-to-service-time ratio.
+fn scrubber_loop(shared: &Arc<Shared>, interval: Duration) {
+    // Doze in small ticks so shutdown never waits a full interval.
+    let tick = interval.min(Duration::from_millis(20));
+    let mut acc = Duration::ZERO;
+    loop {
+        std::thread::sleep(tick);
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        acc += tick;
+        if acc >= interval {
+            acc = Duration::ZERO;
+            enqueue_scrubs(shared);
+        }
+    }
+}
+
+/// One scrubber tick (see [`scrubber_loop`]).  Scrub jobs are counted
+/// in the pool-wide `Low` class counters — the lock-free empty-class
+/// skip in [`next_job`] would otherwise never see them — but carry no
+/// per-model counters, so per-model reconciliation is untouched.
+fn enqueue_scrubs(shared: &Shared) {
+    let ci = Priority::Low.index();
+    let mut pushed = false;
+    let mut swept = false;
+    for i in 0..shared.shards.len() {
+        let routable = shared.alive_mirror[i].load(Ordering::Acquire)
+            && !shared.retire[i].load(Ordering::Acquire)
+            && !shared.quarantined[i].load(Ordering::Acquire);
+        let mut q = shared.shards[i].q.plock();
+        if q.closed {
+            continue;
+        }
+        let queued = q.classes[ci].iter().filter(|j| matches!(j, Job::Scrub { .. })).count();
+        if !routable {
+            if queued > 0 {
+                q.classes[ci].retain(|j| !matches!(j, Job::Scrub { .. }));
+                for _ in 0..queued {
+                    shared.counters[ci].pop_shed();
+                }
+                swept = true;
+            }
+            continue;
+        }
+        if queued == 0 {
+            shared.counters[ci].admit();
+            q.classes[ci].push_back(Job::Scrub { replica: i });
+            pushed = true;
+        }
+    }
+    if swept {
+        wake_space(shared);
+    }
+    if pushed {
+        // Scrubs are replica-pinned: every owner must wake.
+        wake_work(shared, true);
+    }
 }
 
 /// Autoscaling supervisor: samples total queue depth and the
@@ -2503,13 +2869,16 @@ fn supervisor_loop(shared: &Arc<Shared>, cfg: &AutoscaleConfig) {
             .sum();
         let new_misses = misses.saturating_sub(last_misses);
         last_misses = misses;
-        // Retiring replicas are on their way out: count them neither
-        // for pressure nor for the `min` floor.
-        let live = shared
-            .alive_mirror
-            .iter()
-            .zip(&shared.retire)
-            .filter(|(a, r)| a.load(Ordering::Acquire) && !r.load(Ordering::Acquire))
+        // Retiring replicas are on their way out, and a quarantined
+        // replica serves nothing: count neither for pressure nor for
+        // the `min` floor — which is what lets the autoscaler spawn a
+        // replacement for a quarantine-stuck replica.
+        let live = (0..shared.alive_mirror.len())
+            .filter(|&i| {
+                shared.alive_mirror[i].load(Ordering::Acquire)
+                    && !shared.retire[i].load(Ordering::Acquire)
+                    && !shared.quarantined[i].load(Ordering::Acquire)
+            })
             .count();
         let pressured =
             depth > (cfg.depth_per_replica * live.max(1)) as u64 || new_misses > 0;
@@ -2533,7 +2902,7 @@ fn supervisor_loop(shared: &Arc<Shared>, cfg: &AutoscaleConfig) {
 /// Revive one dead slot whose previous worker has fully exited.
 fn scale_up(shared: &Arc<Shared>) {
     let idx = {
-        let mut cell = shared.cell.lock().unwrap();
+        let mut cell = shared.cell.plock();
         let slot = (0..cell.alive.len())
             .find(|&i| !cell.alive[i] && shared.exited[i].load(Ordering::Acquire));
         let Some(i) = slot else { return };
@@ -2546,7 +2915,7 @@ fn scale_up(shared: &Arc<Shared>) {
     shared.exited[idx].store(false, Ordering::Release);
     shared.alive_mirror[idx].store(true, Ordering::Release);
     let handle = spawn_worker(shared, idx);
-    shared.extra_workers.lock().unwrap().push(handle);
+    shared.extra_workers.plock().push(handle);
     shared.scale_ups.fetch_add(1, Ordering::AcqRel);
 }
 
@@ -2556,7 +2925,7 @@ fn scale_up(shared: &Arc<Shared>) {
 /// replica is never retired — no survivor could adopt its traffic.
 fn scale_down(shared: &Shared) {
     let victim = {
-        let cell = shared.cell.lock().unwrap();
+        let cell = shared.cell.plock();
         (0..cell.alive.len()).rev().find(|&i| {
             if !cell.alive[i]
                 || cell.is_canary(i)
@@ -3188,6 +3557,7 @@ mod tests {
             replicas: 1,
             admission: AdmissionConfig::uniform(1, ShedPolicy::Reject),
             autoscale: None,
+            integrity: IntegrityConfig::default(),
         };
         let (h, mut join) = spawn_pool_cfg(EngineSpec::base(), cfg);
         h.program(model).unwrap();
@@ -3230,6 +3600,7 @@ mod tests {
             replicas: 1,
             admission: AdmissionConfig::uniform(1, ShedPolicy::ShedOldest),
             autoscale: None,
+            integrity: IntegrityConfig::default(),
         };
         let (h, mut join) = spawn_pool_cfg(EngineSpec::base(), cfg);
         h.program(model).unwrap();
@@ -3390,6 +3761,7 @@ mod tests {
                 depth_per_replica: 2,
                 idle_ticks: 3,
             }),
+            integrity: IntegrityConfig::default(),
         };
         let (h, mut join) = spawn_pool_cfg(EngineSpec::base(), cfg);
         h.program(model).unwrap();
@@ -3565,5 +3937,155 @@ mod tests {
         ));
         h.shutdown();
         join.join();
+    }
+
+    fn scrubbed_cfg(replicas: usize, scrub_ms: u64) -> PoolConfig {
+        PoolConfig {
+            replicas,
+            admission: AdmissionConfig::default(),
+            autoscale: None,
+            integrity: IntegrityConfig::scrubbed(Duration::from_millis(scrub_ms)),
+        }
+    }
+
+    #[test]
+    fn flipped_program_bits_are_detected_and_healed_before_serving() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn_pool_cfg(EngineSpec::base(), scrubbed_cfg(1, 5));
+        h.program(model).unwrap();
+        let want = h.infer(data.xs.clone()).unwrap();
+        // Corrupt the replica's derived programs on its next pop; the
+        // pre-serve verify must heal from the golden Arc so the answer
+        // never diverges.
+        h.inject_fault(FaultPlan::flip_model_bits(0, 0xDEAD_BEEF, 8));
+        assert_eq!(h.infer(data.xs.clone()).unwrap(), want);
+        let integ = h.pool_stats().integrity;
+        assert!(integ.scrubs >= 1, "pre-serve verify must run: {integ:?}");
+        assert_eq!(integ.corruptions_detected, 1, "{integ:?}");
+        assert_eq!(integ.heals, 1, "{integ:?}");
+        assert_eq!(integ.failed_heals, 0, "{integ:?}");
+        // The heal is replica-local: no fence version bump.
+        assert_eq!(h.pool_stats().version, 1);
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn background_scrubber_heals_idle_replicas() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn_pool_cfg(EngineSpec::base(), scrubbed_cfg(2, 5));
+        h.program(model).unwrap();
+        let want = h.infer(data.xs.clone()).unwrap();
+        h.inject_fault(FaultPlan::flip_model_bits(0, 7, 4));
+        h.inject_fault(FaultPlan::flip_model_bits(1, 9, 4));
+        // Fault plans fire on the next POPPED job — scrub ticks pop
+        // like any job, so idle replicas get corrupted by the plan and
+        // then healed by a later tick, with no client traffic at all.
+        let t0 = Instant::now();
+        loop {
+            let integ = h.pool_stats().integrity;
+            if integ.heals >= 2 {
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "scrubber never healed: {integ:?}"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(h.infer(data.xs).unwrap(), want);
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn breaker_quarantines_flapping_replica_and_readmits_it() {
+        let (model, data) = trained();
+        let mut cfg = scrubbed_cfg(2, 500);
+        cfg.integrity.breaker_trips = 2;
+        cfg.integrity.breaker_window = Duration::from_secs(30);
+        cfg.integrity.quarantine_base = Duration::from_millis(30);
+        cfg.integrity.quarantine_max = Duration::from_millis(60);
+        let (h, mut join) = spawn_pool_cfg(EngineSpec::base(), cfg);
+        h.program(model).unwrap();
+        let want = h.infer(data.xs.clone()).unwrap();
+        // Two panic respawns on replica 0 inside the window trip the
+        // breaker into quarantine.
+        for nth in 0..2u64 {
+            h.inject_fault(FaultPlan::panic_on_job(0, 1));
+            // Drive jobs until replica 0's plan fires (a sibling may
+            // pop some of them).
+            let t0 = Instant::now();
+            while h.pool_stats().replicas[0].respawns < nth + 1 {
+                let _ = h.infer(data.xs[..4].to_vec());
+                assert!(t0.elapsed() < Duration::from_secs(10), "plan never fired");
+            }
+        }
+        let integ = h.pool_stats().integrity;
+        assert_eq!(integ.quarantines, 1, "{integ:?}");
+        // While quarantined the pool keeps serving correct answers on
+        // the surviving replica.
+        assert_eq!(h.infer(data.xs.clone()).unwrap(), want);
+        // After the hold, the half-open probe readmits it.
+        let t0 = Instant::now();
+        while h.pool_stats().integrity.rejoins < 1 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "quarantined replica never rejoined: {:?}",
+                h.pool_stats().integrity
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(h.infer(data.xs).unwrap(), want);
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn poisoned_internal_lock_does_not_wedge_the_pool() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn_pool(EngineSpec::base(), 2);
+        h.program(model).unwrap();
+        let want = h.infer(data.xs.clone()).unwrap();
+        // Poison the metrics and model-directory locks the way a real
+        // panic would: die while holding them.
+        for which in 0..2 {
+            let shared = Arc::clone(&h.shared);
+            let t = std::thread::spawn(move || {
+                if which == 0 {
+                    let _g = shared.metrics.lock().unwrap();
+                    panic!("poison the metrics lock");
+                } else {
+                    let _g = shared.model_dir.lock().unwrap();
+                    panic!("poison the model directory lock");
+                }
+            });
+            assert!(t.join().is_err(), "poisoner thread must panic");
+        }
+        // Serving, stats and shutdown all cross the poisoned locks.
+        assert_eq!(h.infer(data.xs.clone()).unwrap(), want);
+        let stats = h.pool_stats();
+        assert!(stats.total.inferences > 0);
+        h.shutdown();
+        join.join();
+    }
+
+    #[test]
+    fn scrub_jobs_reconcile_pool_counters() {
+        let (model, data) = trained();
+        let (h, mut join) = spawn_pool_cfg(EngineSpec::base(), scrubbed_cfg(2, 5));
+        h.program(model).unwrap();
+        let _ = h.infer(data.xs).unwrap();
+        // Let a few scrub generations through.
+        std::thread::sleep(Duration::from_millis(60));
+        h.shutdown();
+        join.join();
+        // Every admitted Low-class scrub was either served or shed at
+        // teardown — the class invariant holds with scrubs in flight.
+        let stats = h.admission_stats();
+        let low = stats.class(Priority::Low);
+        assert_eq!(low.admitted, low.served + low.shed, "{low:?}");
+        let integ = h.pool_stats().integrity;
+        assert_eq!(integ.corruptions_detected, 0, "{integ:?}");
     }
 }

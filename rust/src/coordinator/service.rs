@@ -102,6 +102,27 @@ impl Engine {
         }
     }
 
+    /// FNV-1a digest of every derived program buffer this engine
+    /// executes from (see [`Core::program_digest`]); `None` until
+    /// programmed.  The scrub layer records this at fence time and
+    /// re-verifies it before serving and on scrub ticks.
+    pub fn program_digest(&self) -> Option<u64> {
+        match self {
+            Engine::Single(c) => c.program_digest(),
+            Engine::Multi(m) => m.program_digest(),
+        }
+    }
+
+    /// Fault injection: flip `n_bits` seeded bits in THIS engine's own
+    /// derived-program copy (never a shared model Arc).  Returns bits
+    /// flipped (0 when unprogrammed).
+    pub fn flip_program_bits(&mut self, seed: u64, n_bits: u32) -> u32 {
+        match self {
+            Engine::Single(c) => c.flip_program_bits(seed, n_bits),
+            Engine::Multi(m) => m.flip_program_bits(seed, n_bits),
+        }
+    }
+
     /// Run up to 32 datapoints; returns (preds, simulated batch cycles).
     ///
     /// Malformed requests (empty, >32 rows, ragged widths) are rejected
@@ -248,6 +269,18 @@ impl InferenceService {
         self.metrics.reprograms += 1;
         self.model_version += 1;
         Ok(())
+    }
+
+    /// Digest of the engine's derived program buffers — `None` until
+    /// programmed (see [`Engine::program_digest`]).
+    pub fn program_digest(&self) -> Option<u64> {
+        self.engine.program_digest()
+    }
+
+    /// Fault injection into this service's own program copy (see
+    /// [`Engine::flip_program_bits`]).
+    pub fn flip_program_bits(&mut self, seed: u64, n_bits: u32) -> u32 {
+        self.engine.flip_program_bits(seed, n_bits)
     }
 
     /// Serve one request of up to 32 datapoints.

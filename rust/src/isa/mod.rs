@@ -982,6 +982,239 @@ pub fn derive_compressed(prog: &SoaProgram, classes: usize) -> CompressedProgram
     out
 }
 
+// ---------------------------------------------------------------------------
+// Program-memory integrity: FNV-1a digests + seeded bit-flip injection
+// ---------------------------------------------------------------------------
+
+/// Incremental FNV-1a-64 over program backing buffers — the scrub
+/// layer's detection primitive (EXPERIMENTS.md §Integrity).  Same
+/// constants as the wire format's `tm::serialize::fnv1a64`, so a digest
+/// recorded at fence time and one recomputed by a scrub tick agree iff
+/// the bytes agree.  FNV-1a's per-byte odd-prime multiply is injective
+/// mod 2^64, so any single flipped bit ALWAYS changes the digest —
+/// single-event upsets cannot hide.
+#[derive(Debug, Clone)]
+pub struct ProgramDigest(u64);
+
+impl Default for ProgramDigest {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ProgramDigest {
+    pub fn new() -> Self {
+        ProgramDigest(0xcbf2_9ce4_8422_2325)
+    }
+
+    #[inline]
+    pub fn byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    #[inline]
+    pub fn u16(&mut self, v: u16) {
+        for b in v.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    #[inline]
+    pub fn u32(&mut self, v: u32) {
+        for b in v.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    #[inline]
+    pub fn u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    #[inline]
+    pub fn i32(&mut self, v: i32) {
+        self.u32(v as u32);
+    }
+
+    /// `Option<u32>` with an explicit presence byte, so `None` and
+    /// `Some(0)` hash apart.
+    #[inline]
+    pub fn opt_u32(&mut self, v: Option<u32>) {
+        match v {
+            None => self.byte(0),
+            Some(x) => {
+                self.byte(1);
+                self.u32(x);
+            }
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Digest every buffer a [`SoaProgram`] executes from (ops, masks,
+/// commit table, cached bound).
+pub fn digest_soa(prog: &SoaProgram) -> u64 {
+    let mut d = ProgramDigest::new();
+    for &f in &prog.feats {
+        d.u32(f);
+    }
+    for &m in &prog.masks {
+        d.u32(m);
+    }
+    for seg in &prog.clauses {
+        d.u32(seg.start);
+        d.u32(seg.end);
+        d.u16(seg.class);
+        d.byte(seg.pol as u8);
+    }
+    d.opt_u32(prog.max_feat);
+    d.finish()
+}
+
+/// Digest every buffer a [`SlicedProgram`] executes from.
+pub fn digest_sliced(prog: &SlicedProgram) -> u64 {
+    let mut d = ProgramDigest::new();
+    for &f in &prog.feats {
+        d.u32(f);
+    }
+    for &m in &prog.masks {
+        d.u64(m);
+    }
+    for seg in &prog.clauses {
+        d.u32(seg.start);
+        d.u32(seg.end);
+        d.u16(seg.class);
+        d.byte(seg.pol as u8);
+    }
+    for &b in &prog.base_sums {
+        d.i32(b);
+    }
+    d.u64(prog.total_clauses);
+    d.u64(prog.classes as u64);
+    d.opt_u32(prog.max_feat);
+    d.finish()
+}
+
+/// Digest every buffer a [`CompressedProgram`] executes from.
+pub fn digest_compressed(prog: &CompressedProgram) -> u64 {
+    let mut d = ProgramDigest::new();
+    for &l in &prog.lits {
+        d.u16(l);
+    }
+    for seg in &prog.clauses {
+        d.u32(seg.start);
+        d.u32(seg.end);
+        d.u16(seg.class);
+        d.byte(seg.pol as u8);
+    }
+    for &b in &prog.base_sums {
+        d.i32(b);
+    }
+    d.u64(prog.total_clauses);
+    d.u64(prog.classes as u64);
+    d.opt_u32(prog.max_feat);
+    d.finish()
+}
+
+/// Tiny splitmix64 step for reproducible corruption targeting (the isa
+/// layer stays dependency-free; this is NOT the simulation PRNG).
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// One corruptible span: (word count, bits per word, flip closure).
+type FlipSpan<'a> = (usize, u32, &'a mut dyn FnMut(usize, u32));
+
+/// Flip `n_bits` DISTINCT seeded pseudo-random bits across `spans`,
+/// where each span is (word count, bits per word, flip closure).
+/// Distinctness (linear probing on collision) guarantees the corruption
+/// never cancels itself out, so `n_bits >= 1` flipped on a non-empty
+/// program ALWAYS changes its digest.  Returns bits actually flipped
+/// (0 only when every span is empty).
+fn flip_spans(seed: u64, n_bits: u32, spans: &mut [FlipSpan<'_>]) -> u32 {
+    let total_bits: u64 = spans.iter().map(|(n, w, _)| *n as u64 * *w as u64).sum();
+    if total_bits == 0 {
+        return 0;
+    }
+    let mut rng = seed;
+    let mut chosen: Vec<u64> = Vec::with_capacity(n_bits as usize);
+    let mut flipped = 0u32;
+    for _ in 0..n_bits.min(total_bits.min(u32::MAX as u64) as u32) {
+        let mut bit = splitmix64(&mut rng) % total_bits;
+        while chosen.contains(&bit) {
+            bit = (bit + 1) % total_bits;
+        }
+        chosen.push(bit);
+        let mut off = bit;
+        for (n, w, flip) in spans.iter_mut() {
+            let span_bits = *n as u64 * *w as u64;
+            if off < span_bits {
+                flip((off / *w as u64) as usize, (off % *w as u64) as u32);
+                break;
+            }
+            off -= span_bits;
+        }
+        flipped += 1;
+    }
+    flipped
+}
+
+/// Flip `n_bits` seeded bits in a [`SoaProgram`]'s data arrays (feats +
+/// masks) — the fault-injection half of the scrub story.  Returns bits
+/// flipped.  The corrupted program is exactly what an SEU leaves
+/// behind: structurally intact tables over rotted payload words.
+pub fn flip_soa_bits(prog: &mut SoaProgram, seed: u64, n_bits: u32) -> u32 {
+    let (feats, masks) = (&mut prog.feats, &mut prog.masks);
+    flip_spans(
+        seed,
+        n_bits,
+        &mut [
+            (feats.len(), 32, &mut |i, b| feats[i] ^= 1 << b),
+            (masks.len(), 32, &mut |i, b| masks[i] ^= 1 << b),
+        ],
+    )
+}
+
+/// Flip `n_bits` seeded bits in a [`SlicedProgram`]'s data arrays
+/// (feats + masks + base_sums).  Returns bits flipped.
+pub fn flip_sliced_bits(prog: &mut SlicedProgram, seed: u64, n_bits: u32) -> u32 {
+    let (feats, masks, base) = (&mut prog.feats, &mut prog.masks, &mut prog.base_sums);
+    flip_spans(
+        seed,
+        n_bits,
+        &mut [
+            (feats.len(), 32, &mut |i, b| feats[i] ^= 1 << b),
+            (masks.len(), 64, &mut |i, b| masks[i] ^= 1u64 << b),
+            (base.len(), 32, &mut |i, b| base[i] ^= 1 << b),
+        ],
+    )
+}
+
+/// Flip `n_bits` seeded bits in a [`CompressedProgram`]'s data arrays
+/// (lits + base_sums).  Returns bits flipped.
+pub fn flip_compressed_bits(prog: &mut CompressedProgram, seed: u64, n_bits: u32) -> u32 {
+    let (lits, base) = (&mut prog.lits, &mut prog.base_sums);
+    flip_spans(
+        seed,
+        n_bits,
+        &mut [
+            (lits.len(), 16, &mut |i, b| lits[i] ^= 1 << b),
+            (base.len(), 32, &mut |i, b| base[i] ^= 1 << b),
+        ],
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -67,7 +67,7 @@ fn usage() {
          \x20 infer   --workload W [--engine base|single|multi] [--n N]\n\
          \x20 serve   --workload W [--engine ...] [--requests N] [--replicas N]\n\
          \x20         [--queue-cap N] [--shed-policy block|reject|shed-oldest]\n\
-         \x20         [--report-json PATH]\n\
+         \x20         [--scrub-interval MS] [--report-json PATH]\n\
          \x20         [--models a.rttm,b.rttm [--sharding dedicated|time-shared]]\n\
          \x20         [--autotune [--schedule abrupt|gradual|recurring]\n\
          \x20          [--budget LUTS,BRAMS,WATTS] [--windows N] [--window-n N] [--drift F]\n\
@@ -283,6 +283,10 @@ fn cmd_serve(opts: &Opts) -> anyhow::Result<()> {
         .get("shed-policy", "block")
         .parse()
         .map_err(|e: String| anyhow::anyhow!(e))?;
+    // Model-integrity layer: scrub cadence in ms (0 = off, the
+    // default): fence-time digests, pre-serve verify + self-heal,
+    // background scrubbing and the replica circuit breaker.
+    let scrub_ms = opts.get_usize("scrub-interval", 0);
     let data = w.dataset(32 * requests, 11);
     let node = TrainingNode::native(w.shape.clone());
     let model = node.retrain(&w.dataset(1024, 7))?;
@@ -296,6 +300,7 @@ fn cmd_serve(opts: &Opts) -> anyhow::Result<()> {
             replicas,
             admission: rttm::coordinator::AdmissionConfig::uniform(queue_cap, shed_policy),
             autoscale: None,
+            integrity: integrity_for(scrub_ms),
         },
     );
     handle.program(model)?;
@@ -353,6 +358,7 @@ fn cmd_serve(opts: &Opts) -> anyhow::Result<()> {
         stats.admission.lost_total(),
         stats.admission.deadline_misses_total(),
     );
+    print_integrity_summary(scrub_ms, &stats.integrity);
     print_model_summary(&stats.models);
     let report_json = opts.get("report-json", "");
     if !report_json.is_empty() {
@@ -360,6 +366,34 @@ fn cmd_serve(opts: &Opts) -> anyhow::Result<()> {
         println!("wrote serve report to {report_json}");
     }
     Ok(())
+}
+
+/// `--scrub-interval MS` → the pool's integrity layer (0 = off).
+fn integrity_for(scrub_ms: usize) -> rttm::coordinator::IntegrityConfig {
+    if scrub_ms > 0 {
+        rttm::coordinator::IntegrityConfig::scrubbed(std::time::Duration::from_millis(
+            scrub_ms as u64,
+        ))
+    } else {
+        rttm::coordinator::IntegrityConfig::default()
+    }
+}
+
+fn print_integrity_summary(scrub_ms: usize, integ: &rttm::coordinator::IntegrityStats) {
+    if scrub_ms == 0 {
+        return;
+    }
+    println!(
+        "integrity scrub_interval_ms={} scrubs={} corruptions={} heals={} failed_heals={} \
+         quarantines={} rejoins={}",
+        scrub_ms,
+        integ.scrubs,
+        integ.corruptions_detected,
+        integ.heals,
+        integ.failed_heals,
+        integ.quarantines,
+        integ.rejoins,
+    );
 }
 
 /// `rttm serve --models a.rttm,b.rttm`: the multi-tenant platform path.
@@ -389,6 +423,7 @@ fn cmd_serve_multi(opts: &Opts) -> anyhow::Result<()> {
         .get("shed-policy", "block")
         .parse()
         .map_err(|e: String| anyhow::anyhow!(e))?;
+    let scrub_ms = opts.get_usize("scrub-interval", 0);
 
     // Load every model up front: the engine spec must fit the largest
     // stream and the widest feature row across ALL tenants.
@@ -425,6 +460,7 @@ fn cmd_serve_multi(opts: &Opts) -> anyhow::Result<()> {
             replicas,
             admission: rttm::coordinator::AdmissionConfig::uniform(queue_cap, shed_policy),
             autoscale: None,
+            integrity: integrity_for(scrub_ms),
         },
         sharding,
     );
@@ -495,6 +531,7 @@ fn cmd_serve_multi(opts: &Opts) -> anyhow::Result<()> {
         stats.admission.lost_total(),
         stats.admission.deadline_misses_total(),
     );
+    print_integrity_summary(scrub_ms, &stats.integrity);
     print_model_summary(&stats.models);
     let report_json = opts.get("report-json", "");
     if !report_json.is_empty() {

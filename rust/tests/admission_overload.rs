@@ -13,7 +13,8 @@ use std::time::Duration;
 use pool_harness::{classed_load, spawn_harness, spawn_harness_cfg, trained, LoadOutcome};
 use rttm::coordinator::admission::{ClassStats, PRIORITY_COUNT};
 use rttm::coordinator::{
-    AdmissionConfig, EngineSpec, FaultPlan, InferenceService, PoolConfig, Priority, ShedPolicy,
+    AdmissionConfig, EngineSpec, FaultPlan, InferenceService, IntegrityConfig, PoolConfig,
+    Priority, ShedPolicy,
 };
 
 /// Tight data-class queues that make overload observable: `Low` sheds
@@ -32,6 +33,7 @@ fn overload_cfg(replicas: usize) -> PoolConfig {
             ],
         },
         autoscale: None,
+        integrity: IntegrityConfig::default(),
     }
 }
 

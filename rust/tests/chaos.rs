@@ -1,0 +1,249 @@
+//! Composable chaos proof for the self-healing integrity layer: a
+//! seeded storm of model-memory bit flips, worker stalls, panics and
+//! dropped replies against a scrubbed replica pool must never produce a
+//! single divergent reply (every `Ok` answer is byte-identical to a
+//! golden single-service reference), must reconcile the admission
+//! counters exactly, and must leave the pool fully healed — every
+//! detected corruption healed or accounted, every quarantined replica
+//! readmitted.
+//!
+//! The storm schedule is a pure function of its seed
+//! ([`ChaosPlan::schedule`]): a failing run replays bit-for-bit.
+
+#[path = "common/pool_harness.rs"]
+mod pool_harness;
+
+use std::time::{Duration, Instant};
+
+use pool_harness::{spawn_harness_cfg, trained, ChaosPlan, LoadOutcome, Traffic};
+use rttm::coordinator::server::ServeError;
+use rttm::coordinator::{
+    AdmissionConfig, EngineSpec, Fault, FaultPlan, InferenceService, IntegrityConfig, PoolConfig,
+    Priority, ShedPolicy,
+};
+
+/// Scrubbed 3-replica pool with a fast, test-scale breaker: 2 strikes
+/// in the window quarantine, holds are tens of milliseconds so rejoin
+/// happens inside the test.
+fn chaos_cfg() -> PoolConfig {
+    PoolConfig {
+        replicas: 3,
+        admission: AdmissionConfig::uniform(16, ShedPolicy::Reject),
+        autoscale: None,
+        integrity: IntegrityConfig {
+            scrub_interval: Some(Duration::from_millis(3)),
+            breaker_trips: 2,
+            breaker_window: Duration::from_secs(10),
+            quarantine_base: Duration::from_millis(20),
+            quarantine_max: Duration::from_millis(100),
+        },
+    }
+}
+
+/// Poll `ok` every 5ms until it holds or `timeout` elapses; returns the
+/// final verdict (one last check after the deadline, so a slow machine
+/// that settles late still passes).
+fn poll_until(timeout: Duration, mut ok: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if ok() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    ok()
+}
+
+/// The tentpole proof: flips + stalls + panics + dropped replies,
+/// composed and seeded, against 2x classed load on a 3-replica pool.
+/// Zero reply divergence, exact counter reconciliation, full heal.
+#[test]
+fn composed_chaos_storm_serves_golden_bytes_and_fully_heals() {
+    let (model, data) = trained(7);
+
+    // Golden reference: what a clean, un-attacked single service says.
+    let mut golden = InferenceService::new(EngineSpec::base().build());
+    golden.reprogram(&model).unwrap();
+    let want = golden.infer_all(&data.xs).unwrap();
+
+    let pool = spawn_harness_cfg(EngineSpec::base(), chaos_cfg());
+    let h = pool.handle.clone();
+    h.program(model).unwrap();
+
+    // Two deterministic strikes against replica 0 on top of the storm:
+    // with `breaker_trips: 2` the quarantine -> half-open -> rejoin arc
+    // is exercised on every run, independent of the storm's
+    // pseudo-random panic rolls.
+    h.inject_fault(FaultPlan::panic_on_job(0, 1));
+    h.inject_fault(FaultPlan::panic_on_job(0, 1));
+
+    // 2x classed load: 6 clients against 3 replicas, split across the
+    // data classes.  Every Ok reply is checked byte-for-byte against
+    // the golden reference — a single divergent answer fails the run.
+    let rows = data.xs[..48].to_vec();
+    let expect = want[..48].to_vec();
+    let clients: Vec<_> = (0..6)
+        .map(|i| {
+            let h = h.clone();
+            let rows = rows.clone();
+            let expect = expect.clone();
+            std::thread::spawn(move || {
+                let class = if i % 2 == 0 { Priority::Normal } else { Priority::Low };
+                let mut out = LoadOutcome::default();
+                for _ in 0..30 {
+                    match h.infer_class(rows.clone(), class) {
+                        Ok(preds) => {
+                            assert_eq!(preds, expect, "reply divergence under chaos");
+                            out.ok += 1;
+                        }
+                        Err(ServeError::Overloaded) => out.overloaded += 1,
+                        Err(ServeError::DeadlineExceeded) => out.deadline += 1,
+                        // WorkerPanicked / WorkerGone: the storm's
+                        // visible (and retryable) casualties.
+                        Err(_) => out.other += 1,
+                    }
+                }
+                out
+            })
+        })
+        .collect();
+
+    // The storm runs on the main thread while the clients hammer.
+    let report = ChaosPlan::new(0x00C4_A05E, 3)
+        .rounds(24)
+        .flip_bits(6)
+        .with_stalls()
+        .with_panics()
+        .with_drops()
+        .storm(&h, Duration::from_millis(2));
+    assert_eq!(report.flips, 24, "every round must flip model bits");
+
+    let mut total = LoadOutcome::default();
+    for c in clients {
+        total.absorb(&c.join().expect("chaos client panicked (reply divergence?)"));
+    }
+    assert!(total.ok > 0, "nothing served through the storm: {total:?}");
+
+    // Clean sweep: the healed pool must answer the full dataset golden
+    // SIX CONSECUTIVE times (round-robin coverage across the replicas).
+    // Retry-on-error also drains any fault still armed from the storm —
+    // each retry pops it through the real supervision path.
+    let t0 = Instant::now();
+    let mut clean = 0;
+    while clean < 6 {
+        match h.infer(data.xs.clone()) {
+            Ok(preds) => {
+                assert_eq!(preds, want, "post-heal divergence");
+                clean += 1;
+            }
+            Err(e) => {
+                assert!(
+                    t0.elapsed() < Duration::from_secs(20),
+                    "pool still failing long after the storm: {e}"
+                );
+                clean = 0;
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+
+    // Full heal: every detected corruption healed or accounted as a
+    // failed heal, every quarantined replica readmitted (the scrubber
+    // re-visits every replica every few ms, so stragglers converge).
+    let settled = poll_until(Duration::from_secs(20), || {
+        let s = h.pool_stats().integrity;
+        s.quarantines >= 1
+            && s.quarantines == s.rejoins
+            && s.corruptions_detected == s.heals + s.failed_heals
+    });
+    let s = h.pool_stats().integrity;
+    assert!(settled, "pool never settled clean after the storm: {s:?}");
+    assert!(s.corruptions_detected >= 1, "no flip was ever detected: {s:?}");
+    assert!(s.heals >= 1, "no corruption was ever healed: {s:?}");
+    assert!(s.scrubs > s.corruptions_detected, "scrub accounting inverted: {s:?}");
+
+    pool.shutdown();
+
+    // Exact reconciliation after teardown: every admitted request —
+    // client traffic and background scrubs alike — is accounted served
+    // or shed, nothing lost, nothing queued.
+    let stats = h.admission_stats();
+    for p in Priority::ALL {
+        let c = stats.class(p);
+        assert_eq!(
+            c.admitted,
+            c.served + c.shed,
+            "class {p}: admitted != served + shed after teardown ({c:?})"
+        );
+        assert_eq!(c.depth, 0, "class {p}: queue not drained ({c:?})");
+    }
+}
+
+/// Bit flips alone are fully invisible to clients: the pre-serve verify
+/// heals in place before any answer is computed, so a flip-only storm
+/// produces zero request errors, zero quarantines, zero failed heals —
+/// and the heal counter accounts every detection.
+#[test]
+fn bit_flip_only_storm_heals_in_place_without_client_visible_errors() {
+    let (model, data) = trained(11);
+    let mut golden = InferenceService::new(EngineSpec::base().build());
+    golden.reprogram(&model).unwrap();
+    let want = golden.infer_all(&data.xs).unwrap();
+
+    let pool = spawn_harness_cfg(EngineSpec::base(), chaos_cfg());
+    let h = pool.handle.clone();
+    h.program(model).unwrap();
+
+    // Traffic::stop_assert_clean is the whole point: not one request
+    // may fail while model memory is being corrupted under it.
+    let traffic = Traffic::start(h.clone(), data.xs.clone());
+    let report = ChaosPlan::new(0xF11B, 3)
+        .rounds(16)
+        .flip_bits(4)
+        .storm(&h, Duration::from_millis(2));
+    assert_eq!(report.armed(), report.flips, "flip-only storm armed extra fault kinds");
+
+    let settled = poll_until(Duration::from_secs(20), || {
+        let s = h.pool_stats().integrity;
+        s.corruptions_detected >= 1 && s.corruptions_detected == s.heals
+    });
+    traffic.stop_assert_clean();
+    let s = h.pool_stats().integrity;
+    assert!(settled, "flip storm never detected+healed: {s:?}");
+    assert_eq!(s.failed_heals, 0, "in-place heal failed: {s:?}");
+    assert_eq!(s.quarantines, 0, "a healed flip must not trip the breaker: {s:?}");
+
+    assert_eq!(h.infer(data.xs.clone()).unwrap(), want, "post-heal divergence");
+    pool.shutdown();
+}
+
+/// The storm schedule is a pure function of its seed: same seed, same
+/// fault sequence, bit for bit; a different seed diverges.  Every fault
+/// targets a replica inside the pool, and every round contributes its
+/// bit flip.
+#[test]
+fn chaos_schedule_is_a_pure_function_of_its_seed() {
+    let mk = |seed: u64| {
+        ChaosPlan::new(seed, 3)
+            .rounds(32)
+            .flip_bits(5)
+            .with_stalls()
+            .with_panics()
+            .with_drops()
+            .schedule()
+    };
+    let a = mk(42);
+    assert_eq!(
+        format!("{a:?}"),
+        format!("{:?}", mk(42)),
+        "same seed must replay the same storm"
+    );
+    assert_ne!(format!("{a:?}"), format!("{:?}", mk(43)), "different seeds must differ");
+
+    for p in &a {
+        assert!(p.replica < 3, "fault routed past the pool: {p:?}");
+    }
+    let flips = a.iter().filter(|p| matches!(p.fault, Fault::FlipModelBits { .. })).count();
+    assert_eq!(flips, 32, "every round contributes exactly one bit-flip fault");
+    assert!(a.len() >= 32, "extras may ride along but never replace the flips");
+}

@@ -12,10 +12,13 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
+use std::time::Duration;
+
 use rttm::coordinator::autotune::AutotuneReport;
 use rttm::coordinator::server::{spawn_pool, spawn_pool_cfg, spawn_pool_sharded, ServeError};
 use rttm::coordinator::{
-    EngineSpec, ModelId, ModelStats, PoolConfig, PoolJoin, Priority, ServiceHandle, ShardingPolicy,
+    EngineSpec, Fault, FaultPlan, ModelId, ModelStats, PoolConfig, PoolJoin, Priority,
+    ServiceHandle, ShardingPolicy,
 };
 use rttm::datasets::synth::{Dataset, SynthSpec};
 use rttm::datasets::workloads::{DriftSchedule, Workload};
@@ -270,4 +273,128 @@ pub fn mean_accuracy(report: &AutotuneReport, range: std::ops::Range<usize>) -> 
         .map(|i| report.windows[i].accuracy.expect("labeled window"))
         .sum::<f64>()
         / n as f64
+}
+
+/// Sequential splitmix64 — the harness's only entropy source, so every
+/// chaos schedule is a pure function of its seed.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Per-kind tally of what a [`ChaosPlan`] storm armed.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ChaosReport {
+    pub flips: u64,
+    pub stalls: u64,
+    pub panics: u64,
+    pub drops: u64,
+}
+
+impl ChaosReport {
+    pub fn armed(&self) -> u64 {
+        self.flips + self.stalls + self.panics + self.drops
+    }
+}
+
+/// Seeded, composable chaos storm: a reproducible schedule of model
+/// bit flips optionally interleaved with stalls, panics and dropped
+/// replies, armed against a live pool while traffic flows.  The
+/// schedule is a pure function of `(seed, replicas, rounds, knobs)` —
+/// rerunning a failed chaos test replays the exact same fault sequence.
+pub struct ChaosPlan {
+    seed: u64,
+    replicas: usize,
+    rounds: usize,
+    flip_bits: u32,
+    stalls: bool,
+    panics: bool,
+    drops: bool,
+}
+
+impl ChaosPlan {
+    /// Bit-flip-only storm over `replicas` replicas; enable the other
+    /// fault kinds with the builder knobs.
+    pub fn new(seed: u64, replicas: usize) -> Self {
+        ChaosPlan {
+            seed,
+            replicas: replicas.max(1),
+            rounds: 16,
+            flip_bits: 4,
+            stalls: false,
+            panics: false,
+            drops: false,
+        }
+    }
+
+    pub fn rounds(mut self, n: usize) -> Self {
+        self.rounds = n;
+        self
+    }
+
+    pub fn flip_bits(mut self, n: u32) -> Self {
+        self.flip_bits = n.max(1);
+        self
+    }
+
+    /// Mix short worker stalls into the storm.
+    pub fn with_stalls(mut self) -> Self {
+        self.stalls = true;
+        self
+    }
+
+    /// Mix worker panics (respawn supervision + breaker trips) in.
+    pub fn with_panics(mut self) -> Self {
+        self.panics = true;
+        self
+    }
+
+    /// Mix dropped replies (the `WorkerGone` blind spot) in.
+    pub fn with_drops(mut self) -> Self {
+        self.drops = true;
+        self
+    }
+
+    /// The storm's full fault sequence, derived from the seed alone.
+    /// Every round flips model bits on one pseudo-randomly chosen
+    /// replica; enabled extra fault kinds are rolled in per round.
+    pub fn schedule(&self) -> Vec<FaultPlan> {
+        let mut rng = self.seed;
+        let mut plans = Vec::new();
+        for _ in 0..self.rounds {
+            let victim = (splitmix64(&mut rng) % self.replicas as u64) as usize;
+            plans.push(FaultPlan::flip_model_bits(victim, splitmix64(&mut rng), self.flip_bits));
+            let extra = (splitmix64(&mut rng) % self.replicas as u64) as usize;
+            match splitmix64(&mut rng) % 8 {
+                0 | 1 if self.stalls => {
+                    plans.push(FaultPlan::stall(extra, Duration::from_millis(2)));
+                }
+                2 if self.panics => plans.push(FaultPlan::panic_on_job(extra, 1)),
+                3 if self.drops => plans.push(FaultPlan::drop_reply(extra)),
+                _ => {}
+            }
+        }
+        plans
+    }
+
+    /// Arm the schedule against a live pool, pacing injections `gap`
+    /// apart so faults land while traffic is in flight rather than
+    /// stacking on the first pops.  Returns the per-kind tally.
+    pub fn storm(&self, handle: &ServiceHandle, gap: Duration) -> ChaosReport {
+        let mut report = ChaosReport::default();
+        for plan in self.schedule() {
+            match plan.fault {
+                Fault::FlipModelBits { .. } => report.flips += 1,
+                Fault::Stall(_) => report.stalls += 1,
+                Fault::PanicOnJob { .. } => report.panics += 1,
+                Fault::DropReply => report.drops += 1,
+            }
+            handle.inject_fault(plan);
+            std::thread::sleep(gap);
+        }
+        report
+    }
 }

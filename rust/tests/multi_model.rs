@@ -17,7 +17,8 @@ use pool_harness::{
     two_tenants, Traffic,
 };
 use rttm::coordinator::{
-    AdmissionConfig, EngineSpec, InferenceService, PoolConfig, Priority, ShardingPolicy, ShedPolicy,
+    AdmissionConfig, EngineSpec, InferenceService, IntegrityConfig, PoolConfig, Priority,
+    ShardingPolicy, ShedPolicy,
 };
 
 /// Interleaved two-tenant traffic through one `TimeShared` pool returns
@@ -95,6 +96,7 @@ fn per_model_counters_reconcile_under_reject_pressure() {
         replicas: 2,
         admission: AdmissionConfig::uniform(2, ShedPolicy::Reject),
         autoscale: None,
+        integrity: IntegrityConfig::default(),
     };
     let pool = spawn_harness_sharded(EngineSpec::base(), cfg, ShardingPolicy::time_shared());
     let ida = pool.handle.register_model("tenant-a", model_a).unwrap();

@@ -269,6 +269,52 @@ fn golden_v2_framing_is_pinned() {
     assert_eq!(stored, 0xA74D_CB0A);
 }
 
+// ---------------------------------------------------------------------
+// Content-digest pins: the integrity layer (scrub-and-repair, registry
+// identity, remote verify) keys on these exact FNV-1a-64 values.  A
+// drift here silently breaks corruption detection everywhere at once,
+// so the constants are pinned byte-for-byte against the committed
+// fixtures — never recompute-and-paste on failure; find out what moved.
+
+#[test]
+fn golden_fixture_content_digests_are_pinned() {
+    use rttm::tm::serialize::fnv1a64;
+    // The v1 file's digest IS the model's content hash (content_hash is
+    // defined as FNV-1a-64 over the canonical v1 serialization).
+    assert_eq!(fnv1a64(GOLDEN), 0x0172_D7DB_9454_5634);
+    assert_eq!(content_hash(&golden_model()), 0x0172_D7DB_9454_5634);
+    // The v2 file hashes differently (it embeds the name + hash fields)
+    // while its TAG still pins the same v1 content hash — a v2 rewrite
+    // that preserved the tag but moved bytes would be caught here.
+    assert_eq!(fnv1a64(GOLDEN_V2), 0x4D36_B058_9849_5B14);
+    let (_, _, tag) = from_bytes_full(GOLDEN_V2).unwrap();
+    assert_eq!(tag.unwrap().content_hash, 0x0172_D7DB_9454_5634);
+}
+
+/// Flipping ANY single TA include bit — every class, clause and literal
+/// of the golden model, set and unset alike — must change the content
+/// hash.  This is the property the scrub layer's corruption detection
+/// rests on: no single-event upset is invisible to the digest.
+#[test]
+fn every_single_flipped_include_bit_changes_the_content_hash() {
+    let base = golden_model();
+    let h0 = content_hash(&base);
+    let lits = 2 * base.shape.features;
+    for class in 0..base.shape.classes {
+        for clause in 0..base.shape.clauses {
+            for lit in 0..lits {
+                let mut m = golden_model();
+                m.set_include(class, clause, lit, !m.include(class, clause, lit));
+                assert_ne!(
+                    content_hash(&m),
+                    h0,
+                    "flipped include ({class},{clause},{lit}) left the content hash unchanged"
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn golden_v2_mutation_corpus() {
     // Count understated: TrailingBytes semantics are preserved in v2.
